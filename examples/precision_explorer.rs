@@ -1,0 +1,99 @@
+//! Precision design-space explorer — the fine-grained quantization DSE the
+//! paper argues flexible hardware unlocks (§2.2: "it allows more
+//! fine-grained quantization design space exploration than power-of-two
+//! precisions").
+//!
+//! Sweeps every weight width 4..=8 (and both FP6 format variants e3m2 /
+//! e2m3, plus INT weights), measures (a) a quantization-quality proxy — the
+//! RMS error of quantized random-Gaussian weights vs f32 — with the golden
+//! arithmetic model, and (b) simulated latency/energy/EDP on Llama-2-7b at
+//! Cloud-A, then prints the Pareto view a deployment engineer would use to
+//! pick a precision. On fixed-pow2 hardware only the 4- and 8-bit rows are
+//! reachable; FlexiBit exposes the whole frontier.
+//!
+//! Run: `cargo run --release --example precision_explorer`
+
+use flexibit::arith::{decode, encode, Format};
+use flexibit::baselines::{Accel, FlexiBitAccel, TensorCoreAccel};
+use flexibit::report::{fmt_j, fmt_s, Table};
+use flexibit::sim::{cloud_a, simulate_model};
+use flexibit::util::Rng;
+use flexibit::workload::{llama2_7b, PrecisionPair};
+
+/// RMS quantization error of N(0, 0.04) weights (LLM-like scale) in `fmt`,
+/// relative to the fp32 values.
+fn rms_error(fmt: Format, rng: &mut Rng) -> f64 {
+    let n = 20_000;
+    let mut se = 0.0;
+    for _ in 0..n {
+        let v = rng.gauss() * 0.2;
+        let q = decode(encode(v, fmt), fmt);
+        se += (v - q) * (v - q);
+    }
+    (se / n as f64).sqrt()
+}
+
+fn main() {
+    let mut rng = Rng::new(42);
+    let cfg = cloud_a();
+    let model = llama2_7b();
+    let fb = FlexiBitAccel::new();
+    let tc = TensorCoreAccel::new();
+
+    let candidates: Vec<Format> = vec![
+        Format::parse("e2m1").unwrap(),  // FP4
+        Format::parse("e2m2").unwrap(),  // FP5
+        Format::parse("e3m2").unwrap(),  // FP6 (paper default)
+        Format::parse("e2m3").unwrap(),  // FP6 variant (FP6-LLM)
+        Format::parse("e3m3").unwrap(),  // FP7
+        Format::parse("e4m3").unwrap(),  // FP8
+        Format::parse("int4").unwrap(),  // GPTQ-style INT4
+        Format::parse("int8").unwrap(),
+    ];
+
+    let mut table = Table::new(
+        "Precision DSE — Llama-2-7b @ Cloud-A, FP16 activations",
+        &["W fmt", "bits", "RMS qerr", "FB latency", "FB energy", "FB EDP", "on pow2 HW?"],
+    );
+    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+    for fmt in &candidates {
+        let pair = PrecisionPair::new(*fmt, Format::parse("fp16").unwrap());
+        let rep = simulate_model(&fb, &cfg, &model, pair);
+        let err = rms_error(*fmt, &mut rng);
+        let reachable = matches!(fmt.bits(), 4 | 8 | 16);
+        rows.push((format!("{fmt}"), err, rep.edp()));
+        table.row(vec![
+            format!("{fmt}"),
+            fmt.bits().to_string(),
+            format!("{err:.5}"),
+            fmt_s(rep.seconds),
+            fmt_j(rep.energy_j),
+            format!("{:.2}", rep.edp()),
+            if reachable { "yes".into() } else { "FlexiBit only".to_string() },
+        ]);
+    }
+    table.print();
+
+    // Pareto frontier on (qerr, EDP).
+    println!("\nPareto-optimal points (quality vs EDP):");
+    for (name, err, edp) in &rows {
+        let dominated = rows
+            .iter()
+            .any(|(n2, e2, d2)| n2 != name && *e2 <= *err && *d2 <= *edp && (*e2 < *err || *d2 < *edp));
+        if !dominated {
+            println!("  {name}  (qerr {err:.5}, EDP {edp:.2})");
+        }
+    }
+
+    // What the same sweep looks like on fixed hardware: everything rounds
+    // up to FP8/FP16 latency.
+    let fp6 = PrecisionPair::of_bits(6, 16);
+    let t_fb = simulate_model(&fb, &cfg, &model, fp6).seconds;
+    let t_tc = simulate_model(&tc, &cfg, &model, fp6).seconds;
+    println!(
+        "\nFP6 weights on fixed-precision hardware run as FP16: {} vs FlexiBit {} ({:.2}x)",
+        fmt_s(t_tc),
+        fmt_s(t_fb),
+        t_tc / t_fb
+    );
+}

@@ -1,0 +1,164 @@
+"""AOT lowering: jit the L2 model + standalone L1 kernels to HLO **text**
+artifacts the Rust runtime loads via PJRT.
+
+HLO text (not ``.serialize()``): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids that the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts (under ``artifacts/``):
+
+* ``block_w{B}.hlo.txt``   — tiny transformer block forward, FP{B} weights
+  baked as packed constants; input: acts [seq, d_model].
+* ``gemm_w{B}.hlo.txt``    — standalone dequant-GEMM; inputs: acts [M, K]
+  f32 + packed weight words [N, wpc] u32 (runtime-supplied weights).
+* ``manifest.json``        — shapes/formats for the Rust side.
+
+Run once via ``make artifacts`` (no-op when inputs are unchanged —
+handled by make's dependency tracking).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.flexibit_gemm import flexibit_gemm
+from .kernels.formats import default_fp
+from .kernels.quant import words_per_column
+from .model import BlockConfig, build_block_fn, build_block_fn_weight_inputs, WEIGHT_NAMES
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_block(cfg: BlockConfig, out_dir: str, manifest: dict) -> str:
+    # Packed weights as runtime inputs: u32 *parameters* round-trip cleanly
+    # through HLO text + xla_extension 0.5.1, unlike u32 constants.
+    fwd, _weights, qw = build_block_fn_weight_inputs(cfg)
+    packed = [qw[n]["packed"] for n in WEIGHT_NAMES]
+    specs = [jax.ShapeDtypeStruct((cfg.seq, cfg.d_model), jnp.float32)] + [
+        jax.ShapeDtypeStruct(p.shape, jnp.uint32) for p in packed
+    ]
+    lowered = jax.jit(fwd).lower(*specs)
+    name = f"block_w{cfg.w_bits}"
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    # Weights file the serving runtime feeds per call.
+    with open(os.path.join(out_dir, f"{name}.weights.json"), "w") as f:
+        json.dump(
+            {
+                n: {"words": p.ravel().astype(int).tolist(), "shape": list(p.shape)}
+                for n, p in zip(WEIGHT_NAMES, packed)
+            },
+            f,
+        )
+    # Golden I/O pair so the Rust runtime can verify numerics end-to-end.
+    x = jnp.asarray(
+        np.random.default_rng(1234).standard_normal((cfg.seq, cfg.d_model)),
+        jnp.float32,
+    )
+    (y,) = fwd(x, *[jnp.asarray(p) for p in packed])
+    with open(os.path.join(out_dir, f"{name}.io.json"), "w") as f:
+        json.dump(
+            {
+                "input": np.asarray(x).ravel().tolist(),
+                "output": np.asarray(y).ravel().tolist(),
+                "shape": [cfg.seq, cfg.d_model],
+            },
+            f,
+        )
+    manifest[name] = {
+        "kind": "block",
+        "inputs": [{"shape": [cfg.seq, cfg.d_model], "dtype": "f32"}]
+        + [{"shape": list(p.shape), "dtype": "u32"} for p in packed],
+        "weight_names": list(WEIGHT_NAMES),
+        "seq": cfg.seq,
+        "d_model": cfg.d_model,
+        "d_ff": cfg.d_ff,
+        "heads": cfg.heads,
+        "w_bits": cfg.w_bits,
+        "w_fmt": cfg.w_fmt.name,
+    }
+    return path
+
+
+def lower_gemm(m: int, k: int, n: int, w_bits: int, out_dir: str, manifest: dict) -> str:
+    fmt = default_fp(w_bits)
+    wpc = words_per_column(k, fmt)
+
+    def fn(acts, words):
+        return (flexibit_gemm(acts, words, fmt, tile_n=min(128, n)),)
+
+    a_spec = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    w_spec = jax.ShapeDtypeStruct((n, wpc), jnp.uint32)
+    lowered = jax.jit(fn).lower(a_spec, w_spec)
+    name = f"gemm_w{w_bits}"
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest[name] = {
+        "kind": "gemm",
+        "m": m,
+        "k": k,
+        "n": n,
+        "wpc": wpc,
+        "w_bits": w_bits,
+        "w_fmt": fmt.name,
+        "inputs": [
+            {"shape": [m, k], "dtype": "f32"},
+            {"shape": [n, wpc], "dtype": "u32"},
+        ],
+    }
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output dir (or with --single, a file path)")
+    ap.add_argument("--w-bits", type=int, nargs="+", default=[6, 5, 4, 8])
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--d-ff", type=int, default=256)
+    args = ap.parse_args()
+
+    out_dir = args.out
+    # `make artifacts` passes a file path ending in .hlo.txt for the stamp
+    # target; emit everything into its directory.
+    if out_dir.endswith(".hlo.txt"):
+        out_dir = os.path.dirname(out_dir) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {}
+    for b in args.w_bits:
+        cfg = BlockConfig(seq=args.seq, d_model=args.d_model, d_ff=args.d_ff, w_bits=b)
+        p = lower_block(cfg, out_dir, manifest)
+        print(f"wrote {p}")
+        p = lower_gemm(args.seq, args.d_model, args.d_model, b, out_dir, manifest)
+        print(f"wrote {p}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out_dir}/manifest.json ({len(manifest)} artifacts)")
+    # Stamp file for make (the Makefile's target).
+    stamp = os.path.join(out_dir, "model.hlo.txt")
+    if not os.path.exists(stamp):
+        # Alias the FP6 block artifact as the canonical model.hlo.txt.
+        import shutil
+
+        shutil.copy(os.path.join(out_dir, "block_w6.hlo.txt"), stamp)
+        print(f"wrote {stamp}")
+
+
+if __name__ == "__main__":
+    main()

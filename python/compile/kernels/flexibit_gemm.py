@@ -1,0 +1,115 @@
+"""L1 Pallas kernel: bit-packed arbitrary-ExMy dequantize-GEMM.
+
+The hardware-adaptation of FlexiBit's insight for a TPU-shaped target (see
+DESIGN.md §Hardware-Adaptation): the ASIC keeps memory bit-packed and feeds
+format-flexible compute with zero padding waste; the kernel analog keeps
+weights bit-packed in HBM (u32 words, exactly ``K·N·bits`` bits + per-column
+tail), decodes tiles *inside* the kernel with vectorized shift/mask field
+extraction (the Separator/BPU analog), and runs the MACs on dense f32 tiles
+(the MXU analog — on a real TPU these would be bf16 MXU tiles; under
+``interpret=True`` on CPU the structure is identical).
+
+BlockSpec tiles the N dimension: each grid step loads one column-tile of
+packed words (VMEM footprint ∝ the *true* bit width — the paper's memory
+win) plus the resident activation block, and emits one output tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .formats import FpFormat
+from .quant import words_per_column
+
+
+def _decode_tile(words_tile: jnp.ndarray, k: int, fmt: FpFormat) -> jnp.ndarray:
+    """Unpack+decode one [TN, wpc] u32 tile -> f32 [K, TN].
+
+    Same field math as ref.unpack_words, expressed on the tile. All shifts
+    are vectorized over the K index vector (iota) — the kernel's Separator.
+    """
+    b = fmt.bits
+    ks = jax.lax.iota(jnp.uint32, k)
+    bitpos = ks * b
+    widx = (bitpos // 32).astype(jnp.int32)
+    off = bitpos % 32
+    # Pure uint32 math; guarded shifts (see ref.unpack_words).
+    w32 = words_tile.astype(jnp.uint32)
+    lo = jnp.take(w32, widx, axis=1) >> off
+    wpc = words_tile.shape[1]
+    widx_hi = jnp.minimum(widx + 1, wpc - 1)
+    crosses = (off + b) > 32
+    hi_shift = (32 - off) & 31
+    hi = jnp.where(crosses[None, :], jnp.take(w32, widx_hi, axis=1) << hi_shift, 0)
+    codes = ((lo | hi) & jnp.uint32((1 << b) - 1))  # [TN, K]
+
+    man = (codes & ((1 << fmt.m) - 1)).astype(jnp.float32)
+    exp = ((codes >> fmt.m) & ((1 << fmt.e) - 1)).astype(jnp.int32)
+    sign = jnp.where((codes >> (fmt.e + fmt.m)) & 1, -1.0, 1.0).astype(jnp.float32)
+    normal = exp > 0
+    norm_val = (1.0 + man / (1 << fmt.m)) * jnp.exp2((exp - fmt.bias).astype(jnp.float32))
+    sub_val = (man / (1 << fmt.m)) * jnp.float32(2.0 ** (1 - fmt.bias))
+    return (sign * jnp.where(normal, norm_val, sub_val)).T  # [K, TN]
+
+
+def _gemm_kernel(acts_ref, words_ref, out_ref, *, k: int, fmt: FpFormat):
+    """One grid step: decode the packed weight tile, multiply, store."""
+    acts = acts_ref[...]  # [M, K] resident block
+    words = words_ref[...]  # [TN, wpc] packed tile
+    w = _decode_tile(words, k, fmt)  # [K, TN]
+    out_ref[...] = acts @ w  # MXU-shaped MAC tile
+
+
+def flexibit_gemm(
+    acts: jnp.ndarray,
+    words: jnp.ndarray,
+    fmt: FpFormat,
+    *,
+    tile_n: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """acts[M, K] (f32) × packed weights words[N, wpc] (u32, format ``fmt``)
+    -> f32 [M, N].
+
+    ``interpret=True`` is required for CPU-PJRT execution (real-TPU Pallas
+    lowers to a Mosaic custom-call the CPU plugin cannot run).
+    """
+    m, k = acts.shape
+    n, wpc = words.shape
+    assert wpc == words_per_column(k, fmt), (
+        f"packed words shape {words.shape} inconsistent with K={k}, {fmt.name}"
+    )
+    tn = min(tile_n, n)
+    # N must tile evenly for the simple BlockSpec; callers pad N (the
+    # quantizer's model path always produces multiple-of-tile N).
+    assert n % tn == 0, f"N={n} not a multiple of tile_n={tn}"
+    grid = (n // tn,)
+    kernel = functools.partial(_gemm_kernel, k=k, fmt=fmt)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k), lambda i: (0, 0)),  # acts resident
+            pl.BlockSpec((tn, wpc), lambda i: (i, 0)),  # packed weight tile
+        ],
+        out_specs=pl.BlockSpec((m, tn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(acts.astype(jnp.float32), words)
+
+
+def vmem_footprint_bits(m: int, k: int, fmt: FpFormat, tile_n: int = 128) -> dict:
+    """Static VMEM/roofline estimate for DESIGN.md §Perf: bits resident per
+    grid step, vs the padded-format alternative."""
+    wpc = words_per_column(k, fmt)
+    packed = tile_n * wpc * 32
+    padded_slot = max(4, 1 << (fmt.bits - 1).bit_length())
+    return {
+        "acts_bits": m * k * 32,
+        "weights_packed_bits": packed,
+        "weights_padded_bits": tile_n * k * padded_slot,
+        "out_bits": m * tile_n * 32,
+        "packing_saving": 1.0 - fmt.bits / padded_slot,
+    }

@@ -1,0 +1,76 @@
+"""Arbitrary ExMy floating-point format descriptors (Python mirror of
+``rust/src/arith/format.rs``).
+
+A format is ``(e, m)``: 1 sign bit, ``e`` exponent bits, ``m`` explicit
+mantissa bits. Saturating no-Inf/NaN policy (E4M3/MX convention): the
+all-ones exponent encodes ordinary values; encode clamps to the largest
+finite magnitude.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class FpFormat:
+    e: int  # exponent bits, 1..=8
+    m: int  # explicit mantissa bits, 0..=10
+
+    def __post_init__(self):
+        if not (1 <= self.e <= 8):
+            raise ValueError(f"exponent width {self.e} out of range 1..=8")
+        if not (0 <= self.m <= 10):
+            raise ValueError(f"mantissa width {self.m} out of range 0..=10")
+
+    @property
+    def bits(self) -> int:
+        return 1 + self.e + self.m
+
+    @property
+    def bias(self) -> int:
+        return (1 << (self.e - 1)) - 1
+
+    @property
+    def emax_field(self) -> int:
+        return (1 << self.e) - 1
+
+    @property
+    def max_value(self) -> float:
+        frac = 1.0 + ((1 << self.m) - 1) / (1 << self.m)
+        return frac * 2.0 ** (self.emax_field - self.bias)
+
+    @property
+    def min_normal(self) -> float:
+        return 2.0 ** (1 - self.bias)
+
+    @property
+    def name(self) -> str:
+        return f"e{self.e}m{self.m}"
+
+
+FP16 = FpFormat(5, 10)
+BF16 = FpFormat(8, 7)
+FP8_E4M3 = FpFormat(4, 3)
+FP8_E5M2 = FpFormat(5, 2)
+FP6_E3M2 = FpFormat(3, 2)
+FP6_E2M3 = FpFormat(2, 3)
+FP5_E2M2 = FpFormat(2, 2)
+FP4_E2M1 = FpFormat(2, 1)
+
+
+def default_fp(bits: int) -> FpFormat:
+    """The per-width default format used in the paper's evaluation
+    (mirror of ``Format::default_fp``)."""
+    table = {
+        4: FP4_E2M1,
+        5: FP5_E2M2,
+        6: FP6_E3M2,
+        7: FpFormat(3, 3),
+        8: FP8_E4M3,
+        16: FP16,
+    }
+    if bits in table:
+        return table[bits]
+    if not (3 <= bits <= 16):
+        raise ValueError(f"unsupported FP width {bits}")
+    m = (bits - 1) // 2
+    return FpFormat(bits - 1 - m, m)

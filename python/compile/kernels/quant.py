@@ -1,0 +1,132 @@
+"""Quantizer + bit-packer (build-time): f32 tensors -> arbitrary-ExMy codes
+-> per-column bit-packed u32 words.
+
+Encoding is round-to-nearest-even with saturation at the format's largest
+finite magnitude, matching ``rust/src/arith/value.rs`` bit-for-bit (the
+property tests sweep this equivalence against the jnp oracle).
+
+Packing layout (consumed by the Pallas kernel and mirrored by the rust
+BPU model): weights ``W[K, N]`` are packed **per column** — column ``n``'s
+K codes are laid LSB-first into ``ceil(K*bits/32)`` u32 words — so a tile
+of columns is a clean slice of the words array (BlockSpec-friendly; the
+per-column tail padding is < 32 bits).
+"""
+
+import numpy as np
+
+from .formats import FpFormat
+
+
+def encode(values: np.ndarray, fmt: FpFormat) -> np.ndarray:
+    """Quantize f32/f64 values to ExMy codes (uint32), RNE + saturate."""
+    v = np.asarray(values, dtype=np.float64)
+    sign = (np.signbit(v)).astype(np.uint32)
+    mag = np.abs(v)
+
+    out = np.zeros(v.shape, dtype=np.uint32)
+    maxv = fmt.max_value
+
+    # Saturate.
+    sat = mag >= maxv
+    out[sat] = (fmt.emax_field << fmt.m) | ((1 << fmt.m) - 1)
+
+    # Finite, nonzero, unsaturated.
+    live = (~sat) & (mag > 0) & np.isfinite(mag)
+    if np.any(live):
+        lm = mag[live]
+        e_unb = np.floor(np.log2(lm)).astype(np.int64)
+        e_field = e_unb + fmt.bias
+        # Subnormal range.
+        sub = e_field <= 0
+        ulp_sub = 2.0 ** (1 - fmt.bias - fmt.m)
+        q_sub = np.rint(lm / ulp_sub).astype(np.uint64)
+        # Rounding up into min normal.
+        sub_over = sub & (q_sub >= (1 << fmt.m))
+        # Normal range.
+        norm = ~sub
+        scaled = lm / np.exp2(e_unb.astype(np.float64)) * (1 << fmt.m)
+        q_norm = np.rint(scaled).astype(np.uint64)
+        # Mantissa overflow across binade.
+        over = norm & (q_norm >= (2 << fmt.m))
+        q_norm = np.where(over, q_norm >> 1, q_norm)
+        e_field = np.where(over, e_field + 1, e_field)
+        # Saturate post-overflow.
+        over_sat = norm & (e_field > fmt.emax_field)
+
+        codes = np.zeros(lm.shape, dtype=np.uint32)
+        codes[sub & ~sub_over] = q_sub[sub & ~sub_over].astype(np.uint32)
+        codes[sub_over] = np.uint32(1 << fmt.m)
+        sel = norm & ~over_sat
+        codes[sel] = ((e_field[sel].astype(np.uint32)) << fmt.m) | (
+            q_norm[sel].astype(np.uint32) - (1 << fmt.m)
+        )
+        codes[over_sat] = (fmt.emax_field << fmt.m) | ((1 << fmt.m) - 1)
+        out[live] = codes
+
+    return out | (sign << (fmt.e + fmt.m))
+
+
+def decode(codes: np.ndarray, fmt: FpFormat) -> np.ndarray:
+    """Exact decode of ExMy codes to f32."""
+    c = np.asarray(codes, dtype=np.uint32)
+    man = (c & ((1 << fmt.m) - 1)).astype(np.float64)
+    exp = ((c >> fmt.m) & ((1 << fmt.e) - 1)).astype(np.int64)
+    sign = np.where((c >> (fmt.e + fmt.m)) & 1, -1.0, 1.0)
+    normal = exp > 0
+    val = np.where(
+        normal,
+        (1.0 + man / (1 << fmt.m)) * np.exp2((exp - fmt.bias).astype(np.float64)),
+        (man / (1 << fmt.m)) * np.exp2(float(1 - fmt.bias)),
+    )
+    # f64 result: e8 formats reach 2^128, which overflows f32.
+    return sign * val
+
+
+def words_per_column(k: int, fmt: FpFormat) -> int:
+    return (k * fmt.bits + 31) // 32
+
+
+def pack_columns(codes: np.ndarray, fmt: FpFormat) -> np.ndarray:
+    """Pack codes[K, N] per column into words[N, words_per_column] (u32).
+
+    LSB-first within each word; element k of a column occupies bits
+    [k*bits, (k+1)*bits) of the column's bit-stream.
+    """
+    k, n = codes.shape
+    b = fmt.bits
+    wpc = words_per_column(k, fmt)
+    words = np.zeros((n, wpc), dtype=np.uint64)  # u64 staging avoids overflow
+    for ki in range(k):
+        bit = ki * b
+        w, off = divmod(bit, 32)
+        col = codes[ki].astype(np.uint64)
+        words[:, w] |= (col << off) & 0xFFFFFFFF
+        if off + b > 32:
+            words[:, w + 1] |= col >> (32 - off)
+    return words.astype(np.uint32)
+
+
+def unpack_columns(words: np.ndarray, k: int, fmt: FpFormat) -> np.ndarray:
+    """Inverse of :func:`pack_columns` -> codes[K, N]."""
+    n = words.shape[0]
+    b = fmt.bits
+    mask = np.uint64((1 << b) - 1)
+    w64 = words.astype(np.uint64)
+    codes = np.zeros((k, n), dtype=np.uint32)
+    for ki in range(k):
+        bit = ki * b
+        w, off = divmod(bit, 32)
+        lo = w64[:, w] >> np.uint64(off)
+        if off + b > 32:
+            lo |= w64[:, w + 1] << np.uint64(32 - off)
+        codes[ki] = (lo & mask).astype(np.uint32)
+    return codes
+
+
+def quantize_weights(w: np.ndarray, fmt: FpFormat):
+    """f32 W[K, N] -> (packed u32 words[N, wpc], dequantized f32 W' for
+    reference checks)."""
+    codes = encode(w, fmt)
+    packed = pack_columns(codes, fmt)
+    deq = decode(codes, fmt).astype(np.float32)
+    return packed, deq

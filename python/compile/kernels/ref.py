@@ -1,0 +1,56 @@
+"""Pure-jnp oracle for the FlexiBit dequantize-GEMM kernel.
+
+This is the correctness reference the Pallas kernel (and transitively the
+whole AOT artifact chain) is validated against: unpack per-column packed
+ExMy words, decode exactly, matmul in f32.
+"""
+
+import jax.numpy as jnp
+
+from .formats import FpFormat
+
+
+def decode_codes(codes: jnp.ndarray, fmt: FpFormat) -> jnp.ndarray:
+    """Exact ExMy decode (jnp, integer field extraction)."""
+    c = codes.astype(jnp.uint32)
+    man = (c & ((1 << fmt.m) - 1)).astype(jnp.float32)
+    exp = ((c >> fmt.m) & ((1 << fmt.e) - 1)).astype(jnp.int32)
+    sign = jnp.where((c >> (fmt.e + fmt.m)) & 1, -1.0, 1.0).astype(jnp.float32)
+    normal = exp > 0
+    norm_val = (1.0 + man / (1 << fmt.m)) * jnp.exp2((exp - fmt.bias).astype(jnp.float32))
+    sub_val = (man / (1 << fmt.m)) * jnp.float32(2.0 ** (1 - fmt.bias))
+    return sign * jnp.where(normal, norm_val, sub_val)
+
+
+def unpack_words(words: jnp.ndarray, k: int, fmt: FpFormat) -> jnp.ndarray:
+    """words[N, wpc] (u32) -> codes[K, N] (u32); jnp mirror of
+    ``quant.unpack_columns``."""
+    b = fmt.bits
+    ks = jnp.arange(k, dtype=jnp.uint32)
+    bitpos = ks * b
+    widx = (bitpos // 32).astype(jnp.int32)  # [K]
+    off = bitpos % 32  # [K] u32
+    # Pure uint32 math: a field of b <= 16 bits spans at most two words.
+    # Shift amounts are guarded so no shift ever reaches 32 (XLA UB).
+    w32 = words.astype(jnp.uint32)  # [N, wpc]
+    lo = jnp.take(w32, widx, axis=1) >> off  # [N, K]
+    wpc = words.shape[1]
+    widx_hi = jnp.minimum(widx + 1, wpc - 1)
+    crosses = (off + b) > 32  # [K] bool; implies off >= 17, so shift <= 15
+    hi_shift = (32 - off) & 31
+    hi = jnp.where(crosses[None, :], jnp.take(w32, widx_hi, axis=1) << hi_shift, 0)
+    val = lo | hi
+    mask = jnp.uint32((1 << b) - 1)
+    return (val & mask).T  # [K, N]
+
+
+def dequant_weights(words: jnp.ndarray, k: int, fmt: FpFormat) -> jnp.ndarray:
+    """Packed words -> exact f32 weights W[K, N]."""
+    return decode_codes(unpack_words(words, k, fmt), fmt)
+
+
+def gemm_ref(acts: jnp.ndarray, words: jnp.ndarray, fmt: FpFormat) -> jnp.ndarray:
+    """Oracle GEMM: acts[M, K] x dequant(words)[K, N] -> f32 [M, N]."""
+    k = acts.shape[1]
+    w = dequant_weights(words, k, fmt)
+    return acts.astype(jnp.float32) @ w

@@ -1,0 +1,104 @@
+"""L1 kernel vs pure-jnp oracle — the core correctness signal.
+
+The Pallas kernel must reproduce the oracle bit-for-bit (both decode the
+same codes to f32 and matmul in f32), and the oracle must equal the direct
+dequantized matmul. Hypothesis sweeps formats and shapes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant, ref
+from compile.kernels.flexibit_gemm import flexibit_gemm, vmem_footprint_bits
+from compile.kernels.formats import FP6_E3M2, FpFormat, default_fp
+
+# interpret-mode Pallas is slow: keep shapes small but varied.
+SMALL_FORMATS = st.builds(
+    FpFormat, e=st.integers(min_value=1, max_value=5), m=st.integers(min_value=0, max_value=10)
+)
+
+
+def make_case(fmt, m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    packed, deq = quant.quantize_weights(w, fmt)
+    return a, packed, deq
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    fmt=SMALL_FORMATS,
+    m=st.integers(min_value=1, max_value=9),
+    k=st.integers(min_value=1, max_value=40),
+    n=st.sampled_from([8, 16, 32]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_oracle_equals_direct_dequant(fmt, m, k, n, seed):
+    a, packed, deq = make_case(fmt, m, k, n, seed)
+    got = np.asarray(ref.gemm_ref(jnp.asarray(a), jnp.asarray(packed), fmt))
+    expect = a @ deq
+    np.testing.assert_allclose(got, expect, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    fmt=SMALL_FORMATS,
+    m=st.integers(min_value=1, max_value=8),
+    k=st.integers(min_value=1, max_value=33),
+    n=st.sampled_from([16, 32]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_pallas_kernel_equals_oracle(fmt, m, k, n, seed):
+    a, packed, _ = make_case(fmt, m, k, n, seed)
+    got = np.asarray(flexibit_gemm(jnp.asarray(a), jnp.asarray(packed), fmt, tile_n=16))
+    expect = np.asarray(ref.gemm_ref(jnp.asarray(a), jnp.asarray(packed), fmt))
+    # Same codes, same decode; only matmul reassociation may differ.
+    np.testing.assert_allclose(got, expect, rtol=4e-6, atol=1e-5)
+
+
+@pytest.mark.parametrize("w_bits", [4, 5, 6, 7, 8, 16])
+def test_paper_formats_exact(w_bits):
+    fmt = default_fp(w_bits)
+    a, packed, deq = make_case(fmt, 16, 48, 128, seed=w_bits)
+    got = np.asarray(flexibit_gemm(jnp.asarray(a), jnp.asarray(packed), fmt))
+    np.testing.assert_allclose(got, a @ deq, rtol=1e-6, atol=1e-6)
+
+
+def test_tile_boundaries():
+    # N = 2 tiles; tile_n smaller than N exercises the grid.
+    fmt = FP6_E3M2
+    a, packed, deq = make_case(fmt, 4, 20, 64, seed=3)
+    for tile in [16, 32, 64]:
+        got = np.asarray(flexibit_gemm(jnp.asarray(a), jnp.asarray(packed), fmt, tile_n=tile))
+        np.testing.assert_allclose(got, a @ deq, rtol=1e-6, atol=1e-6)
+
+
+def test_subnormal_weights_decode_exactly():
+    fmt = FP6_E3M2
+    # All-subnormal weight matrix.
+    ulp = 2.0 ** (1 - fmt.bias - fmt.m)
+    w = (np.arange(16 * 16).reshape(16, 16) % 4) * ulp
+    codes = quant.encode(w, fmt)
+    packed = quant.pack_columns(codes, fmt)
+    a = np.eye(16, dtype=np.float32)
+    got = np.asarray(flexibit_gemm(jnp.asarray(a), jnp.asarray(packed), fmt, tile_n=16))
+    np.testing.assert_array_equal(got, w.astype(np.float32))
+
+
+def test_vmem_footprint_reports_packing_saving():
+    fp6 = vmem_footprint_bits(64, 128, default_fp(6))
+    assert fp6["packing_saving"] == pytest.approx(0.25)
+    assert fp6["weights_packed_bits"] < fp6["weights_padded_bits"]
+    fp8 = vmem_footprint_bits(64, 128, default_fp(8))
+    assert fp8["packing_saving"] == 0.0
+
+
+def test_shape_validation():
+    fmt = FP6_E3M2
+    a = jnp.zeros((4, 10), jnp.float32)
+    bad_words = jnp.zeros((16, 99), jnp.uint32)
+    with pytest.raises(AssertionError):
+        flexibit_gemm(a, bad_words, fmt)

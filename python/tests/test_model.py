@@ -1,0 +1,76 @@
+"""L2 model tests: the quantized-kernel transformer block vs its dequantized
+f32 reference, shape checks, and quantization-error accounting across
+weight precisions."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    BlockConfig,
+    block_forward,
+    block_forward_ref,
+    build_block_fn,
+    init_weights,
+    quantize_block,
+)
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return BlockConfig(d_model=64, heads=2, d_ff=128, seq=8, w_bits=6)
+
+
+@pytest.fixture(scope="module")
+def qweights(small_cfg):
+    return quantize_block(init_weights(small_cfg, seed=1), small_cfg)
+
+
+def test_forward_shape(small_cfg, qweights):
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((small_cfg.seq, small_cfg.d_model)), jnp.float32)
+    y = block_forward(x, qweights, small_cfg)
+    assert y.shape == (small_cfg.seq, small_cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_kernel_block_matches_dequant_reference(small_cfg, qweights):
+    """The kernel path and the dequantized-weights path compute the same
+    function (identical weight values; only the GEMM implementation
+    differs), so outputs agree to f32 matmul reassociation tolerance."""
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((small_cfg.seq, small_cfg.d_model)), jnp.float32)
+    y_kernel = np.asarray(block_forward(x, qweights, small_cfg))
+    y_ref = np.asarray(block_forward_ref(x, qweights, small_cfg))
+    np.testing.assert_allclose(y_kernel, y_ref, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("w_bits", [4, 6, 8])
+def test_quantization_error_decreases_with_bits(w_bits):
+    """More weight bits -> the quantized block tracks the f32 block better
+    (the accuracy/efficiency trade-off the paper's flexibility unlocks)."""
+    cfg = BlockConfig(d_model=64, heads=2, d_ff=128, seq=8, w_bits=w_bits)
+    weights = init_weights(cfg, seed=2)
+    qw = quantize_block(weights, cfg)
+    x = jnp.asarray(np.random.default_rng(3).standard_normal((cfg.seq, cfg.d_model)), jnp.float32)
+    y_q = np.asarray(block_forward_ref(x, qw, cfg))
+    # f32 baseline: identity quantization.
+    qw_f32 = {k: {"deq": v, "packed": None} for k, v in weights.items()}
+    y_f = np.asarray(block_forward_ref(x, qw_f32, cfg))
+    err = np.abs(y_q - y_f).mean()
+    # Store on the function for the ordering check below.
+    test_quantization_error_decreases_with_bits.errs[w_bits] = err
+
+
+test_quantization_error_decreases_with_bits.errs = {}
+
+
+def test_quantization_error_ordering():
+    errs = test_quantization_error_decreases_with_bits.errs
+    if len(errs) == 3:
+        assert errs[8] <= errs[6] <= errs[4] * 1.05, f"error not monotone: {errs}"
+
+
+def test_build_block_fn_jits(small_cfg):
+    fwd, _w, _qw = build_block_fn(small_cfg, seed=4)
+    x = jnp.zeros((small_cfg.seq, small_cfg.d_model), jnp.float32)
+    (y,) = jax.jit(fwd)(x) if (jax := __import__("jax")) else (None,)
+    assert y.shape == (small_cfg.seq, small_cfg.d_model)

@@ -1,0 +1,102 @@
+"""Quantizer + bit-packing tests: encode/decode round-trips, RNE/saturation
+semantics (mirroring the Rust golden model's tests), pack/unpack inverses —
+with hypothesis sweeps over arbitrary formats."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant
+from compile.kernels.formats import FP4_E2M1, FP6_E3M2, FpFormat, default_fp
+
+FORMATS = st.builds(
+    FpFormat, e=st.integers(min_value=1, max_value=8), m=st.integers(min_value=0, max_value=10)
+)
+
+
+def all_codes(fmt):
+    return np.arange(1 << fmt.bits, dtype=np.uint32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(fmt=FORMATS)
+def test_encode_decode_roundtrip_all_codes(fmt):
+    codes = all_codes(fmt)
+    vals = quant.decode(codes, fmt)
+    back = quant.encode(vals, fmt)
+    nonzero = vals != 0.0
+    np.testing.assert_array_equal(back[nonzero], codes[nonzero])
+
+
+def test_fp4_value_table():
+    vals = quant.decode(np.arange(8, dtype=np.uint32), FP4_E2M1)
+    np.testing.assert_array_equal(vals, [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0])
+
+
+def test_encode_saturates():
+    out = quant.decode(quant.encode(np.array([1e30, -1e30]), FP6_E3M2), FP6_E3M2)
+    np.testing.assert_array_equal(out, [28.0, -28.0])
+
+
+def test_round_to_nearest_even():
+    f = FP4_E2M1
+    got = quant.decode(quant.encode(np.array([1.25, 1.75, 2.5]), f), f)
+    np.testing.assert_array_equal(got, [1.0, 2.0, 2.0])
+
+
+def test_subnormal_encoding():
+    f = FP6_E3M2
+    ulp = 2.0 ** (1 - f.bias - f.m)
+    vals = np.array([ulp, 3 * ulp, 0.49 * ulp])
+    got = quant.decode(quant.encode(vals, f), f)
+    np.testing.assert_allclose(got[:2], vals[:2], rtol=0)
+    assert got[2] == 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    fmt=FORMATS,
+    k=st.integers(min_value=1, max_value=70),
+    n=st.integers(min_value=1, max_value=17),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_pack_unpack_inverse(fmt, k, n, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 1 << fmt.bits, size=(k, n), dtype=np.uint32)
+    packed = quant.pack_columns(codes, fmt)
+    assert packed.shape == (n, quant.words_per_column(k, fmt))
+    back = quant.unpack_columns(packed, k, fmt)
+    np.testing.assert_array_equal(back, codes)
+
+
+def test_packed_size_is_tight():
+    # The memory claim: ceil(K*bits/32) words per column, no more.
+    f = default_fp(6)
+    assert quant.words_per_column(16, f) == 3  # 96 bits -> 3 words
+    assert quant.words_per_column(64, f) == 12  # 384 bits -> 12 words
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    w_bits=st.sampled_from([4, 5, 6, 7, 8, 16]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_quantize_weights_error_bound(w_bits, seed):
+    """Quantization error must be within half a ULP of each binade (sanity
+    on the RNE property for tensor inputs)."""
+    fmt = default_fp(w_bits)
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((24, 8)).astype(np.float32)
+    _, deq = quant.quantize_weights(w, fmt)
+    clipped = np.clip(w, -fmt.max_value, fmt.max_value)
+    err = np.abs(deq - clipped)
+    # ULP at |x|: 2^(floor(log2|x|) - m), with the subnormal floor.
+    mag = np.maximum(np.abs(clipped), fmt.min_normal)
+    ulp = np.exp2(np.floor(np.log2(mag)) - fmt.m)
+    assert np.all(err <= 0.5 * ulp + 1e-12), f"max err {err.max()}"
+
+
+def test_encode_handles_zero_and_nan():
+    f = FP6_E3M2
+    assert quant.decode(quant.encode(np.array([0.0]), f), f)[0] == 0.0
+    assert quant.decode(quant.encode(np.array([np.nan]), f), f)[0] == 0.0

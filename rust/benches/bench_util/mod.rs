@@ -1,0 +1,65 @@
+//! Minimal benchmark harness (criterion is unavailable in the offline
+//! build): warmup + timed iterations, median-of-runs reporting, and a
+//! plain-text output format the EXPERIMENTS.md log quotes.
+
+use std::time::Instant;
+
+pub struct Bench {
+    pub name: String,
+    samples: Vec<f64>,
+}
+
+impl Bench {
+    /// Run `f` repeatedly: `warmup` untimed + `iters` timed samples.
+    pub fn run<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Bench {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Bench { name: name.to_string(), samples }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.samples[self.samples.len() / 2]
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples[0]
+    }
+
+    /// Print a result line; `throughput_unit` like ("products", 1.0e6).
+    pub fn report(&self, ops_per_iter: f64, unit: &str) {
+        let med = self.median();
+        let rate = ops_per_iter / med;
+        println!(
+            "{:<44} median {:>10}  min {:>10}  {:>12.3e} {unit}/s",
+            self.name,
+            fmt_time(med),
+            fmt_time(self.min()),
+            rate
+        );
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

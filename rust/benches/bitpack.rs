@@ -1,0 +1,45 @@
+//! BPU throughput benchmarks: pack/unpack rates for the formats the
+//! evaluation uses. The BPU sits on the off-chip interface, so the software
+//! model must sustain well above simulated-channel rates to never be the
+//! simulator's bottleneck.
+
+mod bench_util;
+
+use bench_util::{black_box, Bench};
+use flexibit::arith::{Format, PackedTensor};
+use flexibit::bitpack::{pack_elements, BitUnpacker};
+use flexibit::util::Rng;
+
+fn main() {
+    println!("== bitpack ==");
+    let mut rng = Rng::new(3);
+    let n = 65536;
+
+    for bits in [4u32, 5, 6, 8, 16] {
+        let fmt = Format::default_fp(bits);
+        let codes = rng.codes(n, fmt.bits());
+        let b = Bench::run(&format!("BPU pack {n} x {fmt}"), 3, 30, || {
+            black_box(pack_elements(&codes, fmt).len());
+        });
+        b.report(n as f64, "elems");
+    }
+
+    let fmt = Format::default_fp(6);
+    let codes = rng.codes(n, fmt.bits());
+    let packed = PackedTensor::from_codes(&codes, fmt);
+    let un = BitUnpacker::new(fmt);
+    let b = Bench::run(&format!("BPU unpack {n} x {fmt}"), 3, 30, || {
+        black_box(un.unpack(packed.words(), n).len());
+    });
+    b.report(n as f64, "elems");
+
+    // PackedTensor random access (the SRAM-model hot path).
+    let b = Bench::run("PackedTensor get_code x 65536", 3, 30, || {
+        let mut acc = 0u64;
+        for i in 0..n {
+            acc = acc.wrapping_add(packed.get_code(i) as u64);
+        }
+        black_box(acc);
+    });
+    b.report(n as f64, "reads");
+}

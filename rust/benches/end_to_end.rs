@@ -1,0 +1,51 @@
+//! End-to-end benchmarks: the PJRT serving hot path (requires
+//! `make artifacts`; prints a notice and exits cleanly otherwise) and the
+//! figure-regeneration pipeline.
+
+mod bench_util;
+
+use bench_util::{black_box, Bench};
+use flexibit::runtime::{artifacts_dir, load_block_weights, InputBuf, Runtime};
+use flexibit::util::Rng;
+
+fn main() {
+    println!("== end_to_end ==");
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts not built — skipping PJRT benches (run `make artifacts`)");
+        return;
+    }
+    let mut rt = Runtime::new().expect("PJRT client");
+    rt.load_artifacts_dir(&dir).expect("artifacts");
+
+    let mut rng = Rng::new(11);
+    let input: Vec<f32> = (0..32 * 128).map(|_| rng.gauss() as f32 * 0.5).collect();
+
+    for bits in [4u32, 6, 8] {
+        let name = format!("block_w{bits}");
+        let weights = load_block_weights(&dir.join(format!("{name}.weights.json"))).unwrap();
+        let b = Bench::run(&format!("PJRT {name} forward (seq 32, d 128)"), 3, 50, || {
+            let mut inputs = vec![InputBuf::F32(&input, vec![32, 128])];
+            for (words, shape) in &weights {
+                inputs.push(InputBuf::U32(words, shape.clone()));
+            }
+            let out = rt.execute_mixed(&name, &inputs).unwrap();
+            black_box(out[0].len());
+        });
+        // One forward = 4 weight GEMMs: qkv(128x384) + o(128x128) +
+        // ffn(128x256 + 256x128) at seq 32 -> ~4.2 MFLOP.
+        b.report(2.0 * 32.0 * (128.0 * 384.0 + 128.0 * 128.0 + 2.0 * 128.0 * 256.0), "FLOP");
+    }
+
+    // GEMM with runtime-supplied packed weights.
+    let (m, k, n) = (32usize, 128usize, 128usize);
+    let wpc = (k * 6).div_ceil(32);
+    let words: Vec<u32> = (0..n * wpc).map(|_| rng.next_u64() as u32).collect();
+    let b = Bench::run("PJRT gemm_w6 runtime weights", 3, 50, || {
+        let out = rt
+            .execute_u32_weights("gemm_w6", &input, &[m, k], &words, &[n, wpc])
+            .unwrap();
+        black_box(out.len());
+    });
+    b.report(2.0 * (m * k * n) as f64, "FLOP");
+}

@@ -1,0 +1,73 @@
+//! PE hot-path microbenchmarks: the bit-exact datapath (verification
+//! artifact) and its component stages. Targets in DESIGN.md §Perf:
+//! >= 1M bit-exact products/s through the full window pipeline.
+
+mod bench_util;
+
+use bench_util::{black_box, Bench};
+use flexibit::arith::Format;
+use flexibit::pe::bits::Bits;
+use flexibit::pe::{fbrt, primgen, Pe, PeConfig};
+use flexibit::util::Rng;
+
+fn main() {
+    println!("== pe_hotpath ==");
+    let mut rng = Rng::new(1);
+
+    // Full PE window: FP6 x FP5 (16 products per window).
+    let fp6 = Format::fp(3, 2);
+    let fp5 = Format::fp(2, 2);
+    let acts: Vec<Vec<u32>> = (0..256).map(|_| rng.codes(4, 6)).collect();
+    let wgts: Vec<Vec<u32>> = (0..256).map(|_| rng.codes(4, 5)).collect();
+    let mut pe = Pe::new(PeConfig::default());
+    let mut i = 0;
+    let b = Bench::run("pe window FP6xFP5 (16 products)", 50, 400, || {
+        let w = pe.multiply_window(&acts[i % 256], fp6, &wgts[i % 256], fp5);
+        black_box(w.products.len());
+        i += 1;
+    });
+    b.report(16.0, "products");
+
+    // FP16 x FP16 (1 product, widest mantissas).
+    let fp16 = Format::fp(5, 10);
+    let a16: Vec<Vec<u32>> = (0..256).map(|_| rng.codes(1, 16)).collect();
+    let w16: Vec<Vec<u32>> = (0..256).map(|_| rng.codes(1, 16)).collect();
+    let mut j = 0;
+    let b = Bench::run("pe window FP16xFP16 (1 product)", 50, 400, || {
+        let w = pe.multiply_window(&a16[j % 256], fp16, &w16[j % 256], fp16);
+        black_box(w.products.len());
+        j += 1;
+    });
+    b.report(1.0, "products");
+
+    // Primitive generation alone (4x4 window of 3-bit mantissas).
+    let am = {
+        let mut b = Bits::zeros(12);
+        for k in 0..12 {
+            b.set(k, (rng.next_u64() & 1) as u8);
+        }
+        b
+    };
+    let wm = am.clone();
+    let b = Bench::run("primgen 4x4 @ 3x3 bits (144 prims)", 100, 1000, || {
+        let (p, s) = primgen::generate(&am, &wm, 3, 3, 4, 4, 144);
+        black_box((p.width(), s.num_mults()));
+    });
+    b.report(144.0, "prims");
+
+    // FBRT reduction alone on the same shape.
+    let (prim, shape) = primgen::generate(&am, &wm, 3, 3, 4, 4, 144);
+    let b = Bench::run("fbrt reduce 16x(3x3) products", 100, 1000, || {
+        let out = fbrt::reduce(&prim, &shape, 144);
+        black_box(out.products.len());
+    });
+    b.report(16.0, "products");
+
+    // Dot product through the accumulation path.
+    let av = rng.codes(64, 6);
+    let wv = rng.codes(64, 5);
+    let b = Bench::run("pe dot len-64 FP6xFP5 (ENU/CST/ANU)", 20, 200, || {
+        black_box(pe.dot(&av, fp6, &wv, fp5));
+    });
+    b.report(64.0, "MACs");
+}

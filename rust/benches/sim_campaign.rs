@@ -1,0 +1,65 @@
+//! Simulator throughput benchmarks: the campaign hot path. Target in
+//! DESIGN.md §Perf: the full Fig 10 sweep (4 models x 4 scales x 9 pairs x
+//! 3 accelerators = 432 model simulations) completes in seconds.
+
+mod bench_util;
+
+use bench_util::{black_box, Bench};
+use flexibit::baselines::{Accel, BitFusionAccel, FlexiBitAccel, TensorCoreAccel};
+use flexibit::sim::cycle::simulate_gemm_cycles;
+use flexibit::sim::{all_configs, cloud_b, simulate_model};
+use flexibit::workload::{all_models, gpt3, PrecisionPair};
+
+fn main() {
+    println!("== sim_campaign ==");
+
+    // Single model-level analytical simulation (GPT-3: 6 GEMM kinds).
+    let fb = FlexiBitAccel::new();
+    let cfg = cloud_b();
+    let model = gpt3();
+    let pair = PrecisionPair::of_bits(6, 16);
+    let b = Bench::run("analytical simulate_model GPT-3", 10, 200, || {
+        black_box(simulate_model(&fb, &cfg, &model, pair).seconds);
+    });
+    b.report(1.0, "models");
+
+    // The full Fig 10 campaign.
+    let tc = TensorCoreAccel::new();
+    let bf = BitFusionAccel::new();
+    let accels: Vec<&dyn Accel> = vec![&fb, &tc, &bf];
+    let pairs: Vec<PrecisionPair> =
+        [(16, 16), (8, 16), (8, 8), (6, 16), (6, 6), (5, 5), (4, 16), (4, 8), (4, 4)]
+            .into_iter()
+            .map(|(w, a)| PrecisionPair::of_bits(w, a))
+            .collect();
+    let mut count = 0usize;
+    let b = Bench::run("full Fig10 campaign (432 simulations)", 1, 10, || {
+        count = 0;
+        for cfg in all_configs() {
+            for model in all_models() {
+                for &p in &pairs {
+                    for a in &accels {
+                        black_box(simulate_model(*a, &cfg, &model, p).seconds);
+                        count += 1;
+                    }
+                }
+            }
+        }
+    });
+    b.report(count as f64, "simulations");
+
+    // Cycle-level simulation of one large GEMM (Fig 9 path).
+    let g = flexibit::workload::Gemm {
+        kind: flexibit::workload::GemmKind::FfnUp,
+        m: 2048,
+        k: 12288,
+        n: 49152,
+        count: 1,
+        a_fmt: flexibit::arith::Format::default_fp(16),
+        w_fmt: flexibit::arith::Format::default_fp(6),
+    };
+    let b = Bench::run("cycle-level GPT-3 FFN GEMM", 5, 50, || {
+        black_box(simulate_gemm_cycles(&fb, &cfg, &g).cycles);
+    });
+    b.report(1.0, "gemms");
+}

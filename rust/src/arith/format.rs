@@ -1,0 +1,259 @@
+//! Format descriptors for arbitrary-precision FP (`ExMy`) and INT data.
+
+use std::fmt;
+
+/// An arbitrary floating-point format: 1 sign bit, `e` exponent bits,
+/// `m` explicit mantissa bits (the implicit leading 1 is *not* counted,
+/// matching the paper's `EXMY` notation: FP6-e3m2 = 1 + 3 + 2 bits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FpFormat {
+    /// Exponent field width in bits (1..=8).
+    pub e: u8,
+    /// Explicit mantissa field width in bits (0..=10).
+    pub m: u8,
+}
+
+impl FpFormat {
+    pub const fn new(e: u8, m: u8) -> Self {
+        assert!(e >= 1 && e <= 8, "exponent width must be 1..=8");
+        assert!(m <= 10, "mantissa width must be 0..=10");
+        Self { e, m }
+    }
+
+    /// Total bit width including the sign bit.
+    pub const fn bits(&self) -> u32 {
+        1 + self.e as u32 + self.m as u32
+    }
+
+    /// IEEE-style exponent bias: 2^(e-1) - 1 (bias 0 when e == 1).
+    pub const fn bias(&self) -> i32 {
+        (1 << (self.e - 1)) - 1
+    }
+
+    /// Maximum biased exponent field value.
+    pub const fn emax_field(&self) -> u32 {
+        (1 << self.e) - 1
+    }
+
+    /// Largest finite magnitude representable (saturating policy: the
+    /// all-ones exponent is an ordinary value, as in E4M3/MX formats).
+    pub fn max_value(&self) -> f64 {
+        let frac = 1.0 + (((1u64 << self.m) - 1) as f64) / (1u64 << self.m) as f64;
+        frac * 2f64.powi(self.emax_field() as i32 - self.bias())
+    }
+
+    /// Smallest positive normal magnitude.
+    pub fn min_normal(&self) -> f64 {
+        2f64.powi(1 - self.bias())
+    }
+
+    /// Smallest positive subnormal magnitude (0 has no subnormals when m==0).
+    pub fn min_subnormal(&self) -> f64 {
+        if self.m == 0 {
+            self.min_normal()
+        } else {
+            2f64.powi(1 - self.bias() - self.m as i32)
+        }
+    }
+
+    // ---- Common named formats -------------------------------------------
+
+    pub const FP16: FpFormat = FpFormat { e: 5, m: 10 };
+    pub const BF16: FpFormat = FpFormat { e: 8, m: 7 };
+    pub const FP8_E4M3: FpFormat = FpFormat { e: 4, m: 3 };
+    pub const FP8_E5M2: FpFormat = FpFormat { e: 5, m: 2 };
+    pub const FP6_E3M2: FpFormat = FpFormat { e: 3, m: 2 };
+    pub const FP6_E2M3: FpFormat = FpFormat { e: 2, m: 3 };
+    pub const FP5_E2M2: FpFormat = FpFormat { e: 2, m: 2 };
+    pub const FP4_E2M1: FpFormat = FpFormat { e: 2, m: 1 };
+    pub const FP4_E1M2: FpFormat = FpFormat { e: 1, m: 2 };
+    pub const FP4_E3M0: FpFormat = FpFormat { e: 3, m: 0 };
+}
+
+/// Two's-complement integer format of arbitrary width.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct IntFormat {
+    /// Total width in bits (2..=32), sign included.
+    pub bits: u8,
+}
+
+impl IntFormat {
+    pub const fn new(bits: u8) -> Self {
+        assert!(bits >= 2 && bits <= 32);
+        Self { bits }
+    }
+    pub const fn max(&self) -> i64 {
+        (1 << (self.bits - 1)) - 1
+    }
+    pub const fn min(&self) -> i64 {
+        -(1 << (self.bits - 1))
+    }
+}
+
+/// A data format: arbitrary FP or arbitrary INT.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Format {
+    Fp(FpFormat),
+    Int(IntFormat),
+}
+
+impl Format {
+    pub const fn fp(e: u8, m: u8) -> Self {
+        Format::Fp(FpFormat::new(e, m))
+    }
+    pub const fn int(bits: u8) -> Self {
+        Format::Int(IntFormat::new(bits))
+    }
+
+    /// Total storage width in bits.
+    pub const fn bits(&self) -> u32 {
+        match self {
+            Format::Fp(f) => f.bits(),
+            Format::Int(i) => i.bits as u32,
+        }
+    }
+
+    /// Explicit mantissa bits processed by the multiplier array
+    /// (for INT: magnitude bits, i.e. width - 1 sign bit).
+    pub const fn mantissa_bits(&self) -> u32 {
+        match self {
+            Format::Fp(f) => f.m as u32,
+            Format::Int(i) => i.bits as u32 - 1,
+        }
+    }
+
+    /// Exponent field bits (0 for INT — the FP-only PE modules are bypassed).
+    pub const fn exponent_bits(&self) -> u32 {
+        match self {
+            Format::Fp(f) => f.e as u32,
+            Format::Int(_) => 0,
+        }
+    }
+
+    pub const fn is_fp(&self) -> bool {
+        matches!(self, Format::Fp(_))
+    }
+
+    /// Parse strings like `"e3m2"`, `"fp8"`, `"fp6"`, `"int4"`, `"fp16"`.
+    pub fn parse(s: &str) -> Option<Format> {
+        let s = s.to_ascii_lowercase();
+        if let Some(rest) = s.strip_prefix("int") {
+            return rest.parse::<u8>().ok().map(Format::int);
+        }
+        if s.starts_with('e') {
+            let parts: Vec<&str> = s[1..].split('m').collect();
+            if parts.len() == 2 {
+                let e = parts[0].parse::<u8>().ok()?;
+                let m = parts[1].parse::<u8>().ok()?;
+                return Some(Format::fp(e, m));
+            }
+        }
+        match s.as_str() {
+            "fp16" => Some(Format::Fp(FpFormat::FP16)),
+            "bf16" => Some(Format::Fp(FpFormat::BF16)),
+            "fp8" => Some(Format::Fp(FpFormat::FP8_E4M3)),
+            "fp6" => Some(Format::Fp(FpFormat::FP6_E3M2)),
+            "fp5" => Some(Format::Fp(FpFormat::FP5_E2M2)),
+            "fp4" => Some(Format::Fp(FpFormat::FP4_E2M1)),
+            _ => None,
+        }
+    }
+
+    /// The default FP format for a given total width, following the paper's
+    /// evaluation conventions (e.g. FP6 = e3m2).
+    pub fn default_fp(bits: u32) -> Format {
+        match bits {
+            4 => Format::Fp(FpFormat::FP4_E2M1),
+            5 => Format::Fp(FpFormat::FP5_E2M2),
+            6 => Format::Fp(FpFormat::FP6_E3M2),
+            7 => Format::fp(3, 3),
+            8 => Format::Fp(FpFormat::FP8_E4M3),
+            16 => Format::Fp(FpFormat::FP16),
+            _ => {
+                assert!((3..=16).contains(&bits), "unsupported FP width {bits}");
+                // Split remaining widths following the e≈m heuristic used by
+                // LLM-FP4/FP6-LLM: exponent gets the extra bit.
+                let m = (bits - 1) / 2;
+                let e = bits - 1 - m;
+                Format::fp(e as u8, m as u8)
+            }
+        }
+    }
+}
+
+impl fmt::Display for Format {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Format::Fp(ff) => write!(f, "e{}m{}", ff.e, ff.m),
+            Format::Int(i) => write!(f, "int{}", i.bits),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp_widths() {
+        assert_eq!(FpFormat::FP16.bits(), 16);
+        assert_eq!(FpFormat::FP8_E4M3.bits(), 8);
+        assert_eq!(FpFormat::FP6_E3M2.bits(), 6);
+        assert_eq!(FpFormat::FP5_E2M2.bits(), 5);
+        assert_eq!(FpFormat::FP4_E2M1.bits(), 4);
+    }
+
+    #[test]
+    fn biases() {
+        assert_eq!(FpFormat::FP16.bias(), 15);
+        assert_eq!(FpFormat::FP8_E4M3.bias(), 7);
+        assert_eq!(FpFormat::FP6_E3M2.bias(), 3);
+        assert_eq!(FpFormat::FP4_E2M1.bias(), 1);
+        assert_eq!(FpFormat::new(1, 2).bias(), 0);
+    }
+
+    #[test]
+    fn max_values() {
+        // e2m1: max exp field 3, bias 1 -> 2^2 * 1.5 = 6.0 (MX FP4 max).
+        assert_eq!(FpFormat::FP4_E2M1.max_value(), 6.0);
+        // e3m2: max exp field 7, bias 3 -> 2^4 * 1.75 = 28.0.
+        assert_eq!(FpFormat::FP6_E3M2.max_value(), 28.0);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["e3m2", "e5m10", "int4", "int8", "fp6", "fp8", "e1m2"] {
+            let f = Format::parse(s).unwrap();
+            if s.starts_with('e') || s.starts_with("int") {
+                assert_eq!(format!("{f}"), s);
+            }
+        }
+        assert_eq!(Format::parse("fp16"), Some(Format::Fp(FpFormat::FP16)));
+        assert_eq!(Format::parse("bogus"), None);
+    }
+
+    #[test]
+    fn default_fp_widths() {
+        for bits in 3..=16u32 {
+            assert_eq!(Format::default_fp(bits).bits(), bits);
+        }
+    }
+
+    #[test]
+    fn int_ranges() {
+        let i4 = IntFormat::new(4);
+        assert_eq!(i4.max(), 7);
+        assert_eq!(i4.min(), -8);
+        let i8_ = IntFormat::new(8);
+        assert_eq!(i8_.max(), 127);
+        assert_eq!(i8_.min(), -128);
+    }
+
+    #[test]
+    fn mantissa_exponent_bits() {
+        assert_eq!(Format::fp(3, 2).mantissa_bits(), 2);
+        assert_eq!(Format::fp(3, 2).exponent_bits(), 3);
+        assert_eq!(Format::int(8).mantissa_bits(), 7);
+        assert_eq!(Format::int(8).exponent_bits(), 0);
+    }
+}

@@ -1,0 +1,238 @@
+//! Golden-model arithmetic: exact multiply/accumulate over arbitrary formats.
+//!
+//! The PE datapath ([`crate::pe`]) is tested bit-for-bit against these
+//! functions. All intermediate math is integer-exact: a product of two
+//! mantissas of ≤ 11 bits each fits in 22 bits, and fixed-point accumulation
+//! uses `i128`, so no rounding happens anywhere except where the hardware
+//! itself rounds (final output truncation).
+
+use super::format::Format;
+use super::value::{decode, FpFields};
+
+/// The exact (un-rounded, un-normalized) product of two FP values as the
+/// multiplier pipeline represents it: full-width mantissa product plus an
+/// unbiased exponent. `mantissa_product` includes both implicit 1s, i.e. it
+/// is `(2^Ma + ma) * (2^Mw + mw)` for normals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExactProduct {
+    pub sign: u8,
+    /// Integer mantissa product, scale 2^-(Ma+Mw) relative to `exponent`.
+    pub mantissa_product: u64,
+    /// Unbiased exponent of the product (before normalization).
+    pub exponent: i32,
+    /// Combined fractional bits (Ma + Mw).
+    pub frac_bits: u32,
+}
+
+impl ExactProduct {
+    /// The exact real value of this product.
+    pub fn value(&self) -> f64 {
+        let sign = if self.sign == 1 { -1.0 } else { 1.0 };
+        sign * self.mantissa_product as f64
+            * 2f64.powi(self.exponent - self.frac_bits as i32)
+    }
+}
+
+/// Exact FP×FP (or INT×INT) multiply in the golden model.
+///
+/// For FP operands the result follows the paper's §2.1 equation:
+/// `(-1)^(sA^sW) * 1.mA * 1.mW * 2^(eA+eW-biasA-biasW)`, with subnormal
+/// handling (`exp field == 0` → `0.m * 2^(1-bias)`).
+pub fn mul_exact(a_bits: u32, a_fmt: Format, w_bits: u32, w_fmt: Format) -> ExactProduct {
+    match (a_fmt, w_fmt) {
+        (Format::Fp(fa), Format::Fp(fw)) => {
+            let a = FpFields::unpack(a_bits, fa);
+            let w = FpFields::unpack(w_bits, fw);
+            // Implicit 1 for normals; subnormals use 0.m at exponent 1-bias.
+            let (ma_full, ea) = if a.exp == 0 {
+                (a.man as u64, 1 - fa.bias())
+            } else {
+                ((1u64 << fa.m) | a.man as u64, a.exp as i32 - fa.bias())
+            };
+            let (mw_full, ew) = if w.exp == 0 {
+                (w.man as u64, 1 - fw.bias())
+            } else {
+                ((1u64 << fw.m) | w.man as u64, w.exp as i32 - fw.bias())
+            };
+            ExactProduct {
+                sign: a.sign ^ w.sign,
+                mantissa_product: ma_full * mw_full,
+                exponent: ea + ew,
+                frac_bits: fa.m as u32 + fw.m as u32,
+            }
+        }
+        (Format::Int(ia), Format::Int(iw)) => {
+            let sa = 32 - ia.bits as u32;
+            let sw = 32 - iw.bits as u32;
+            let va = ((a_bits << sa) as i32 >> sa) as i64;
+            let vw = ((w_bits << sw) as i32 >> sw) as i64;
+            let p = va * vw;
+            ExactProduct {
+                sign: if p < 0 { 1 } else { 0 },
+                mantissa_product: p.unsigned_abs(),
+                exponent: 0,
+                frac_bits: 0,
+            }
+        }
+        (a, w) => {
+            // Mixed FP×INT (GPTQ-style W-INT4 A-FP16): treat the INT operand
+            // as an FP value with mantissa = magnitude and exponent 0.
+            let (fp_bits, fp_fmt, int_bits, int_fmt) = if a.is_fp() {
+                (a_bits, a, w_bits, w)
+            } else {
+                (w_bits, w, a_bits, a)
+            };
+            let Format::Int(ifmt) = int_fmt else { unreachable!() };
+            let s = 32 - ifmt.bits as u32;
+            let vi = ((int_bits << s) as i32 >> s) as i64;
+            let Format::Fp(ff) = fp_fmt else { unreachable!() };
+            let f = FpFields::unpack(fp_bits, ff);
+            let (mf, ef) = if f.exp == 0 {
+                (f.man as u64, 1 - ff.bias())
+            } else {
+                ((1u64 << ff.m) | f.man as u64, f.exp as i32 - ff.bias())
+            };
+            ExactProduct {
+                sign: f.sign ^ if vi < 0 { 1 } else { 0 },
+                mantissa_product: mf * vi.unsigned_abs(),
+                exponent: ef,
+                frac_bits: ff.m as u32,
+            }
+        }
+    }
+}
+
+/// Fixed-point accumulation of exact products, as the PE's ANU performs it:
+/// all products are aligned to a common scale `2^-frac_out` and summed in a
+/// wide integer. Returns the exact sum as `f64` (exact because test sizes
+/// keep the sum well under 2^53 ULPs).
+pub fn add_fixed_point(products: &[ExactProduct]) -> f64 {
+    // Common scale: smallest (exponent - frac_bits) across the products.
+    let min_scale = products
+        .iter()
+        .map(|p| p.exponent - p.frac_bits as i32)
+        .min()
+        .unwrap_or(0);
+    let mut acc: i128 = 0;
+    for p in products {
+        let shift = (p.exponent - p.frac_bits as i32) - min_scale;
+        assert!(shift >= 0 && shift < 100, "scale spread too large for exact accumulation");
+        let mag = (p.mantissa_product as i128) << shift;
+        acc += if p.sign == 1 { -mag } else { mag };
+    }
+    acc as f64 * 2f64.powi(min_scale)
+}
+
+/// Exact dot product of two bit-pattern vectors (the golden GEMM inner loop).
+pub fn dot_exact(a: &[u32], a_fmt: Format, w: &[u32], w_fmt: Format) -> f64 {
+    assert_eq!(a.len(), w.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    let products: Vec<ExactProduct> = a
+        .iter()
+        .zip(w)
+        .map(|(&ab, &wb)| mul_exact(ab, a_fmt, wb, w_fmt))
+        .collect();
+    add_fixed_point(&products)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::format::FpFormat;
+    use crate::arith::value::encode;
+
+    fn check_mul_matches_f64(a_fmt: Format, w_fmt: Format) {
+        // Exhaustive over all code pairs for small formats.
+        let (ab, wb) = (a_fmt.bits(), w_fmt.bits());
+        for a in 0..(1u32 << ab) {
+            for w in 0..(1u32 << wb) {
+                let p = mul_exact(a, a_fmt, w, w_fmt);
+                let expected = decode(a, a_fmt) * decode(w, w_fmt);
+                let got = p.value();
+                // Sign of zero: value() of a zero product is +0 or -0; compare by value.
+                assert_eq!(got, expected, "{a_fmt}x{w_fmt} codes a={a} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn mul_exhaustive_fp6_fp5() {
+        check_mul_matches_f64(
+            Format::Fp(FpFormat::FP6_E3M2),
+            Format::Fp(FpFormat::FP5_E2M2),
+        );
+    }
+
+    #[test]
+    fn mul_exhaustive_fp4_fp4() {
+        check_mul_matches_f64(
+            Format::Fp(FpFormat::FP4_E2M1),
+            Format::Fp(FpFormat::FP4_E2M1),
+        );
+    }
+
+    #[test]
+    fn mul_exhaustive_fp8_fp6() {
+        check_mul_matches_f64(
+            Format::Fp(FpFormat::FP8_E4M3),
+            Format::Fp(FpFormat::FP6_E2M3),
+        );
+    }
+
+    #[test]
+    fn mul_exhaustive_e1m2_e3m0() {
+        // Degenerate corners: bias-0 exponent, zero-width mantissa.
+        check_mul_matches_f64(Format::fp(1, 2), Format::fp(3, 0));
+    }
+
+    #[test]
+    fn mul_exhaustive_int4_int4() {
+        check_mul_matches_f64(Format::int(4), Format::int(4));
+    }
+
+    #[test]
+    fn mul_exhaustive_int8_int3() {
+        check_mul_matches_f64(Format::int(8), Format::int(3));
+    }
+
+    #[test]
+    fn mul_mixed_fp16_int4() {
+        // GPTQ-style: FP16 activation x INT4 weight, sampled.
+        let a_fmt = Format::Fp(FpFormat::FP16);
+        let w_fmt = Format::int(4);
+        for a_val in [-3.5f64, -1.0, 0.0, 0.5, 1.25, 100.0] {
+            for w in 0..16u32 {
+                let a = encode(a_val, a_fmt);
+                let p = mul_exact(a, a_fmt, w, w_fmt);
+                assert_eq!(p.value(), decode(a, a_fmt) * decode(w, w_fmt));
+            }
+        }
+    }
+
+    #[test]
+    fn dot_small() {
+        let fmt = Format::Fp(FpFormat::FP6_E3M2);
+        let a: Vec<u32> = [1.0f64, 2.0, -3.0, 0.5].iter().map(|&v| encode(v, fmt)).collect();
+        let w: Vec<u32> = [4.0f64, -1.0, 2.0, 8.0].iter().map(|&v| encode(v, fmt)).collect();
+        // 4 - 2 - 6 + 4 = 0
+        assert_eq!(dot_exact(&a, fmt, &w, fmt), 0.0);
+    }
+
+    #[test]
+    fn dot_subnormals_cancel_exactly() {
+        let f = FpFormat::FP6_E3M2;
+        let fmt = Format::Fp(f);
+        let s = f.min_subnormal();
+        let a = [encode(s, fmt), encode(s, fmt)];
+        let w = [encode(1.0, fmt), encode(-1.0, fmt)];
+        assert_eq!(dot_exact(&a, fmt, &w, fmt), 0.0);
+    }
+
+    #[test]
+    fn empty_dot_is_zero() {
+        let fmt = Format::Fp(FpFormat::FP6_E3M2);
+        assert_eq!(dot_exact(&[], fmt, &[], fmt), 0.0);
+    }
+}

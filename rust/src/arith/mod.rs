@@ -1,0 +1,26 @@
+//! Arbitrary-precision FP/INT arithmetic golden model.
+//!
+//! This module is the *independent reference* the bit-level PE datapath
+//! ([`crate::pe`]) is verified against — the software analog of the paper's
+//! RTL verification. It provides:
+//!
+//! * [`Format`] — an arbitrary `ExMy` floating-point or two's-complement
+//!   integer format descriptor (any exponent width 1..=8, any mantissa width
+//!   0..=10, plus INT2..INT32).
+//! * Exact encode/decode between bit patterns and real values (including
+//!   subnormals and the saturating no-NaN/Inf policy quantized ML formats
+//!   use, following FP8-E4M3 / MX conventions).
+//! * Golden multiply / add / dot with exact integer mantissa math.
+//! * [`MxBlock`] — Micro-scaling (MX) block format with a shared scale.
+
+mod format;
+mod value;
+mod golden;
+mod mx;
+mod tensor;
+
+pub use format::{Format, FpFormat, IntFormat};
+pub use value::{decode, encode, decode_fields, FpFields};
+pub use golden::{mul_exact, add_fixed_point, dot_exact, ExactProduct};
+pub use mx::{MxBlock, mx_dot};
+pub use tensor::PackedTensor;

@@ -1,0 +1,102 @@
+//! Micro-scaling (MX) block format support (paper §2.1, §3.9).
+//!
+//! An MX block is `K` private elements in a narrow format sharing one
+//! power-of-two scale (E8M0 in the OCP MX spec). The PE applies the scales
+//! once per block via its two dedicated scale registers; here we model the
+//! arithmetic: `Dot(A, W) = X(A)·X(W) · Σ P_i(A)·P_i(W)`.
+
+use super::format::Format;
+use super::golden::dot_exact;
+use super::value::{decode, encode};
+
+/// One MX block: a shared power-of-two scale and K packed private elements.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MxBlock {
+    /// log2 of the shared scale factor (E8M0-style, signed).
+    pub scale_log2: i32,
+    /// Element format of the private values.
+    pub fmt: Format,
+    /// Packed element codes.
+    pub elems: Vec<u32>,
+}
+
+impl MxBlock {
+    /// Quantize a slice of reals into an MX block of the given element format
+    /// and block size, choosing the scale so the largest magnitude maps to
+    /// the format's max value (the OCP-MX shared-scale rule).
+    pub fn quantize(values: &[f64], fmt: Format, _block: usize) -> Self {
+        let amax = values.iter().fold(0f64, |m, v| m.max(v.abs()));
+        let fmt_max = match fmt {
+            Format::Fp(f) => f.max_value(),
+            Format::Int(i) => i.max() as f64,
+        };
+        let scale_log2 = if amax == 0.0 {
+            0
+        } else {
+            (amax / fmt_max).log2().ceil() as i32
+        };
+        let scale = 2f64.powi(scale_log2);
+        let elems = values.iter().map(|&v| encode(v / scale, fmt)).collect();
+        MxBlock { scale_log2, fmt, elems }
+    }
+
+    /// Dequantize back to reals.
+    pub fn dequantize(&self) -> Vec<f64> {
+        let scale = 2f64.powi(self.scale_log2);
+        self.elems.iter().map(|&e| decode(e, self.fmt) * scale).collect()
+    }
+}
+
+/// Exact MX dot product between two blocks (must have equal K).
+pub fn mx_dot(a: &MxBlock, w: &MxBlock) -> f64 {
+    assert_eq!(a.elems.len(), w.elems.len(), "MX blocks must have equal K");
+    let inner = dot_exact(&a.elems, a.fmt, &w.elems, w.fmt);
+    inner * 2f64.powi(a.scale_log2 + w.scale_log2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::format::FpFormat;
+
+    #[test]
+    fn quantize_scale_covers_max() {
+        let vals = [0.1, -12.0, 3.0, 0.0];
+        let b = MxBlock::quantize(&vals, Format::Fp(FpFormat::FP4_E2M1), 4);
+        let dq = b.dequantize();
+        // Largest magnitude must be representable (|12| <= 6 * 2^scale).
+        assert!((dq[1] - (-12.0)).abs() / 12.0 < 0.2, "dq={dq:?}");
+    }
+
+    #[test]
+    fn zero_block() {
+        let b = MxBlock::quantize(&[0.0; 8], Format::Fp(FpFormat::FP4_E2M1), 8);
+        assert!(b.dequantize().iter().all(|&v| v == 0.0));
+        assert_eq!(mx_dot(&b, &b), 0.0);
+    }
+
+    #[test]
+    fn mx_dot_matches_dequantized_dot() {
+        let a_vals = [1.0, 2.0, -4.0, 0.5, 8.0, -1.5, 2.5, 3.0];
+        let w_vals = [0.25, -1.0, 2.0, 4.0, -0.5, 1.0, -2.0, 0.125];
+        let a = MxBlock::quantize(&a_vals, Format::Fp(FpFormat::FP6_E3M2), 8);
+        let w = MxBlock::quantize(&w_vals, Format::Fp(FpFormat::FP6_E3M2), 8);
+        let expect: f64 = a
+            .dequantize()
+            .iter()
+            .zip(w.dequantize().iter())
+            .map(|(x, y)| x * y)
+            .sum();
+        assert!((mx_dot(&a, &w) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn int8_elements() {
+        let vals = [100.0, -50.0, 25.0, 12.0];
+        let b = MxBlock::quantize(&vals, Format::int(8), 4);
+        let dq = b.dequantize();
+        for (orig, got) in vals.iter().zip(&dq) {
+            assert!((orig - got).abs() <= 2f64.powi(b.scale_log2), "{orig} vs {got}");
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Bit-packed tensor container: values of any format stored back-to-back with
+//! no padding — the memory layout the Bit-Packing Unit (paper §4.1) produces
+//! and the accelerator's SRAM holds.
+
+use super::format::Format;
+use super::value::{decode, encode};
+
+/// A flat tensor of `len` values in `fmt`, bit-packed into `u64` words
+/// (LSB-first within each word, values contiguous across word boundaries).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedTensor {
+    pub fmt: Format,
+    pub len: usize,
+    words: Vec<u64>,
+}
+
+impl PackedTensor {
+    pub fn zeros(fmt: Format, len: usize) -> Self {
+        let total_bits = len * fmt.bits() as usize;
+        PackedTensor { fmt, len, words: vec![0; total_bits.div_ceil(64)] }
+    }
+
+    /// Pack a slice of real values (quantizing each with round-to-nearest).
+    pub fn from_f64(values: &[f64], fmt: Format) -> Self {
+        let mut t = Self::zeros(fmt, values.len());
+        for (i, &v) in values.iter().enumerate() {
+            t.set_code(i, encode(v, fmt));
+        }
+        t
+    }
+
+    /// Pack raw codes directly.
+    pub fn from_codes(codes: &[u32], fmt: Format) -> Self {
+        let mut t = Self::zeros(fmt, codes.len());
+        for (i, &c) in codes.iter().enumerate() {
+            t.set_code(i, c);
+        }
+        t
+    }
+
+    /// Total packed size in bits (the paper's memory-efficiency win: exactly
+    /// `len * bits`, no padding to byte/power-of-two boundaries).
+    pub fn bits(&self) -> usize {
+        self.len * self.fmt.bits() as usize
+    }
+
+    /// Packed size in bytes (rounded up to the word the stream ends in).
+    pub fn bytes(&self) -> usize {
+        self.bits().div_ceil(8)
+    }
+
+    /// Size in bytes if stored zero-padded to the next power-of-two width ≥ 4
+    /// (what a fixed-precision memory system stores; Fig 11's ablation).
+    pub fn padded_bytes(&self) -> usize {
+        let w = self.fmt.bits().next_power_of_two().max(4) as usize;
+        (self.len * w).div_ceil(8)
+    }
+
+    pub fn get_code(&self, i: usize) -> u32 {
+        assert!(i < self.len);
+        let w = self.fmt.bits() as usize;
+        let bit = i * w;
+        let (word, off) = (bit / 64, bit % 64);
+        let lo = self.words[word] >> off;
+        let val = if off + w > 64 {
+            lo | (self.words[word + 1] << (64 - off))
+        } else {
+            lo
+        };
+        (val & ((1u64 << w) - 1)) as u32
+    }
+
+    pub fn set_code(&mut self, i: usize, code: u32) {
+        assert!(i < self.len);
+        let w = self.fmt.bits() as usize;
+        let mask = (1u64 << w) - 1;
+        let code = code as u64 & mask;
+        let bit = i * w;
+        let (word, off) = (bit / 64, bit % 64);
+        self.words[word] = (self.words[word] & !(mask << off)) | (code << off);
+        if off + w > 64 {
+            let hi_bits = off + w - 64;
+            let hi_mask = (1u64 << hi_bits) - 1;
+            self.words[word + 1] =
+                (self.words[word + 1] & !hi_mask) | (code >> (64 - off));
+        }
+    }
+
+    pub fn get_f64(&self, i: usize) -> f64 {
+        decode(self.get_code(i), self.fmt)
+    }
+
+    pub fn to_f64(&self) -> Vec<f64> {
+        (0..self.len).map(|i| self.get_f64(i)).collect()
+    }
+
+    pub fn codes(&self) -> Vec<u32> {
+        (0..self.len).map(|i| self.get_code(i)).collect()
+    }
+
+    /// The raw packed words (for feeding the BPU / runtime).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::format::FpFormat;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_codes_all_formats() {
+        let mut rng = Rng::new(7);
+        for fmt in [
+            Format::Fp(FpFormat::FP6_E3M2),
+            Format::Fp(FpFormat::FP5_E2M2),
+            Format::Fp(FpFormat::FP4_E2M1),
+            Format::Fp(FpFormat::FP16),
+            Format::fp(3, 3),
+            Format::int(3),
+            Format::int(7),
+        ] {
+            let n = 257; // crosses many word boundaries for odd widths
+            let codes: Vec<u32> = rng.codes(n, fmt.bits());
+            let t = PackedTensor::from_codes(&codes, fmt);
+            assert_eq!(t.codes(), codes, "{fmt}");
+        }
+    }
+
+    #[test]
+    fn packed_vs_padded_bytes() {
+        let t = PackedTensor::zeros(Format::Fp(FpFormat::FP6_E3M2), 1000);
+        assert_eq!(t.bits(), 6000);
+        assert_eq!(t.bytes(), 750);
+        assert_eq!(t.padded_bytes(), 1000); // FP6 padded to 8 bits
+        let t5 = PackedTensor::zeros(Format::Fp(FpFormat::FP5_E2M2), 8);
+        assert_eq!(t5.bits(), 40);
+        assert_eq!(t5.bytes(), 5);
+        assert_eq!(t5.padded_bytes(), 8);
+    }
+
+    #[test]
+    fn word_boundary_crossing() {
+        // 6-bit values: value 10 spans bits 60..66, crossing word 0 -> 1.
+        let fmt = Format::Fp(FpFormat::FP6_E3M2);
+        let mut t = PackedTensor::zeros(fmt, 12);
+        t.set_code(10, 0b101011);
+        assert_eq!(t.get_code(10), 0b101011);
+        assert_eq!(t.get_code(9), 0);
+        assert_eq!(t.get_code(11), 0);
+        // Overwrite and verify neighbors survive.
+        t.set_code(9, 0b111111);
+        t.set_code(11, 0b100001);
+        assert_eq!(t.get_code(10), 0b101011);
+    }
+
+    #[test]
+    fn from_f64_quantizes() {
+        let fmt = Format::Fp(FpFormat::FP6_E3M2);
+        let vals = [1.0, 2.5, -3.0, 0.124];
+        let t = PackedTensor::from_f64(&vals, fmt);
+        let dq = t.to_f64();
+        assert_eq!(dq[0], 1.0);
+        assert_eq!(dq[1], 2.5);
+        assert_eq!(dq[2], -3.0);
+        assert!((dq[3] - 0.124).abs() < 0.01);
+    }
+}

@@ -1,0 +1,234 @@
+//! Exact encode/decode between arbitrary-format bit patterns and real values.
+//!
+//! Encoding uses round-to-nearest-even with saturation to the format's max
+//! finite value (the no-Inf/NaN convention used by quantized ML formats such
+//! as E4M3-FN and the MX element formats). Decoding is exact: every
+//! representable value of every supported format fits in an `f64`.
+
+use super::format::{Format, FpFormat};
+
+/// Separated bit fields of an FP value, as the PE's Separator produces them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FpFields {
+    pub sign: u8,
+    /// Biased exponent field.
+    pub exp: u32,
+    /// Explicit mantissa field (no implicit 1).
+    pub man: u32,
+}
+
+impl FpFields {
+    /// Reassemble the packed bit pattern: `[sign | exp | man]`, sign at MSB.
+    pub fn pack(&self, f: FpFormat) -> u32 {
+        ((self.sign as u32) << (f.e + f.m)) | (self.exp << f.m) | self.man
+    }
+
+    /// Split a packed bit pattern into fields.
+    pub fn unpack(bits: u32, f: FpFormat) -> Self {
+        let man = bits & ((1 << f.m) - 1);
+        let exp = (bits >> f.m) & ((1 << f.e) - 1);
+        let sign = ((bits >> (f.e + f.m)) & 1) as u8;
+        Self { sign, exp, man }
+    }
+}
+
+/// Decode a bit pattern in `fmt` to its exact real value.
+pub fn decode(bits: u32, fmt: Format) -> f64 {
+    match fmt {
+        Format::Fp(f) => {
+            let fields = FpFields::unpack(bits, f);
+            decode_fp_fields(&fields, f)
+        }
+        Format::Int(i) => {
+            // Sign-extend a `bits`-wide two's-complement value.
+            let shift = 32 - i.bits as u32;
+            (((bits << shift) as i32) >> shift) as f64
+        }
+    }
+}
+
+/// Decode already-separated FP fields (used to check the PE's Separator +
+/// downstream modules independently).
+pub fn decode_fp_fields(fields: &FpFields, f: FpFormat) -> f64 {
+    let sign = if fields.sign == 1 { -1.0 } else { 1.0 };
+    let m_scale = (1u64 << f.m) as f64;
+    if fields.exp == 0 {
+        // Subnormal: 0.m * 2^(1-bias).
+        sign * (fields.man as f64 / m_scale) * 2f64.powi(1 - f.bias())
+    } else {
+        // Normal: 1.m * 2^(exp-bias).
+        sign * (1.0 + fields.man as f64 / m_scale) * 2f64.powi(fields.exp as i32 - f.bias())
+    }
+}
+
+/// Convenience: decode straight to fields.
+pub fn decode_fields(bits: u32, f: FpFormat) -> FpFields {
+    FpFields::unpack(bits, f)
+}
+
+/// Encode a real value into `fmt` with round-to-nearest-even, saturating at
+/// the format's largest finite magnitude. Returns the bit pattern.
+pub fn encode(value: f64, fmt: Format) -> u32 {
+    match fmt {
+        Format::Fp(f) => encode_fp(value, f),
+        Format::Int(i) => {
+            let v = value.round_ties_even().clamp(i.min() as f64, i.max() as f64) as i64;
+            (v as u32) & (u32::MAX >> (32 - i.bits as u32))
+        }
+    }
+}
+
+fn encode_fp(value: f64, f: FpFormat) -> u32 {
+    let sign = if value.is_sign_negative() { 1u8 } else { 0 };
+    let mag = value.abs();
+    if mag == 0.0 || value.is_nan() {
+        // NaN has no encoding under the saturating policy; flush to zero
+        // (quantizers never produce NaN; this is a defensive default).
+        return FpFields { sign, exp: 0, man: 0 }.pack(f);
+    }
+    let max = f.max_value();
+    if mag >= max {
+        return FpFields { sign, exp: f.emax_field(), man: (1 << f.m) - 1 }.pack(f);
+    }
+    // Scale into fixed point relative to the subnormal ULP and round once:
+    // every representable magnitude is an integer multiple of min_subnormal
+    // only within the subnormal range; for normals the ULP grows with the
+    // exponent, so round in the value's own binade.
+    let e_unb = mag.log2().floor() as i32;
+    let e_field_unclamped = e_unb + f.bias();
+    if e_field_unclamped <= 0 {
+        // Subnormal range: quantize to multiples of 2^(1-bias-m).
+        let ulp = 2f64.powi(1 - f.bias() - f.m as i32);
+        let q = (mag / ulp).round_ties_even();
+        if q as u64 >= (1 << f.m) {
+            // Rounded up into the smallest normal.
+            return FpFields { sign, exp: 1, man: 0 }.pack(f);
+        }
+        return FpFields { sign, exp: 0, man: q as u32 }.pack(f);
+    }
+    // Normal range: mantissa = round(mag / 2^e_unb * 2^m) - 2^m.
+    let mut e_field = e_field_unclamped as u32;
+    let scaled = mag / 2f64.powi(e_unb) * (1u64 << f.m) as f64;
+    let mut q = scaled.round_ties_even() as u64;
+    if q >= (2 << f.m) {
+        // Mantissa overflowed the binade (e.g. 1.96 -> 2.0): bump exponent.
+        q >>= 1;
+        e_field += 1;
+        if e_field > f.emax_field() {
+            return FpFields { sign, exp: f.emax_field(), man: (1 << f.m) - 1 }.pack(f);
+        }
+    }
+    debug_assert!(q >= (1 << f.m));
+    FpFields { sign, exp: e_field, man: (q - (1 << f.m)) as u32 }.pack(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_fp4_table() {
+        // Full value table of e2m1 (MX FP4): ±{0, .5, 1, 1.5, 2, 3, 4, 6}.
+        let f = Format::Fp(FpFormat::FP4_E2M1);
+        let expected = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+        for (i, &e) in expected.iter().enumerate() {
+            assert_eq!(decode(i as u32, f), e, "code {i}");
+            assert_eq!(decode((i as u32) | 0b1000, f), -e, "code -{i}");
+        }
+    }
+
+    #[test]
+    fn encode_roundtrip_all_codes() {
+        // Every code of every small format must round-trip exactly.
+        for (e, m) in [(1u8, 2u8), (2, 1), (2, 2), (3, 2), (2, 3), (4, 3), (5, 2), (3, 3)] {
+            let f = FpFormat::new(e, m);
+            let fmt = Format::Fp(f);
+            for code in 0..(1u32 << f.bits()) {
+                let v = decode(code, fmt);
+                let back = encode(v, fmt);
+                // -0.0 and +0.0 decode equal; accept either encoding.
+                if v == 0.0 {
+                    assert_eq!(back & !(1 << (f.e + f.m)), 0);
+                } else {
+                    assert_eq!(back, code, "format e{e}m{m} code {code} value {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn encode_saturates() {
+        let fmt = Format::Fp(FpFormat::FP6_E3M2);
+        assert_eq!(decode(encode(1e30, fmt), fmt), 28.0);
+        assert_eq!(decode(encode(-1e30, fmt), fmt), -28.0);
+    }
+
+    #[test]
+    fn encode_rounds_to_nearest_even() {
+        let fmt = Format::Fp(FpFormat::FP4_E2M1);
+        // 1.25 is exactly between 1.0 and 1.5 -> ties to even mantissa (1.0).
+        assert_eq!(decode(encode(1.25, fmt), fmt), 1.0);
+        // 1.75 between 1.5 and 2.0 -> 2.0 (even).
+        assert_eq!(decode(encode(1.75, fmt), fmt), 2.0);
+        // 2.5 between 2 and 3 -> 2 (even mantissa).
+        assert_eq!(decode(encode(2.5, fmt), fmt), 2.0);
+    }
+
+    #[test]
+    fn encode_subnormals() {
+        let f = FpFormat::FP6_E3M2;
+        let fmt = Format::Fp(f);
+        let ulp = f.min_subnormal();
+        assert_eq!(decode(encode(ulp, fmt), fmt), ulp);
+        assert_eq!(decode(encode(ulp * 3.0, fmt), fmt), ulp * 3.0);
+        // Halfway between 0 and ulp rounds to even (0).
+        assert_eq!(decode(encode(ulp * 0.5, fmt), fmt), 0.0);
+        // Subnormal rounding up into normal range.
+        let almost_normal = f.min_normal() - ulp * 0.4;
+        assert_eq!(decode(encode(almost_normal, fmt), fmt), f.min_normal());
+    }
+
+    #[test]
+    fn encode_binade_overflow() {
+        let fmt = Format::Fp(FpFormat::FP6_E3M2);
+        // 1.97 rounds up to 2.0, crossing the binade.
+        assert_eq!(decode(encode(1.97, fmt), fmt), 2.0);
+    }
+
+    #[test]
+    fn int_roundtrip() {
+        for bits in [2u8, 3, 4, 6, 8, 12, 16] {
+            let fmt = Format::int(bits);
+            let lo = -(1i64 << (bits - 1));
+            let hi = (1i64 << (bits - 1)) - 1;
+            for v in lo..=hi {
+                assert_eq!(decode(encode(v as f64, fmt), fmt), v as f64, "int{bits} {v}");
+            }
+            assert_eq!(decode(encode(1e12, fmt), fmt), hi as f64);
+            assert_eq!(decode(encode(-1e12, fmt), fmt), lo as f64);
+        }
+    }
+
+    #[test]
+    fn fields_pack_unpack() {
+        let f = FpFormat::FP8_E4M3;
+        for code in 0..256u32 {
+            let fields = FpFields::unpack(code, f);
+            assert_eq!(fields.pack(f), code);
+        }
+    }
+
+    #[test]
+    fn m0_formats() {
+        // e3m0: pure power-of-two values.
+        let f = FpFormat::new(3, 0);
+        let fmt = Format::Fp(f);
+        assert_eq!(decode(0b0100, fmt), 2.0); // exp field 4, bias 3 -> 2^1
+        for code in 0..(1u32 << f.bits()) {
+            let v = decode(code, fmt);
+            if v != 0.0 {
+                assert_eq!(v.abs().log2().fract(), 0.0, "code {code} -> {v}");
+            }
+        }
+    }
+}

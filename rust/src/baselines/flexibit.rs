@@ -1,0 +1,110 @@
+//! FlexiBit itself, as an [`Accel`] implementation: throughput straight from
+//! the PE resource model, bit-packed storage, full-precision (no padding)
+//! multiplier work.
+
+use super::Accel;
+use crate::arith::Format;
+use crate::area::PeArea;
+use crate::energy::EnergyTable;
+use crate::pe::PeConfig;
+use crate::workload::PrecisionPair;
+
+#[derive(Debug, Clone)]
+pub struct FlexiBitAccel {
+    pub cfg: PeConfig,
+    /// Bit-packing enabled (Fig 11 ablates this).
+    pub bit_packing: bool,
+    pe_area: f64,
+}
+
+impl FlexiBitAccel {
+    pub fn new() -> Self {
+        Self::with_config(PeConfig::default(), true)
+    }
+
+    pub fn with_config(cfg: PeConfig, bit_packing: bool) -> Self {
+        let pe_area = PeArea::of(&cfg, 0.18).total();
+        FlexiBitAccel { cfg, bit_packing, pe_area }
+    }
+
+    /// The Fig 11 ablation variant: same compute, padded memory layout.
+    pub fn without_bit_packing() -> Self {
+        Self::with_config(PeConfig::default(), false)
+    }
+}
+
+impl Default for FlexiBitAccel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Accel for FlexiBitAccel {
+    fn name(&self) -> &'static str {
+        if self.bit_packing {
+            "FlexiBit"
+        } else {
+            "FlexiBit-noBP"
+        }
+    }
+
+    fn mults_per_pe_cycle(&self, pair: PrecisionPair) -> f64 {
+        self.cfg.mults_per_cycle(pair.a, pair.w) as f64
+    }
+
+    fn storage_bits(&self, fmt: Format) -> u32 {
+        if self.bit_packing {
+            fmt.bits()
+        } else {
+            crate::bitpack::padded_slot_bits(fmt) as u32
+        }
+    }
+
+    fn prim_bits_per_product(&self, pair: PrecisionPair) -> f64 {
+        // Exactly the explicit mantissa work — zero padding waste.
+        (pair.a.mantissa_bits().max(1) * pair.w.mantissa_bits().max(1)) as f64
+    }
+
+    fn energy_table(&self, mobile: bool) -> EnergyTable {
+        if mobile {
+            EnergyTable::bit_parallel_mobile()
+        } else {
+            EnergyTable::bit_parallel()
+        }
+    }
+
+    fn pe_area_mm2(&self) -> f64 {
+        self.pe_area
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::FpFormat;
+
+    #[test]
+    fn packed_vs_padded_storage() {
+        let fb = FlexiBitAccel::new();
+        let fp6 = Format::Fp(FpFormat::FP6_E3M2);
+        assert_eq!(fb.storage_bits(fp6), 6);
+        let nobp = FlexiBitAccel::without_bit_packing();
+        assert_eq!(nobp.storage_bits(fp6), 8);
+    }
+
+    #[test]
+    fn throughput_follows_pe_model() {
+        let fb = FlexiBitAccel::new();
+        let p66 = PrecisionPair::of_bits(6, 6);
+        let p1616 = PrecisionPair::of_bits(16, 16);
+        assert_eq!(fb.mults_per_pe_cycle(p66), 16.0);
+        assert_eq!(fb.mults_per_pe_cycle(p1616), 1.0);
+    }
+
+    #[test]
+    fn prim_work_is_exact() {
+        let fb = FlexiBitAccel::new();
+        // FP6 e3m2 x FP6: 2x2 = 4 primitive bits per product.
+        assert_eq!(fb.prim_bits_per_product(PrecisionPair::of_bits(6, 6)), 4.0);
+    }
+}

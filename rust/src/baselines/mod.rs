@@ -1,0 +1,97 @@
+//! Baseline accelerator models (paper §5.1, §5.3.3).
+//!
+//! Every accelerator — FlexiBit and the four comparators — implements
+//! [`Accel`]: a per-PE compute-throughput model, the storage width its
+//! memory system uses for each format, and its energy table / area scale.
+//! The performance model in [`crate::sim`] is shared; only these hooks
+//! differ, which is exactly the iso-PE comparison the paper runs.
+//!
+//! * [`FlexiBitAccel`] — arbitrary precision, bit-packed storage.
+//! * [`TensorCoreAccel`] — fixed {FP16, FP8-E4M3/E5M2, INT8/16} units;
+//!   everything else up-casts to the nearest supported width (padding both
+//!   operands to a *common* mode — tensor-core MMA runs one mode at a time).
+//! * [`BitFusionAccel`] — power-of-two composable units (per-operand
+//!   padding to 2/4/8/16), extended for FP per the paper.
+//! * [`CambriconPAccel`] / [`BitModAccel`] — bit-serial comparators
+//!   (§5.3.3), with lane counts calibrated to the paper's Table 4.
+
+mod flexibit;
+mod tensor_core;
+mod bit_fusion;
+mod bit_serial;
+
+pub use bit_fusion::BitFusionAccel;
+pub use bit_serial::{BitModAccel, CambriconPAccel};
+pub use flexibit::FlexiBitAccel;
+pub use tensor_core::TensorCoreAccel;
+
+use crate::arith::Format;
+use crate::energy::EnergyTable;
+use crate::workload::PrecisionPair;
+
+/// An accelerator implementation the shared performance model can drive.
+pub trait Accel {
+    fn name(&self) -> &'static str;
+
+    /// Multiplications per PE per cycle for a precision pair, after this
+    /// architecture's padding/up-casting rules.
+    fn mults_per_pe_cycle(&self, pair: PrecisionPair) -> f64;
+
+    /// Bits the memory system stores per element of `fmt` (packed for
+    /// FlexiBit, padded to the supported width for the baselines).
+    fn storage_bits(&self, fmt: Format) -> u32;
+
+    /// 1-bit multiply primitives per product (for compute energy): the
+    /// *physical* multiplier work including padding waste.
+    fn prim_bits_per_product(&self, pair: PrecisionPair) -> f64;
+
+    /// Energy table.
+    fn energy_table(&self, mobile: bool) -> EnergyTable;
+
+    /// PE area in mm² (iso-PE comparisons scale from FlexiBit's;
+    /// paper: FlexiBit is +0.5% vs TensorCore, +1% vs BitFusion).
+    fn pe_area_mm2(&self) -> f64;
+
+    /// True for bit-serial architectures (affects the cycle model).
+    fn is_bit_serial(&self) -> bool {
+        false
+    }
+}
+
+/// Effective format after padding a format to a supported set of widths.
+pub(crate) fn pad_format(fmt: Format, supported: &[u32]) -> Format {
+    let bits = fmt.bits();
+    let target = supported
+        .iter()
+        .copied()
+        .filter(|&s| s >= bits)
+        .min()
+        .unwrap_or_else(|| *supported.iter().max().unwrap());
+    match fmt {
+        Format::Int(_) => Format::int(target as u8),
+        Format::Fp(_) => Format::default_fp(target),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::FpFormat;
+
+    #[test]
+    fn padding_picks_nearest_supported() {
+        let fp6 = Format::Fp(FpFormat::FP6_E3M2);
+        assert_eq!(pad_format(fp6, &[8, 16]).bits(), 8);
+        assert_eq!(pad_format(fp6, &[4, 8, 16]).bits(), 8);
+        assert_eq!(pad_format(fp6, &[16]).bits(), 16);
+        let fp4 = Format::Fp(FpFormat::FP4_E2M1);
+        assert_eq!(pad_format(fp4, &[4, 8, 16]).bits(), 4);
+        // Wider than anything supported: clamp to max (data is re-quantized).
+        assert_eq!(pad_format(Format::fp(8, 9), &[4, 8, 16]).bits(), 16);
+    }
+
+    #[test]
+    fn int_padding_stays_int() {
+        assert!(matches!(pad_format(Format::int(3), &[4, 8]), Format::Int(_)));
+    }
+}

@@ -1,0 +1,133 @@
+//! Tensor Core-like baseline (paper §5.1): a systolic MMA array with fixed
+//! precision units — FP16 (E5M10), FP8 (E4M3/E5M2), INT8/INT16 — run one
+//! mode at a time. Non-supported precisions up-cast *both* operands to the
+//! nearest supported common width (Figure 1 (c), Challenge 2), padding the
+//! memory layout too. Iso-capacity with FlexiBit's PE (same multiplier-bit
+//! budget), minus the flexibility: padding waste is the whole difference.
+
+use super::{pad_format, Accel};
+use crate::arith::Format;
+use crate::energy::EnergyTable;
+use crate::pe::PeConfig;
+use crate::workload::PrecisionPair;
+
+const SUPPORTED_WIDTHS: &[u32] = &[8, 16];
+
+#[derive(Debug, Clone)]
+pub struct TensorCoreAccel {
+    cfg: PeConfig,
+    pe_area: f64,
+}
+
+impl TensorCoreAccel {
+    pub fn new() -> Self {
+        // Paper: FlexiBit needs only 0.5% more area than Tensor Core at
+        // iso-PE, so TC PE area = FlexiBit / 1.005.
+        let fb_area = crate::area::PeArea::of(&PeConfig::default(), 0.18).total();
+        TensorCoreAccel { cfg: PeConfig::default(), pe_area: fb_area / 1.005 }
+    }
+
+    /// The common mode both operands are cast to.
+    fn mode(&self, pair: PrecisionPair) -> (Format, Format) {
+        // Tensor-core MMA runs a single (A-type, B-type) mode; mixed pairs
+        // are only supported within the same width family, so pad both to
+        // the max of the two padded widths.
+        let wa = pad_format(pair.a, SUPPORTED_WIDTHS).bits();
+        let ww = pad_format(pair.w, SUPPORTED_WIDTHS).bits();
+        let common = wa.max(ww);
+        let mk = |orig: Format| match orig {
+            Format::Int(_) => Format::int(common as u8),
+            Format::Fp(_) => Format::default_fp(common),
+        };
+        (mk(pair.a), mk(pair.w))
+    }
+}
+
+impl Default for TensorCoreAccel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Accel for TensorCoreAccel {
+    fn name(&self) -> &'static str {
+        "TensorCore"
+    }
+
+    fn mults_per_pe_cycle(&self, pair: PrecisionPair) -> f64 {
+        let (a, w) = self.mode(pair);
+        // Same resource model as FlexiBit's PE, evaluated at the padded
+        // formats — the fixed units are exactly as wide as the padded data.
+        self.cfg.mults_per_cycle(a, w) as f64
+    }
+
+    fn storage_bits(&self, fmt: Format) -> u32 {
+        pad_format(fmt, SUPPORTED_WIDTHS).bits()
+    }
+
+    fn prim_bits_per_product(&self, pair: PrecisionPair) -> f64 {
+        let (a, w) = self.mode(pair);
+        // The full padded multiplier switches regardless of the true data
+        // width (Figure 1 (c)'s 73% utilization loss).
+        (a.mantissa_bits().max(1) * w.mantissa_bits().max(1)) as f64
+    }
+
+    fn energy_table(&self, mobile: bool) -> EnergyTable {
+        if mobile {
+            EnergyTable::bit_parallel_mobile()
+        } else {
+            EnergyTable::bit_parallel()
+        }
+    }
+
+    fn pe_area_mm2(&self) -> f64 {
+        self.pe_area
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp16_parity_with_flexibit() {
+        // Paper: "minor improvements for FP16-based models".
+        let tc = TensorCoreAccel::new();
+        assert_eq!(tc.mults_per_pe_cycle(PrecisionPair::of_bits(16, 16)), 1.0);
+    }
+
+    #[test]
+    fn fp6_runs_as_fp8() {
+        let tc = TensorCoreAccel::new();
+        let p66 = PrecisionPair::of_bits(6, 6);
+        let p88 = PrecisionPair::of_bits(8, 8);
+        assert_eq!(tc.mults_per_pe_cycle(p66), tc.mults_per_pe_cycle(p88));
+        assert_eq!(tc.storage_bits(Format::default_fp(6)), 8);
+    }
+
+    #[test]
+    fn mixed_w6_a16_collapses_to_fp16() {
+        // The FP6-LLM serving shape W6/A16: TC must run the whole GEMM in
+        // FP16 — the GPTQ no-speedup phenomenon the paper quotes.
+        let tc = TensorCoreAccel::new();
+        let mixed = PrecisionPair::of_bits(6, 16);
+        assert_eq!(tc.mults_per_pe_cycle(mixed), tc.mults_per_pe_cycle(PrecisionPair::of_bits(16, 16)));
+    }
+
+    #[test]
+    fn padded_multiplier_work_exceeds_true_work() {
+        let tc = TensorCoreAccel::new();
+        let fb = super::super::FlexiBitAccel::new();
+        let p66 = PrecisionPair::of_bits(6, 6);
+        assert!(tc.prim_bits_per_product(p66) > fb.prim_bits_per_product(p66));
+    }
+
+    #[test]
+    fn slightly_smaller_than_flexibit() {
+        let tc = TensorCoreAccel::new();
+        let fb = super::super::FlexiBitAccel::new();
+        assert!(tc.pe_area_mm2() < fb.pe_area_mm2());
+        let ratio = fb.pe_area_mm2() / tc.pe_area_mm2();
+        assert!((1.004..=1.006).contains(&ratio));
+    }
+}

@@ -1,0 +1,52 @@
+//! Fig 9 reproduction: performance-model validation.
+//!
+//! The paper validates its cycle-accurate simulator against RTL simulation
+//! on the attention layers of Bert-base and Llama-2-7b (96% / 99%
+//! agreement). Our analog validates the fast analytical model (used for the
+//! campaign) against the detailed cycle-level simulator on the same
+//! workloads, reporting per-layer latencies and aggregate agreement.
+
+use flexibit::baselines::FlexiBitAccel;
+use flexibit::report::{fmt_s, Table};
+use flexibit::sim::cycle::simulate_gemm_cycles;
+use flexibit::sim::{analytical::simulate_gemm, mobile_a};
+use flexibit::workload::{bert_base, llama2_7b, PrecisionPair};
+
+fn main() {
+    let fb = FlexiBitAccel::new();
+    let cfg = mobile_a();
+    let pair = PrecisionPair::of_bits(6, 16);
+
+    let mut table = Table::new(
+        "Fig 9 — performance model validation (attention layers, Mobile-A, W6/A16)",
+        &["model", "gemm", "cycle-level", "analytical", "agreement"],
+    );
+    for model in [bert_base(), llama2_7b()] {
+        let mut cyc_total = 0.0;
+        let mut ana_total = 0.0;
+        for g in model.attention_gemms(pair) {
+            let cyc = simulate_gemm_cycles(&fb, &cfg, &g).seconds * g.count as f64;
+            let ana = simulate_gemm(&fb, &cfg, &g).seconds * g.count as f64;
+            cyc_total += cyc;
+            ana_total += ana;
+            let agree = 100.0 * (1.0 - (cyc - ana).abs() / cyc.max(ana));
+            table.row(vec![
+                model.name.into(),
+                format!("{:?}", g.kind),
+                fmt_s(cyc),
+                fmt_s(ana),
+                format!("{agree:.1}%"),
+            ]);
+        }
+        let agree = 100.0 * (1.0 - (cyc_total - ana_total).abs() / cyc_total.max(ana_total));
+        table.row(vec![
+            model.name.into(),
+            "TOTAL".into(),
+            fmt_s(cyc_total),
+            fmt_s(ana_total),
+            format!("{agree:.1}%"),
+        ]);
+    }
+    table.print();
+    println!("\npaper: simulator-vs-RTL agreement 96% (Bert-base), 99% (Llama-2-7b)");
+}

@@ -1,0 +1,69 @@
+//! Fig 10 reproduction: end-to-end latency of the four models on the
+//! precision-pair axis, FlexiBit vs TensorCore vs Bit-Fusion, for each of
+//! the four accelerator scales (sub-figures a-d), plus the §5.3.1 averages
+//! (FP6: 59% less latency than TensorCore, 31% less than Bit-Fusion).
+
+use flexibit::baselines::{Accel, BitFusionAccel, FlexiBitAccel, TensorCoreAccel};
+use flexibit::report::{fmt_s, geomean, Table};
+use flexibit::sim::{all_configs, simulate_model};
+use flexibit::workload::{all_models, PrecisionPair};
+
+/// The precision-pair axis of Fig 10: `[P(W), P(A)]`.
+pub fn precision_axis() -> Vec<PrecisionPair> {
+    [(16, 16), (8, 16), (8, 8), (6, 16), (6, 6), (5, 5), (4, 16), (4, 8), (4, 4)]
+        .into_iter()
+        .map(|(w, a)| PrecisionPair::of_bits(w, a))
+        .collect()
+}
+
+fn main() {
+    let fb = FlexiBitAccel::new();
+    let tc = TensorCoreAccel::new();
+    let bf = BitFusionAccel::new();
+    let accels: Vec<&dyn Accel> = vec![&fb, &tc, &bf];
+
+    let mut fp6_ratios_tc = Vec::new();
+    let mut fp6_ratios_bf = Vec::new();
+
+    for cfg in all_configs() {
+        let mut table = Table::new(
+            &format!("Fig 10 ({}) — latency, seq 2048", cfg.name),
+            &["model", "[W,A]", "FlexiBit", "TensorCore", "BitFusion", "FB vs TC", "FB vs BF"],
+        );
+        for model in all_models() {
+            for pair in precision_axis() {
+                let t: Vec<f64> = accels
+                    .iter()
+                    .map(|a| simulate_model(*a, &cfg, &model, pair).seconds)
+                    .collect();
+                if pair.w.bits() == 6 {
+                    fp6_ratios_tc.push(t[1] / t[0]);
+                    fp6_ratios_bf.push(t[2] / t[0]);
+                }
+                table.row(vec![
+                    model.name.into(),
+                    pair.label(),
+                    fmt_s(t[0]),
+                    fmt_s(t[1]),
+                    fmt_s(t[2]),
+                    format!("{:.2}x", t[1] / t[0]),
+                    format!("{:.2}x", t[2] / t[0]),
+                ]);
+            }
+        }
+        table.print();
+        println!();
+    }
+
+    let g_tc = geomean(&fp6_ratios_tc);
+    let g_bf = geomean(&fp6_ratios_bf);
+    println!("== §5.3.1 summary (FP6-weight rows, all models x scales) ==");
+    println!(
+        "FlexiBit latency reduction vs TensorCore: {:.0}%  (paper: 59%)",
+        100.0 * (1.0 - 1.0 / g_tc)
+    );
+    println!(
+        "FlexiBit latency reduction vs Bit-Fusion: {:.0}%  (paper: 31%)",
+        100.0 * (1.0 - 1.0 / g_bf)
+    );
+}

@@ -1,0 +1,51 @@
+//! Fig 13 reproduction: Energy-Delay Product of the bit-serial comparators
+//! (Cambricon-P, BitMoD) and FlexiBit, normalized to the TensorCore-like
+//! baseline, on Llama-2-7b / Llama-2-70b at Mobile-B and Cloud-B.
+//! Paper: FlexiBit 2.48x lower EDP than Cambricon-P and 2.9x lower than
+//! BitMoD on Llama-2-70b @ Cloud-B.
+
+use flexibit::baselines::{Accel, BitModAccel, CambriconPAccel, FlexiBitAccel, TensorCoreAccel};
+use flexibit::report::Table;
+use flexibit::sim::{cloud_b, mobile_b, simulate_model};
+use flexibit::workload::{llama2_70b, llama2_7b, PrecisionPair};
+
+fn main() {
+    let fb = FlexiBitAccel::new();
+    let tc = TensorCoreAccel::new();
+    let cp = CambriconPAccel::new();
+    let bm = BitModAccel::new();
+    // The serving precision point of §5.3.3: low-precision weights x FP16
+    // activations (BitMoD's W-A16 design point).
+    let pair = PrecisionPair::of_bits(6, 16);
+
+    let mut table = Table::new(
+        "Fig 13 — EDP normalized to TensorCore (W6/A16)",
+        &["scale", "model", "Cambricon-P", "BitMoD", "FlexiBit"],
+    );
+    let mut fb_vs = Vec::new();
+    for cfg in [mobile_b(), cloud_b()] {
+        for model in [llama2_7b(), llama2_70b()] {
+            let edp_tc = simulate_model(&tc, &cfg, &model, pair).edp();
+            let rows: Vec<f64> = [&cp as &dyn Accel, &bm, &fb]
+                .iter()
+                .map(|a| simulate_model(*a, &cfg, &model, pair).edp() / edp_tc)
+                .collect();
+            if cfg.name == "Cloud-B" && model.name == "Llama-2-70b" {
+                fb_vs = vec![rows[0] / rows[2], rows[1] / rows[2]];
+            }
+            table.row(vec![
+                cfg.name.into(),
+                model.name.into(),
+                format!("{:.3}", rows[0]),
+                format!("{:.3}", rows[1]),
+                format!("{:.3}", rows[2]),
+            ]);
+        }
+    }
+    table.print();
+    if fb_vs.len() == 2 {
+        println!("\nLlama-2-70b @ Cloud-B:");
+        println!("  FlexiBit EDP advantage vs Cambricon-P: {:.2}x (paper: 2.48x)", fb_vs[0]);
+        println!("  FlexiBit EDP advantage vs BitMoD:      {:.2}x (paper: 2.9x)", fb_vs[1]);
+    }
+}

@@ -1,0 +1,105 @@
+//! Fig 14 reproduction: (a) PE area breakdown + throughput-per-area across
+//! reg_width 16..32 (the sweep that selected reg_width = 24), and (b) the
+//! accelerator-level area breakdown at Mobile-A.
+
+use flexibit::area::{AcceleratorArea, PeArea};
+use flexibit::pe::PeConfig;
+use flexibit::report::{geomean, Table};
+use flexibit::workload::PrecisionPair;
+
+fn main() {
+    // ---- (a) reg_width sweep -------------------------------------------
+    let mut sweep = Table::new(
+        "Fig 14 (a) — PE area and throughput/area vs reg_width",
+        &["reg_width", "PE area (um^2)", "flex-core %", "avg mults/cyc", "tput/area (norm)"],
+    );
+    // The headline precision mix of the evaluation (Fig 10's pow-2 points,
+    // the FP6 pair, and the W6/A16 serving point).
+    let pairs: Vec<PrecisionPair> = [(16, 16), (8, 8), (6, 16), (6, 6), (4, 4)]
+        .into_iter()
+        .map(|(w, a)| PrecisionPair::of_bits(w, a))
+        .collect();
+    let mut best = (0usize, 0.0f64);
+    let mut norm = None;
+    for rw in [16usize, 20, 24, 28, 32] {
+        let cfg = PeConfig::with_reg_width(rw);
+        let pe = PeArea::of(&cfg, 0.18);
+        let tput = geomean(
+            &pairs
+                .iter()
+                .map(|p| cfg.mults_per_cycle(p.a, p.w) as f64)
+                .collect::<Vec<_>>(),
+        );
+        let tpa = tput / pe.total();
+        let n = *norm.get_or_insert(tpa);
+        if tpa > best.1 {
+            best = (rw, tpa);
+        }
+        sweep.row(vec![
+            rw.to_string(),
+            format!("{:.0}", pe.total() * 1e6),
+            format!("{:.0}%", pe.flex_core_fraction() * 100.0),
+            format!("{tput:.2}"),
+            format!("{:.3}", tpa / n),
+        ]);
+    }
+    sweep.print();
+    println!("best throughput/area at reg_width = {} (paper: 24)\n", best.0);
+
+    // ---- (a) PE breakdown at the default -------------------------------
+    let pe = PeArea::of(&PeConfig::default(), 0.18);
+    let mut bd = Table::new(
+        "Fig 14 (a) — PE area breakdown (reg_width = 24)",
+        &["component", "um^2", "share"],
+    );
+    let parts: Vec<(&str, f64)> = vec![
+        ("Separator crossbars", pe.separator_xbar),
+        ("Primitive Generator", pe.primgen_xbar),
+        ("FBRT", pe.fbrt),
+        ("FBEA", pe.fbea),
+        ("CST", pe.cst),
+        ("ANU", pe.anu),
+        ("Registers", pe.registers),
+        ("Local buffer", pe.local_buffer),
+        ("Routing/wiring", pe.routing),
+    ];
+    for (name, a) in &parts {
+        bd.row(vec![
+            (*name).into(),
+            format!("{:.0}", a * 1e6),
+            format!("{:.1}%", a / pe.total() * 100.0),
+        ]);
+    }
+    bd.print();
+    println!(
+        "FBRT + Primitive Generator share: {:.0}% (paper: ~50%)\n",
+        pe.flex_core_fraction() * 100.0
+    );
+
+    // ---- (b) accelerator breakdown at Mobile-A --------------------------
+    let acc = AcceleratorArea::of(&pe, 1024, 3.0, 64);
+    let mut ab = Table::new(
+        "Fig 14 (b) — accelerator area breakdown (Mobile-A, reg_width = 24)",
+        &["component", "mm^2", "share"],
+    );
+    for (name, a) in [
+        ("PE array", acc.pe_array),
+        ("Global buffers", acc.global_buffers),
+        ("NoC / routing", acc.noc_routing),
+        ("Bit-Packing Unit", acc.bpu),
+        ("Controller + CSRs", acc.controller),
+    ] {
+        ab.row(vec![
+            name.into(),
+            format!("{a:.3}"),
+            format!("{:.2}%", a / acc.total() * 100.0),
+        ]);
+    }
+    ab.print();
+    println!(
+        "total: {:.2} mm^2 (paper Table 5: 18.62 mm^2); routing share {:.0}% (paper: 12%); BPU {:.2}% (negligible)",
+        acc.total(),
+        acc.noc_routing / acc.total() * 100.0,
+        acc.bpu / acc.total() * 100.0
+    );
+}

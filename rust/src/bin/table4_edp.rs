@@ -1,0 +1,56 @@
+//! Table 4 reproduction: average latency, energy, and EDP of Cambricon-P,
+//! BitMoD, and FlexiBit on Llama-2-7b / Llama-2-70b at Mobile-B and
+//! Cloud-B scales (W6/A16 serving point).
+
+use flexibit::baselines::{Accel, BitModAccel, CambriconPAccel, FlexiBitAccel};
+use flexibit::report::{fmt_j, fmt_s, Table};
+use flexibit::sim::{cloud_b, mobile_b, simulate_model};
+use flexibit::workload::{llama2_70b, llama2_7b, PrecisionPair};
+
+fn main() {
+    let accels: Vec<Box<dyn Accel>> = vec![
+        Box::new(CambriconPAccel::new()),
+        Box::new(BitModAccel::new()),
+        Box::new(FlexiBitAccel::new()),
+    ];
+    let pair = PrecisionPair::of_bits(6, 16);
+
+    let mut table = Table::new(
+        "Table 4 — latency / energy / EDP (W6/A16)",
+        &["scale", "accel", "lat 7b", "lat 70b", "E 7b", "E 70b", "EDP 7b", "EDP 70b"],
+    );
+    for cfg in [mobile_b(), cloud_b()] {
+        for a in &accels {
+            let r7 = simulate_model(a.as_ref(), &cfg, &llama2_7b(), pair);
+            let r70 = simulate_model(a.as_ref(), &cfg, &llama2_70b(), pair);
+            table.row(vec![
+                cfg.name.into(),
+                a.name().into(),
+                fmt_s(r7.seconds),
+                fmt_s(r70.seconds),
+                fmt_j(r7.energy_j),
+                fmt_j(r70.energy_j),
+                format!("{:.2}", r7.edp()),
+                format!("{:.2}", r70.edp()),
+            ]);
+        }
+    }
+    table.print();
+
+    // Headline ratios the paper calls out.
+    let cfg = cloud_b();
+    let fb = simulate_model(accels[2].as_ref(), &cfg, &llama2_70b(), pair);
+    let cp = simulate_model(accels[0].as_ref(), &cfg, &llama2_70b(), pair);
+    let bm = simulate_model(accels[1].as_ref(), &cfg, &llama2_70b(), pair);
+    println!("\nLlama-2-70b @ Cloud-B ratios:");
+    println!(
+        "  Cambricon-P latency vs FlexiBit: {:.0}x (paper: 52x); energy {:.1}x lower (paper table: ~20x)",
+        cp.seconds / fb.seconds,
+        fb.energy_j / cp.energy_j
+    );
+    println!(
+        "  BitMoD latency vs FlexiBit: {:.1}x (paper: 7.9x); energy {:.1}x lower (paper: 2.7x)",
+        bm.seconds / fb.seconds,
+        fb.energy_j / bm.energy_j
+    );
+}

@@ -1,0 +1,223 @@
+//! BPU — Bit Packing and Unpacking Unit (paper §4.1, Figure 3 (a)).
+//!
+//! The host/DRAM side stores data zero-padded to byte-aligned widths (system
+//! software needs address alignment); the accelerator's SRAM holds it
+//! bit-packed. The BPU sits on the off-chip interface and converts between
+//! the two layouts with a 64-to-64 crossbar plus a `start_idx` register;
+//! wider channels replicate the base unit (the paper's 128-bit channel uses
+//! two).
+//!
+//! Crossbar mapping for a 64-bit beat of padded data with element precision
+//! `p` padded to `s` bits: useful bit `i` of the input maps to output
+//! position `j = start_idx + i - ⌊i/s⌋·(s - p)` — Figure 3 (a)'s formula
+//! with the 8-bit storage slot generalized to `s`.
+
+use crate::arith::Format;
+
+/// Storage slot width for a format under the padded (host) layout: the next
+/// power of two ≥ the format width, minimum 4 (nibble-aligned host buffers).
+pub fn padded_slot_bits(fmt: Format) -> usize {
+    (fmt.bits() as usize).next_power_of_two().max(4)
+}
+
+/// One base BPU: converts a stream of padded 64-bit beats into a bit-packed
+/// stream, double-buffered exactly like the hardware (`finish` drains the
+/// partial tail word).
+#[derive(Debug)]
+pub struct BitPacker {
+    precision: usize,
+    slot: usize,
+    /// Packed output words.
+    out: Vec<u64>,
+    /// Partial word being assembled (the double buffer).
+    cur: u64,
+    /// Bits valid in `cur` — the `start_idx` register.
+    start_idx: usize,
+    /// Total elements packed (metadata propagated to the controller).
+    pub elements: usize,
+}
+
+impl BitPacker {
+    pub fn new(fmt: Format) -> Self {
+        let precision = fmt.bits() as usize;
+        BitPacker {
+            precision,
+            slot: padded_slot_bits(fmt),
+            out: Vec::new(),
+            cur: 0,
+            start_idx: 0,
+            elements: 0,
+        }
+    }
+
+    /// Feed one 64-bit beat of padded data (`64 / slot` elements).
+    pub fn push_beat(&mut self, beat: u64) {
+        let elems = 64 / self.slot;
+        for k in 0..elems {
+            let code = (beat >> (k * self.slot)) & ((1u64 << self.precision) - 1);
+            // Crossbar route: j = start_idx + i - floor(i/slot)*(slot-p),
+            // applied per element: element k's bits land at start_idx.
+            self.cur |= code << self.start_idx;
+            let spill = self.start_idx + self.precision;
+            if spill >= 64 {
+                self.out.push(self.cur);
+                self.cur = if spill > 64 { code >> (64 - self.start_idx) } else { 0 };
+            }
+            self.start_idx = spill % 64;
+            self.elements += 1;
+        }
+    }
+
+    /// Drain the partial tail word and return the packed stream.
+    pub fn finish(mut self) -> Vec<u64> {
+        if self.start_idx > 0 {
+            self.out.push(self.cur);
+        }
+        self.out
+    }
+}
+
+/// The inverse path (accelerator → host): unpack a bit-packed stream into
+/// padded beats.
+#[derive(Debug)]
+pub struct BitUnpacker {
+    precision: usize,
+    slot: usize,
+}
+
+impl BitUnpacker {
+    pub fn new(fmt: Format) -> Self {
+        BitUnpacker { precision: fmt.bits() as usize, slot: padded_slot_bits(fmt) }
+    }
+
+    /// Unpack `count` elements from a packed word stream into padded beats.
+    pub fn unpack(&self, words: &[u64], count: usize) -> Vec<u64> {
+        let per_beat = 64 / self.slot;
+        let mut beats = vec![0u64; count.div_ceil(per_beat)];
+        for i in 0..count {
+            let bit = i * self.precision;
+            let (w, off) = (bit / 64, bit % 64);
+            let mut code = words[w] >> off;
+            if off + self.precision > 64 && w + 1 < words.len() {
+                code |= words[w + 1] << (64 - off);
+            }
+            code &= (1u64 << self.precision) - 1;
+            beats[i / per_beat] |= code << ((i % per_beat) * self.slot);
+        }
+        beats
+    }
+}
+
+/// Convenience: pack a host-layout (padded) element stream via the BPU.
+/// Returns the packed words — bit-identical to [`PackedTensor`]'s layout,
+/// which the tests prove. Used by the runtime data-prep path.
+pub fn pack_elements(codes: &[u32], fmt: Format) -> Vec<u64> {
+    let slot = padded_slot_bits(fmt);
+    let per_beat = 64 / slot;
+    let mut bpu = BitPacker::new(fmt);
+    for chunk in codes.chunks(per_beat) {
+        let mut beat = 0u64;
+        for (k, &c) in chunk.iter().enumerate() {
+            beat |= (c as u64) << (k * slot);
+        }
+        bpu.push_beat(beat);
+    }
+    bpu.finish()
+}
+
+/// Traffic accounting used by the performance model (Fig 11's ablation):
+/// bytes moved for `n` elements with and without the BPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Traffic {
+    pub packed_bytes: usize,
+    pub padded_bytes: usize,
+}
+
+pub fn traffic(n: usize, fmt: Format) -> Traffic {
+    Traffic {
+        packed_bytes: (n * fmt.bits() as usize).div_ceil(8),
+        padded_bytes: (n * padded_slot_bits(fmt)).div_ceil(8),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::{FpFormat, PackedTensor};
+    use crate::util::Rng;
+
+    #[test]
+    fn fig3a_fp6_example() {
+        // FP6 in 8-bit slots: first six bits map identity, bits 7-8 masked,
+        // input bits 9..14 land at output 7..12 (the paper's walk-through).
+        let fmt = Format::Fp(FpFormat::FP6_E3M2);
+        let codes = [0b111111u32, 0b101010, 0b010101, 0b110011, 0, 0, 0, 0];
+        let words = pack_elements(&codes, fmt);
+        let direct = PackedTensor::from_codes(&codes, fmt);
+        assert_eq!(words[0], direct.words()[0]);
+    }
+
+    #[test]
+    fn bpu_matches_packed_tensor_randomized() {
+        crate::util::property(11, 40, |rng| {
+            let fmt = match rng.below(5) {
+                0 => Format::Fp(FpFormat::FP6_E3M2),
+                1 => Format::Fp(FpFormat::FP5_E2M2),
+                2 => Format::Fp(FpFormat::FP4_E2M1),
+                3 => Format::fp(3, 3),
+                _ => Format::int(3),
+            };
+            let n = 64 + rng.below(200) as usize;
+            let codes = rng.codes(n, fmt.bits());
+            let words = pack_elements(&codes, fmt);
+            let direct = PackedTensor::from_codes(&codes, fmt);
+            // Compare all complete words that contain real elements.
+            let valid_words = (n * fmt.bits() as usize) / 64;
+            assert_eq!(&words[..valid_words], &direct.words()[..valid_words], "{fmt} n={n}");
+        });
+    }
+
+    #[test]
+    fn unpack_roundtrip() {
+        let mut rng = Rng::new(3);
+        for fmt in
+            [Format::Fp(FpFormat::FP6_E3M2), Format::Fp(FpFormat::FP5_E2M2), Format::int(7)]
+        {
+            let n = 100;
+            let codes = rng.codes(n, fmt.bits());
+            let packed = PackedTensor::from_codes(&codes, fmt);
+            let beats = BitUnpacker::new(fmt).unpack(packed.words(), n);
+            let slot = padded_slot_bits(fmt);
+            let per_beat = 64 / slot;
+            for (i, &c) in codes.iter().enumerate() {
+                let got =
+                    (beats[i / per_beat] >> ((i % per_beat) * slot)) & ((1u64 << fmt.bits()) - 1);
+                assert_eq!(got as u32, c, "{fmt} elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn traffic_savings_fp6() {
+        // FP6: packed moves 25% fewer bytes than byte-padded storage.
+        let t = traffic(1024, Format::Fp(FpFormat::FP6_E3M2));
+        assert_eq!(t.packed_bytes, 768);
+        assert_eq!(t.padded_bytes, 1024);
+    }
+
+    #[test]
+    fn traffic_parity_pow2() {
+        // Power-of-two formats see no packing benefit (Fig 11's flat bars).
+        let t = traffic(1024, Format::Fp(FpFormat::FP8_E4M3));
+        assert_eq!(t.packed_bytes, t.padded_bytes);
+    }
+
+    #[test]
+    fn element_count_metadata() {
+        let fmt = Format::Fp(FpFormat::FP5_E2M2);
+        let mut bpu = BitPacker::new(fmt);
+        bpu.push_beat(0);
+        bpu.push_beat(0);
+        assert_eq!(bpu.elements, 16); // 8 elements per 64-bit beat at slot 8
+    }
+}

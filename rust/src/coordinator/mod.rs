@@ -1,0 +1,15 @@
+//! Serving coordinator (L3 driver).
+//!
+//! FlexiBit's contribution is the accelerator, so the coordinator is the
+//! thin-but-real serving layer a deployment wraps around it: a request
+//! queue, a dynamic batcher that groups compatible requests (same model,
+//! same precision configuration — precision reconfiguration costs cycles,
+//! so the batcher avoids needless switches), a worker that executes batches
+//! on the PJRT runtime, and a metrics sink. The simulator co-runs with
+//! execution to attribute estimated accelerator latency/energy per batch.
+
+mod batcher;
+mod server;
+
+pub use batcher::{Batch, BatchPolicy, Batcher, Request};
+pub use server::{Metrics, Server, ServerConfig};

@@ -1,0 +1,239 @@
+//! The serving loop: worker thread draining the batcher, executing batches
+//! through a pluggable executor (the PJRT runtime in production, a stub in
+//! tests), and co-running the performance simulator for per-batch
+//! accelerator estimates.
+
+use super::batcher::{Batch, BatchPolicy, Batcher, Request};
+use crate::baselines::FlexiBitAccel;
+use crate::sim::{self, AcceleratorConfig};
+use crate::workload::ModelSpec;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Aggregated serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub requests_completed: u64,
+    pub batches_executed: u64,
+    pub total_batch_size: u64,
+    /// Wall-clock execution seconds (host, PJRT).
+    pub host_exec_s: f64,
+    /// Request latency (arrival → completion) sum, for mean latency.
+    pub latency_sum_s: f64,
+    pub latency_max_s: f64,
+    /// Simulated accelerator seconds (FlexiBit model).
+    pub sim_accel_s: f64,
+    /// Simulated accelerator energy (J).
+    pub sim_energy_j: f64,
+    pub reconfigurations: u64,
+}
+
+impl Metrics {
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.requests_completed == 0 {
+            0.0
+        } else {
+            self.latency_sum_s / self.requests_completed as f64
+        }
+    }
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches_executed == 0 {
+            0.0
+        } else {
+            self.total_batch_size as f64 / self.batches_executed as f64
+        }
+    }
+    pub fn throughput_rps(&self, wall_s: f64) -> f64 {
+        if wall_s <= 0.0 {
+            0.0
+        } else {
+            self.requests_completed as f64 / wall_s
+        }
+    }
+}
+
+/// Server configuration.
+pub struct ServerConfig {
+    pub policy: BatchPolicy,
+    /// Accelerator scale the co-simulation estimates against.
+    pub sim_config: AcceleratorConfig,
+    /// Model spec used by the co-simulation (per-token GEMM shapes).
+    pub sim_model: ModelSpec,
+}
+
+/// The executor a worker invokes per batch: returns host execution seconds.
+pub type Executor = dyn Fn(&Batch) -> anyhow::Result<f64> + Send;
+
+/// A single-worker serving loop (the accelerator is one device; batching,
+/// not worker parallelism, is the throughput lever).
+pub struct Server {
+    batcher: Arc<Mutex<Batcher>>,
+    metrics: Arc<Mutex<Metrics>>,
+    stop: Arc<AtomicBool>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the worker with the given executor.
+    pub fn start(cfg: ServerConfig, executor: Box<Executor>) -> Self {
+        let batcher = Arc::new(Mutex::new(Batcher::new(cfg.policy)));
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let b = batcher.clone();
+        let m = metrics.clone();
+        let s = stop.clone();
+        let accel = FlexiBitAccel::new();
+        let worker = std::thread::spawn(move || {
+            while !s.load(Ordering::Relaxed) {
+                let maybe = { b.lock().unwrap().next_batch(Instant::now()) };
+                match maybe {
+                    Some(batch) => {
+                        let t0 = Instant::now();
+                        let host_s = executor(&batch).unwrap_or(0.0);
+                        let done = Instant::now();
+                        // Co-simulation: estimate FlexiBit latency/energy for
+                        // this batch (batch of M=batch_size token rows).
+                        let rep = sim::simulate_model(
+                            &accel,
+                            &cfg.sim_config,
+                            &cfg.sim_model,
+                            batch.pair,
+                        );
+                        let mut met = m.lock().unwrap();
+                        met.batches_executed += 1;
+                        met.total_batch_size += batch.requests.len() as u64;
+                        met.requests_completed += batch.requests.len() as u64;
+                        met.host_exec_s += host_s.max(done.duration_since(t0).as_secs_f64());
+                        for r in &batch.requests {
+                            let lat = done.duration_since(r.arrived).as_secs_f64();
+                            met.latency_sum_s += lat;
+                            met.latency_max_s = met.latency_max_s.max(lat);
+                        }
+                        met.sim_accel_s += rep.seconds;
+                        met.sim_energy_j += rep.energy_j;
+                        met.reconfigurations = {
+                            let bb = b.lock().unwrap();
+                            bb.reconfigurations
+                        };
+                    }
+                    None => std::thread::sleep(Duration::from_micros(200)),
+                }
+            }
+        });
+        Server { batcher, metrics, stop, worker: Some(worker) }
+    }
+
+    pub fn submit(&self, req: Request) {
+        self.batcher.lock().unwrap().push(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.batcher.lock().unwrap().pending()
+    }
+
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Stop the worker and return final metrics.
+    pub fn shutdown(mut self) -> Metrics {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        let m = self.metrics.lock().unwrap().clone();
+        m
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{bert_base, PrecisionPair};
+
+    fn tiny_model() -> ModelSpec {
+        ModelSpec { seq: 8, layers: 1, d_model: 32, d_ff: 64, heads: 2, gated_ffn: false, kv_heads: 2, name: "tiny" }
+    }
+
+    fn mk_req(id: u64, bits: u32) -> Request {
+        Request {
+            id,
+            model: "tiny".into(),
+            pair: PrecisionPair::of_bits(bits, 16),
+            input: vec![1.0; 8],
+            dims: vec![8],
+            arrived: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn serves_requests_through_stub_executor() {
+        let cfg = ServerConfig {
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1), max_streak: 4 },
+            sim_config: crate::sim::mobile_a(),
+            sim_model: tiny_model(),
+        };
+        let server = Server::start(cfg, Box::new(|_b| Ok(0.0)));
+        for i in 0..16 {
+            server.submit(mk_req(i, 6));
+        }
+        // Wait for drain.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while server.pending() > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        let m = server.shutdown();
+        assert_eq!(m.requests_completed, 16);
+        assert!(m.batches_executed >= 4, "batched into >= 4 batches");
+        assert!(m.mean_batch_size() >= 1.0);
+        assert!(m.sim_accel_s > 0.0);
+        assert!(m.sim_energy_j > 0.0);
+    }
+
+    #[test]
+    fn mixed_precision_serving_counts_reconfigs() {
+        let cfg = ServerConfig {
+            policy: BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1), max_streak: 2 },
+            sim_config: crate::sim::mobile_a(),
+            sim_model: tiny_model(),
+        };
+        let server = Server::start(cfg, Box::new(|_b| Ok(0.0)));
+        for i in 0..8 {
+            server.submit(mk_req(i, if i % 2 == 0 { 6 } else { 8 }));
+        }
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while server.pending() > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        let m = server.shutdown();
+        assert_eq!(m.requests_completed, 8);
+        assert!(m.reconfigurations >= 1, "precision switching must be counted");
+    }
+
+    #[test]
+    fn metrics_math() {
+        let mut m = Metrics::default();
+        m.requests_completed = 10;
+        m.latency_sum_s = 5.0;
+        m.batches_executed = 5;
+        m.total_batch_size = 10;
+        assert_eq!(m.mean_latency_s(), 0.5);
+        assert_eq!(m.mean_batch_size(), 2.0);
+        assert_eq!(m.throughput_rps(2.0), 5.0);
+        // Avoid unused import warning for bert_base.
+        let _ = bert_base();
+    }
+}

@@ -1,0 +1,152 @@
+//! Accelergy-style energy model (paper §5.2).
+//!
+//! The paper runs Accelergy [49] over post-PnR synthesis results (NanGate
+//! 15nm) plus published DRAM energy [41]. Accelergy itself is a table-driven
+//! estimator: energy = Σ events × per-event energy. We inline the tables,
+//! anchored to (a) the paper's published absolute power numbers (Table 5)
+//! and (b) the published DRAM per-bit energies from O'Connor et al. [41]
+//! (≈ 3.9 pJ/bit HBM2-class, higher for mobile DRAM).
+//!
+//! All energies in picojoules.
+
+/// Per-event energy table for one accelerator implementation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyTable {
+    /// Energy per 1-bit multiply primitive (AND + reduction-tree node work).
+    pub mac_per_prim_bit_pj: f64,
+    /// Fixed per-product FP overhead (exponent add, normalization, sign).
+    pub fp_product_overhead_pj: f64,
+    /// Global buffer (SRAM) access, per bit.
+    pub sram_per_bit_pj: f64,
+    /// Local (per-PE) buffer access, per bit.
+    pub local_per_bit_pj: f64,
+    /// NoC transfer, per bit.
+    pub noc_per_bit_pj: f64,
+    /// Off-chip DRAM/HBM access, per bit.
+    pub dram_per_bit_pj: f64,
+    /// Static/leakage + clock power per PE, in mW (adds energy ∝ time).
+    pub static_per_pe_mw: f64,
+}
+
+impl EnergyTable {
+    /// FlexiBit / bit-parallel baseline table, NanGate-15nm-anchored so that
+    /// Mobile-A (1K PE) busy power lands near Table 5's 873 mW.
+    pub fn bit_parallel() -> Self {
+        EnergyTable {
+            mac_per_prim_bit_pj: 0.007,
+            fp_product_overhead_pj: 0.028,
+            sram_per_bit_pj: 0.018,
+            local_per_bit_pj: 0.004,
+            noc_per_bit_pj: 0.022,
+            dram_per_bit_pj: 3.9, // HBM-class [41]
+            static_per_pe_mw: 0.025,
+        }
+    }
+
+    /// Mobile configurations pay LPDDR-class DRAM energy.
+    pub fn bit_parallel_mobile() -> Self {
+        EnergyTable { dram_per_bit_pj: 6.0, ..Self::bit_parallel() }
+    }
+
+    /// Bit-serial PEs (Cambricon-P-like): far smaller switching energy per
+    /// cycle — the paper reports 7.1× lower power than FlexiBit.
+    pub fn bit_serial() -> Self {
+        EnergyTable {
+            mac_per_prim_bit_pj: 0.004,
+            fp_product_overhead_pj: 0.008,
+            static_per_pe_mw: 0.004,
+            ..Self::bit_parallel()
+        }
+    }
+}
+
+/// Event counts accumulated by the performance model for one run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyCounts {
+    /// 1-bit multiply primitives executed.
+    pub prim_bits: f64,
+    /// Finished products (for the FP overhead term).
+    pub products: f64,
+    /// Bits read+written at the global buffers.
+    pub sram_bits: f64,
+    /// Bits read+written at PE-local buffers.
+    pub local_bits: f64,
+    /// Bits moved over the NoC.
+    pub noc_bits: f64,
+    /// Bits moved off-chip.
+    pub dram_bits: f64,
+    /// Busy time in seconds (for static power).
+    pub seconds: f64,
+    /// PEs in the configuration.
+    pub num_pes: f64,
+}
+
+impl EnergyCounts {
+    /// Total energy in joules.
+    pub fn total_j(&self, t: &EnergyTable) -> f64 {
+        let dynamic_pj = self.prim_bits * t.mac_per_prim_bit_pj
+            + self.products * t.fp_product_overhead_pj
+            + self.sram_bits * t.sram_per_bit_pj
+            + self.local_bits * t.local_per_bit_pj
+            + self.noc_bits * t.noc_per_bit_pj
+            + self.dram_bits * t.dram_per_bit_pj;
+        let static_j = self.num_pes * t.static_per_pe_mw * 1e-3 * self.seconds;
+        dynamic_pj * 1e-12 + static_j
+    }
+
+    /// Average power in watts over the run.
+    pub fn avg_power_w(&self, t: &EnergyTable) -> f64 {
+        if self.seconds <= 0.0 {
+            0.0
+        } else {
+            self.total_j(t) / self.seconds
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_counts_zero_energy() {
+        let c = EnergyCounts::default();
+        assert_eq!(c.total_j(&EnergyTable::bit_parallel()), 0.0);
+    }
+
+    #[test]
+    fn dram_dominates_data_movement() {
+        // Per bit, DRAM must cost far more than SRAM which costs more than
+        // local buffers — the memory-hierarchy invariant every energy model
+        // must respect.
+        for t in [EnergyTable::bit_parallel(), EnergyTable::bit_serial()] {
+            assert!(t.dram_per_bit_pj > 10.0 * t.sram_per_bit_pj);
+            assert!(t.sram_per_bit_pj > t.local_per_bit_pj);
+        }
+    }
+
+    #[test]
+    fn bit_serial_lower_compute_energy() {
+        let bp = EnergyTable::bit_parallel();
+        let bs = EnergyTable::bit_serial();
+        assert!(bs.mac_per_prim_bit_pj < bp.mac_per_prim_bit_pj);
+        assert!(bs.static_per_pe_mw < bp.static_per_pe_mw);
+    }
+
+    #[test]
+    fn energy_scales_linearly() {
+        let t = EnergyTable::bit_parallel();
+        let c1 = EnergyCounts { prim_bits: 1e9, products: 1e8, ..Default::default() };
+        let c2 = EnergyCounts { prim_bits: 2e9, products: 2e8, ..Default::default() };
+        let (e1, e2) = (c1.total_j(&t), c2.total_j(&t));
+        assert!((e2 / e1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn static_power_accrues_with_time() {
+        let t = EnergyTable::bit_parallel();
+        let c = EnergyCounts { seconds: 1.0, num_pes: 1024.0, ..Default::default() };
+        // 1024 PEs * 0.025 mW * 1 s ≈ 0.0256 J.
+        assert!((c.total_j(&t) - 0.0256).abs() < 0.003);
+    }
+}

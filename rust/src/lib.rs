@@ -1,0 +1,34 @@
+//! # FlexiBit — fully flexible precision bit-parallel accelerator (reproduction)
+//!
+//! This crate reproduces the system from *"FlexiBit: Fully Flexible Precision
+//! Bit-parallel Accelerator Architecture for Arbitrary Mixed Precision AI"*
+//! (Tahmasebi et al., 2024) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the accelerator itself: a bit-exact functional model
+//!   of the FlexiBit processing element ([`pe`]), a cycle-level + analytical
+//!   performance simulator ([`sim`]), the four baseline accelerators
+//!   ([`baselines`]), energy/area models ([`energy`], [`area`]), the LLM
+//!   workload extraction ([`workload`]), the static control-signal compiler
+//!   ([`compiler`]), the bit-packing unit ([`bitpack`]), and a serving
+//!   coordinator ([`coordinator`]) that co-runs PJRT execution ([`runtime`])
+//!   with the simulator.
+//! * **L2/L1 (python/)** — a JAX transformer block whose GEMMs run through a
+//!   Pallas arbitrary-ExMy dequantize-GEMM kernel, AOT-lowered to HLO text
+//!   artifacts loaded by [`runtime`].
+//!
+//! See `DESIGN.md` for the paper-to-module inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod util;
+pub mod arith;
+pub mod pe;
+pub mod bitpack;
+pub mod compiler;
+pub mod workload;
+pub mod sim;
+pub mod baselines;
+pub mod energy;
+pub mod area;
+pub mod coordinator;
+pub mod runtime;
+pub mod report;

@@ -1,0 +1,150 @@
+//! FlexiBit CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//! * `simulate` — run the performance model for one (model, accel, scale,
+//!   precision) point.
+//! * `verify`   — run the bit-exact PE datapath on random operands against
+//!   the golden model (quick self-check).
+//! * `report`   — print the index of paper table/figure reproduction
+//!   binaries.
+
+use flexibit::arith::Format;
+use flexibit::baselines::{
+    Accel, BitFusionAccel, BitModAccel, CambriconPAccel, FlexiBitAccel, TensorCoreAccel,
+};
+use flexibit::pe::{Pe, PeConfig};
+use flexibit::report::{fmt_j, fmt_s};
+use flexibit::sim::{all_configs, simulate_model};
+use flexibit::util::Rng;
+use flexibit::workload::{all_models, PrecisionPair};
+
+fn usage() -> ! {
+    eprintln!(
+        "flexibit <command>\n\
+         \n\
+         commands:\n\
+           simulate [--model NAME] [--accel NAME] [--config NAME] [--w BITS] [--a BITS]\n\
+           verify [--iters N]\n\
+           report\n\
+         \n\
+         models: Bert-base Llama-2-7b Llama-2-70b GPT-3\n\
+         accels: flexibit tensorcore bitfusion cambricon-p bitmod\n\
+         configs: Mobile-A Mobile-B Cloud-A Cloud-B"
+    );
+    std::process::exit(2);
+}
+
+fn arg_value(args: &[String], key: &str) -> Option<String> {
+    args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("simulate") => cmd_simulate(&args[1..]),
+        Some("verify") => cmd_verify(&args[1..]),
+        Some("report") => cmd_report(),
+        _ => usage(),
+    }
+}
+
+fn cmd_simulate(args: &[String]) {
+    let model_name = arg_value(args, "--model").unwrap_or_else(|| "Llama-2-7b".into());
+    let accel_name = arg_value(args, "--accel").unwrap_or_else(|| "flexibit".into());
+    let cfg_name = arg_value(args, "--config").unwrap_or_else(|| "Cloud-B".into());
+    let w: u32 = arg_value(args, "--w").and_then(|s| s.parse().ok()).unwrap_or(6);
+    let a: u32 = arg_value(args, "--a").and_then(|s| s.parse().ok()).unwrap_or(16);
+
+    let model = all_models()
+        .into_iter()
+        .find(|m| m.name.eq_ignore_ascii_case(&model_name))
+        .unwrap_or_else(|| {
+            eprintln!("unknown model {model_name}");
+            usage()
+        });
+    let cfg = all_configs()
+        .into_iter()
+        .find(|c| c.name.eq_ignore_ascii_case(&cfg_name))
+        .unwrap_or_else(|| {
+            eprintln!("unknown config {cfg_name}");
+            usage()
+        });
+    let accel: Box<dyn Accel> = match accel_name.to_lowercase().as_str() {
+        "flexibit" => Box::new(FlexiBitAccel::new()),
+        "tensorcore" => Box::new(TensorCoreAccel::new()),
+        "bitfusion" => Box::new(BitFusionAccel::new()),
+        "cambricon-p" => Box::new(CambriconPAccel::new()),
+        "bitmod" => Box::new(BitModAccel::new()),
+        other => {
+            eprintln!("unknown accel {other}");
+            usage()
+        }
+    };
+    let pair = PrecisionPair::of_bits(w, a);
+    let rep = simulate_model(accel.as_ref(), &cfg, &model, pair);
+    println!(
+        "{} on {} @ {} {}:\n  latency {}  energy {}  EDP {:.3} J.s",
+        accel.name(),
+        model.name,
+        cfg.name,
+        pair.label(),
+        fmt_s(rep.seconds),
+        fmt_j(rep.energy_j),
+        rep.edp()
+    );
+    for g in &rep.per_gemm {
+        println!(
+            "  {:?}: {} (compute={} dram={} noc={})",
+            g.dataflow,
+            fmt_s(g.seconds),
+            fmt_s(g.compute_s),
+            fmt_s(g.dram_s),
+            fmt_s(g.noc_s)
+        );
+    }
+}
+
+fn cmd_verify(args: &[String]) {
+    let iters: usize =
+        arg_value(args, "--iters").and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let mut pe = Pe::new(PeConfig::default());
+    let mut rng = Rng::new(0xF1E81B);
+    let mut checked = 0u64;
+    for i in 0..iters {
+        let a_fmt = Format::fp(1 + (rng.below(5) as u8), rng.below(8) as u8);
+        let w_fmt = Format::fp(1 + (rng.below(5) as u8), rng.below(8) as u8);
+        let n_a = pe.cfg.operands_per_window(a_fmt).max(1);
+        let n_w = pe.cfg.operands_per_window(w_fmt).max(1);
+        let acts = rng.codes(n_a, a_fmt.bits());
+        let wgts = rng.codes(n_w, w_fmt.bits());
+        let win = pe.multiply_window(&acts, a_fmt, &wgts, w_fmt);
+        for (oid, p) in win.products.iter().enumerate() {
+            let (wi, ai) = (oid / win.n_acts, oid % win.n_acts);
+            let golden = flexibit::arith::mul_exact(acts[ai], a_fmt, wgts[wi], w_fmt);
+            assert_eq!(p.value(), golden.value(), "iter {i} {a_fmt}x{w_fmt}");
+            checked += 1;
+        }
+    }
+    println!(
+        "verify OK: {checked} bit-exact products across {iters} random format windows; \
+         {} primitives through FBRT, {} neighbor-link hops",
+        pe.prims_processed, pe.link_hops
+    );
+}
+
+fn cmd_report() {
+    println!("paper reproduction binaries (cargo run --release --bin <name>):");
+    for (bin, what) in [
+        ("fig09_validation", "Fig 9  — performance-model validation"),
+        ("fig10_latency", "Fig 10 — latency across models/scales/precisions"),
+        ("fig11_bitpacking", "Fig 11 — BitPacking ablation"),
+        ("fig12_perf_per_area", "Fig 12 — performance per area"),
+        ("fig13_edp", "Fig 13 — EDP vs bit-serial accelerators"),
+        ("fig14_area", "Fig 14 — area breakdown + reg_width sweep"),
+        ("table4_edp", "Table 4 — latency/energy/EDP"),
+        ("table5_area_power", "Table 5 — area and power"),
+        ("ablation_dataflow", "Ablation — WS vs OS dataflow choice"),
+    ] {
+        println!("  {bin:<22} {what}");
+    }
+}

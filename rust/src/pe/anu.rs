@@ -1,0 +1,121 @@
+//! ANU — Accumulation and Normalization Unit (paper §3.8).
+//!
+//! Adds the CST-aligned partial products in a wide accumulator (re-using the
+//! FBEA's segmentable-adder structure at full width), then normalizes: finds
+//! the leading one, adjusts the exponent, and truncates/rounds the mantissa
+//! to the target output precision, re-inserting the implicit 1 convention.
+
+use crate::arith::{encode, Format};
+
+/// Wide fixed-point accumulator state: `value * 2^scale_log2`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Accumulator {
+    /// Signed fixed-point sum (two's complement in hardware; i128 here).
+    pub value: i128,
+    /// log2 of the LSB weight of `value`.
+    pub scale_log2: i32,
+}
+
+impl Accumulator {
+    pub fn zero(scale_log2: i32) -> Self {
+        Accumulator { value: 0, scale_log2 }
+    }
+
+    /// Add one aligned magnitude with sign at the accumulator's own scale.
+    pub fn add_aligned(&mut self, magnitude: u128, sign: u8) {
+        let m = magnitude as i128;
+        self.value += if sign == 1 { -m } else { m };
+    }
+
+    /// Add a value expressed at a different scale (the ANU re-aligns by
+    /// shifting; exact when `scale >= self.scale_log2`).
+    pub fn add_scaled(&mut self, magnitude: u128, sign: u8, scale_log2: i32) {
+        let shift = scale_log2 - self.scale_log2;
+        assert!(
+            (0..=100).contains(&shift),
+            "accumulator scale misalignment: shift {shift}"
+        );
+        self.add_aligned(magnitude << shift, sign);
+    }
+
+    /// The exact real value held.
+    pub fn to_f64(&self) -> f64 {
+        self.value as f64 * 2f64.powi(self.scale_log2)
+    }
+
+    /// Normalize and quantize into the target output format (the output
+    /// write-back step: leading-one detect, exponent adjust, round).
+    pub fn to_format(&self, fmt: Format) -> u32 {
+        encode(self.to_f64(), fmt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::{decode, FpFormat};
+
+    #[test]
+    fn signed_accumulation() {
+        let mut acc = Accumulator::zero(-4);
+        acc.add_aligned(0b10000, 0); // +1.0 at scale 2^-4
+        acc.add_aligned(0b01000, 1); // -0.5
+        assert_eq!(acc.to_f64(), 0.5);
+    }
+
+    #[test]
+    fn scale_realignment() {
+        let mut acc = Accumulator::zero(-6);
+        acc.add_scaled(3, 0, -2); // 3 * 2^-2 = 0.75
+        acc.add_scaled(1, 0, -6); // + 2^-6
+        assert_eq!(acc.to_f64(), 0.75 + 0.015625);
+    }
+
+    #[test]
+    fn negative_totals() {
+        let mut acc = Accumulator::zero(0);
+        acc.add_aligned(5, 1);
+        acc.add_aligned(2, 0);
+        assert_eq!(acc.to_f64(), -3.0);
+    }
+
+    #[test]
+    fn normalize_to_fp6() {
+        let fmt = Format::Fp(FpFormat::FP6_E3M2);
+        let mut acc = Accumulator::zero(-8);
+        acc.add_aligned((2.5 * 256.0) as u128, 0);
+        let code = acc.to_format(fmt);
+        assert_eq!(decode(code, fmt), 2.5);
+    }
+
+    #[test]
+    fn normalize_saturates() {
+        let fmt = Format::Fp(FpFormat::FP6_E3M2);
+        let mut acc = Accumulator::zero(0);
+        acc.add_aligned(1000, 0);
+        assert_eq!(decode(acc.to_format(fmt), fmt), 28.0);
+        let mut neg = Accumulator::zero(0);
+        neg.add_aligned(1000, 1);
+        assert_eq!(decode(neg.to_format(fmt), fmt), -28.0);
+    }
+
+    #[test]
+    fn normalize_to_wide_accumulation_format() {
+        // FP20-style accumulation target (paper §2.2: FP6 x FP16 -> FP20
+        // e5m14-ish). Use e5m10 here: exactness for small sums.
+        let fmt = Format::Fp(FpFormat::FP16);
+        let mut acc = Accumulator::zero(-10);
+        for _ in 0..3 {
+            acc.add_scaled(1, 0, -10);
+        }
+        let code = acc.to_format(fmt);
+        assert_eq!(decode(code, fmt), 3.0 * 2f64.powi(-10));
+    }
+
+    #[test]
+    #[should_panic(expected = "scale misalignment")]
+    fn misaligned_scale_asserts() {
+        let mut acc = Accumulator::zero(0);
+        acc.add_scaled(1, 0, -1);
+    }
+}

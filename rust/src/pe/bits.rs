@@ -1,0 +1,95 @@
+//! Small bit-vector utilities shared by the PE datapath models.
+//!
+//! Registers in the PE are narrow (`reg_width` = 24, `L_prim` = 144), so a
+//! simple `Vec<u8>`-of-bits representation keeps the models readable and
+//! bit-faithful. LSB-first everywhere: index 0 is the least significant /
+//! first-arriving bit, matching the packed stream order.
+
+/// A fixed-width register of single bits (each element is 0 or 1), LSB-first.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bits(pub Vec<u8>);
+
+impl Bits {
+    pub fn zeros(width: usize) -> Self {
+        Bits(vec![0; width])
+    }
+
+    /// Build from the low `width` bits of a `u128`.
+    pub fn from_u128(value: u128, width: usize) -> Self {
+        Bits((0..width).map(|i| ((value >> i) & 1) as u8).collect())
+    }
+
+    /// Interpret the whole register as an unsigned integer. Set bits above
+    /// position 127 cannot be represented and panic; zero high bits are fine
+    /// (registers wider than 128 are only summarized when mostly empty).
+    pub fn to_u128(&self) -> u128 {
+        self.0.iter().enumerate().fold(0u128, |acc, (i, &b)| {
+            if b == 0 {
+                acc
+            } else {
+                assert!(i < 128, "set bit {i} beyond u128 range");
+                acc | (1u128 << i)
+            }
+        })
+    }
+
+    pub fn width(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn get(&self, i: usize) -> u8 {
+        self.0[i]
+    }
+
+    pub fn set(&mut self, i: usize, v: u8) {
+        debug_assert!(v <= 1);
+        self.0[i] = v;
+    }
+
+    /// Slice `[lo, lo+len)` as an unsigned integer.
+    pub fn field(&self, lo: usize, len: usize) -> u32 {
+        debug_assert!(len <= 32 && lo + len <= self.0.len());
+        (0..len).fold(0u32, |acc, i| acc | ((self.0[lo + i] as u32) << i))
+    }
+
+    /// Write an unsigned integer into slice `[lo, lo+len)`.
+    pub fn set_field(&mut self, lo: usize, len: usize, value: u32) {
+        for i in 0..len {
+            self.0[lo + i] = ((value >> i) & 1) as u8;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u128_roundtrip() {
+        let b = Bits::from_u128(0b1011_0010, 8);
+        assert_eq!(b.to_u128(), 0b1011_0010);
+        assert_eq!(b.get(1), 1);
+        assert_eq!(b.get(2), 0);
+    }
+
+    #[test]
+    fn fields() {
+        let mut b = Bits::zeros(24);
+        b.set_field(3, 6, 0b101101);
+        assert_eq!(b.field(3, 6), 0b101101);
+        assert_eq!(b.field(0, 3), 0);
+        assert_eq!(b.field(9, 6), 0);
+        b.set_field(20, 4, 0xF);
+        assert_eq!(b.to_u128() >> 20, 0xF);
+    }
+
+    #[test]
+    fn wide_register() {
+        // L_prim-wide register (144 bits) round-trips through fields.
+        let mut b = Bits::zeros(144);
+        b.set(143, 1);
+        b.set(0, 1);
+        assert_eq!(b.field(140, 4), 0b1000);
+        assert_eq!(b.field(0, 1), 1);
+    }
+}

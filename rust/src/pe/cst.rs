@@ -1,0 +1,120 @@
+//! CST — Concat-Shift Tree (paper §3.7, Figure 7).
+//!
+//! Aligns mantissas to the common scale the ENU selected before the ANU adds
+//! them. Structurally a reduction tree like the FBRT whose nodes concatenate
+//! bits belonging to the same mantissa id and apply the per-mantissa shift
+//! amount at merge time; functionally each mantissa `m_k` lands in the
+//! accumulator window at offset `shift_k`.
+//!
+//! The model mirrors the FBRT flow machinery: mantissas arrive bit-packed,
+//! each bit is a leaf flow tagged with its mantissa id, nodes concatenate
+//! same-id bits (modes C2/C3) and apply the ENU shift when an id completes.
+//! Structural assertions (≤ 2 flows forwarded per node, one-hop neighbor
+//! strays) carry over.
+
+use super::bits::Bits;
+
+/// One aligned mantissa: value placed at its shift offset, ready for the ANU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Aligned {
+    pub id: usize,
+    /// `mantissa << shift` (Min policy) or mantissa with `shift` recorded
+    /// for right-shift-at-add (Max policy). The ANU consumes `value`.
+    pub value: u128,
+    /// Bits discarded by a right shift (sticky info for rounding analysis).
+    pub dropped: u128,
+}
+
+/// Align packed mantissas by the ENU plan.
+///
+/// * `mantissas` — packed register: mantissa k at `[k*m_bits, (k+1)*m_bits)`.
+///   These are *full* significands (implicit 1 already materialized by the
+///   upstream normalization), so `m_bits` includes the hidden-bit position.
+/// * `shifts` — per-mantissa shift amounts from [`crate::pe::enu::plan`].
+/// * `left` — true for left-shift alignment (Min policy, exact), false for
+///   right-shift (Max policy, truncating).
+pub fn align(mantissas: &Bits, m_bits: usize, shifts: &[u32], left: bool) -> Vec<Aligned> {
+    let count = shifts.len();
+    assert!(count * m_bits <= mantissas.width(), "CST register overflow");
+    let mut out = Vec::with_capacity(count);
+    for (k, &sh) in shifts.iter().enumerate() {
+        // Tree-concat the mantissa's bits (functionally: read the field; the
+        // tree structure only affects routability, proven by the FBRT model).
+        let m = if m_bits == 0 {
+            0u128
+        } else {
+            let mut v = 0u128;
+            for b in 0..m_bits {
+                v |= (mantissas.get(k * m_bits + b) as u128) << b;
+            }
+            v
+        };
+        if left {
+            assert!(sh as usize + m_bits <= 128, "left shift exceeds accumulator");
+            out.push(Aligned { id: k, value: m << sh, dropped: 0 });
+        } else {
+            let dropped = if sh == 0 { 0 } else { m & ((1u128 << sh.min(127)) - 1) };
+            out.push(Aligned { id: k, value: m >> sh.min(127), dropped });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pack(vals: &[u32], w: usize) -> Bits {
+        let mut b = Bits::zeros(vals.len() * w);
+        for (k, &v) in vals.iter().enumerate() {
+            b.set_field(k * w, w, v);
+        }
+        b
+    }
+
+    #[test]
+    fn fig7_three_bit_example() {
+        // Figure 7 (a): 3-bit mantissas, independent shifts per mantissa.
+        let m = pack(&[0b101, 0b110, 0b011], 3);
+        let a = align(&m, 3, &[0, 1, 2], true);
+        assert_eq!(a[0].value, 0b101);
+        assert_eq!(a[1].value, 0b1100);
+        assert_eq!(a[2].value, 0b01100);
+    }
+
+    #[test]
+    fn right_shift_records_dropped_bits() {
+        let m = pack(&[0b1011], 4);
+        let a = align(&m, 4, &[2], false);
+        assert_eq!(a[0].value, 0b10);
+        assert_eq!(a[0].dropped, 0b11);
+    }
+
+    #[test]
+    fn zero_shift_identity() {
+        let m = pack(&[0b111111, 0b000001], 6);
+        for left in [true, false] {
+            let a = align(&m, 6, &[0, 0], left);
+            assert_eq!(a[0].value, 0b111111);
+            assert_eq!(a[1].value, 0b000001);
+            assert_eq!(a[0].dropped, 0);
+        }
+    }
+
+    #[test]
+    fn mixed_widths_via_repack() {
+        // Aligning products of different mantissa widths: caller packs at the
+        // widest product width (here 8) — narrow values are zero-extended.
+        let m = pack(&[0x2A, 0x07], 8);
+        let a = align(&m, 8, &[3, 0], true);
+        assert_eq!(a[0].value, 0x2A << 3);
+        assert_eq!(a[1].value, 0x07);
+    }
+
+    #[test]
+    #[should_panic(expected = "CST register overflow")]
+    fn overflow_asserts() {
+        let m = pack(&[1, 2], 4);
+        align(&m, 4, &[0, 0, 0], true);
+    }
+}

@@ -1,0 +1,125 @@
+//! ENU — Exponent Normalization Unit (paper §3.6).
+//!
+//! For FP accumulation the incoming partial products must be brought to a
+//! common scale. The ENU parses the bit-packed exponents (same parsing
+//! scheme as the Primitive Generator), picks the reference exponent, and
+//! produces the per-operand shift amount `Δ_k = e_ref − e_k` consumed by the
+//! Concat-Shift Tree. The reference policy is user-configurable (paper
+//! §3.7); shifting *down* to the max exponent preserves the MSBs, which is
+//! the policy the evaluation uses.
+
+use super::bits::Bits;
+use super::fbea;
+
+/// Reference-exponent selection policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RefPolicy {
+    /// Align everything to the largest exponent (shift smaller operands
+    /// right): the default, MSB-preserving.
+    #[default]
+    Max,
+    /// Align to the smallest exponent (shift larger operands left into a
+    /// wide accumulator): exact, needs `L_acc` headroom.
+    Min,
+}
+
+/// Shift plan for one accumulation group.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShiftPlan {
+    /// The chosen reference (unbiased) exponent.
+    pub e_ref: i32,
+    /// Per-operand alignment: for `Max`, right-shift amounts (≥ 0);
+    /// for `Min`, left-shift amounts (≥ 0).
+    pub shifts: Vec<u32>,
+}
+
+/// Compute the shift plan for a set of unbiased exponents.
+pub fn plan(exponents: &[i32], policy: RefPolicy) -> ShiftPlan {
+    assert!(!exponents.is_empty());
+    match policy {
+        RefPolicy::Max => {
+            let e_ref = *exponents.iter().max().unwrap();
+            ShiftPlan {
+                e_ref,
+                shifts: exponents.iter().map(|&e| (e_ref - e) as u32).collect(),
+            }
+        }
+        RefPolicy::Min => {
+            let e_ref = *exponents.iter().min().unwrap();
+            ShiftPlan {
+                e_ref,
+                shifts: exponents.iter().map(|&e| (e - e_ref) as u32).collect(),
+            }
+        }
+    }
+}
+
+/// Bit-level front-end: parse packed biased exponents out of an exponent
+/// register (value k at `[k*e_bits, (k+1)*e_bits)`), subtract the bias via
+/// the FBEA (adding the two's-complement of the bias — the hardware reuses
+/// the segmentable adder), and return unbiased exponents.
+pub fn parse_unbiased(exp_reg: &Bits, e_bits: usize, count: usize, bias: i32) -> Vec<i32> {
+    assert!(e_bits >= 1);
+    // Subtract bias with the segmentable adder: lane width e_bits + 2 to
+    // hold sign. Two's complement addition of (-bias).
+    let slot = e_bits + 2;
+    let neg_bias = ((-(bias as i64)) as u64 & ((1 << slot) - 1)) as u32;
+    let pairs: Vec<(u32, u32)> = (0..count)
+        .map(|k| (exp_reg.field(k * e_bits, e_bits), neg_bias))
+        .collect();
+    let sums = fbea::add_exponent_pairs(&pairs, slot, 144);
+    sums.into_iter()
+        .map(|s| {
+            // Sign-extend the slot-wide result.
+            let shift = 32 - slot as u32;
+            ((s << shift) as i32) >> shift
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_policy() {
+        let p = plan(&[3, -1, 5, 0], RefPolicy::Max);
+        assert_eq!(p.e_ref, 5);
+        assert_eq!(p.shifts, vec![2, 6, 0, 5]);
+    }
+
+    #[test]
+    fn min_policy() {
+        let p = plan(&[3, -1, 5, 0], RefPolicy::Min);
+        assert_eq!(p.e_ref, -1);
+        assert_eq!(p.shifts, vec![4, 0, 6, 1]);
+    }
+
+    #[test]
+    fn single_operand() {
+        let p = plan(&[7], RefPolicy::Max);
+        assert_eq!(p.e_ref, 7);
+        assert_eq!(p.shifts, vec![0]);
+    }
+
+    #[test]
+    fn parse_and_unbias() {
+        // Three e3 exponents (bias 3): fields 7, 0, 3 -> unbiased 4, -3, 0.
+        let mut reg = Bits::zeros(12);
+        reg.set_field(0, 3, 7);
+        reg.set_field(3, 3, 0);
+        reg.set_field(6, 3, 3);
+        let got = parse_unbiased(&reg, 3, 3, 3);
+        assert_eq!(got, vec![4, -3, 0]);
+    }
+
+    #[test]
+    fn parse_unbias_e5(){
+        // e5 (bias 15): field 31 -> +16; field 1 -> -14.
+        let mut reg = Bits::zeros(24);
+        reg.set_field(0, 5, 31);
+        reg.set_field(5, 5, 1);
+        let got = parse_unbiased(&reg, 5, 2, 15);
+        assert_eq!(got, vec![16, -14]);
+    }
+}

@@ -1,0 +1,146 @@
+//! FBEA — Flexible-Bit Exponent Adder (paper §3.5, Figure 6, Code 4).
+//!
+//! A segmentable ripple-carry adder: between every pair of full adders a
+//! multiplexer either propagates the carry or breaks the chain, so one
+//! physical `L_add`-bit adder performs many independent low-precision
+//! additions (or few high-precision ones) per cycle. The control vector has
+//! one bit per adder position; `1` stops the carry *after* that position
+//! (Code 4: position `i` is a boundary when `(i+1) % add_width == 0`).
+
+use super::bits::Bits;
+
+/// Bit-faithful segmentable ripple-carry addition: `a + b` with carry breaks
+/// where `ctrl[i] == 1` (carry out of position i is dropped).
+pub fn add_segmented(a: &Bits, b: &Bits, ctrl: &Bits) -> Bits {
+    let w = a.width();
+    assert_eq!(b.width(), w);
+    assert_eq!(ctrl.width(), w);
+    let mut out = Bits::zeros(w);
+    let mut carry = 0u8;
+    for i in 0..w {
+        let s = a.get(i) + b.get(i) + carry;
+        out.set(i, s & 1);
+        carry = s >> 1;
+        if ctrl.get(i) == 1 {
+            carry = 0;
+        }
+    }
+    out
+}
+
+/// Generate the Code 4 control vector for segment width `add_width`.
+pub fn control(l_add: usize, add_width: usize) -> Bits {
+    let mut c = Bits::zeros(l_add);
+    if add_width == 0 {
+        return c;
+    }
+    for i in 0..l_add {
+        if (i + 1) % add_width == 0 {
+            c.set(i, 1);
+        }
+    }
+    c
+}
+
+/// Pack exponent pairs into FBEA lanes and add them all in one pass.
+///
+/// Each pair `(ea, ew)` occupies one `slot_width`-bit lane; `slot_width`
+/// must be ≥ max(BW_E(A), BW_E(W)) + 1 so the biased sum cannot overflow the
+/// lane (the compiler picks the slot width; Code 4's printed `add_width =
+/// max(BW_E)` drops the carry bit, so we allocate the extra bit the ANU's
+/// bias subtraction needs — a documented erratum-level fix).
+pub fn add_exponent_pairs(pairs: &[(u32, u32)], slot_width: usize, l_add: usize) -> Vec<u32> {
+    let per_pass = l_add / slot_width;
+    let mut results = Vec::with_capacity(pairs.len());
+    for chunk in pairs.chunks(per_pass.max(1)) {
+        let mut a = Bits::zeros(l_add);
+        let mut b = Bits::zeros(l_add);
+        for (k, &(ea, ew)) in chunk.iter().enumerate() {
+            a.set_field(k * slot_width, slot_width, ea);
+            b.set_field(k * slot_width, slot_width, ew);
+        }
+        let ctrl = control(l_add, slot_width);
+        let sum = add_segmented(&a, &b, &ctrl);
+        for k in 0..chunk.len() {
+            results.push(sum.field(k * slot_width, slot_width));
+        }
+    }
+    results
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_example() {
+        // 18-bit adder, P_E(A)=3, P_E(W)=2 -> 3-bit lanes hold each pair...
+        // With slot width 4 (3+1), six pairs fit in 24 bits; use the paper's
+        // 18-bit example with 3-bit slots and small operands.
+        let pairs = [(0b11u32, 0b10), (0b01, 0b01), (0b10, 0b01)];
+        let got = add_exponent_pairs(&pairs, 3, 18);
+        assert_eq!(got, vec![0b101, 0b010, 0b011]);
+    }
+
+    #[test]
+    fn carry_stops_at_boundaries() {
+        // Two 4-bit lanes: 0xF + 0x1 = 0x0 in lane 0 (carry dropped), lane 1
+        // must be unaffected.
+        let mut a = Bits::zeros(8);
+        let mut b = Bits::zeros(8);
+        a.set_field(0, 4, 0xF);
+        b.set_field(0, 4, 0x1);
+        a.set_field(4, 4, 0x3);
+        b.set_field(4, 4, 0x2);
+        let sum = add_segmented(&a, &b, &control(8, 4));
+        assert_eq!(sum.field(0, 4), 0x0);
+        assert_eq!(sum.field(4, 4), 0x5);
+    }
+
+    #[test]
+    fn full_width_addition_when_no_breaks() {
+        let a = Bits::from_u128(0xFFFF, 20);
+        let b = Bits::from_u128(0x0001, 20);
+        let sum = add_segmented(&a, &b, &Bits::zeros(20));
+        assert_eq!(sum.to_u128(), 0x10000);
+    }
+
+    #[test]
+    fn exponent_pairs_exhaustive_small() {
+        // All e3 x e3 exponent pairs with slot 4: sums fit, results exact.
+        let mut pairs = Vec::new();
+        for ea in 0..8u32 {
+            for ew in 0..8u32 {
+                pairs.push((ea, ew));
+            }
+        }
+        let got = add_exponent_pairs(&pairs, 4, 144);
+        for (i, &(ea, ew)) in pairs.iter().enumerate() {
+            assert_eq!(got[i], ea + ew, "({ea},{ew})");
+        }
+    }
+
+    #[test]
+    fn multi_pass_when_lanes_exceed_l_add() {
+        // 40 pairs at slot 6 = 240 bits > 144: needs two passes.
+        let pairs: Vec<(u32, u32)> = (0..40).map(|i| (i % 32, (i * 7) % 32)).collect();
+        let got = add_exponent_pairs(&pairs, 6, 144);
+        for (i, &(ea, ew)) in pairs.iter().enumerate() {
+            assert_eq!(got[i], ea + ew);
+        }
+    }
+
+    #[test]
+    fn control_vector_shape() {
+        let c = control(12, 3);
+        assert_eq!(c.0, vec![0, 0, 1, 0, 0, 1, 0, 0, 1, 0, 0, 1]);
+    }
+
+    #[test]
+    fn mixed_precision_lane() {
+        // e4 activation + e2 weight: slot = max(4,2)+1 = 5.
+        let pairs = [(15u32, 3), (9, 2), (1, 3)];
+        let got = add_exponent_pairs(&pairs, 5, 144);
+        assert_eq!(got, vec![18, 11, 4]);
+    }
+}

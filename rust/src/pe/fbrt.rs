@@ -1,0 +1,436 @@
+//! FBRT — Flexible-Bit Reduction Tree (paper §3.4, Figures 3 (d) and 4).
+//!
+//! A fat-tree over the primitive register with *additional links* between
+//! adjacent same-level nodes that do not share a parent (inherited from
+//! MAERI's ART), extended to bit granularity. Tree node switches support the
+//! six modes of Figure 4 — Concat-LR (C2), Concat-All (C3), Add-LR (A2),
+//! Add-All (A3), Concat-Add (CA), and Distribute (D) — which progressively
+//! concatenate primitive bits of the same partial-product row (same segment
+//! id) and shift-add rows of the same multiplication (same output id),
+//! producing multiple complete mantissa products simultaneously.
+//!
+//! ## Model
+//!
+//! Each value travelling up the tree is a [`Flow`]: the bits of one output id
+//! merged so far, tracked as the *arithmetic value* `Σ P(j,i)·2^(i+j)` over
+//! the covered primitives. Concatenation of bits within a row and shift-add
+//! across rows are both exact additions in this value space, so the flow
+//! value is invariant to the merge order — what the tree structure decides is
+//! only *where* merges can physically happen. The model enforces the
+//! hardware's structural constraints and records the switch mode every node
+//! uses (the compiler's Code 3 output):
+//!
+//! * a node forwards at most one merged flow to its parent (`OU`) and at most
+//!   one stray flow across the additional link (`ON`, mode D);
+//! * only adjacent nodes exchange strays (one hop per level);
+//! * a completed output (all `Ma·Mw` primitives covered) exits the tree at
+//!   the node where it completes, matching Fig 3 (d)'s `Out[k]` taps.
+//!
+//! Violations panic — a panic means the requested (format, layout) pair is
+//! not routable on the paper's switch set, which the tests prove never
+//! happens for the layouts the Primitive Generator emits.
+
+use super::bits::Bits;
+use super::primgen::PrimShape;
+
+/// Switch modes of Figure 4 (plus Idle for nodes with no live inputs and
+/// Bypass for single-input pass-through, which the paper's C2 degenerates
+/// to when one child is empty).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(usize)]
+pub enum SwitchMode {
+    Idle = 0,
+    Bypass = 1,
+    ConcatLr = 2,
+    ConcatAll = 3,
+    AddLr = 4,
+    AddAll = 5,
+    ConcatAdd = 6,
+    Distribute = 7,
+}
+
+/// One value flowing up the tree: a partially-merged output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Flow {
+    /// Output (multiplication) id this flow belongs to.
+    oid: usize,
+    /// Arithmetic value of the covered primitives: Σ P(j,i)·2^(i+j).
+    value: u128,
+    /// Number of primitive bits covered so far.
+    covered: usize,
+    /// Segment (row) id span covered: [row_lo, row_hi]. Rows merge bottom-up;
+    /// a single-row flow is a pure concat candidate (C2/C3), cross-row merges
+    /// are shift-adds (A2/A3/CA).
+    row_lo: usize,
+    row_hi: usize,
+}
+
+/// Per-run statistics: how many times each switch mode fired, additional-link
+/// traversals, and the level at which each output exited.
+#[derive(Debug, Clone, Default)]
+pub struct FbrtStats {
+    pub mode_counts: std::collections::HashMap<SwitchMode, usize>,
+    pub link_hops: usize,
+    pub exit_levels: Vec<(usize, usize)>, // (oid, level)
+}
+
+/// Hot-loop accumulator for mode counts: fixed array indexed by mode
+/// discriminant (the per-node HashMap entry() calls dominated the FBRT
+/// profile — see EXPERIMENTS.md §Perf).
+#[derive(Default)]
+struct ModeCounts([usize; 8]);
+
+impl ModeCounts {
+    #[inline]
+    fn bump(&mut self, m: SwitchMode, by: usize) {
+        self.0[m as usize] += by;
+    }
+    fn into_map(self) -> std::collections::HashMap<SwitchMode, usize> {
+        const MODES: [SwitchMode; 8] = [
+            SwitchMode::Idle,
+            SwitchMode::Bypass,
+            SwitchMode::ConcatLr,
+            SwitchMode::ConcatAll,
+            SwitchMode::AddLr,
+            SwitchMode::AddAll,
+            SwitchMode::ConcatAdd,
+            SwitchMode::Distribute,
+        ];
+        MODES
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| self.0[*i] > 0)
+            .map(|(i, &m)| (m, self.0[i]))
+            .collect()
+    }
+}
+
+/// Result of one FBRT pass: the explicit-mantissa product of every output id
+/// (no implicit-1 terms — see [`crate::pe::implicit_one`]), plus stats.
+#[derive(Debug, Clone)]
+pub struct FbrtOutput {
+    /// `products[oid]` = Σ_{i,j} P(j,i)·2^(i+j) = mant_a * mant_w.
+    pub products: Vec<u128>,
+    pub stats: FbrtStats,
+}
+
+/// Run the FBRT over a primitive register laid out per `shape`.
+///
+/// `width` is the physical leaf width (L_prim, e.g. 144); primitives beyond
+/// `shape.total_prims()` are dead leaves.
+pub fn reduce(prim: &Bits, shape: &PrimShape, width: usize) -> FbrtOutput {
+    assert!(prim.width() >= shape.total_prims());
+    assert!(width >= shape.total_prims(), "primitives exceed tree width");
+    let mut stats = FbrtStats::default();
+    let mut modes = ModeCounts::default();
+    let n_out = shape.num_mults();
+    let mut products = vec![0u128; n_out];
+    let pp = shape.prims_per_mult();
+
+    if pp == 0 || n_out == 0 {
+        return FbrtOutput { products, stats };
+    }
+
+    // Level 0: one flow per live leaf.
+    // A leaf's flow is a 1-bit row fragment at weight-row i, activation col j.
+    let mut level: Vec<Vec<Flow>> = (0..width)
+        .map(|pos| {
+            if pos >= shape.total_prims() {
+                return vec![];
+            }
+            let (oid, i, j) = shape.leaf_coords(pos);
+            vec![Flow {
+                oid,
+                value: (prim.get(pos) as u128) << (i + j),
+                covered: 1,
+                row_lo: i,
+                row_hi: i,
+            }]
+        })
+        .collect();
+
+    let mut lvl_idx = 0usize;
+    while level.len() > 1 {
+        lvl_idx += 1;
+        // Odd level widths (L_prim = 144 -> 9 nodes at level 4) promote the
+        // unpaired last position through a pass-through node.
+        if level.len() % 2 == 1 {
+            level.push(vec![]);
+        }
+        let n_nodes = level.len() / 2;
+        // Gather children flows per node, reusing the left child's
+        // allocation (Flow is Copy; no element clones).
+        let mut node_in: Vec<Vec<Flow>> = (0..n_nodes)
+            .map(|k| {
+                let mut v = std::mem::take(&mut level[2 * k]);
+                v.extend_from_slice(&level[2 * k + 1]);
+                v
+            })
+            .collect();
+
+        // Distribute pass: a node holding flows of more than one oid keeps
+        // the oid that *completes or continues* in its own subtree span and
+        // sends strays one hop across the additional link toward the
+        // neighbor that owns the rest of that oid. With the Primitive
+        // Generator's contiguous layout, oid ranges are contiguous, so a
+        // stray's home is always the adjacent node.
+        let mut moved: Vec<(usize, Flow)> = Vec::new(); // (dest node, flow)
+        for k in 0..n_nodes {
+            if node_in[k].len() <= 1 {
+                continue;
+            }
+            // Fast path: all flows share one oid (the overwhelmingly common
+            // case away from output boundaries) — no stray routing needed.
+            let first_oid = node_in[k][0].oid;
+            if node_in[k].iter().all(|f| f.oid == first_oid) {
+                continue;
+            }
+            let oids: std::collections::BTreeSet<usize> =
+                node_in[k].iter().map(|f| f.oid).collect();
+            // Strays: all but the oid with the most covered bits here; ties
+            // keep the lower oid (its leaves are to the left, completing
+            // sooner). Send each stray toward its home side.
+            for &oid in &oids {
+                let covered: usize = node_in[k]
+                    .iter()
+                    .filter(|f| f.oid == oid)
+                    .map(|f| f.covered)
+                    .sum();
+                if covered == pp {
+                    continue; // completes here; not a stray
+                }
+                // Determine home direction: the oid's remaining primitives
+                // live left of this subtree iff its first leaf is left of
+                // this node's span.
+                let span = width >> lvl_idx.min(63);
+                let node_first_leaf = k * span.max(1) * 0 + k * (width / n_nodes);
+                let oid_first_leaf = oid * pp;
+                let dest = if oid_first_leaf < node_first_leaf {
+                    k.checked_sub(1)
+                } else if oid_first_leaf + pp > node_first_leaf + width / n_nodes {
+                    if k + 1 < n_nodes {
+                        Some(k + 1)
+                    } else {
+                        None
+                    }
+                } else {
+                    None
+                };
+                if let Some(d) = dest {
+                    // Merge the oid's fragments into one stray flow first.
+                    let (strays, keep): (Vec<Flow>, Vec<Flow>) =
+                        node_in[k].iter().partition(|f| f.oid == oid);
+                    node_in[k] = keep;
+                    let merged = merge_flows(&strays);
+                    moved.push((d, merged));
+                    stats.link_hops += 1;
+                    modes.bump(SwitchMode::Distribute, 1);
+                }
+            }
+        }
+        for (d, f) in moved {
+            node_in[d].push(f);
+        }
+
+        // Merge pass: per node, merge flows sharing an oid; classify the
+        // switch mode; emit completed outputs; check structural limits.
+        let mut next: Vec<Vec<Flow>> = Vec::with_capacity(n_nodes);
+        for (_k, flows) in node_in.into_iter().enumerate() {
+            if flows.is_empty() {
+                modes.bump(SwitchMode::Idle, 1);
+                next.push(vec![]);
+                continue;
+            }
+            // Group by oid preserving order.
+            let mut groups: Vec<(usize, Vec<Flow>)> = Vec::new();
+            for f in flows {
+                match groups.iter_mut().find(|(o, _)| *o == f.oid) {
+                    Some((_, v)) => v.push(f),
+                    None => groups.push((f.oid, vec![f])),
+                }
+            }
+            let mut out_flows: Vec<Flow> = Vec::new();
+            for (oid, group) in groups {
+                let n_in = group.len();
+                let single_row =
+                    group.iter().all(|f| f.row_lo == f.row_hi && f.row_lo == group[0].row_lo);
+                let merged = merge_flows(&group);
+                // Mode classification per Figure 4: concat when all inputs
+                // belong to the same segment (row), add/concat-add otherwise.
+                let mode = match (n_in, single_row) {
+                    (1, _) => SwitchMode::Bypass,
+                    (2, true) => SwitchMode::ConcatLr,
+                    (2, false) => SwitchMode::AddLr,
+                    (3, true) => SwitchMode::ConcatAll,
+                    (3, false) => {
+                        // CA when two of the three share a row (concat then
+                        // add), A3 when all rows differ.
+                        let rows: std::collections::BTreeSet<usize> =
+                            group.iter().map(|f| f.row_lo).collect();
+                        if rows.len() < 3 {
+                            SwitchMode::ConcatAdd
+                        } else {
+                            SwitchMode::AddAll
+                        }
+                    }
+                    (n, _) => {
+                        // More than 3 inputs converge when an output spans
+                        // several subtrees and strays arrive from both
+                        // neighbor links while children also carry fragments.
+                        // The switch handles this as a cascade of two-input
+                        // ops within the node (the paper's node micro-
+                        // architecture chains concat and add stages); count
+                        // the extra ops.
+                        modes.bump(SwitchMode::AddLr, n - 2);
+                        SwitchMode::AddLr
+                    }
+                };
+                modes.bump(mode, 1);
+                if merged.covered == pp {
+                    products[oid] = merged.value;
+                    stats.exit_levels.push((oid, lvl_idx));
+                } else {
+                    out_flows.push(merged);
+                }
+            }
+            assert!(
+                out_flows.len() <= 2,
+                "node must forward <= 2 flows (OU + ON), got {}",
+                out_flows.len()
+            );
+            next.push(out_flows);
+        }
+        level = next;
+    }
+    // Root: any remaining flow must be complete.
+    for f in level.into_iter().flatten() {
+        assert_eq!(f.covered, pp, "output {} incomplete at root", f.oid);
+        products[f.oid] = f.value;
+        stats.exit_levels.push((f.oid, lvl_idx + 1));
+    }
+    stats.mode_counts = modes.into_map();
+    FbrtOutput { products, stats }
+}
+
+fn merge_flows(flows: &[Flow]) -> Flow {
+    let mut it = flows.iter();
+    let first = *it.next().expect("merge of empty flow set");
+    it.fold(first, |acc, f| {
+        debug_assert_eq!(acc.oid, f.oid);
+        Flow {
+            oid: acc.oid,
+            value: acc.value + f.value,
+            covered: acc.covered + f.covered,
+            row_lo: acc.row_lo.min(f.row_lo),
+            row_hi: acc.row_hi.max(f.row_hi),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::primgen;
+
+    fn bits_of(vals: &[u32], width: usize) -> Bits {
+        let mut b = Bits::zeros(vals.len() * width);
+        for (k, &v) in vals.iter().enumerate() {
+            b.set_field(k * width, width, v);
+        }
+        b
+    }
+
+    /// End-to-end primgen + FBRT: products must equal mant_a * mant_w.
+    fn check(acts: &[u32], wgts: &[u32], ma: usize, mw: usize) -> FbrtStats {
+        let a = bits_of(acts, ma.max(1));
+        let w = bits_of(wgts, mw.max(1));
+        let (prim, shape) =
+            primgen::generate(&a, &w, ma, mw, acts.len(), wgts.len(), 144);
+        let out = reduce(&prim, &shape, 144);
+        for wgt_id in 0..shape.num_wgts {
+            for act_id in 0..shape.num_acts {
+                let oid = wgt_id * shape.num_acts + act_id;
+                let expect = (acts[act_id] as u128) * (wgts[wgt_id] as u128);
+                assert_eq!(
+                    out.products[oid], expect,
+                    "oid {oid}: {} * {}",
+                    acts[act_id], wgts[wgt_id]
+                );
+            }
+        }
+        out.stats
+    }
+
+    #[test]
+    fn fig3d_fp6_fp5() {
+        // The paper's walk-through: FP6 (m=2) activations x FP5 (m=2)
+        // weights, 4 of each -> 16 simultaneous 2x2-bit products.
+        let stats = check(&[0b11, 0b01, 0b10, 0b00], &[0b10, 0b11, 0b01, 0b11], 2, 2);
+        // All 16 outputs must exit the tree.
+        assert_eq!(stats.exit_levels.len(), 16);
+    }
+
+    #[test]
+    fn asymmetric_3x2() {
+        // Figure 3 (c) shape: 3-bit acts x 2-bit weights.
+        check(&[0b101, 0b111, 0b010, 0b001], &[0b11, 0b10], 3, 2);
+    }
+
+    #[test]
+    fn fp16_mantissas() {
+        // 10x10-bit: one product fills 100 of 144 leaves.
+        check(&[0b1011011011], &[0b1111111111], 10, 10);
+        check(&[0x3FF], &[0x3FF], 10, 10);
+    }
+
+    #[test]
+    fn int8_magnitudes() {
+        check(&[0x7F, 0x2A], &[0x7F, 0x01], 7, 7);
+    }
+
+    #[test]
+    fn single_bit_mantissas() {
+        // 1x1 primitives: every leaf is a complete product (exit level 1).
+        let stats = check(&[1, 0, 1, 1, 0, 1], &[1, 1, 0, 1, 1, 0], 1, 1);
+        assert_eq!(stats.exit_levels.len(), 36);
+    }
+
+    #[test]
+    fn mixed_4x1() {
+        // W-INT: 4-bit act mantissa x 1-bit weight mantissa.
+        check(&[0b1011, 0b0110, 0b1111], &[1, 0, 1, 1], 4, 1);
+    }
+
+    #[test]
+    fn non_power_of_two_5x3() {
+        check(&[0b10110, 0b01101], &[0b101, 0b011, 0b110], 5, 3);
+    }
+
+    #[test]
+    fn zero_operands() {
+        let stats = check(&[0, 0], &[0, 0], 3, 3);
+        // Modes still fire even on zero data (the tree is statically
+        // configured by format, not by values).
+        assert!(stats.mode_counts.values().sum::<usize>() > 0);
+    }
+
+    #[test]
+    fn concat_modes_fire_for_multi_bit_rows() {
+        let stats = check(&[0b111, 0b101, 0b110, 0b001], &[0b11, 0b10, 0b01], 3, 2);
+        let concats = stats.mode_counts.get(&SwitchMode::ConcatLr).copied().unwrap_or(0)
+            + stats.mode_counts.get(&SwitchMode::ConcatAll).copied().unwrap_or(0);
+        let adds = stats.mode_counts.get(&SwitchMode::AddLr).copied().unwrap_or(0)
+            + stats.mode_counts.get(&SwitchMode::AddAll).copied().unwrap_or(0)
+            + stats.mode_counts.get(&SwitchMode::ConcatAdd).copied().unwrap_or(0);
+        assert!(concats > 0, "row assembly must use concat modes: {stats:?}");
+        assert!(adds > 0, "row reduction must use add modes: {stats:?}");
+    }
+
+    #[test]
+    fn additional_links_used_when_products_straddle_subtrees() {
+        // 3x2 = 6 prims/mult: outputs straddle 8-leaf subtree boundaries,
+        // so Distribute hops must occur.
+        let stats = check(&[0b101, 0b111, 0b010, 0b001], &[0b11, 0b10], 3, 2);
+        assert!(stats.link_hops > 0, "expected additional-link traffic");
+    }
+}

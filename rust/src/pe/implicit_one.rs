@@ -1,0 +1,106 @@
+//! Implicit-1 fixup (paper §3.4 "Optimization for the implicit 1", Figure 5).
+//!
+//! FBRT reduces only the explicit mantissa bits: `P_FBRT = a · w` where `a`,
+//! `w` are the explicit fields. The full normal-number product is
+//!
+//! ```text
+//! (2^Ma + a)(2^Mw + w) = a·w  +  (w << Ma)  +  (a << Mw)  +  2^(Ma+Mw)
+//! ```
+//!
+//! Generating primitives for the implicit 1s would double the tree width
+//! (e.g. 2×3 → (2+1)×(3+1) primitives), so the PE instead adds the three
+//! correction terms after the tree: the original weight shifted by `Ma`
+//! (step 1 of Figure 5 — the left-most bits of each segment are original
+//! weight bits), the original activation shifted by `Mw` (step 2), and the
+//! always-1 top bit. Subnormal operands (`exp field == 0`) have no implicit
+//! 1, so their corresponding terms are skipped.
+
+/// Apply the implicit-1 correction to an FBRT explicit product.
+///
+/// * `p_fbrt` — `a · w` from the tree.
+/// * `a`, `w` — the explicit mantissa fields.
+/// * `ma`, `mw` — explicit mantissa widths.
+/// * `a_normal`, `w_normal` — whether each operand has an implicit 1
+///   (false for subnormals and for INT magnitudes, which have no hidden bit).
+pub fn fixup(
+    p_fbrt: u128,
+    a: u128,
+    w: u128,
+    ma: usize,
+    mw: usize,
+    a_normal: bool,
+    w_normal: bool,
+) -> u128 {
+    let mut p = p_fbrt;
+    if a_normal {
+        // step 2: activation column contributed by weight's value... no:
+        // a's implicit 1 multiplies w's explicit bits: w << Ma.
+        p += w << ma;
+    }
+    if w_normal {
+        p += a << mw;
+    }
+    if a_normal && w_normal {
+        p += 1u128 << (ma + mw);
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_shape_2x3() {
+        // Ma = 2, Mw = 3 example of Figure 5: all operand combinations.
+        for a in 0..4u128 {
+            for w in 0..8u128 {
+                let p_fbrt = a * w;
+                let full = fixup(p_fbrt, a, w, 2, 3, true, true);
+                assert_eq!(full, (a + 4) * (w + 8), "a={a} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn subnormal_activation() {
+        // a subnormal: product is (0.a)(1.w) -> a*w + (a << Mw).
+        let (a, w, ma, mw) = (0b01u128, 0b101u128, 2, 3);
+        let p = fixup(a * w, a, w, ma, mw, false, true);
+        assert_eq!(p, a * (w + 8));
+    }
+
+    #[test]
+    fn subnormal_weight() {
+        let (a, w, ma, mw) = (0b11u128, 0b001u128, 2, 3);
+        let p = fixup(a * w, a, w, ma, mw, true, false);
+        assert_eq!(p, (a + 4) * w);
+    }
+
+    #[test]
+    fn both_subnormal() {
+        let (a, w) = (0b10u128, 0b110u128);
+        assert_eq!(fixup(a * w, a, w, 2, 3, false, false), a * w);
+    }
+
+    #[test]
+    fn int_magnitudes_no_hidden_bit() {
+        // INT path: magnitudes multiply directly, fixup is a no-op.
+        let (a, w) = (93u128, 41u128);
+        assert_eq!(fixup(a * w, a, w, 7, 7, false, false), a * w);
+    }
+
+    #[test]
+    fn zero_width_mantissas() {
+        // e3m0 x e3m0: product of two implicit 1s is exactly 1.
+        assert_eq!(fixup(0, 0, 0, 0, 0, true, true), 1);
+    }
+
+    #[test]
+    fn wide_mantissas() {
+        // FP16 x FP16 (10x10): full 22-bit products.
+        let (a, w) = (0x3FFu128, 0x2ABu128);
+        let full = fixup(a * w, a, w, 10, 10, true, true);
+        assert_eq!(full, (a + 1024) * (w + 1024));
+    }
+}

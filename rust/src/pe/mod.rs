@@ -1,0 +1,37 @@
+//! Bit-exact functional model of the FlexiBit Processing Element (paper §3).
+//!
+//! Every module of Figure 2's datapath is modeled at bit granularity and
+//! verified against the independent golden model in [`crate::arith`] — the
+//! software analog of the paper's RTL verification:
+//!
+//! * [`separator`] — sign/exponent/mantissa separator (Code 1): crossbar
+//!   routing of bit-packed, arbitrarily-formatted operands into the sign,
+//!   exponent, and mantissa registers.
+//! * [`primgen`] — Primitive Generator (Code 2): the cross-product AND array
+//!   producing `P(j, i) = A_j & W_i` in FBRT leaf order.
+//! * [`fbrt`] — the Flexible-Bit Reduction Tree (§3.4): a fat-tree with
+//!   neighbor links whose switches concat / shift-add / distribute primitive
+//!   segments into multiple simultaneous mantissa products.
+//! * [`implicit_one`] — the implicit-1 fixup of Figure 5.
+//! * [`fbea`] — the segmentable carry-chain Flexible-Bit Exponent Adder
+//!   (§3.5, Code 4).
+//! * [`enu`] — Exponent Normalization Unit (§3.6).
+//! * [`cst`] — Concat-Shift Tree mantissa aligner (§3.7).
+//! * [`anu`] — Accumulation & Normalization Unit (§3.8).
+//! * [`pe`] — the assembled PE: bit-packed operand registers in, FP/INT
+//!   products and accumulated dot products out, plus the per-cycle
+//!   throughput model the simulator consumes.
+
+pub mod bits;
+pub mod separator;
+pub mod primgen;
+pub mod fbrt;
+pub mod implicit_one;
+pub mod fbea;
+pub mod enu;
+pub mod cst;
+pub mod anu;
+#[allow(clippy::module_inception)]
+pub mod pe;
+
+pub use pe::{Pe, PeConfig, PeProduct};

@@ -1,0 +1,560 @@
+//! The assembled FlexiBit PE (paper §3.1, Figure 2).
+//!
+//! Datapath per cycle: packed weight/activation register windows →
+//! Separator → Primitive Generator → FBRT → implicit-1 fixup (mantissa
+//! path), Separator → FBEA (exponent path), sign XOR (sign path) →
+//! [`PeProduct`]s; accumulation path: ENU → CST → ANU.
+//!
+//! The same structure also gives the simulator its per-cycle throughput
+//! model: [`PeConfig::mults_per_cycle`] is the number of simultaneous
+//! multiplications the configured register/tree widths sustain for a given
+//! (activation, weight) format pair — the quantity that makes FlexiBit's
+//! zero-underutilization claim concrete.
+
+use super::anu::Accumulator;
+use super::bits::Bits;
+use super::enu::{self, RefPolicy};
+use super::fbea;
+use super::fbrt;
+use super::implicit_one;
+use super::primgen;
+use super::separator;
+use crate::arith::{ExactProduct, Format};
+
+/// Design-time PE parameters (Table 1 defaults).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PeConfig {
+    /// Weight/activation register bit width (`reg_width`).
+    pub reg_width: usize,
+    /// Mantissa register bit width (`R_M`).
+    pub r_m: usize,
+    /// Exponent register bit width (`R_E`).
+    pub r_e: usize,
+    /// Sign register bit width (`R_S`).
+    pub r_s: usize,
+    /// Primitive generator / FBRT leaf width (`L_prim`).
+    pub l_prim: usize,
+    /// FBEA width (`L_add`).
+    pub l_add: usize,
+    /// Accumulator width (`L_acc`).
+    pub l_acc: usize,
+    /// Concat-shift tree width (`L_cst`).
+    pub l_cst: usize,
+}
+
+impl Default for PeConfig {
+    fn default() -> Self {
+        // Table 1 values (reg_width 24 chosen by the Fig 14 sweep).
+        PeConfig {
+            reg_width: 24,
+            r_m: 12,
+            r_e: 12,
+            r_s: 12,
+            l_prim: 144,
+            l_add: 144,
+            l_acc: 144,
+            l_cst: 144,
+        }
+    }
+}
+
+impl PeConfig {
+    /// A scaled configuration for the Fig 14 `reg_width` sweep: dependent
+    /// register/tree widths scale with the paper's 24-bit ratios, with a
+    /// floor of 10 mantissa-register bits so every configuration still
+    /// processes FP16 (e5m10) operands.
+    pub fn with_reg_width(reg_width: usize) -> Self {
+        let r = reg_width.max(4);
+        let half = (r / 2).max(10);
+        PeConfig {
+            reg_width: r,
+            r_m: half,
+            r_e: half,
+            r_s: half,
+            l_prim: half * half,
+            l_add: half * half,
+            l_acc: half * half,
+            l_cst: half * half,
+        }
+    }
+
+    /// How many operands of format `f` one register window supplies.
+    pub fn operands_per_window(&self, f: Format) -> usize {
+        self.reg_width / f.bits() as usize
+    }
+
+    /// Simultaneous multiplications per cycle for an (activation, weight)
+    /// format pair — the minimum over the supplying/consuming resources:
+    ///
+    /// 1. register supply: `⌊reg/P(A)⌋·⌊reg/P(W)⌋` operand pairs;
+    /// 2. mantissa register capacity;
+    /// 3. primitive-generator / FBRT leaf width;
+    /// 4. FBEA lane capacity (FP only);
+    /// 5. sign register capacity.
+    pub fn mults_per_cycle(&self, a: Format, w: Format) -> usize {
+        let (ma, mw) = (a.mantissa_bits() as usize, w.mantissa_bits() as usize);
+        // Per-side operand counts, bounded exactly like the Separator: the
+        // register window supply and each field register's capacity.
+        let side = |f: Format, m: usize| {
+            let mut n = self.operands_per_window(f);
+            if m > 0 {
+                n = n.min(self.r_m / m);
+            }
+            let e = f.exponent_bits() as usize;
+            if e > 0 {
+                n = n.min(self.r_e / e);
+            }
+            n.min(self.r_s)
+        };
+        let supply = side(a, ma) * side(w, mw);
+        let prim_cap = self.l_prim / (ma * mw).max(1);
+        let mut cap = supply.min(prim_cap);
+        if a.is_fp() || w.is_fp() {
+            let slot = (a.exponent_bits().max(w.exponent_bits()) as usize) + 1;
+            cap = cap.min(self.l_add / slot);
+        }
+        cap.max(if supply == 0 { 0 } else { 1 })
+    }
+
+    /// Peak per-cycle throughput in 1-bit primitive MACs — used by the area
+    /// model's throughput-per-area sweep (Fig 14).
+    pub fn peak_primitives(&self) -> usize {
+        self.l_prim
+    }
+}
+
+/// One finished multiplication from the PE pipeline. Identical semantics to
+/// the golden [`ExactProduct`] — the equality is what the verification suite
+/// establishes.
+pub type PeProduct = ExactProduct;
+
+/// Products of one register-window pass, with the effective window shape
+/// (after register/tree capacity clamping): product of weight `wi` and
+/// activation `ai` is at index `wi * n_acts + ai`.
+#[derive(Debug, Clone)]
+pub struct WindowProducts {
+    pub n_acts: usize,
+    pub n_wgts: usize,
+    pub products: Vec<PeProduct>,
+}
+
+/// The bit-exact functional PE.
+#[derive(Debug, Clone, Default)]
+pub struct Pe {
+    pub cfg: PeConfig,
+    /// Cumulative primitive count processed (profiling).
+    pub prims_processed: u64,
+    /// Cumulative FBRT link hops (profiling).
+    pub link_hops: u64,
+}
+
+impl Pe {
+    pub fn new(cfg: PeConfig) -> Self {
+        Pe { cfg, prims_processed: 0, link_hops: 0 }
+    }
+
+    /// Multiply all pairs of one activation window × one weight window
+    /// through the full bit-level datapath. `acts`/`wgts` are operand codes;
+    /// at most `operands_per_window` of each are consumed per call (the
+    /// caller streams the remainder, as the dataflow does across cycles).
+    ///
+    /// Returns products in oid order: `oid = wgt_id * n_acts + act_id`.
+    pub fn multiply_window(
+        &mut self,
+        acts: &[u32],
+        a_fmt: Format,
+        wgts: &[u32],
+        w_fmt: Format,
+    ) -> WindowProducts {
+        let n_a = acts.len().min(self.cfg.operands_per_window(a_fmt));
+        let n_w = wgts.len().min(self.cfg.operands_per_window(w_fmt));
+        if n_a == 0 || n_w == 0 {
+            return WindowProducts { n_acts: 0, n_wgts: 0, products: vec![] };
+        }
+        // --- Pack operand registers -------------------------------------
+        let a_reg = pack_window(&acts[..n_a], a_fmt, self.cfg.reg_width);
+        let w_reg = pack_window(&wgts[..n_w], w_fmt, self.cfg.reg_width);
+
+        // --- Separator ----------------------------------------------------
+        let a_sep = separator::separate(&a_reg, a_fmt, self.cfg.r_m, self.cfg.r_e, self.cfg.r_s);
+        let w_sep = separator::separate(&w_reg, w_fmt, self.cfg.r_m, self.cfg.r_e, self.cfg.r_s);
+        let (n_a, n_w) = (a_sep.count.min(n_a), w_sep.count.min(n_w));
+
+        let (ma, mw) = (a_fmt.mantissa_bits() as usize, w_fmt.mantissa_bits() as usize);
+
+        // --- Mantissa path: Primitive Generator → FBRT → implicit-1 ------
+        let (prim, shape) = primgen::generate(
+            &a_sep.mantissa,
+            &w_sep.mantissa,
+            ma,
+            mw,
+            n_a,
+            n_w,
+            self.cfg.l_prim,
+        );
+        self.prims_processed += shape.total_prims() as u64;
+        let tree = fbrt::reduce(&prim, &shape, self.cfg.l_prim);
+        self.link_hops += tree.stats.link_hops as u64;
+
+        // --- Exponent path: FBEA ------------------------------------------
+        // Biased exponent sums e_a + e_w per pair (bias handled at output).
+        let (ea_bits, ew_bits) = (a_fmt.exponent_bits() as usize, w_fmt.exponent_bits() as usize);
+        let slot = ea_bits.max(ew_bits) + 1;
+        let mut pairs = Vec::with_capacity(shape.num_mults());
+        for wi in 0..shape.num_wgts {
+            for ai in 0..shape.num_acts {
+                let ea = if ea_bits > 0 { a_sep.exponent.field(ai * ea_bits, ea_bits) } else { 0 };
+                let ew = if ew_bits > 0 { w_sep.exponent.field(wi * ew_bits, ew_bits) } else { 0 };
+                pairs.push((ea, ew));
+            }
+        }
+        let exp_sums = if slot > 1 {
+            fbea::add_exponent_pairs(&pairs, slot, self.cfg.l_add)
+        } else {
+            vec![0; pairs.len()]
+        };
+
+        // --- Assemble products --------------------------------------------
+        let bias_total = fp_bias(a_fmt) + fp_bias(w_fmt);
+        let mut out = Vec::with_capacity(shape.num_mults());
+        for wi in 0..shape.num_wgts {
+            for ai in 0..shape.num_acts {
+                let oid = wi * shape.num_acts + ai;
+                let a_man = field_of(&a_sep.mantissa, ai, ma);
+                let w_man = field_of(&w_sep.mantissa, wi, mw);
+                let (a_exp_field, w_exp_field) = pairs[oid];
+                // INT operands: convert two's complement (sign + magnitude
+                // bits from the separator) to magnitude.
+                let (a_mag, a_sign, a_normal, a_subn_adj) =
+                    operand_magnitude(a_fmt, a_man, a_exp_field, a_sep.sign.get(ai));
+                let (w_mag, w_sign, w_normal, w_subn_adj) =
+                    operand_magnitude(w_fmt, w_man, w_exp_field, w_sep.sign.get(wi));
+
+                let p_fbrt = if a_fmt.is_fp() && w_fmt.is_fp() {
+                    tree.products[oid]
+                } else {
+                    // INT path bypasses nothing in the tree, but magnitudes
+                    // differ from raw mantissa fields (two's complement), so
+                    // multiply the converted magnitudes through the same
+                    // shift-add identity the tree computes.
+                    a_mag as u128 * w_mag as u128
+                };
+                let mantissa_product = if a_fmt.is_fp() && w_fmt.is_fp() {
+                    implicit_one::fixup(p_fbrt, a_man as u128, w_man as u128, ma, mw, a_normal, w_normal)
+                } else {
+                    p_fbrt
+                };
+                let exponent = if a_fmt.is_fp() || w_fmt.is_fp() {
+                    exp_sums[oid] as i32 - bias_total + a_subn_adj + w_subn_adj
+                } else {
+                    0
+                };
+                out.push(PeProduct {
+                    sign: a_sign ^ w_sign,
+                    mantissa_product: mantissa_product as u64,
+                    exponent,
+                    frac_bits: if a_fmt.is_fp() && w_fmt.is_fp() {
+                        (ma + mw) as u32
+                    } else if a_fmt.is_fp() {
+                        ma as u32
+                    } else if w_fmt.is_fp() {
+                        mw as u32
+                    } else {
+                        0
+                    },
+                });
+            }
+        }
+        WindowProducts { n_acts: shape.num_acts, n_wgts: shape.num_wgts, products: out }
+    }
+
+    /// Full dot product through the accumulation path (ENU → CST → ANU),
+    /// streaming the operands window by window. Returns the exact value.
+    pub fn dot(
+        &mut self,
+        acts: &[u32],
+        a_fmt: Format,
+        wgts: &[u32],
+        w_fmt: Format,
+    ) -> f64 {
+        assert_eq!(acts.len(), wgts.len());
+        if acts.is_empty() {
+            return 0.0;
+        }
+        // Multiply element-wise: stream windows of one act x one wgt so the
+        // pairing is element-aligned (dot semantics, not outer product).
+        let mut products = Vec::with_capacity(acts.len());
+        for (a, w) in acts.iter().zip(wgts) {
+            let p = self.multiply_window(&[*a], a_fmt, &[*w], w_fmt);
+            products.extend(p.products);
+        }
+        self.accumulate(&products)
+    }
+
+    /// Accumulation path: ENU shift plan → CST alignment → ANU wide add.
+    pub fn accumulate(&self, products: &[PeProduct]) -> f64 {
+        if products.is_empty() {
+            return 0.0;
+        }
+        // Scales: product k's LSB sits at exponent - frac_bits.
+        let scales: Vec<i32> =
+            products.iter().map(|p| p.exponent - p.frac_bits as i32).collect();
+        let plan = enu::plan(&scales, RefPolicy::Min);
+        let mut acc = Accumulator::zero(plan.e_ref);
+        for (p, &sh) in products.iter().zip(&plan.shifts) {
+            assert!((sh as usize) < self.cfg.l_acc, "accumulator window exceeded");
+            acc.add_aligned((p.mantissa_product as u128) << sh, p.sign);
+        }
+        acc.to_f64()
+    }
+}
+
+impl Pe {
+    /// Micro-scaling (MX) dot product (paper §3.9): the PE's two dedicated
+    /// scale registers hold the blocks' shared power-of-two scales, the
+    /// private elements stream through the ordinary datapath, and the
+    /// scales are applied once when the block's accumulation completes.
+    pub fn mx_dot(&mut self, a: &crate::arith::MxBlock, w: &crate::arith::MxBlock) -> f64 {
+        assert_eq!(a.elems.len(), w.elems.len(), "MX blocks must share K");
+        // Scale registers (one per operand block).
+        let scale_a = a.scale_log2;
+        let scale_w = w.scale_log2;
+        let inner = self.dot(&a.elems, a.fmt, &w.elems, w.fmt);
+        inner * 2f64.powi(scale_a + scale_w)
+    }
+}
+
+fn fp_bias(f: Format) -> i32 {
+    match f {
+        Format::Fp(ff) => ff.bias(),
+        Format::Int(_) => 0,
+    }
+}
+
+fn field_of(reg: &Bits, idx: usize, width: usize) -> u32 {
+    if width == 0 {
+        0
+    } else {
+        reg.field(idx * width, width)
+    }
+}
+
+/// Interpret a separated operand: returns (magnitude-for-multiply, sign,
+/// has-implicit-1, subnormal-exponent-adjustment).
+fn operand_magnitude(fmt: Format, man: u32, exp_field: u32, sign: u8) -> (u32, u8, bool, i32) {
+    match fmt {
+        Format::Fp(_) => {
+            if exp_field == 0 {
+                // Subnormal: no implicit 1, effective exponent 1 - bias means
+                // the biased field acts as 1 (adjust by +1 over field 0).
+                (man, sign, false, 1)
+            } else {
+                (man, sign, true, 0)
+            }
+        }
+        Format::Int(i) => {
+            // Two's complement: reassemble and take magnitude.
+            let raw = ((sign as u32) << (i.bits - 1)) | man;
+            let shift = 32 - i.bits as u32;
+            let v = ((raw << shift) as i32) >> shift;
+            (v.unsigned_abs(), if v < 0 { 1 } else { 0 }, false, 0)
+        }
+    }
+}
+
+fn pack_window(codes: &[u32], fmt: Format, reg_width: usize) -> Bits {
+    let p = fmt.bits() as usize;
+    let mut reg = Bits::zeros(reg_width);
+    for (k, &c) in codes.iter().enumerate() {
+        if (k + 1) * p <= reg_width {
+            reg.set_field(k * p, p, c);
+        }
+    }
+    reg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::{decode, dot_exact, mul_exact, FpFormat};
+
+    /// PE window products must equal the golden model exactly, for every
+    /// operand pairing in the window.
+    fn check_window(a_fmt: Format, w_fmt: Format, acts: &[u32], wgts: &[u32]) {
+        let mut pe = Pe::new(PeConfig::default());
+        let win = pe.multiply_window(acts, a_fmt, wgts, w_fmt);
+        let clamped = pe.cfg.mults_per_cycle(a_fmt, w_fmt);
+        assert_eq!(win.products.len(), win.n_acts * win.n_wgts);
+        assert!(win.products.len() <= clamped.max(1));
+        for (oid, p) in win.products.iter().enumerate() {
+            let (wi, ai) = (oid / win.n_acts, oid % win.n_acts);
+            let golden = mul_exact(acts[ai], a_fmt, wgts[wi], w_fmt);
+            assert_eq!(
+                p.value(),
+                golden.value(),
+                "{a_fmt}x{w_fmt} a={} w={}",
+                acts[ai],
+                wgts[wi]
+            );
+        }
+    }
+
+    #[test]
+    fn fp6_x_fp5_window() {
+        check_window(
+            Format::Fp(FpFormat::FP6_E3M2),
+            Format::Fp(FpFormat::FP5_E2M2),
+            &[0b110101, 0b001011, 0b011111, 0b100001],
+            &[0b10101, 0b01010, 0b11111, 0b00001],
+        );
+    }
+
+    #[test]
+    fn fp8_x_fp8_window() {
+        check_window(
+            Format::Fp(FpFormat::FP8_E4M3),
+            Format::Fp(FpFormat::FP8_E4M3),
+            &[0xA5, 0x3C, 0x01],
+            &[0x7F, 0x80, 0x42],
+        );
+    }
+
+    #[test]
+    fn fp16_x_fp6() {
+        check_window(
+            Format::Fp(FpFormat::FP16),
+            Format::Fp(FpFormat::FP6_E3M2),
+            &[0x3C00, 0xBEEF],
+            &[0b000001, 0b111111, 0b100000, 0b010101],
+        );
+    }
+
+    #[test]
+    fn subnormal_operands() {
+        // Exponent field 0 operands exercise the no-implicit-1 path.
+        check_window(
+            Format::Fp(FpFormat::FP6_E3M2),
+            Format::Fp(FpFormat::FP6_E3M2),
+            &[0b000001, 0b000011, 0b100010],
+            &[0b000010, 0b100001, 0b000111],
+        );
+    }
+
+    #[test]
+    fn int8_x_int4() {
+        check_window(Format::int(8), Format::int(4), &[0xFF, 0x7F, 0x80], &[0xF, 0x8, 0x7]);
+    }
+
+    #[test]
+    fn exhaustive_fp4_pairs() {
+        let fmt = Format::Fp(FpFormat::FP4_E2M1);
+        let mut pe = Pe::new(PeConfig::default());
+        for a in 0..16u32 {
+            for w in 0..16u32 {
+                let win = pe.multiply_window(&[a], fmt, &[w], fmt);
+                let golden = mul_exact(a, fmt, w, fmt);
+                assert_eq!(win.products[0].value(), golden.value(), "a={a} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_matches_golden() {
+        let a_fmt = Format::Fp(FpFormat::FP6_E3M2);
+        let w_fmt = Format::Fp(FpFormat::FP5_E2M2);
+        let acts = [0b110101, 0b001011, 0b011111, 0b100001, 0b000010];
+        let wgts = [0b10101, 0b01010, 0b11111, 0b00001, 0b10010];
+        let mut pe = Pe::new(PeConfig::default());
+        let got = pe.dot(&acts, a_fmt, &wgts, w_fmt);
+        let expect = dot_exact(&acts, a_fmt, &wgts, w_fmt);
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn dot_int4() {
+        let fmt = Format::int(4);
+        let acts = [0x1u32, 0xF, 0x8, 0x7];
+        let wgts = [0x2u32, 0x3, 0x1, 0xF];
+        let mut pe = Pe::new(PeConfig::default());
+        assert_eq!(pe.dot(&acts, fmt, &wgts, fmt), dot_exact(&acts, fmt, &wgts, fmt));
+    }
+
+    #[test]
+    fn mx_dot_matches_golden() {
+        // §3.9: PE MX path vs the arith golden MX dot, several formats.
+        use crate::arith::{mx_dot, MxBlock};
+        let mut pe = Pe::new(PeConfig::default());
+        let mut rng = crate::util::Rng::new(31);
+        for fmt in [
+            Format::Fp(crate::arith::FpFormat::FP4_E2M1),
+            Format::Fp(crate::arith::FpFormat::FP6_E3M2),
+            Format::int(8),
+        ] {
+            let vals_a: Vec<f64> = (0..16).map(|_| rng.gauss() * 3.0).collect();
+            let vals_w: Vec<f64> = (0..16).map(|_| rng.gauss() * 0.5).collect();
+            let a = MxBlock::quantize(&vals_a, fmt, 16);
+            let w = MxBlock::quantize(&vals_w, fmt, 16);
+            let got = pe.mx_dot(&a, &w);
+            let expect = mx_dot(&a, &w);
+            assert_eq!(got, expect, "{fmt}");
+        }
+    }
+
+    #[test]
+    fn mx_scales_applied_once_per_block() {
+        use crate::arith::MxBlock;
+        let mut pe = Pe::new(PeConfig::default());
+        let fmt = Format::Fp(crate::arith::FpFormat::FP4_E2M1);
+        // Two blocks with different scales: result must differ by 2^(Δ).
+        let base = MxBlock { scale_log2: 0, fmt, elems: vec![2, 4, 6, 3] };
+        let scaled = MxBlock { scale_log2: 3, ..base.clone() };
+        let w = MxBlock { scale_log2: 0, fmt, elems: vec![5, 1, 2, 7] };
+        let r0 = pe.mx_dot(&base, &w);
+        let r3 = pe.mx_dot(&scaled, &w);
+        assert_eq!(r3, r0 * 8.0);
+    }
+
+    #[test]
+    fn throughput_table1_values() {
+        // The throughput model at Table 1 defaults — the numbers the
+        // simulator and DESIGN.md quote.
+        let cfg = PeConfig::default();
+        let fp16 = Format::Fp(FpFormat::FP16);
+        let fp8 = Format::Fp(FpFormat::FP8_E4M3);
+        let fp6 = Format::Fp(FpFormat::FP6_E3M2);
+        let fp4 = Format::Fp(FpFormat::FP4_E2M1);
+        assert_eq!(cfg.mults_per_cycle(fp16, fp16), 1);
+        assert_eq!(cfg.mults_per_cycle(fp8, fp8), 9);
+        assert_eq!(cfg.mults_per_cycle(fp6, fp6), 16);
+        assert_eq!(cfg.mults_per_cycle(fp4, fp4), 36);
+        // Mixed W6 A16 (FP6-LLM serving shape): supply-bound at 4.
+        assert_eq!(cfg.mults_per_cycle(fp16, fp6), 4);
+        // INT8: large 7-bit magnitudes bound by the mantissa register
+        // (12/7 = 1 per side).
+        assert_eq!(cfg.mults_per_cycle(Format::int(8), Format::int(8)), 1);
+        assert_eq!(cfg.mults_per_cycle(Format::int(4), Format::int(4)), 16);
+    }
+
+    #[test]
+    fn no_underutilization_vs_padding() {
+        // The headline property: at FP6, FlexiBit sustains strictly more
+        // mults/cycle than the same datapath fed FP8-padded data.
+        let cfg = PeConfig::default();
+        let fp6 = Format::Fp(FpFormat::FP6_E3M2);
+        let fp8 = Format::Fp(FpFormat::FP8_E4M3);
+        assert!(cfg.mults_per_cycle(fp6, fp6) > cfg.mults_per_cycle(fp8, fp8));
+    }
+
+    #[test]
+    fn reg_width_sweep_monotone() {
+        // Larger reg_width must never reduce throughput (Fig 14 sweep).
+        let fp6 = Format::Fp(FpFormat::FP6_E3M2);
+        let mut last = 0;
+        for rw in [16, 20, 24, 28, 32] {
+            let cfg = PeConfig::with_reg_width(rw);
+            let t = cfg.mults_per_cycle(fp6, fp6);
+            assert!(t >= last, "throughput regressed at reg_width {rw}");
+            last = t;
+        }
+    }
+}

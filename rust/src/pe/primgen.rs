@@ -1,0 +1,200 @@
+//! Primitive Generator (paper §3.3, Code 2).
+//!
+//! Computes the cross-product ANDs `P(j, i) = A_j & W_i` for every
+//! (activation, weight) pair held in the mantissa registers, laid out in the
+//! order FBRT consumes: primitives of each multiplication are contiguous,
+//! sorted ascending by weight bit index `i` (segment/row id) then activation
+//! bit index `j` within the row — exactly Figure 3 (c).
+//!
+//! Output id mapping (outer-product pairing): `oid = wgt_id * num_acts +
+//! act_id`, i.e. every weight is paired with every activation — the PE's
+//! outer-product GEMM primitive.
+
+use super::bits::Bits;
+
+/// Static shape of one primitive-generation pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrimShape {
+    /// Explicit mantissa bits of each activation.
+    pub ma: usize,
+    /// Explicit mantissa bits of each weight.
+    pub mw: usize,
+    /// Number of activations in the register.
+    pub num_acts: usize,
+    /// Number of weights in the register.
+    pub num_wgts: usize,
+}
+
+impl PrimShape {
+    /// Primitive bits per multiplication.
+    pub fn prims_per_mult(&self) -> usize {
+        self.ma * self.mw
+    }
+    /// Number of simultaneous multiplications.
+    pub fn num_mults(&self) -> usize {
+        self.num_acts * self.num_wgts
+    }
+    /// Total primitive bits generated per pass.
+    pub fn total_prims(&self) -> usize {
+        self.num_mults() * self.prims_per_mult()
+    }
+    /// Leaf position of primitive `P(j, i)` of multiplication `oid`.
+    pub fn leaf_pos(&self, oid: usize, i: usize, j: usize) -> usize {
+        oid * self.prims_per_mult() + i * self.ma + j
+    }
+    /// (oid, row i, col j) of a leaf position — the inverse of [`leaf_pos`].
+    pub fn leaf_coords(&self, pos: usize) -> (usize, usize, usize) {
+        let pp = self.prims_per_mult();
+        (pos / pp, (pos % pp) / self.ma, pos % self.ma)
+    }
+}
+
+/// Generate primitives for all (act, weight) pairs into a `l_prim`-wide
+/// register. Returns the primitive register and the shape actually used
+/// (mult count clamped so the primitives fit `l_prim`).
+pub fn generate(
+    act_mantissa: &Bits,
+    wgt_mantissa: &Bits,
+    ma: usize,
+    mw: usize,
+    num_acts: usize,
+    num_wgts: usize,
+    l_prim: usize,
+) -> (Bits, PrimShape) {
+    // Clamp the weight count so all primitives fit in the register (the
+    // compiler schedules the remainder onto the next cycle).
+    let pp = (ma * mw).max(1);
+    let max_mults = l_prim / pp;
+    let (num_acts, num_wgts) = clamp_pairs(num_acts, num_wgts, max_mults);
+    let shape = PrimShape { ma, mw, num_acts, num_wgts };
+
+    let mut prim = Bits::zeros(l_prim);
+    if ma == 0 || mw == 0 {
+        return (prim, shape);
+    }
+    for wgt_id in 0..num_wgts {
+        for act_id in 0..num_acts {
+            let oid = wgt_id * num_acts + act_id;
+            for i in 0..mw {
+                let wbit = wgt_mantissa.get(wgt_id * mw + i);
+                for j in 0..ma {
+                    let abit = act_mantissa.get(act_id * ma + j);
+                    prim.set(shape.leaf_pos(oid, i, j), abit & wbit);
+                }
+            }
+        }
+    }
+    (prim, shape)
+}
+
+/// Reduce (num_acts, num_wgts) so num_acts * num_wgts <= max_mults,
+/// trimming weights first (they are re-streamed next cycle).
+fn clamp_pairs(mut num_acts: usize, mut num_wgts: usize, max_mults: usize) -> (usize, usize) {
+    if max_mults == 0 {
+        return (0, 0);
+    }
+    while num_acts * num_wgts > max_mults && num_wgts > 1 {
+        num_wgts -= 1;
+    }
+    while num_acts * num_wgts > max_mults && num_acts > 1 {
+        num_acts -= 1;
+    }
+    (num_acts, num_wgts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bits_of(vals: &[u32], width: usize) -> Bits {
+        let mut b = Bits::zeros(vals.len() * width);
+        for (k, &v) in vals.iter().enumerate() {
+            b.set_field(k * width, width, v);
+        }
+        b
+    }
+
+    #[test]
+    fn fig3c_example() {
+        // BW_M(A) = 3, BW_M(W) = 2 (Figure 3 (c)): check the cross products
+        // and the packed ascending order.
+        let acts = bits_of(&[0b101, 0b011], 3); // A0 = 1,0,1 ; A1 = 1,1,0
+        let wgts = bits_of(&[0b11, 0b10], 2);
+        let (prim, shape) = generate(&acts, &wgts, 3, 2, 2, 2, 144);
+        assert_eq!(shape.num_mults(), 4);
+        assert_eq!(shape.prims_per_mult(), 6);
+        // oid 0 = W0 x A0. W0 bits (LSB first) = 1,1. A0 bits = 1,0,1.
+        // Row i=0 (W0 bit0=1): P = A0 & 1 = 1,0,1 at positions 0..3.
+        assert_eq!(prim.field(0, 3), 0b101);
+        // Row i=1 (W0 bit1=1): positions 3..6.
+        assert_eq!(prim.field(3, 3), 0b101);
+        // oid 1 = W0 x A1 at positions 6..12: rows both = A1 = 0b011.
+        assert_eq!(prim.field(6, 3), 0b011);
+        assert_eq!(prim.field(9, 3), 0b011);
+        // oid 2 = W1 x A0: W1 bits = 0,1 -> row0 zero, row1 = A0.
+        assert_eq!(prim.field(12, 3), 0b000);
+        assert_eq!(prim.field(15, 3), 0b101);
+    }
+
+    #[test]
+    fn leaf_coords_inverse() {
+        let shape = PrimShape { ma: 3, mw: 2, num_acts: 4, num_wgts: 2 };
+        for pos in 0..shape.total_prims() {
+            let (oid, i, j) = shape.leaf_coords(pos);
+            assert_eq!(shape.leaf_pos(oid, i, j), pos);
+        }
+    }
+
+    #[test]
+    fn clamping_to_l_prim() {
+        // 6 acts x 6 wgts x 1x1 prims = 36 <= 144: no clamp.
+        let acts = bits_of(&[1, 0, 1, 1, 0, 1], 1);
+        let wgts = bits_of(&[1, 1, 0, 1, 1, 0], 1);
+        let (_, shape) = generate(&acts, &wgts, 1, 1, 6, 6, 144);
+        assert_eq!(shape.num_mults(), 36);
+        // With mantissa 10x10 = 100 prims/mult, only 1 mult fits in 144.
+        let acts = bits_of(&[0x3FF], 10);
+        let wgts = bits_of(&[0x2AB], 10);
+        let (_, shape) = generate(&acts, &wgts, 10, 10, 1, 1, 144);
+        assert_eq!(shape.num_mults(), 1);
+        // 4x4 mults of 3x3=9 prims = 144 exactly.
+        let acts = bits_of(&[5, 3, 7, 1], 3);
+        let wgts = bits_of(&[2, 6, 4, 7], 3);
+        let (_, shape) = generate(&acts, &wgts, 3, 3, 4, 4, 144);
+        assert_eq!(shape.total_prims(), 144);
+    }
+
+    #[test]
+    fn all_products_present() {
+        // Every P(j,i) equals A_j & W_i for every pair, random-ish pattern.
+        let acts = bits_of(&[0b1101, 0b0110, 0b1011], 4);
+        let wgts = bits_of(&[0b101, 0b010], 3);
+        let (prim, shape) = generate(&acts, &wgts, 4, 3, 3, 2, 144);
+        for wgt_id in 0..2 {
+            for act_id in 0..3 {
+                let oid = wgt_id * 3 + act_id;
+                for i in 0..3 {
+                    for j in 0..4 {
+                        let a = acts.get(act_id * 4 + j);
+                        let w = wgts.get(wgt_id * 3 + i);
+                        assert_eq!(
+                            prim.get(shape.leaf_pos(oid, i, j)),
+                            a & w,
+                            "oid {oid} P({j},{i})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_mantissa_widths() {
+        // m = 0 formats produce no primitives (product is pure implicit-1).
+        let acts = Bits::zeros(12);
+        let wgts = Bits::zeros(12);
+        let (prim, shape) = generate(&acts, &wgts, 0, 3, 4, 4, 144);
+        assert_eq!(shape.total_prims(), 0);
+        assert_eq!(prim.to_u128(), 0);
+    }
+}

@@ -1,0 +1,181 @@
+//! Sign / Exponent / Mantissa Separator (paper §3.2, Code 1).
+//!
+//! Operands arrive bit-packed back-to-back in the `reg_width`-bit weight and
+//! activation registers: value k occupies bits `[k*P, (k+1)*P)`. The
+//! separator's crossbars route each incoming bit into the sign, exponent, or
+//! mantissa register. Field order within a value follows the packed layout
+//! produced by the Bit-Packing Unit: LSB-first `[mantissa | exponent | sign]`
+//! (the sign is the value's MSB, so it is the *last* bit of each packed
+//! value; Code 1's `act_bitid == 0` corresponds to the MSB-first RTL stream —
+//! our LSB-first model keeps the same field partition).
+//!
+//! For INT data the exponent register is bypassed: the magnitude bits go to
+//! the mantissa register and the sign bit (two's-complement MSB) to the sign
+//! register; sign-magnitude conversion happens in the INT pre-stage of
+//! [`crate::pe::pe`].
+
+use super::bits::Bits;
+use crate::arith::Format;
+
+/// Result of separating one packed register window.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Separated {
+    /// Mantissa register contents: value k's explicit mantissa occupies
+    /// `[k*M, (k+1)*M)` (LSB-first).
+    pub mantissa: Bits,
+    /// Exponent register contents: value k's exponent at `[k*E, (k+1)*E)`.
+    pub exponent: Bits,
+    /// Sign register: one bit per value.
+    pub sign: Bits,
+    /// How many complete values the window held.
+    pub count: usize,
+}
+
+/// PE separator: routes a packed `reg_width` window into the three field
+/// registers. `r_m`, `r_e`, `r_s` are the register capacities (Table 1).
+pub fn separate(
+    reg: &Bits,
+    fmt: Format,
+    r_m: usize,
+    r_e: usize,
+    r_s: usize,
+) -> Separated {
+    let p = fmt.bits() as usize;
+    let m = fmt.mantissa_bits() as usize;
+    let e = fmt.exponent_bits() as usize;
+    let n_vals = reg.width() / p;
+    // Capacity constraints: how many values the field registers can hold.
+    let cap = [
+        if m > 0 { r_m / m } else { usize::MAX },
+        if e > 0 { r_e / e } else { usize::MAX },
+        r_s,
+    ]
+    .into_iter()
+    .min()
+    .unwrap();
+    let count = n_vals.min(cap);
+
+    let mut mantissa = Bits::zeros(r_m);
+    let mut exponent = Bits::zeros(r_e);
+    let mut sign = Bits::zeros(r_s);
+
+    // Crossbar routing, one value at a time (the hardware routes all bits in
+    // parallel through the reg_width x R crossbars; the mapping is identical).
+    for k in 0..count {
+        let base = k * p;
+        // Packed layout LSB-first: [man (m) | exp (e) | sign (1)].
+        mantissa.set_field(k * m, m, reg.field(base, m));
+        if e > 0 {
+            exponent.set_field(k * e, e, reg.field(base + m, e));
+        }
+        sign.set(k, reg.get(base + m + e));
+    }
+    Separated { mantissa, exponent, sign, count }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::{FpFields, FpFormat, PackedTensor};
+
+    /// Pack `codes` into a register window and separate; check fields match
+    /// direct extraction via `FpFields`.
+    fn check(fmt: FpFormat, codes: &[u32], reg_width: usize) {
+        let f = Format::Fp(fmt);
+        let t = PackedTensor::from_codes(codes, f);
+        let mut reg = Bits::zeros(reg_width);
+        for i in 0..reg_width.min(t.bits()) {
+            let w = t.words()[i / 64];
+            reg.set(i, ((w >> (i % 64)) & 1) as u8);
+        }
+        let sep = separate(&reg, f, 12, 12, 12);
+        let expect_count = (reg_width / fmt.bits() as usize)
+            .min(if fmt.m > 0 { 12 / fmt.m as usize } else { usize::MAX })
+            .min(12 / fmt.e as usize)
+            .min(codes.len().max(reg_width)); // codes fill the window
+        assert_eq!(sep.count, expect_count.min(codes.len()).min(expect_count));
+        for k in 0..sep.count {
+            let fields = FpFields::unpack(codes[k], fmt);
+            assert_eq!(
+                sep.mantissa.field(k * fmt.m as usize, fmt.m as usize),
+                fields.man,
+                "mantissa of value {k} ({fmt:?})"
+            );
+            assert_eq!(
+                sep.exponent.field(k * fmt.e as usize, fmt.e as usize),
+                fields.exp,
+                "exponent of value {k}"
+            );
+            assert_eq!(sep.sign.get(k), fields.sign, "sign of value {k}");
+        }
+    }
+
+    #[test]
+    fn fp6_window() {
+        // 4 FP6 values fit in a 24-bit window (walk-through of Fig 3 (b)).
+        check(FpFormat::FP6_E3M2, &[0b110101, 0b001011, 0b111111, 0b100000], 24);
+    }
+
+    #[test]
+    fn fp5_window() {
+        // floor(24/5) = 4 complete FP5 values; the 5th is cut off.
+        check(FpFormat::FP5_E2M2, &[0b10101, 0b01010, 0b11111, 0b00001, 0b11011], 24);
+    }
+
+    #[test]
+    fn fp8_window() {
+        check(FpFormat::FP8_E4M3, &[0xA5, 0x3C, 0xFF], 24);
+    }
+
+    #[test]
+    fn fp16_window() {
+        // Only one FP16 fits in 24 bits; mantissa cap 12/10 = 1 anyway.
+        check(FpFormat::FP16, &[0xBEEF], 24);
+    }
+
+    #[test]
+    fn mantissa_capacity_binds() {
+        // e2m3: reg supplies floor(24/6)=4 values and R_M holds 12/3 = 4. OK;
+        // but with R_M = 6 only 2 fit.
+        let f = Format::Fp(FpFormat::FP6_E2M3);
+        let codes = [0b101101u32, 0b010010, 0b111000, 0b000111];
+        let t = PackedTensor::from_codes(&codes, f);
+        let mut reg = Bits::zeros(24);
+        for i in 0..24 {
+            reg.set(i, ((t.words()[0] >> i) & 1) as u8);
+        }
+        let sep = separate(&reg, f, 6, 12, 12);
+        assert_eq!(sep.count, 2);
+    }
+
+    #[test]
+    fn int_separation() {
+        // INT4 0b1011 (-5): magnitude bits -> mantissa reg, MSB -> sign reg.
+        let f = Format::int(4);
+        let mut reg = Bits::zeros(24);
+        reg.set_field(0, 4, 0b1011);
+        reg.set_field(4, 4, 0b0110);
+        let sep = separate(&reg, f, 12, 12, 12);
+        assert!(sep.count >= 2);
+        assert_eq!(sep.mantissa.field(0, 3), 0b011);
+        assert_eq!(sep.sign.get(0), 1);
+        assert_eq!(sep.mantissa.field(3, 3), 0b110);
+        assert_eq!(sep.sign.get(1), 0);
+    }
+
+    #[test]
+    fn m0_format_all_exponent() {
+        // e3m0: no mantissa bits; count bound by exponent register only.
+        let f = Format::fp(3, 0);
+        let mut reg = Bits::zeros(24);
+        for (k, code) in [0b0110u32, 0b1001, 0b0011].iter().enumerate() {
+            reg.set_field(k * 4, 4, *code);
+        }
+        let sep = separate(&reg, f, 12, 12, 12);
+        assert_eq!(sep.count, 4); // 12/3 exponent slots, 24/4 = 6 supply -> 4
+        assert_eq!(sep.exponent.field(0, 3), 0b110);
+        assert_eq!(sep.sign.get(0), 0);
+        assert_eq!(sep.exponent.field(3, 3), 0b001);
+        assert_eq!(sep.sign.get(1), 1);
+    }
+}

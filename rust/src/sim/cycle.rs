@@ -1,0 +1,196 @@
+//! Cycle-level tile-pipeline simulator — the detailed model standing in for
+//! the paper's RTL-validated cycle-accurate simulator (§5.2, Fig 9).
+//!
+//! Unlike the analytical model's closed-form max(), this simulator walks the
+//! actual tile schedule: double-buffered weight/activation tile loads, per-
+//! tile compute with explicit edge-tile shapes, and drain — accumulating
+//! cycle counts event by event. Fig 9's analog compares the two models on
+//! the attention layers of Bert-base and Llama-2-7b.
+
+use super::AcceleratorConfig;
+use crate::baselines::Accel;
+use crate::workload::{Gemm, ModelSpec, PrecisionPair};
+
+/// Cycle-level result for one GEMM.
+#[derive(Debug, Clone, Copy)]
+pub struct CycleReport {
+    pub cycles: u64,
+    pub seconds: f64,
+    /// Cycles the array spent computing (vs stalled on loads).
+    pub busy_cycles: u64,
+    /// Tiles executed.
+    pub tiles: u64,
+}
+
+/// Simulate one GEMM at cycle granularity (weight-stationary schedule with
+/// double buffering — the schedule the paper's baselines use).
+pub fn simulate_gemm_cycles(
+    accel: &dyn Accel,
+    cfg: &AcceleratorConfig,
+    g: &Gemm,
+) -> CycleReport {
+    let pair = PrecisionPair { w: g.w_fmt, a: g.a_fmt };
+    let wb = accel.storage_bits(g.w_fmt) as u64;
+    let ab = accel.storage_bits(g.a_fmt) as u64;
+    let mpc = accel.mults_per_pe_cycle(pair).max(1e-9);
+
+    // Tile shape: K mapped across array_x, N across array_y (WS);
+    // Tn columns sized to the weight buffer.
+    let wbuf_bits = cfg.weight_buf as u64 * 8;
+    let tn = ((wbuf_bits / (g.k as u64 * wb)).max(1) as usize).min(g.n);
+    let tm = ((cfg.act_buf as u64 * 8 / 2 / (g.k as u64 * ab)).max(1) as usize).min(g.m);
+
+    let bw_cycles_per_bit = 1.0 / (cfg.offchip_bw * 8.0 / cfg.clock_hz); // cycles per bit
+    let noc_cycles_per_bit = 1.0 / (cfg.noc_bw * 8.0 / cfg.clock_hz);
+
+    let n_tiles_n = g.n.div_ceil(tn);
+    let n_tiles_m = g.m.div_ceil(tm);
+
+    let mut cycles: f64 = 0.0;
+    let mut busy: f64 = 0.0;
+    let mut tiles: u64 = 0;
+
+    // Pipeline fill: the very first weight + activation tile loads are not
+    // overlapped with anything; every later load is double-buffered behind
+    // the current tile's compute (the per-step cost is max(compute, loads
+    // issued for the next step, NoC distribution)).
+    let w_tile_load = |cols: usize| (g.k as u64 * cols as u64 * wb) as f64 * bw_cycles_per_bit;
+    let a_tile_load = |rows: usize| (rows as u64 * g.k as u64 * ab) as f64 * bw_cycles_per_bit;
+    cycles += w_tile_load(tn.min(g.n)) + a_tile_load(tm.min(g.m));
+
+    for ni in 0..n_tiles_n {
+        let cur_n = tn.min(g.n - ni * tn);
+        for mi in 0..n_tiles_m {
+            let cur_m = tm.min(g.m - mi * tm);
+            // Loads issued during this step (for the next step), overlapped.
+            // The next pass's weight tile streams in across the *whole*
+            // current pass (weight double-buffer fills gradually), so its
+            // cost is amortized over this pass's act tiles.
+            let mut next_load = 0.0;
+            if mi + 1 < n_tiles_m {
+                next_load += a_tile_load(tm.min(g.m - (mi + 1) * tm));
+            } else if ni + 1 < n_tiles_n {
+                next_load += a_tile_load(tm.min(g.m));
+            }
+            if ni + 1 < n_tiles_n {
+                next_load += w_tile_load(tn.min(g.n - (ni + 1) * tn)) / n_tiles_m as f64;
+            }
+            // NoC distribution into the array: activations stream per tile;
+            // the stationary weight tile distributes once per pass
+            // (amortized across the pass's act tiles).
+            let noc = (cur_m as u64 * g.k as u64 * ab) as f64 * noc_cycles_per_bit
+                + (g.k as u64 * cur_n as u64 * wb) as f64 * noc_cycles_per_bit
+                    / n_tiles_m as f64;
+            // Compute: edge tiles see quantization loss on the array dims.
+            let q = |d: usize, s: usize| d as f64 / (d.div_ceil(s) * s) as f64;
+            let util = q(g.k, cfg.array_x) * q(cur_n, cfg.array_y);
+            let macs = cur_m as f64 * g.k as f64 * cur_n as f64;
+            let compute = macs / (cfg.num_pes as f64 * mpc * util.max(1e-6));
+            busy += compute;
+            cycles += compute.max(next_load).max(noc);
+            tiles += 1;
+        }
+    }
+    // Drain: write outputs (overlap ignored — small).
+    cycles += (g.m as u64 * g.n as u64 * 16) as f64 * bw_cycles_per_bit * 0.1;
+
+    CycleReport {
+        cycles: cycles as u64,
+        seconds: cycles / cfg.clock_hz,
+        busy_cycles: busy as u64,
+        tiles,
+    }
+}
+
+/// Cycle-simulate the attention block of a model (the Fig 9 workload).
+pub fn simulate_attention_cycles(
+    accel: &dyn Accel,
+    cfg: &AcceleratorConfig,
+    model: &ModelSpec,
+    pair: PrecisionPair,
+) -> f64 {
+    model
+        .attention_gemms(pair)
+        .iter()
+        .map(|g| simulate_gemm_cycles(accel, cfg, g).seconds * g.count as f64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::FlexiBitAccel;
+    use crate::sim::analytical::simulate_gemm;
+    use crate::sim::{cloud_a, mobile_a};
+    use crate::workload::{bert_base, llama2_7b, GemmKind};
+    use crate::arith::Format;
+
+    fn test_gemm(m: usize, k: usize, n: usize, w_bits: u32, a_bits: u32) -> Gemm {
+        Gemm {
+            kind: GemmKind::FfnUp,
+            m,
+            k,
+            n,
+            count: 1,
+            a_fmt: Format::default_fp(a_bits),
+            w_fmt: Format::default_fp(w_bits),
+        }
+    }
+
+    #[test]
+    fn agrees_with_analytical() {
+        // The Fig 9 validation: cycle model vs analytical model on the
+        // attention-layer GEMM shapes (paper reports 96-99% agreement
+        // between its simulator and RTL).
+        let fb = FlexiBitAccel::new();
+        for cfg in [mobile_a(), cloud_a()] {
+            for model in [bert_base(), llama2_7b()] {
+                for g in model.attention_gemms(PrecisionPair::of_bits(6, 16)) {
+                    let cyc = simulate_gemm_cycles(&fb, &cfg, &g).seconds;
+                    let ana = simulate_gemm(&fb, &cfg, &g).seconds;
+                    let err = (cyc - ana).abs() / ana.max(1e-12);
+                    // Small attention GEMMs diverge most (fill/drain terms);
+                    // the Fig 9 binary reports the aggregate agreement.
+                    assert!(
+                        err < 0.55,
+                        "{} {:?} cycle={cyc:.4} analytical={ana:.4} err={err:.2}",
+                        model.name,
+                        g.kind
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn busy_fraction_reasonable() {
+        let fb = FlexiBitAccel::new();
+        let cfg = cloud_a();
+        let g = test_gemm(2048, 4096, 4096, 8, 8);
+        let r = simulate_gemm_cycles(&fb, &cfg, &g);
+        assert!(r.busy_cycles > 0 && r.busy_cycles <= r.cycles);
+        assert!(r.tiles >= 1);
+    }
+
+    #[test]
+    fn more_tiles_for_bigger_gemm() {
+        let fb = FlexiBitAccel::new();
+        let cfg = mobile_a();
+        let small = simulate_gemm_cycles(&fb, &cfg, &test_gemm(512, 512, 512, 8, 8));
+        let big = simulate_gemm_cycles(&fb, &cfg, &test_gemm(2048, 4096, 4096, 8, 8));
+        assert!(big.tiles > small.tiles);
+        assert!(big.cycles > small.cycles);
+    }
+
+    #[test]
+    fn attention_cycle_sum_positive() {
+        let fb = FlexiBitAccel::new();
+        let s = simulate_attention_cycles(
+            &fb,
+            &mobile_a(),
+            &bert_base(),
+            PrecisionPair::of_bits(8, 8),
+        );
+        assert!(s > 0.0);
+    }
+}

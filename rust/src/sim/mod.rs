@@ -1,0 +1,146 @@
+//! Performance simulation (paper §5.2).
+//!
+//! Two models, mirroring the paper's methodology:
+//!
+//! * [`cycle`] — a cycle-level tile-pipeline simulator (double-buffered
+//!   loads, explicit edge tiles): our stand-in for the paper's
+//!   RTL-validated cycle-accurate simulator.
+//! * [`analytical`] — the fast roofline/reuse model used for the large
+//!   evaluation campaign (Fig 10-13), validated against [`cycle`] the way
+//!   the paper validates its simulator against RTL (Fig 9, 96-99%).
+//!
+//! Both consume the same [`AcceleratorConfig`] (Table 2) and any
+//! [`crate::baselines::Accel`] implementation.
+
+pub mod analytical;
+pub mod cycle;
+
+pub use analytical::{simulate_gemm, simulate_model, Dataflow, GemmReport, ModelReport};
+
+/// Accelerator-scale configuration (paper Table 2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AcceleratorConfig {
+    pub name: &'static str,
+    pub num_pes: usize,
+    /// PE array dimensions (X × Y).
+    pub array_x: usize,
+    pub array_y: usize,
+    /// Off-chip bandwidth, bytes/s.
+    pub offchip_bw: f64,
+    /// Weight global buffer, bytes.
+    pub weight_buf: usize,
+    /// Activation/output global buffer, bytes.
+    pub act_buf: usize,
+    /// Weight/activation NoC bandwidth, bytes/s.
+    pub noc_bw: f64,
+    /// Local buffer per PE, bytes.
+    pub local_buf: usize,
+    /// Clock, Hz.
+    pub clock_hz: f64,
+    /// Mobile-class DRAM (affects energy table).
+    pub mobile: bool,
+    /// Off-chip channel width in bits (BPU base-unit replication).
+    pub channel_bits: usize,
+}
+
+const MB: usize = 1024 * 1024;
+
+/// Mobile-A (Table 2): 1K PEs, 32×32, 16 GB/s DRAM.
+pub fn mobile_a() -> AcceleratorConfig {
+    AcceleratorConfig {
+        name: "Mobile-A",
+        num_pes: 1024,
+        array_x: 32,
+        array_y: 32,
+        offchip_bw: 16e9,
+        weight_buf: 2 * MB,
+        act_buf: MB,
+        noc_bw: 32e9,
+        local_buf: 184,
+        clock_hz: 1e9,
+        mobile: true,
+        channel_bits: 64,
+    }
+}
+
+/// Mobile-B: 4K PEs, 64×64.
+pub fn mobile_b() -> AcceleratorConfig {
+    AcceleratorConfig {
+        name: "Mobile-B",
+        num_pes: 4096,
+        array_x: 64,
+        array_y: 64,
+        offchip_bw: 16e9,
+        weight_buf: 4 * MB,
+        act_buf: 2 * MB,
+        noc_bw: 64e9,
+        local_buf: 184,
+        clock_hz: 1e9,
+        mobile: true,
+        channel_bits: 64,
+    }
+}
+
+/// Cloud-A: 8K PEs, 128×64, HBM.
+pub fn cloud_a() -> AcceleratorConfig {
+    AcceleratorConfig {
+        name: "Cloud-A",
+        num_pes: 8192,
+        array_x: 128,
+        array_y: 64,
+        offchip_bw: 128e9,
+        weight_buf: 16 * MB,
+        act_buf: 8 * MB,
+        noc_bw: 128e9,
+        local_buf: 184,
+        clock_hz: 1e9,
+        mobile: false,
+        channel_bits: 128,
+    }
+}
+
+/// Cloud-B: 16K PEs, 128×128, HBM (TPUv4-scale).
+pub fn cloud_b() -> AcceleratorConfig {
+    AcceleratorConfig {
+        name: "Cloud-B",
+        num_pes: 16384,
+        array_x: 128,
+        array_y: 128,
+        offchip_bw: 128e9,
+        weight_buf: 32 * MB,
+        act_buf: 16 * MB,
+        noc_bw: 128e9,
+        local_buf: 184,
+        clock_hz: 1e9,
+        mobile: false,
+        channel_bits: 128,
+    }
+}
+
+/// All four scales in Table 2 order.
+pub fn all_configs() -> Vec<AcceleratorConfig> {
+    vec![mobile_a(), mobile_b(), cloud_a(), cloud_b()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_values() {
+        let ma = mobile_a();
+        assert_eq!(ma.num_pes, 1024);
+        assert_eq!((ma.array_x, ma.array_y), (32, 32));
+        let cb = cloud_b();
+        assert_eq!(cb.num_pes, 16384);
+        assert_eq!(cb.weight_buf, 32 * MB);
+        assert!(!cb.mobile && mobile_b().mobile);
+    }
+
+    #[test]
+    fn array_matches_pe_count() {
+        for c in all_configs() {
+            assert_eq!(c.array_x * c.array_y, c.num_pes, "{}", c.name);
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! Small self-contained utilities: a deterministic PRNG (the offline build
+//! has no `rand` crate) and a micro property-testing harness used across the
+//! test suite in place of `proptest`.
+
+/// SplitMix64 — tiny, fast, well-distributed deterministic PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_add(0x9E3779B97F4A7C15))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, bound)`.
+    pub fn below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0);
+        self.next_u64() % bound
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn range(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(hi > lo);
+        lo + (self.below((hi - lo) as u64) as i64)
+    }
+
+    /// Uniform float in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Standard-normal-ish sample (sum of 12 uniforms, CLT approximation —
+    /// adequate for generating test tensors).
+    pub fn gauss(&mut self) -> f64 {
+        (0..12).map(|_| self.f64()).sum::<f64>() - 6.0
+    }
+
+    /// A random code of `bits` width.
+    pub fn code(&mut self, bits: u32) -> u32 {
+        (self.next_u64() & ((1u64 << bits) - 1)) as u32
+    }
+
+    /// Vector of random codes.
+    pub fn codes(&mut self, n: usize, bits: u32) -> Vec<u32> {
+        (0..n).map(|_| self.code(bits)).collect()
+    }
+}
+
+/// Run a randomized property `cases` times with per-case seeds derived from
+/// `seed`. Panics with the failing seed for reproducibility.
+pub fn property<F: Fn(&mut Rng)>(seed: u64, cases: usize, f: F) {
+    for i in 0..cases {
+        let case_seed = seed.wrapping_mul(1_000_003).wrapping_add(i as u64);
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed at case {i} (seed {case_seed})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            assert!(r.below(13) < 13);
+        }
+    }
+
+    #[test]
+    fn code_width() {
+        let mut r = Rng::new(7);
+        for bits in 1..=20 {
+            for _ in 0..50 {
+                assert!(r.code(bits) < (1 << bits));
+            }
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..1000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn property_runs_all_cases() {
+        let count = std::cell::Cell::new(0);
+        property(1, 25, |_| count.set(count.get() + 1));
+        assert_eq!(count.get(), 25);
+    }
+}

@@ -1,0 +1,83 @@
+//! GEMM shape descriptors produced by the workload extractor.
+
+use crate::arith::Format;
+
+/// Which transformer sub-operation a GEMM implements — attention GEMMs keep
+/// activations × activations precision, projection/FFN GEMMs are weight ×
+/// activation and carry the quantized-weight precision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GemmKind {
+    /// Q/K/V input projections (weight × activation).
+    QkvProj,
+    /// Attention scores: Q × K^T (activation × activation).
+    AttnScore,
+    /// Attention context: scores × V (activation × activation).
+    AttnContext,
+    /// Attention output projection.
+    OutProj,
+    /// FFN up / gate projection.
+    FfnUp,
+    /// FFN down projection.
+    FfnDown,
+}
+
+/// One GEMM: `C[M,N] = A[M,K] × W[K,N]`, with per-operand formats.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Gemm {
+    pub kind: GemmKind,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// How many times this GEMM runs per model forward pass
+    /// (layers × heads for per-head attention GEMMs).
+    pub count: usize,
+    /// Activation (A operand) format.
+    pub a_fmt: Format,
+    /// Weight (W operand) format.
+    pub w_fmt: Format,
+}
+
+impl Gemm {
+    /// Multiply-accumulate operations for one instance.
+    pub fn macs(&self) -> u64 {
+        self.m as u64 * self.k as u64 * self.n as u64
+    }
+
+    /// Total MACs across all instances.
+    pub fn total_macs(&self) -> u64 {
+        self.macs() * self.count as u64
+    }
+
+    /// Weight bytes (packed) for one instance.
+    pub fn weight_bits(&self) -> u64 {
+        self.k as u64 * self.n as u64 * self.w_fmt.bits() as u64
+    }
+
+    /// Activation input bytes (packed) for one instance.
+    pub fn act_bits(&self) -> u64 {
+        self.m as u64 * self.k as u64 * self.a_fmt.bits() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::FpFormat;
+
+    #[test]
+    fn mac_accounting() {
+        let g = Gemm {
+            kind: GemmKind::FfnUp,
+            m: 2048,
+            k: 768,
+            n: 3072,
+            count: 12,
+            a_fmt: Format::Fp(FpFormat::FP16),
+            w_fmt: Format::Fp(FpFormat::FP6_E3M2),
+        };
+        assert_eq!(g.macs(), 2048 * 768 * 3072);
+        assert_eq!(g.total_macs(), g.macs() * 12);
+        assert_eq!(g.weight_bits(), 768 * 3072 * 6);
+        assert_eq!(g.act_bits(), 2048 * 768 * 16);
+    }
+}

@@ -1,0 +1,14 @@
+//! LLM workload extraction (paper Table 3, §5.1).
+//!
+//! The evaluation runs transformer inference (prefill, sequence 2048) on
+//! Bert-base-uncased, Llama-2-7b, Llama-2-70b, and GPT-3. The performance
+//! model consumes GEMM shapes, so this module turns Table 3's
+//! hyper-parameters into the per-layer GEMM list: QKV projections, the two
+//! attention batched GEMMs (QK^T and PV), the output projection, and the
+//! FFN pair (gated three-GEMM FFN for Llama models).
+
+mod models;
+mod gemm;
+
+pub use gemm::{Gemm, GemmKind};
+pub use models::{ModelSpec, PrecisionPair, all_models, bert_base, llama2_7b, llama2_70b, gpt3};

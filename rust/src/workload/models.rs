@@ -1,0 +1,281 @@
+//! Model specifications (paper Table 3) and GEMM extraction.
+
+use super::gemm::{Gemm, GemmKind};
+use crate::arith::Format;
+
+/// The (weight, activation) precision pair of an experiment — the paper's
+/// Fig 10/12 x-axis labels `[P(W), P(A)]`, e.g. `[6, 6]` or `[16, 6]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrecisionPair {
+    pub w: Format,
+    pub a: Format,
+}
+
+impl PrecisionPair {
+    pub fn new(w: Format, a: Format) -> Self {
+        PrecisionPair { w, a }
+    }
+
+    /// Parse `[w, a]` axis labels: `pair(6, 6)` → e3m2 × e3m2.
+    pub fn of_bits(w_bits: u32, a_bits: u32) -> Self {
+        PrecisionPair { w: Format::default_fp(w_bits), a: Format::default_fp(a_bits) }
+    }
+
+    pub fn label(&self) -> String {
+        format!("[{},{}]", self.w.bits(), self.a.bits())
+    }
+}
+
+/// Transformer hyper-parameters (Table 3) plus the attention structure
+/// needed to enumerate GEMMs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub seq: usize,
+    pub layers: usize,
+    /// Embedding dimension (d_model).
+    pub d_model: usize,
+    /// FFN hidden dimension.
+    pub d_ff: usize,
+    pub heads: usize,
+    /// Gated FFN (SwiGLU: up + gate + down) vs classic 2-GEMM FFN.
+    pub gated_ffn: bool,
+    /// Grouped-query attention KV heads (= heads when MHA).
+    pub kv_heads: usize,
+}
+
+impl ModelSpec {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.heads
+    }
+
+    /// Enumerate the GEMMs of one full forward pass (prefill) at the given
+    /// precision pair. Weight×activation GEMMs take `pair.w`/`pair.a`;
+    /// activation×activation attention GEMMs run both operands at `pair.a`.
+    pub fn gemms(&self, pair: PrecisionPair) -> Vec<Gemm> {
+        let s = self.seq;
+        let d = self.d_model;
+        let hd = self.head_dim();
+        let mut v = Vec::new();
+        // Q projection (full heads) + K/V projections (kv_heads).
+        v.push(Gemm {
+            kind: GemmKind::QkvProj,
+            m: s,
+            k: d,
+            n: d + 2 * self.kv_heads * hd,
+            count: self.layers,
+            a_fmt: pair.a,
+            w_fmt: pair.w,
+        });
+        // Attention score QK^T: per head, [s, hd] x [hd, s].
+        v.push(Gemm {
+            kind: GemmKind::AttnScore,
+            m: s,
+            k: hd,
+            n: s,
+            count: self.layers * self.heads,
+            a_fmt: pair.a,
+            w_fmt: pair.a,
+        });
+        // Attention context P×V: per head, [s, s] x [s, hd].
+        v.push(Gemm {
+            kind: GemmKind::AttnContext,
+            m: s,
+            k: s,
+            n: hd,
+            count: self.layers * self.heads,
+            a_fmt: pair.a,
+            w_fmt: pair.a,
+        });
+        // Output projection.
+        v.push(Gemm {
+            kind: GemmKind::OutProj,
+            m: s,
+            k: d,
+            n: d,
+            count: self.layers,
+            a_fmt: pair.a,
+            w_fmt: pair.w,
+        });
+        // FFN.
+        let up_count = if self.gated_ffn { 2 } else { 1 };
+        v.push(Gemm {
+            kind: GemmKind::FfnUp,
+            m: s,
+            k: d,
+            n: self.d_ff,
+            count: self.layers * up_count,
+            a_fmt: pair.a,
+            w_fmt: pair.w,
+        });
+        v.push(Gemm {
+            kind: GemmKind::FfnDown,
+            m: s,
+            k: self.d_ff,
+            n: d,
+            count: self.layers,
+            a_fmt: pair.a,
+            w_fmt: pair.w,
+        });
+        v
+    }
+
+    /// GEMMs of the attention block only (Fig 9's validation workload).
+    pub fn attention_gemms(&self, pair: PrecisionPair) -> Vec<Gemm> {
+        self.gemms(pair)
+            .into_iter()
+            .filter(|g| {
+                matches!(g.kind, GemmKind::QkvProj | GemmKind::AttnScore | GemmKind::AttnContext | GemmKind::OutProj)
+            })
+            .collect()
+    }
+
+    /// Total forward-pass MACs (sanity anchor: GPT-3 prefill ≈ 1e14 FLOPs/2).
+    pub fn total_macs(&self, pair: PrecisionPair) -> u64 {
+        self.gemms(pair).iter().map(|g| g.total_macs()).sum()
+    }
+
+    /// Total weight parameter count across GEMM weights.
+    pub fn weight_params(&self) -> u64 {
+        let pair = PrecisionPair::of_bits(16, 16);
+        self.gemms(pair)
+            .iter()
+            .filter(|g| !matches!(g.kind, GemmKind::AttnScore | GemmKind::AttnContext))
+            .map(|g| g.k as u64 * g.n as u64 * g.count as u64)
+            .sum()
+    }
+}
+
+/// Bert-base-uncased (Table 3 row 1).
+pub fn bert_base() -> ModelSpec {
+    ModelSpec {
+        name: "Bert-base",
+        seq: 2048,
+        layers: 12,
+        d_model: 768,
+        d_ff: 3072,
+        heads: 12,
+        gated_ffn: false,
+        kv_heads: 12,
+    }
+}
+
+/// Llama-2-7b (Table 3 row 2).
+pub fn llama2_7b() -> ModelSpec {
+    ModelSpec {
+        name: "Llama-2-7b",
+        seq: 2048,
+        layers: 32,
+        d_model: 4096,
+        d_ff: 11008,
+        heads: 32,
+        gated_ffn: true,
+        kv_heads: 32,
+    }
+}
+
+/// Llama-2-70b (Table 3 row 3; GQA with 8 KV heads).
+pub fn llama2_70b() -> ModelSpec {
+    ModelSpec {
+        name: "Llama-2-70b",
+        seq: 2048,
+        layers: 80,
+        d_model: 8192,
+        d_ff: 28672,
+        heads: 64,
+        gated_ffn: true,
+        kv_heads: 8,
+    }
+}
+
+/// GPT-3 175B (Table 3 row 4).
+pub fn gpt3() -> ModelSpec {
+    ModelSpec {
+        name: "GPT-3",
+        seq: 2048,
+        layers: 96,
+        d_model: 12288,
+        d_ff: 49152,
+        heads: 96,
+        gated_ffn: false,
+        kv_heads: 96,
+    }
+}
+
+/// The four evaluation models in paper order.
+pub fn all_models() -> Vec<ModelSpec> {
+    vec![bert_base(), llama2_7b(), llama2_70b(), gpt3()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_dimensions() {
+        let b = bert_base();
+        assert_eq!((b.layers, b.d_model, b.d_ff), (12, 768, 3072));
+        let l7 = llama2_7b();
+        assert_eq!((l7.layers, l7.d_model, l7.d_ff), (32, 4096, 11008));
+        let l70 = llama2_70b();
+        assert_eq!((l70.layers, l70.d_model, l70.d_ff), (80, 8192, 28672));
+        let g = gpt3();
+        assert_eq!((g.layers, g.d_model, g.d_ff), (96, 12288, 49152));
+    }
+
+    #[test]
+    fn param_counts_roughly_match_names() {
+        // GEMM weights dominate parameters; expect within ~15% of nameplate.
+        let l7 = llama2_7b().weight_params() as f64;
+        assert!((l7 / 6.5e9) > 0.9 && (l7 / 7.5e9) < 1.1, "llama7b params {l7:.3e}");
+        let l70 = llama2_70b().weight_params() as f64;
+        assert!(l70 > 6.0e10 && l70 < 7.5e10, "llama70b params {l70:.3e}");
+        let g3 = gpt3().weight_params() as f64;
+        assert!(g3 > 1.6e11 && g3 < 1.9e11, "gpt3 params {g3:.3e}");
+    }
+
+    #[test]
+    fn gpt3_prefill_flops_anchor() {
+        // Prefill GEMM FLOPs ≈ 2 · weight-params · seq (+ attention terms):
+        // the standard transformer cost identity the extractor must satisfy.
+        let m = gpt3();
+        let macs = m.total_macs(PrecisionPair::of_bits(16, 16)) as f64;
+        let weight_macs = m.weight_params() as f64 * m.seq as f64;
+        let ratio = macs / weight_macs;
+        assert!(
+            (1.0..=1.35).contains(&ratio),
+            "GPT-3 MACs {macs:.3e} vs weight-bound {weight_macs:.3e} (ratio {ratio:.2})"
+        );
+    }
+
+    #[test]
+    fn gemm_kinds_complete() {
+        let g = llama2_7b().gemms(PrecisionPair::of_bits(6, 16));
+        assert_eq!(g.len(), 6);
+        // Weight GEMMs carry the weight format, attention GEMMs don't.
+        for gm in &g {
+            match gm.kind {
+                GemmKind::AttnScore | GemmKind::AttnContext => {
+                    assert_eq!(gm.w_fmt.bits(), 16)
+                }
+                _ => assert_eq!(gm.w_fmt.bits(), 6),
+            }
+        }
+    }
+
+    #[test]
+    fn attention_subset() {
+        let a = bert_base().attention_gemms(PrecisionPair::of_bits(8, 8));
+        assert_eq!(a.len(), 4);
+        assert!(a.iter().all(|g| !matches!(g.kind, GemmKind::FfnUp | GemmKind::FfnDown)));
+    }
+
+    #[test]
+    fn gqa_shrinks_kv_projection() {
+        let l70 = llama2_70b();
+        let g = l70.gemms(PrecisionPair::of_bits(16, 16));
+        let qkv = g.iter().find(|g| g.kind == GemmKind::QkvProj).unwrap();
+        // 8 KV heads of 128 dims: N = 8192 + 2*8*128 = 10240.
+        assert_eq!(qkv.n, 10240);
+    }
+}

@@ -1,0 +1,170 @@
+//! Cross-module integration tests that need no artifacts: PE array vs
+//! golden GEMM, compiler/PE consistency, simulator invariants across the
+//! whole precision grid, and the paper's qualitative claims as assertions.
+
+use flexibit::arith::{decode, dot_exact, encode, Format};
+use flexibit::baselines::{
+    Accel, BitFusionAccel, BitModAccel, CambriconPAccel, FlexiBitAccel, TensorCoreAccel,
+};
+use flexibit::compiler;
+use flexibit::pe::{Pe, PeConfig};
+use flexibit::sim::{all_configs, cloud_b, simulate_model};
+use flexibit::util::{property, Rng};
+use flexibit::workload::{all_models, bert_base, PrecisionPair};
+
+/// A small GEMM through PE windows (outer-product tiles + accumulate) must
+/// equal the golden dequantize-matmul.
+#[test]
+fn pe_array_gemm_matches_golden() {
+    let a_fmt = Format::default_fp(6);
+    let w_fmt = Format::default_fp(5);
+    let (m, k, n) = (3usize, 8usize, 4usize);
+    let mut rng = Rng::new(17);
+    let acts: Vec<u32> = rng.codes(m * k, a_fmt.bits());
+    let wgts: Vec<u32> = rng.codes(k * n, w_fmt.bits());
+    let mut pe = Pe::new(PeConfig::default());
+    for i in 0..m {
+        for j in 0..n {
+            let a_row: Vec<u32> = (0..k).map(|kk| acts[i * k + kk]).collect();
+            let w_col: Vec<u32> = (0..k).map(|kk| wgts[kk * n + j]).collect();
+            let got = pe.dot(&a_row, a_fmt, &w_col, w_fmt);
+            let expect = dot_exact(&a_row, a_fmt, &w_col, w_fmt);
+            assert_eq!(got, expect, "element [{i},{j}]");
+        }
+    }
+}
+
+/// Property: for random formats and windows, every PE product matches the
+/// golden model (the RTL-verification stand-in, at integration level).
+#[test]
+fn pe_products_match_golden_randomized() {
+    property(2024, 60, |rng| {
+        let a_fmt = Format::fp(1 + rng.below(5) as u8, rng.below(8) as u8);
+        let w_fmt = Format::fp(1 + rng.below(5) as u8, rng.below(8) as u8);
+        let mut pe = Pe::new(PeConfig::default());
+        let n_a = pe.cfg.operands_per_window(a_fmt).max(1);
+        let n_w = pe.cfg.operands_per_window(w_fmt).max(1);
+        let acts = rng.codes(n_a, a_fmt.bits());
+        let wgts = rng.codes(n_w, w_fmt.bits());
+        let win = pe.multiply_window(&acts, a_fmt, &wgts, w_fmt);
+        for (oid, p) in win.products.iter().enumerate() {
+            let (wi, ai) = (oid / win.n_acts, oid % win.n_acts);
+            let golden = flexibit::arith::mul_exact(acts[ai], a_fmt, wgts[wi], w_fmt);
+            assert_eq!(p.value(), golden.value(), "{a_fmt}x{w_fmt}");
+        }
+    });
+}
+
+/// Property: encode/decode round-trips for random formats (golden model
+/// self-consistency over the full format space).
+#[test]
+fn encode_decode_roundtrip_randomized() {
+    property(5150, 200, |rng| {
+        let fmt = Format::fp(1 + rng.below(8) as u8, rng.below(11) as u8);
+        let code = rng.code(fmt.bits());
+        let v = decode(code, fmt);
+        if v != 0.0 {
+            assert_eq!(encode(v, fmt), code, "{fmt} code {code}");
+        }
+    });
+}
+
+/// The compiler's mults_per_cycle must equal what the PE actually produces
+/// for full windows, across the whole practical format grid.
+#[test]
+fn compiler_throughput_matches_pe_behavior() {
+    let cfg = PeConfig::default();
+    for e in 1..=5u8 {
+        for m in 0..=10u8 {
+            let fmt = Format::fp(e, m);
+            if fmt.bits() > 24 {
+                continue;
+            }
+            let bundle = compiler::compile(&cfg, fmt, fmt);
+            let mut pe = Pe::new(cfg);
+            let n = cfg.operands_per_window(fmt).max(1);
+            let mut rng = Rng::new((e as u64) << 8 | m as u64);
+            let acts = rng.codes(n, fmt.bits());
+            let wgts = rng.codes(n, fmt.bits());
+            let win = pe.multiply_window(&acts, fmt, &wgts, fmt);
+            // The compiler's per-cycle promise never exceeds what a full
+            // register window supplies (a window may take several cycles
+            // when a narrower resource — e.g. FBEA lanes — binds).
+            assert!(
+                bundle.mults_per_cycle <= win.products.len().max(1),
+                "e{e}m{m}: compiler promised {} but window holds {}",
+                bundle.mults_per_cycle,
+                win.products.len()
+            );
+        }
+    }
+}
+
+/// Simulator sanity across the whole campaign grid: positive latencies,
+/// energies, and the monotonicity the paper's story depends on.
+#[test]
+fn campaign_grid_invariants() {
+    let fb = FlexiBitAccel::new();
+    let tc = TensorCoreAccel::new();
+    let bf = BitFusionAccel::new();
+    let pairs: Vec<PrecisionPair> = [(16, 16), (8, 8), (6, 16), (6, 6), (4, 4)]
+        .into_iter()
+        .map(|(w, a)| PrecisionPair::of_bits(w, a))
+        .collect();
+    for cfg in all_configs() {
+        for model in all_models() {
+            for &pair in &pairs {
+                let r_fb = simulate_model(&fb, &cfg, &model, pair);
+                let r_tc = simulate_model(&tc, &cfg, &model, pair);
+                let r_bf = simulate_model(&bf, &cfg, &model, pair);
+                for r in [&r_fb, &r_tc, &r_bf] {
+                    assert!(r.seconds > 0.0 && r.seconds.is_finite());
+                    assert!(r.energy_j > 0.0 && r.energy_j.is_finite());
+                }
+                // FlexiBit is never slower than the padding baselines
+                // (equal-or-better by construction of zero padding waste).
+                assert!(
+                    r_fb.seconds <= r_tc.seconds * 1.0001,
+                    "{} {} {}: FB {} > TC {}",
+                    cfg.name,
+                    model.name,
+                    pair.label(),
+                    r_fb.seconds,
+                    r_tc.seconds
+                );
+                assert!(r_fb.seconds <= r_bf.seconds * 1.0001);
+            }
+        }
+    }
+}
+
+/// The §5.3.3 ordering: bit-serial architectures trade latency for power.
+#[test]
+fn bit_serial_tradeoff_ordering() {
+    let fb = FlexiBitAccel::new();
+    let cp = CambriconPAccel::new();
+    let bm = BitModAccel::new();
+    let cfg = cloud_b();
+    let pair = PrecisionPair::of_bits(6, 16);
+    let model = bert_base();
+    let r_fb = simulate_model(&fb, &cfg, &model, pair);
+    let r_cp = simulate_model(&cp, &cfg, &model, pair);
+    let r_bm = simulate_model(&bm, &cfg, &model, pair);
+    // Latency: FlexiBit < BitMoD < Cambricon-P.
+    assert!(r_fb.seconds < r_bm.seconds && r_bm.seconds < r_cp.seconds);
+    // Energy: bit-serial lower.
+    assert!(r_cp.energy_j < r_fb.energy_j);
+    assert!(r_bm.energy_j < r_fb.energy_j);
+    // EDP: FlexiBit best (the paper's conclusion).
+    assert!(r_fb.edp() < r_bm.edp() && r_fb.edp() < r_cp.edp());
+}
+
+/// Reconfiguration cost stays under the paper's < 100-cycle claim for all
+/// practical register widths.
+#[test]
+fn reconfiguration_cost_bound() {
+    for rw in [16, 20, 24, 28, 32] {
+        let cfg = PeConfig::with_reg_width(rw);
+        assert!(compiler::reconfiguration_cycles(&cfg) < 100, "reg_width {rw}");
+    }
+}

@@ -1,0 +1,124 @@
+//! End-to-end integration: AOT artifacts → PJRT runtime → numerics.
+//!
+//! These tests require `make artifacts` to have run; they skip (pass
+//! trivially with a notice) when the artifacts directory is absent so
+//! `cargo test` works in a fresh checkout.
+
+use flexibit::runtime::{artifacts_dir, load_block_weights, InputBuf, Runtime};
+use std::path::PathBuf;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn json_f32_array(text: &str, key: &str) -> Vec<f32> {
+    let pat = format!("\"{key}\":");
+    let start = text.find(&pat).unwrap() + pat.len();
+    let rest = &text[start..];
+    let lb = rest.find('[').unwrap();
+    let rb = rest[lb..].find(']').unwrap() + lb;
+    rest[lb + 1..rb].split(',').filter_map(|s| s.trim().parse::<f32>().ok()).collect()
+}
+
+#[test]
+fn loads_all_artifacts() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new().expect("PJRT CPU client");
+    let loaded = rt.load_artifacts_dir(&dir).expect("load artifacts");
+    // 4 block + 4 gemm + the model.hlo.txt alias.
+    assert!(loaded.len() >= 8, "expected >= 8 artifacts, got {loaded:?}");
+    for b in [4, 5, 6, 8] {
+        assert!(rt.has_model(&format!("block_w{b}")));
+        assert!(rt.has_model(&format!("gemm_w{b}")));
+    }
+}
+
+#[test]
+fn block_artifacts_match_python_golden_output() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new().unwrap();
+    rt.load_artifacts_dir(&dir).unwrap();
+    for bits in [4u32, 5, 6, 8] {
+        let name = format!("block_w{bits}");
+        let io = std::fs::read_to_string(dir.join(format!("{name}.io.json"))).unwrap();
+        let input = json_f32_array(&io, "input");
+        let expect = json_f32_array(&io, "output");
+        let weights = load_block_weights(&dir.join(format!("{name}.weights.json"))).unwrap();
+        let mut inputs = vec![InputBuf::F32(&input, vec![32, 128])];
+        for (words, shape) in &weights {
+            inputs.push(InputBuf::U32(words, shape.clone()));
+        }
+        let out = rt.execute_mixed(&name, &inputs).unwrap();
+        assert_eq!(out[0].len(), expect.len(), "{name} output length");
+        let max_err = out[0]
+            .iter()
+            .zip(&expect)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err < 1e-4, "{name}: PJRT vs Python eager max err {max_err}");
+    }
+}
+
+#[test]
+fn gemm_artifact_with_runtime_weights_matches_rust_golden_model() {
+    // The full three-layer consistency check: quantize weights in Rust
+    // (arith golden model), pack them with the same per-column layout the
+    // Python quantizer uses, run the AOT Pallas GEMM through PJRT, and
+    // compare against the Rust golden dequantize-matmul.
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new().unwrap();
+    rt.load_artifacts_dir(&dir).unwrap();
+
+    use flexibit::arith::{decode, encode, Format};
+    let (m, k, n) = (32usize, 128usize, 128usize);
+    for bits in [4u32, 5, 6, 8] {
+        let fmt = Format::default_fp(bits);
+        let mut rng = flexibit::util::Rng::new(99 + bits as u64);
+        // Random weights, quantized via the Rust golden encode.
+        let w_f: Vec<f64> = (0..k * n).map(|_| rng.gauss() * 0.3).collect();
+        let codes: Vec<u32> = w_f.iter().map(|&v| encode(v, fmt)).collect();
+        // Per-column bit packing (quant.pack_columns layout).
+        let wpc = (k * bits as usize).div_ceil(32);
+        let mut words = vec![0u32; n * wpc];
+        for col in 0..n {
+            for ki in 0..k {
+                let code = codes[ki * n + col] as u64;
+                let bit = ki * bits as usize;
+                let (wi, off) = (bit / 32, bit % 32);
+                words[col * wpc + wi] |= (code << off) as u32;
+                if off + bits as usize > 32 {
+                    words[col * wpc + wi + 1] |= (code >> (32 - off)) as u32;
+                }
+            }
+        }
+        let acts: Vec<f32> = (0..m * k).map(|_| rng.gauss() as f32 * 0.5).collect();
+
+        // PJRT execution with runtime-supplied packed weights.
+        let name = format!("gemm_w{bits}");
+        let out = rt
+            .execute_u32_weights(&name, &acts, &[m, k], &words, &[n, wpc])
+            .expect("gemm artifact executes");
+
+        // Rust golden: dequantize + matmul in f64.
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for ki in 0..k {
+                    acc += acts[i * k + ki] as f64 * decode(codes[ki * n + j], fmt);
+                }
+                let got = out[i * n + j] as f64;
+                let tol = 1e-3 * (1.0 + acc.abs());
+                assert!(
+                    (got - acc).abs() < tol,
+                    "w{bits} [{i},{j}]: pjrt {got} vs golden {acc}"
+                );
+            }
+        }
+    }
+}

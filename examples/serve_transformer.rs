@@ -1,173 +1,117 @@
-//! End-to-end driver: serve a real (tiny) FlexiBit-quantized transformer
-//! through all three layers.
+//! End-to-end driver: serve a (tiny) FlexiBit-quantized transformer through
+//! the native bit-packed GEMM engine — no Python, no PJRT, no artifacts.
 //!
-//! * L1/L2 (build time): `make artifacts` quantized the block's weights to
-//!   FP4/5/6/8, bit-packed them, and AOT-lowered the Pallas-kernel forward
-//!   to HLO text.
-//! * L3 (this binary): loads the artifacts on the PJRT CPU client, checks
-//!   numerics against the Python-side golden I/O pair, then runs the
-//!   serving coordinator — request queue, precision-aware dynamic batcher,
-//!   PJRT executor — over a synthetic mixed-precision request stream and
-//!   reports latency/throughput plus the co-simulated FlexiBit accelerator
-//!   estimates.
+//! * Numerics first: for every precision pair in the request mix, the native
+//!   kernel is checked **bit-for-bit** against the `arith::golden` reference
+//!   GEMM on random packed tensors (the software analog of the paper's RTL
+//!   verification, at GEMM granularity).
+//! * Then serving: the coordinator — request queue, precision-aware dynamic
+//!   batcher, `NativeExecutor` — drains a synthetic mixed-precision request
+//!   stream (including non-power-of-two FP6xFP6 and FP5) and reports
+//!   latency/throughput plus the co-simulated FlexiBit accelerator
+//!   estimates. Packed weights are cached per (model, weight format), so
+//!   each precision configuration quantizes exactly once.
 //!
-//! Requires `make artifacts` first. Results are recorded in EXPERIMENTS.md.
+//! The AOT/PJRT path this example used to exercise remains available behind
+//! `--features pjrt` (see `rust/src/runtime/`); it is no longer required.
 //!
 //! Run: `cargo run --release --example serve_transformer`
 
+use flexibit::arith::{gemm_ref, Format};
 use flexibit::coordinator::{BatchPolicy, Request, Server, ServerConfig};
-use flexibit::runtime::{artifacts_dir, load_block_weights, InputBuf, Runtime};
+use flexibit::kernels::{gemm_default, NativeExecutor, PackedMatrix};
+use flexibit::util::Rng;
 use flexibit::workload::{ModelSpec, PrecisionPair};
-use std::cell::OnceCell;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-/// Minimal JSON number-array extraction (no serde in the offline build):
-/// pulls the flat numeric array following `"<key>": [`.
-fn json_f32_array(text: &str, key: &str) -> Vec<f32> {
-    let pat = format!("\"{key}\":");
-    let start = text.find(&pat).expect("key present") + pat.len();
-    let rest = &text[start..];
-    let lb = rest.find('[').unwrap();
-    let rb = rest[lb..].find(']').unwrap() + lb;
-    rest[lb + 1..rb]
-        .split(',')
-        .filter_map(|s| s.trim().parse::<f32>().ok())
-        .collect()
+/// The request mix: FP6xFP6 (the paper's headline non-power-of-two point),
+/// FP5, FP4xFP8, and a GPTQ-style INT4 x FP16.
+fn precision_mix() -> Vec<PrecisionPair> {
+    vec![
+        PrecisionPair::of_bits(6, 6),
+        PrecisionPair::of_bits(5, 6),
+        PrecisionPair::of_bits(4, 8),
+        PrecisionPair::new(Format::int(4), Format::default_fp(16)),
+    ]
 }
 
-fn tiny_model_spec() -> ModelSpec {
-    // Matches aot.py's BlockConfig defaults (seq 32, d_model 128, d_ff 256).
-    ModelSpec {
-        name: "tiny-block",
-        seq: 32,
-        layers: 1,
-        d_model: 128,
-        d_ff: 256,
-        heads: 4,
-        gated_ffn: false,
-        kv_heads: 4,
+fn main() {
+    // --- 1. Golden equivalence of the native kernel ----------------------
+    let mut rng = Rng::new(7);
+    let (m, k, n) = (16usize, 96usize, 48usize);
+    for pair in precision_mix() {
+        let a_codes = rng.codes(m * k, pair.a.bits());
+        let w_codes = rng.codes(k * n, pair.w.bits());
+        let a = PackedMatrix::from_codes(&a_codes, m, k, pair.a);
+        let w = PackedMatrix::from_codes(&w_codes, k, n, pair.w);
+        let got = gemm_default(&a, &w);
+        let want = gemm_ref(&a_codes, pair.a, &w_codes, pair.w, m, k, n);
+        assert_eq!(got, want, "native kernel diverged from golden at {}", pair.label());
+        println!(
+            "  {} native GEMM {}x{}x{} == golden reference (bit-exact); packed W {}B vs padded {}B",
+            pair.label(),
+            m,
+            k,
+            n,
+            w.bytes(),
+            w.padded_bytes()
+        );
     }
-}
-
-fn main() -> anyhow::Result<()> {
-    let dir = artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts not found in {} — run `make artifacts` first", dir.display());
-        std::process::exit(1);
-    }
-
-    // --- 1. Load + verify numerics against the Python golden output ------
-    let mut rt = Runtime::new()?;
-    let loaded = rt.load_artifacts_dir(&dir)?;
-    println!("PJRT platform: {}; loaded artifacts: {loaded:?}", rt.platform());
-
-    let mut max_err_all = 0f32;
-    for bits in [4u32, 5, 6, 8] {
-        let name = format!("block_w{bits}");
-        let io = std::fs::read_to_string(dir.join(format!("{name}.io.json")))?;
-        let input = json_f32_array(&io, "input");
-        let expect = json_f32_array(&io, "output");
-        let weights = load_block_weights(&dir.join(format!("{name}.weights.json")))?;
-        let mut inputs = vec![InputBuf::F32(&input, vec![32, 128])];
-        for (words, shape) in &weights {
-            inputs.push(InputBuf::U32(words, shape.clone()));
-        }
-        let out = rt.execute_mixed(&name, &inputs)?;
-        let got = &out[0];
-        assert_eq!(got.len(), expect.len());
-        let max_err = got
-            .iter()
-            .zip(&expect)
-            .map(|(a, b)| (a - b).abs())
-            .fold(0f32, f32::max);
-        max_err_all = max_err_all.max(max_err);
-        println!("  {name}: PJRT output vs Python eager max |err| = {max_err:.2e}");
-        assert!(max_err < 1e-4, "numerics mismatch on {name}");
-    }
-    println!("numerics verified across all weight precisions (max err {max_err_all:.2e})\n");
+    println!("numerics verified across all served precision pairs\n");
 
     // --- 2. Serve a mixed-precision request stream ------------------------
+    let spec = ModelSpec::tiny();
+    let executor = NativeExecutor::new().with_model(spec.clone(), 0xF1E81B);
     let cfg = ServerConfig {
         policy: BatchPolicy::default(),
         sim_config: flexibit::sim::mobile_a(),
-        sim_model: tiny_model_spec(),
+        sim_model: spec.clone(),
     };
-    // PJRT client is not Send: build it lazily inside the worker thread.
-    let adir = dir.clone();
-    let executor = Box::new(move |batch: &flexibit::coordinator::Batch| {
-        type Cache = (Runtime, std::collections::HashMap<u32, Vec<(Vec<u32>, Vec<usize>)>>);
-        thread_local! {
-            static RT: OnceCell<Cache> = const { OnceCell::new() };
-        }
-        RT.with(|cell| {
-            let (rt, weights) = match cell.get() {
-                Some(c) => c,
-                None => {
-                    let mut r = Runtime::new().expect("pjrt client");
-                    r.load_artifacts_dir(&adir).expect("artifacts");
-                    let mut w = std::collections::HashMap::new();
-                    for bits in [4u32, 5, 6, 8] {
-                        let path = adir.join(format!("block_w{bits}.weights.json"));
-                        w.insert(bits, load_block_weights(&path).expect("weights"));
-                    }
-                    let _ = cell.set((r, w));
-                    cell.get().unwrap()
-                }
-            };
-            let t0 = Instant::now();
-            let bits = batch.pair.w.bits();
-            let model = format!("block_w{bits}");
-            let wts = &weights[&bits];
-            for req in &batch.requests {
-                let mut inputs = vec![InputBuf::F32(&req.input, req.dims.clone())];
-                for (words, shape) in wts {
-                    inputs.push(InputBuf::U32(words, shape.clone()));
-                }
-                rt.execute_mixed(&model, &inputs)?;
-            }
-            Ok(t0.elapsed().as_secs_f64())
-        })
-    });
+    let server = Server::start(cfg, Box::new(executor));
 
-    let server = Server::start(cfg, executor);
-    let n_requests = 64;
+    let n_requests = 64u64;
+    let pairs = precision_mix();
     let t0 = Instant::now();
-    let mut rng = flexibit::util::Rng::new(7);
     for i in 0..n_requests {
-        let bits = [4u32, 5, 6, 8][(i % 4) as usize];
-        let input: Vec<f32> = (0..32 * 128).map(|_| rng.gauss() as f32 * 0.5).collect();
+        let pair = pairs[(i % pairs.len() as u64) as usize];
+        let input: Vec<f32> =
+            (0..spec.seq * spec.d_model).map(|_| rng.gauss() as f32 * 0.5).collect();
         server.submit(Request {
             id: i,
-            model: "tiny-block".into(),
-            pair: PrecisionPair::of_bits(bits, 16),
+            model: spec.name.to_string(),
+            pair,
             input,
-            dims: vec![32, 128],
+            dims: vec![spec.seq, spec.d_model],
             arrived: Instant::now(),
         });
     }
     // Drain.
-    let deadline = Instant::now() + std::time::Duration::from_secs(120);
-    loop {
-        let m = server.metrics();
-        if m.requests_completed >= n_requests || Instant::now() > deadline {
-            break;
-        }
-        std::thread::sleep(std::time::Duration::from_millis(10));
-    }
+    let drained = server.await_completed(n_requests, Duration::from_secs(120));
     let wall = t0.elapsed().as_secs_f64();
     let m = server.shutdown();
+    assert!(drained, "drain timed out: {}/{n_requests} completed", m.requests_completed);
 
-    println!("== serving results ({n_requests} mixed-precision requests) ==");
-    println!("  completed:        {}", m.requests_completed);
-    println!("  batches:          {} (mean size {:.1})", m.batches_executed, m.mean_batch_size());
+    println!("== native serving results ({n_requests} mixed-precision requests) ==");
+    println!("  completed:          {}", m.requests_completed);
+    println!(
+        "  batches:            {} (mean size {:.1})",
+        m.batches_executed,
+        m.mean_batch_size()
+    );
     println!("  precision switches: {}", m.reconfigurations);
-    println!("  wall time:        {wall:.2}s  ({:.1} req/s)", m.throughput_rps(wall));
-    println!("  mean latency:     {:.1} ms (max {:.1} ms)", m.mean_latency_s() * 1e3, m.latency_max_s * 1e3);
-    println!("  host PJRT time:   {:.2}s", m.host_exec_s);
+    println!("  wall time:          {wall:.2}s  ({:.1} req/s)", m.throughput_rps(wall));
+    println!(
+        "  mean latency:       {:.1} ms (max {:.1} ms)",
+        m.mean_latency_s() * 1e3,
+        m.latency_max_s * 1e3
+    );
+    println!("  host exec time:     {:.2}s", m.host_exec_s);
     println!("== co-simulated FlexiBit accelerator (Mobile-A) ==");
-    println!("  simulated latency: {:.3} ms/batch avg", m.sim_accel_s / m.batches_executed.max(1) as f64 * 1e3);
-    println!("  simulated energy:  {:.3} mJ total", m.sim_energy_j * 1e3);
+    println!(
+        "  simulated latency:  {:.3} ms/batch avg",
+        m.sim_accel_s / m.batches_executed.max(1) as f64 * 1e3
+    );
+    println!("  simulated energy:   {:.3} mJ total", m.sim_energy_j * 1e3);
     assert_eq!(m.requests_completed, n_requests, "all requests must complete");
-    println!("\nserve_transformer OK — three layers composed end-to-end");
-    Ok(())
+    println!("\nserve_transformer OK — any-precision serving with zero PJRT artifacts");
 }

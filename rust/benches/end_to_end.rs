@@ -1,6 +1,7 @@
-//! End-to-end benchmarks: the PJRT serving hot path (requires
-//! `make artifacts`; prints a notice and exits cleanly otherwise) and the
-//! figure-regeneration pipeline.
+//! End-to-end benchmarks: the PJRT serving hot path. Only builds with
+//! `--features pjrt` (requires the `xla` crate and `make artifacts`;
+//! prints a notice and exits cleanly when artifacts are absent). The
+//! artifact-free native path is benchmarked in `native_gemm.rs`.
 
 mod bench_util;
 

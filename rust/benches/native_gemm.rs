@@ -1,0 +1,89 @@
+//! Native bit-packed GEMM engine benchmarks: kernel throughput across
+//! precision pairs, and serving throughput of the native executor vs a
+//! no-op stub (isolating execution cost from coordinator overhead).
+//! Uses the in-repo harness — criterion is unavailable in the offline build.
+
+mod bench_util;
+
+use bench_util::{black_box, Bench};
+use flexibit::coordinator::{Batch, BatchPolicy, Executor, FnExecutor, Request, Server, ServerConfig};
+use flexibit::kernels::{gemm, GemmConfig, NativeExecutor, PackedMatrix};
+use flexibit::util::Rng;
+use flexibit::workload::{ModelSpec, PrecisionPair};
+use std::time::{Duration, Instant};
+
+fn main() {
+    println!("== native_gemm ==");
+    let mut rng = Rng::new(13);
+
+    // Kernel throughput across the evaluation's precision pairs.
+    let (m, k, n) = (64usize, 512usize, 512usize);
+    let pairs: Vec<(u32, u32)> = vec![(4, 8), (5, 6), (6, 6), (8, 8), (16, 16)];
+    for (wb, ab) in pairs {
+        let pair = PrecisionPair::of_bits(wb, ab);
+        let a = PackedMatrix::from_codes(&rng.codes(m * k, pair.a.bits()), m, k, pair.a);
+        let w = PackedMatrix::from_codes(&rng.codes(k * n, pair.w.bits()), k, n, pair.w);
+        let cfg = GemmConfig::default();
+        let b = Bench::run(&format!("native GEMM {m}x{k}x{n} {}", pair.label()), 2, 15, || {
+            black_box(gemm(&a, &w, &cfg).len());
+        });
+        b.report(2.0 * (m * k * n) as f64, "FLOP");
+    }
+
+    // Single-threaded vs multi-threaded kernel.
+    let pair = PrecisionPair::of_bits(6, 6);
+    let a = PackedMatrix::from_codes(&rng.codes(m * k, pair.a.bits()), m, k, pair.a);
+    let w = PackedMatrix::from_codes(&rng.codes(k * n, pair.w.bits()), k, n, pair.w);
+    for threads in [1usize, 0] {
+        let cfg = GemmConfig { threads, ..Default::default() };
+        let label = if threads == 1 { "1 thread" } else { "all cores" };
+        let b = Bench::run(&format!("native GEMM {m}x{k}x{n} [6,6] {label}"), 2, 15, || {
+            black_box(gemm(&a, &w, &cfg).len());
+        });
+        b.report(2.0 * (m * k * n) as f64, "FLOP");
+    }
+
+    // Serving throughput: native executor vs no-op stub, identical streams.
+    let spec = ModelSpec::tiny();
+    let native = Box::new(NativeExecutor::new().with_model(spec.clone(), 3));
+    let native_rps = serve_throughput(&spec, native);
+    let stub = Box::new(FnExecutor(|_b: &Batch| -> Result<f64, String> { Ok(0.0) }));
+    let stub_rps = serve_throughput(&spec, stub);
+    println!(
+        "serving throughput (64 req, tiny-block): native {native_rps:.1} req/s, \
+         stub {stub_rps:.1} req/s -> executor share {:.0}%",
+        100.0 * (1.0 - native_rps / stub_rps)
+    );
+}
+
+/// Drain 64 mixed-precision requests through a server; return requests/s.
+fn serve_throughput(spec: &ModelSpec, executor: Box<dyn Executor>) -> f64 {
+    let cfg = ServerConfig {
+        policy: BatchPolicy::default(),
+        sim_config: flexibit::sim::mobile_a(),
+        sim_model: spec.clone(),
+    };
+    let server = Server::start(cfg, executor);
+    let n_requests = 64u64;
+    let mut rng = Rng::new(17);
+    let t0 = Instant::now();
+    for i in 0..n_requests {
+        let bits = [4u32, 5, 6, 8][(i % 4) as usize];
+        let input: Vec<f32> =
+            (0..spec.seq * spec.d_model).map(|_| rng.gauss() as f32 * 0.5).collect();
+        server.submit(Request {
+            id: i,
+            model: spec.name.to_string(),
+            pair: PrecisionPair::of_bits(bits, 16),
+            input,
+            dims: vec![spec.seq, spec.d_model],
+            arrived: Instant::now(),
+        });
+    }
+    let drained = server.await_completed(n_requests, Duration::from_secs(120));
+    let wall = t0.elapsed().as_secs_f64();
+    let m = server.shutdown();
+    assert!(drained, "bench drain timed out");
+    assert_eq!(m.requests_completed, n_requests);
+    m.throughput_rps(wall)
+}

@@ -135,16 +135,21 @@ impl Format {
     }
 
     /// Parse strings like `"e3m2"`, `"fp8"`, `"fp6"`, `"int4"`, `"fp16"`.
+    /// Out-of-range widths return `None` rather than tripping the
+    /// constructors' asserts — parse feeds CLI input, which must not panic.
     pub fn parse(s: &str) -> Option<Format> {
         let s = s.to_ascii_lowercase();
         if let Some(rest) = s.strip_prefix("int") {
-            return rest.parse::<u8>().ok().map(Format::int);
+            return rest.parse::<u8>().ok().filter(|b| (2..=32).contains(b)).map(Format::int);
         }
         if s.starts_with('e') {
             let parts: Vec<&str> = s[1..].split('m').collect();
             if parts.len() == 2 {
                 let e = parts[0].parse::<u8>().ok()?;
                 let m = parts[1].parse::<u8>().ok()?;
+                if !(1..=8).contains(&e) || m > 10 {
+                    return None;
+                }
                 return Some(Format::fp(e, m));
             }
         }
@@ -230,6 +235,10 @@ mod tests {
         }
         assert_eq!(Format::parse("fp16"), Some(Format::Fp(FpFormat::FP16)));
         assert_eq!(Format::parse("bogus"), None);
+        // Out-of-range widths reject instead of panicking (CLI input path).
+        for bad in ["int1", "int64", "e9m2", "e0m3", "e2m11"] {
+            assert_eq!(Format::parse(bad), None, "{bad}");
+        }
     }
 
     #[test]

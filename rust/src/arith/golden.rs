@@ -137,6 +137,43 @@ pub fn dot_exact(a: &[u32], a_fmt: Format, w: &[u32], w_fmt: Format) -> f64 {
     add_fixed_point(&products)
 }
 
+/// Naive reference GEMM over packed codes: `C[M,N] = A[M,K] x W[K,N]`,
+/// dequantizing each code with [`decode`] and multiply-accumulating in f32,
+/// ascending k. This is the equivalence oracle for the native bit-packed
+/// kernel ([`crate::kernels::gemm`]), which must match it **bit-for-bit**:
+/// both perform the identical sequence `acc += a_f32 * w_f32` per output
+/// element (IEEE f32, no FMA, no reassociation), so tiling and threading in
+/// the kernel cannot change a single ULP.
+///
+/// For exactness against the integer golden model, compare per-element with
+/// [`dot_exact`] under an f32 accumulation tolerance — `gemm_ref` defines
+/// the kernel's contract, `dot_exact` bounds its numerical error.
+pub fn gemm_ref(
+    a: &[u32],
+    a_fmt: Format,
+    w: &[u32],
+    w_fmt: Format,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "A codes must be m*k");
+    assert_eq!(w.len(), k * n, "W codes must be k*n");
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f32;
+            for kk in 0..k {
+                let av = decode(a[i * k + kk], a_fmt) as f32;
+                let wv = decode(w[kk * n + j], w_fmt) as f32;
+                acc += av * wv;
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -234,5 +271,39 @@ mod tests {
     fn empty_dot_is_zero() {
         let fmt = Format::Fp(FpFormat::FP6_E3M2);
         assert_eq!(dot_exact(&[], fmt, &[], fmt), 0.0);
+    }
+
+    #[test]
+    fn gemm_ref_tracks_exact_dot() {
+        // gemm_ref accumulates in f32; each element must stay within an
+        // f32-roundoff bound of the exact integer-model dot product.
+        let mut rng = crate::util::Rng::new(77);
+        let a_fmt = Format::Fp(FpFormat::FP6_E3M2);
+        let w_fmt = Format::Fp(FpFormat::FP5_E2M2);
+        let (m, k, n) = (4usize, 24usize, 5usize);
+        let a = rng.codes(m * k, a_fmt.bits());
+        let w = rng.codes(k * n, w_fmt.bits());
+        let c = gemm_ref(&a, a_fmt, &w, w_fmt, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let a_row: Vec<u32> = (0..k).map(|kk| a[i * k + kk]).collect();
+                let w_col: Vec<u32> = (0..k).map(|kk| w[kk * n + j]).collect();
+                let exact = dot_exact(&a_row, a_fmt, &w_col, w_fmt);
+                let got = c[i * n + j] as f64;
+                // Bound: k rounding steps of f32 epsilon on the running
+                // magnitude (coarse but sufficient for these small formats).
+                let scale: f64 = a_row
+                    .iter()
+                    .zip(&w_col)
+                    .map(|(&ab, &wb)| (decode(ab, a_fmt) * decode(wb, w_fmt)).abs())
+                    .sum::<f64>()
+                    .max(1.0);
+                let tol = scale * k as f64 * f32::EPSILON as f64;
+                assert!(
+                    (got - exact).abs() <= tol,
+                    "[{i},{j}] f32 gemm {got} vs exact {exact} (tol {tol})"
+                );
+            }
+        }
     }
 }

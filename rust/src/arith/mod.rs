@@ -21,6 +21,6 @@ mod tensor;
 
 pub use format::{Format, FpFormat, IntFormat};
 pub use value::{decode, encode, decode_fields, FpFields};
-pub use golden::{mul_exact, add_fixed_point, dot_exact, ExactProduct};
+pub use golden::{mul_exact, add_fixed_point, dot_exact, gemm_ref, ExactProduct};
 pub use mx::{MxBlock, mx_dot};
 pub use tensor::PackedTensor;

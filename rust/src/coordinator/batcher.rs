@@ -51,6 +51,10 @@ impl Default for BatchPolicy {
     }
 }
 
+/// A batch-formation key: (model, precision configuration). Owned once per
+/// emitted batch; all queue scans compare against it allocation-free.
+type BatchKey = (String, PrecisionPair);
+
 /// Precision-aware dynamic batcher.
 #[derive(Debug)]
 pub struct Batcher {
@@ -58,7 +62,7 @@ pub struct Batcher {
     queue: VecDeque<Request>,
     /// Consecutive batches emitted with the current key.
     streak: usize,
-    last_key: Option<(String, String)>,
+    last_key: Option<BatchKey>,
     /// Total reconfigurations (precision switches) emitted.
     pub reconfigurations: u64,
 }
@@ -76,8 +80,11 @@ impl Batcher {
         self.queue.len()
     }
 
-    fn key_of(r: &Request) -> (String, String) {
-        (r.model.clone(), r.pair.label())
+    /// Allocation-free key comparison — `next_batch` scans the queue O(n)
+    /// per call, so per-request `String` clones here would dominate batch
+    /// formation at depth.
+    fn matches(r: &Request, key: &BatchKey) -> bool {
+        r.model == key.0 && r.pair == key.1
     }
 
     /// Try to form a batch now. Returns `None` when the queue is empty or
@@ -88,19 +95,19 @@ impl Batcher {
 
         // Choose the key: stick with the last key while its streak lasts and
         // matching requests exist (avoids reconfiguration); otherwise the
-        // head's key.
-        let head_key = Self::key_of(head);
-        let key = match &self.last_key {
+        // head's key. One key is materialized per call; every queue scan
+        // below compares borrowed fields.
+        let key: BatchKey = match &self.last_key {
             Some(k)
                 if self.streak < self.policy.max_streak
-                    && self.queue.iter().any(|r| Self::key_of(r) == *k) =>
+                    && self.queue.iter().any(|r| Self::matches(r, k)) =>
             {
                 k.clone()
             }
-            _ => head_key,
+            _ => (head.model.clone(), head.pair),
         };
 
-        let matching = self.queue.iter().filter(|r| Self::key_of(r) == key).count();
+        let matching = self.queue.iter().filter(|r| Self::matches(r, &key)).count();
         if matching < self.policy.max_batch && head_waited < self.policy.max_wait {
             return None; // keep accumulating
         }
@@ -109,7 +116,7 @@ impl Batcher {
         let mut taken = Vec::new();
         let mut rest = VecDeque::new();
         while let Some(r) = self.queue.pop_front() {
-            if taken.len() < self.policy.max_batch && Self::key_of(&r) == key {
+            if taken.len() < self.policy.max_batch && Self::matches(&r, &key) {
                 taken.push(r);
             } else {
                 rest.push_back(r);

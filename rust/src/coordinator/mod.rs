@@ -12,4 +12,4 @@ mod batcher;
 mod server;
 
 pub use batcher::{Batch, BatchPolicy, Batcher, Request};
-pub use server::{Metrics, Server, ServerConfig};
+pub use server::{Executor, FnExecutor, Metrics, Server, ServerConfig};

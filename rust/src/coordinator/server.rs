@@ -62,8 +62,37 @@ pub struct ServerConfig {
     pub sim_model: ModelSpec,
 }
 
-/// The executor a worker invokes per batch: returns host execution seconds.
-pub type Executor = dyn Fn(&Batch) -> anyhow::Result<f64> + Send;
+/// The execution backend a worker invokes per batch. Implementations:
+/// [`crate::kernels::NativeExecutor`] (native bit-packed GEMMs, default) and
+/// the PJRT artifact path (wrapped in an [`FnExecutor`], `--features pjrt`).
+/// Returns host execution seconds for the whole batch.
+pub trait Executor: Send {
+    fn execute(&mut self, batch: &Batch) -> Result<f64, String>;
+
+    /// Short backend name for logs/metrics.
+    fn name(&self) -> &str {
+        "executor"
+    }
+}
+
+/// Adapter for closure-based executors (tests, stubs, the PJRT path whose
+/// client must be constructed lazily inside the worker thread). A blanket
+/// `impl Executor for F: FnMut` would collide with concrete executor impls
+/// under coherence rules, hence the explicit wrapper.
+pub struct FnExecutor<F>(pub F);
+
+impl<F> Executor for FnExecutor<F>
+where
+    F: FnMut(&Batch) -> Result<f64, String> + Send,
+{
+    fn execute(&mut self, batch: &Batch) -> Result<f64, String> {
+        (self.0)(batch)
+    }
+
+    fn name(&self) -> &str {
+        "fn"
+    }
+}
 
 /// A single-worker serving loop (the accelerator is one device; batching,
 /// not worker parallelism, is the throughput lever).
@@ -76,7 +105,7 @@ pub struct Server {
 
 impl Server {
     /// Start the worker with the given executor.
-    pub fn start(cfg: ServerConfig, executor: Box<Executor>) -> Self {
+    pub fn start(cfg: ServerConfig, executor: Box<dyn Executor>) -> Self {
         let batcher = Arc::new(Mutex::new(Batcher::new(cfg.policy)));
         let metrics = Arc::new(Mutex::new(Metrics::default()));
         let stop = Arc::new(AtomicBool::new(false));
@@ -85,13 +114,17 @@ impl Server {
         let m = metrics.clone();
         let s = stop.clone();
         let accel = FlexiBitAccel::new();
+        let mut executor = executor;
         let worker = std::thread::spawn(move || {
             while !s.load(Ordering::Relaxed) {
                 let maybe = { b.lock().unwrap().next_batch(Instant::now()) };
                 match maybe {
                     Some(batch) => {
                         let t0 = Instant::now();
-                        let host_s = executor(&batch).unwrap_or(0.0);
+                        let host_s = executor.execute(&batch).unwrap_or_else(|e| {
+                            eprintln!("executor '{}' failed on batch: {e}", executor.name());
+                            0.0
+                        });
                         let done = Instant::now();
                         // Co-simulation: estimate FlexiBit latency/energy for
                         // this batch (batch of M=batch_size token rows).
@@ -135,6 +168,20 @@ impl Server {
 
     pub fn metrics(&self) -> Metrics {
         self.metrics.lock().unwrap().clone()
+    }
+
+    /// Block until at least `n` requests have completed or `timeout`
+    /// elapses; returns whether the target was reached. The standard drain
+    /// step between submitting a stream and calling [`Server::shutdown`].
+    pub fn await_completed(&self, n: u64, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        while self.metrics().requests_completed < n {
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        true
     }
 
     /// Stop the worker and return final metrics.
@@ -184,7 +231,8 @@ mod tests {
             sim_config: crate::sim::mobile_a(),
             sim_model: tiny_model(),
         };
-        let server = Server::start(cfg, Box::new(|_b| Ok(0.0)));
+        let server =
+            Server::start(cfg, Box::new(FnExecutor(|_b: &Batch| -> Result<f64, String> { Ok(0.0) })));
         for i in 0..16 {
             server.submit(mk_req(i, 6));
         }
@@ -209,7 +257,8 @@ mod tests {
             sim_config: crate::sim::mobile_a(),
             sim_model: tiny_model(),
         };
-        let server = Server::start(cfg, Box::new(|_b| Ok(0.0)));
+        let server =
+            Server::start(cfg, Box::new(FnExecutor(|_b: &Batch| -> Result<f64, String> { Ok(0.0) })));
         for i in 0..8 {
             server.submit(mk_req(i, if i % 2 == 0 { 6 } else { 8 }));
         }

@@ -1,0 +1,158 @@
+//! Per-(model, weight-format) packed-weight cache.
+//!
+//! Quantizing + bit-packing a model's weights is the expensive, precision-
+//! dependent part of native execution. The paper's reconfiguration model is
+//! layer-constant — precision changes happen between batches, not inside a
+//! GEMM — so the cache packs each model's weights **once per weight format**
+//! and every later batch at that configuration reuses the packed buffers.
+//! (The activation format does not affect weight packing, so `[6,6]` and
+//! `[6,16]` share an entry — strictly more sharing than a per-pair key.)
+
+use super::packed::PackedMatrix;
+use crate::arith::Format;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One transformer layer's weights, quantized and bit-packed.
+#[derive(Debug, Clone)]
+pub struct PackedLayer {
+    /// Fused Q/K/V projection: `[d_model, d_model + 2*kv_heads*head_dim]`.
+    pub wqkv: PackedMatrix,
+    /// Output projection: `[d_model, d_model]`.
+    pub wo: PackedMatrix,
+    /// FFN up projection: `[d_model, d_ff]`.
+    pub w_up: PackedMatrix,
+    /// FFN gate projection (SwiGLU models): `[d_model, d_ff]`.
+    pub w_gate: Option<PackedMatrix>,
+    /// FFN down projection: `[d_ff, d_model]`.
+    pub w_down: PackedMatrix,
+}
+
+/// Thread-safe cache of packed model weights keyed by model, then weight
+/// format. The nested map keeps the hot hit path allocation-free: probing
+/// by `&str` needs no owned key (a `(String, Format)` tuple key would force
+/// a `String` clone per lookup).
+#[derive(Debug, Default)]
+pub struct WeightCache {
+    entries: Mutex<HashMap<String, HashMap<Format, Arc<Vec<PackedLayer>>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl WeightCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch the packed weights for `(model, w_fmt)`, building them with
+    /// `pack` on first use. The build runs under the cache lock: the serving
+    /// worker is single-threaded and the GEMM kernel parallelizes internally,
+    /// so a fancier once-per-key latch would buy nothing here.
+    pub fn get_or_pack<F>(&self, model: &str, w_fmt: Format, pack: F) -> Arc<Vec<PackedLayer>>
+    where
+        F: FnOnce() -> Vec<PackedLayer>,
+    {
+        let mut map = self.entries.lock().unwrap();
+        if let Some(found) = map.get(model).and_then(|inner| inner.get(&w_fmt)) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return found.clone();
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let built = Arc::new(pack());
+        map.entry(model.to_string()).or_default().insert(w_fmt, built.clone());
+        built
+    }
+
+    /// (hits, misses) counters — misses equal distinct (model, format) packs.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Number of cached (model, weight-format) entries.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().values().map(|inner| inner.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total packed bytes held across all entries.
+    pub fn resident_bytes(&self) -> usize {
+        let map = self.entries.lock().unwrap();
+        map.values()
+            .flat_map(|inner| inner.values())
+            .flat_map(|layers| layers.iter())
+            .map(|l| {
+                l.wqkv.bytes()
+                    + l.wo.bytes()
+                    + l.w_up.bytes()
+                    + l.w_gate.as_ref().map_or(0, |g| g.bytes())
+                    + l.w_down.bytes()
+            })
+            .sum()
+    }
+
+    /// Drop every cached entry (e.g. on model unload).
+    pub fn clear(&self) {
+        self.entries.lock().unwrap().clear();
+    }
+
+    /// Drop all entries for one model, across every weight format — required
+    /// when a model is re-registered so stale packed weights can't serve.
+    pub fn evict_model(&self, model: &str) {
+        self.entries.lock().unwrap().remove(model);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::FpFormat;
+
+    fn dummy_layer(fmt: Format) -> PackedLayer {
+        let m = |r: usize, c: usize| PackedMatrix::from_f32(&vec![0.5; r * c], r, c, fmt);
+        PackedLayer { wqkv: m(4, 12), wo: m(4, 4), w_up: m(4, 8), w_gate: None, w_down: m(8, 4) }
+    }
+
+    #[test]
+    fn packs_once_per_model_and_format() {
+        let cache = WeightCache::new();
+        let fp6 = Format::Fp(FpFormat::FP6_E3M2);
+        let fp4 = Format::Fp(FpFormat::FP4_E2M1);
+        let mut builds = 0;
+        for _ in 0..3 {
+            let e = cache.get_or_pack("tiny", fp6, || {
+                builds += 1;
+                vec![dummy_layer(fp6)]
+            });
+            assert_eq!(e.len(), 1);
+        }
+        assert_eq!(builds, 1, "same key must pack once");
+        cache.get_or_pack("tiny", fp4, || {
+            builds += 1;
+            vec![dummy_layer(fp4)]
+        });
+        cache.get_or_pack("other", fp6, || {
+            builds += 1;
+            vec![dummy_layer(fp6)]
+        });
+        assert_eq!(builds, 3);
+        assert_eq!(cache.len(), 3);
+        let (hits, misses) = cache.stats();
+        assert_eq!((hits, misses), (2, 3));
+        assert!(cache.resident_bytes() > 0);
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn shared_entries_are_the_same_allocation() {
+        let cache = WeightCache::new();
+        let fp6 = Format::Fp(FpFormat::FP6_E3M2);
+        let a = cache.get_or_pack("m", fp6, || vec![dummy_layer(fp6)]);
+        let b = cache.get_or_pack("m", fp6, || vec![dummy_layer(fp6)]);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

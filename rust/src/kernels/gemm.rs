@@ -1,0 +1,220 @@
+//! Tiled, cache-blocked GEMM over bit-packed operands.
+//!
+//! `C[M,N] = A[M,K] x W[K,N]` where both operands are [`PackedMatrix`] of
+//! arbitrary formats. Packed words are decoded lane-wise into f32 tiles and
+//! multiply-accumulated; output row blocks run in parallel on scoped std
+//! threads (the offline build carries no rayon).
+//!
+//! **Bit-exactness contract.** For every output element the kernel performs
+//! exactly the sequence `acc += a_f32 * w_f32` in ascending-k order, with no
+//! FMA contraction and no reassociation — tiling over (jb, kb) visits each
+//! element's k range in order, and row-block parallelism never splits a
+//! single element's accumulation. The result is therefore bit-identical to
+//! the naive reference [`crate::arith::gemm_ref`] for any precision pair and
+//! any tile configuration, which `rust/tests/native_kernels.rs` sweeps.
+
+use super::packed::{Decoder, PackedMatrix};
+use crate::arith::Format;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Below this MAC count a GEMM runs single-threaded in auto mode: the small
+/// per-head attention GEMMs would otherwise pay more in thread spawn/join
+/// than in compute.
+const PARALLEL_MACS_THRESHOLD: usize = 1 << 20;
+
+/// Process-wide decoder cache. The same handful of formats recurs across
+/// every GEMM of a model forward, and building a 16-bit LUT costs 65k
+/// `decode` calls — far more than a small attention GEMM itself.
+fn decoder_for(fmt: Format) -> Arc<Decoder> {
+    static CACHE: OnceLock<Mutex<HashMap<Format, Arc<Decoder>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = cache.lock().unwrap();
+    map.entry(fmt).or_insert_with(|| Arc::new(Decoder::new(fmt))).clone()
+}
+
+/// Tiling and threading configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct GemmConfig {
+    /// K-dimension tile (rows of the decoded W tile).
+    pub kc: usize,
+    /// N-dimension tile (columns of the decoded W tile).
+    pub nc: usize,
+    /// Worker threads; 0 = auto (one per available core, single-threaded
+    /// below [`PARALLEL_MACS_THRESHOLD`] MACs). Explicit counts skip the
+    /// small-GEMM heuristic; both modes are capped at M rows (a worker
+    /// owns whole output rows, so more threads than rows can't help).
+    pub threads: usize,
+}
+
+impl Default for GemmConfig {
+    fn default() -> Self {
+        // 64x64 f32 W tile = 16 KiB: comfortably L1-resident alongside the
+        // A row segment and C row stripe.
+        GemmConfig { kc: 64, nc: 64, threads: 0 }
+    }
+}
+
+/// Packed GEMM with the default tile/thread configuration.
+pub fn gemm_default(a: &PackedMatrix, w: &PackedMatrix) -> Vec<f32> {
+    gemm(a, w, &GemmConfig::default())
+}
+
+/// Packed GEMM: decode-and-accumulate `a [M,K] x w [K,N] -> Vec<f32> [M,N]`.
+pub fn gemm(a: &PackedMatrix, w: &PackedMatrix, cfg: &GemmConfig) -> Vec<f32> {
+    assert_eq!(
+        a.cols(),
+        w.rows(),
+        "inner dimensions must match: A is {}x{}, W is {}x{}",
+        a.rows(),
+        a.cols(),
+        w.rows(),
+        w.cols()
+    );
+    assert!(cfg.kc > 0 && cfg.nc > 0, "tile sizes must be positive");
+    let (m, k, n) = (a.rows(), a.cols(), w.cols());
+    let mut c = vec![0f32; m * n];
+    if m == 0 || k == 0 || n == 0 {
+        return c;
+    }
+
+    let a_dec = decoder_for(a.fmt());
+    let w_dec = decoder_for(w.fmt());
+
+    let threads = if cfg.threads > 0 {
+        cfg.threads
+    } else if m * k * n < PARALLEL_MACS_THRESHOLD {
+        1
+    } else {
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+    }
+    .clamp(1, m);
+    let rows_per = m.div_ceil(threads);
+
+    if threads == 1 {
+        gemm_rows(a, w, &a_dec, &w_dec, 0, &mut c, cfg);
+    } else {
+        std::thread::scope(|s| {
+            for (t, c_chunk) in c.chunks_mut(rows_per * n).enumerate() {
+                let (a_dec, w_dec) = (&a_dec, &w_dec);
+                s.spawn(move || {
+                    gemm_rows(a, w, a_dec, w_dec, t * rows_per, c_chunk, cfg);
+                });
+            }
+        });
+    }
+    c
+}
+
+/// Compute one horizontal stripe of C: rows `row0 ..` covering `c_chunk`.
+fn gemm_rows(
+    a: &PackedMatrix,
+    w: &PackedMatrix,
+    a_dec: &Decoder,
+    w_dec: &Decoder,
+    row0: usize,
+    c_chunk: &mut [f32],
+    cfg: &GemmConfig,
+) {
+    let (k, n) = (a.cols(), w.cols());
+    let rows = c_chunk.len() / n;
+
+    // Decode this stripe's A rows once (activations are the small operand in
+    // serving; weights stay packed and are decoded tile-wise below).
+    let mut a_f = vec![0f32; rows * k];
+    for r in 0..rows {
+        a.decode_row_range(row0 + r, 0, a_dec, &mut a_f[r * k..(r + 1) * k]);
+    }
+
+    let mut wt = vec![0f32; cfg.kc * cfg.nc];
+    for jb in (0..n).step_by(cfg.nc) {
+        let nb = cfg.nc.min(n - jb);
+        for kb in (0..k).step_by(cfg.kc) {
+            let kcur = cfg.kc.min(k - kb);
+            // Fill the W tile: rows kb..kb+kcur, cols jb..jb+nb, decoded
+            // lane-wise straight out of the packed words.
+            for kk in 0..kcur {
+                w.decode_row_range(kb + kk, jb, w_dec, &mut wt[kk * nb..(kk + 1) * nb]);
+            }
+            // Multiply-accumulate the tile into the C stripe. Ascending kk
+            // keeps each element's accumulation in global ascending-k order.
+            for r in 0..rows {
+                let a_row = &a_f[r * k + kb..r * k + kb + kcur];
+                let c_row = &mut c_chunk[r * n + jb..r * n + jb + nb];
+                for (kk, &av) in a_row.iter().enumerate() {
+                    let w_row = &wt[kk * nb..(kk + 1) * nb];
+                    for (cv, &wv) in c_row.iter_mut().zip(w_row) {
+                        *cv += av * wv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::{gemm_ref, Format, FpFormat};
+    use crate::util::Rng;
+
+    fn random_case(rng: &mut Rng, a_fmt: Format, w_fmt: Format, m: usize, k: usize, n: usize) {
+        let a_codes = rng.codes(m * k, a_fmt.bits());
+        let w_codes = rng.codes(k * n, w_fmt.bits());
+        let a = PackedMatrix::from_codes(&a_codes, m, k, a_fmt);
+        let w = PackedMatrix::from_codes(&w_codes, k, n, w_fmt);
+        let got = gemm_default(&a, &w);
+        let want = gemm_ref(&a_codes, a_fmt, &w_codes, w_fmt, m, k, n);
+        assert_eq!(got, want, "{a_fmt}x{w_fmt} {m}x{k}x{n}");
+    }
+
+    #[test]
+    fn matches_reference_small() {
+        let mut rng = Rng::new(31);
+        random_case(
+            &mut rng,
+            Format::Fp(FpFormat::FP6_E3M2),
+            Format::Fp(FpFormat::FP6_E3M2),
+            8,
+            16,
+            8,
+        );
+    }
+
+    #[test]
+    fn single_element() {
+        let mut rng = Rng::new(32);
+        random_case(&mut rng, Format::Fp(FpFormat::FP4_E2M1), Format::int(4), 1, 1, 1);
+    }
+
+    #[test]
+    fn tile_config_invariance() {
+        let mut rng = Rng::new(33);
+        let fmt = Format::Fp(FpFormat::FP5_E2M2);
+        let (m, k, n) = (9, 70, 67); // deliberately off-tile
+        let a = PackedMatrix::from_codes(&rng.codes(m * k, fmt.bits()), m, k, fmt);
+        let w = PackedMatrix::from_codes(&rng.codes(k * n, fmt.bits()), k, n, fmt);
+        let base = gemm(&a, &w, &GemmConfig { kc: 64, nc: 64, threads: 1 });
+        for (kc, nc, threads) in [(1, 1, 1), (3, 5, 2), (64, 64, 4), (128, 16, 3), (7, 128, 1)] {
+            let got = gemm(&a, &w, &GemmConfig { kc, nc, threads });
+            assert_eq!(got, base, "kc={kc} nc={nc} threads={threads}");
+        }
+    }
+
+    #[test]
+    fn zero_sized_dims() {
+        let fmt = Format::Fp(FpFormat::FP6_E3M2);
+        let a = PackedMatrix::from_codes(&[], 0, 5, fmt);
+        let w = PackedMatrix::from_codes(&[0; 15], 5, 3, fmt);
+        assert!(gemm_default(&a, &w).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dimensions")]
+    fn dimension_mismatch_panics() {
+        let fmt = Format::Fp(FpFormat::FP6_E3M2);
+        let a = PackedMatrix::from_codes(&[0; 6], 2, 3, fmt);
+        let w = PackedMatrix::from_codes(&[0; 8], 4, 2, fmt);
+        gemm_default(&a, &w);
+    }
+}

@@ -1,0 +1,46 @@
+//! Native bit-packed GEMM execution engine.
+//!
+//! The serving path historically executed batches only through AOT-compiled
+//! PJRT artifacts built offline by Python — a request for a precision pair
+//! with no pre-built artifact was unservable, and the bit-level [`crate::pe`]
+//! model is a verification artifact, far too slow to stand in. This module
+//! is the missing execution layer: it computes quantized GEMMs natively in
+//! Rust, directly on bit-packed operands, for **any** [`crate::arith::Format`]
+//! pair — including the non-power-of-two widths (FP6/FP5/E3M2/…) that are
+//! FlexiBit's reason to exist. The same move "Efficient Arbitrary Precision
+//! Acceleration for LLMs on GPU Tensor Cores" makes for commodity GPUs, here
+//! for the host CPU.
+//!
+//! Pieces:
+//!
+//! * [`PackedMatrix`] — a 2-D tensor stored bit-packed via the
+//!   [`crate::bitpack`] layout (values back-to-back, no padding), with
+//!   lane-wise decode of row ranges into f32 through a per-format [`Decoder`]
+//!   lookup table.
+//! * [`gemm`] — a tiled, cache-blocked GEMM kernel: packed words are decoded
+//!   tile-wise into f32 and multiply-accumulated, parallelized across output
+//!   row blocks with scoped std threads (the offline build has no rayon).
+//!   Accumulation order is ascending-k per output element, which makes the
+//!   kernel **bit-exact** against [`crate::arith::gemm_ref`] for every
+//!   precision pair — the software analog of the paper's RTL verification,
+//!   at GEMM granularity.
+//! * [`WeightCache`] — packs/quantizes a model's weights once per
+//!   (model, weight-format) configuration, mirroring the paper's
+//!   layer-constant reconfiguration model: precision switches re-use packed
+//!   weights, they don't re-quantize.
+//! * [`NativeModel`] — a transformer forward pass (attention + FFN, GQA and
+//!   SwiGLU aware) whose every GEMM runs through the packed kernel with
+//!   activations quantized to the request's activation format.
+//! * [`NativeExecutor`] — implements [`crate::coordinator::Executor`] so the
+//!   server can run end-to-end on this engine with zero Python/PJRT
+//!   artifacts on disk.
+
+mod cache;
+mod gemm;
+mod model;
+mod packed;
+
+pub use cache::{PackedLayer, WeightCache};
+pub use gemm::{gemm, gemm_default, GemmConfig};
+pub use model::{NativeExecutor, NativeModel};
+pub use packed::{Decoder, PackedMatrix};

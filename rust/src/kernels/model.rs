@@ -1,0 +1,374 @@
+//! Native transformer execution: a model whose every GEMM runs through the
+//! bit-packed kernel, and the [`NativeExecutor`] that plugs it into the
+//! serving coordinator.
+//!
+//! Weights are synthesized deterministically from a seed (the repo ships no
+//! checkpoints); what matters for the reproduction is the *execution path*:
+//! weight x activation GEMMs run at `(pair.w, pair.a)`, the two attention
+//! activation x activation GEMMs at `(pair.a, pair.a)` — exactly the
+//! precision assignment of [`crate::workload::ModelSpec::gemms`] — on packed
+//! buffers, with packed weights cached per (model, weight format).
+
+use super::cache::{PackedLayer, WeightCache};
+use super::gemm::{gemm, GemmConfig};
+use super::packed::PackedMatrix;
+use crate::coordinator::{Batch, Executor};
+use crate::util::Rng;
+use crate::workload::{ModelSpec, PrecisionPair};
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// One layer's master (f32) weights, from which per-format packs are made.
+#[derive(Debug, Clone)]
+struct LayerWeights {
+    wqkv: Vec<f32>,
+    wo: Vec<f32>,
+    w_up: Vec<f32>,
+    w_gate: Option<Vec<f32>>,
+    w_down: Vec<f32>,
+}
+
+/// A transformer with synthesized weights, executable at any precision pair
+/// through the native packed-GEMM kernel.
+#[derive(Debug, Clone)]
+pub struct NativeModel {
+    pub spec: ModelSpec,
+    layers: Vec<LayerWeights>,
+    gemm_cfg: GemmConfig,
+}
+
+impl NativeModel {
+    /// Synthesize weights for `spec` deterministically from `seed` with
+    /// 1/sqrt(fan_in) scaling (keeps activations in quantizable range).
+    pub fn synthesize(spec: ModelSpec, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let d = spec.d_model;
+        let kv_dim = spec.kv_heads * spec.head_dim();
+        let mut init = |rows: usize, cols: usize| -> Vec<f32> {
+            let scale = 1.0 / (rows as f64).sqrt();
+            (0..rows * cols).map(|_| (rng.gauss() * scale) as f32).collect()
+        };
+        let layers = (0..spec.layers)
+            .map(|_| LayerWeights {
+                wqkv: init(d, d + 2 * kv_dim),
+                wo: init(d, d),
+                w_up: init(d, spec.d_ff),
+                w_gate: if spec.gated_ffn { Some(init(d, spec.d_ff)) } else { None },
+                w_down: init(spec.d_ff, d),
+            })
+            .collect();
+        NativeModel { spec, layers, gemm_cfg: GemmConfig::default() }
+    }
+
+    /// Quantize + bit-pack every layer's weights at `w_fmt` (the cache's
+    /// build callback).
+    pub fn pack_layers(&self, w_fmt: crate::arith::Format) -> Vec<PackedLayer> {
+        let d = self.spec.d_model;
+        let kv_dim = self.spec.kv_heads * self.spec.head_dim();
+        self.layers
+            .iter()
+            .map(|l| PackedLayer {
+                wqkv: PackedMatrix::from_f32(&l.wqkv, d, d + 2 * kv_dim, w_fmt),
+                wo: PackedMatrix::from_f32(&l.wo, d, d, w_fmt),
+                w_up: PackedMatrix::from_f32(&l.w_up, d, self.spec.d_ff, w_fmt),
+                w_gate: l
+                    .w_gate
+                    .as_ref()
+                    .map(|g| PackedMatrix::from_f32(g, d, self.spec.d_ff, w_fmt)),
+                w_down: PackedMatrix::from_f32(&l.w_down, self.spec.d_ff, d, w_fmt),
+            })
+            .collect()
+    }
+
+    /// Full forward pass of `input` (`rows x d_model`, row-major; `rows` is
+    /// inferred, so shorter-than-`spec.seq` requests work) at `pair`.
+    /// Packed weights come from `cache`, keyed under `self.spec.name`.
+    pub fn forward(&self, input: &[f32], pair: PrecisionPair, cache: &WeightCache) -> Vec<f32> {
+        let d = self.spec.d_model;
+        assert!(d > 0 && input.len() % d == 0, "input length must be a multiple of d_model");
+        let rows = input.len() / d;
+        let packed = cache.get_or_pack(self.spec.name, pair.w, || self.pack_layers(pair.w));
+
+        let mut x = input.to_vec();
+        for layer in packed.iter() {
+            let attn = self.attention(&rms_norm(&x, d), rows, pair, layer);
+            add_in_place(&mut x, &attn);
+            let ffn = self.ffn(&rms_norm(&x, d), rows, pair, layer);
+            add_in_place(&mut x, &ffn);
+        }
+        x
+    }
+
+    /// Multi-head attention (GQA-aware). Projections run at (w, a);
+    /// QK^T and PV run at (a, a), matching the workload extractor.
+    fn attention(&self, xn: &[f32], rows: usize, pair: PrecisionPair, l: &PackedLayer) -> Vec<f32> {
+        let d = self.spec.d_model;
+        let hd = self.spec.head_dim();
+        let heads = self.spec.heads;
+        let kv_heads = self.spec.kv_heads;
+        let kv_dim = kv_heads * hd;
+
+        let xq = PackedMatrix::from_f32(xn, rows, d, pair.a);
+        let qkv = gemm(&xq, &l.wqkv, &self.gemm_cfg); // [rows, d + 2*kv_dim]
+        let qkv_cols = d + 2 * kv_dim;
+
+        let mut ctx = vec![0f32; rows * d];
+        let scale = 1.0 / (hd as f32).sqrt();
+        for h in 0..heads {
+            let kvh = h * kv_heads / heads;
+            // Slice out this head's Q [rows, hd], K^T [hd, rows], V [rows, hd].
+            let mut q_h = vec![0f32; rows * hd];
+            let mut k_t = vec![0f32; hd * rows];
+            let mut v_h = vec![0f32; rows * hd];
+            for r in 0..rows {
+                for c in 0..hd {
+                    q_h[r * hd + c] = qkv[r * qkv_cols + h * hd + c];
+                    k_t[c * rows + r] = qkv[r * qkv_cols + d + kvh * hd + c];
+                    v_h[r * hd + c] = qkv[r * qkv_cols + d + kv_dim + kvh * hd + c];
+                }
+            }
+            // Scores: activation x activation at (a, a).
+            let qp = PackedMatrix::from_f32(&q_h, rows, hd, pair.a);
+            let kp = PackedMatrix::from_f32(&k_t, hd, rows, pair.a);
+            let mut scores = gemm(&qp, &kp, &self.gemm_cfg); // [rows, rows]
+            for s in scores.iter_mut() {
+                *s *= scale;
+            }
+            softmax_rows(&mut scores, rows);
+            // Context: probabilities x V at (a, a).
+            let pp = PackedMatrix::from_f32(&scores, rows, rows, pair.a);
+            let vp = PackedMatrix::from_f32(&v_h, rows, hd, pair.a);
+            let ctx_h = gemm(&pp, &vp, &self.gemm_cfg); // [rows, hd]
+            for r in 0..rows {
+                ctx[r * d + h * hd..r * d + (h + 1) * hd]
+                    .copy_from_slice(&ctx_h[r * hd..(r + 1) * hd]);
+            }
+        }
+        // Output projection at (w, a).
+        let cp = PackedMatrix::from_f32(&ctx, rows, d, pair.a);
+        gemm(&cp, &l.wo, &self.gemm_cfg)
+    }
+
+    /// FFN: classic GELU two-GEMM or SwiGLU three-GEMM, all at (w, a).
+    fn ffn(&self, xn: &[f32], rows: usize, pair: PrecisionPair, l: &PackedLayer) -> Vec<f32> {
+        let d = self.spec.d_model;
+        let xq = PackedMatrix::from_f32(xn, rows, d, pair.a);
+        let mut h = gemm(&xq, &l.w_up, &self.gemm_cfg); // [rows, d_ff]
+        match &l.w_gate {
+            Some(wg) => {
+                let g = gemm(&xq, wg, &self.gemm_cfg);
+                for (hv, gv) in h.iter_mut().zip(&g) {
+                    *hv *= silu(*gv);
+                }
+            }
+            None => {
+                for hv in h.iter_mut() {
+                    *hv = gelu(*hv);
+                }
+            }
+        }
+        let hq = PackedMatrix::from_f32(&h, rows, self.spec.d_ff, pair.a);
+        gemm(&hq, &l.w_down, &self.gemm_cfg)
+    }
+}
+
+fn add_in_place(x: &mut [f32], y: &[f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (a, b) in x.iter_mut().zip(y) {
+        *a += b;
+    }
+}
+
+/// Row-wise RMS normalization (no learned gain), f32.
+fn rms_norm(x: &[f32], d: usize) -> Vec<f32> {
+    let mut out = vec![0f32; x.len()];
+    for (row, orow) in x.chunks(d).zip(out.chunks_mut(d)) {
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + 1e-5).sqrt();
+        for (o, &v) in orow.iter_mut().zip(row) {
+            *o = v * inv;
+        }
+    }
+    out
+}
+
+/// Row-wise softmax over an `n x n` score matrix, f32, max-subtracted.
+fn softmax_rows(scores: &mut [f32], n: usize) {
+    for row in scores.chunks_mut(n) {
+        let max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        if sum > 0.0 {
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+    }
+}
+
+fn gelu(x: f32) -> f32 {
+    // tanh approximation (matches the Python block's activation).
+    let c = (2.0f32 / std::f32::consts::PI).sqrt();
+    0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// The native execution backend: implements the coordinator's [`Executor`]
+/// so [`crate::coordinator::Server`] can serve **any** precision pair with
+/// zero Python/PJRT artifacts on disk.
+#[derive(Debug, Default)]
+pub struct NativeExecutor {
+    models: HashMap<String, NativeModel>,
+    cache: WeightCache,
+}
+
+impl NativeExecutor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a model under `spec.name` with weights synthesized from
+    /// `seed`. Returns `self` for chaining.
+    pub fn with_model(mut self, spec: ModelSpec, seed: u64) -> Self {
+        self.register(spec, seed);
+        self
+    }
+
+    /// Register (or replace) a model under `spec.name`. Replacement evicts
+    /// the old model's cached packed weights so they can't serve stale.
+    pub fn register(&mut self, spec: ModelSpec, seed: u64) {
+        let model = NativeModel::synthesize(spec, seed);
+        self.cache.evict_model(model.spec.name);
+        self.models.insert(model.spec.name.to_string(), model);
+    }
+
+    /// Run one forward pass outside the serving loop (warmup, testing).
+    pub fn forward(
+        &self,
+        model: &str,
+        input: &[f32],
+        pair: PrecisionPair,
+    ) -> Result<Vec<f32>, String> {
+        let m = self.models.get(model).ok_or_else(|| format!("no native model '{model}'"))?;
+        Ok(m.forward(input, pair, &self.cache))
+    }
+
+    /// Packed-weight cache counters: (hits, misses).
+    pub fn cache_stats(&self) -> (u64, u64) {
+        self.cache.stats()
+    }
+
+    /// Packed bytes resident in the weight cache.
+    pub fn cache_bytes(&self) -> usize {
+        self.cache.resident_bytes()
+    }
+}
+
+impl Executor for NativeExecutor {
+    fn execute(&mut self, batch: &Batch) -> Result<f64, String> {
+        let model = self
+            .models
+            .get(&batch.model)
+            .ok_or_else(|| format!("no native model '{}' registered", batch.model))?;
+        let d = model.spec.d_model;
+        // Validate the whole batch before executing any of it: a malformed
+        // request must not abort mid-batch after co-batched requests ran
+        // (the server counts the batch as completed either way).
+        for req in &batch.requests {
+            if req.input.is_empty() || req.input.len() % d != 0 {
+                return Err(format!(
+                    "request {}: input length {} not a positive multiple of d_model {d}",
+                    req.id,
+                    req.input.len()
+                ));
+            }
+        }
+        let t0 = Instant::now();
+        for req in &batch.requests {
+            let out = model.forward(&req.input, batch.pair, &self.cache);
+            debug_assert_eq!(out.len(), req.input.len());
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    fn name(&self) -> &str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shapes_and_determinism() {
+        let spec = ModelSpec::tiny();
+        let ex = NativeExecutor::new().with_model(spec.clone(), 42);
+        let pair = PrecisionPair::of_bits(6, 6);
+        let input: Vec<f32> = (0..spec.seq * spec.d_model).map(|i| (i % 13) as f32 * 0.1).collect();
+        let a = ex.forward(spec.name, &input, pair).unwrap();
+        let b = ex.forward(spec.name, &input, pair).unwrap();
+        assert_eq!(a.len(), input.len());
+        assert_eq!(a, b, "forward must be deterministic");
+        assert!(a.iter().all(|v| v.is_finite()));
+        // Weight pack happened once despite two forwards.
+        let (hits, misses) = ex.cache_stats();
+        assert_eq!((hits, misses), (1, 1));
+        assert!(ex.cache_bytes() > 0);
+    }
+
+    #[test]
+    fn gated_ffn_and_gqa_paths() {
+        let spec = ModelSpec {
+            name: "tiny-gqa",
+            seq: 8,
+            layers: 2,
+            d_model: 32,
+            d_ff: 48,
+            heads: 4,
+            gated_ffn: true,
+            kv_heads: 2,
+        };
+        let ex = NativeExecutor::new().with_model(spec.clone(), 7);
+        let input = vec![0.25f32; spec.seq * spec.d_model];
+        let out = ex.forward(spec.name, &input, PrecisionPair::of_bits(5, 8)).unwrap();
+        assert_eq!(out.len(), input.len());
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn reregistering_evicts_stale_packed_weights() {
+        let spec = ModelSpec::tiny();
+        let pair = PrecisionPair::of_bits(6, 6);
+        let input = vec![0.3f32; spec.seq * spec.d_model];
+        let mut ex = NativeExecutor::new().with_model(spec.clone(), 1);
+        let before = ex.forward(spec.name, &input, pair).unwrap();
+        ex.register(spec.clone(), 2); // new weights, same name
+        let after = ex.forward(spec.name, &input, pair).unwrap();
+        assert_ne!(before, after, "replaced model must not serve cached weights");
+        let (_, misses) = ex.cache_stats();
+        assert_eq!(misses, 2, "re-registration must repack");
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let ex = NativeExecutor::new();
+        assert!(ex.forward("nope", &[0.0; 4], PrecisionPair::of_bits(6, 6)).is_err());
+    }
+
+    #[test]
+    fn shorter_sequences_are_served() {
+        let spec = ModelSpec::tiny();
+        let ex = NativeExecutor::new().with_model(spec.clone(), 1);
+        let rows = 3; // != spec.seq
+        let input = vec![0.1f32; rows * spec.d_model];
+        let out = ex.forward(spec.name, &input, PrecisionPair::of_bits(4, 8)).unwrap();
+        assert_eq!(out.len(), input.len());
+    }
+}

@@ -1,0 +1,248 @@
+//! Bit-packed 2-D tensors and fast lane-wise decoding.
+//!
+//! [`PackedMatrix`] is the storage type the native GEMM kernel computes on:
+//! row-major values of any [`Format`], packed back-to-back across `u64`
+//! words with no padding — the exact layout [`crate::bitpack::BitPacker`]
+//! produces and [`PackedTensor`] holds. [`Decoder`] turns codes into f32
+//! lanes; for formats up to 16 bits it is a precomputed lookup table, so the
+//! GEMM inner loops never touch the FP field-decomposition path.
+
+use crate::arith::{decode, encode, Format, PackedTensor};
+
+/// Per-format code → f32 decoder.
+///
+/// Formats of ≤ 16 bits (every practical GEMM operand format) decode through
+/// a `2^bits`-entry table; wider INT formats fall back to direct decoding.
+#[derive(Debug, Clone)]
+pub enum Decoder {
+    Lut(Vec<f32>),
+    Direct(Format),
+}
+
+impl Decoder {
+    pub fn new(fmt: Format) -> Self {
+        let bits = fmt.bits();
+        if bits <= 16 {
+            let table: Vec<f32> =
+                (0..(1u32 << bits)).map(|code| decode(code, fmt) as f32).collect();
+            Decoder::Lut(table)
+        } else {
+            Decoder::Direct(fmt)
+        }
+    }
+
+    #[inline]
+    pub fn val(&self, code: u32) -> f32 {
+        match self {
+            Decoder::Lut(t) => t[code as usize],
+            Decoder::Direct(fmt) => decode(code, *fmt) as f32,
+        }
+    }
+}
+
+/// A row-major `rows x cols` matrix of `fmt` values, bit-packed with no
+/// per-row or per-element padding (row `r` starts at bit `r * cols * bits`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedMatrix {
+    rows: usize,
+    cols: usize,
+    data: PackedTensor,
+}
+
+impl PackedMatrix {
+    /// Pack raw codes (row-major).
+    pub fn from_codes(codes: &[u32], rows: usize, cols: usize, fmt: Format) -> Self {
+        assert_eq!(codes.len(), rows * cols, "codes length must be rows*cols");
+        PackedMatrix { rows, cols, data: PackedTensor::from_codes(codes, fmt) }
+    }
+
+    /// Quantize f32 values (round-to-nearest-even, saturating) and pack.
+    pub fn from_f32(values: &[f32], rows: usize, cols: usize, fmt: Format) -> Self {
+        assert_eq!(values.len(), rows * cols, "values length must be rows*cols");
+        let codes: Vec<u32> = values.iter().map(|&v| encode(v as f64, fmt)).collect();
+        Self::from_codes(&codes, rows, cols, fmt)
+    }
+
+    /// Quantize f64 values and pack.
+    pub fn from_f64(values: &[f64], rows: usize, cols: usize, fmt: Format) -> Self {
+        assert_eq!(values.len(), rows * cols, "values length must be rows*cols");
+        let codes: Vec<u32> = values.iter().map(|&v| encode(v, fmt)).collect();
+        Self::from_codes(&codes, rows, cols, fmt)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn fmt(&self) -> Format {
+        self.data.fmt
+    }
+
+    /// Packed size in bytes (the memory-efficiency win over padded storage).
+    pub fn bytes(&self) -> usize {
+        self.data.bytes()
+    }
+
+    /// Size if stored padded to the next power-of-two width (≥ 4 bits).
+    pub fn padded_bytes(&self) -> usize {
+        self.data.padded_bytes()
+    }
+
+    pub fn get_code(&self, r: usize, c: usize) -> u32 {
+        assert!(r < self.rows && c < self.cols);
+        self.data.get_code(r * self.cols + c)
+    }
+
+    /// Decoded value at (r, c).
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        decode(self.get_code(r, c), self.data.fmt)
+    }
+
+    /// All codes, row-major.
+    pub fn codes(&self) -> Vec<u32> {
+        self.data.codes()
+    }
+
+    /// Dequantize the whole matrix to f32, row-major.
+    pub fn to_f32(&self) -> Vec<f32> {
+        let dec = Decoder::new(self.fmt());
+        let mut out = vec![0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            let row = &mut out[r * self.cols..(r + 1) * self.cols];
+            self.decode_row_range(r, 0, &dec, row);
+        }
+        out
+    }
+
+    /// A new matrix holding this one's transpose (repacked).
+    pub fn transposed(&self) -> PackedMatrix {
+        let codes = self.codes();
+        let mut t = vec![0u32; codes.len()];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t[c * self.rows + r] = codes[r * self.cols + c];
+            }
+        }
+        PackedMatrix::from_codes(&t, self.cols, self.rows, self.fmt())
+    }
+
+    /// Decode `out.len()` consecutive values of row `row` starting at column
+    /// `col0` into f32 lanes — the GEMM kernel's tile-fill primitive. Walks
+    /// the packed words with a running bit cursor instead of per-element
+    /// index math.
+    pub fn decode_row_range(&self, row: usize, col0: usize, dec: &Decoder, out: &mut [f32]) {
+        debug_assert!(row < self.rows && col0 + out.len() <= self.cols);
+        let wbits = self.data.fmt.bits() as usize;
+        let mask: u64 = if wbits >= 64 { u64::MAX } else { (1u64 << wbits) - 1 };
+        let words = self.data.words();
+        let mut bit = (row * self.cols + col0) * wbits;
+        for o in out.iter_mut() {
+            let (wi, off) = (bit / 64, bit % 64);
+            let mut code = words[wi] >> off;
+            if off + wbits > 64 {
+                code |= words[wi + 1] << (64 - off);
+            }
+            *o = dec.val((code & mask) as u32);
+            bit += wbits;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::FpFormat;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_codes_2d() {
+        let mut rng = Rng::new(5);
+        for fmt in [
+            Format::Fp(FpFormat::FP6_E3M2),
+            Format::Fp(FpFormat::FP5_E2M2),
+            Format::Fp(FpFormat::FP4_E2M1),
+            Format::int(3),
+            Format::int(8),
+        ] {
+            let (r, c) = (7, 19); // odd shapes cross word boundaries
+            let codes = rng.codes(r * c, fmt.bits());
+            let m = PackedMatrix::from_codes(&codes, r, c, fmt);
+            assert_eq!(m.codes(), codes, "{fmt}");
+            for i in 0..r {
+                for j in 0..c {
+                    assert_eq!(m.get_code(i, j), codes[i * c + j], "{fmt} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_row_range_matches_get() {
+        let mut rng = Rng::new(9);
+        let fmt = Format::Fp(FpFormat::FP6_E3M2);
+        let (r, c) = (5, 31);
+        let codes = rng.codes(r * c, fmt.bits());
+        let m = PackedMatrix::from_codes(&codes, r, c, fmt);
+        let dec = Decoder::new(fmt);
+        for row in 0..r {
+            for col0 in [0usize, 3, 17] {
+                let len = c - col0;
+                let mut out = vec![0f32; len];
+                m.decode_row_range(row, col0, &dec, &mut out);
+                for (i, &v) in out.iter().enumerate() {
+                    assert_eq!(v, m.get(row, col0 + i) as f32, "row {row} col {}", col0 + i);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lut_matches_direct_decode() {
+        for fmt in [Format::Fp(FpFormat::FP8_E4M3), Format::int(7), Format::fp(2, 3)] {
+            let dec = Decoder::new(fmt);
+            for code in 0..(1u32 << fmt.bits()) {
+                assert_eq!(dec.val(code), decode(code, fmt) as f32, "{fmt} code {code}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_f32_quantizes_like_encode() {
+        let fmt = Format::Fp(FpFormat::FP6_E3M2);
+        let vals = [1.0f32, 2.5, -3.0, 0.124, 100.0, -0.01];
+        let m = PackedMatrix::from_f32(&vals, 2, 3, fmt);
+        for (i, &v) in vals.iter().enumerate() {
+            let expect = decode(encode(v as f64, fmt), fmt);
+            assert_eq!(m.get(i / 3, i % 3), expect);
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(2);
+        let fmt = Format::Fp(FpFormat::FP5_E2M2);
+        let (r, c) = (4, 9);
+        let codes = rng.codes(r * c, fmt.bits());
+        let m = PackedMatrix::from_codes(&codes, r, c, fmt);
+        let t = m.transposed();
+        assert_eq!((t.rows(), t.cols()), (c, r));
+        for i in 0..r {
+            for j in 0..c {
+                assert_eq!(t.get_code(j, i), m.get_code(i, j));
+            }
+        }
+        assert_eq!(t.transposed(), m);
+    }
+
+    #[test]
+    fn packing_is_dense() {
+        let fmt = Format::Fp(FpFormat::FP6_E3M2);
+        let m = PackedMatrix::from_codes(&vec![0; 1000], 10, 100, fmt);
+        assert_eq!(m.bytes(), 750); // 6000 bits, no padding
+        assert_eq!(m.padded_bytes(), 1000);
+    }
+}

@@ -9,12 +9,15 @@
 //!   performance simulator ([`sim`]), the four baseline accelerators
 //!   ([`baselines`]), energy/area models ([`energy`], [`area`]), the LLM
 //!   workload extraction ([`workload`]), the static control-signal compiler
-//!   ([`compiler`]), the bit-packing unit ([`bitpack`]), and a serving
-//!   coordinator ([`coordinator`]) that co-runs PJRT execution ([`runtime`])
-//!   with the simulator.
+//!   ([`compiler`]), the bit-packing unit ([`bitpack`]), a native bit-packed
+//!   GEMM execution engine ([`kernels`]) that serves any precision pair in
+//!   pure Rust, and a serving coordinator ([`coordinator`]) that co-runs an
+//!   execution backend ([`kernels`] by default, PJRT via [`runtime`] with
+//!   `--features pjrt`) with the simulator.
 //! * **L2/L1 (python/)** — a JAX transformer block whose GEMMs run through a
 //!   Pallas arbitrary-ExMy dequantize-GEMM kernel, AOT-lowered to HLO text
-//!   artifacts loaded by [`runtime`].
+//!   artifacts loaded by [`runtime`] (optional; the native engine needs no
+//!   artifacts).
 //!
 //! See `DESIGN.md` for the paper-to-module inventory and the per-experiment
 //! index, and `EXPERIMENTS.md` for paper-vs-measured results.
@@ -29,6 +32,7 @@ pub mod sim;
 pub mod baselines;
 pub mod energy;
 pub mod area;
+pub mod kernels;
 pub mod coordinator;
 pub mod runtime;
 pub mod report;

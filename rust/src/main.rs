@@ -5,6 +5,9 @@
 //!   precision) point.
 //! * `verify`   — run the bit-exact PE datapath on random operands against
 //!   the golden model (quick self-check).
+//! * `serve`    — run the serving coordinator on the native bit-packed GEMM
+//!   engine over a synthetic mixed-precision request stream (no artifacts,
+//!   no Python, any precision pair).
 //! * `report`   — print the index of paper table/figure reproduction
 //!   binaries.
 
@@ -12,11 +15,14 @@ use flexibit::arith::Format;
 use flexibit::baselines::{
     Accel, BitFusionAccel, BitModAccel, CambriconPAccel, FlexiBitAccel, TensorCoreAccel,
 };
+use flexibit::coordinator::{BatchPolicy, Request, Server, ServerConfig};
+use flexibit::kernels::NativeExecutor;
 use flexibit::pe::{Pe, PeConfig};
 use flexibit::report::{fmt_j, fmt_s};
 use flexibit::sim::{all_configs, simulate_model};
 use flexibit::util::Rng;
-use flexibit::workload::{all_models, PrecisionPair};
+use flexibit::workload::{all_models, ModelSpec, PrecisionPair};
+use std::time::{Duration, Instant};
 
 fn usage() -> ! {
     eprintln!(
@@ -25,11 +31,13 @@ fn usage() -> ! {
          commands:\n\
            simulate [--model NAME] [--accel NAME] [--config NAME] [--w BITS] [--a BITS]\n\
            verify [--iters N]\n\
+           serve [--requests N] [--pairs WxA,WxA,...] [--batch N]\n\
            report\n\
          \n\
          models: Bert-base Llama-2-7b Llama-2-70b GPT-3\n\
          accels: flexibit tensorcore bitfusion cambricon-p bitmod\n\
-         configs: Mobile-A Mobile-B Cloud-A Cloud-B"
+         configs: Mobile-A Mobile-B Cloud-A Cloud-B\n\
+         pairs:   bit widths or formats, e.g. 6x6, e2m3x16, int4xfp16"
     );
     std::process::exit(2);
 }
@@ -43,8 +51,78 @@ fn main() {
     match args.first().map(String::as_str) {
         Some("simulate") => cmd_simulate(&args[1..]),
         Some("verify") => cmd_verify(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
         Some("report") => cmd_report(),
         _ => usage(),
+    }
+}
+
+fn cmd_serve(args: &[String]) {
+    let n_requests: u64 =
+        arg_value(args, "--requests").and_then(|s| s.parse().ok()).unwrap_or(32);
+    let max_batch: usize = arg_value(args, "--batch").and_then(|s| s.parse().ok()).unwrap_or(8);
+    let pairs_arg = arg_value(args, "--pairs").unwrap_or_else(|| "6x6,5x6,8x8,int4x16".into());
+    let pairs: Vec<PrecisionPair> = pairs_arg
+        .split(',')
+        .map(|s| {
+            PrecisionPair::parse(s).unwrap_or_else(|| {
+                eprintln!("bad precision pair '{s}'");
+                usage()
+            })
+        })
+        .collect();
+
+    let spec = ModelSpec::tiny();
+    let executor = NativeExecutor::new().with_model(spec.clone(), 0xF1E81B);
+    let cfg = ServerConfig {
+        policy: BatchPolicy { max_batch, ..Default::default() },
+        sim_config: flexibit::sim::mobile_a(),
+        sim_model: spec.clone(),
+    };
+    let server = Server::start(cfg, Box::new(executor));
+
+    let mut rng = Rng::new(1);
+    let t0 = Instant::now();
+    for i in 0..n_requests {
+        let pair = pairs[(i as usize) % pairs.len()];
+        let input: Vec<f32> =
+            (0..spec.seq * spec.d_model).map(|_| rng.gauss() as f32 * 0.5).collect();
+        server.submit(Request {
+            id: i,
+            model: spec.name.to_string(),
+            pair,
+            input,
+            dims: vec![spec.seq, spec.d_model],
+            arrived: Instant::now(),
+        });
+    }
+    let drained = server.await_completed(n_requests, Duration::from_secs(120));
+    let wall = t0.elapsed().as_secs_f64();
+    let m = server.shutdown();
+
+    println!("native serving: {} requests over pairs {pairs_arg}", m.requests_completed);
+    println!(
+        "  batches {} (mean size {:.1}), precision switches {}",
+        m.batches_executed,
+        m.mean_batch_size(),
+        m.reconfigurations
+    );
+    println!(
+        "  wall {:.2}s  ({:.1} req/s), mean latency {:.1} ms (max {:.1} ms)",
+        wall,
+        m.throughput_rps(wall),
+        m.mean_latency_s() * 1e3,
+        m.latency_max_s * 1e3
+    );
+    println!(
+        "  host exec {:.2}s; co-simulated FlexiBit: {:.3} ms/batch, {:.3} mJ total",
+        m.host_exec_s,
+        m.sim_accel_s / m.batches_executed.max(1) as f64 * 1e3,
+        m.sim_energy_j * 1e3
+    );
+    if !drained {
+        eprintln!("timed out: only {}/{} requests completed", m.requests_completed, n_requests);
+        std::process::exit(1);
     }
 }
 

@@ -1,191 +1,49 @@
-//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them on
-//! the CPU PJRT client (the `xla` crate). This is the only place Python's
-//! build-time output crosses into the Rust request path — after
-//! `make artifacts` the binary is self-contained.
+//! Execution-backend plumbing shared by the serving path.
 //!
-//! Interchange format is HLO *text*, not serialized protos: jax ≥ 0.5 emits
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md).
+//! Two backends can sit behind the coordinator's [`crate::coordinator::Executor`]
+//! interface:
+//!
+//! * **Native** (default) — [`crate::kernels::NativeExecutor`] computes GEMMs
+//!   directly on bit-packed buffers in pure Rust; no build-time artifacts, no
+//!   Python in the request loop, any [`crate::workload::PrecisionPair`].
+//! * **PJRT** (`--features pjrt`) — [`pjrt::Runtime`] loads AOT-compiled
+//!   HLO-text artifacts produced by `make artifacts` and executes them on the
+//!   CPU PJRT client via the `xla` crate. The feature exists for
+//!   cross-checking the native engine against the Pallas lowering; the `xla`
+//!   crate is not part of the offline build and must be vendored to enable it.
+//!
+//! This module keeps the std-only pieces both backends share: the artifacts
+//! directory convention and the packed-weight JSON loader (hand parser — the
+//! offline build has no serde).
 
-use anyhow::{Context, Result};
-use std::collections::HashMap;
+use std::fmt;
 use std::path::{Path, PathBuf};
 
-/// A compiled model artifact ready to execute.
-pub struct LoadedModel {
-    pub name: String,
-    exe: xla::PjRtLoadedExecutable,
-}
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{InputBuf, LoadedModel, Runtime};
 
-/// The PJRT runtime: one CPU client, many compiled executables.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    models: HashMap<String, LoadedModel>,
-}
+/// Error type for runtime plumbing (the offline build has no `anyhow`).
+#[derive(Debug, Clone)]
+pub struct RuntimeError(pub String);
 
-impl Runtime {
-    pub fn new() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client, models: HashMap::new() })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load and compile one HLO-text artifact under `name`.
-    pub fn load_hlo_text(&mut self, name: &str, path: &Path) -> Result<()> {
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("path utf8")?)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).context("PJRT compile")?;
-        self.models.insert(name.to_string(), LoadedModel { name: name.to_string(), exe });
-        Ok(())
-    }
-
-    /// Load every `*.hlo.txt` in a directory, keyed by file stem.
-    pub fn load_artifacts_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
-        let mut loaded = Vec::new();
-        for entry in std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
-            let path = entry?.path();
-            let fname = path.file_name().and_then(|s| s.to_str()).unwrap_or("");
-            if let Some(stem) = fname.strip_suffix(".hlo.txt") {
-                self.load_hlo_text(stem, &path)?;
-                loaded.push(stem.to_string());
-            }
-        }
-        loaded.sort();
-        Ok(loaded)
-    }
-
-    pub fn has_model(&self, name: &str) -> bool {
-        self.models.contains_key(name)
-    }
-
-    /// Execute a loaded model on f32 input buffers (shape-erased: each input
-    /// is (data, dims)). The artifact was lowered with `return_tuple=True`;
-    /// returns every tuple element flattened to f32.
-    pub fn execute_f32(
-        &self,
-        name: &str,
-        inputs: &[(&[f32], &[usize])],
-    ) -> Result<Vec<Vec<f32>>> {
-        let model = self.models.get(name).with_context(|| format!("model {name} not loaded"))?;
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, dims) in inputs {
-            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims_i64)
-                .context("reshaping input literal")?;
-            literals.push(lit);
-        }
-        let result = model.exe.execute::<xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()
-            .context("fetching result")?;
-        let tuple = result.to_tuple().context("untupling result")?;
-        let mut out = Vec::with_capacity(tuple.len());
-        for lit in tuple {
-            out.push(lit.to_vec::<f32>().context("reading f32 output")?);
-        }
-        Ok(out)
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
     }
 }
 
-/// A shape-tagged input buffer for mixed-dtype execution.
-pub enum InputBuf<'a> {
-    F32(&'a [f32], Vec<usize>),
-    U32(&'a [u32], Vec<usize>),
-}
+impl std::error::Error for RuntimeError {}
 
-impl Runtime {
-    /// Execute with mixed f32/u32 inputs (the block-with-weight-inputs
-    /// artifact signature). Returns every tuple element flattened to f32.
-    pub fn execute_mixed(&self, name: &str, inputs: &[InputBuf]) -> Result<Vec<Vec<f32>>> {
-        let model = self.models.get(name).with_context(|| format!("model {name} not loaded"))?;
-        let mut literals = Vec::with_capacity(inputs.len());
-        for inp in inputs {
-            let lit = match inp {
-                InputBuf::F32(data, dims) => {
-                    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
-                    xla::Literal::vec1(data).reshape(&d)?
-                }
-                InputBuf::U32(data, dims) => {
-                    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
-                    xla::Literal::vec1(data).reshape(&d)?
-                }
-            };
-            literals.push(lit);
-        }
-        let result =
-            model.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        let tuple = result.to_tuple()?;
-        let mut out = Vec::with_capacity(tuple.len());
-        for lit in tuple {
-            out.push(lit.to_vec::<f32>()?);
-        }
-        Ok(out)
-    }
-
-    /// Execute a GEMM artifact taking (f32 activations, u32 packed weight
-    /// words) — the runtime-supplied-weights path. Returns the first tuple
-    /// element flattened to f32.
-    pub fn execute_u32_weights(
-        &self,
-        name: &str,
-        acts: &[f32],
-        a_dims: &[usize],
-        words: &[u32],
-        w_dims: &[usize],
-    ) -> Result<Vec<f32>> {
-        let model = self.models.get(name).with_context(|| format!("model {name} not loaded"))?;
-        let a_dims_i64: Vec<i64> = a_dims.iter().map(|&d| d as i64).collect();
-        let w_dims_i64: Vec<i64> = w_dims.iter().map(|&d| d as i64).collect();
-        let a_lit = xla::Literal::vec1(acts).reshape(&a_dims_i64)?;
-        let w_lit = xla::Literal::vec1(words).reshape(&w_dims_i64)?;
-        let result = model.exe.execute::<xla::Literal>(&[a_lit, w_lit])?[0][0]
-            .to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
+impl From<std::io::Error> for RuntimeError {
+    fn from(e: std::io::Error) -> Self {
+        RuntimeError(e.to_string())
     }
 }
 
-/// Parse a `block_w*.weights.json` file into the ordered weight inputs
-/// `[wqkv, wo, w1, w2]` as `(words, shape)` pairs. Minimal hand parser —
-/// the offline build has no serde.
-pub fn load_block_weights(path: &Path) -> Result<Vec<(Vec<u32>, Vec<usize>)>> {
-    let text = std::fs::read_to_string(path)
-        .with_context(|| format!("reading {}", path.display()))?;
-    let mut out = Vec::new();
-    for key in ["wqkv", "wo", "w1", "w2"] {
-        let pat = format!("\"{key}\":");
-        let kstart = text.find(&pat).with_context(|| format!("missing key {key}"))? + pat.len();
-        let seg = &text[kstart..];
-        // words array
-        let wpat = "\"words\":";
-        let wstart = seg.find(wpat).context("missing words")? + wpat.len();
-        let wseg = &seg[wstart..];
-        let lb = wseg.find('[').unwrap();
-        let rb = wseg[lb..].find(']').unwrap() + lb;
-        let words: Vec<u32> = wseg[lb + 1..rb]
-            .split(',')
-            .filter_map(|s| s.trim().parse::<i64>().ok())
-            .map(|v| v as u32)
-            .collect();
-        // shape array
-        let spat = "\"shape\":";
-        let sstart = seg.find(spat).context("missing shape")? + spat.len();
-        let sseg = &seg[sstart..];
-        let lb = sseg.find('[').unwrap();
-        let rb = sseg[lb..].find(']').unwrap() + lb;
-        let shape: Vec<usize> = sseg[lb + 1..rb]
-            .split(',')
-            .filter_map(|s| s.trim().parse::<usize>().ok())
-            .collect();
-        anyhow::ensure!(words.len() == shape.iter().product::<usize>(), "{key} shape mismatch");
-        out.push((words, shape));
-    }
-    Ok(out)
-}
+/// Result alias used across the runtime plumbing.
+pub type Result<T> = std::result::Result<T, RuntimeError>;
 
 /// Default artifacts directory (relative to the repo root / CWD).
 pub fn artifacts_dir() -> PathBuf {
@@ -194,13 +52,61 @@ pub fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
+/// Whether AOT artifacts have been built (`make artifacts`).
+pub fn has_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// Extract the bracketed array following `"<key>":` inside `seg`.
+fn json_array_body<'a>(seg: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let start = seg.find(&pat)? + pat.len();
+    let rest = &seg[start..];
+    let lb = rest.find('[')?;
+    let rb = rest[lb..].find(']')? + lb;
+    Some(&rest[lb + 1..rb])
+}
+
+/// Parse a `block_w*.weights.json` file into the ordered weight inputs
+/// `[wqkv, wo, w1, w2]` as `(words, shape)` pairs. Minimal hand parser —
+/// the offline build has no serde.
+pub fn load_block_weights(path: &Path) -> Result<Vec<(Vec<u32>, Vec<usize>)>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| RuntimeError(format!("reading {}: {e}", path.display())))?;
+    let mut out = Vec::new();
+    for key in ["wqkv", "wo", "w1", "w2"] {
+        let pat = format!("\"{key}\":");
+        let kstart = text
+            .find(&pat)
+            .ok_or_else(|| RuntimeError(format!("missing key {key} in {}", path.display())))?
+            + pat.len();
+        let seg = &text[kstart..];
+        let words: Vec<u32> = json_array_body(seg, "words")
+            .ok_or_else(|| RuntimeError(format!("{key}: missing words array")))?
+            .split(',')
+            .filter_map(|s| s.trim().parse::<i64>().ok())
+            .map(|v| v as u32)
+            .collect();
+        let shape: Vec<usize> = json_array_body(seg, "shape")
+            .ok_or_else(|| RuntimeError(format!("{key}: missing shape array")))?
+            .split(',')
+            .filter_map(|s| s.trim().parse::<usize>().ok())
+            .collect();
+        if words.len() != shape.iter().product::<usize>() {
+            return Err(RuntimeError(format!(
+                "{key}: {} words vs shape {:?}",
+                words.len(),
+                shape
+            )));
+        }
+        out.push((words, shape));
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    // Runtime tests that need artifacts live in rust/tests/runtime_e2e.rs
-    // (they skip gracefully when `make artifacts` hasn't run). Here: pure
-    // plumbing.
 
     #[test]
     fn artifacts_dir_env_override() {
@@ -211,10 +117,36 @@ mod tests {
     }
 
     #[test]
-    fn missing_model_errors() {
-        if let Ok(rt) = Runtime::new() {
-            assert!(rt.execute_f32("nope", &[]).is_err());
-            assert!(!rt.has_model("nope"));
+    fn block_weights_parser_roundtrip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("flexibit_test_weights.json");
+        let mut text = String::from("{");
+        for (i, key) in ["wqkv", "wo", "w1", "w2"].iter().enumerate() {
+            if i > 0 {
+                text.push(',');
+            }
+            text.push_str(&format!(
+                "\"{key}\": {{\"words\": [1, 2, 3, 4, 5, 6], \"shape\": [2, 3]}}"
+            ));
         }
+        text.push('}');
+        std::fs::write(&path, text).unwrap();
+        let got = load_block_weights(&path).unwrap();
+        assert_eq!(got.len(), 4);
+        for (words, shape) in &got {
+            assert_eq!(words, &vec![1u32, 2, 3, 4, 5, 6]);
+            assert_eq!(shape, &vec![2usize, 3]);
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn block_weights_shape_mismatch_rejected() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("flexibit_test_bad_weights.json");
+        let text = "{\"wqkv\": {\"words\": [1, 2], \"shape\": [2, 3]}}";
+        std::fs::write(&path, text).unwrap();
+        assert!(load_block_weights(&path).is_err());
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -1,0 +1,174 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them on
+//! the CPU PJRT client (the `xla` crate). This is the only place Python's
+//! build-time output crosses into the Rust request path — after
+//! `make artifacts` the binary is self-contained.
+//!
+//! Interchange format is HLO *text*, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Compiled only with `--features pjrt`; the feature additionally requires
+//! the `xla` crate, which the offline image does not carry (see README.md).
+
+use super::{Result, RuntimeError};
+use std::collections::HashMap;
+use std::path::Path;
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError(format!("xla: {e}"))
+    }
+}
+
+/// A compiled model artifact ready to execute.
+pub struct LoadedModel {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client, many compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    models: HashMap<String, LoadedModel>,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| RuntimeError(format!("creating PJRT CPU client: {e}")))?;
+        Ok(Runtime { client, models: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile one HLO-text artifact under `name`.
+    pub fn load_hlo_text(&mut self, name: &str, path: &Path) -> Result<()> {
+        let path_str =
+            path.to_str().ok_or_else(|| RuntimeError(format!("non-utf8 path {path:?}")))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| RuntimeError(format!("parsing HLO text {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| RuntimeError(format!("PJRT compile of {name}: {e}")))?;
+        self.models.insert(name.to_string(), LoadedModel { name: name.to_string(), exe });
+        Ok(())
+    }
+
+    /// Load every `*.hlo.txt` in a directory, keyed by file stem.
+    pub fn load_artifacts_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
+        let mut loaded = Vec::new();
+        let entries = std::fs::read_dir(dir)
+            .map_err(|e| RuntimeError(format!("reading {}: {e}", dir.display())))?;
+        for entry in entries {
+            let path = entry.map_err(RuntimeError::from)?.path();
+            let fname = path.file_name().and_then(|s| s.to_str()).unwrap_or("");
+            if let Some(stem) = fname.strip_suffix(".hlo.txt") {
+                self.load_hlo_text(stem, &path)?;
+                loaded.push(stem.to_string());
+            }
+        }
+        loaded.sort();
+        Ok(loaded)
+    }
+
+    pub fn has_model(&self, name: &str) -> bool {
+        self.models.contains_key(name)
+    }
+
+    fn model(&self, name: &str) -> Result<&LoadedModel> {
+        self.models.get(name).ok_or_else(|| RuntimeError(format!("model {name} not loaded")))
+    }
+
+    /// Execute a loaded model on f32 input buffers (shape-erased: each input
+    /// is (data, dims)). The artifact was lowered with `return_tuple=True`;
+    /// returns every tuple element flattened to f32.
+    pub fn execute_f32(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let model = self.model(name)?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data).reshape(&dims_i64)?;
+            literals.push(lit);
+        }
+        let result = model.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            out.push(lit.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// A shape-tagged input buffer for mixed-dtype execution.
+pub enum InputBuf<'a> {
+    F32(&'a [f32], Vec<usize>),
+    U32(&'a [u32], Vec<usize>),
+}
+
+impl Runtime {
+    /// Execute with mixed f32/u32 inputs (the block-with-weight-inputs
+    /// artifact signature). Returns every tuple element flattened to f32.
+    pub fn execute_mixed(&self, name: &str, inputs: &[InputBuf]) -> Result<Vec<Vec<f32>>> {
+        let model = self.model(name)?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for inp in inputs {
+            let lit = match inp {
+                InputBuf::F32(data, dims) => {
+                    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+                    xla::Literal::vec1(data).reshape(&d)?
+                }
+                InputBuf::U32(data, dims) => {
+                    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+                    xla::Literal::vec1(data).reshape(&d)?
+                }
+            };
+            literals.push(lit);
+        }
+        let result = model.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            out.push(lit.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+
+    /// Execute a GEMM artifact taking (f32 activations, u32 packed weight
+    /// words) — the runtime-supplied-weights path. Returns the first tuple
+    /// element flattened to f32.
+    pub fn execute_u32_weights(
+        &self,
+        name: &str,
+        acts: &[f32],
+        a_dims: &[usize],
+        words: &[u32],
+        w_dims: &[usize],
+    ) -> Result<Vec<f32>> {
+        let model = self.model(name)?;
+        let a_dims_i64: Vec<i64> = a_dims.iter().map(|&d| d as i64).collect();
+        let w_dims_i64: Vec<i64> = w_dims.iter().map(|&d| d as i64).collect();
+        let a_lit = xla::Literal::vec1(acts).reshape(&a_dims_i64)?;
+        let w_lit = xla::Literal::vec1(words).reshape(&w_dims_i64)?;
+        let result = model.exe.execute::<xla::Literal>(&[a_lit, w_lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_model_errors() {
+        if let Ok(rt) = Runtime::new() {
+            assert!(rt.execute_f32("nope", &[]).is_err());
+            assert!(!rt.has_model("nope"));
+        }
+    }
+}

@@ -5,7 +5,7 @@ use crate::arith::Format;
 
 /// The (weight, activation) precision pair of an experiment — the paper's
 /// Fig 10/12 x-axis labels `[P(W), P(A)]`, e.g. `[6, 6]` or `[16, 6]`.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct PrecisionPair {
     pub w: Format,
     pub a: Format,
@@ -19,6 +19,24 @@ impl PrecisionPair {
     /// Parse `[w, a]` axis labels: `pair(6, 6)` → e3m2 × e3m2.
     pub fn of_bits(w_bits: u32, a_bits: u32) -> Self {
         PrecisionPair { w: Format::default_fp(w_bits), a: Format::default_fp(a_bits) }
+    }
+
+    /// Parse a `WxA` pair spec: each side is either a bit width (mapped to
+    /// the paper's default FP format, `"6x16"` → e3m2 × e5m10) or an
+    /// explicit format (`"e2m3xfp16"`, `"int4xfp16"`).
+    pub fn parse(s: &str) -> Option<Self> {
+        let (ws, as_) = s.split_once('x')?;
+        let side = |t: &str| -> Option<Format> {
+            let t = t.trim();
+            match t.parse::<u32>() {
+                // Guard the range here: default_fp asserts on widths
+                // outside 3..=16, and a CLI typo must not panic.
+                Ok(bits) if (3..=16).contains(&bits) => Some(Format::default_fp(bits)),
+                Ok(_) => None,
+                Err(_) => Format::parse(t),
+            }
+        };
+        Some(PrecisionPair { w: side(ws)?, a: side(as_)? })
     }
 
     pub fn label(&self) -> String {
@@ -146,6 +164,24 @@ impl ModelSpec {
     }
 }
 
+impl ModelSpec {
+    /// The tiny transformer block used by serving demos and native-execution
+    /// tests (matches the Python side's `aot.py` BlockConfig defaults: seq
+    /// 32, d_model 128, d_ff 256, 4 heads, classic GELU FFN).
+    pub fn tiny() -> ModelSpec {
+        ModelSpec {
+            name: "tiny-block",
+            seq: 32,
+            layers: 1,
+            d_model: 128,
+            d_ff: 256,
+            heads: 4,
+            gated_ffn: false,
+            kv_heads: 4,
+        }
+    }
+}
+
 /// Bert-base-uncased (Table 3 row 1).
 pub fn bert_base() -> ModelSpec {
     ModelSpec {
@@ -268,6 +304,35 @@ mod tests {
         let a = bert_base().attention_gemms(PrecisionPair::of_bits(8, 8));
         assert_eq!(a.len(), 4);
         assert!(a.iter().all(|g| !matches!(g.kind, GemmKind::FfnUp | GemmKind::FfnDown)));
+    }
+
+    #[test]
+    fn pair_parse_specs() {
+        let p = PrecisionPair::parse("6x16").unwrap();
+        assert_eq!(p, PrecisionPair::of_bits(6, 16));
+        let q = PrecisionPair::parse("e2m3xfp16").unwrap();
+        assert_eq!(q.w, Format::fp(2, 3));
+        assert_eq!(q.a.bits(), 16);
+        let r = PrecisionPair::parse("int4xint8").unwrap();
+        assert_eq!((r.w, r.a), (Format::int(4), Format::int(8)));
+        assert!(PrecisionPair::parse("6").is_none());
+        assert!(PrecisionPair::parse("bogusx6").is_none());
+        // Out-of-range widths must reject, not panic in default_fp.
+        assert!(PrecisionPair::parse("2x8").is_none());
+        assert!(PrecisionPair::parse("17x17").is_none());
+        assert!(PrecisionPair::parse("0x8").is_none());
+        // ...and out-of-range explicit formats must not trip constructor
+        // asserts either (guarded inside Format::parse).
+        assert!(PrecisionPair::parse("int1x8").is_none());
+        assert!(PrecisionPair::parse("e9m2x8").is_none());
+        assert!(PrecisionPair::parse("e2m11x8").is_none());
+    }
+
+    #[test]
+    fn tiny_spec_matches_python_block() {
+        let t = ModelSpec::tiny();
+        assert_eq!((t.seq, t.d_model, t.d_ff, t.heads), (32, 128, 256, 4));
+        assert_eq!(t.head_dim(), 32);
     }
 
     #[test]

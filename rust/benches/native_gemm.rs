@@ -1,33 +1,94 @@
 //! Native bit-packed GEMM engine benchmarks: kernel throughput across
-//! precision pairs, and serving throughput of the native executor vs a
-//! no-op stub (isolating execution cost from coordinator overhead).
+//! precision pairs, transformer-shaped GEMMs with and without cached
+//! decoded weight panels, and serving throughput of the native executor vs
+//! a no-op stub (isolating execution cost from coordinator overhead).
 //! Uses the in-repo harness — criterion is unavailable in the offline build.
+//!
+//! Every run writes `BENCH_native_gemm.json` (machine-readable: shape,
+//! format pair, GFLOP/s, ns/MAC) so the repo's perf trajectory is tracked
+//! across PRs.
+//!
+//! `--smoke`: release-mode CI perf gate. Runs one small shape per headline
+//! pair and fails (exit 1) if ns/MAC regresses more than [`SMOKE_SLOWDOWN`]x
+//! over the checked-in `native_gemm_baseline.json` — a deliberately loose
+//! bound that catches accidental O(n) blowups, not machine noise.
 
 mod bench_util;
 
 use bench_util::{black_box, Bench};
-use flexibit::coordinator::{Batch, BatchPolicy, Executor, FnExecutor, Request, Server, ServerConfig};
-use flexibit::kernels::{gemm, GemmConfig, NativeExecutor, PackedMatrix};
+use flexibit::coordinator::{
+    Batch, BatchPolicy, Executor, FnExecutor, Request, Server, ServerConfig,
+};
+use flexibit::kernels::{
+    gemm, gemm_with_panels, GemmConfig, NativeExecutor, PackedMatrix, WeightPanels,
+};
 use flexibit::util::Rng;
 use flexibit::workload::{ModelSpec, PrecisionPair};
 use std::time::{Duration, Instant};
 
+const RESULTS_PATH: &str = "BENCH_native_gemm.json";
+/// Smoke results go to their own file so the CI gate never clobbers the
+/// cross-PR trajectory in [`RESULTS_PATH`].
+const SMOKE_RESULTS_PATH: &str = "BENCH_native_gemm_smoke.json";
+const BASELINE_PATH: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/rust/benches/native_gemm_baseline.json");
+const SMOKE_SLOWDOWN: f64 = 3.0;
+
+/// One measured case, serialized to `BENCH_native_gemm.json`.
+struct Record {
+    name: String,
+    m: usize,
+    k: usize,
+    n: usize,
+    pair: String,
+    median_s: f64,
+}
+
+impl Record {
+    fn macs(&self) -> f64 {
+        (self.m * self.k * self.n) as f64
+    }
+    fn gflops(&self) -> f64 {
+        2.0 * self.macs() / self.median_s / 1e9
+    }
+    fn ns_per_mac(&self) -> f64 {
+        self.median_s * 1e9 / self.macs()
+    }
+}
+
 fn main() {
+    if std::env::args().any(|a| a == "--smoke") {
+        smoke();
+        return;
+    }
+    full();
+}
+
+fn full() {
     println!("== native_gemm ==");
     let mut rng = Rng::new(13);
+    let mut records: Vec<Record> = Vec::new();
 
     // Kernel throughput across the evaluation's precision pairs.
     let (m, k, n) = (64usize, 512usize, 512usize);
     let pairs: Vec<(u32, u32)> = vec![(4, 8), (5, 6), (6, 6), (8, 8), (16, 16)];
     for (wb, ab) in pairs {
         let pair = PrecisionPair::of_bits(wb, ab);
-        let a = PackedMatrix::from_codes(&rng.codes(m * k, pair.a.bits()), m, k, pair.a);
-        let w = PackedMatrix::from_codes(&rng.codes(k * n, pair.w.bits()), k, n, pair.w);
-        let cfg = GemmConfig::default();
-        let b = Bench::run(&format!("native GEMM {m}x{k}x{n} {}", pair.label()), 2, 15, || {
-            black_box(gemm(&a, &w, &cfg).len());
-        });
-        b.report(2.0 * (m * k * n) as f64, "FLOP");
+        records.push(bench_kernel(&mut rng, pair, m, k, n, 2, 15, false));
+    }
+    // INT x INT: exercises the i32 fast path.
+    let int_pair = PrecisionPair::new(
+        flexibit::arith::Format::int(4),
+        flexibit::arith::Format::int(4),
+    );
+    records.push(bench_kernel(&mut rng, int_pair, m, k, n, 2, 15, false));
+
+    // Transformer-shaped GEMMs (a d=4096 FFN-ish projection), packed decode
+    // vs cached decoded panels — the headline ISSUE-3 comparison.
+    let (tm, tk, tn) = (32usize, 4096usize, 4096usize);
+    for pair in [PrecisionPair::of_bits(6, 6), int_pair] {
+        records.push(bench_kernel(&mut rng, pair, tm, tk, tn, 1, 5, false));
+        records.push(bench_kernel(&mut rng, pair, tm, tk, tn, 1, 5, true));
     }
 
     // Single-threaded vs multi-threaded kernel.
@@ -41,6 +102,14 @@ fn main() {
             black_box(gemm(&a, &w, &cfg).len());
         });
         b.report(2.0 * (m * k * n) as f64, "FLOP");
+        records.push(Record {
+            name: format!("[6,6] {label}"),
+            m,
+            k,
+            n,
+            pair: format!("{}x{}", pair.w, pair.a),
+            median_s: b.median(),
+        });
     }
 
     // Serving throughput: native executor vs no-op stub, identical streams.
@@ -54,6 +123,131 @@ fn main() {
          stub {stub_rps:.1} req/s -> executor share {:.0}%",
         100.0 * (1.0 - native_rps / stub_rps)
     );
+
+    write_json(&records, RESULTS_PATH);
+    println!("wrote {} records to {RESULTS_PATH}", records.len());
+}
+
+/// Measure one (pair, shape) case; with `panels` the weight matrix is
+/// pre-decoded into panel-major tiles (the weight-cache hot path).
+#[allow(clippy::too_many_arguments)]
+fn bench_kernel(
+    rng: &mut Rng,
+    pair: PrecisionPair,
+    m: usize,
+    k: usize,
+    n: usize,
+    warmup: usize,
+    iters: usize,
+    panels: bool,
+) -> Record {
+    let a = PackedMatrix::from_codes(&rng.codes(m * k, pair.a.bits()), m, k, pair.a);
+    let w = PackedMatrix::from_codes(&rng.codes(k * n, pair.w.bits()), k, n, pair.w);
+    let cfg = GemmConfig::default();
+    let mode = if panels { " panels" } else { "" };
+    // `w x a` as explicit formats ("int4xint4"), not bit widths — [4,4]
+    // would be ambiguous between FP4 and INT4 in the JSON trail.
+    let name = format!("native GEMM {m}x{k}x{n} {}x{}{mode}", pair.w, pair.a);
+    let b = if panels {
+        let p = WeightPanels::build(&w, cfg.kc, cfg.nc);
+        Bench::run(&name, warmup, iters, || {
+            black_box(gemm_with_panels(&a, &w, &p, &cfg).len());
+        })
+    } else {
+        Bench::run(&name, warmup, iters, || {
+            black_box(gemm(&a, &w, &cfg).len());
+        })
+    };
+    b.report(2.0 * (m * k * n) as f64, "FLOP");
+    Record { name, m, k, n, pair: format!("{}x{}", pair.w, pair.a), median_s: b.median() }
+}
+
+/// CI perf gate: one small shape per headline pair against the checked-in
+/// baseline.
+fn smoke() {
+    println!("== native_gemm --smoke ==");
+    let mut rng = Rng::new(13);
+    let (m, k, n) = (32usize, 256usize, 256usize);
+    let cases = [
+        ("smoke fp6x6", PrecisionPair::of_bits(6, 6)),
+        (
+            "smoke int4x4",
+            PrecisionPair::new(
+                flexibit::arith::Format::int(4),
+                flexibit::arith::Format::int(4),
+            ),
+        ),
+    ];
+    let baseline = std::fs::read_to_string(BASELINE_PATH)
+        .unwrap_or_else(|e| panic!("cannot read {BASELINE_PATH}: {e}"));
+    let mut records = Vec::new();
+    let mut failed = false;
+    for (key, pair) in cases {
+        let a = PackedMatrix::from_codes(&rng.codes(m * k, pair.a.bits()), m, k, pair.a);
+        let w = PackedMatrix::from_codes(&rng.codes(k * n, pair.w.bits()), k, n, pair.w);
+        let cfg = GemmConfig::default();
+        let b = Bench::run(key, 3, 11, || {
+            black_box(gemm(&a, &w, &cfg).len());
+        });
+        b.report(2.0 * (m * k * n) as f64, "FLOP");
+        let rec = Record {
+            name: key.to_string(),
+            m,
+            k,
+            n,
+            pair: format!("{}x{}", pair.w, pair.a),
+            median_s: b.median(),
+        };
+        let base = baseline_value(&baseline, key)
+            .unwrap_or_else(|| panic!("no baseline entry for '{key}' in {BASELINE_PATH}"));
+        let got = rec.ns_per_mac();
+        let limit = base * SMOKE_SLOWDOWN;
+        let verdict = if got <= limit { "ok" } else { "REGRESSION" };
+        println!("{key}: {got:.3} ns/MAC (baseline {base:.3}, limit {limit:.3}) {verdict}");
+        if got > limit {
+            failed = true;
+        }
+        records.push(rec);
+    }
+    write_json(&records, SMOKE_RESULTS_PATH);
+    if failed {
+        eprintln!("smoke perf gate FAILED: >{SMOKE_SLOWDOWN}x over baseline");
+        std::process::exit(1);
+    }
+}
+
+/// Pull `"key": <number>` out of the baseline JSON (hand-rolled: the
+/// offline build has no serde).
+fn baseline_value(json: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\"");
+    let at = json.find(&pat)? + pat.len();
+    let rest = json[at..].trim_start().strip_prefix(':')?.trim_start();
+    let is_num = |c: char| c.is_ascii_digit() || "+-.eE".contains(c);
+    let end = rest.find(|c: char| !is_num(c)).unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+fn write_json(records: &[Record], path: &str) {
+    let mut s = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        let sep = if i + 1 < records.len() { "," } else { "" };
+        s.push_str(&format!(
+            "  {{\"name\": \"{}\", \"m\": {}, \"k\": {}, \"n\": {}, \"pair\": \"{}\", \
+             \"median_s\": {:.9}, \"gflops\": {:.3}, \"ns_per_mac\": {:.6}}}{sep}\n",
+            r.name,
+            r.m,
+            r.k,
+            r.n,
+            r.pair,
+            r.median_s,
+            r.gflops(),
+            r.ns_per_mac(),
+        ));
+    }
+    s.push_str("]\n");
+    if let Err(e) = std::fs::write(path, s) {
+        eprintln!("could not write {path}: {e}");
+    }
 }
 
 /// Drain 64 mixed-precision requests through a server; return requests/s.

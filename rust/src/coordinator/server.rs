@@ -11,11 +11,17 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-/// Aggregated serving metrics.
+/// Aggregated serving metrics. Completion/latency stats count only batches
+/// whose executor succeeded; failed batches land in `requests_failed` /
+/// `batches_failed` so SLO accounting stays truthful.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     pub requests_completed: u64,
+    /// Requests in batches whose executor returned an error. Excluded from
+    /// completion, latency, and co-simulation stats.
+    pub requests_failed: u64,
     pub batches_executed: u64,
+    pub batches_failed: u64,
     pub total_batch_size: u64,
     /// Wall-clock execution seconds (host, PJRT).
     pub host_exec_s: f64,
@@ -30,6 +36,12 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Requests that left the system, successfully or not — the drain
+    /// condition for streams that may contain failing batches.
+    pub fn requests_finished(&self) -> u64 {
+        self.requests_completed + self.requests_failed
+    }
+
     pub fn mean_latency_s(&self) -> f64 {
         if self.requests_completed == 0 {
             0.0
@@ -121,10 +133,25 @@ impl Server {
                 match maybe {
                     Some(batch) => {
                         let t0 = Instant::now();
-                        let host_s = executor.execute(&batch).unwrap_or_else(|e| {
-                            eprintln!("executor '{}' failed on batch: {e}", executor.name());
-                            0.0
-                        });
+                        let host_s = match executor.execute(&batch) {
+                            Ok(host_s) => host_s,
+                            Err(e) => {
+                                // A failed batch completed nothing: count it
+                                // as failed and keep it out of completion,
+                                // latency, and co-simulation stats.
+                                eprintln!(
+                                    "executor '{}' failed on batch: {e}",
+                                    executor.name()
+                                );
+                                let mut met = m.lock().unwrap();
+                                met.batches_failed += 1;
+                                met.requests_failed += batch.requests.len() as u64;
+                                // The batcher still reconfigured to serve
+                                // this batch — keep the counter in sync.
+                                met.reconfigurations = b.lock().unwrap().reconfigurations;
+                                continue;
+                            }
+                        };
                         let done = Instant::now();
                         // Co-simulation: estimate FlexiBit latency/energy for
                         // this batch (batch of M=batch_size token rows).
@@ -174,8 +201,18 @@ impl Server {
     /// elapses; returns whether the target was reached. The standard drain
     /// step between submitting a stream and calling [`Server::shutdown`].
     pub fn await_completed(&self, n: u64, timeout: Duration) -> bool {
+        self.await_count(n, timeout, |m| m.requests_completed)
+    }
+
+    /// Like [`Server::await_completed`] but counts failed requests too —
+    /// use to drain streams where some batches are expected to error.
+    pub fn await_finished(&self, n: u64, timeout: Duration) -> bool {
+        self.await_count(n, timeout, |m| m.requests_finished())
+    }
+
+    fn await_count(&self, n: u64, timeout: Duration, count: impl Fn(&Metrics) -> u64) -> bool {
         let deadline = Instant::now() + timeout;
-        while self.metrics().requests_completed < n {
+        while count(&self.metrics()) < n {
             if Instant::now() >= deadline {
                 return false;
             }
@@ -270,6 +307,39 @@ mod tests {
         let m = server.shutdown();
         assert_eq!(m.requests_completed, 8);
         assert!(m.reconfigurations >= 1, "precision switching must be counted");
+    }
+
+    #[test]
+    fn failing_executor_counts_failures_not_completions() {
+        let cfg = ServerConfig {
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1), max_streak: 4 },
+            sim_config: crate::sim::mobile_a(),
+            sim_model: tiny_model(),
+        };
+        // Executor fails every odd-id batch (ids arrive in order, batch of
+        // up to 4 same-precision requests — use precision to split batches).
+        let server = Server::start(
+            cfg,
+            Box::new(FnExecutor(|b: &Batch| -> Result<f64, String> {
+                if b.pair.w.bits() == 6 {
+                    Err("synthetic executor failure".into())
+                } else {
+                    Ok(0.0)
+                }
+            })),
+        );
+        for i in 0..12 {
+            // Half the stream at w=6 bits (fails), half at w=8 (succeeds).
+            server.submit(mk_req(i, if i % 2 == 0 { 6 } else { 8 }));
+        }
+        assert!(server.await_finished(12, Duration::from_secs(5)), "stream must drain");
+        let m = server.shutdown();
+        assert_eq!(m.requests_failed, 6, "failed batches count as failed");
+        assert_eq!(m.requests_completed, 6, "successes still complete");
+        assert!(m.batches_failed >= 1);
+        assert_eq!(m.requests_finished(), 12);
+        // Failed batches contribute no latency or batch-size stats.
+        assert_eq!(m.total_batch_size, m.requests_completed);
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Per-(model, weight-format) packed-weight cache.
+//! Per-(model, weight-format) packed-weight cache, with budgeted decoded
+//! weight panels.
 //!
 //! Quantizing + bit-packing a model's weights is the expensive, precision-
 //! dependent part of native execution. The paper's reconfiguration model is
@@ -7,12 +8,27 @@
 //! and every later batch at that configuration reuses the packed buffers.
 //! (The activation format does not affect weight packing, so `[6,6]` and
 //! `[6,16]` share an entry — strictly more sharing than a per-pair key.)
+//!
+//! On top of the packed storage of record, each entry may also hold the
+//! weights **decoded once** into panel-major tiles ([`WeightPanels`]), so
+//! the GEMM hot loop never re-extracts and re-decodes the same weight bits
+//! on every forward. Panels cost 4 B/element versus the packed `bits/8` —
+//! the paper's memory-footprint win traded back for hot-loop speed — so
+//! they are built greedily under an explicit process-wide byte budget
+//! ([`WeightCache::with_panel_budget`]); matrices that don't fit keep
+//! decoding from packed storage, bit-identically.
 
 use super::packed::PackedMatrix;
+use super::panels::WeightPanels;
 use crate::arith::Format;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// Default decoded-panel budget: 512 MiB — roomy for the synthesized test
+/// models, a real knob for serving (0 disables panels entirely, giving the
+/// paper-faithful packed-only footprint).
+pub const DEFAULT_PANEL_BUDGET: usize = 512 << 20;
 
 /// One transformer layer's weights, quantized and bit-packed.
 #[derive(Debug, Clone)]
@@ -29,15 +45,88 @@ pub struct PackedLayer {
     pub w_down: PackedMatrix,
 }
 
+impl PackedLayer {
+    fn bytes(&self) -> usize {
+        self.wqkv.bytes()
+            + self.wo.bytes()
+            + self.w_up.bytes()
+            + self.w_gate.as_ref().map_or(0, |g| g.bytes())
+            + self.w_down.bytes()
+    }
+}
+
+/// One layer's decoded panels — `None` for any matrix the budget could not
+/// accommodate (the GEMM then decodes that matrix from packed storage).
+#[derive(Debug, Clone, Default)]
+pub struct LayerPanels {
+    pub wqkv: Option<WeightPanels>,
+    pub wo: Option<WeightPanels>,
+    pub w_up: Option<WeightPanels>,
+    pub w_gate: Option<WeightPanels>,
+    pub w_down: Option<WeightPanels>,
+}
+
+impl LayerPanels {
+    fn bytes(&self) -> usize {
+        [&self.wqkv, &self.wo, &self.w_up, &self.w_gate, &self.w_down]
+            .iter()
+            .filter_map(|p| p.as_ref().map(|p| p.bytes()))
+            .sum()
+    }
+}
+
+/// A cache entry: the packed weights (storage of record) plus whatever
+/// decoded panels fit the budget, parallel per layer.
+#[derive(Debug)]
+pub struct CachedModel {
+    pub layers: Vec<PackedLayer>,
+    pub panels: Vec<LayerPanels>,
+}
+
+impl CachedModel {
+    pub fn packed_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.bytes()).sum()
+    }
+
+    pub fn panel_bytes(&self) -> usize {
+        self.panels.iter().map(|p| p.bytes()).sum()
+    }
+}
+
 /// Thread-safe cache of packed model weights keyed by model, then weight
 /// format. The nested map keeps the hot hit path allocation-free: probing
 /// by `&str` needs no owned key (a `(String, Format)` tuple key would force
 /// a `String` clone per lookup).
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct WeightCache {
-    entries: Mutex<HashMap<String, HashMap<Format, Arc<Vec<PackedLayer>>>>>,
+    entries: Mutex<HashMap<String, HashMap<Format, Arc<CachedModel>>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// Byte ceiling for decoded panels across every entry.
+    panel_budget: usize,
+    /// Decoded panel bytes currently resident (kept outside the map lock's
+    /// critical data so metrics reads don't walk every entry).
+    panel_resident: AtomicUsize,
+    /// Tile shape panels are built for — must match the GEMM config the
+    /// model executes with (the panels carry it, so a mismatch only costs
+    /// the panels' tiling winning; results are tiling-invariant).
+    panel_kc: usize,
+    panel_nc: usize,
+}
+
+impl Default for WeightCache {
+    fn default() -> Self {
+        let cfg = super::gemm::GemmConfig::default();
+        WeightCache {
+            entries: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            panel_budget: DEFAULT_PANEL_BUDGET,
+            panel_resident: AtomicUsize::new(0),
+            panel_kc: cfg.kc,
+            panel_nc: cfg.nc,
+        }
+    }
 }
 
 impl WeightCache {
@@ -45,11 +134,23 @@ impl WeightCache {
         Self::default()
     }
 
+    /// Set the decoded-panel byte budget (0 = packed-only, the paper's
+    /// minimal-footprint mode).
+    pub fn with_panel_budget(mut self, bytes: usize) -> Self {
+        self.panel_budget = bytes;
+        self
+    }
+
+    pub fn panel_budget(&self) -> usize {
+        self.panel_budget
+    }
+
     /// Fetch the packed weights for `(model, w_fmt)`, building them with
-    /// `pack` on first use. The build runs under the cache lock: the serving
-    /// worker is single-threaded and the GEMM kernel parallelizes internally,
-    /// so a fancier once-per-key latch would buy nothing here.
-    pub fn get_or_pack<F>(&self, model: &str, w_fmt: Format, pack: F) -> Arc<Vec<PackedLayer>>
+    /// `pack` on first use and decoding weight panels under the budget. The
+    /// build runs under the cache lock: the serving worker is
+    /// single-threaded and the GEMM kernel parallelizes internally, so a
+    /// fancier once-per-key latch would buy nothing here.
+    pub fn get_or_pack<F>(&self, model: &str, w_fmt: Format, pack: F) -> Arc<CachedModel>
     where
         F: FnOnce() -> Vec<PackedLayer>,
     {
@@ -59,9 +160,37 @@ impl WeightCache {
             return found.clone();
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let built = Arc::new(pack());
+        let layers = pack();
+        let panels = self.build_panels(&layers);
+        let built = Arc::new(CachedModel { layers, panels });
+        self.panel_resident.fetch_add(built.panel_bytes(), Ordering::Relaxed);
         map.entry(model.to_string()).or_default().insert(w_fmt, built.clone());
         built
+    }
+
+    /// Decode panels for as many matrices as the remaining budget allows,
+    /// in execution order (early layers first — a partial decode still
+    /// speeds up a prefix of every forward).
+    fn build_panels(&self, layers: &[PackedLayer]) -> Vec<LayerPanels> {
+        let mut used = self.panel_resident.load(Ordering::Relaxed);
+        let mut build = |w: &PackedMatrix| -> Option<WeightPanels> {
+            let cost = w.rows() * w.cols() * 4;
+            if used + cost > self.panel_budget {
+                return None;
+            }
+            used += cost;
+            Some(WeightPanels::build(w, self.panel_kc, self.panel_nc))
+        };
+        layers
+            .iter()
+            .map(|l| LayerPanels {
+                wqkv: build(&l.wqkv),
+                wo: build(&l.wo),
+                w_up: build(&l.w_up),
+                w_gate: l.w_gate.as_ref().and_then(&mut build),
+                w_down: build(&l.w_down),
+            })
+            .collect()
     }
 
     /// (hits, misses) counters — misses equal distinct (model, format) packs.
@@ -81,28 +210,28 @@ impl WeightCache {
     /// Total packed bytes held across all entries.
     pub fn resident_bytes(&self) -> usize {
         let map = self.entries.lock().unwrap();
-        map.values()
-            .flat_map(|inner| inner.values())
-            .flat_map(|layers| layers.iter())
-            .map(|l| {
-                l.wqkv.bytes()
-                    + l.wo.bytes()
-                    + l.w_up.bytes()
-                    + l.w_gate.as_ref().map_or(0, |g| g.bytes())
-                    + l.w_down.bytes()
-            })
-            .sum()
+        map.values().flat_map(|inner| inner.values()).map(|e| e.packed_bytes()).sum()
+    }
+
+    /// Total decoded-panel bytes held across all entries (≤ the budget).
+    pub fn panel_resident_bytes(&self) -> usize {
+        self.panel_resident.load(Ordering::Relaxed)
     }
 
     /// Drop every cached entry (e.g. on model unload).
     pub fn clear(&self) {
         self.entries.lock().unwrap().clear();
+        self.panel_resident.store(0, Ordering::Relaxed);
     }
 
     /// Drop all entries for one model, across every weight format — required
     /// when a model is re-registered so stale packed weights can't serve.
     pub fn evict_model(&self, model: &str) {
-        self.entries.lock().unwrap().remove(model);
+        let mut map = self.entries.lock().unwrap();
+        if let Some(inner) = map.remove(model) {
+            let freed: usize = inner.values().map(|e| e.panel_bytes()).sum();
+            self.panel_resident.fetch_sub(freed, Ordering::Relaxed);
+        }
     }
 }
 
@@ -127,7 +256,7 @@ mod tests {
                 builds += 1;
                 vec![dummy_layer(fp6)]
             });
-            assert_eq!(e.len(), 1);
+            assert_eq!(e.layers.len(), 1);
         }
         assert_eq!(builds, 1, "same key must pack once");
         cache.get_or_pack("tiny", fp4, || {
@@ -145,6 +274,7 @@ mod tests {
         assert!(cache.resident_bytes() > 0);
         cache.clear();
         assert!(cache.is_empty());
+        assert_eq!(cache.panel_resident_bytes(), 0);
     }
 
     #[test]
@@ -154,5 +284,35 @@ mod tests {
         let a = cache.get_or_pack("m", fp6, || vec![dummy_layer(fp6)]);
         let b = cache.get_or_pack("m", fp6, || vec![dummy_layer(fp6)]);
         assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn panel_budget_gates_decoding() {
+        let fp6 = Format::Fp(FpFormat::FP6_E3M2);
+        // Zero budget: packed only.
+        let none = WeightCache::new().with_panel_budget(0);
+        let e = none.get_or_pack("m", fp6, || vec![dummy_layer(fp6)]);
+        assert_eq!(e.panel_bytes(), 0);
+        assert!(e.panels.iter().all(|p| p.wqkv.is_none() && p.w_down.is_none()));
+        assert_eq!(none.panel_resident_bytes(), 0);
+
+        // Roomy budget: every matrix decoded; accounting matches.
+        let all = WeightCache::new().with_panel_budget(1 << 20);
+        let e = all.get_or_pack("m", fp6, || vec![dummy_layer(fp6)]);
+        let expect = (4 * 12 + 4 * 4 + 4 * 8 + 8 * 4) * 4;
+        assert_eq!(e.panel_bytes(), expect);
+        assert_eq!(all.panel_resident_bytes(), expect);
+
+        // Tight budget: a prefix of matrices decodes, the rest stay packed.
+        let tight = WeightCache::new().with_panel_budget(4 * 12 * 4 + 4 * 4 * 4);
+        let e = tight.get_or_pack("m", fp6, || vec![dummy_layer(fp6)]);
+        assert!(e.panels[0].wqkv.is_some());
+        assert!(e.panels[0].wo.is_some());
+        assert!(e.panels[0].w_up.is_none(), "over-budget matrix must stay packed");
+        assert_eq!(tight.panel_resident_bytes(), e.panel_bytes());
+
+        // Eviction releases the budget.
+        tight.evict_model("m");
+        assert_eq!(tight.panel_resident_bytes(), 0);
     }
 }

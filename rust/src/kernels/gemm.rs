@@ -1,20 +1,37 @@
 //! Tiled, cache-blocked GEMM over bit-packed operands.
 //!
 //! `C[M,N] = A[M,K] x W[K,N]` where both operands are [`PackedMatrix`] of
-//! arbitrary formats. Packed words are decoded lane-wise into f32 tiles and
-//! multiply-accumulated; output row blocks run in parallel on scoped std
-//! threads (the offline build carries no rayon).
+//! arbitrary formats. Packed words are decoded lane-wise (multi-lane, one
+//! load per word) into tiles and multiply-accumulated by an 8-wide
+//! register-blocked micro-kernel; output row blocks run in parallel on
+//! scoped std threads (the offline build carries no rayon). Weight tiles
+//! can be fed from pre-decoded [`WeightPanels`] (see
+//! [`super::panels`]) so cached weights skip decode entirely.
 //!
 //! **Bit-exactness contract.** For every output element the kernel performs
 //! exactly the sequence `acc += a_f32 * w_f32` in ascending-k order, with no
 //! FMA contraction and no reassociation — tiling over (jb, kb) visits each
-//! element's k range in order, and row-block parallelism never splits a
-//! single element's accumulation. The result is therefore bit-identical to
-//! the naive reference [`crate::arith::gemm_ref`] for any precision pair and
-//! any tile configuration, which `rust/tests/native_kernels.rs` sweeps.
+//! element's k range in order, row-block parallelism never splits a single
+//! element's accumulation, and the 8-wide micro-kernel keeps one
+//! accumulation chain per output column (partial sums live in a register
+//! across the tile and are stored once — the same chain the scalar loop
+//! builds). The result is therefore bit-identical to the naive reference
+//! [`crate::arith::gemm_ref`] for any precision pair and any tile
+//! configuration, which `rust/tests/native_kernels.rs` sweeps.
+//!
+//! **Integer fast path.** When both operands are INT formats and
+//! `k * max|a| * max|w| <= 2^24` (format-derived bounds), lanes are decoded
+//! to sign-extended `i32` and accumulated in `i32`. Every product and every
+//! partial sum is then an integer of magnitude <= 2^24 — exactly
+//! representable in f32 — so the i32 accumulation, the f32 accumulation,
+//! and `gemm_ref` all agree bit-for-bit, and the integer path is free to
+//! vectorize without breaking the contract. Pairs that could exceed the
+//! bound fall back to the f32 path.
 
 use super::packed::{Decoder, PackedMatrix};
+use super::panels::{PanelData, WeightPanels};
 use crate::arith::Format;
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -22,6 +39,11 @@ use std::sync::{Arc, Mutex, OnceLock};
 /// per-head attention GEMMs would otherwise pay more in thread spawn/join
 /// than in compute.
 const PARALLEL_MACS_THRESHOLD: usize = 1 << 20;
+
+/// Largest accumulated magnitude for which every intermediate of an INT×INT
+/// dot product is exactly representable in f32 (24-bit significand): within
+/// this bound the i32 fast path is provably bit-identical to the f32 path.
+const INT_EXACT_LIMIT: i64 = 1 << 24;
 
 /// Process-wide decoder cache. The same handful of formats recurs across
 /// every GEMM of a model forward, and building a 16-bit LUT costs 65k
@@ -31,6 +53,53 @@ fn decoder_for(fmt: Format) -> Arc<Decoder> {
     let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
     let mut map = cache.lock().unwrap();
     map.entry(fmt).or_insert_with(|| Arc::new(Decoder::new(fmt))).clone()
+}
+
+/// Per-thread reusable tile/stripe buffers. A serving worker issues
+/// thousands of GEMMs per forward; without this every stripe pays a
+/// `vec!` allocation for its decoded A rows and W tile. Buffers only grow.
+/// The reuse pays off on the single-threaded path (a long-lived serving
+/// worker runs the many small attention GEMMs below the parallel
+/// threshold); scoped worker threads are fresh per call, so their scratch
+/// is allocated once per spawn — same count as before, amortized over the
+/// ≥2^20 MACs that justified spawning.
+#[derive(Default)]
+struct Scratch {
+    a_f: Vec<f32>,
+    a_i: Vec<i32>,
+    wt_f: Vec<f32>,
+    wt_i: Vec<i32>,
+    c_i: Vec<i32>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
+}
+
+/// Borrow the first `n` elements of a scratch vector, growing it if needed.
+fn grown<T: Copy + Default>(v: &mut Vec<T>, n: usize) -> &mut [T] {
+    if v.len() < n {
+        v.resize(n, T::default());
+    }
+    &mut v[..n]
+}
+
+/// True when the INT×INT i32 fast path is provably exact for depth `k`:
+/// `k * max|a| * max|w| <= 2^24` with format-derived magnitude bounds
+/// (`2^(bits-1)` for two's complement).
+pub fn int_fast_path_exact(a_fmt: Format, w_fmt: Format, k: usize) -> bool {
+    match (a_fmt, w_fmt) {
+        (Format::Int(ia), Format::Int(iw)) => {
+            let amax = 1i64 << (ia.bits - 1);
+            let wmax = 1i64 << (iw.bits - 1);
+            let bound = i64::try_from(k)
+                .ok()
+                .and_then(|kk| kk.checked_mul(amax))
+                .and_then(|x| x.checked_mul(wmax));
+            matches!(bound, Some(b) if b <= INT_EXACT_LIMIT)
+        }
+        _ => false,
+    }
 }
 
 /// Tiling and threading configuration.
@@ -62,6 +131,33 @@ pub fn gemm_default(a: &PackedMatrix, w: &PackedMatrix) -> Vec<f32> {
 
 /// Packed GEMM: decode-and-accumulate `a [M,K] x w [K,N] -> Vec<f32> [M,N]`.
 pub fn gemm(a: &PackedMatrix, w: &PackedMatrix, cfg: &GemmConfig) -> Vec<f32> {
+    gemm_inner(a, w, None, cfg)
+}
+
+/// Packed GEMM with the weight operand's decoded panels supplied (see
+/// [`WeightPanels`]): tile fills become slice borrows instead of bit
+/// extraction + LUT decode. `panels` must have been built from `w`; the
+/// panels' own `(kc, nc)` tiling is used (tiling never changes results).
+pub fn gemm_with_panels(
+    a: &PackedMatrix,
+    w: &PackedMatrix,
+    panels: &WeightPanels,
+    cfg: &GemmConfig,
+) -> Vec<f32> {
+    assert_eq!(
+        (panels.k(), panels.n()),
+        (w.rows(), w.cols()),
+        "panels were not built from this weight matrix"
+    );
+    gemm_inner(a, w, Some(panels), cfg)
+}
+
+fn gemm_inner(
+    a: &PackedMatrix,
+    w: &PackedMatrix,
+    panels: Option<&WeightPanels>,
+    cfg: &GemmConfig,
+) -> Vec<f32> {
     assert_eq!(
         a.cols(),
         w.rows(),
@@ -78,8 +174,13 @@ pub fn gemm(a: &PackedMatrix, w: &PackedMatrix, cfg: &GemmConfig) -> Vec<f32> {
         return c;
     }
 
-    let a_dec = decoder_for(a.fmt());
-    let w_dec = decoder_for(w.fmt());
+    // Panels dictate the tiling when present — their tiles are laid out for
+    // exactly one (kc, nc).
+    let (kc, nc) = match panels {
+        Some(p) => (p.kc(), p.nc()),
+        None => (cfg.kc, cfg.nc),
+    };
+    let int_path = int_fast_path_exact(a.fmt(), w.fmt(), k);
 
     let threads = if cfg.threads > 0 {
         cfg.threads
@@ -92,13 +193,12 @@ pub fn gemm(a: &PackedMatrix, w: &PackedMatrix, cfg: &GemmConfig) -> Vec<f32> {
     let rows_per = m.div_ceil(threads);
 
     if threads == 1 {
-        gemm_rows(a, w, &a_dec, &w_dec, 0, &mut c, cfg);
+        gemm_rows(a, w, panels, 0, &mut c, kc, nc, int_path);
     } else {
         std::thread::scope(|s| {
             for (t, c_chunk) in c.chunks_mut(rows_per * n).enumerate() {
-                let (a_dec, w_dec) = (&a_dec, &w_dec);
                 s.spawn(move || {
-                    gemm_rows(a, w, a_dec, w_dec, t * rows_per, c_chunk, cfg);
+                    gemm_rows(a, w, panels, t * rows_per, c_chunk, kc, nc, int_path);
                 });
             }
         });
@@ -106,49 +206,201 @@ pub fn gemm(a: &PackedMatrix, w: &PackedMatrix, cfg: &GemmConfig) -> Vec<f32> {
     c
 }
 
-/// Compute one horizontal stripe of C: rows `row0 ..` covering `c_chunk`.
+/// Compute one horizontal stripe of C: rows `row0 ..` covering `c_chunk`,
+/// using this thread's reusable scratch buffers.
+#[allow(clippy::too_many_arguments)]
 fn gemm_rows(
     a: &PackedMatrix,
     w: &PackedMatrix,
-    a_dec: &Decoder,
-    w_dec: &Decoder,
+    panels: Option<&WeightPanels>,
     row0: usize,
     c_chunk: &mut [f32],
-    cfg: &GemmConfig,
+    kc: usize,
+    nc: usize,
+    int_path: bool,
+) {
+    SCRATCH.with(|s| {
+        let s = &mut *s.borrow_mut();
+        if int_path {
+            gemm_rows_i32(a, w, panels, row0, c_chunk, kc, nc, s);
+        } else {
+            gemm_rows_f32(a, w, panels, row0, c_chunk, kc, nc, s);
+        }
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_rows_f32(
+    a: &PackedMatrix,
+    w: &PackedMatrix,
+    panels: Option<&WeightPanels>,
+    row0: usize,
+    c_chunk: &mut [f32],
+    kc: usize,
+    nc: usize,
+    s: &mut Scratch,
 ) {
     let (k, n) = (a.cols(), w.cols());
     let rows = c_chunk.len() / n;
 
     // Decode this stripe's A rows once (activations are the small operand in
-    // serving; weights stay packed and are decoded tile-wise below).
-    let mut a_f = vec![0f32; rows * k];
+    // serving; weights stay packed — or pre-decoded in panels — below).
+    let a_dec = decoder_for(a.fmt());
+    let a_f = grown(&mut s.a_f, rows * k);
     for r in 0..rows {
-        a.decode_row_range(row0 + r, 0, a_dec, &mut a_f[r * k..(r + 1) * k]);
+        a.decode_row_range(row0 + r, 0, &a_dec, &mut a_f[r * k..(r + 1) * k]);
     }
 
-    let mut wt = vec![0f32; cfg.kc * cfg.nc];
-    for jb in (0..n).step_by(cfg.nc) {
-        let nb = cfg.nc.min(n - jb);
-        for kb in (0..k).step_by(cfg.kc) {
-            let kcur = cfg.kc.min(k - kb);
-            // Fill the W tile: rows kb..kb+kcur, cols jb..jb+nb, decoded
+    let w_dec = if panels.is_none() { Some(decoder_for(w.fmt())) } else { None };
+    let wt = grown(&mut s.wt_f, kc * nc);
+    for jb in (0..n).step_by(nc) {
+        let nb = nc.min(n - jb);
+        for kb in (0..k).step_by(kc) {
+            let kcur = kc.min(k - kb);
+            // Source the W tile: panel slice (free), i32 panel converted
+            // (exact: i32 -> f32 rounds like f64-decode -> f32), or decoded
             // lane-wise straight out of the packed words.
-            for kk in 0..kcur {
-                w.decode_row_range(kb + kk, jb, w_dec, &mut wt[kk * nb..(kk + 1) * nb]);
-            }
-            // Multiply-accumulate the tile into the C stripe. Ascending kk
-            // keeps each element's accumulation in global ascending-k order.
-            for r in 0..rows {
-                let a_row = &a_f[r * k + kb..r * k + kb + kcur];
-                let c_row = &mut c_chunk[r * n + jb..r * n + jb + nb];
-                for (kk, &av) in a_row.iter().enumerate() {
-                    let w_row = &wt[kk * nb..(kk + 1) * nb];
-                    for (cv, &wv) in c_row.iter_mut().zip(w_row) {
-                        *cv += av * wv;
+            let tile: &[f32] = match panels.map(|p| (p, p.data())) {
+                Some((p, PanelData::F32(buf))) => &buf[p.tile_range(jb, kb, nb, kcur)],
+                Some((p, PanelData::I32(buf))) => {
+                    let src = &buf[p.tile_range(jb, kb, nb, kcur)];
+                    for (d, &v) in wt[..kcur * nb].iter_mut().zip(src) {
+                        *d = v as f32;
                     }
+                    &wt[..kcur * nb]
                 }
+                None => {
+                    let wd = w_dec.as_ref().unwrap();
+                    for kk in 0..kcur {
+                        w.decode_row_range(kb + kk, jb, wd, &mut wt[kk * nb..(kk + 1) * nb]);
+                    }
+                    &wt[..kcur * nb]
+                }
+            };
+            for r in 0..rows {
+                micro_kernel_f32(
+                    &a_f[r * k + kb..r * k + kb + kcur],
+                    tile,
+                    nb,
+                    &mut c_chunk[r * n + jb..r * n + jb + nb],
+                );
             }
         }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_rows_i32(
+    a: &PackedMatrix,
+    w: &PackedMatrix,
+    panels: Option<&WeightPanels>,
+    row0: usize,
+    c_chunk: &mut [f32],
+    kc: usize,
+    nc: usize,
+    s: &mut Scratch,
+) {
+    let (k, n) = (a.cols(), w.cols());
+    let rows = c_chunk.len() / n;
+
+    let a_i = grown(&mut s.a_i, rows * k);
+    for r in 0..rows {
+        a.decode_row_range_i32(row0 + r, 0, &mut a_i[r * k..(r + 1) * k]);
+    }
+    let c_i = grown(&mut s.c_i, rows * n);
+    c_i.fill(0); // scratch is reused across calls
+
+    let wt = grown(&mut s.wt_i, kc * nc);
+    for jb in (0..n).step_by(nc) {
+        let nb = nc.min(n - jb);
+        for kb in (0..k).step_by(kc) {
+            let kcur = kc.min(k - kb);
+            let tile: &[i32] = match panels.map(|p| (p, p.data())) {
+                Some((p, PanelData::I32(buf))) => &buf[p.tile_range(jb, kb, nb, kcur)],
+                // INT weights always build i32 panels; `None` (or a foreign
+                // panel kind) decodes from the packed storage of record.
+                _ => {
+                    for kk in 0..kcur {
+                        w.decode_row_range_i32(kb + kk, jb, &mut wt[kk * nb..(kk + 1) * nb]);
+                    }
+                    &wt[..kcur * nb]
+                }
+            };
+            for r in 0..rows {
+                micro_kernel_i32(
+                    &a_i[r * k + kb..r * k + kb + kcur],
+                    tile,
+                    nb,
+                    &mut c_i[r * n + jb..r * n + jb + nb],
+                );
+            }
+        }
+    }
+    // Exact integer result -> f32 (in range by the fast-path guard, so the
+    // conversion is exact and matches the f32 path bit-for-bit).
+    for (dst, &v) in c_chunk.iter_mut().zip(c_i.iter()) {
+        *dst = v as f32;
+    }
+}
+
+/// 8-wide register-blocked f32 inner loop. Each group of 8 output columns
+/// keeps its partial sums in registers across the whole k tile and stores
+/// once; every column still accumulates `acc += a*w` in ascending-k order —
+/// one chain per output element, no reassociation, no FMA — so this is
+/// bit-identical to the scalar loop while the 8 independent chains
+/// auto-vectorize.
+#[inline(always)]
+fn micro_kernel_f32(a_col: &[f32], tile: &[f32], nb: usize, c_row: &mut [f32]) {
+    debug_assert_eq!(c_row.len(), nb);
+    debug_assert_eq!(tile.len(), a_col.len() * nb);
+    let mut j = 0;
+    while j + 8 <= nb {
+        let mut acc = [0f32; 8];
+        acc.copy_from_slice(&c_row[j..j + 8]);
+        for (kk, &av) in a_col.iter().enumerate() {
+            let w8 = &tile[kk * nb + j..kk * nb + j + 8];
+            for i in 0..8 {
+                acc[i] += av * w8[i];
+            }
+        }
+        c_row[j..j + 8].copy_from_slice(&acc);
+        j += 8;
+    }
+    for jj in j..nb {
+        let mut acc = c_row[jj];
+        for (kk, &av) in a_col.iter().enumerate() {
+            acc += av * tile[kk * nb + jj];
+        }
+        c_row[jj] = acc;
+    }
+}
+
+/// i32 twin of [`micro_kernel_f32`]. Integer accumulation is exact, so
+/// order is immaterial — the shared structure is kept for simplicity and
+/// because it vectorizes the same way.
+#[inline(always)]
+fn micro_kernel_i32(a_col: &[i32], tile: &[i32], nb: usize, c_row: &mut [i32]) {
+    debug_assert_eq!(c_row.len(), nb);
+    debug_assert_eq!(tile.len(), a_col.len() * nb);
+    let mut j = 0;
+    while j + 8 <= nb {
+        let mut acc = [0i32; 8];
+        acc.copy_from_slice(&c_row[j..j + 8]);
+        for (kk, &av) in a_col.iter().enumerate() {
+            let w8 = &tile[kk * nb + j..kk * nb + j + 8];
+            for i in 0..8 {
+                acc[i] += av * w8[i];
+            }
+        }
+        c_row[j..j + 8].copy_from_slice(&acc);
+        j += 8;
+    }
+    for jj in j..nb {
+        let mut acc = c_row[jj];
+        for (kk, &av) in a_col.iter().enumerate() {
+            acc += av * tile[kk * nb + jj];
+        }
+        c_row[jj] = acc;
     }
 }
 
@@ -199,6 +451,64 @@ mod tests {
             let got = gemm(&a, &w, &GemmConfig { kc, nc, threads });
             assert_eq!(got, base, "kc={kc} nc={nc} threads={threads}");
         }
+    }
+
+    #[test]
+    fn int_fast_path_guard() {
+        let i4 = Format::int(4);
+        let i8f = Format::int(8);
+        let fp6 = Format::Fp(FpFormat::FP6_E3M2);
+        // int4 x int4: bound is k * 8 * 8 <= 2^24 -> k <= 262144.
+        assert!(int_fast_path_exact(i4, i4, 262_144));
+        assert!(!int_fast_path_exact(i4, i4, 262_145));
+        // int8 x int8: k * 128 * 128 <= 2^24 -> k <= 1024.
+        assert!(int_fast_path_exact(i8f, i8f, 1024));
+        assert!(!int_fast_path_exact(i8f, i8f, 1025));
+        // Any FP operand disables the integer path.
+        assert!(!int_fast_path_exact(fp6, i4, 4));
+        assert!(!int_fast_path_exact(i4, fp6, 4));
+    }
+
+    #[test]
+    fn int_fast_path_matches_reference() {
+        let mut rng = Rng::new(34);
+        // In-guard (fast path) and out-of-guard (f32 fallback) cases.
+        random_case(&mut rng, Format::int(4), Format::int(4), 7, 130, 33);
+        random_case(&mut rng, Format::int(4), Format::int(8), 5, 66, 17);
+        random_case(&mut rng, Format::int(8), Format::int(8), 3, 1100, 9); // falls back
+    }
+
+    #[test]
+    fn panels_match_packed_decode() {
+        let mut rng = Rng::new(35);
+        for w_fmt in [Format::Fp(FpFormat::FP6_E3M2), Format::int(4)] {
+            let a_fmt = Format::Fp(FpFormat::FP8_E4M3);
+            let (m, k, n) = (6, 70, 50);
+            let a = PackedMatrix::from_codes(&rng.codes(m * k, a_fmt.bits()), m, k, a_fmt);
+            let w = PackedMatrix::from_codes(&rng.codes(k * n, w_fmt.bits()), k, n, w_fmt);
+            let cfg = GemmConfig::default();
+            let base = gemm(&a, &w, &cfg);
+            for (kc, nc) in [(64, 64), (16, 24), (3, 7)] {
+                let panels = WeightPanels::build(&w, kc, nc);
+                let got = gemm_with_panels(&a, &w, &panels, &cfg);
+                assert_eq!(got, base, "{a_fmt}x{w_fmt} panels kc={kc} nc={nc}");
+            }
+        }
+    }
+
+    #[test]
+    fn int_panels_feed_fast_path() {
+        let mut rng = Rng::new(36);
+        let fmt = Format::int(4);
+        let (m, k, n) = (4, 90, 40);
+        let a_codes = rng.codes(m * k, fmt.bits());
+        let w_codes = rng.codes(k * n, fmt.bits());
+        let a = PackedMatrix::from_codes(&a_codes, m, k, fmt);
+        let w = PackedMatrix::from_codes(&w_codes, k, n, fmt);
+        let panels = WeightPanels::build(&w, 32, 16);
+        let got = gemm_with_panels(&a, &w, &panels, &GemmConfig::default());
+        let want = gemm_ref(&a_codes, fmt, &w_codes, fmt, m, k, n);
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -15,19 +15,29 @@
 //!
 //! * [`PackedMatrix`] — a 2-D tensor stored bit-packed via the
 //!   [`crate::bitpack`] layout (values back-to-back, no padding), with
-//!   lane-wise decode of row ranges into f32 through a per-format [`Decoder`]
-//!   lookup table.
-//! * [`gemm`] — a tiled, cache-blocked GEMM kernel: packed words are decoded
-//!   tile-wise into f32 and multiply-accumulated, parallelized across output
-//!   row blocks with scoped std threads (the offline build has no rayon).
-//!   Accumulation order is ascending-k per output element, which makes the
-//!   kernel **bit-exact** against [`crate::arith::gemm_ref`] for every
-//!   precision pair — the software analog of the paper's RTL verification,
-//!   at GEMM granularity.
+//!   **multi-lane** decode of row ranges: packed `u64` words stream through
+//!   a 128-bit shift window, so each word is loaded exactly once and every
+//!   resident lane (including straddlers) is extracted with one shift+mask,
+//!   then mapped through a per-format [`Decoder`] lookup table (f32) or
+//!   sign-extension (i32).
+//! * [`gemm`] — a tiled, cache-blocked GEMM kernel with an 8-wide
+//!   register-blocked micro-kernel, parallelized across output row blocks
+//!   with scoped std threads (the offline build has no rayon) and
+//!   per-thread reused tile scratch. Accumulation order is ascending-k per
+//!   output element with one chain per column, which makes the kernel
+//!   **bit-exact** against [`crate::arith::gemm_ref`] for every precision
+//!   pair — the software analog of the paper's RTL verification, at GEMM
+//!   granularity. INT×INT pairs whose accumulation provably stays within
+//!   f32-exact integer range (`k * max|a| * max|w| <= 2^24`) take an i32
+//!   fast path ([`int_fast_path_exact`]) that is free to vectorize.
+//! * [`WeightPanels`] / [`gemm_with_panels`] — a weight matrix decoded once
+//!   into panel-major tiles so the hot loop's tile fill is a slice borrow
+//!   instead of bit extraction + LUT decode.
 //! * [`WeightCache`] — packs/quantizes a model's weights once per
 //!   (model, weight-format) configuration, mirroring the paper's
-//!   layer-constant reconfiguration model: precision switches re-use packed
-//!   weights, they don't re-quantize.
+//!   layer-constant reconfiguration model, and decodes weight panels under
+//!   an explicit byte budget (the memory-vs-speed knob; packed remains the
+//!   storage of record).
 //! * [`NativeModel`] — a transformer forward pass (attention + FFN, GQA and
 //!   SwiGLU aware) whose every GEMM runs through the packed kernel with
 //!   activations quantized to the request's activation format.
@@ -39,8 +49,10 @@ mod cache;
 mod gemm;
 mod model;
 mod packed;
+mod panels;
 
-pub use cache::{PackedLayer, WeightCache};
-pub use gemm::{gemm, gemm_default, GemmConfig};
+pub use cache::{CachedModel, LayerPanels, PackedLayer, WeightCache, DEFAULT_PANEL_BUDGET};
+pub use gemm::{gemm, gemm_default, gemm_with_panels, int_fast_path_exact, GemmConfig};
 pub use model::{NativeExecutor, NativeModel};
-pub use packed::{Decoder, PackedMatrix};
+pub use packed::{extract_codes, Decoder, PackedMatrix};
+pub use panels::{PanelData, WeightPanels};

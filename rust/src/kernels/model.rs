@@ -7,11 +7,13 @@
 //! weight x activation GEMMs run at `(pair.w, pair.a)`, the two attention
 //! activation x activation GEMMs at `(pair.a, pair.a)` — exactly the
 //! precision assignment of [`crate::workload::ModelSpec::gemms`] — on packed
-//! buffers, with packed weights cached per (model, weight format).
+//! buffers, with packed weights (and their decoded panels, budget
+//! permitting) cached per (model, weight format).
 
-use super::cache::{PackedLayer, WeightCache};
-use super::gemm::{gemm, GemmConfig};
+use super::cache::{CachedModel, LayerPanels, PackedLayer, WeightCache};
+use super::gemm::{gemm, gemm_with_panels, GemmConfig};
 use super::packed::PackedMatrix;
+use super::panels::WeightPanels;
 use crate::coordinator::{Batch, Executor};
 use crate::util::Rng;
 use crate::workload::{ModelSpec, PrecisionPair};
@@ -26,6 +28,21 @@ struct LayerWeights {
     w_up: Vec<f32>,
     w_gate: Option<Vec<f32>>,
     w_down: Vec<f32>,
+}
+
+/// Weight GEMM dispatch: use the cached decoded panels when the budget let
+/// them build, otherwise decode from the packed storage of record —
+/// bit-identical either way.
+fn gemm_w(
+    a: &PackedMatrix,
+    w: &PackedMatrix,
+    panels: Option<&WeightPanels>,
+    cfg: &GemmConfig,
+) -> Vec<f32> {
+    match panels {
+        Some(p) => gemm_with_panels(a, w, p, cfg),
+        None => gemm(a, w, cfg),
+    }
 }
 
 /// A transformer with synthesized weights, executable at any precision pair
@@ -87,13 +104,14 @@ impl NativeModel {
         let d = self.spec.d_model;
         assert!(d > 0 && input.len() % d == 0, "input length must be a multiple of d_model");
         let rows = input.len() / d;
-        let packed = cache.get_or_pack(self.spec.name, pair.w, || self.pack_layers(pair.w));
+        let cached: std::sync::Arc<CachedModel> =
+            cache.get_or_pack(self.spec.name, pair.w, || self.pack_layers(pair.w));
 
         let mut x = input.to_vec();
-        for layer in packed.iter() {
-            let attn = self.attention(&rms_norm(&x, d), rows, pair, layer);
+        for (layer, panels) in cached.layers.iter().zip(cached.panels.iter()) {
+            let attn = self.attention(&rms_norm(&x, d), rows, pair, layer, panels);
             add_in_place(&mut x, &attn);
-            let ffn = self.ffn(&rms_norm(&x, d), rows, pair, layer);
+            let ffn = self.ffn(&rms_norm(&x, d), rows, pair, layer, panels);
             add_in_place(&mut x, &ffn);
         }
         x
@@ -101,7 +119,14 @@ impl NativeModel {
 
     /// Multi-head attention (GQA-aware). Projections run at (w, a);
     /// QK^T and PV run at (a, a), matching the workload extractor.
-    fn attention(&self, xn: &[f32], rows: usize, pair: PrecisionPair, l: &PackedLayer) -> Vec<f32> {
+    fn attention(
+        &self,
+        xn: &[f32],
+        rows: usize,
+        pair: PrecisionPair,
+        l: &PackedLayer,
+        lp: &LayerPanels,
+    ) -> Vec<f32> {
         let d = self.spec.d_model;
         let hd = self.spec.head_dim();
         let heads = self.spec.heads;
@@ -109,7 +134,7 @@ impl NativeModel {
         let kv_dim = kv_heads * hd;
 
         let xq = PackedMatrix::from_f32(xn, rows, d, pair.a);
-        let qkv = gemm(&xq, &l.wqkv, &self.gemm_cfg); // [rows, d + 2*kv_dim]
+        let qkv = gemm_w(&xq, &l.wqkv, lp.wqkv.as_ref(), &self.gemm_cfg); // [rows, d + 2*kv_dim]
         let qkv_cols = d + 2 * kv_dim;
 
         let mut ctx = vec![0f32; rows * d];
@@ -146,17 +171,24 @@ impl NativeModel {
         }
         // Output projection at (w, a).
         let cp = PackedMatrix::from_f32(&ctx, rows, d, pair.a);
-        gemm(&cp, &l.wo, &self.gemm_cfg)
+        gemm_w(&cp, &l.wo, lp.wo.as_ref(), &self.gemm_cfg)
     }
 
     /// FFN: classic GELU two-GEMM or SwiGLU three-GEMM, all at (w, a).
-    fn ffn(&self, xn: &[f32], rows: usize, pair: PrecisionPair, l: &PackedLayer) -> Vec<f32> {
+    fn ffn(
+        &self,
+        xn: &[f32],
+        rows: usize,
+        pair: PrecisionPair,
+        l: &PackedLayer,
+        lp: &LayerPanels,
+    ) -> Vec<f32> {
         let d = self.spec.d_model;
         let xq = PackedMatrix::from_f32(xn, rows, d, pair.a);
-        let mut h = gemm(&xq, &l.w_up, &self.gemm_cfg); // [rows, d_ff]
+        let mut h = gemm_w(&xq, &l.w_up, lp.w_up.as_ref(), &self.gemm_cfg); // [rows, d_ff]
         match &l.w_gate {
             Some(wg) => {
-                let g = gemm(&xq, wg, &self.gemm_cfg);
+                let g = gemm_w(&xq, wg, lp.w_gate.as_ref(), &self.gemm_cfg);
                 for (hv, gv) in h.iter_mut().zip(&g) {
                     *hv *= silu(*gv);
                 }
@@ -168,7 +200,7 @@ impl NativeModel {
             }
         }
         let hq = PackedMatrix::from_f32(&h, rows, self.spec.d_ff, pair.a);
-        gemm(&hq, &l.w_down, &self.gemm_cfg)
+        gemm_w(&hq, &l.w_down, lp.w_down.as_ref(), &self.gemm_cfg)
     }
 }
 
@@ -240,6 +272,15 @@ impl NativeExecutor {
         self
     }
 
+    /// Set the decoded-weight-panel byte budget of the executor's cache
+    /// (the memory-vs-speed knob; 0 = packed-only). Must be called before
+    /// the first forward at a given precision — it replaces the cache, so
+    /// existing entries are dropped.
+    pub fn with_panel_budget(mut self, bytes: usize) -> Self {
+        self.cache = WeightCache::new().with_panel_budget(bytes);
+        self
+    }
+
     /// Register (or replace) a model under `spec.name`. Replacement evicts
     /// the old model's cached packed weights so they can't serve stale.
     pub fn register(&mut self, spec: ModelSpec, seed: u64) {
@@ -268,6 +309,11 @@ impl NativeExecutor {
     pub fn cache_bytes(&self) -> usize {
         self.cache.resident_bytes()
     }
+
+    /// Decoded-panel bytes resident in the weight cache.
+    pub fn cache_panel_bytes(&self) -> usize {
+        self.cache.panel_resident_bytes()
+    }
 }
 
 impl Executor for NativeExecutor {
@@ -279,7 +325,7 @@ impl Executor for NativeExecutor {
         let d = model.spec.d_model;
         // Validate the whole batch before executing any of it: a malformed
         // request must not abort mid-batch after co-batched requests ran
-        // (the server counts the batch as completed either way).
+        // (the server counts the whole batch as failed on error).
         for req in &batch.requests {
             if req.input.is_empty() || req.input.len() % d != 0 {
                 return Err(format!(
@@ -321,6 +367,37 @@ mod tests {
         let (hits, misses) = ex.cache_stats();
         assert_eq!((hits, misses), (1, 1));
         assert!(ex.cache_bytes() > 0);
+        assert!(ex.cache_panel_bytes() > 0, "default budget must decode panels");
+    }
+
+    #[test]
+    fn panel_budget_does_not_change_results() {
+        let spec = ModelSpec::tiny();
+        let pair = PrecisionPair::of_bits(6, 6);
+        let input: Vec<f32> =
+            (0..spec.seq * spec.d_model).map(|i| ((i % 7) as f32 - 3.0) * 0.2).collect();
+        let with_panels = NativeExecutor::new().with_model(spec.clone(), 11);
+        let without = NativeExecutor::new().with_panel_budget(0).with_model(spec.clone(), 11);
+        let a = with_panels.forward(spec.name, &input, pair).unwrap();
+        let b = without.forward(spec.name, &input, pair).unwrap();
+        assert_eq!(a, b, "panel cache must be bit-transparent");
+        assert!(with_panels.cache_panel_bytes() > 0);
+        assert_eq!(without.cache_panel_bytes(), 0);
+    }
+
+    #[test]
+    fn int_weight_format_serves_with_panels() {
+        let spec = ModelSpec::tiny();
+        let ex = NativeExecutor::new().with_model(spec.clone(), 21);
+        let pair = PrecisionPair::new(
+            crate::arith::Format::int(4),
+            crate::arith::Format::int(4),
+        );
+        let input = vec![0.4f32; spec.seq * spec.d_model];
+        let out = ex.forward(spec.name, &input, pair).unwrap();
+        assert_eq!(out.len(), input.len());
+        assert!(out.iter().all(|v| v.is_finite()));
+        assert!(ex.cache_panel_bytes() > 0);
     }
 
     #[test]

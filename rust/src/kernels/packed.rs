@@ -6,6 +6,16 @@
 //! produces and [`PackedTensor`] holds. [`Decoder`] turns codes into f32
 //! lanes; for formats up to 16 bits it is a precomputed lookup table, so the
 //! GEMM inner loops never touch the FP field-decomposition path.
+//!
+//! Decoding is **multi-lane, word-granular**: instead of recomputing
+//! `bit / 64` and re-loading the containing word for every element, the
+//! decoder streams packed `u64` words through a 128-bit shift window and
+//! extracts every lane resident in a word before loading the next — each
+//! word is loaded exactly once, straddling codes are stitched from the
+//! window without a second load. This is the software analog of the paper's
+//! bit-parallel unpacking (and of the Tensor-Core arbitrary-precision
+//! recipe: recover many low-bit lanes per machine word, amortize the
+//! extraction).
 
 use crate::arith::{decode, encode, Format, PackedTensor};
 
@@ -38,6 +48,48 @@ impl Decoder {
             Decoder::Direct(fmt) => decode(code, *fmt) as f32,
         }
     }
+}
+
+/// Stream `out.len()` consecutive `wbits`-wide lanes out of `words` starting
+/// at absolute bit `bit0`, mapping each raw code through `lane`.
+///
+/// The workhorse of every decode path: packed words feed a 128-bit window
+/// (`buf` holds `avail` not-yet-consumed bits), so each `u64` is loaded
+/// exactly once and every lane it contains — including lanes straddling
+/// into the next word — is extracted with one shift+mask. `wbits` may be
+/// 1..=32.
+#[inline(always)]
+fn map_lanes<T>(words: &[u64], bit0: usize, wbits: usize, out: &mut [T], lane: impl Fn(u32) -> T) {
+    debug_assert!((1..=32).contains(&wbits));
+    if out.is_empty() {
+        return;
+    }
+    debug_assert!(bit0 + out.len() * wbits <= words.len() * 64, "lane range out of bounds");
+    let mask: u64 = (1u64 << wbits) - 1;
+    let mut wi = bit0 >> 6;
+    let mut buf: u128 = (words[wi] >> (bit0 & 63)) as u128;
+    let mut avail = 64 - (bit0 & 63);
+    wi += 1;
+    for o in out.iter_mut() {
+        if avail < wbits {
+            // Straddle or exhausted window: splice the next word in above
+            // the leftover bits. (avail < 32, so the shift is in range.)
+            buf |= (words[wi] as u128) << avail;
+            avail += 64;
+            wi += 1;
+        }
+        *o = lane((buf as u64 & mask) as u32);
+        buf >>= wbits;
+        avail -= wbits;
+    }
+}
+
+/// Extract raw `wbits`-wide codes (no decode) — multi-lane, each source
+/// word loaded once. Public so tests can sweep arbitrary widths (including
+/// widths no [`Format`] reaches, e.g. 1) against a scalar reference, and so
+/// repack paths (transpose) can read rows without per-element index math.
+pub fn extract_codes(words: &[u64], bit0: usize, wbits: usize, out: &mut [u32]) {
+    map_lanes(words, bit0, wbits, out, |c| c);
 }
 
 /// A row-major `rows x cols` matrix of `fmt` values, bit-packed with no
@@ -118,23 +170,60 @@ impl PackedMatrix {
         out
     }
 
-    /// A new matrix holding this one's transpose (repacked).
+    /// A new matrix holding this one's transpose (repacked). Reads the
+    /// source rows directly out of the packed words (one `cols`-sized code
+    /// buffer) instead of materializing two full `Vec<u32>` code copies —
+    /// peak extra memory is one row, not two matrices.
     pub fn transposed(&self) -> PackedMatrix {
-        let codes = self.codes();
-        let mut t = vec![0u32; codes.len()];
+        let fmt = self.fmt();
+        let wbits = fmt.bits() as usize;
+        let mut out = PackedTensor::zeros(fmt, self.rows * self.cols);
+        let mut rowbuf = vec![0u32; self.cols];
         for r in 0..self.rows {
-            for c in 0..self.cols {
-                t[c * self.rows + r] = codes[r * self.cols + c];
+            extract_codes(self.data.words(), r * self.cols * wbits, wbits, &mut rowbuf);
+            for (c, &code) in rowbuf.iter().enumerate() {
+                out.set_code(c * self.rows + r, code);
             }
         }
-        PackedMatrix::from_codes(&t, self.cols, self.rows, self.fmt())
+        PackedMatrix { rows: self.cols, cols: self.rows, data: out }
     }
 
     /// Decode `out.len()` consecutive values of row `row` starting at column
-    /// `col0` into f32 lanes — the GEMM kernel's tile-fill primitive. Walks
-    /// the packed words with a running bit cursor instead of per-element
-    /// index math.
+    /// `col0` into f32 lanes — the GEMM kernel's tile-fill primitive.
+    /// Multi-lane: every packed word is loaded once and all resident lanes
+    /// are extracted through the shift window (see [`extract_codes`]).
     pub fn decode_row_range(&self, row: usize, col0: usize, dec: &Decoder, out: &mut [f32]) {
+        debug_assert!(row < self.rows && col0 + out.len() <= self.cols);
+        let wbits = self.data.fmt.bits() as usize;
+        let bit0 = (row * self.cols + col0) * wbits;
+        let words = self.data.words();
+        match dec {
+            Decoder::Lut(t) => map_lanes(words, bit0, wbits, out, |c| t[c as usize]),
+            Decoder::Direct(fmt) => map_lanes(words, bit0, wbits, out, |c| decode(c, *fmt) as f32),
+        }
+    }
+
+    /// Decode a row range of an INT-format matrix into sign-extended `i32`
+    /// lanes — the fill primitive of the GEMM integer fast path (exact
+    /// accumulation, no LUT needed: sign extension is two shifts).
+    ///
+    /// Panics if the matrix format is not [`Format::Int`].
+    pub fn decode_row_range_i32(&self, row: usize, col0: usize, out: &mut [i32]) {
+        debug_assert!(row < self.rows && col0 + out.len() <= self.cols);
+        let ibits = match self.data.fmt {
+            Format::Int(i) => i.bits as u32,
+            other => panic!("decode_row_range_i32 on non-INT format {other}"),
+        };
+        let shift = 32 - ibits;
+        let wbits = ibits as usize;
+        let bit0 = (row * self.cols + col0) * wbits;
+        map_lanes(self.data.words(), bit0, wbits, out, |c| ((c << shift) as i32) >> shift);
+    }
+
+    /// Scalar reference decoder: per-element bit-cursor math, one word (or
+    /// two, on a straddle) loaded per element. Kept as the independent
+    /// oracle the multi-lane path is tested against; not used on hot paths.
+    pub fn decode_row_range_scalar(&self, row: usize, col0: usize, dec: &Decoder, out: &mut [f32]) {
         debug_assert!(row < self.rows && col0 + out.len() <= self.cols);
         let wbits = self.data.fmt.bits() as usize;
         let mask: u64 = if wbits >= 64 { u64::MAX } else { (1u64 << wbits) - 1 };
@@ -198,6 +287,26 @@ mod tests {
                 }
             }
         }
+    }
+
+    // The multi-lane-vs-scalar decoder sweep (widths 1..16, word-straddling
+    // offsets) lives in rust/tests/native_kernels.rs
+    // (`multi_lane_decoder_straddle_sweep`) — the single oracle for the
+    // decode path, kept in one place on purpose.
+
+    #[test]
+    fn decode_i32_sign_extends() {
+        let fmt = Format::int(4);
+        // Codes 0..16 decode to 0..7, -8..-1.
+        let codes: Vec<u32> = (0..16).collect();
+        let m = PackedMatrix::from_codes(&codes, 1, 16, fmt);
+        let mut out = vec![0i32; 16];
+        m.decode_row_range_i32(0, 0, &mut out);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v as f64, m.get(0, i), "code {i}");
+        }
+        assert_eq!(out[8], -8);
+        assert_eq!(out[15], -1);
     }
 
     #[test]

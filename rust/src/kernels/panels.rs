@@ -1,0 +1,185 @@
+//! Decoded weight panels: a weight matrix dequantized **once** into the
+//! exact panel-major tile layout the GEMM micro-kernel consumes.
+//!
+//! The packed representation ([`super::packed::PackedMatrix`]) stays the
+//! storage of record — panels are a cache-layer artifact trading bytes
+//! (4 B/element instead of `bits/8`) for hot-loop speed: without them every
+//! GEMM call of every forward re-extracts and re-decodes the same weight
+//! words. With them the kernel's tile-fill is a slice borrow.
+//!
+//! Layout: column blocks of `nc` (outer), k blocks of `kc` (inner), each
+//! tile stored row-major (`kcur x nb`). A tile `(jb, kb)` with this block's
+//! column width `nb` starts at flat offset `jb * k + kb * nb` — column
+//! block `jb` owns a `k x nb` slab, so the whole panel buffer is exactly
+//! `k * n` elements with no padding.
+//!
+//! INT-format weights decode to sign-extended `i32` lanes (feeding the
+//! integer fast path); FP formats decode to `f32`. An `i32` panel is still
+//! usable by the f32 path: `i32 -> f32` conversion rounds to nearest, which
+//! is bit-identical to decoding the code to f64 and narrowing — so the
+//! kernel converts panel tiles instead of falling back to packed decode.
+
+use super::packed::{Decoder, PackedMatrix};
+use crate::arith::Format;
+
+/// Panel element storage: f32 for FP weight formats, sign-extended i32 for
+/// INT weight formats.
+#[derive(Debug, Clone)]
+pub enum PanelData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A weight matrix decoded into panel-major tiles of a fixed `(kc, nc)`
+/// tiling. The tiling travels with the data: a GEMM computing against
+/// panels adopts the panels' tile sizes (tiling never changes results —
+/// the kernel's bit-exactness contract is tiling-invariant).
+#[derive(Debug, Clone)]
+pub struct WeightPanels {
+    k: usize,
+    n: usize,
+    kc: usize,
+    nc: usize,
+    data: PanelData,
+}
+
+impl WeightPanels {
+    /// Decode `w` into panels tiled `(kc, nc)`. INT formats produce
+    /// [`PanelData::I32`], FP formats [`PanelData::F32`].
+    pub fn build(w: &PackedMatrix, kc: usize, nc: usize) -> Self {
+        assert!(kc > 0 && nc > 0, "tile sizes must be positive");
+        let (k, n) = (w.rows(), w.cols());
+        let data = match w.fmt() {
+            Format::Int(_) => {
+                let mut buf = vec![0i32; k * n];
+                for jb in (0..n).step_by(nc) {
+                    let nb = nc.min(n - jb);
+                    for kb in (0..k).step_by(kc) {
+                        let kcur = kc.min(k - kb);
+                        let off = jb * k + kb * nb;
+                        for kk in 0..kcur {
+                            let dst = &mut buf[off + kk * nb..off + (kk + 1) * nb];
+                            w.decode_row_range_i32(kb + kk, jb, dst);
+                        }
+                    }
+                }
+                PanelData::I32(buf)
+            }
+            Format::Fp(_) => {
+                let dec = Decoder::new(w.fmt());
+                let mut buf = vec![0f32; k * n];
+                for jb in (0..n).step_by(nc) {
+                    let nb = nc.min(n - jb);
+                    for kb in (0..k).step_by(kc) {
+                        let kcur = kc.min(k - kb);
+                        let off = jb * k + kb * nb;
+                        for kk in 0..kcur {
+                            let dst = &mut buf[off + kk * nb..off + (kk + 1) * nb];
+                            w.decode_row_range(kb + kk, jb, &dec, dst);
+                        }
+                    }
+                }
+                PanelData::F32(buf)
+            }
+        };
+        WeightPanels { k, n, kc, nc, data }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// K-dimension tile the panels were built with.
+    pub fn kc(&self) -> usize {
+        self.kc
+    }
+
+    /// N-dimension tile the panels were built with.
+    pub fn nc(&self) -> usize {
+        self.nc
+    }
+
+    pub fn data(&self) -> &PanelData {
+        &self.data
+    }
+
+    /// Decoded bytes held (the memory side of the memory-vs-speed knob).
+    pub fn bytes(&self) -> usize {
+        self.k * self.n * 4
+    }
+
+    /// Flat range of tile `(jb, kb)` whose column block is `nb` wide and
+    /// k block `kcur` tall.
+    #[inline]
+    pub(crate) fn tile_range(
+        &self,
+        jb: usize,
+        kb: usize,
+        nb: usize,
+        kcur: usize,
+    ) -> std::ops::Range<usize> {
+        let off = jb * self.k + kb * nb;
+        off..off + kcur * nb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::FpFormat;
+    use crate::util::Rng;
+
+    #[test]
+    fn fp_panels_hold_every_decoded_element() {
+        let mut rng = Rng::new(77);
+        let fmt = Format::Fp(FpFormat::FP6_E3M2);
+        let (k, n) = (13, 11); // off-tile on both axes
+        let w = PackedMatrix::from_codes(&rng.codes(k * n, fmt.bits()), k, n, fmt);
+        let (kc, nc) = (4, 5);
+        let p = WeightPanels::build(&w, kc, nc);
+        assert_eq!(p.bytes(), k * n * 4);
+        let buf = match p.data() {
+            PanelData::F32(b) => b,
+            _ => panic!("FP weights must build f32 panels"),
+        };
+        for jb in (0..n).step_by(nc) {
+            let nb = nc.min(n - jb);
+            for kb in (0..k).step_by(kc) {
+                let kcur = kc.min(k - kb);
+                let tile = &buf[p.tile_range(jb, kb, nb, kcur)];
+                for kk in 0..kcur {
+                    for j in 0..nb {
+                        assert_eq!(
+                            tile[kk * nb + j],
+                            w.get(kb + kk, jb + j) as f32,
+                            "tile ({jb},{kb}) [{kk},{j}]"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int_panels_decode_to_i32() {
+        let mut rng = Rng::new(78);
+        let fmt = Format::int(4);
+        let (k, n) = (9, 7);
+        let w = PackedMatrix::from_codes(&rng.codes(k * n, fmt.bits()), k, n, fmt);
+        let p = WeightPanels::build(&w, 64, 64);
+        let buf = match p.data() {
+            PanelData::I32(b) => b,
+            _ => panic!("INT weights must build i32 panels"),
+        };
+        // Single tile covers the matrix: panel-major == row-major here.
+        for r in 0..k {
+            for c in 0..n {
+                assert_eq!(buf[r * n + c] as f64, w.get(r, c), "({r},{c})");
+            }
+        }
+    }
+}

@@ -31,7 +31,7 @@ fn usage() -> ! {
          commands:\n\
            simulate [--model NAME] [--accel NAME] [--config NAME] [--w BITS] [--a BITS]\n\
            verify [--iters N]\n\
-           serve [--requests N] [--pairs WxA,WxA,...] [--batch N]\n\
+           serve [--requests N] [--pairs WxA,WxA,...] [--batch N] [--panel-budget-mb MB]\n\
            report\n\
          \n\
          models: Bert-base Llama-2-7b Llama-2-70b GPT-3\n\
@@ -72,8 +72,16 @@ fn cmd_serve(args: &[String]) {
         })
         .collect();
 
+    // Decoded-weight-panel budget: the memory-vs-speed knob of the native
+    // engine (0 = packed-only storage, the paper's minimal footprint).
+    let panel_budget_mb: usize = arg_value(args, "--panel-budget-mb")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(flexibit::kernels::DEFAULT_PANEL_BUDGET >> 20);
+
     let spec = ModelSpec::tiny();
-    let executor = NativeExecutor::new().with_model(spec.clone(), 0xF1E81B);
+    let executor = NativeExecutor::new()
+        .with_panel_budget(panel_budget_mb << 20)
+        .with_model(spec.clone(), 0xF1E81B);
     let cfg = ServerConfig {
         policy: BatchPolicy { max_batch, ..Default::default() },
         sim_config: flexibit::sim::mobile_a(),
@@ -101,6 +109,9 @@ fn cmd_serve(args: &[String]) {
     let m = server.shutdown();
 
     println!("native serving: {} requests over pairs {pairs_arg}", m.requests_completed);
+    if m.requests_failed > 0 {
+        eprintln!("  {} requests failed (executor errors)", m.requests_failed);
+    }
     println!(
         "  batches {} (mean size {:.1}), precision switches {}",
         m.batches_executed,

@@ -10,7 +10,10 @@
 
 use flexibit::arith::{decode, dot_exact, gemm_ref, Format, FpFormat};
 use flexibit::coordinator::{BatchPolicy, Request, Server, ServerConfig};
-use flexibit::kernels::{gemm, gemm_default, GemmConfig, NativeExecutor, PackedMatrix};
+use flexibit::kernels::{
+    extract_codes, gemm, gemm_default, gemm_with_panels, int_fast_path_exact, Decoder, GemmConfig,
+    NativeExecutor, PackedMatrix, WeightPanels,
+};
 use flexibit::util::{property, Rng};
 use flexibit::workload::{ModelSpec, PrecisionPair};
 use std::time::{Duration, Instant};
@@ -86,6 +89,116 @@ fn randomized_formats_shapes_and_tilings() {
         let mut case_rng = Rng::new(rng.next_u64());
         assert_kernel_matches_golden(&mut case_rng, a_fmt, w_fmt, m, k, n, &cfg);
     });
+}
+
+/// Multi-lane decoder vs the scalar per-element reference, across bit
+/// widths {1, 3, 5, 6, 7, 11, 12, 16} at offsets that straddle `u64` word
+/// boundaries. Width 1 has no [`Format`], so it runs through the raw
+/// [`extract_codes`] lane extractor against hand-computed bits; the rest
+/// sweep real formats through both decode paths.
+#[test]
+fn multi_lane_decoder_straddle_sweep() {
+    let mut rng = Rng::new(0xDEC0DE);
+
+    // Width 1: raw extractor vs per-bit arithmetic.
+    let words: Vec<u64> = (0..5).map(|_| rng.next_u64()).collect();
+    for bit0 in [0usize, 1, 62, 63, 64, 127, 129] {
+        let len = words.len() * 64 - bit0;
+        let mut got = vec![0u32; len];
+        extract_codes(&words, bit0, 1, &mut got);
+        for (i, &g) in got.iter().enumerate() {
+            let b = bit0 + i;
+            assert_eq!(g, ((words[b / 64] >> (b % 64)) & 1) as u32, "width 1 bit {b}");
+        }
+    }
+
+    // Widths {3, 5, 6, 7, 11, 12, 16} through real formats. Column counts
+    // are chosen so rows land at non-word-aligned bit offsets.
+    let fmts = [
+        Format::fp(1, 1), // 3 bits
+        Format::Fp(FpFormat::FP5_E2M2), // 5
+        Format::Fp(FpFormat::FP6_E3M2), // 6
+        Format::fp(3, 3), // 7
+        Format::int(11),
+        Format::int(12),
+        Format::Fp(FpFormat::FP16), // 16
+    ];
+    for fmt in fmts {
+        let (r, c) = (4, 85);
+        let codes = rng.codes(r * c, fmt.bits());
+        let m = PackedMatrix::from_codes(&codes, r, c, fmt);
+        let dec = Decoder::new(fmt);
+        for row in 0..r {
+            for col0 in [0usize, 1, 9, 10, 11, 20, 21, 42, 63, 64, 84] {
+                let len = c - col0;
+                let mut fast = vec![0f32; len];
+                let mut slow = vec![0f32; len];
+                m.decode_row_range(row, col0, &dec, &mut fast);
+                m.decode_row_range_scalar(row, col0, &dec, &mut slow);
+                assert_eq!(fast, slow, "{fmt} row {row} col0 {col0}");
+            }
+        }
+    }
+}
+
+/// The INT i32 fast path is tile/thread-invariant and bit-identical to
+/// `gemm_ref`, with and without decoded weight panels; an out-of-guard
+/// depth falls back to the f32 path and still matches.
+#[test]
+fn int_fast_path_tile_invariance() {
+    let mut rng = Rng::new(0x1272);
+    let i4 = Format::int(4);
+    let (m, k, n) = (7, 129, 43);
+    assert!(int_fast_path_exact(i4, i4, k), "case must exercise the fast path");
+    let a_codes = rng.codes(m * k, i4.bits());
+    let w_codes = rng.codes(k * n, i4.bits());
+    let a = PackedMatrix::from_codes(&a_codes, m, k, i4);
+    let w = PackedMatrix::from_codes(&w_codes, k, n, i4);
+    let want = gemm_ref(&a_codes, i4, &w_codes, i4, m, k, n);
+    for (kc, nc, threads) in [(64, 64, 1), (1, 1, 1), (5, 9, 3), (128, 8, 2), (17, 128, 4)] {
+        let cfg = GemmConfig { kc, nc, threads };
+        assert_eq!(gemm(&a, &w, &cfg), want, "kc={kc} nc={nc} threads={threads}");
+        let panels = WeightPanels::build(&w, kc, nc);
+        assert_eq!(
+            gemm_with_panels(&a, &w, &panels, &cfg),
+            want,
+            "panels kc={kc} nc={nc} threads={threads}"
+        );
+    }
+    // Beyond the exact guard (int8 x int8, k > 1024): must fall back and
+    // still match the f32 reference bit-for-bit.
+    let i8f = Format::int(8);
+    let (m2, k2, n2) = (3, 1100, 12);
+    assert!(!int_fast_path_exact(i8f, i8f, k2));
+    let a2c = rng.codes(m2 * k2, i8f.bits());
+    let w2c = rng.codes(k2 * n2, i8f.bits());
+    let a2 = PackedMatrix::from_codes(&a2c, m2, k2, i8f);
+    let w2 = PackedMatrix::from_codes(&w2c, k2, n2, i8f);
+    assert_eq!(
+        gemm_default(&a2, &w2),
+        gemm_ref(&a2c, i8f, &w2c, i8f, m2, k2, n2),
+        "out-of-guard INT pair must fall back exactly"
+    );
+}
+
+/// Decoded weight panels are bit-transparent for FP pairs too, whatever
+/// tiling they were built with.
+#[test]
+fn weight_panels_bit_transparent() {
+    let mut rng = Rng::new(0x9A7E1);
+    let a_fmt = Format::Fp(FpFormat::FP6_E3M2);
+    let w_fmt = Format::Fp(FpFormat::FP5_E2M2);
+    let (m, k, n) = (5, 77, 39);
+    let a_codes = rng.codes(m * k, a_fmt.bits());
+    let w_codes = rng.codes(k * n, w_fmt.bits());
+    let a = PackedMatrix::from_codes(&a_codes, m, k, a_fmt);
+    let w = PackedMatrix::from_codes(&w_codes, k, n, w_fmt);
+    let want = gemm_ref(&a_codes, a_fmt, &w_codes, w_fmt, m, k, n);
+    let cfg = GemmConfig::default();
+    for (kc, nc) in [(64, 64), (13, 6), (128, 128), (1, 39)] {
+        let panels = WeightPanels::build(&w, kc, nc);
+        assert_eq!(gemm_with_panels(&a, &w, &panels, &cfg), want, "kc={kc} nc={nc}");
+    }
 }
 
 /// Edge shapes: single row/column/element, K=1, tall-skinny, wide-flat.

@@ -11,6 +11,10 @@
 //!   latency/throughput plus the co-simulated FlexiBit accelerator
 //!   estimates. Packed weights are cached per (model, weight format), so
 //!   each precision configuration quantizes exactly once.
+//! * Finally decode: a pool of token-stream sessions — one causal prefill
+//!   opening a bit-packed KV cache, then single-token decode steps driven
+//!   by per-request [`flexibit::coordinator::Completion`] results — the
+//!   autoregressive regime arbitrary-precision serving actually runs in.
 //!
 //! The AOT/PJRT path this example used to exercise remains available behind
 //! `--features pjrt` (see `rust/src/runtime/`); it is no longer required.
@@ -18,7 +22,7 @@
 //! Run: `cargo run --release --example serve_transformer`
 
 use flexibit::arith::{gemm_ref, Format};
-use flexibit::coordinator::{BatchPolicy, Request, Server, ServerConfig};
+use flexibit::coordinator::{BatchPolicy, Request, Server, ServerConfig, StreamDriver};
 use flexibit::kernels::{gemm_default, NativeExecutor, PackedMatrix};
 use flexibit::util::Rng;
 use flexibit::workload::{ModelSpec, PrecisionPair};
@@ -76,14 +80,7 @@ fn main() {
         let pair = pairs[(i % pairs.len() as u64) as usize];
         let input: Vec<f32> =
             (0..spec.seq * spec.d_model).map(|_| rng.gauss() as f32 * 0.5).collect();
-        server.submit(Request {
-            id: i,
-            model: spec.name.to_string(),
-            pair,
-            input,
-            dims: vec![spec.seq, spec.d_model],
-            arrived: Instant::now(),
-        });
+        server.submit(Request::new(i, spec.name, pair, input, vec![spec.seq, spec.d_model]));
     }
     // Drain.
     let drained = server.await_completed(n_requests, Duration::from_secs(120));
@@ -113,5 +110,74 @@ fn main() {
     );
     println!("  simulated energy:   {:.3} mJ total", m.sim_energy_j * 1e3);
     assert_eq!(m.requests_completed, n_requests, "all requests must complete");
+
+    // --- 3. Token-stream sessions: prefill + autoregressive decode --------
+    // Each session opens with a causal prefill (populating a KV cache held
+    // bit-packed at the session's activation precision), then streams
+    // single-token decode steps. Every request carries a Completion slot,
+    // so the driver learns each step's own result and keeps all streams one
+    // request deep — interleaved streams are exactly what the batcher's
+    // continuous admission groups into decode batches.
+    let executor = NativeExecutor::new().with_model(spec.clone(), 0xF1E81B);
+    let cfg = ServerConfig {
+        policy: BatchPolicy::default(),
+        sim_config: flexibit::sim::mobile_a(),
+        sim_model: spec.clone(),
+    };
+    let server = Server::start(cfg, Box::new(executor));
+
+    let n_sessions = 8u64;
+    let steps = 6usize;
+    let d = spec.d_model;
+    let prefill_len = 16usize;
+    let t0 = Instant::now();
+    let session_specs = (0..n_sessions)
+        .map(|i| {
+            let input: Vec<f32> = (0..prefill_len * d).map(|_| rng.gauss() as f32 * 0.5).collect();
+            (i + 1, pairs[(i % pairs.len() as u64) as usize], input, vec![prefill_len, d])
+        })
+        .collect();
+    let mut driver = StreamDriver::start(&server, spec.name, session_specs);
+    let mut failed = vec![false; n_sessions as usize];
+    let finished = driver.run(
+        &server,
+        Instant::now() + Duration::from_secs(120),
+        |i, step, result| match result {
+            Err(e) => {
+                eprintln!("  session {} failed: {e}", i + 1);
+                failed[i] = true;
+                None
+            }
+            Ok(out) => {
+                // Every step returns the new token's hidden state row
+                // (prefill returns all rows).
+                assert!(out.len() % d == 0 && !out.is_empty());
+                if step < steps {
+                    Some((0..d).map(|_| rng.gauss() as f32 * 0.5).collect())
+                } else {
+                    None
+                }
+            }
+        },
+    );
+    assert!(finished, "token streams timed out");
+    let wall = t0.elapsed().as_secs_f64();
+    let m = server.shutdown();
+    println!("== token-stream sessions ({n_sessions} sessions x {steps} decode steps) ==");
+    println!("  sessions started:   {}", m.sessions_started);
+    println!("  decode steps:       {}", m.decode_steps);
+    println!(
+        "  decode batching:    {} batches (mean size {:.1})",
+        m.batches_executed,
+        m.mean_batch_size()
+    );
+    println!(
+        "  wall time:          {wall:.2}s  ({:.1} steps/s)",
+        m.decode_steps as f64 / wall.max(1e-9)
+    );
+    assert!(failed.iter().all(|f| !f), "no session may fail");
+    assert_eq!(m.sessions_started, n_sessions);
+    assert_eq!(m.decode_steps, n_sessions * steps as u64);
+
     println!("\nserve_transformer OK — any-precision serving with zero PJRT artifacts");
 }

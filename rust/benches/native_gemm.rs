@@ -1,6 +1,7 @@
 //! Native bit-packed GEMM engine benchmarks: kernel throughput across
 //! precision pairs, transformer-shaped GEMMs with and without cached
-//! decoded weight panels, and serving throughput of the native executor vs
+//! decoded weight panels, decode-step batches against a populated KV cache
+//! (the serving hot path), and serving throughput of the native executor vs
 //! a no-op stub (isolating execution cost from coordinator overhead).
 //! Uses the in-repo harness — criterion is unavailable in the offline build.
 //!
@@ -9,9 +10,11 @@
 //! across PRs.
 //!
 //! `--smoke`: release-mode CI perf gate. Runs one small shape per headline
-//! pair and fails (exit 1) if ns/MAC regresses more than [`SMOKE_SLOWDOWN`]x
-//! over the checked-in `native_gemm_baseline.json` — a deliberately loose
-//! bound that catches accidental O(n) blowups, not machine noise.
+//! pair — plus decode-step cases (a batch of single-token attention GEMVs
+//! over a prefilled KV cache) — and fails (exit 1) if ns/MAC regresses more
+//! than [`SMOKE_SLOWDOWN`]x over the checked-in `native_gemm_baseline.json`
+//! — a deliberately loose bound that catches accidental O(n) blowups, not
+//! machine noise.
 
 mod bench_util;
 
@@ -20,7 +23,8 @@ use flexibit::coordinator::{
     Batch, BatchPolicy, Executor, FnExecutor, Request, Server, ServerConfig,
 };
 use flexibit::kernels::{
-    gemm, gemm_with_panels, GemmConfig, NativeExecutor, PackedMatrix, WeightPanels,
+    gemm, gemm_with_panels, GemmConfig, KvCache, NativeExecutor, NativeModel, PackedMatrix,
+    WeightCache, WeightPanels,
 };
 use flexibit::util::Rng;
 use flexibit::workload::{ModelSpec, PrecisionPair};
@@ -42,11 +46,17 @@ struct Record {
     n: usize,
     pair: String,
     median_s: f64,
+    /// MACs per iteration — `m*k*n` for plain GEMMs, a model-shape sum for
+    /// decode-step batches (whose m/k/n record batch/past provenance).
+    macs: f64,
 }
 
 impl Record {
+    fn gemm(name: String, m: usize, k: usize, n: usize, pair: String, median_s: f64) -> Record {
+        Record { name, m, k, n, pair, median_s, macs: (m * k * n) as f64 }
+    }
     fn macs(&self) -> f64 {
-        (self.m * self.k * self.n) as f64
+        self.macs
     }
     fn gflops(&self) -> f64 {
         2.0 * self.macs() / self.median_s / 1e9
@@ -102,14 +112,20 @@ fn full() {
             black_box(gemm(&a, &w, &cfg).len());
         });
         b.report(2.0 * (m * k * n) as f64, "FLOP");
-        records.push(Record {
-            name: format!("[6,6] {label}"),
+        records.push(Record::gemm(
+            format!("[6,6] {label}"),
             m,
             k,
             n,
-            pair: format!("{}x{}", pair.w, pair.a),
-            median_s: b.median(),
-        });
+            format!("{}x{}", pair.w, pair.a),
+            b.median(),
+        ));
+    }
+
+    // Decode-step batches: the serving hot path once a session is open —
+    // per step one M=1 pass whose attention GEMVs read a prefilled KV cache.
+    for pair in [PrecisionPair::of_bits(6, 6), int_pair] {
+        records.push(bench_decode(&mut rng, pair, 64, 8, 2, 11, "native decode"));
     }
 
     // Serving throughput: native executor vs no-op stub, identical streams.
@@ -159,7 +175,62 @@ fn bench_kernel(
         })
     };
     b.report(2.0 * (m * k * n) as f64, "FLOP");
-    Record { name, m, k, n, pair: format!("{}x{}", pair.w, pair.a), median_s: b.median() }
+    Record::gemm(name, m, k, n, format!("{}x{}", pair.w, pair.a), b.median())
+}
+
+/// Measure a batch of single-token decode steps against a KV cache
+/// prefilled with `past` tokens (ModelSpec::tiny shapes): per step, the
+/// attention GEMVs `q x K^T [hd, past+i]` and `p x V [past+i, hd]` read the
+/// packed cache, plus the M=1 weight GEMMs. The cache is rolled back with
+/// `truncate` between iterations so every sample replays the same shape.
+fn bench_decode(
+    rng: &mut Rng,
+    pair: PrecisionPair,
+    past: usize,
+    batch: usize,
+    warmup: usize,
+    iters: usize,
+    name_prefix: &str,
+) -> Record {
+    let spec = ModelSpec::tiny();
+    let d = spec.d_model;
+    let model = NativeModel::synthesize(spec.clone(), 17);
+    let cache = WeightCache::new();
+    let mut kv = KvCache::new(&spec, pair.a);
+    let prefill: Vec<f32> = (0..past * d).map(|_| rng.gauss() as f32 * 0.5).collect();
+    model.forward_prefill(&prefill, pair, &cache, &mut kv);
+    let toks: Vec<Vec<f32>> = (0..batch)
+        .map(|_| (0..d).map(|_| rng.gauss() as f32 * 0.5).collect())
+        .collect();
+
+    // Exact MACs of one iteration (batch sequential steps, growing cache).
+    let hd = spec.head_dim();
+    let kv_dim = spec.kv_heads * hd;
+    let ffn_gemms = if spec.gated_ffn { 3 } else { 2 };
+    let mut macs = 0usize;
+    for i in 0..batch {
+        let cur = past + 1 + i;
+        macs += spec.layers
+            * (d * (d + 2 * kv_dim) + spec.heads * 2 * hd * cur + d * d + ffn_gemms * d * spec.d_ff);
+    }
+
+    let name = format!("{name_prefix} {}x{} past{past} batch{batch}", pair.w, pair.a);
+    let b = Bench::run(&name, warmup, iters, || {
+        kv.truncate(past);
+        for tok in &toks {
+            black_box(model.forward_decode(tok, pair, &cache, &mut kv).len());
+        }
+    });
+    b.report(2.0 * macs as f64, "FLOP");
+    Record {
+        name,
+        m: batch,
+        k: past,
+        n: d,
+        pair: format!("{}x{}", pair.w, pair.a),
+        median_s: b.median(),
+        macs: macs as f64,
+    }
 }
 
 /// CI perf gate: one small shape per headline pair against the checked-in
@@ -181,7 +252,6 @@ fn smoke() {
     let baseline = std::fs::read_to_string(BASELINE_PATH)
         .unwrap_or_else(|e| panic!("cannot read {BASELINE_PATH}: {e}"));
     let mut records = Vec::new();
-    let mut failed = false;
     for (key, pair) in cases {
         let a = PackedMatrix::from_codes(&rng.codes(m * k, pair.a.bits()), m, k, pair.a);
         let w = PackedMatrix::from_codes(&rng.codes(k * n, pair.w.bits()), k, n, pair.w);
@@ -190,14 +260,28 @@ fn smoke() {
             black_box(gemm(&a, &w, &cfg).len());
         });
         b.report(2.0 * (m * k * n) as f64, "FLOP");
-        let rec = Record {
-            name: key.to_string(),
+        records.push(Record::gemm(
+            key.to_string(),
             m,
             k,
             n,
-            pair: format!("{}x{}", pair.w, pair.a),
-            median_s: b.median(),
-        };
+            format!("{}x{}", pair.w, pair.a),
+            b.median(),
+        ));
+    }
+    // Decode-step gate: a batch of single-token forwards whose attention
+    // GEMVs read a KV cache prefilled with 64 tokens — the hot path of
+    // token-stream serving. Much higher ns/MAC than the block GEMMs (M=1
+    // work is quantization/overhead-bound), hence its own baseline entries.
+    for pair in [
+        PrecisionPair::of_bits(6, 6),
+        PrecisionPair::new(flexibit::arith::Format::int(8), flexibit::arith::Format::int(8)),
+    ] {
+        records.push(bench_decode(&mut rng, pair, 64, 8, 2, 9, "smoke decode"));
+    }
+    let mut failed = false;
+    for rec in &records {
+        let key = rec.name.as_str();
         let base = baseline_value(&baseline, key)
             .unwrap_or_else(|| panic!("no baseline entry for '{key}' in {BASELINE_PATH}"));
         let got = rec.ns_per_mac();
@@ -207,7 +291,6 @@ fn smoke() {
         if got > limit {
             failed = true;
         }
-        records.push(rec);
     }
     write_json(&records, SMOKE_RESULTS_PATH);
     if failed {
@@ -265,14 +348,13 @@ fn serve_throughput(spec: &ModelSpec, executor: Box<dyn Executor>) -> f64 {
         let bits = [4u32, 5, 6, 8][(i % 4) as usize];
         let input: Vec<f32> =
             (0..spec.seq * spec.d_model).map(|_| rng.gauss() as f32 * 0.5).collect();
-        server.submit(Request {
-            id: i,
-            model: spec.name.to_string(),
-            pair: PrecisionPair::of_bits(bits, 16),
+        server.submit(Request::new(
+            i,
+            spec.name,
+            PrecisionPair::of_bits(bits, 16),
             input,
-            dims: vec![spec.seq, spec.d_model],
-            arrived: Instant::now(),
-        });
+            vec![spec.seq, spec.d_model],
+        ));
     }
     let drained = server.await_completed(n_requests, Duration::from_secs(120));
     let wall = t0.elapsed().as_secs_f64();

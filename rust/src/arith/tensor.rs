@@ -38,6 +38,19 @@ impl PackedTensor {
         t
     }
 
+    /// Wrap already-packed words (the layout [`PackedTensor::set_code`]
+    /// produces: LSB-first, values contiguous across word boundaries) as a
+    /// tensor of `len` codes — zero-repack adoption of an externally grown
+    /// packed stream (e.g. the serving KV cache). Trailing bits beyond
+    /// `len` codes may hold garbage; they are never decoded.
+    pub fn from_words(fmt: Format, len: usize, words: Vec<u64>) -> Self {
+        assert!(
+            words.len() * 64 >= len * fmt.bits() as usize,
+            "words too short for {len} codes of {fmt}"
+        );
+        PackedTensor { fmt, len, words }
+    }
+
     /// Total packed size in bits (the paper's memory-efficiency win: exactly
     /// `len * bits`, no padding to byte/power-of-two boundaries).
     pub fn bits(&self) -> usize {

@@ -5,10 +5,37 @@
 //! accelerator's precision configuration costs a control-broadcast
 //! ([`crate::compiler::reconfiguration_cycles`]), so the batcher prefers to
 //! drain same-precision runs before switching, up to a fairness bound.
+//!
+//! Requests live in **per-(model, pair) sub-queues** (the old single queue
+//! was rescanned O(n) on every batch-formation attempt), and the batcher
+//! supports **continuous admission**: while the worker executes a batch,
+//! compatible decode-phase requests that arrive join the hot key directly
+//! through [`Batcher::admit_decode`] — no wait budget, no re-keying, no
+//! reconfiguration — which is what keeps token-stream latency flat while
+//! prefill traffic churns the queue.
 
+use super::completion::Completion;
 use crate::workload::PrecisionPair;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::time::{Duration, Instant};
+
+/// Which serving regime a request belongs to.
+///
+/// * [`Phase::Prefill`] — a block of tokens; with a non-zero session id it
+///   runs the causal prefill that opens a token-stream session (stateless
+///   `session == 0` requests also carry `Prefill`, the default).
+/// * [`Phase::Decode`] — one autoregressive step: a single token row
+///   attended against the session's KV cache.
+/// * [`Phase::End`] — a control request closing the session: the executor
+///   frees its KV cache (idempotent; the input is ignored and the result is
+///   empty). Without it a finished stream's cache lingers until the
+///   executor's session-capacity LRU displaces it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Prefill,
+    Decode,
+    End,
+}
 
 /// One inference request.
 #[derive(Debug, Clone)]
@@ -18,11 +45,59 @@ pub struct Request {
     pub model: String,
     /// Precision configuration the request's weights are quantized to.
     pub pair: PrecisionPair,
-    /// Flattened input activations.
+    /// Flattened input activations (a token block for prefill, one token
+    /// row for decode).
     pub input: Vec<f32>,
     /// Input dims.
     pub dims: Vec<usize>,
     pub arrived: Instant,
+    /// Token-stream session id; 0 = stateless one-shot block.
+    pub session: u64,
+    pub phase: Phase,
+    /// Per-request result slot the worker fulfills (None = fire-and-forget).
+    pub done: Option<Completion>,
+}
+
+impl Request {
+    /// A stateless prefill request arriving now (the pre-session default).
+    pub fn new(
+        id: u64,
+        model: impl Into<String>,
+        pair: PrecisionPair,
+        input: Vec<f32>,
+        dims: Vec<usize>,
+    ) -> Self {
+        Request {
+            id,
+            model: model.into(),
+            pair,
+            input,
+            dims,
+            arrived: Instant::now(),
+            session: 0,
+            phase: Phase::Prefill,
+            done: None,
+        }
+    }
+
+    /// Bind this request to a token-stream session.
+    pub fn with_session(mut self, session: u64, phase: Phase) -> Self {
+        self.session = session;
+        self.phase = phase;
+        self
+    }
+
+    /// Attach a completion slot (the submitter keeps its own clone).
+    pub fn with_completion(mut self, done: &Completion) -> Self {
+        self.done = Some(done.clone());
+        self
+    }
+
+    /// Override the arrival stamp (batcher tests pin virtual time).
+    pub fn with_arrival(mut self, t: Instant) -> Self {
+        self.arrived = t;
+        self
+    }
 }
 
 /// A batch the worker executes in one go.
@@ -38,10 +113,13 @@ pub struct Batch {
 pub struct BatchPolicy {
     /// Max requests per batch.
     pub max_batch: usize,
-    /// Max time the head request may wait before the batch is cut.
+    /// Max time the oldest queued request may wait before a batch is cut.
     pub max_wait: Duration,
     /// Max consecutive same-precision batches before forcing a switch
-    /// (fairness across precision groups).
+    /// (fairness across precision groups). Continuous-admission rounds
+    /// count toward the streak, so the bound holds across both paths —
+    /// except when no other key is waiting, where an uncontended stream
+    /// keeps its slot.
     pub max_streak: usize,
 }
 
@@ -51,15 +129,20 @@ impl Default for BatchPolicy {
     }
 }
 
-/// A batch-formation key: (model, precision configuration). Owned once per
-/// emitted batch; all queue scans compare against it allocation-free.
+/// A batch-formation key: (model, precision configuration).
 type BatchKey = (String, PrecisionPair);
 
-/// Precision-aware dynamic batcher.
+/// Precision-aware dynamic batcher over per-key sub-queues.
 #[derive(Debug)]
 pub struct Batcher {
     policy: BatchPolicy,
-    queue: VecDeque<Request>,
+    /// Sub-queue per (model, pair): nested so probes are allocation-free
+    /// (`&str` lookup, no owned tuple key per call).
+    queues: HashMap<String, HashMap<PrecisionPair, VecDeque<Request>>>,
+    /// Key admission order — deterministic tie-break when arrival stamps
+    /// are equal.
+    order: Vec<BatchKey>,
+    pending: usize,
     /// Consecutive batches emitted with the current key.
     streak: usize,
     last_key: Option<BatchKey>,
@@ -69,74 +152,152 @@ pub struct Batcher {
 
 impl Batcher {
     pub fn new(policy: BatchPolicy) -> Self {
-        Batcher { policy, queue: VecDeque::new(), streak: 0, last_key: None, reconfigurations: 0 }
+        Batcher {
+            policy,
+            queues: HashMap::new(),
+            order: Vec::new(),
+            pending: 0,
+            streak: 0,
+            last_key: None,
+            reconfigurations: 0,
+        }
     }
 
     pub fn push(&mut self, req: Request) {
-        self.queue.push_back(req);
+        let inner = self.queues.entry(req.model.clone()).or_default();
+        if !inner.contains_key(&req.pair) {
+            self.order.push((req.model.clone(), req.pair));
+        }
+        inner.entry(req.pair).or_default().push_back(req);
+        self.pending += 1;
     }
 
     pub fn pending(&self) -> usize {
-        self.queue.len()
+        self.pending
     }
 
-    /// Allocation-free key comparison — `next_batch` scans the queue O(n)
-    /// per call, so per-request `String` clones here would dominate batch
-    /// formation at depth.
-    fn matches(r: &Request, key: &BatchKey) -> bool {
-        r.model == key.0 && r.pair == key.1
+    fn queue_len(&self, key: &BatchKey) -> usize {
+        self.queues.get(&key.0).and_then(|m| m.get(&key.1)).map_or(0, |q| q.len())
     }
 
-    /// Try to form a batch now. Returns `None` when the queue is empty or
-    /// the head hasn't waited long enough and the batch would be undersized.
+    /// Drop empty sub-queues and their `order` entries.
+    fn prune(&mut self) {
+        let queues = &mut self.queues;
+        self.order
+            .retain(|k| queues.get(&k.0).and_then(|m| m.get(&k.1)).is_some_and(|q| !q.is_empty()));
+        for inner in queues.values_mut() {
+            inner.retain(|_, q| !q.is_empty());
+        }
+        queues.retain(|_, inner| !inner.is_empty());
+    }
+
+    /// Try to form a batch now. Returns `None` when nothing is queued or
+    /// the oldest request hasn't waited long enough and the candidate batch
+    /// would be undersized.
     pub fn next_batch(&mut self, now: Instant) -> Option<Batch> {
-        let head = self.queue.front()?;
-        let head_waited = now.duration_since(head.arrived);
+        self.prune();
+        // The oldest front request across sub-queues plays the old global
+        // head's role: its wait drives the cut decision and its key is the
+        // fallback when no streak is running. First-in-`order` wins ties.
+        let (oldest_arrival, oldest_key) = self
+            .order
+            .iter()
+            .filter_map(|k| {
+                self.queues
+                    .get(&k.0)
+                    .and_then(|m| m.get(&k.1))
+                    .and_then(|q| q.front())
+                    .map(|r| (r.arrived, k.clone()))
+            })
+            .min_by_key(|(t, _)| *t)?;
+        let head_waited = now.duration_since(oldest_arrival);
 
-        // Choose the key: stick with the last key while its streak lasts and
-        // matching requests exist (avoids reconfiguration); otherwise the
-        // head's key. One key is materialized per call; every queue scan
-        // below compares borrowed fields.
+        // Stick with the last key while its streak lasts and requests
+        // remain (avoids reconfiguration); otherwise the oldest head's key.
         let key: BatchKey = match &self.last_key {
-            Some(k)
-                if self.streak < self.policy.max_streak
-                    && self.queue.iter().any(|r| Self::matches(r, k)) =>
-            {
-                k.clone()
-            }
-            _ => (head.model.clone(), head.pair),
+            Some(k) if self.streak < self.policy.max_streak && self.queue_len(k) > 0 => k.clone(),
+            _ => oldest_key,
         };
 
-        let matching = self.queue.iter().filter(|r| Self::matches(r, &key)).count();
-        if matching < self.policy.max_batch && head_waited < self.policy.max_wait {
+        if self.queue_len(&key) < self.policy.max_batch && head_waited < self.policy.max_wait {
             return None; // keep accumulating
         }
 
-        // Extract up to max_batch matching requests (stable order).
-        let mut taken = Vec::new();
-        let mut rest = VecDeque::new();
-        while let Some(r) = self.queue.pop_front() {
-            if taken.len() < self.policy.max_batch && Self::matches(&r, &key) {
-                taken.push(r);
-            } else {
-                rest.push_back(r);
-            }
-        }
-        self.queue = rest;
-        if taken.is_empty() {
-            return None;
-        }
+        let q = self.queues.get_mut(&key.0).and_then(|m| m.get_mut(&key.1))?;
+        let take = self.policy.max_batch.min(q.len());
+        let taken: Vec<Request> = q.drain(..take).collect();
+        self.pending -= taken.len();
+
         if self.last_key.as_ref() == Some(&key) {
             self.streak += 1;
         } else {
             if self.last_key.is_some() {
                 self.reconfigurations += 1;
             }
-            self.last_key = Some(key);
+            self.last_key = Some(key.clone());
             self.streak = 1;
         }
-        let first = &taken[0];
-        Some(Batch { model: first.model.clone(), pair: first.pair, requests: taken })
+        Some(Batch { model: key.0, pair: key.1, requests: taken })
+    }
+
+    /// Continuous admission: pull up to `room` **decode-phase** requests of
+    /// exactly this (model, pair) key, preserving their relative order and
+    /// never touching any other key or phase. The server calls this while
+    /// a batch of the key is executing, so token-stream steps that arrived
+    /// meanwhile join immediately — skipping the wait budget, the key
+    /// choice, and the reconfiguration bookkeeping (the hardware precision
+    /// configuration is already loaded).
+    ///
+    /// Every non-empty admission **counts toward the fairness streak**, and
+    /// once the streak is exhausted while *other* keys have pending
+    /// requests, admission refuses — the worker falls back to
+    /// [`Batcher::next_batch`], which switches keys. An uncontended stream
+    /// keeps its slot indefinitely (there is no one to be fair to).
+    pub fn admit_decode(&mut self, model: &str, pair: PrecisionPair, room: usize) -> Vec<Request> {
+        let Some(q) = self.queues.get_mut(model).and_then(|m| m.get_mut(&pair)) else {
+            return Vec::new();
+        };
+        // "Waiting" traffic the streak must be fair to: requests under other
+        // keys AND non-decode requests inside this very sub-queue (a same-key
+        // prefill is bypassed by every admission round, so it counts too —
+        // otherwise a hot stream could starve it forever).
+        let other_waiting =
+            self.pending > q.len() || q.iter().any(|r| r.phase != Phase::Decode);
+        if self.streak >= self.policy.max_streak && other_waiting {
+            return Vec::new();
+        }
+        let mut taken = Vec::new();
+        let mut rest = VecDeque::with_capacity(q.len());
+        while let Some(r) = q.pop_front() {
+            if taken.len() < room && r.phase == Phase::Decode {
+                taken.push(r);
+            } else {
+                rest.push_back(r);
+            }
+        }
+        *q = rest;
+        self.pending -= taken.len();
+        if !taken.is_empty()
+            && self.last_key.as_ref().is_some_and(|k| k.0 == model && k.1 == pair)
+        {
+            self.streak += 1;
+        }
+        taken
+    }
+
+    /// Remove and return every queued request (server shutdown: the
+    /// requests will never execute, and their submitters must be told).
+    pub fn drain(&mut self) -> Vec<Request> {
+        let mut all = Vec::with_capacity(self.pending);
+        for inner in self.queues.values_mut() {
+            for q in inner.values_mut() {
+                all.extend(q.drain(..));
+            }
+        }
+        self.queues.clear();
+        self.order.clear();
+        self.pending = 0;
+        all
     }
 }
 
@@ -145,14 +306,8 @@ mod tests {
     use super::*;
 
     fn req(id: u64, model: &str, bits: u32, t: Instant) -> Request {
-        Request {
-            id,
-            model: model.into(),
-            pair: PrecisionPair::of_bits(bits, 16),
-            input: vec![0.0; 4],
-            dims: vec![4],
-            arrived: t,
-        }
+        Request::new(id, model, PrecisionPair::of_bits(bits, 16), vec![0.0; 4], vec![4])
+            .with_arrival(t)
     }
 
     #[test]
@@ -218,10 +373,10 @@ mod tests {
         b.push(req(9, "m", 8, t0));
         assert_eq!(b.next_batch(t0).unwrap().pair.label(), "[6,16]");
         assert_eq!(b.next_batch(t0).unwrap().pair.label(), "[6,16]");
-        // Streak exhausted: head key (still FP6) is taken only if... head is
-        // FP6; max_streak reached means key = head's key — still FP6 here,
-        // but streak resets only on actual switch. The FP8 request is served
-        // once FP6 drains.
+        // Streak exhausted: key falls back to the oldest head — still FP6
+        // here (FP6 and FP8 arrived together, FP6 was admitted first), and
+        // streak resets only on an actual switch. FP8 serves once FP6
+        // drains.
         let third = b.next_batch(t0).unwrap();
         assert_eq!(third.pair.label(), "[6,16]");
         let fourth = b.next_batch(t0).unwrap();
@@ -242,5 +397,107 @@ mod tests {
         let batch = b.next_batch(t0).unwrap();
         assert_eq!(batch.requests.len(), 1);
         assert_eq!(batch.model, "a");
+    }
+
+    #[test]
+    fn continuous_admission_takes_only_matching_decodes() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        let t0 = Instant::now();
+        let fp6 = PrecisionPair::of_bits(6, 16);
+        let fp8 = PrecisionPair::of_bits(8, 16);
+        // Mixed traffic: FP6 decodes (sessions 1/2), an FP6 prefill, an FP8
+        // decode, and another model's FP6 decode.
+        b.push(req(0, "m", 6, t0).with_session(1, Phase::Decode));
+        b.push(req(1, "m", 6, t0).with_session(0, Phase::Prefill));
+        b.push(req(2, "m", 8, t0).with_session(3, Phase::Decode));
+        b.push(req(3, "m", 6, t0).with_session(2, Phase::Decode));
+        b.push(req(4, "other", 6, t0).with_session(4, Phase::Decode));
+        assert_eq!(b.pending(), 5);
+
+        let admitted = b.admit_decode("m", fp6, 8);
+        let ids: Vec<u64> = admitted.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 3], "only same-key decode steps, in order");
+        assert!(admitted.iter().all(|r| r.phase == Phase::Decode));
+        assert!(admitted.iter().all(|r| r.model == "m" && r.pair == fp6));
+        assert_eq!(b.pending(), 3);
+
+        // The skipped prefill and foreign keys still serve through the
+        // normal path, untouched and in order.
+        let rest = b.next_batch(t0 + Duration::from_millis(50)).unwrap();
+        assert_eq!(rest.requests[0].id, 1);
+        assert_eq!(b.admit_decode("m", fp8, 8).len(), 1);
+        assert_eq!(b.admit_decode("nope", fp6, 8).len(), 0);
+    }
+
+    #[test]
+    fn continuous_admission_counts_toward_streak_fairness() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            max_streak: 2,
+        });
+        let t0 = Instant::now();
+        let ms = Duration::from_millis;
+        let fp6 = PrecisionPair::of_bits(6, 16);
+        // Seed an FP6 streak of 1 via the normal path.
+        b.push(req(0, "m", 6, t0).with_session(1, Phase::Decode));
+        assert_eq!(b.next_batch(t0).unwrap().pair.label(), "[6,16]"); // streak 1
+        // A competing FP8 prefill arrives, then more FP6 decode steps.
+        b.push(req(9, "m", 8, t0 + ms(1)));
+        b.push(req(1, "m", 6, t0 + ms(2)).with_session(1, Phase::Decode));
+        // First admission round: streak 1 < 2 — admits and bumps the streak.
+        assert_eq!(b.admit_decode("m", fp6, 8).len(), 1);
+        // Streak exhausted while FP8 waits: admission refuses even though
+        // more FP6 decode steps are queued.
+        b.push(req(2, "m", 6, t0 + ms(3)).with_session(1, Phase::Decode));
+        assert!(b.admit_decode("m", fp6, 8).is_empty(), "fairness bound spans admission");
+        // next_batch switches to the starved key (its head is oldest).
+        assert_eq!(b.next_batch(t0 + ms(4)).unwrap().pair.label(), "[8,16]");
+        // FP6 serves again through the normal path (streak resets on the
+        // switch back) and exhausts its streak by admission...
+        assert_eq!(b.next_batch(t0 + ms(5)).unwrap().pair.label(), "[6,16]"); // streak 1
+        b.push(req(3, "m", 6, t0 + ms(6)).with_session(1, Phase::Decode));
+        assert_eq!(b.admit_decode("m", fp6, 8).len(), 1); // streak 2
+        // ...but with no competing traffic, the exhausted streak still
+        // admits: there is no one to be fair to.
+        b.push(req(4, "m", 6, t0 + ms(7)).with_session(1, Phase::Decode));
+        assert_eq!(b.admit_decode("m", fp6, 8).len(), 1, "uncontended stream keeps its slot");
+    }
+
+    #[test]
+    fn continuous_admission_is_fair_to_same_key_prefills() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            max_streak: 2,
+        });
+        let t0 = Instant::now();
+        let fp6 = PrecisionPair::of_bits(6, 16);
+        b.push(req(0, "m", 6, t0).with_session(1, Phase::Decode));
+        assert_eq!(b.next_batch(t0).unwrap().requests[0].id, 0); // streak 1
+        // A same-key prefill lands between decode steps: admission bypasses
+        // it (decode-only), but it must count as waiting traffic.
+        b.push(req(7, "m", 6, t0));
+        b.push(req(1, "m", 6, t0).with_session(1, Phase::Decode));
+        assert_eq!(b.admit_decode("m", fp6, 8).len(), 1); // streak 2
+        b.push(req(2, "m", 6, t0).with_session(1, Phase::Decode));
+        // Streak exhausted with the prefill still queued: refuse, so the
+        // worker returns to next_batch, whose FIFO front is the prefill.
+        assert!(b.admit_decode("m", fp6, 8).is_empty(), "same-key prefill must not starve");
+        assert_eq!(b.next_batch(t0).unwrap().requests[0].id, 7, "bypassed prefill served next");
+    }
+
+    #[test]
+    fn continuous_admission_respects_room() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        let t0 = Instant::now();
+        for i in 0..5 {
+            b.push(req(i, "m", 6, t0).with_session(i + 1, Phase::Decode));
+        }
+        let first = b.admit_decode("m", PrecisionPair::of_bits(6, 16), 3);
+        assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        let second = b.admit_decode("m", PrecisionPair::of_bits(6, 16), 3);
+        assert_eq!(second.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3, 4]);
+        assert_eq!(b.pending(), 0);
     }
 }

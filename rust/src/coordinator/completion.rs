@@ -1,0 +1,108 @@
+//! Per-request completion slots: how a submitter learns what happened to
+//! *its* request, not just the aggregate metrics.
+//!
+//! Before these, a failed batch told no one which request died — the
+//! ROADMAP "metrics honesty" gap. A [`Completion`] is a shared write-once
+//! slot the worker fulfills with the request's own `Result` (the model
+//! output on success, the executor's error string on failure); the
+//! submitter polls it (token-stream drivers interleaving many sessions) or
+//! blocks on it (simple callers). Cloning shares the slot, so the handle
+//! travels inside the queued [`super::Request`] while the submitter keeps
+//! its twin.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// The result a request resolves to: the flattened model output, or the
+/// executor's error for this specific request.
+pub type RequestResult = Result<Vec<f32>, String>;
+
+#[derive(Debug, Default)]
+struct Slot {
+    value: Mutex<Option<RequestResult>>,
+    ready: Condvar,
+}
+
+/// A shareable write-once result slot for one request.
+#[derive(Debug, Clone, Default)]
+pub struct Completion(Arc<Slot>);
+
+impl Completion {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resolve the request. First write wins; later writes are ignored (a
+    /// request is fulfilled exactly once by whichever path settles it).
+    pub fn fulfill(&self, result: RequestResult) {
+        let mut slot = self.0.value.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(result);
+            self.0.ready.notify_all();
+        }
+    }
+
+    /// Non-blocking check; clones the result out if resolved.
+    pub fn poll(&self) -> Option<RequestResult> {
+        self.0.value.lock().unwrap().clone()
+    }
+
+    /// True once the request has resolved (either way).
+    pub fn is_done(&self) -> bool {
+        self.0.value.lock().unwrap().is_some()
+    }
+
+    /// Block until resolved or `timeout` elapses. Returns `None` on timeout.
+    pub fn wait(&self, timeout: Duration) -> Option<RequestResult> {
+        let deadline = Instant::now() + timeout;
+        let mut slot = self.0.value.lock().unwrap();
+        while slot.is_none() {
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self.0.ready.wait_timeout(slot, deadline - now).unwrap();
+            slot = guard;
+        }
+        slot.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fulfill_poll_wait() {
+        let c = Completion::new();
+        assert!(c.poll().is_none());
+        assert!(!c.is_done());
+        assert!(c.wait(Duration::from_millis(5)).is_none(), "unresolved waits time out");
+        let twin = c.clone();
+        twin.fulfill(Ok(vec![1.0, 2.0]));
+        assert!(c.is_done());
+        assert_eq!(c.poll().unwrap().unwrap(), vec![1.0, 2.0]);
+        assert_eq!(c.wait(Duration::from_millis(5)).unwrap().unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn first_write_wins() {
+        let c = Completion::new();
+        c.fulfill(Err("first".into()));
+        c.fulfill(Ok(vec![]));
+        assert_eq!(c.poll().unwrap().unwrap_err(), "first");
+    }
+
+    #[test]
+    fn cross_thread_wait() {
+        let c = Completion::new();
+        let producer = c.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            producer.fulfill(Ok(vec![7.0]));
+        });
+        let got = c.wait(Duration::from_secs(5)).expect("must resolve");
+        assert_eq!(got.unwrap(), vec![7.0]);
+        t.join().unwrap();
+    }
+}

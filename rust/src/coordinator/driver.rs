@@ -1,0 +1,211 @@
+//! Client-side token-stream driving: the poll/resubmit loop every caller of
+//! decode-phase serving needs, written once.
+//!
+//! A token stream is inherently sequential — step `k+1` cannot be submitted
+//! until step `k`'s result is back — so a driver keeps each of its streams
+//! exactly **one request deep** while interleaving many streams, which is
+//! precisely the traffic shape the batcher's continuous admission turns
+//! into decode batches. [`StreamDriver`] owns that loop; the caller only
+//! decides, per resolved step, what the next token row is (or that the
+//! stream is done).
+
+use super::batcher::{Phase, Request};
+use super::completion::{Completion, RequestResult};
+use super::server::Server;
+use crate::workload::PrecisionPair;
+use std::time::{Duration, Instant};
+
+/// One live stream the driver manages.
+struct Stream {
+    session: u64,
+    pair: PrecisionPair,
+    outstanding: Completion,
+    /// Steps resolved so far (0 while the prefill is outstanding).
+    step: usize,
+    finished: bool,
+}
+
+/// Drives a pool of token-stream sessions against a [`Server`]: submits
+/// every session's prefill up front, then polls each stream's
+/// [`Completion`] and asks the caller for the next token row as results
+/// arrive.
+pub struct StreamDriver {
+    model: String,
+    streams: Vec<Stream>,
+    next_id: u64,
+}
+
+impl StreamDriver {
+    /// Open one session per `(session_id, pair, prefill_block, dims)`
+    /// entry, submitting all prefills immediately (they carry completion
+    /// slots the driver polls).
+    pub fn start(
+        server: &Server,
+        model: impl Into<String>,
+        sessions: Vec<(u64, PrecisionPair, Vec<f32>, Vec<usize>)>,
+    ) -> Self {
+        let model = model.into();
+        let mut next_id = 0u64;
+        let streams = sessions
+            .into_iter()
+            .map(|(session, pair, input, dims)| {
+                let done = Completion::new();
+                let id = next_id;
+                next_id += 1;
+                server.submit(
+                    Request::new(id, model.clone(), pair, input, dims)
+                        .with_session(session, Phase::Prefill)
+                        .with_completion(&done),
+                );
+                Stream { session, pair, outstanding: done, step: 0, finished: false }
+            })
+            .collect();
+        StreamDriver { model, streams, next_id }
+    }
+
+    /// Poll all streams to completion. Each time a stream's outstanding
+    /// request resolves, `on_step(stream_index, resolved_step, result)`
+    /// runs (`resolved_step` 0 is the prefill, `k >= 1` the k-th decode
+    /// step): return `Some(token_row)` to submit the next decode step,
+    /// `None` to end the stream. A stream whose request **failed** ends
+    /// regardless — the session is broken — but `on_step` still sees the
+    /// error (that is the per-request failure plumbing). Returns `true`
+    /// when every stream ended before `deadline`.
+    pub fn run(
+        &mut self,
+        server: &Server,
+        deadline: Instant,
+        mut on_step: impl FnMut(usize, usize, RequestResult) -> Option<Vec<f32>>,
+    ) -> bool {
+        while self.streams.iter().any(|s| !s.finished) {
+            if Instant::now() >= deadline {
+                return false;
+            }
+            let mut progressed = false;
+            for i in 0..self.streams.len() {
+                if self.streams[i].finished {
+                    continue;
+                }
+                let Some(result) = self.streams[i].outstanding.poll() else { continue };
+                progressed = true;
+                let failed = result.is_err();
+                let next = on_step(i, self.streams[i].step, result);
+                let id = self.next_id;
+                self.next_id += 1;
+                let s = &mut self.streams[i];
+                match next {
+                    Some(token) if !failed => {
+                        let done = Completion::new();
+                        let dims = vec![1, token.len()];
+                        server.submit(
+                            Request::new(id, self.model.clone(), s.pair, token, dims)
+                                .with_session(s.session, Phase::Decode)
+                                .with_completion(&done),
+                        );
+                        s.outstanding = done;
+                        s.step += 1;
+                    }
+                    _ => {
+                        s.finished = true;
+                        // Close the session server-side so its KV cache
+                        // frees now instead of waiting for the executor's
+                        // capacity LRU (fire-and-forget; End is idempotent).
+                        server.submit(
+                            Request::new(id, self.model.clone(), s.pair, Vec::new(), Vec::new())
+                                .with_session(s.session, Phase::End),
+                        );
+                    }
+                }
+            }
+            if !progressed {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Batch, BatchPolicy, BatchResult, Executor, ServerConfig};
+    use crate::workload::ModelSpec;
+
+    fn tiny() -> ModelSpec {
+        ModelSpec {
+            seq: 8,
+            layers: 1,
+            d_model: 32,
+            d_ff: 64,
+            heads: 2,
+            gated_ffn: false,
+            kv_heads: 2,
+            name: "tiny",
+        }
+    }
+
+    /// Completes everything except session 2's decode steps — a
+    /// *per-request* failure, so co-batched streams are unaffected.
+    struct FailSession2Decode;
+    impl Executor for FailSession2Decode {
+        fn execute(&mut self, batch: &Batch) -> Result<BatchResult, String> {
+            let outputs = batch
+                .requests
+                .iter()
+                .map(|r| {
+                    if r.session == 2 && r.phase == Phase::Decode {
+                        Err("synthetic decode failure".to_string())
+                    } else {
+                        Ok(vec![r.session as f32])
+                    }
+                })
+                .collect();
+            Ok(BatchResult { host_s: 0.0, outputs })
+        }
+    }
+
+    #[test]
+    fn drives_streams_to_completion_and_reports_failures() {
+        let cfg = ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                max_streak: 4,
+            },
+            sim_config: crate::sim::mobile_a(),
+            sim_model: tiny(),
+        };
+        let server = Server::start(cfg, Box::new(FailSession2Decode));
+        let pair = PrecisionPair::of_bits(6, 16);
+        let sessions =
+            vec![(1u64, pair, vec![0.0; 8], vec![8]), (2u64, pair, vec![0.0; 8], vec![8])];
+        let mut driver = StreamDriver::start(&server, "tiny", sessions);
+        let steps = 3usize;
+        let mut seen: Vec<Vec<Result<usize, String>>> = vec![Vec::new(), Vec::new()];
+        let finished = driver.run(
+            &server,
+            Instant::now() + Duration::from_secs(5),
+            |i, step, result| {
+                seen[i].push(result.map(|v| v.len()));
+                if step < steps {
+                    Some(vec![0.0; 4])
+                } else {
+                    None
+                }
+            },
+        );
+        assert!(finished, "all streams must end");
+        // Stream 0 (session 1): prefill + 3 decode steps, all Ok.
+        assert_eq!(seen[0].len(), steps + 1);
+        assert!(seen[0].iter().all(|r| r.is_ok()));
+        // Stream 1 (session 2): prefill Ok, first decode fails, and the
+        // driver ends the stream even though on_step asked to continue.
+        assert_eq!(seen[1].len(), 2);
+        assert!(seen[1][0].is_ok());
+        assert_eq!(seen[1][1].as_ref().unwrap_err(), "synthetic decode failure");
+        let m = server.shutdown();
+        assert_eq!(m.sessions_started, 2);
+        assert_eq!(m.decode_steps, steps as u64, "only the healthy stream's steps complete");
+        assert_eq!(m.requests_failed, 1);
+    }
+}

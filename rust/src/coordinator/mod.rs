@@ -2,14 +2,23 @@
 //!
 //! FlexiBit's contribution is the accelerator, so the coordinator is the
 //! thin-but-real serving layer a deployment wraps around it: a request
-//! queue, a dynamic batcher that groups compatible requests (same model,
-//! same precision configuration — precision reconfiguration costs cycles,
-//! so the batcher avoids needless switches), a worker that executes batches
-//! on the PJRT runtime, and a metrics sink. The simulator co-runs with
-//! execution to attribute estimated accelerator latency/energy per batch.
+//! queue with per-(model, precision) sub-queues, a dynamic batcher that
+//! groups compatible requests (precision reconfiguration costs cycles, so
+//! the batcher avoids needless switches) and continuously admits decode
+//! steps into the executing key, a worker that executes batches through a
+//! pluggable [`Executor`] and fulfills each request's [`Completion`] slot
+//! with that request's own result, and a metrics sink. The simulator
+//! co-runs with execution to attribute estimated accelerator latency/energy
+//! per batch. Requests may be stateless blocks or token-stream sessions
+//! (one [`Phase::Prefill`] opening the KV cache, then [`Phase::Decode`]
+//! steps).
 
 mod batcher;
+mod completion;
+mod driver;
 mod server;
 
-pub use batcher::{Batch, BatchPolicy, Batcher, Request};
-pub use server::{Executor, FnExecutor, Metrics, Server, ServerConfig};
+pub use batcher::{Batch, BatchPolicy, Batcher, Phase, Request};
+pub use completion::{Completion, RequestResult};
+pub use driver::StreamDriver;
+pub use server::{BatchResult, Executor, FnExecutor, Metrics, Server, ServerConfig};

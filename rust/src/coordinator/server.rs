@@ -1,9 +1,21 @@
 //! The serving loop: worker thread draining the batcher, executing batches
-//! through a pluggable executor (the PJRT runtime in production, a stub in
+//! through a pluggable executor (the native engine in production, a stub in
 //! tests), and co-running the performance simulator for per-batch
 //! accelerator estimates.
+//!
+//! Execution is **per-request honest**: the executor returns one `Result`
+//! per request, the worker fulfills each request's
+//! [`Completion`](super::Completion) slot with it, and only the requests
+//! that actually completed enter the
+//! completion/latency statistics — a submitter always learns *which*
+//! request in a batch died, not just that something did. Between executor
+//! calls the worker runs **continuous admission**: decode-phase requests of
+//! the executing (model, pair) key that arrived meanwhile join immediately
+//! (bounded by the fairness streak), so token streams never wait out the
+//! batching budget behind prefill traffic.
 
-use super::batcher::{Batch, BatchPolicy, Batcher, Request};
+use super::batcher::{Batch, BatchPolicy, Batcher, Phase, Request};
+use super::completion::RequestResult;
 use crate::baselines::FlexiBitAccel;
 use crate::sim::{self, AcceleratorConfig};
 use crate::workload::ModelSpec;
@@ -11,19 +23,20 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-/// Aggregated serving metrics. Completion/latency stats count only batches
-/// whose executor succeeded; failed batches land in `requests_failed` /
-/// `batches_failed` so SLO accounting stays truthful.
+/// Aggregated serving metrics. Completion/latency stats count only requests
+/// whose executor result was `Ok`; failed requests land in
+/// `requests_failed` / `batches_failed` so SLO accounting stays truthful.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     pub requests_completed: u64,
-    /// Requests in batches whose executor returned an error. Excluded from
-    /// completion, latency, and co-simulation stats.
+    /// Requests whose executor result was an error (individually, or via a
+    /// whole-batch failure). Excluded from completion, latency, and
+    /// co-simulation stats.
     pub requests_failed: u64,
     pub batches_executed: u64,
     pub batches_failed: u64,
     pub total_batch_size: u64,
-    /// Wall-clock execution seconds (host, PJRT).
+    /// Wall-clock execution seconds (host).
     pub host_exec_s: f64,
     /// Request latency (arrival → completion) sum, for mean latency.
     pub latency_sum_s: f64,
@@ -33,6 +46,10 @@ pub struct Metrics {
     /// Simulated accelerator energy (J).
     pub sim_energy_j: f64,
     pub reconfigurations: u64,
+    /// Token-stream sessions opened (completed session prefills).
+    pub sessions_started: u64,
+    /// Autoregressive decode steps completed.
+    pub decode_steps: u64,
 }
 
 impl Metrics {
@@ -74,12 +91,22 @@ pub struct ServerConfig {
     pub sim_model: ModelSpec,
 }
 
+/// What one executor call produced: host seconds for the whole batch plus
+/// one result per request, **in `batch.requests` order** — the model output
+/// on success, this request's own error otherwise.
+#[derive(Debug)]
+pub struct BatchResult {
+    pub host_s: f64,
+    pub outputs: Vec<RequestResult>,
+}
+
 /// The execution backend a worker invokes per batch. Implementations:
-/// [`crate::kernels::NativeExecutor`] (native bit-packed GEMMs, default) and
-/// the PJRT artifact path (wrapped in an [`FnExecutor`], `--features pjrt`).
-/// Returns host execution seconds for the whole batch.
+/// [`crate::kernels::NativeExecutor`] (native bit-packed GEMMs, sessions,
+/// default) and the PJRT artifact path (wrapped in an [`FnExecutor`],
+/// `--features pjrt`). Returns per-request results; `Err` means the whole
+/// batch failed (e.g. unknown model) and every request inherits the error.
 pub trait Executor: Send {
-    fn execute(&mut self, batch: &Batch) -> Result<f64, String>;
+    fn execute(&mut self, batch: &Batch) -> Result<BatchResult, String>;
 
     /// Short backend name for logs/metrics.
     fn name(&self) -> &str {
@@ -88,17 +115,21 @@ pub trait Executor: Send {
 }
 
 /// Adapter for closure-based executors (tests, stubs, the PJRT path whose
-/// client must be constructed lazily inside the worker thread). A blanket
-/// `impl Executor for F: FnMut` would collide with concrete executor impls
-/// under coherence rules, hence the explicit wrapper.
+/// client must be constructed lazily inside the worker thread). The closure
+/// keeps the original whole-batch signature — host seconds or one error —
+/// and the adapter expands it to per-request results (`Ok` with an empty
+/// output for every request). A blanket `impl Executor for F: FnMut` would
+/// collide with concrete executor impls under coherence rules, hence the
+/// explicit wrapper.
 pub struct FnExecutor<F>(pub F);
 
 impl<F> Executor for FnExecutor<F>
 where
     F: FnMut(&Batch) -> Result<f64, String> + Send,
 {
-    fn execute(&mut self, batch: &Batch) -> Result<f64, String> {
-        (self.0)(batch)
+    fn execute(&mut self, batch: &Batch) -> Result<BatchResult, String> {
+        let host_s = (self.0)(batch)?;
+        Ok(BatchResult { host_s, outputs: batch.requests.iter().map(|_| Ok(Vec::new())).collect() })
     }
 
     fn name(&self) -> &str {
@@ -131,58 +162,120 @@ impl Server {
             while !s.load(Ordering::Relaxed) {
                 let maybe = { b.lock().unwrap().next_batch(Instant::now()) };
                 match maybe {
-                    Some(batch) => {
-                        let t0 = Instant::now();
-                        let host_s = match executor.execute(&batch) {
-                            Ok(host_s) => host_s,
-                            Err(e) => {
-                                // A failed batch completed nothing: count it
-                                // as failed and keep it out of completion,
-                                // latency, and co-simulation stats.
-                                eprintln!(
-                                    "executor '{}' failed on batch: {e}",
-                                    executor.name()
-                                );
-                                let mut met = m.lock().unwrap();
-                                met.batches_failed += 1;
-                                met.requests_failed += batch.requests.len() as u64;
-                                // The batcher still reconfigured to serve
-                                // this batch — keep the counter in sync.
-                                met.reconfigurations = b.lock().unwrap().reconfigurations;
-                                continue;
-                            }
-                        };
-                        let done = Instant::now();
-                        // Co-simulation: estimate FlexiBit latency/energy for
-                        // this batch (batch of M=batch_size token rows).
-                        let rep = sim::simulate_model(
-                            &accel,
-                            &cfg.sim_config,
-                            &cfg.sim_model,
-                            batch.pair,
-                        );
-                        let mut met = m.lock().unwrap();
-                        met.batches_executed += 1;
-                        met.total_batch_size += batch.requests.len() as u64;
-                        met.requests_completed += batch.requests.len() as u64;
-                        met.host_exec_s += host_s.max(done.duration_since(t0).as_secs_f64());
-                        for r in &batch.requests {
-                            let lat = done.duration_since(r.arrived).as_secs_f64();
-                            met.latency_sum_s += lat;
-                            met.latency_max_s = met.latency_max_s.max(lat);
+                    Some(mut batch) => loop {
+                        Self::run_batch(&batch, &mut executor, &b, &m, &cfg, &accel);
+                        if s.load(Ordering::Relaxed) {
+                            break;
                         }
-                        met.sim_accel_s += rep.seconds;
-                        met.sim_energy_j += rep.energy_j;
-                        met.reconfigurations = {
-                            let bb = b.lock().unwrap();
-                            bb.reconfigurations
-                        };
-                    }
+                        // Continuous admission: decode steps of this hot key
+                        // that arrived while the batch executed join
+                        // immediately — no wait budget, no reconfiguration.
+                        // The batcher counts each round toward the fairness
+                        // streak and refuses once it is exhausted while
+                        // other keys wait, so an endless token stream cannot
+                        // starve them (and keeps its slot when uncontended).
+                        let extra = b.lock().unwrap().admit_decode(
+                            &batch.model,
+                            batch.pair,
+                            cfg.policy.max_batch,
+                        );
+                        if extra.is_empty() {
+                            break;
+                        }
+                        batch.requests = extra;
+                    },
                     None => std::thread::sleep(Duration::from_micros(200)),
                 }
             }
         });
         Server { batcher, metrics, stop, worker: Some(worker) }
+    }
+
+    /// Execute one batch and settle it: fulfill every request's completion
+    /// slot and tally per-request metrics.
+    fn run_batch(
+        batch: &Batch,
+        executor: &mut Box<dyn Executor>,
+        b: &Arc<Mutex<Batcher>>,
+        m: &Arc<Mutex<Metrics>>,
+        cfg: &ServerConfig,
+        accel: &FlexiBitAccel,
+    ) {
+        let t0 = Instant::now();
+        match executor.execute(batch) {
+            Err(e) => {
+                // A failed batch completed nothing: count every request as
+                // failed, keep them out of completion/latency/co-simulation
+                // stats, and tell each submitter.
+                eprintln!("executor '{}' failed on batch: {e}", executor.name());
+                {
+                    let mut met = m.lock().unwrap();
+                    met.batches_failed += 1;
+                    met.requests_failed += batch.requests.len() as u64;
+                    met.reconfigurations = b.lock().unwrap().reconfigurations;
+                }
+                for r in &batch.requests {
+                    if let Some(done) = &r.done {
+                        done.fulfill(Err(e.clone()));
+                    }
+                }
+            }
+            Ok(res) => {
+                let done_at = Instant::now();
+                // Co-simulation: estimate FlexiBit latency/energy for this
+                // batch. An all-decode batch is a batch of single-token
+                // forwards, so it simulates at seq=1 instead of the full
+                // prefill sequence (the performance model has no KV-cache
+                // concept yet, so attention against the cached past is
+                // under-counted — tracked in ROADMAP); prefill and mixed
+                // batches keep the full-seq estimate.
+                let all_decode =
+                    !batch.requests.is_empty()
+                        && batch.requests.iter().all(|r| r.phase == Phase::Decode);
+                let rep = if all_decode {
+                    let decode_model = ModelSpec { seq: 1, ..cfg.sim_model.clone() };
+                    sim::simulate_model(accel, &cfg.sim_config, &decode_model, batch.pair)
+                } else {
+                    sim::simulate_model(accel, &cfg.sim_config, &cfg.sim_model, batch.pair)
+                };
+                let mut outputs = res.outputs;
+                // Defend the per-request contract: an executor that
+                // returned too few results fails the unanswered tail.
+                outputs.resize_with(batch.requests.len(), || {
+                    Err("executor returned no result for this request".into())
+                });
+                let mut met = m.lock().unwrap();
+                met.batches_executed += 1;
+                met.host_exec_s += res.host_s.max(done_at.duration_since(t0).as_secs_f64());
+                met.sim_accel_s += rep.seconds;
+                met.sim_energy_j += rep.energy_j;
+                for (r, out) in batch.requests.iter().zip(outputs) {
+                    match &out {
+                        // Session-end control messages are fulfilled but not
+                        // counted — they are bookkeeping, not served work,
+                        // and must not inflate completion/latency stats.
+                        Ok(_) if r.phase == Phase::End => {}
+                        Ok(_) => {
+                            met.requests_completed += 1;
+                            met.total_batch_size += 1;
+                            let lat = done_at.duration_since(r.arrived).as_secs_f64();
+                            met.latency_sum_s += lat;
+                            met.latency_max_s = met.latency_max_s.max(lat);
+                            match r.phase {
+                                Phase::Prefill if r.session != 0 => met.sessions_started += 1,
+                                Phase::Decode => met.decode_steps += 1,
+                                _ => {}
+                            }
+                        }
+                        Err(_) => met.requests_failed += 1,
+                    }
+                    if let Some(done) = &r.done {
+                        done.fulfill(out);
+                    }
+                }
+                met.reconfigurations = b.lock().unwrap().reconfigurations;
+            }
+        }
     }
 
     pub fn submit(&self, req: Request) {
@@ -221,29 +314,57 @@ impl Server {
         true
     }
 
-    /// Stop the worker and return final metrics.
+    /// Stop the worker and return final metrics. Requests still queued are
+    /// settled first: their completions resolve to an error and they count
+    /// as failed (`Phase::End` control requests are dropped silently).
     pub fn shutdown(mut self) -> Metrics {
+        self.stop_and_settle();
+        let m = self.metrics.lock().unwrap().clone();
+        m
+    }
+
+    fn stop_and_settle(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
-        let m = self.metrics.lock().unwrap().clone();
-        m
+        self.settle_unserved();
+    }
+
+    /// Settle every request the stopped worker will never execute: fulfill
+    /// its completion with an error (a submitter blocked in `wait` must not
+    /// spin out its timeout) and count it failed. [`Phase::End`] control
+    /// requests are the exception — they are dropped silently, since server
+    /// shutdown tears every session down anyway.
+    fn settle_unserved(&self) {
+        let unserved = self.batcher.lock().unwrap().drain();
+        if unserved.is_empty() {
+            return;
+        }
+        let mut failed = 0u64;
+        for r in &unserved {
+            if r.phase == Phase::End {
+                continue;
+            }
+            failed += 1;
+            if let Some(done) = &r.done {
+                done.fulfill(Err("server shut down before executing this request".into()));
+            }
+        }
+        self.metrics.lock().unwrap().requests_failed += failed;
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.stop_and_settle();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::Completion;
     use crate::workload::{bert_base, PrecisionPair};
 
     fn tiny_model() -> ModelSpec {
@@ -251,34 +372,27 @@ mod tests {
     }
 
     fn mk_req(id: u64, bits: u32) -> Request {
-        Request {
-            id,
-            model: "tiny".into(),
-            pair: PrecisionPair::of_bits(bits, 16),
-            input: vec![1.0; 8],
-            dims: vec![8],
-            arrived: Instant::now(),
+        Request::new(id, "tiny", PrecisionPair::of_bits(bits, 16), vec![1.0; 8], vec![8])
+    }
+
+    fn stub_cfg(max_batch: usize, max_streak: usize) -> ServerConfig {
+        ServerConfig {
+            policy: BatchPolicy { max_batch, max_wait: Duration::from_millis(1), max_streak },
+            sim_config: crate::sim::mobile_a(),
+            sim_model: tiny_model(),
         }
     }
 
     #[test]
     fn serves_requests_through_stub_executor() {
-        let cfg = ServerConfig {
-            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1), max_streak: 4 },
-            sim_config: crate::sim::mobile_a(),
-            sim_model: tiny_model(),
-        };
-        let server =
-            Server::start(cfg, Box::new(FnExecutor(|_b: &Batch| -> Result<f64, String> { Ok(0.0) })));
+        let server = Server::start(
+            stub_cfg(4, 4),
+            Box::new(FnExecutor(|_b: &Batch| -> Result<f64, String> { Ok(0.0) })),
+        );
         for i in 0..16 {
             server.submit(mk_req(i, 6));
         }
-        // Wait for drain.
-        let deadline = Instant::now() + Duration::from_secs(5);
-        while server.pending() > 0 && Instant::now() < deadline {
-            std::thread::sleep(Duration::from_millis(5));
-        }
-        std::thread::sleep(Duration::from_millis(20));
+        assert!(server.await_completed(16, Duration::from_secs(5)), "stream must drain");
         let m = server.shutdown();
         assert_eq!(m.requests_completed, 16);
         assert!(m.batches_executed >= 4, "batched into >= 4 batches");
@@ -289,21 +403,14 @@ mod tests {
 
     #[test]
     fn mixed_precision_serving_counts_reconfigs() {
-        let cfg = ServerConfig {
-            policy: BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1), max_streak: 2 },
-            sim_config: crate::sim::mobile_a(),
-            sim_model: tiny_model(),
-        };
-        let server =
-            Server::start(cfg, Box::new(FnExecutor(|_b: &Batch| -> Result<f64, String> { Ok(0.0) })));
+        let server = Server::start(
+            stub_cfg(2, 2),
+            Box::new(FnExecutor(|_b: &Batch| -> Result<f64, String> { Ok(0.0) })),
+        );
         for i in 0..8 {
             server.submit(mk_req(i, if i % 2 == 0 { 6 } else { 8 }));
         }
-        let deadline = Instant::now() + Duration::from_secs(5);
-        while server.pending() > 0 && Instant::now() < deadline {
-            std::thread::sleep(Duration::from_millis(5));
-        }
-        std::thread::sleep(Duration::from_millis(20));
+        assert!(server.await_completed(8, Duration::from_secs(5)));
         let m = server.shutdown();
         assert_eq!(m.requests_completed, 8);
         assert!(m.reconfigurations >= 1, "precision switching must be counted");
@@ -311,15 +418,9 @@ mod tests {
 
     #[test]
     fn failing_executor_counts_failures_not_completions() {
-        let cfg = ServerConfig {
-            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1), max_streak: 4 },
-            sim_config: crate::sim::mobile_a(),
-            sim_model: tiny_model(),
-        };
-        // Executor fails every odd-id batch (ids arrive in order, batch of
-        // up to 4 same-precision requests — use precision to split batches).
+        // Executor fails every FP6 batch; half the stream is FP6.
         let server = Server::start(
-            cfg,
+            stub_cfg(4, 4),
             Box::new(FnExecutor(|b: &Batch| -> Result<f64, String> {
                 if b.pair.w.bits() == 6 {
                     Err("synthetic executor failure".into())
@@ -328,9 +429,12 @@ mod tests {
                 }
             })),
         );
+        let mut slots = Vec::new();
         for i in 0..12 {
-            // Half the stream at w=6 bits (fails), half at w=8 (succeeds).
-            server.submit(mk_req(i, if i % 2 == 0 { 6 } else { 8 }));
+            let done = Completion::new();
+            let bits = if i % 2 == 0 { 6 } else { 8 };
+            server.submit(mk_req(i, bits).with_completion(&done));
+            slots.push((bits, done));
         }
         assert!(server.await_finished(12, Duration::from_secs(5)), "stream must drain");
         let m = server.shutdown();
@@ -340,6 +444,83 @@ mod tests {
         assert_eq!(m.requests_finished(), 12);
         // Failed batches contribute no latency or batch-size stats.
         assert_eq!(m.total_batch_size, m.requests_completed);
+        // Per-request plumbing: every submitter learns its own fate, and a
+        // whole-batch failure propagates the executor's error verbatim.
+        for (bits, done) in &slots {
+            let got = done.poll().expect("every request must resolve");
+            if *bits == 6 {
+                assert_eq!(got.unwrap_err(), "synthetic executor failure");
+            } else {
+                assert!(got.is_ok());
+            }
+        }
+    }
+
+    /// An executor that completes some requests and fails others *within
+    /// one batch* — the submitter of the dead request (and only that one)
+    /// must see its error.
+    struct PartialExec;
+    impl Executor for PartialExec {
+        fn execute(&mut self, batch: &Batch) -> Result<BatchResult, String> {
+            let outputs = batch
+                .requests
+                .iter()
+                .map(|r| {
+                    if r.id % 3 == 0 {
+                        Err(format!("request {} rejected", r.id))
+                    } else {
+                        Ok(vec![r.id as f32])
+                    }
+                })
+                .collect();
+            Ok(BatchResult { host_s: 0.0, outputs })
+        }
+        fn name(&self) -> &str {
+            "partial"
+        }
+    }
+
+    #[test]
+    fn partially_failing_batch_reports_per_request() {
+        let server = Server::start(stub_cfg(4, 4), Box::new(PartialExec));
+        let mut slots = Vec::new();
+        for i in 0..12 {
+            let done = Completion::new();
+            server.submit(mk_req(i, 6).with_completion(&done));
+            slots.push(done);
+        }
+        assert!(server.await_finished(12, Duration::from_secs(5)));
+        let m = server.shutdown();
+        assert_eq!(m.requests_failed, 4, "ids 0,3,6,9 fail");
+        assert_eq!(m.requests_completed, 8);
+        assert_eq!(m.batches_failed, 0, "a partial failure is not a batch failure");
+        assert_eq!(m.total_batch_size, m.requests_completed);
+        for (i, done) in slots.iter().enumerate() {
+            let got = done.poll().expect("resolved");
+            if i % 3 == 0 {
+                assert_eq!(got.unwrap_err(), format!("request {i} rejected"));
+            } else {
+                assert_eq!(got.unwrap(), vec![i as f32], "output routed to its submitter");
+            }
+        }
+    }
+
+    #[test]
+    fn session_phases_are_tallied() {
+        let server = Server::start(
+            stub_cfg(4, 4),
+            Box::new(FnExecutor(|_b: &Batch| -> Result<f64, String> { Ok(0.0) })),
+        );
+        server.submit(mk_req(0, 6).with_session(1, Phase::Prefill));
+        for i in 1..5 {
+            server.submit(mk_req(i, 6).with_session(1, Phase::Decode));
+        }
+        server.submit(mk_req(9, 6)); // stateless
+        assert!(server.await_completed(6, Duration::from_secs(5)));
+        let m = server.shutdown();
+        assert_eq!(m.sessions_started, 1);
+        assert_eq!(m.decode_steps, 4);
+        assert_eq!(m.requests_completed, 6);
     }
 
     #[test]

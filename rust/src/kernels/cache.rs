@@ -1,5 +1,5 @@
 //! Per-(model, weight-format) packed-weight cache, with budgeted decoded
-//! weight panels.
+//! weight panels under an LRU eviction policy.
 //!
 //! Quantizing + bit-packing a model's weights is the expensive, precision-
 //! dependent part of native execution. The paper's reconfiguration model is
@@ -13,10 +13,14 @@
 //! weights **decoded once** into panel-major tiles ([`WeightPanels`]), so
 //! the GEMM hot loop never re-extracts and re-decodes the same weight bits
 //! on every forward. Panels cost 4 B/element versus the packed `bits/8` —
-//! the paper's memory-footprint win traded back for hot-loop speed — so
-//! they are built greedily under an explicit process-wide byte budget
-//! ([`WeightCache::with_panel_budget`]); matrices that don't fit keep
-//! decoding from packed storage, bit-identically.
+//! the paper's memory-footprint win traded back for hot-loop speed — under
+//! an explicit process-wide byte budget
+//! ([`WeightCache::with_panel_budget`]). When the budget saturates, panels
+//! are evicted **LRU by last-served batch**: the entry that served a batch
+//! longest ago loses its decoded panels first (packed storage always
+//! stays), so a newly active configuration takes the fast path while cold
+//! ones fall back to packed decode — bit-identically. An entry that lost
+//! its panels regains them on a later hit if free budget has reappeared.
 
 use super::packed::PackedMatrix;
 use super::panels::WeightPanels;
@@ -29,6 +33,14 @@ use std::sync::{Arc, Mutex};
 /// models, a real knob for serving (0 disables panels entirely, giving the
 /// paper-faithful packed-only footprint).
 pub const DEFAULT_PANEL_BUDGET: usize = 512 << 20;
+
+/// A hit whose panels were evicted may evict *other* entries to rebuild —
+/// but only entries that have sat unserved for at least this many batches.
+/// The hysteresis is what separates the two regimes: a dead entry pinning
+/// the budget is reclaimed once the hot entry has served this many batches,
+/// while two hot entries alternating under a tight budget never qualify as
+/// stale against each other, so they never thrash full panel rebuilds.
+const PANEL_LRU_HYSTERESIS: u64 = 8;
 
 /// One transformer layer's weights, quantized and bit-packed.
 #[derive(Debug, Clone)]
@@ -53,6 +65,16 @@ impl PackedLayer {
             + self.w_gate.as_ref().map_or(0, |g| g.bytes())
             + self.w_down.bytes()
     }
+
+    /// Decoded-panel bytes a full decode of this layer would occupy.
+    fn panel_wish(&self) -> usize {
+        let m = |w: &PackedMatrix| w.rows() * w.cols() * 4;
+        m(&self.wqkv)
+            + m(&self.wo)
+            + m(&self.w_up)
+            + self.w_gate.as_ref().map_or(0, m)
+            + m(&self.w_down)
+    }
 }
 
 /// One layer's decoded panels — `None` for any matrix the budget could not
@@ -75,12 +97,14 @@ impl LayerPanels {
     }
 }
 
-/// A cache entry: the packed weights (storage of record) plus whatever
-/// decoded panels fit the budget, parallel per layer.
-#[derive(Debug)]
+/// A handle to one cached configuration: the packed weights (storage of
+/// record) plus whatever decoded panels the entry currently holds, parallel
+/// per layer. Both sides are shared `Arc`s — an in-flight forward keeps
+/// whatever panels it fetched even if the cache evicts them meanwhile.
+#[derive(Debug, Clone)]
 pub struct CachedModel {
-    pub layers: Vec<PackedLayer>,
-    pub panels: Vec<LayerPanels>,
+    pub layers: Arc<Vec<PackedLayer>>,
+    pub panels: Arc<Vec<LayerPanels>>,
 }
 
 impl CachedModel {
@@ -93,15 +117,34 @@ impl CachedModel {
     }
 }
 
+/// Internal cache slot: the shared buffers plus LRU bookkeeping.
+#[derive(Debug)]
+struct Entry {
+    layers: Arc<Vec<PackedLayer>>,
+    panels: Arc<Vec<LayerPanels>>,
+    /// Decoded bytes this entry currently pins (== panels bytes).
+    panel_bytes: usize,
+    /// Tick of the last batch this configuration served (the LRU key).
+    last_served: u64,
+}
+
+impl Entry {
+    fn handle(&self) -> CachedModel {
+        CachedModel { layers: self.layers.clone(), panels: self.panels.clone() }
+    }
+}
+
 /// Thread-safe cache of packed model weights keyed by model, then weight
 /// format. The nested map keeps the hot hit path allocation-free: probing
 /// by `&str` needs no owned key (a `(String, Format)` tuple key would force
 /// a `String` clone per lookup).
 #[derive(Debug)]
 pub struct WeightCache {
-    entries: Mutex<HashMap<String, HashMap<Format, Arc<CachedModel>>>>,
+    entries: Mutex<HashMap<String, HashMap<Format, Entry>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// Monotonic serve tick — every `get_or_pack` is one served batch.
+    ticks: AtomicU64,
     /// Byte ceiling for decoded panels across every entry.
     panel_budget: usize,
     /// Decoded panel bytes currently resident (kept outside the map lock's
@@ -121,6 +164,7 @@ impl Default for WeightCache {
             entries: Mutex::new(HashMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            ticks: AtomicU64::new(0),
             panel_budget: DEFAULT_PANEL_BUDGET,
             panel_resident: AtomicUsize::new(0),
             panel_kc: cfg.kc,
@@ -146,26 +190,108 @@ impl WeightCache {
     }
 
     /// Fetch the packed weights for `(model, w_fmt)`, building them with
-    /// `pack` on first use and decoding weight panels under the budget. The
-    /// build runs under the cache lock: the serving worker is
-    /// single-threaded and the GEMM kernel parallelizes internally, so a
-    /// fancier once-per-key latch would buy nothing here.
-    pub fn get_or_pack<F>(&self, model: &str, w_fmt: Format, pack: F) -> Arc<CachedModel>
+    /// `pack` on first use. Panels decode under the byte budget; on
+    /// saturation the least-recently-served entries lose theirs first
+    /// (LRU), never the packed storage. A hit whose panels were evicted
+    /// rebuilds them from free budget, evicting only entries stale by
+    /// [`PANEL_LRU_HYSTERESIS`] served batches — so a hot configuration
+    /// reclaims the budget from a dead one, but two alternating hot
+    /// configurations never thrash rebuilds against each other. The build
+    /// runs under the cache lock: the serving worker is single-threaded and
+    /// the GEMM kernel parallelizes internally, so a fancier once-per-key
+    /// latch would buy nothing here.
+    pub fn get_or_pack<F>(&self, model: &str, w_fmt: Format, pack: F) -> CachedModel
     where
         F: FnOnce() -> Vec<PackedLayer>,
     {
+        let tick = self.ticks.fetch_add(1, Ordering::Relaxed) + 1;
+        let stale_cutoff = tick.saturating_sub(PANEL_LRU_HYSTERESIS);
         let mut map = self.entries.lock().unwrap();
-        if let Some(found) = map.get(model).and_then(|inner| inner.get(&w_fmt)) {
+        if map.get(model).and_then(|inner| inner.get(&w_fmt)).is_some() {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return found.clone();
+            let (wish, have) = {
+                let e = map.get_mut(model).and_then(|inner| inner.get_mut(&w_fmt)).unwrap();
+                e.last_served = tick;
+                (e.layers.iter().map(|l| l.panel_wish()).sum::<usize>(), e.panel_bytes)
+            };
+            // Regain the fast path for an entry missing some or all panels,
+            // but only when a FULL decode is attainable from free budget +
+            // its own partial + entries a full hysteresis colder (never hot
+            // peers, and never a repeated same-prefix rebuild).
+            let free = self.panel_budget.saturating_sub(self.panel_resident.load(Ordering::Relaxed));
+            let reclaimable: usize = map
+                .values()
+                .flat_map(|inner| inner.values())
+                .filter(|e| e.panel_bytes > 0 && e.last_served < stale_cutoff)
+                .map(|e| e.panel_bytes)
+                .sum();
+            if have < wish && free + have + reclaimable >= wish {
+                let e = map.get_mut(model).and_then(|inner| inner.get_mut(&w_fmt)).unwrap();
+                // Release the partial first — its bytes fund the rebuild.
+                self.panel_resident.fetch_sub(e.panel_bytes, Ordering::Relaxed);
+                e.panels = Arc::new(vec![LayerPanels::default(); e.layers.len()]);
+                e.panel_bytes = 0;
+                self.evict_panels_lru(&mut map, wish, Some(stale_cutoff));
+                let e = map.get_mut(model).and_then(|inner| inner.get_mut(&w_fmt)).unwrap();
+                let panels = self.build_panels(&e.layers);
+                let built: usize = panels.iter().map(|p| p.bytes()).sum();
+                self.panel_resident.fetch_add(built, Ordering::Relaxed);
+                e.panels = Arc::new(panels);
+                e.panel_bytes = built;
+            }
+            return map.get(model).and_then(|inner| inner.get(&w_fmt)).unwrap().handle();
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let layers = pack();
+
+        // LRU eviction: make room for this entry's full decode by dropping
+        // the panels of the coldest entries (ties impossible — ticks are
+        // unique). If nothing evictable remains, whatever budget is free
+        // still gets a greedy prefix decode below.
+        let wish: usize = layers.iter().map(|l| l.panel_wish()).sum();
+        self.evict_panels_lru(&mut map, wish, None);
+
         let panels = self.build_panels(&layers);
-        let built = Arc::new(CachedModel { layers, panels });
-        self.panel_resident.fetch_add(built.panel_bytes(), Ordering::Relaxed);
-        map.entry(model.to_string()).or_default().insert(w_fmt, built.clone());
-        built
+        let panel_bytes: usize = panels.iter().map(|p| p.bytes()).sum();
+        self.panel_resident.fetch_add(panel_bytes, Ordering::Relaxed);
+        let entry = Entry {
+            layers: Arc::new(layers),
+            panels: Arc::new(panels),
+            panel_bytes,
+            last_served: tick,
+        };
+        let handle = entry.handle();
+        map.entry(model.to_string()).or_default().insert(w_fmt, entry);
+        handle
+    }
+
+    /// Evict panels LRU (coldest `last_served` first) until `wish` more
+    /// bytes fit the budget or nothing evictable remains. With
+    /// `stale_before`, only entries last served strictly before that tick
+    /// qualify — the hit path's anti-thrash guard; the miss path passes
+    /// `None` (a newcomer out-ranks every holder).
+    fn evict_panels_lru(
+        &self,
+        map: &mut HashMap<String, HashMap<Format, Entry>>,
+        wish: usize,
+        stale_before: Option<u64>,
+    ) {
+        while self.panel_resident.load(Ordering::Relaxed) + wish > self.panel_budget {
+            let victim = map
+                .values_mut()
+                .flat_map(|inner| inner.values_mut())
+                .filter(|e| e.panel_bytes > 0)
+                .filter(|e| stale_before.is_none_or(|s| e.last_served < s))
+                .min_by_key(|e| e.last_served);
+            match victim {
+                Some(e) => {
+                    self.panel_resident.fetch_sub(e.panel_bytes, Ordering::Relaxed);
+                    e.panels = Arc::new(vec![LayerPanels::default(); e.layers.len()]);
+                    e.panel_bytes = 0;
+                }
+                None => break,
+            }
+        }
     }
 
     /// Decode panels for as many matrices as the remaining budget allows,
@@ -210,7 +336,10 @@ impl WeightCache {
     /// Total packed bytes held across all entries.
     pub fn resident_bytes(&self) -> usize {
         let map = self.entries.lock().unwrap();
-        map.values().flat_map(|inner| inner.values()).map(|e| e.packed_bytes()).sum()
+        map.values()
+            .flat_map(|inner| inner.values())
+            .map(|e| e.layers.iter().map(|l| l.bytes()).sum::<usize>())
+            .sum()
     }
 
     /// Total decoded-panel bytes held across all entries (≤ the budget).
@@ -229,7 +358,7 @@ impl WeightCache {
     pub fn evict_model(&self, model: &str) {
         let mut map = self.entries.lock().unwrap();
         if let Some(inner) = map.remove(model) {
-            let freed: usize = inner.values().map(|e| e.panel_bytes()).sum();
+            let freed: usize = inner.values().map(|e| e.panel_bytes).sum();
             self.panel_resident.fetch_sub(freed, Ordering::Relaxed);
         }
     }
@@ -244,6 +373,9 @@ mod tests {
         let m = |r: usize, c: usize| PackedMatrix::from_f32(&vec![0.5; r * c], r, c, fmt);
         PackedLayer { wqkv: m(4, 12), wo: m(4, 4), w_up: m(4, 8), w_gate: None, w_down: m(8, 4) }
     }
+
+    /// Full decoded size of one dummy layer.
+    const DUMMY_PANEL_BYTES: usize = (4 * 12 + 4 * 4 + 4 * 8 + 8 * 4) * 4;
 
     #[test]
     fn packs_once_per_model_and_format() {
@@ -283,7 +415,8 @@ mod tests {
         let fp6 = Format::Fp(FpFormat::FP6_E3M2);
         let a = cache.get_or_pack("m", fp6, || vec![dummy_layer(fp6)]);
         let b = cache.get_or_pack("m", fp6, || vec![dummy_layer(fp6)]);
-        assert!(Arc::ptr_eq(&a, &b));
+        assert!(Arc::ptr_eq(&a.layers, &b.layers));
+        assert!(Arc::ptr_eq(&a.panels, &b.panels));
     }
 
     #[test]
@@ -299,11 +432,11 @@ mod tests {
         // Roomy budget: every matrix decoded; accounting matches.
         let all = WeightCache::new().with_panel_budget(1 << 20);
         let e = all.get_or_pack("m", fp6, || vec![dummy_layer(fp6)]);
-        let expect = (4 * 12 + 4 * 4 + 4 * 8 + 8 * 4) * 4;
-        assert_eq!(e.panel_bytes(), expect);
-        assert_eq!(all.panel_resident_bytes(), expect);
+        assert_eq!(e.panel_bytes(), DUMMY_PANEL_BYTES);
+        assert_eq!(all.panel_resident_bytes(), DUMMY_PANEL_BYTES);
 
-        // Tight budget: a prefix of matrices decodes, the rest stay packed.
+        // Tight budget, nothing evictable: a prefix of matrices decodes,
+        // the rest stay packed.
         let tight = WeightCache::new().with_panel_budget(4 * 12 * 4 + 4 * 4 * 4);
         let e = tight.get_or_pack("m", fp6, || vec![dummy_layer(fp6)]);
         assert!(e.panels[0].wqkv.is_some());
@@ -314,5 +447,89 @@ mod tests {
         // Eviction releases the budget.
         tight.evict_model("m");
         assert_eq!(tight.panel_resident_bytes(), 0);
+    }
+
+    #[test]
+    fn lru_evicts_cold_panels_first() {
+        let fp6 = Format::Fp(FpFormat::FP6_E3M2);
+        // Budget fits exactly one model's panels.
+        let cache = WeightCache::new().with_panel_budget(DUMMY_PANEL_BYTES);
+
+        let a = cache.get_or_pack("a", fp6, || vec![dummy_layer(fp6)]);
+        assert_eq!(a.panel_bytes(), DUMMY_PANEL_BYTES, "first model decodes fully");
+
+        // Second model saturates the budget: the cold entry (a) loses its
+        // panels, the newcomer takes the fast path.
+        let b = cache.get_or_pack("b", fp6, || vec![dummy_layer(fp6)]);
+        assert_eq!(b.panel_bytes(), DUMMY_PANEL_BYTES);
+        assert_eq!(cache.panel_resident_bytes(), DUMMY_PANEL_BYTES, "budget never exceeded");
+        let a2 = cache.get_or_pack("a", fp6, || unreachable!("must hit"));
+        assert!(Arc::ptr_eq(&a.layers, &a2.layers), "packed storage survives eviction");
+        assert_eq!(a2.panel_bytes(), 0, "cold entry lost its panels");
+        // The handle fetched before eviction still holds its decoded data
+        // (in-flight forwards are never pulled out from under).
+        assert_eq!(a.panel_bytes(), DUMMY_PANEL_BYTES);
+
+        // "a" was just served, so it is now the hot entry: a third model
+        // must evict "b" (the cold panel), not "a"... but "a" has no panels
+        // to evict, so serve "a" again first to rebuild — no free room, so
+        // it stays packed-only — then confirm "b" is the victim.
+        let c = cache.get_or_pack("c", fp6, || vec![dummy_layer(fp6)]);
+        assert_eq!(c.panel_bytes(), DUMMY_PANEL_BYTES);
+        let b2 = cache.get_or_pack("b", fp6, || unreachable!("must hit"));
+        assert_eq!(b2.panel_bytes(), 0, "LRU victim was the coldest panel holder");
+        assert_eq!(cache.panel_resident_bytes(), DUMMY_PANEL_BYTES);
+    }
+
+    #[test]
+    fn hot_entry_reclaims_panels_from_stale_entry() {
+        let fp6 = Format::Fp(FpFormat::FP6_E3M2);
+        let cache = WeightCache::new().with_panel_budget(DUMMY_PANEL_BYTES);
+        cache.get_or_pack("a", fp6, || vec![dummy_layer(fp6)]); // tick 1
+        cache.get_or_pack("b", fp6, || vec![dummy_layer(fp6)]); // tick 2, evicts a
+        // Keep serving only "a": once "b" has sat unserved a full
+        // hysteresis, its panels are reclaimed for the hot entry.
+        let mut reclaimed_at = None;
+        for hit in 0..2 * PANEL_LRU_HYSTERESIS {
+            let a = cache.get_or_pack("a", fp6, || unreachable!("must hit"));
+            if a.panel_bytes() > 0 {
+                reclaimed_at = Some(hit);
+                break;
+            }
+        }
+        assert!(reclaimed_at.is_some(), "hot entry must reclaim the dead entry's budget");
+        let b = cache.get_or_pack("b", fp6, || unreachable!("must hit"));
+        assert_eq!(b.panel_bytes(), 0, "the stale entry paid for the reclaim");
+        assert_eq!(cache.panel_resident_bytes(), DUMMY_PANEL_BYTES);
+    }
+
+    #[test]
+    fn alternating_hot_entries_do_not_thrash_rebuilds() {
+        let fp6 = Format::Fp(FpFormat::FP6_E3M2);
+        let cache = WeightCache::new().with_panel_budget(DUMMY_PANEL_BYTES);
+        cache.get_or_pack("a", fp6, || vec![dummy_layer(fp6)]); // tick 1
+        cache.get_or_pack("b", fp6, || vec![dummy_layer(fp6)]); // tick 2, evicts a
+        // Alternate the two hot entries: neither is ever stale relative to
+        // the other, so the panel assignment stays put instead of swapping
+        // (and re-decoding a full model) on every batch.
+        for _ in 0..PANEL_LRU_HYSTERESIS {
+            let a = cache.get_or_pack("a", fp6, || unreachable!("must hit"));
+            assert_eq!(a.panel_bytes(), 0, "hot peer must not be evicted for a hot peer");
+            let b = cache.get_or_pack("b", fp6, || unreachable!("must hit"));
+            assert_eq!(b.panel_bytes(), DUMMY_PANEL_BYTES);
+        }
+    }
+
+    #[test]
+    fn evicted_entry_rebuilds_panels_when_room_frees() {
+        let fp6 = Format::Fp(FpFormat::FP6_E3M2);
+        let cache = WeightCache::new().with_panel_budget(DUMMY_PANEL_BYTES);
+        cache.get_or_pack("a", fp6, || vec![dummy_layer(fp6)]);
+        cache.get_or_pack("b", fp6, || vec![dummy_layer(fp6)]); // evicts a's panels
+        cache.evict_model("b"); // frees the whole budget
+        assert_eq!(cache.panel_resident_bytes(), 0);
+        let a = cache.get_or_pack("a", fp6, || unreachable!("must hit"));
+        assert_eq!(a.panel_bytes(), DUMMY_PANEL_BYTES, "hit rebuilds panels into free room");
+        assert_eq!(cache.panel_resident_bytes(), DUMMY_PANEL_BYTES);
     }
 }

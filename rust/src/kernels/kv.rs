@@ -1,0 +1,352 @@
+//! Per-session KV cache for decode-phase serving.
+//!
+//! Autoregressive decode re-reads every past token's K/V at every step; a
+//! serving engine that recomputes them from scratch turns an O(T) token
+//! stream into O(T^2) prefills. [`KvCache`] holds each layer's keys and
+//! values **bit-packed at the session's activation format** — the same
+//! quantized codes a full prefill would produce, so incremental attention is
+//! bit-identical to recompute while the cache keeps the paper's packed
+//! memory footprint (`bits/8` per element instead of 4 B f32; low-bit KV
+//! residency is exactly the regime arXiv 2505.01043 studies).
+//!
+//! Layout is GQA-aware: K and V are stored per **KV head** (not per query
+//! head), so the query heads of a group share one packed stream — a
+//! `kv_heads/heads` memory saving on GQA models like Llama-2-70b — and the
+//! decode hot loop hands the streams to the GEMM kernel without repacking:
+//!
+//! * `V` is appended row-major `[tokens, head_dim]`, which is already the
+//!   `P x V` operand layout — [`KvCache::v_matrix`] adopts the packed words
+//!   directly (zero repack).
+//! * `K` needs transposing for `Q x K^T`; [`KvCache::k_t_matrix`] extracts
+//!   the codes multi-lane (each word loaded once) and repacks the
+//!   transpose.
+//!
+//! Appends quantize through the same [`crate::arith::encode`] the prefill
+//! activation quantizer uses — elementwise and deterministic — which is the
+//! entire bit-identity argument: cached codes == recomputed codes.
+
+use super::packed::{extract_codes, PackedMatrix};
+use crate::arith::{encode, Format, PackedTensor};
+use crate::workload::ModelSpec;
+
+/// A growable bit-packed stream of codes (append-only, with rollback),
+/// backed by a [`PackedTensor`] so the bit-insertion layout lives in exactly
+/// one place ([`PackedTensor::set_code`]).
+#[derive(Debug, Clone)]
+struct PackedStream {
+    /// Backing tensor; its `len` is the *capacity* in codes. The live code
+    /// count is `len` below.
+    buf: PackedTensor,
+    len: usize,
+}
+
+impl PackedStream {
+    fn new(fmt: Format) -> Self {
+        PackedStream { buf: PackedTensor::zeros(fmt, 0), len: 0 }
+    }
+
+    fn wbits(&self) -> usize {
+        self.buf.fmt.bits() as usize
+    }
+
+    /// Append one code. `set_code` is read-modify-write, so stale bits left
+    /// behind by [`PackedStream::truncate`] are cleared on overwrite.
+    fn push(&mut self, code: u32) {
+        if self.len == self.buf.len {
+            // Amortized doubling: a decode loop appends one token at a time.
+            let cap = (self.buf.len * 2).max(64);
+            let mut words = self.buf.words().to_vec();
+            words.resize((cap * self.wbits()).div_ceil(64), 0);
+            self.buf = PackedTensor::from_words(self.buf.fmt, cap, words);
+        }
+        self.buf.set_code(self.len, code);
+        self.len += 1;
+    }
+
+    /// Extract codes `[0, out.len())` multi-lane (each word loaded once).
+    fn extract_prefix(&self, out: &mut [u32]) {
+        debug_assert!(out.len() <= self.len);
+        extract_codes(self.buf.words(), 0, self.wbits(), out);
+    }
+
+    /// Packed words covering the first `n` codes.
+    fn words_for(&self, n: usize) -> Vec<u64> {
+        debug_assert!(n <= self.len);
+        self.buf.words()[..(n * self.wbits()).div_ceil(64)].to_vec()
+    }
+
+    fn truncate(&mut self, n: usize) {
+        debug_assert!(n <= self.len);
+        self.len = n;
+    }
+
+    /// Packed bytes held by the live codes.
+    fn bytes(&self) -> usize {
+        (self.len * self.wbits()).div_ceil(8)
+    }
+}
+
+/// One transformer layer's cached K/V: one packed stream per KV head, each
+/// row-major `[tokens, head_dim]`.
+#[derive(Debug, Clone)]
+struct LayerKv {
+    k: Vec<PackedStream>,
+    v: Vec<PackedStream>,
+}
+
+/// A per-request (per-session) KV cache: every layer's K/V quantized to the
+/// session's activation format and bit-packed, GQA-aware (stored per KV
+/// head). Grown by [`crate::kernels::NativeModel::forward_prefill`] /
+/// [`crate::kernels::NativeModel::forward_decode`].
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    fmt: Format,
+    kv_heads: usize,
+    head_dim: usize,
+    /// Tokens fully appended across all layers (advanced by
+    /// [`KvCache::commit`] once a forward call has fed every layer).
+    len: usize,
+    layers: Vec<LayerKv>,
+}
+
+impl KvCache {
+    /// An empty cache shaped for `spec`, holding K/V at `a_fmt` (the
+    /// session's activation format — decode attention reads the cache as an
+    /// `(a, a)` GEMM operand, exactly like prefill reads fresh K/V).
+    pub fn new(spec: &ModelSpec, a_fmt: Format) -> Self {
+        let layers = (0..spec.layers)
+            .map(|_| LayerKv {
+                k: (0..spec.kv_heads).map(|_| PackedStream::new(a_fmt)).collect(),
+                v: (0..spec.kv_heads).map(|_| PackedStream::new(a_fmt)).collect(),
+            })
+            .collect();
+        KvCache { fmt: a_fmt, kv_heads: spec.kv_heads, head_dim: spec.head_dim(), len: 0, layers }
+    }
+
+    /// Committed tokens (positions `0..len` are attendable by the next row).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn layer_count(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn kv_heads(&self) -> usize {
+        self.kv_heads
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    /// The format K/V codes are held in.
+    pub fn fmt(&self) -> Format {
+        self.fmt
+    }
+
+    /// Packed bytes resident across every layer and head — the low-bit KV
+    /// footprint (an FP6 session stores 6 bits/element, not 32).
+    pub fn bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.k.iter().map(|s| s.bytes()).sum::<usize>()
+                    + l.v.iter().map(|s| s.bytes()).sum::<usize>()
+            })
+            .sum()
+    }
+
+    /// Quantize and append one token's K/V rows (`kv_heads * head_dim` f32
+    /// values each) to layer `layer`. Values pass through the same
+    /// [`crate::arith::encode`] the prefill activation quantizer uses, so
+    /// cached codes equal recomputed codes bit-for-bit.
+    pub fn append_token(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
+        let hd = self.head_dim;
+        let kv_dim = self.kv_heads * hd;
+        assert_eq!(k_row.len(), kv_dim, "K row must be kv_heads * head_dim");
+        assert_eq!(v_row.len(), kv_dim, "V row must be kv_heads * head_dim");
+        let fmt = self.fmt;
+        let l = &mut self.layers[layer];
+        for h in 0..self.kv_heads {
+            for &x in &k_row[h * hd..(h + 1) * hd] {
+                l.k[h].push(encode(x as f64, fmt));
+            }
+            for &x in &v_row[h * hd..(h + 1) * hd] {
+                l.v[h].push(encode(x as f64, fmt));
+            }
+        }
+    }
+
+    /// Mark `rows` freshly appended tokens as committed — called once per
+    /// forward after every layer has been fed. Debug-asserts the layers
+    /// actually received them.
+    pub fn commit(&mut self, rows: usize) {
+        self.len += rows;
+        debug_assert!(self.layers.iter().all(|l| {
+            let want = self.len * self.head_dim;
+            l.k.iter().chain(l.v.iter()).all(|s| s.len == want)
+        }));
+    }
+
+    /// Roll back to `tokens` committed tokens (speculative-decode rejection,
+    /// bench replay). Appended-but-uncommitted rows are discarded too.
+    pub fn truncate(&mut self, tokens: usize) {
+        assert!(tokens <= self.len, "cannot truncate {} to {tokens}", self.len);
+        let want = tokens * self.head_dim;
+        for l in &mut self.layers {
+            for s in l.k.iter_mut().chain(l.v.iter_mut()) {
+                s.truncate(want);
+            }
+        }
+        self.len = tokens;
+    }
+
+    /// K transposed for the score GEMM: a `[head_dim, tokens]` packed
+    /// matrix of layer `layer`, KV head `kv_head`. `tokens` may include
+    /// rows appended but not yet committed (prefill attends its own rows).
+    pub fn k_t_matrix(&self, layer: usize, kv_head: usize, tokens: usize) -> PackedMatrix {
+        let hd = self.head_dim;
+        let s = &self.layers[layer].k[kv_head];
+        let mut rowbuf = vec![0u32; tokens * hd];
+        s.extract_prefix(&mut rowbuf);
+        let mut t = vec![0u32; hd * tokens];
+        for (r, row) in rowbuf.chunks(hd).enumerate() {
+            for (c, &code) in row.iter().enumerate() {
+                t[c * tokens + r] = code;
+            }
+        }
+        PackedMatrix::from_codes(&t, hd, tokens, self.fmt)
+    }
+
+    /// V for the context GEMM: a `[tokens, head_dim]` packed matrix of
+    /// layer `layer`, KV head `kv_head`. The stream layout is already the
+    /// operand layout, so the packed words are adopted without repacking.
+    pub fn v_matrix(&self, layer: usize, kv_head: usize, tokens: usize) -> PackedMatrix {
+        let hd = self.head_dim;
+        let s = &self.layers[layer].v[kv_head];
+        let tensor = PackedTensor::from_words(self.fmt, tokens * hd, s.words_for(tokens * hd));
+        PackedMatrix::from_tensor(tensor, tokens, hd)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::{decode, FpFormat};
+    use crate::util::Rng;
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            name: "kv-test",
+            seq: 8,
+            layers: 2,
+            d_model: 24,
+            d_ff: 32,
+            heads: 6,
+            gated_ffn: false,
+            kv_heads: 2,
+        }
+    }
+
+    #[test]
+    fn append_commit_and_readback() {
+        let sp = spec();
+        let fmt = Format::Fp(FpFormat::FP6_E3M2);
+        let mut kv = KvCache::new(&sp, fmt);
+        assert_eq!(kv.layer_count(), 2);
+        assert_eq!((kv.kv_heads(), kv.head_dim()), (2, 4));
+        assert!(kv.is_empty());
+
+        let kv_dim = sp.kv_heads * sp.head_dim();
+        let mut rng = Rng::new(3);
+        let tokens = 5;
+        let mut k_all = vec![vec![]; sp.layers];
+        let mut v_all = vec![vec![]; sp.layers];
+        for _ in 0..tokens {
+            for li in 0..sp.layers {
+                let k_row: Vec<f32> = (0..kv_dim).map(|_| rng.gauss() as f32).collect();
+                let v_row: Vec<f32> = (0..kv_dim).map(|_| rng.gauss() as f32).collect();
+                kv.append_token(li, &k_row, &v_row);
+                k_all[li].extend_from_slice(&k_row);
+                v_all[li].extend_from_slice(&v_row);
+            }
+            kv.commit(1);
+        }
+        assert_eq!(kv.len(), tokens);
+
+        let hd = sp.head_dim();
+        for li in 0..sp.layers {
+            for h in 0..sp.kv_heads {
+                let kt = kv.k_t_matrix(li, h, tokens);
+                assert_eq!((kt.rows(), kt.cols()), (hd, tokens));
+                let vm = kv.v_matrix(li, h, tokens);
+                assert_eq!((vm.rows(), vm.cols()), (tokens, hd));
+                for t in 0..tokens {
+                    for c in 0..hd {
+                        let k_src = k_all[li][t * kv_dim + h * hd + c] as f64;
+                        let v_src = v_all[li][t * kv_dim + h * hd + c] as f64;
+                        let q = |x: f64| decode(encode(x, fmt), fmt);
+                        assert_eq!(kt.get(c, t), q(k_src), "K layer {li} head {h} ({t},{c})");
+                        assert_eq!(vm.get(t, c), q(v_src), "V layer {li} head {h} ({t},{c})");
+                    }
+                }
+            }
+        }
+        // FP6: 6 bits/element over 2 layers * 2 heads * 2 (K+V) * 5 tokens * hd.
+        let elems = sp.layers * sp.kv_heads * 2 * tokens * hd;
+        assert_eq!(kv.bytes(), sp.layers * sp.kv_heads * 2 * (tokens * hd * 6).div_ceil(8));
+        assert!(kv.bytes() < elems * 4, "packed KV must undercut f32 residency");
+    }
+
+    #[test]
+    fn truncate_rolls_back_and_repushes_cleanly() {
+        let sp = spec();
+        let fmt = Format::int(4);
+        let mut kv = KvCache::new(&sp, fmt);
+        let kv_dim = sp.kv_heads * sp.head_dim();
+        let row_a = vec![1.0f32; kv_dim];
+        let row_b = vec![-2.0f32; kv_dim];
+        for li in 0..sp.layers {
+            kv.append_token(li, &row_a, &row_a);
+        }
+        kv.commit(1);
+        for li in 0..sp.layers {
+            kv.append_token(li, &row_b, &row_b);
+        }
+        kv.commit(1);
+        assert_eq!(kv.len(), 2);
+        kv.truncate(1);
+        assert_eq!(kv.len(), 1);
+        // Re-push different codes over the rolled-back region: stale bits
+        // must not leak into the new values.
+        let row_c = vec![3.0f32; kv_dim];
+        for li in 0..sp.layers {
+            kv.append_token(li, &row_c, &row_c);
+        }
+        kv.commit(1);
+        let m = kv.k_t_matrix(0, 0, 2);
+        assert_eq!(m.get(0, 0), 1.0);
+        assert_eq!(m.get(0, 1), 3.0);
+    }
+
+    #[test]
+    fn gqa_streams_are_per_kv_head() {
+        // kv_heads == 1: all query heads share a single K stream.
+        let sp = ModelSpec { kv_heads: 1, ..spec() };
+        let fmt = Format::Fp(FpFormat::FP5_E2M2);
+        let mut kv = KvCache::new(&sp, fmt);
+        let kv_dim = sp.head_dim(); // 1 KV head
+        for li in 0..sp.layers {
+            kv.append_token(li, &vec![0.5; kv_dim], &vec![0.25; kv_dim]);
+        }
+        kv.commit(1);
+        assert_eq!(kv.kv_heads(), 1);
+        let kt = kv.k_t_matrix(0, 0, 1);
+        assert_eq!((kt.rows(), kt.cols()), (sp.head_dim(), 1));
+    }
+}

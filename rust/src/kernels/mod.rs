@@ -40,19 +40,31 @@
 //!   storage of record).
 //! * [`NativeModel`] — a transformer forward pass (attention + FFN, GQA and
 //!   SwiGLU aware) whose every GEMM runs through the packed kernel with
-//!   activations quantized to the request's activation format.
+//!   activations quantized to the request's activation format. Besides the
+//!   stateless encoder-style [`NativeModel::forward`], it serves the
+//!   autoregressive regime: [`NativeModel::forward_prefill`] runs a causal
+//!   prefill that populates a [`KvCache`], and
+//!   [`NativeModel::forward_decode`] attends one new token against the
+//!   cache — bit-identical to re-running the full prefill, because the
+//!   cache stores exactly the quantized codes prefill would produce and
+//!   every GEMM keeps one ascending-k accumulation chain per element.
+//! * [`KvCache`] — per-session K/V, bit-packed at the activation format
+//!   (low-bit KV residency), GQA-aware (one stream per KV head).
 //! * [`NativeExecutor`] — implements [`crate::coordinator::Executor`] so the
 //!   server can run end-to-end on this engine with zero Python/PJRT
-//!   artifacts on disk.
+//!   artifacts on disk, including token-stream sessions (prefill + decode
+//!   steps) with per-request results.
 
 mod cache;
 mod gemm;
+mod kv;
 mod model;
 mod packed;
 mod panels;
 
 pub use cache::{CachedModel, LayerPanels, PackedLayer, WeightCache, DEFAULT_PANEL_BUDGET};
 pub use gemm::{gemm, gemm_default, gemm_with_panels, int_fast_path_exact, GemmConfig};
+pub use kv::KvCache;
 pub use model::{NativeExecutor, NativeModel};
 pub use packed::{extract_codes, Decoder, PackedMatrix};
 pub use panels::{PanelData, WeightPanels};

@@ -10,15 +10,21 @@
 //! buffers, with packed weights (and their decoded panels, budget
 //! permitting) cached per (model, weight format).
 
-use super::cache::{CachedModel, LayerPanels, PackedLayer, WeightCache};
+use super::cache::{LayerPanels, PackedLayer, WeightCache};
 use super::gemm::{gemm, gemm_with_panels, GemmConfig};
+use super::kv::KvCache;
 use super::packed::PackedMatrix;
 use super::panels::WeightPanels;
-use crate::coordinator::{Batch, Executor};
+use crate::coordinator::{Batch, BatchResult, Executor, Phase};
 use crate::util::Rng;
 use crate::workload::{ModelSpec, PrecisionPair};
 use std::collections::HashMap;
 use std::time::Instant;
+
+/// Live sessions an executor retains beyond this bound are evicted LRU —
+/// a leaked session (client that never finished its stream) must not pin
+/// KV memory forever.
+pub const DEFAULT_SESSION_CAPACITY: usize = 256;
 
 /// One layer's master (f32) weights, from which per-format packs are made.
 #[derive(Debug, Clone)]
@@ -104,8 +110,7 @@ impl NativeModel {
         let d = self.spec.d_model;
         assert!(d > 0 && input.len() % d == 0, "input length must be a multiple of d_model");
         let rows = input.len() / d;
-        let cached: std::sync::Arc<CachedModel> =
-            cache.get_or_pack(self.spec.name, pair.w, || self.pack_layers(pair.w));
+        let cached = cache.get_or_pack(self.spec.name, pair.w, || self.pack_layers(pair.w));
 
         let mut x = input.to_vec();
         for (layer, panels) in cached.layers.iter().zip(cached.panels.iter()) {
@@ -114,6 +119,77 @@ impl NativeModel {
             let ffn = self.ffn(&rms_norm(&x, d), rows, pair, layer, panels);
             add_in_place(&mut x, &ffn);
         }
+        x
+    }
+
+    /// Causal prefill of a token-stream session: runs the block stack with a
+    /// causal mask, appending every layer's K/V (quantized to `pair.a`) to
+    /// `kv`. Returns the hidden states of all `rows` input rows. The cache
+    /// may already hold committed tokens (chunked prefill); new rows attend
+    /// to everything committed plus their own causal prefix.
+    pub fn forward_prefill(
+        &self,
+        input: &[f32],
+        pair: PrecisionPair,
+        cache: &WeightCache,
+        kv: &mut KvCache,
+    ) -> Vec<f32> {
+        self.forward_cached(input, pair, cache, kv)
+    }
+
+    /// One autoregressive decode step: attend a single new token row against
+    /// the session's KV cache and append its own K/V. **Bit-identical to
+    /// re-running the full prefill** over the whole sequence: the cache
+    /// holds exactly the codes prefill quantizes, every GEMM accumulates
+    /// one ascending-k chain per output element, and the causal softmax's
+    /// masked tail contributes exact zeros — so the incremental and the
+    /// recomputed chains are the same float-op sequence.
+    pub fn forward_decode(
+        &self,
+        input: &[f32],
+        pair: PrecisionPair,
+        cache: &WeightCache,
+        kv: &mut KvCache,
+    ) -> Vec<f32> {
+        assert_eq!(
+            input.len(),
+            self.spec.d_model,
+            "decode takes exactly one token row of d_model values"
+        );
+        self.forward_cached(input, pair, cache, kv)
+    }
+
+    /// Shared causal cached forward (prefill: rows >= 1; decode: rows == 1).
+    fn forward_cached(
+        &self,
+        input: &[f32],
+        pair: PrecisionPair,
+        cache: &WeightCache,
+        kv: &mut KvCache,
+    ) -> Vec<f32> {
+        let d = self.spec.d_model;
+        assert!(
+            d > 0 && !input.is_empty() && input.len() % d == 0,
+            "input length must be a positive multiple of d_model"
+        );
+        assert_eq!(kv.layer_count(), self.spec.layers, "KV cache layer count mismatch");
+        assert_eq!(
+            (kv.kv_heads(), kv.head_dim()),
+            (self.spec.kv_heads, self.spec.head_dim()),
+            "KV cache head layout mismatch"
+        );
+        assert_eq!(kv.fmt(), pair.a, "KV cache format must match the activation format");
+        let rows = input.len() / d;
+        let cached = cache.get_or_pack(self.spec.name, pair.w, || self.pack_layers(pair.w));
+
+        let mut x = input.to_vec();
+        for (li, (layer, panels)) in cached.layers.iter().zip(cached.panels.iter()).enumerate() {
+            let attn = self.attention_cached(&rms_norm(&x, d), rows, pair, layer, panels, kv, li);
+            add_in_place(&mut x, &attn);
+            let ffn = self.ffn(&rms_norm(&x, d), rows, pair, layer, panels);
+            add_in_place(&mut x, &ffn);
+        }
+        kv.commit(rows);
         x
     }
 
@@ -174,6 +250,76 @@ impl NativeModel {
         gemm_w(&cp, &l.wo, lp.wo.as_ref(), &self.gemm_cfg)
     }
 
+    /// Causal GQA attention over the session KV cache: appends this call's
+    /// rows' K/V to layer `li`, then attends each new row (absolute position
+    /// `pos0 + r`) against positions `0..=pos0+r`. Projections run at
+    /// (w, a); QK^T and PV at (a, a), with K/V read straight from the
+    /// packed cache — the same codes a full prefill quantizes.
+    #[allow(clippy::too_many_arguments)]
+    fn attention_cached(
+        &self,
+        xn: &[f32],
+        rows: usize,
+        pair: PrecisionPair,
+        l: &PackedLayer,
+        lp: &LayerPanels,
+        kv: &mut KvCache,
+        li: usize,
+    ) -> Vec<f32> {
+        let d = self.spec.d_model;
+        let hd = self.spec.head_dim();
+        let heads = self.spec.heads;
+        let kv_heads = self.spec.kv_heads;
+        let kv_dim = kv_heads * hd;
+        let pos0 = kv.len();
+
+        let xq = PackedMatrix::from_f32(xn, rows, d, pair.a);
+        let qkv = gemm_w(&xq, &l.wqkv, lp.wqkv.as_ref(), &self.gemm_cfg); // [rows, d + 2*kv_dim]
+        let qkv_cols = d + 2 * kv_dim;
+        for r in 0..rows {
+            let row = &qkv[r * qkv_cols..(r + 1) * qkv_cols];
+            kv.append_token(li, &row[d..d + kv_dim], &row[d + kv_dim..]);
+        }
+        let cur = pos0 + rows;
+
+        let mut ctx = vec![0f32; rows * d];
+        let scale = 1.0 / (hd as f32).sqrt();
+        for h in 0..heads {
+            let kvh = h * kv_heads / heads;
+            let mut q_h = vec![0f32; rows * hd];
+            for r in 0..rows {
+                q_h[r * hd..(r + 1) * hd]
+                    .copy_from_slice(&qkv[r * qkv_cols + h * hd..r * qkv_cols + (h + 1) * hd]);
+            }
+            // Scores against every cached position: (a, a).
+            let qp = PackedMatrix::from_f32(&q_h, rows, hd, pair.a);
+            let kp = kv.k_t_matrix(li, kvh, cur);
+            let mut scores = gemm(&qp, &kp, &self.gemm_cfg); // [rows, cur]
+            for s in scores.iter_mut() {
+                *s *= scale;
+            }
+            // Causal mask: exp(-inf) contributes an exact 0.0 to the softmax
+            // sum and a 0.0 probability row tail, so a masked wide row is
+            // bit-identical to the narrow row decode computes.
+            for r in 0..rows {
+                for s in scores[r * cur + pos0 + r + 1..(r + 1) * cur].iter_mut() {
+                    *s = f32::NEG_INFINITY;
+                }
+            }
+            softmax_rows(&mut scores, cur);
+            // Context: probabilities x cached V at (a, a).
+            let pp = PackedMatrix::from_f32(&scores, rows, cur, pair.a);
+            let vp = kv.v_matrix(li, kvh, cur);
+            let ctx_h = gemm(&pp, &vp, &self.gemm_cfg); // [rows, hd]
+            for r in 0..rows {
+                ctx[r * d + h * hd..r * d + (h + 1) * hd]
+                    .copy_from_slice(&ctx_h[r * hd..(r + 1) * hd]);
+            }
+        }
+        let cp = PackedMatrix::from_f32(&ctx, rows, d, pair.a);
+        gemm_w(&cp, &l.wo, lp.wo.as_ref(), &self.gemm_cfg)
+    }
+
     /// FFN: classic GELU two-GEMM or SwiGLU three-GEMM, all at (w, a).
     fn ffn(
         &self,
@@ -224,7 +370,9 @@ fn rms_norm(x: &[f32], d: usize) -> Vec<f32> {
     out
 }
 
-/// Row-wise softmax over an `n x n` score matrix, f32, max-subtracted.
+/// Row-wise softmax over a score matrix of row width `n`, f32,
+/// max-subtracted. `-inf` entries (causal mask) exponentiate to an exact
+/// 0.0: they add nothing to the sum and normalize to probability 0.0.
 fn softmax_rows(scores: &mut [f32], n: usize) {
     for row in scores.chunks_mut(n) {
         let max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
@@ -251,13 +399,42 @@ fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
+/// One live token-stream session: the model it is bound to, the precision
+/// pair it was prefetched at (decode steps must match), and its KV cache.
+#[derive(Debug)]
+struct Session {
+    model: String,
+    pair: PrecisionPair,
+    kv: KvCache,
+    last_used: u64,
+}
+
 /// The native execution backend: implements the coordinator's [`Executor`]
 /// so [`crate::coordinator::Server`] can serve **any** precision pair with
-/// zero Python/PJRT artifacts on disk.
-#[derive(Debug, Default)]
+/// zero Python/PJRT artifacts on disk. Stateless requests (`session == 0`)
+/// run the full encoder-style forward; sessions run causal prefill once,
+/// then one [`NativeModel::forward_decode`] step per decode request against
+/// the session's [`KvCache`].
+#[derive(Debug)]
 pub struct NativeExecutor {
     models: HashMap<String, NativeModel>,
     cache: WeightCache,
+    sessions: HashMap<u64, Session>,
+    session_cap: usize,
+    /// Monotonic request tick for session LRU.
+    clock: u64,
+}
+
+impl Default for NativeExecutor {
+    fn default() -> Self {
+        NativeExecutor {
+            models: HashMap::new(),
+            cache: WeightCache::default(),
+            sessions: HashMap::new(),
+            session_cap: DEFAULT_SESSION_CAPACITY,
+            clock: 0,
+        }
+    }
 }
 
 impl NativeExecutor {
@@ -281,12 +458,37 @@ impl NativeExecutor {
         self
     }
 
+    /// Bound the number of live token-stream sessions; beyond it the
+    /// least-recently-served session's KV cache is dropped (a leaked
+    /// session must not pin memory forever).
+    pub fn with_session_capacity(mut self, cap: usize) -> Self {
+        self.session_cap = cap.max(1);
+        self
+    }
+
     /// Register (or replace) a model under `spec.name`. Replacement evicts
-    /// the old model's cached packed weights so they can't serve stale.
+    /// the old model's cached packed weights — and any live sessions bound
+    /// to it — so they can't serve stale.
     pub fn register(&mut self, spec: ModelSpec, seed: u64) {
         let model = NativeModel::synthesize(spec, seed);
         self.cache.evict_model(model.spec.name);
+        self.sessions.retain(|_, s| s.model != model.spec.name);
         self.models.insert(model.spec.name.to_string(), model);
+    }
+
+    /// Drop one session's KV cache (client finished or abandoned a stream).
+    pub fn end_session(&mut self, session: u64) -> bool {
+        self.sessions.remove(&session).is_some()
+    }
+
+    /// Live token-stream sessions currently holding a KV cache.
+    pub fn session_count(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Packed KV bytes resident across all live sessions.
+    pub fn session_kv_bytes(&self) -> usize {
+        self.sessions.values().map(|s| s.kv.bytes()).sum()
     }
 
     /// Run one forward pass outside the serving loop (warmup, testing).
@@ -317,30 +519,106 @@ impl NativeExecutor {
 }
 
 impl Executor for NativeExecutor {
-    fn execute(&mut self, batch: &Batch) -> Result<f64, String> {
+    /// Execute every request of the batch, returning a per-request result
+    /// vector (same order as `batch.requests`): one malformed or
+    /// session-less request fails alone, the co-batched requests still
+    /// complete. A missing model is the only whole-batch error.
+    fn execute(&mut self, batch: &Batch) -> Result<BatchResult, String> {
         let model = self
             .models
             .get(&batch.model)
             .ok_or_else(|| format!("no native model '{}' registered", batch.model))?;
         let d = model.spec.d_model;
-        // Validate the whole batch before executing any of it: a malformed
-        // request must not abort mid-batch after co-batched requests ran
-        // (the server counts the whole batch as failed on error).
-        for req in &batch.requests {
+        let cache = &self.cache;
+        let sessions = &mut self.sessions;
+        let t0 = Instant::now();
+        let mut outputs = Vec::with_capacity(batch.requests.len());
+        // Shared block-shape validation for the two prefill-style arms.
+        let validate_block = |req: &crate::coordinator::Request| -> Result<(), String> {
             if req.input.is_empty() || req.input.len() % d != 0 {
-                return Err(format!(
+                Err(format!(
                     "request {}: input length {} not a positive multiple of d_model {d}",
                     req.id,
                     req.input.len()
-                ));
+                ))
+            } else {
+                Ok(())
             }
-        }
-        let t0 = Instant::now();
+        };
         for req in &batch.requests {
-            let out = model.forward(&req.input, batch.pair, &self.cache);
-            debug_assert_eq!(out.len(), req.input.len());
+            self.clock += 1;
+            let clock = self.clock;
+            let out: Result<Vec<f32>, String> = match (req.session, req.phase) {
+                (0, Phase::Decode | Phase::End) => Err(format!(
+                    "request {}: {:?}-phase requests need a session id (prefill first)",
+                    req.id, req.phase
+                )),
+                // Stateless one-shot block: full (bidirectional) forward,
+                // no KV retained — the pre-session serving behavior.
+                (0, Phase::Prefill) => {
+                    validate_block(req).map(|()| model.forward(&req.input, batch.pair, cache))
+                }
+                // Session prefill: causal forward populating a fresh KV
+                // cache (re-prefilling an id restarts the session).
+                (sid, Phase::Prefill) => validate_block(req).map(|()| {
+                    let mut kv = KvCache::new(&model.spec, batch.pair.a);
+                    let out = model.forward_prefill(&req.input, batch.pair, cache, &mut kv);
+                    sessions.insert(
+                        sid,
+                        Session {
+                            model: batch.model.clone(),
+                            pair: batch.pair,
+                            kv,
+                            last_used: clock,
+                        },
+                    );
+                    out
+                }),
+                // Session end: free the KV cache. Idempotent — ending an
+                // unknown (already-evicted) session succeeds.
+                (sid, Phase::End) => {
+                    sessions.remove(&sid);
+                    Ok(Vec::new())
+                }
+                // Decode step: one token row against the session's cache.
+                (sid, Phase::Decode) => match sessions.get_mut(&sid) {
+                    None => Err(format!(
+                        "request {}: unknown session {sid} (prefill first, or it was evicted)",
+                        req.id
+                    )),
+                    Some(s) if s.model != batch.model => Err(format!(
+                        "request {}: session {sid} belongs to model '{}', not '{}'",
+                        req.id, s.model, batch.model
+                    )),
+                    Some(s) if s.pair != batch.pair => Err(format!(
+                        "request {}: session {sid} runs at {}, request asks {}",
+                        req.id,
+                        s.pair.label(),
+                        batch.pair.label()
+                    )),
+                    Some(_) if req.input.len() != d => Err(format!(
+                        "request {}: decode step must be one token row ({d} values), got {}",
+                        req.id,
+                        req.input.len()
+                    )),
+                    Some(s) => {
+                        s.last_used = clock;
+                        Ok(model.forward_decode(&req.input, batch.pair, cache, &mut s.kv))
+                    }
+                },
+            };
+            outputs.push(out);
         }
-        Ok(t0.elapsed().as_secs_f64())
+        // LRU-evict sessions beyond the capacity bound.
+        while sessions.len() > self.session_cap {
+            let coldest = sessions
+                .iter()
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(&id, _)| id)
+                .expect("non-empty session map");
+            sessions.remove(&coldest);
+        }
+        Ok(BatchResult { host_s: t0.elapsed().as_secs_f64(), outputs })
     }
 
     fn name(&self) -> &str {
@@ -437,6 +715,148 @@ mod tests {
     fn unknown_model_errors() {
         let ex = NativeExecutor::new();
         assert!(ex.forward("nope", &[0.0; 4], PrecisionPair::of_bits(6, 6)).is_err());
+    }
+
+    fn session_req(
+        id: u64,
+        spec: &ModelSpec,
+        pair: PrecisionPair,
+        input: Vec<f32>,
+        session: u64,
+        phase: crate::coordinator::Phase,
+    ) -> crate::coordinator::Request {
+        let d = spec.d_model;
+        crate::coordinator::Request::new(id, spec.name, pair, input, vec![d])
+            .with_session(session, phase)
+    }
+
+    #[test]
+    fn executor_runs_token_stream_sessions() {
+        let spec = ModelSpec::tiny();
+        let d = spec.d_model;
+        let pair = PrecisionPair::of_bits(6, 6);
+        let mut ex = NativeExecutor::new().with_model(spec.clone(), 11);
+
+        // Prefill opens the session; two decode steps extend it.
+        let prefill = session_req(0, &spec, pair, vec![0.2; 4 * d], 7, Phase::Prefill);
+        let batch = Batch { model: spec.name.into(), pair, requests: vec![prefill] };
+        let res = ex.execute(&batch).unwrap();
+        assert_eq!(res.outputs.len(), 1);
+        assert_eq!(res.outputs[0].as_ref().unwrap().len(), 4 * d);
+        assert_eq!(ex.session_count(), 1);
+        assert!(ex.session_kv_bytes() > 0, "session pins packed KV bytes");
+
+        for step in 0..2u64 {
+            let dec = session_req(1 + step, &spec, pair, vec![0.1; d], 7, Phase::Decode);
+            let batch = Batch { model: spec.name.into(), pair, requests: vec![dec] };
+            let res = ex.execute(&batch).unwrap();
+            let out = res.outputs[0].as_ref().unwrap();
+            assert_eq!(out.len(), d, "decode returns one hidden row");
+            assert!(out.iter().all(|v| v.is_finite()));
+        }
+        assert!(ex.end_session(7));
+        assert_eq!(ex.session_count(), 0);
+        assert!(!ex.end_session(7), "double-end is a no-op");
+    }
+
+    #[test]
+    fn executor_fails_bad_session_requests_individually() {
+        let spec = ModelSpec::tiny();
+        let d = spec.d_model;
+        let pair = PrecisionPair::of_bits(6, 6);
+        let other_pair = PrecisionPair::of_bits(8, 8);
+        let mut ex = NativeExecutor::new().with_model(spec.clone(), 3);
+
+        // Open session 1, then batch together: a good decode, a decode on
+        // an unknown session, a wrong-pair decode, and a wrong-length
+        // decode — only the good one completes; each error is its own.
+        let pre = session_req(0, &spec, pair, vec![0.3; 2 * d], 1, Phase::Prefill);
+        let b0 = Batch { model: spec.name.into(), pair, requests: vec![pre] };
+        assert!(ex.execute(&b0).unwrap().outputs[0].is_ok());
+
+        let good = session_req(1, &spec, pair, vec![0.1; d], 1, Phase::Decode);
+        let unknown = session_req(2, &spec, pair, vec![0.1; d], 99, Phase::Decode);
+        let short = session_req(3, &spec, pair, vec![0.1; d / 2], 1, Phase::Decode);
+        let b1 = Batch { model: spec.name.into(), pair, requests: vec![good, unknown, short] };
+        let res = ex.execute(&b1).unwrap();
+        assert!(res.outputs[0].is_ok());
+        assert!(res.outputs[1].as_ref().unwrap_err().contains("unknown session"));
+        assert!(res.outputs[2].as_ref().unwrap_err().contains("one token row"));
+
+        // A decode at a different pair than the session prefilled with.
+        let wrong_pair = session_req(4, &spec, other_pair, vec![0.1; d], 1, Phase::Decode);
+        let b2 = Batch { model: spec.name.into(), pair: other_pair, requests: vec![wrong_pair] };
+        let res = ex.execute(&b2).unwrap();
+        assert!(res.outputs[0].as_ref().unwrap_err().contains("runs at"));
+        // The good session survives the co-batched failures.
+        assert_eq!(ex.session_count(), 1);
+    }
+
+    #[test]
+    fn session_capacity_evicts_lru() {
+        let spec = ModelSpec::tiny();
+        let d = spec.d_model;
+        let pair = PrecisionPair::of_bits(6, 6);
+        let mut ex = NativeExecutor::new().with_session_capacity(2).with_model(spec.clone(), 1);
+        for sid in 1..=2u64 {
+            let pre = session_req(sid, &spec, pair, vec![0.2; d], sid, Phase::Prefill);
+            let b = Batch { model: spec.name.into(), pair, requests: vec![pre] };
+            assert!(ex.execute(&b).unwrap().outputs[0].is_ok());
+        }
+        // Touch session 1 so session 2 is the LRU.
+        let dec = session_req(10, &spec, pair, vec![0.1; d], 1, Phase::Decode);
+        let b = Batch { model: spec.name.into(), pair, requests: vec![dec] };
+        assert!(ex.execute(&b).unwrap().outputs[0].is_ok());
+        // A third session overflows the cap: session 2 must be evicted.
+        let pre = session_req(11, &spec, pair, vec![0.2; d], 3, Phase::Prefill);
+        let b = Batch { model: spec.name.into(), pair, requests: vec![pre] };
+        assert!(ex.execute(&b).unwrap().outputs[0].is_ok());
+        assert_eq!(ex.session_count(), 2);
+        let dead = session_req(12, &spec, pair, vec![0.1; d], 2, Phase::Decode);
+        let b = Batch { model: spec.name.into(), pair, requests: vec![dead] };
+        assert!(ex.execute(&b).unwrap().outputs[0].is_err(), "LRU session was evicted");
+        let alive = session_req(13, &spec, pair, vec![0.1; d], 1, Phase::Decode);
+        let b = Batch { model: spec.name.into(), pair, requests: vec![alive] };
+        assert!(ex.execute(&b).unwrap().outputs[0].is_ok(), "hot session survived");
+    }
+
+    #[test]
+    fn end_phase_frees_session_idempotently() {
+        let spec = ModelSpec::tiny();
+        let d = spec.d_model;
+        let pair = PrecisionPair::of_bits(6, 6);
+        let mut ex = NativeExecutor::new().with_model(spec.clone(), 1);
+        let pre = session_req(0, &spec, pair, vec![0.2; d], 4, Phase::Prefill);
+        let b = Batch { model: spec.name.into(), pair, requests: vec![pre] };
+        assert!(ex.execute(&b).unwrap().outputs[0].is_ok());
+        assert_eq!(ex.session_count(), 1);
+
+        let end = session_req(1, &spec, pair, Vec::new(), 4, Phase::End);
+        let b = Batch { model: spec.name.into(), pair, requests: vec![end] };
+        let out = ex.execute(&b).unwrap().outputs.remove(0).unwrap();
+        assert!(out.is_empty(), "End returns an empty result");
+        assert_eq!(ex.session_count(), 0, "End frees the KV cache");
+        // Idempotent: ending again (or an unknown session) still succeeds.
+        let end = session_req(2, &spec, pair, Vec::new(), 4, Phase::End);
+        let b = Batch { model: spec.name.into(), pair, requests: vec![end] };
+        assert!(ex.execute(&b).unwrap().outputs[0].is_ok());
+        // But End without a session id is a client error.
+        let bad = session_req(3, &spec, pair, Vec::new(), 0, Phase::End);
+        let b = Batch { model: spec.name.into(), pair, requests: vec![bad] };
+        assert!(ex.execute(&b).unwrap().outputs[0].is_err());
+    }
+
+    #[test]
+    fn reregistering_drops_model_sessions() {
+        let spec = ModelSpec::tiny();
+        let d = spec.d_model;
+        let pair = PrecisionPair::of_bits(6, 6);
+        let mut ex = NativeExecutor::new().with_model(spec.clone(), 1);
+        let pre = session_req(0, &spec, pair, vec![0.2; d], 5, Phase::Prefill);
+        let b = Batch { model: spec.name.into(), pair, requests: vec![pre] };
+        assert!(ex.execute(&b).unwrap().outputs[0].is_ok());
+        ex.register(spec.clone(), 2);
+        assert_eq!(ex.session_count(), 0, "stale sessions must not serve new weights");
     }
 
     #[test]

@@ -122,6 +122,15 @@ impl PackedMatrix {
         Self::from_codes(&codes, rows, cols, fmt)
     }
 
+    /// Adopt an already-packed tensor as a `rows x cols` matrix without
+    /// repacking — the KV cache hands its packed value streams to the GEMM
+    /// this way (a decode step must not pay a per-element repack of the
+    /// whole cache).
+    pub fn from_tensor(data: PackedTensor, rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len, rows * cols, "tensor length must be rows*cols");
+        PackedMatrix { rows, cols, data }
+    }
+
     pub fn rows(&self) -> usize {
         self.rows
     }

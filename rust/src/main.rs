@@ -15,7 +15,7 @@ use flexibit::arith::Format;
 use flexibit::baselines::{
     Accel, BitFusionAccel, BitModAccel, CambriconPAccel, FlexiBitAccel, TensorCoreAccel,
 };
-use flexibit::coordinator::{BatchPolicy, Request, Server, ServerConfig};
+use flexibit::coordinator::{BatchPolicy, Request, Server, ServerConfig, StreamDriver};
 use flexibit::kernels::NativeExecutor;
 use flexibit::pe::{Pe, PeConfig};
 use flexibit::report::{fmt_j, fmt_s};
@@ -32,6 +32,9 @@ fn usage() -> ! {
            simulate [--model NAME] [--accel NAME] [--config NAME] [--w BITS] [--a BITS]\n\
            verify [--iters N]\n\
            serve [--requests N] [--pairs WxA,WxA,...] [--batch N] [--panel-budget-mb MB]\n\
+                 [--decode-steps N]   # N>0: each request becomes a token-stream\n\
+                                      # session (causal prefill + N decode steps\n\
+                                      # against its KV cache)\n\
            report\n\
          \n\
          models: Bert-base Llama-2-7b Llama-2-70b GPT-3\n\
@@ -78,6 +81,11 @@ fn cmd_serve(args: &[String]) {
         .and_then(|s| s.parse().ok())
         .unwrap_or(flexibit::kernels::DEFAULT_PANEL_BUDGET >> 20);
 
+    // Token-stream mode: each "request" becomes a session — one causal
+    // prefill populating a KV cache, then N single-token decode steps.
+    let decode_steps: u64 =
+        arg_value(args, "--decode-steps").and_then(|s| s.parse().ok()).unwrap_or(0);
+
     let spec = ModelSpec::tiny();
     let executor = NativeExecutor::new()
         .with_panel_budget(panel_budget_mb << 20)
@@ -91,26 +99,37 @@ fn cmd_serve(args: &[String]) {
 
     let mut rng = Rng::new(1);
     let t0 = Instant::now();
-    for i in 0..n_requests {
-        let pair = pairs[(i as usize) % pairs.len()];
-        let input: Vec<f32> =
-            (0..spec.seq * spec.d_model).map(|_| rng.gauss() as f32 * 0.5).collect();
-        server.submit(Request {
-            id: i,
-            model: spec.name.to_string(),
-            pair,
-            input,
-            dims: vec![spec.seq, spec.d_model],
-            arrived: Instant::now(),
-        });
-    }
-    let drained = server.await_completed(n_requests, Duration::from_secs(120));
+    let (drained, expected) = if decode_steps == 0 {
+        for i in 0..n_requests {
+            let pair = pairs[(i as usize) % pairs.len()];
+            let input: Vec<f32> =
+                (0..spec.seq * spec.d_model).map(|_| rng.gauss() as f32 * 0.5).collect();
+            server.submit(Request::new(
+                i,
+                spec.name,
+                pair,
+                input,
+                vec![spec.seq, spec.d_model],
+            ));
+        }
+        (server.await_completed(n_requests, Duration::from_secs(120)), n_requests)
+    } else {
+        let total = n_requests * (1 + decode_steps);
+        let ok = drive_sessions(&server, &spec, &pairs, n_requests, decode_steps, &mut rng);
+        (ok, total)
+    };
     let wall = t0.elapsed().as_secs_f64();
     let m = server.shutdown();
 
     println!("native serving: {} requests over pairs {pairs_arg}", m.requests_completed);
     if m.requests_failed > 0 {
         eprintln!("  {} requests failed (executor errors)", m.requests_failed);
+    }
+    if decode_steps > 0 {
+        println!(
+            "  sessions {} started ({} requested), decode steps {} ({} per session)",
+            m.sessions_started, n_requests, m.decode_steps, decode_steps
+        );
     }
     println!(
         "  batches {} (mean size {:.1}), precision switches {}",
@@ -132,9 +151,48 @@ fn cmd_serve(args: &[String]) {
         m.sim_energy_j * 1e3
     );
     if !drained {
-        eprintln!("timed out: only {}/{} requests completed", m.requests_completed, n_requests);
+        eprintln!(
+            "timed out: only {}/{} requests finished",
+            m.requests_finished(),
+            expected
+        );
         std::process::exit(1);
     }
+}
+
+/// Drive `sessions` concurrent token streams to completion through the
+/// coordinator's [`StreamDriver`]: every stream stays one request deep, and
+/// the interleaved decode steps are what the batcher's continuous admission
+/// batches together. Returns whether every stream finished (successfully or
+/// by reported per-request error) in time.
+fn drive_sessions(
+    server: &Server,
+    spec: &ModelSpec,
+    pairs: &[PrecisionPair],
+    sessions: u64,
+    decode_steps: u64,
+    rng: &mut Rng,
+) -> bool {
+    let d = spec.d_model;
+    let specs = (0..sessions)
+        .map(|i| {
+            let input: Vec<f32> = (0..spec.seq * d).map(|_| rng.gauss() as f32 * 0.5).collect();
+            (i + 1, pairs[(i as usize) % pairs.len()], input, vec![spec.seq, d])
+        })
+        .collect();
+    let mut driver = StreamDriver::start(server, spec.name, specs);
+    driver.run(server, Instant::now() + Duration::from_secs(120), |i, step, result| {
+        match result {
+            Err(e) => {
+                eprintln!("  session {} failed: {e}", i as u64 + 1);
+                None
+            }
+            Ok(_) if (step as u64) < decode_steps => {
+                Some((0..d).map(|_| rng.gauss() as f32 * 0.5).collect())
+            }
+            Ok(_) => None,
+        }
+    })
 }
 
 fn cmd_simulate(args: &[String]) {

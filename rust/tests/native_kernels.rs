@@ -9,10 +9,10 @@
 //! `NativeExecutor` with zero artifacts on disk.
 
 use flexibit::arith::{decode, dot_exact, gemm_ref, Format, FpFormat};
-use flexibit::coordinator::{BatchPolicy, Request, Server, ServerConfig};
+use flexibit::coordinator::{BatchPolicy, Request, Server, ServerConfig, StreamDriver};
 use flexibit::kernels::{
     extract_codes, gemm, gemm_default, gemm_with_panels, int_fast_path_exact, Decoder, GemmConfig,
-    NativeExecutor, PackedMatrix, WeightPanels,
+    KvCache, NativeExecutor, NativeModel, PackedMatrix, WeightCache, WeightPanels,
 };
 use flexibit::util::{property, Rng};
 use flexibit::workload::{ModelSpec, PrecisionPair};
@@ -303,14 +303,13 @@ fn server_serves_mixed_precision_natively() {
     for i in 0..n_requests {
         let input: Vec<f32> =
             (0..spec.seq * spec.d_model).map(|_| rng.gauss() as f32 * 0.5).collect();
-        server.submit(Request {
-            id: i,
-            model: spec.name.to_string(),
-            pair: pairs[(i % 3) as usize],
+        server.submit(Request::new(
+            i,
+            spec.name,
+            pairs[(i % 3) as usize],
             input,
-            dims: vec![spec.seq, spec.d_model],
-            arrived: Instant::now(),
-        });
+            vec![spec.seq, spec.d_model],
+        ));
     }
     server.await_completed(n_requests, Duration::from_secs(30));
     let m = server.shutdown();
@@ -332,4 +331,192 @@ fn executor_rejects_unknown_model() {
     };
     assert!(ex.execute(&batch).is_err());
     assert_eq!(ex.name(), "native");
+}
+
+/// **The decode-phase contract**: attending one new token against the KV
+/// cache is bit-identical to re-running the full causal prefill over the
+/// whole sequence — for FP x FP, FP x INT, and INT x INT precision pairs,
+/// and for MHA plus both GQA grouping factors. The cache stores exactly the
+/// quantized codes prefill produces, every GEMM keeps one ascending-k
+/// accumulation chain per output element, and the causal softmax's masked
+/// tail contributes exact zeros, so the incremental and recomputed float-op
+/// sequences coincide.
+#[test]
+fn decode_is_bit_identical_to_full_prefill_recompute() {
+    let pairs = [
+        PrecisionPair::of_bits(6, 6), // FP6 x FP6 (paper headline)
+        PrecisionPair::new(Format::Fp(FpFormat::FP8_E4M3), Format::int(4)), // E4M3 x INT4
+        PrecisionPair::new(Format::int(8), Format::int(8)), // INT8 x INT8 (i32 fast path)
+    ];
+    let (t, s) = (5usize, 3usize); // prefill 5 tokens, then 3 decode steps
+    for kv_heads in [4usize, 2, 1] {
+        let spec = ModelSpec {
+            name: "decode-bitident",
+            seq: 16,
+            layers: 2,
+            d_model: 32,
+            d_ff: 48,
+            heads: 4,
+            gated_ffn: true,
+            kv_heads,
+        };
+        let d = spec.d_model;
+        let model = NativeModel::synthesize(spec.clone(), 42);
+        let mut rng = Rng::new(0xD3C0DE + kv_heads as u64);
+        let input: Vec<f32> = (0..(t + s) * d).map(|_| rng.gauss() as f32 * 0.5).collect();
+        for pair in pairs {
+            // Fresh cache per case: panels/packs must not leak across specs.
+            let cache = WeightCache::new();
+
+            // Incremental: prefill the first t tokens, then decode s more.
+            let mut kv_inc = KvCache::new(&spec, pair.a);
+            let pre = model.forward_prefill(&input[..t * d], pair, &cache, &mut kv_inc);
+            assert_eq!(kv_inc.len(), t);
+            let mut steps = Vec::new();
+            for i in 0..s {
+                let row = &input[(t + i) * d..(t + i + 1) * d];
+                steps.push(model.forward_decode(row, pair, &cache, &mut kv_inc));
+            }
+            assert_eq!(kv_inc.len(), t + s);
+
+            // Recompute: one full causal prefill over all t + s tokens.
+            let mut kv_full = KvCache::new(&spec, pair.a);
+            let full = model.forward_prefill(&input, pair, &cache, &mut kv_full);
+
+            let label = format!("{} kv_heads={kv_heads}", pair.label());
+            assert_eq!(
+                &full[..t * d],
+                &pre[..],
+                "{label}: prefill rows must be causal-stable under later tokens"
+            );
+            for (i, step) in steps.iter().enumerate() {
+                assert_eq!(
+                    &full[(t + i) * d..(t + i + 1) * d],
+                    step.as_slice(),
+                    "{label}: decode step {i} must equal full recompute bit-for-bit"
+                );
+            }
+            assert_eq!(kv_inc.len(), kv_full.len());
+            assert_eq!(kv_inc.bytes(), kv_full.bytes(), "{label}: identical packed KV residency");
+        }
+    }
+}
+
+/// Chunked prefill composes: prefilling in two chunks equals one prefill.
+#[test]
+fn chunked_prefill_matches_single_prefill() {
+    let spec = ModelSpec::tiny();
+    let d = spec.d_model;
+    let pair = PrecisionPair::of_bits(5, 6);
+    let model = NativeModel::synthesize(spec.clone(), 9);
+    let cache = WeightCache::new();
+    let mut rng = Rng::new(21);
+    let input: Vec<f32> = (0..8 * d).map(|_| rng.gauss() as f32 * 0.5).collect();
+
+    let mut kv_a = KvCache::new(&spec, pair.a);
+    let full = model.forward_prefill(&input, pair, &cache, &mut kv_a);
+
+    let mut kv_b = KvCache::new(&spec, pair.a);
+    let first = model.forward_prefill(&input[..5 * d], pair, &cache, &mut kv_b);
+    let second = model.forward_prefill(&input[5 * d..], pair, &cache, &mut kv_b);
+    assert_eq!(&full[..5 * d], &first[..]);
+    assert_eq!(&full[5 * d..], &second[..]);
+    assert_eq!(kv_a.bytes(), kv_b.bytes());
+}
+
+/// End-to-end token streams through the server: interleaved sessions at
+/// mixed precision, each driven by per-request completions, produce
+/// **exactly** the outputs of driving the same model offline — serving
+/// (batching, continuous admission, shared weight cache) is bit-transparent.
+#[test]
+fn served_token_streams_match_offline_decode() {
+    let spec = ModelSpec {
+        name: "tiny-decode-e2e",
+        seq: 16,
+        layers: 1,
+        d_model: 32,
+        d_ff: 64,
+        heads: 4,
+        gated_ffn: false,
+        kv_heads: 2,
+    };
+    let d = spec.d_model;
+    let seed = 99u64;
+    let pairs =
+        [PrecisionPair::of_bits(6, 6), PrecisionPair::new(Format::int(4), Format::default_fp(16))];
+    let n_sessions = 4usize;
+    let prefill_len = 4usize;
+    let steps = 3usize;
+
+    // Deterministic per-session inputs, shared by oracle and server.
+    let mut rng = Rng::new(7);
+    let mut prefills = Vec::new();
+    let mut tokens: Vec<Vec<Vec<f32>>> = Vec::new();
+    for _ in 0..n_sessions {
+        prefills
+            .push((0..prefill_len * d).map(|_| rng.gauss() as f32 * 0.5).collect::<Vec<f32>>());
+        tokens.push(
+            (0..steps)
+                .map(|_| (0..d).map(|_| rng.gauss() as f32 * 0.5).collect())
+                .collect(),
+        );
+    }
+
+    // Offline oracle: same weights, same inputs, direct model calls.
+    let model = NativeModel::synthesize(spec.clone(), seed);
+    let cache = WeightCache::new();
+    let mut expected: Vec<Vec<Vec<f32>>> = Vec::new(); // [session][step][row]
+    for si in 0..n_sessions {
+        let pair = pairs[si % pairs.len()];
+        let mut kv = KvCache::new(&spec, pair.a);
+        let mut outs = vec![model.forward_prefill(&prefills[si], pair, &cache, &mut kv)];
+        for tok in &tokens[si] {
+            outs.push(model.forward_decode(tok, pair, &cache, &mut kv));
+        }
+        expected.push(outs);
+    }
+
+    // Served: interleaved sessions, one outstanding request per stream,
+    // driven through the coordinator's StreamDriver.
+    let executor = NativeExecutor::new().with_model(spec.clone(), seed);
+    let cfg = ServerConfig {
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1), max_streak: 4 },
+        sim_config: flexibit::sim::mobile_a(),
+        sim_model: spec.clone(),
+    };
+    let server = Server::start(cfg, Box::new(executor));
+    let session_specs = (0..n_sessions)
+        .map(|si| {
+            (si as u64 + 1, pairs[si % pairs.len()], prefills[si].clone(), vec![prefill_len, d])
+        })
+        .collect();
+    let mut driver = StreamDriver::start(&server, spec.name, session_specs);
+    let mut got: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n_sessions];
+    let finished = driver.run(
+        &server,
+        Instant::now() + Duration::from_secs(60),
+        |si, step, result| {
+            got[si].push(result.expect("no request may fail"));
+            if step < steps {
+                Some(tokens[si][step].clone())
+            } else {
+                None
+            }
+        },
+    );
+    assert!(finished, "token streams timed out");
+    let m = server.shutdown();
+    assert_eq!(m.sessions_started, n_sessions as u64);
+    assert_eq!(m.decode_steps, (n_sessions * steps) as u64);
+    assert_eq!(m.requests_failed, 0);
+    for (si, outs) in got.iter().enumerate() {
+        assert_eq!(outs.len(), steps + 1);
+        for (k, out) in outs.iter().enumerate() {
+            assert_eq!(
+                out,
+                &expected[si][k],
+                "session {si} step {k}: served output must equal offline decode bit-for-bit"
+            );
+        }
+    }
 }

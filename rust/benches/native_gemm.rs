@@ -11,10 +11,13 @@
 //!
 //! `--smoke`: release-mode CI perf gate. Runs one small shape per headline
 //! pair — plus decode-step cases (a batch of single-token attention GEMVs
-//! over a prefilled KV cache) — and fails (exit 1) if ns/MAC regresses more
-//! than [`SMOKE_SLOWDOWN`]x over the checked-in `native_gemm_baseline.json`
-//! — a deliberately loose bound that catches accidental O(n) blowups, not
-//! machine noise.
+//! over a prefilled KV cache), isolated decode-attention cases (resident
+//! K^T + M=1 GEMV), and bare GEMV cases — and fails (exit 1) if ns/MAC
+//! regresses more than [`SMOKE_SLOWDOWN`]x over the checked-in
+//! `native_gemm_baseline.json` — a deliberately loose bound that catches
+//! accidental O(n) blowups, not machine noise. Decode cases additionally
+//! assert the `KvCache` repack counter stays 0: a decode step that takes
+//! the K^T extract-and-repack fallback fails the gate outright.
 
 mod bench_util;
 
@@ -23,8 +26,8 @@ use flexibit::coordinator::{
     Batch, BatchPolicy, Executor, FnExecutor, Request, Server, ServerConfig,
 };
 use flexibit::kernels::{
-    gemm, gemm_with_panels, GemmConfig, KvCache, NativeExecutor, NativeModel, PackedMatrix,
-    WeightCache, WeightPanels,
+    gemm, gemm_tiled, gemm_with_panels, GemmConfig, KvCache, NativeExecutor, NativeModel,
+    PackedMatrix, WeightCache, WeightPanels,
 };
 use flexibit::util::Rng;
 use flexibit::workload::{ModelSpec, PrecisionPair};
@@ -128,6 +131,22 @@ fn full() {
         records.push(bench_decode(&mut rng, pair, 64, 8, 2, 11, "native decode"));
     }
 
+    // Decode-attention operand paths in isolation: zero-repack resident K^T
+    // vs the extract-and-repack oracle, and the M=1 GEMV vs the tiled
+    // kernel on identical operands — the headline ISSUE-5 comparisons.
+    let int8_pair = PrecisionPair::new(
+        flexibit::arith::Format::int(8),
+        flexibit::arith::Format::int(8),
+    );
+    for pair in [PrecisionPair::of_bits(6, 6), int8_pair] {
+        for t in [128usize, 1024, 4096] {
+            for (repack, tiled) in [(false, false), (true, false), (false, true)] {
+                let r = bench_attention(&mut rng, pair, t, repack, tiled, 1, 7, "decode attn");
+                records.push(r);
+            }
+        }
+    }
+
     // Serving throughput: native executor vs no-op stub, identical streams.
     let spec = ModelSpec::tiny();
     let native = Box::new(NativeExecutor::new().with_model(spec.clone(), 3));
@@ -221,12 +240,86 @@ fn bench_decode(
             black_box(model.forward_decode(tok, pair, &cache, &mut kv).len());
         }
     });
+    // The zero-repack gate: a decode step must read K^T by word adoption,
+    // never through the extract-and-repack fallback. A panic here fails
+    // the bench binary — and with it the `--smoke` CI gate.
+    assert_eq!(kv.repack_count(), 0, "{name}: decode hot path took the K^T repack fallback");
     b.report(2.0 * macs as f64, "FLOP");
     Record {
         name,
         m: batch,
         k: past,
         n: d,
+        pair: format!("{}x{}", pair.w, pair.a),
+        median_s: b.median(),
+        macs: macs as f64,
+    }
+}
+
+/// Measure the decode-attention GEMMs in isolation against a KV cache
+/// holding `past` tokens: per iteration, operand materialization plus the
+/// score GEMM `q [1,hd] x K^T [hd, past]` and context GEMM
+/// `p [1,past] x V [past, hd]`. `repack` selects the extract-and-repack
+/// K^T oracle instead of the resident zero-copy adoption; `tiled` runs the
+/// tiled kernel instead of the M=1 GEMV dispatch. All four variants are
+/// bit-identical — only the time differs.
+#[allow(clippy::too_many_arguments)]
+fn bench_attention(
+    rng: &mut Rng,
+    pair: PrecisionPair,
+    past: usize,
+    repack: bool,
+    tiled: bool,
+    warmup: usize,
+    iters: usize,
+    name_prefix: &str,
+) -> Record {
+    let hd = 64usize;
+    let spec = ModelSpec {
+        name: "bench-attn",
+        seq: past,
+        layers: 1,
+        d_model: hd,
+        d_ff: hd,
+        heads: 1,
+        gated_ffn: false,
+        kv_heads: 1,
+    };
+    let mut kv = KvCache::new(&spec, pair.a);
+    for _ in 0..past {
+        let k_row: Vec<f32> = (0..hd).map(|_| rng.gauss() as f32 * 0.5).collect();
+        let v_row: Vec<f32> = (0..hd).map(|_| rng.gauss() as f32 * 0.5).collect();
+        kv.append_token(0, &k_row, &v_row);
+        kv.commit(1);
+    }
+    let q: Vec<f32> = (0..hd).map(|_| rng.gauss() as f32 * 0.5).collect();
+    let qp = PackedMatrix::from_f32(&q, 1, hd, pair.a);
+    let p: Vec<f32> = (0..past).map(|_| 1.0 / past as f32).collect();
+    let pp = PackedMatrix::from_f32(&p, 1, past, pair.a);
+    let cfg = GemmConfig::default();
+    let k_path = if repack { "repack" } else { "resident" };
+    let mm_path = if tiled { "tiled" } else { "gemv" };
+    let name = format!("{name_prefix} {}x{} T{past} {k_path} {mm_path}", pair.w, pair.a);
+    let b = Bench::run(&name, warmup, iters, || {
+        let kp =
+            if repack { kv.k_t_matrix_repacked(0, 0, past) } else { kv.k_t_matrix(0, 0, past) };
+        let vp = kv.v_matrix(0, 0, past);
+        let s = if tiled { gemm_tiled(&qp, &kp, &cfg) } else { gemm(&qp, &kp, &cfg) };
+        let c = if tiled { gemm_tiled(&pp, &vp, &cfg) } else { gemm(&pp, &vp, &cfg) };
+        black_box(s.len() + c.len());
+    });
+    if repack {
+        assert!(kv.repack_count() > 0, "{name}: oracle path must count repacks");
+    } else {
+        assert_eq!(kv.repack_count(), 0, "{name}: resident path must not repack");
+    }
+    let macs = 2 * hd * past;
+    b.report(2.0 * macs as f64, "FLOP");
+    Record {
+        name,
+        m: 1,
+        k: hd,
+        n: past,
         pair: format!("{}x{}", pair.w, pair.a),
         median_s: b.median(),
         macs: macs as f64,
@@ -273,11 +366,30 @@ fn smoke() {
     // GEMVs read a KV cache prefilled with 64 tokens — the hot path of
     // token-stream serving. Much higher ns/MAC than the block GEMMs (M=1
     // work is quantization/overhead-bound), hence its own baseline entries.
-    for pair in [
-        PrecisionPair::of_bits(6, 6),
-        PrecisionPair::new(flexibit::arith::Format::int(8), flexibit::arith::Format::int(8)),
-    ] {
+    // `bench_decode` additionally fails the gate outright (assert) if any
+    // step takes the K^T repack fallback instead of the resident layout.
+    let int8_pair =
+        PrecisionPair::new(flexibit::arith::Format::int(8), flexibit::arith::Format::int(8));
+    for pair in [PrecisionPair::of_bits(6, 6), int8_pair] {
         records.push(bench_decode(&mut rng, pair, 64, 8, 2, 9, "smoke decode"));
+    }
+    // Decode-attention gate: resident K^T adoption + M=1 GEMV on a
+    // T=128 cache (repack counter asserted 0 inside), and the bare GEMV
+    // kernel on a dense packed operand.
+    for pair in [PrecisionPair::of_bits(6, 6), int8_pair] {
+        records.push(bench_attention(&mut rng, pair, 128, false, false, 2, 9, "smoke attn"));
+    }
+    for pair in [PrecisionPair::of_bits(6, 6), int8_pair] {
+        let (k2, n2) = (256usize, 256usize);
+        let a = PackedMatrix::from_codes(&rng.codes(k2, pair.a.bits()), 1, k2, pair.a);
+        let w = PackedMatrix::from_codes(&rng.codes(k2 * n2, pair.w.bits()), k2, n2, pair.w);
+        let cfg = GemmConfig::default();
+        let name = format!("smoke gemv 1x{k2}x{n2} {}x{}", pair.w, pair.a);
+        let b = Bench::run(&name, 3, 11, || {
+            black_box(gemm(&a, &w, &cfg).len());
+        });
+        b.report(2.0 * (k2 * n2) as f64, "FLOP");
+        records.push(Record::gemm(name, 1, k2, n2, format!("{}x{}", pair.w, pair.a), b.median()));
     }
     let mut failed = false;
     for rec in &records {

@@ -20,7 +20,7 @@ fn forced(
     pair: PrecisionPair,
     df: Dataflow,
 ) -> f64 {
-    m.gemms(pair)
+    m.gemms(pair, 0)
         .iter()
         .map(|g| simulate_dataflow(accel, cfg, g, df).seconds * g.count as f64)
         .sum()
@@ -38,7 +38,7 @@ fn main() {
             let ws = forced(&fb, &cfg, &model, pair, Dataflow::WeightStationary);
             let os = forced(&fb, &cfg, &model, pair, Dataflow::OutputStationary);
             let best: f64 = model
-                .gemms(pair)
+                .gemms(pair, 0)
                 .iter()
                 .map(|g| simulate_gemm(&fb, &cfg, g).seconds * g.count as f64)
                 .sum();

@@ -19,6 +19,7 @@ use super::completion::RequestResult;
 use crate::baselines::FlexiBitAccel;
 use crate::sim::{self, AcceleratorConfig};
 use crate::workload::ModelSpec;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -159,11 +160,25 @@ impl Server {
         let accel = FlexiBitAccel::new();
         let mut executor = executor;
         let worker = std::thread::spawn(move || {
+            // Committed tokens per live session, tracked from the request
+            // stream (prefill row count, +1 per decode step) so all-decode
+            // batches co-simulate against their sessions' actual cached
+            // past. Entries are dropped on Phase::End; a session the
+            // executor evicted leaves a stale usize behind until then.
+            let mut session_tokens: HashMap<u64, usize> = HashMap::new();
             while !s.load(Ordering::Relaxed) {
                 let maybe = { b.lock().unwrap().next_batch(Instant::now()) };
                 match maybe {
                     Some(mut batch) => loop {
-                        Self::run_batch(&batch, &mut executor, &b, &m, &cfg, &accel);
+                        Self::run_batch(
+                            &batch,
+                            &mut executor,
+                            &b,
+                            &m,
+                            &cfg,
+                            &accel,
+                            &mut session_tokens,
+                        );
                         if s.load(Ordering::Relaxed) {
                             break;
                         }
@@ -192,7 +207,10 @@ impl Server {
     }
 
     /// Execute one batch and settle it: fulfill every request's completion
-    /// slot and tally per-request metrics.
+    /// slot, tally per-request metrics, and keep `session_tokens` (the
+    /// worker's committed-token ledger feeding decode co-simulation)
+    /// current.
+    #[allow(clippy::too_many_arguments)]
     fn run_batch(
         batch: &Batch,
         executor: &mut Box<dyn Executor>,
@@ -200,13 +218,21 @@ impl Server {
         m: &Arc<Mutex<Metrics>>,
         cfg: &ServerConfig,
         accel: &FlexiBitAccel,
+        session_tokens: &mut HashMap<u64, usize>,
     ) {
         let t0 = Instant::now();
         match executor.execute(batch) {
             Err(e) => {
                 // A failed batch completed nothing: count every request as
                 // failed, keep them out of completion/latency/co-simulation
-                // stats, and tell each submitter.
+                // stats, and tell each submitter. End requests still retire
+                // their ledger entry — the client is done with the session
+                // whether or not the executor acknowledged it.
+                for r in &batch.requests {
+                    if r.phase == Phase::End {
+                        session_tokens.remove(&r.session);
+                    }
+                }
                 eprintln!("executor '{}' failed on batch: {e}", executor.name());
                 {
                     let mut met = m.lock().unwrap();
@@ -222,33 +248,87 @@ impl Server {
             }
             Ok(res) => {
                 let done_at = Instant::now();
-                // Co-simulation: estimate FlexiBit latency/energy for this
-                // batch. An all-decode batch is a batch of single-token
-                // forwards, so it simulates at seq=1 instead of the full
-                // prefill sequence (the performance model has no KV-cache
-                // concept yet, so attention against the cached past is
-                // under-counted — tracked in ROADMAP); prefill and mixed
-                // batches keep the full-seq estimate.
-                let all_decode =
-                    !batch.requests.is_empty()
-                        && batch.requests.iter().all(|r| r.phase == Phase::Decode);
-                let rep = if all_decode {
-                    let decode_model = ModelSpec { seq: 1, ..cfg.sim_model.clone() };
-                    sim::simulate_model(accel, &cfg.sim_config, &decode_model, batch.pair)
-                } else {
-                    sim::simulate_model(accel, &cfg.sim_config, &cfg.sim_model, batch.pair)
-                };
                 let mut outputs = res.outputs;
                 // Defend the per-request contract: an executor that
                 // returned too few results fails the unanswered tail.
                 outputs.resize_with(batch.requests.len(), || {
                     Err("executor returned no result for this request".into())
                 });
+                // Co-simulation: estimate FlexiBit latency/energy for this
+                // batch. An all-decode batch is a batch of single-token
+                // forwards: each successful step simulates at seq=1 against
+                // its session's actual cached past, so attention costs the
+                // honest `1 × hd × (T+1)` GEMV shapes instead of a seq=1
+                // self-attention that ignores the cache. Prefill and mixed
+                // batches keep the full-seq estimate.
+                let all_decode =
+                    !batch.requests.is_empty()
+                        && batch.requests.iter().all(|r| r.phase == Phase::Decode);
+                let (mut sim_s, mut sim_j) = (0.0f64, 0.0f64);
+                if all_decode {
+                    let decode_model = ModelSpec { seq: 1, ..cfg.sim_model.clone() };
+                    for (r, out) in batch.requests.iter().zip(outputs.iter()) {
+                        if out.is_ok() {
+                            let past = session_tokens.get(&r.session).copied().unwrap_or(0);
+                            let rep = sim::simulate_model_with_past(
+                                accel,
+                                &cfg.sim_config,
+                                &decode_model,
+                                batch.pair,
+                                past,
+                            );
+                            sim_s += rep.seconds;
+                            sim_j += rep.energy_j;
+                        }
+                    }
+                } else {
+                    let rep =
+                        sim::simulate_model(accel, &cfg.sim_config, &cfg.sim_model, batch.pair);
+                    sim_s = rep.seconds;
+                    sim_j = rep.energy_j;
+                }
+                // Session-length ledger: prefill (re)starts a session at its
+                // row count, each decode step commits one more token, End
+                // retires the entry — mirroring the executor's KV cache.
+                // Ends retire unconditionally (an abandoned session must not
+                // leak its entry), decodes only advance sessions the ledger
+                // knows (an unknown one simulates at past 0 and stays out),
+                // and the map is hard-capped so a client that never sends
+                // End cannot grow it without bound.
+                for (r, out) in batch.requests.iter().zip(outputs.iter()) {
+                    if r.phase == Phase::End {
+                        session_tokens.remove(&r.session);
+                        continue;
+                    }
+                    if out.is_err() {
+                        continue;
+                    }
+                    match r.phase {
+                        Phase::Prefill if r.session != 0 => {
+                            if session_tokens.len() >= SESSION_LEDGER_CAP
+                                && !session_tokens.contains_key(&r.session)
+                            {
+                                let victim = session_tokens.keys().next().copied();
+                                if let Some(v) = victim {
+                                    session_tokens.remove(&v);
+                                }
+                            }
+                            session_tokens
+                                .insert(r.session, prefill_rows(r, cfg.sim_model.d_model));
+                        }
+                        Phase::Decode if r.session != 0 => {
+                            if let Some(t) = session_tokens.get_mut(&r.session) {
+                                *t += 1;
+                            }
+                        }
+                        _ => {}
+                    }
+                }
                 let mut met = m.lock().unwrap();
                 met.batches_executed += 1;
                 met.host_exec_s += res.host_s.max(done_at.duration_since(t0).as_secs_f64());
-                met.sim_accel_s += rep.seconds;
-                met.sim_energy_j += rep.energy_j;
+                met.sim_accel_s += sim_s;
+                met.sim_energy_j += sim_j;
                 for (r, out) in batch.requests.iter().zip(outputs) {
                     match &out {
                         // Session-end control messages are fulfilled but not
@@ -358,6 +438,23 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         self.stop_and_settle();
+    }
+}
+
+/// Upper bound on tracked co-sim ledger sessions — mirrors the executor's
+/// own session capacity bound (`kernels::DEFAULT_SESSION_CAPACITY` scale):
+/// sessions beyond it lose their past-length estimate (they co-simulate at
+/// past 0), never memory.
+const SESSION_LEDGER_CAP: usize = 4096;
+
+/// Committed tokens a session prefill contributes to the co-sim ledger:
+/// the leading dim of a 2-D request shape, else inferred from the co-sim
+/// model's width.
+fn prefill_rows(r: &Request, d_model: usize) -> usize {
+    match r.dims.as_slice() {
+        [rows, _] => *rows,
+        _ if d_model > 0 => r.input.len() / d_model,
+        _ => 0,
     }
 }
 
@@ -503,6 +600,44 @@ mod tests {
                 assert_eq!(got.unwrap(), vec![i as f32], "output routed to its submitter");
             }
         }
+    }
+
+    /// All-decode batches co-simulate against the session's actual cached
+    /// past: more prefilled context (and growing step count) must cost more
+    /// simulated accelerator time for the same number of decode steps.
+    #[test]
+    fn decode_cosim_scales_with_cached_past() {
+        let run = |prefill_rows: usize| -> f64 {
+            let server = Server::start(
+                stub_cfg(4, 4),
+                Box::new(FnExecutor(|_b: &Batch| -> Result<f64, String> { Ok(0.0) })),
+            );
+            let d = tiny_model().d_model;
+            let pair = PrecisionPair::of_bits(6, 16);
+            server.submit(
+                Request::new(0, "tiny", pair, vec![0.1; prefill_rows * d], vec![prefill_rows, d])
+                    .with_session(1, Phase::Prefill),
+            );
+            assert!(server.await_completed(1, Duration::from_secs(5)));
+            // One decode per batch (await between submits), so each step's
+            // co-sim sees the ledger advanced by its predecessors.
+            for i in 0..4u64 {
+                server.submit(
+                    Request::new(1 + i, "tiny", pair, vec![0.1; d], vec![d])
+                        .with_session(1, Phase::Decode),
+                );
+                assert!(server.await_completed(2 + i, Duration::from_secs(5)));
+            }
+            let m = server.shutdown();
+            assert_eq!(m.decode_steps, 4);
+            m.sim_accel_s
+        };
+        let long = run(32);
+        let short = run(1);
+        assert!(
+            long > short,
+            "decode co-sim must grow with the cached past: {long} vs {short}"
+        );
     }
 
     #[test]

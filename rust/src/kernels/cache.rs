@@ -12,7 +12,12 @@
 //! On top of the packed storage of record, each entry may also hold the
 //! weights **decoded once** into panel-major tiles ([`WeightPanels`]), so
 //! the GEMM hot loop never re-extracts and re-decodes the same weight bits
-//! on every forward. Panels cost 4 B/element versus the packed `bits/8` —
+//! on every forward. Both representations record the weights' actual
+//! max-|value| at build time (the pack and panel-decode passes touch every
+//! element anyway), which widens the GEMM's integer fast-path guard from
+//! format-derived worst cases to the data's real bounds — INT8 weights
+//! whose values stay small keep the i32 path at depths the format bound
+//! would reject. Panels cost 4 B/element versus the packed `bits/8` —
 //! the paper's memory-footprint win traded back for hot-loop speed — under
 //! an explicit process-wide byte budget
 //! ([`WeightCache::with_panel_budget`]). When the budget saturates, panels

@@ -11,38 +11,77 @@
 //!
 //! Layout is GQA-aware: K and V are stored per **KV head** (not per query
 //! head), so the query heads of a group share one packed stream — a
-//! `kv_heads/heads` memory saving on GQA models like Llama-2-70b — and the
-//! decode hot loop hands the streams to the GEMM kernel without repacking:
+//! `kv_heads/heads` memory saving on GQA models like Llama-2-70b — and
+//! **both operands reach the GEMM zero-repack**, each resident in exactly
+//! the layout its GEMM consumes:
 //!
-//! * `V` is appended row-major `[tokens, head_dim]`, which is already the
-//!   `P x V` operand layout — [`KvCache::v_matrix`] adopts the packed words
-//!   directly (zero repack).
-//! * `K` needs transposing for `Q x K^T`; [`KvCache::k_t_matrix`] extracts
-//!   the codes multi-lane (each word loaded once) and repacks the
-//!   transpose.
+//! * `V` is appended row-major `[tokens, head_dim]`, already the `P x V`
+//!   operand layout — [`KvCache::v_matrix`] adopts the packed words
+//!   directly.
+//! * `K` is kept resident **transposed** `[head_dim, tokens]`
+//!   ([`KtStream`]): a column-appendable packed stream with capacity
+//!   headroom between rows, where appending a token scatters its
+//!   `head_dim` codes into each row's word tail (amortized O(head_dim) per
+//!   step — history is never re-extracted; capacity doubling re-lays rows
+//!   out, amortized O(1) per element). [`KvCache::k_t_matrix`] then adopts
+//!   the words as a strided `K^T [head_dim, tokens]` matrix
+//!   ([`super::packed::PackedMatrix::from_tensor_strided`]) — no code is
+//!   extracted or repacked on the decode hot path. The historical
+//!   extract-and-transpose survives as
+//!   [`KvCache::k_t_matrix_repacked`], the test oracle and the only path
+//!   that increments [`KvCache::repack_count`] (CI gates on the counter
+//!   staying 0 across decode).
 //!
 //! Appends quantize through the same [`crate::arith::encode`] the prefill
 //! activation quantizer uses — elementwise and deterministic — which is the
-//! entire bit-identity argument: cached codes == recomputed codes.
+//! entire bit-identity argument: cached codes == recomputed codes. INT
+//! streams additionally track a running max-|value| high-water mark
+//! (monotone across [`KvCache::truncate`], so always a true upper bound)
+//! that the GEMM's value-aware i32 fast-path guard consumes.
 
-use super::packed::{extract_codes, PackedMatrix};
+use super::packed::{extract_codes, int_code_abs, PackedMatrix};
 use crate::arith::{encode, Format, PackedTensor};
 use crate::workload::ModelSpec;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+thread_local! {
+    /// Reused per-thread code buffer: the column scatter in
+    /// [`KvCache::append_token`] and the row extraction of the repack
+    /// (oracle/fallback) path — a decode step must not allocate per
+    /// (layer, head), mirroring the scratch reuse in [`super::gemm`].
+    static KV_SCRATCH: RefCell<Vec<u32>> = RefCell::new(Vec::new());
+}
+
+/// Borrow the first `n` elements of the scratch vector, growing if needed.
+fn with_scratch<R>(n: usize, f: impl FnOnce(&mut [u32]) -> R) -> R {
+    KV_SCRATCH.with(|s| {
+        let mut s = s.borrow_mut();
+        if s.len() < n {
+            s.resize(n, 0);
+        }
+        f(&mut s[..n])
+    })
+}
 
 /// A growable bit-packed stream of codes (append-only, with rollback),
 /// backed by a [`PackedTensor`] so the bit-insertion layout lives in exactly
-/// one place ([`PackedTensor::set_code`]).
+/// one place ([`PackedTensor::set_code`]). Holds V row-major
+/// `[tokens, head_dim]`.
 #[derive(Debug, Clone)]
 struct PackedStream {
     /// Backing tensor; its `len` is the *capacity* in codes. The live code
     /// count is `len` below.
     buf: PackedTensor,
     len: usize,
+    /// Running max-|value| high-water mark for INT formats (0 otherwise).
+    /// Monotone: `truncate` keeps it, so it is always an upper bound.
+    max_abs: i64,
 }
 
 impl PackedStream {
     fn new(fmt: Format) -> Self {
-        PackedStream { buf: PackedTensor::zeros(fmt, 0), len: 0 }
+        PackedStream { buf: PackedTensor::zeros(fmt, 0), len: 0, max_abs: 0 }
     }
 
     fn wbits(&self) -> usize {
@@ -59,14 +98,19 @@ impl PackedStream {
             words.resize((cap * self.wbits()).div_ceil(64), 0);
             self.buf = PackedTensor::from_words(self.buf.fmt, cap, words);
         }
+        if let Format::Int(i) = self.buf.fmt {
+            self.max_abs = self.max_abs.max(int_code_abs(code, i.bits as u32));
+        }
         self.buf.set_code(self.len, code);
         self.len += 1;
     }
 
-    /// Extract codes `[0, out.len())` multi-lane (each word loaded once).
-    fn extract_prefix(&self, out: &mut [u32]) {
-        debug_assert!(out.len() <= self.len);
-        extract_codes(self.buf.words(), 0, self.wbits(), out);
+    /// Known |value| bound for the GEMM guard (INT formats only).
+    fn max_abs(&self) -> Option<i64> {
+        match self.buf.fmt {
+            Format::Int(_) => Some(self.max_abs),
+            _ => None,
+        }
     }
 
     /// Packed words covering the first `n` codes.
@@ -86,11 +130,139 @@ impl PackedStream {
     }
 }
 
-/// One transformer layer's cached K/V: one packed stream per KV head, each
-/// row-major `[tokens, head_dim]`.
+/// K resident **transposed**: a packed `[head_dim, capacity]` buffer whose
+/// first `len` columns are live tokens. Rows sit `cap` codes apart, so
+/// appending token `len` writes one code into each row's tail
+/// (`set_code(r * cap + len)`) — O(head_dim) bit-surgery per step, zero
+/// touches of history — and the whole buffer adopts as a strided
+/// `K^T [head_dim, tokens]` GEMM operand without extraction.
+#[derive(Debug, Clone)]
+struct KtStream {
+    /// Backing tensor of `hd * cap` codes, row-major at stride `cap`.
+    buf: PackedTensor,
+    hd: usize,
+    /// Allocated columns (tokens of capacity).
+    cap: usize,
+    /// Live columns (appended tokens).
+    len: usize,
+    /// Running max-|value| high-water mark (INT formats; see
+    /// [`PackedStream::max_abs`]).
+    max_abs: i64,
+}
+
+impl KtStream {
+    fn new(fmt: Format, hd: usize) -> Self {
+        KtStream { buf: PackedTensor::zeros(fmt, 0), hd, cap: 0, len: 0, max_abs: 0 }
+    }
+
+    fn fmt(&self) -> Format {
+        self.buf.fmt
+    }
+
+    fn wbits(&self) -> usize {
+        self.buf.fmt.bits() as usize
+    }
+
+    /// Append one token's column: `codes[r]` lands at the tail of row `r`.
+    /// `set_code` is read-modify-write, so stale bits from a rolled-back
+    /// column are cleared on overwrite.
+    fn push_col(&mut self, codes: &[u32]) {
+        debug_assert_eq!(codes.len(), self.hd);
+        if self.len == self.cap {
+            self.grow((self.cap * 2).max(64));
+        }
+        if let Format::Int(i) = self.buf.fmt {
+            for &c in codes {
+                self.max_abs = self.max_abs.max(int_code_abs(c, i.bits as u32));
+            }
+        }
+        let cap = self.cap;
+        for (r, &c) in codes.iter().enumerate() {
+            self.buf.set_code(r * cap + self.len, c);
+        }
+        self.len += 1;
+    }
+
+    /// Re-lay the live rows out at a larger column capacity. O(hd * len),
+    /// amortized O(1) per appended element by doubling — this is the only
+    /// place history moves, and it is not a per-step cost.
+    fn grow(&mut self, new_cap: usize) {
+        debug_assert!(new_cap > self.cap);
+        let wbits = self.wbits();
+        let mut next = PackedTensor::zeros(self.buf.fmt, self.hd * new_cap);
+        let mut row = vec![0u32; self.len];
+        for r in 0..self.hd {
+            extract_codes(self.buf.words(), r * self.cap * wbits, wbits, &mut row);
+            for (c, &code) in row.iter().enumerate() {
+                next.set_code(r * new_cap + c, code);
+            }
+        }
+        self.buf = next;
+        self.cap = new_cap;
+    }
+
+    /// Zero-repack adoption: the packed words become a strided
+    /// `[head_dim, tokens]` matrix (stride = capacity). One memcpy of the
+    /// live word range; no code is extracted or re-inserted.
+    fn matrix(&self, tokens: usize) -> PackedMatrix {
+        debug_assert!(tokens <= self.len);
+        let wbits = self.wbits();
+        let n_codes = if self.hd == 0 { 0 } else { (self.hd - 1) * self.cap + tokens };
+        let words = self.buf.words()[..(n_codes * wbits).div_ceil(64)].to_vec();
+        let tensor = PackedTensor::from_words(self.fmt(), n_codes, words);
+        let m = PackedMatrix::from_tensor_strided(tensor, self.hd, tokens, self.cap);
+        match self.fmt() {
+            Format::Int(_) => m.with_max_abs(Some(self.max_abs)),
+            _ => m,
+        }
+    }
+
+    /// The extract-and-repack fallback: read every live row out of the
+    /// packed words and pack a dense `[head_dim, tokens]` matrix. Kept as
+    /// the test oracle for [`KtStream::matrix`]; never on the hot path.
+    fn matrix_repacked(&self, tokens: usize) -> PackedMatrix {
+        debug_assert!(tokens <= self.len);
+        let wbits = self.wbits();
+        let fmt = self.fmt();
+        with_scratch(self.hd * tokens, |codes| {
+            for r in 0..self.hd {
+                extract_codes(
+                    self.buf.words(),
+                    r * self.cap * wbits,
+                    wbits,
+                    &mut codes[r * tokens..(r + 1) * tokens],
+                );
+            }
+            PackedMatrix::from_codes(codes, self.hd, tokens, fmt)
+        })
+    }
+
+    fn max_abs(&self) -> Option<i64> {
+        match self.buf.fmt {
+            Format::Int(_) => Some(self.max_abs),
+            _ => None,
+        }
+    }
+
+    fn truncate(&mut self, tokens: usize) {
+        debug_assert!(tokens <= self.len);
+        self.len = tokens;
+    }
+
+    /// Packed bytes held by the live columns. Capacity headroom from
+    /// amortized doubling is excluded — same live-code accounting as
+    /// [`PackedStream::bytes`]; the backing allocation may be up to ~2x
+    /// this after growth or a deep truncate.
+    fn bytes(&self) -> usize {
+        (self.len * self.hd * self.wbits()).div_ceil(8)
+    }
+}
+
+/// One transformer layer's cached K/V: one stream per KV head — K resident
+/// transposed `[head_dim, tokens]`, V row-major `[tokens, head_dim]`.
 #[derive(Debug, Clone)]
 struct LayerKv {
-    k: Vec<PackedStream>,
+    k: Vec<KtStream>,
     v: Vec<PackedStream>,
 }
 
@@ -98,7 +270,7 @@ struct LayerKv {
 /// session's activation format and bit-packed, GQA-aware (stored per KV
 /// head). Grown by [`crate::kernels::NativeModel::forward_prefill`] /
 /// [`crate::kernels::NativeModel::forward_decode`].
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct KvCache {
     fmt: Format,
     kv_heads: usize,
@@ -107,6 +279,23 @@ pub struct KvCache {
     /// [`KvCache::commit`] once a forward call has fed every layer).
     len: usize,
     layers: Vec<LayerKv>,
+    /// Times the extract-and-repack fallback ([`KvCache::k_t_matrix_repacked`])
+    /// ran. The decode hot path must keep this at 0 — tests and the
+    /// `native_gemm --smoke` gate assert on it.
+    repacks: AtomicU64,
+}
+
+impl Clone for KvCache {
+    fn clone(&self) -> Self {
+        KvCache {
+            fmt: self.fmt,
+            kv_heads: self.kv_heads,
+            head_dim: self.head_dim,
+            len: self.len,
+            layers: self.layers.clone(),
+            repacks: AtomicU64::new(self.repacks.load(Ordering::Relaxed)),
+        }
+    }
 }
 
 impl KvCache {
@@ -114,13 +303,21 @@ impl KvCache {
     /// session's activation format — decode attention reads the cache as an
     /// `(a, a)` GEMM operand, exactly like prefill reads fresh K/V).
     pub fn new(spec: &ModelSpec, a_fmt: Format) -> Self {
+        let hd = spec.head_dim();
         let layers = (0..spec.layers)
             .map(|_| LayerKv {
-                k: (0..spec.kv_heads).map(|_| PackedStream::new(a_fmt)).collect(),
+                k: (0..spec.kv_heads).map(|_| KtStream::new(a_fmt, hd)).collect(),
                 v: (0..spec.kv_heads).map(|_| PackedStream::new(a_fmt)).collect(),
             })
             .collect();
-        KvCache { fmt: a_fmt, kv_heads: spec.kv_heads, head_dim: spec.head_dim(), len: 0, layers }
+        KvCache {
+            fmt: a_fmt,
+            kv_heads: spec.kv_heads,
+            head_dim: hd,
+            len: 0,
+            layers,
+            repacks: AtomicU64::new(0),
+        }
     }
 
     /// Committed tokens (positions `0..len` are attendable by the next row).
@@ -149,8 +346,16 @@ impl KvCache {
         self.fmt
     }
 
-    /// Packed bytes resident across every layer and head — the low-bit KV
-    /// footprint (an FP6 session stores 6 bits/element, not 32).
+    /// Times the extract-and-repack K^T fallback ran (0 on the decode hot
+    /// path — the resident layout adopts words instead).
+    pub fn repack_count(&self) -> u64 {
+        self.repacks.load(Ordering::Relaxed)
+    }
+
+    /// Packed bytes held by **live** codes across every layer and head —
+    /// the low-bit KV footprint (an FP6 session stores 6 bits/element, not
+    /// 32). Growth-capacity headroom in the backing streams (bounded at
+    /// ~2x by amortized doubling) is not counted.
     pub fn bytes(&self) -> usize {
         self.layers
             .iter()
@@ -164,22 +369,27 @@ impl KvCache {
     /// Quantize and append one token's K/V rows (`kv_heads * head_dim` f32
     /// values each) to layer `layer`. Values pass through the same
     /// [`crate::arith::encode`] the prefill activation quantizer uses, so
-    /// cached codes equal recomputed codes bit-for-bit.
+    /// cached codes equal recomputed codes bit-for-bit. K's codes scatter
+    /// into the transposed streams' column tails; V's append row-major.
     pub fn append_token(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
         let hd = self.head_dim;
         let kv_dim = self.kv_heads * hd;
         assert_eq!(k_row.len(), kv_dim, "K row must be kv_heads * head_dim");
         assert_eq!(v_row.len(), kv_dim, "V row must be kv_heads * head_dim");
         let fmt = self.fmt;
+        let kv_heads = self.kv_heads;
         let l = &mut self.layers[layer];
-        for h in 0..self.kv_heads {
-            for &x in &k_row[h * hd..(h + 1) * hd] {
-                l.k[h].push(encode(x as f64, fmt));
+        with_scratch(hd, |col| {
+            for h in 0..kv_heads {
+                for (c, &x) in col.iter_mut().zip(&k_row[h * hd..(h + 1) * hd]) {
+                    *c = encode(x as f64, fmt);
+                }
+                l.k[h].push_col(col);
+                for &x in &v_row[h * hd..(h + 1) * hd] {
+                    l.v[h].push(encode(x as f64, fmt));
+                }
             }
-            for &x in &v_row[h * hd..(h + 1) * hd] {
-                l.v[h].push(encode(x as f64, fmt));
-            }
-        }
+        });
     }
 
     /// Mark `rows` freshly appended tokens as committed — called once per
@@ -188,19 +398,24 @@ impl KvCache {
     pub fn commit(&mut self, rows: usize) {
         self.len += rows;
         debug_assert!(self.layers.iter().all(|l| {
-            let want = self.len * self.head_dim;
-            l.k.iter().chain(l.v.iter()).all(|s| s.len == want)
+            l.k.iter().all(|s| s.len == self.len)
+                && l.v.iter().all(|s| s.len == self.len * self.head_dim)
         }));
     }
 
     /// Roll back to `tokens` committed tokens (speculative-decode rejection,
-    /// bench replay). Appended-but-uncommitted rows are discarded too.
+    /// bench replay). Appended-but-uncommitted rows are discarded too; K's
+    /// transposed streams drop their column tails (stale bits are cleared
+    /// when a later append overwrites them — reads never span past the live
+    /// column count).
     pub fn truncate(&mut self, tokens: usize) {
         assert!(tokens <= self.len, "cannot truncate {} to {tokens}", self.len);
-        let want = tokens * self.head_dim;
         for l in &mut self.layers {
-            for s in l.k.iter_mut().chain(l.v.iter_mut()) {
-                s.truncate(want);
+            for s in l.k.iter_mut() {
+                s.truncate(tokens);
+            }
+            for s in l.v.iter_mut() {
+                s.truncate(tokens * self.head_dim);
             }
         }
         self.len = tokens;
@@ -209,18 +424,21 @@ impl KvCache {
     /// K transposed for the score GEMM: a `[head_dim, tokens]` packed
     /// matrix of layer `layer`, KV head `kv_head`. `tokens` may include
     /// rows appended but not yet committed (prefill attends its own rows).
+    ///
+    /// **Zero-repack**: the resident transposed stream's words are adopted
+    /// as a strided matrix — exactly like [`KvCache::v_matrix`], no code is
+    /// extracted or re-inserted.
     pub fn k_t_matrix(&self, layer: usize, kv_head: usize, tokens: usize) -> PackedMatrix {
-        let hd = self.head_dim;
-        let s = &self.layers[layer].k[kv_head];
-        let mut rowbuf = vec![0u32; tokens * hd];
-        s.extract_prefix(&mut rowbuf);
-        let mut t = vec![0u32; hd * tokens];
-        for (r, row) in rowbuf.chunks(hd).enumerate() {
-            for (c, &code) in row.iter().enumerate() {
-                t[c * tokens + r] = code;
-            }
-        }
-        PackedMatrix::from_codes(&t, hd, tokens, self.fmt)
+        self.layers[layer].k[kv_head].matrix(tokens)
+    }
+
+    /// The historical extract-and-repack K^T (dense output matrix).
+    /// **Test oracle and fallback only** — each call counts toward
+    /// [`KvCache::repack_count`], which the decode hot path must keep at 0.
+    /// Bit-identical to [`KvCache::k_t_matrix`] code-for-code.
+    pub fn k_t_matrix_repacked(&self, layer: usize, kv_head: usize, tokens: usize) -> PackedMatrix {
+        self.repacks.fetch_add(1, Ordering::Relaxed);
+        self.layers[layer].k[kv_head].matrix_repacked(tokens)
     }
 
     /// V for the context GEMM: a `[tokens, head_dim]` packed matrix of
@@ -230,7 +448,7 @@ impl KvCache {
         let hd = self.head_dim;
         let s = &self.layers[layer].v[kv_head];
         let tensor = PackedTensor::from_words(self.fmt, tokens * hd, s.words_for(tokens * hd));
-        PackedMatrix::from_tensor(tensor, tokens, hd)
+        PackedMatrix::from_tensor(tensor, tokens, hd).with_max_abs(s.max_abs())
     }
 }
 
@@ -301,6 +519,40 @@ mod tests {
         let elems = sp.layers * sp.kv_heads * 2 * tokens * hd;
         assert_eq!(kv.bytes(), sp.layers * sp.kv_heads * 2 * (tokens * hd * 6).div_ceil(8));
         assert!(kv.bytes() < elems * 4, "packed KV must undercut f32 residency");
+        assert_eq!(kv.repack_count(), 0, "readback never took the repack fallback");
+    }
+
+    /// The zero-repack adoption and the extract-and-repack oracle produce
+    /// the same codes — and only the oracle moves the repack counter.
+    #[test]
+    fn resident_k_t_matches_repack_oracle() {
+        let sp = spec();
+        for fmt in [Format::Fp(FpFormat::FP5_E2M2), Format::int(8)] {
+            let mut kv = KvCache::new(&sp, fmt);
+            let kv_dim = sp.kv_heads * sp.head_dim();
+            let mut rng = Rng::new(11);
+            // 70 tokens forces at least one capacity re-layout (cap 64 -> 128).
+            for _ in 0..70 {
+                for li in 0..sp.layers {
+                    let k_row: Vec<f32> = (0..kv_dim).map(|_| rng.gauss() as f32).collect();
+                    let v_row: Vec<f32> = (0..kv_dim).map(|_| rng.gauss() as f32).collect();
+                    kv.append_token(li, &k_row, &v_row);
+                }
+                kv.commit(1);
+            }
+            for tokens in [1usize, 63, 64, 65, 70] {
+                for li in 0..sp.layers {
+                    for h in 0..sp.kv_heads {
+                        let fast = kv.k_t_matrix(li, h, tokens);
+                        let slow = kv.k_t_matrix_repacked(li, h, tokens);
+                        assert_eq!((fast.rows(), fast.cols()), (slow.rows(), slow.cols()));
+                        let label = format!("{fmt} layer {li} head {h} tokens {tokens}");
+                        assert_eq!(fast.codes(), slow.codes(), "{label}");
+                    }
+                }
+            }
+            assert!(kv.repack_count() > 0, "oracle calls must be counted");
+        }
     }
 
     #[test]
@@ -332,6 +584,10 @@ mod tests {
         let m = kv.k_t_matrix(0, 0, 2);
         assert_eq!(m.get(0, 0), 1.0);
         assert_eq!(m.get(0, 1), 3.0);
+        // The V rows rolled back and re-pushed too.
+        let v = kv.v_matrix(0, 0, 2);
+        assert_eq!(v.get(0, 0), 1.0);
+        assert_eq!(v.get(1, 0), 3.0);
     }
 
     #[test]
@@ -348,5 +604,37 @@ mod tests {
         assert_eq!(kv.kv_heads(), 1);
         let kt = kv.k_t_matrix(0, 0, 1);
         assert_eq!((kt.rows(), kt.cols()), (sp.head_dim(), 1));
+    }
+
+    /// INT streams carry a max-|value| high-water mark into the adopted
+    /// matrices (the GEMM guard's data-aware bound); truncate keeps the
+    /// mark (a sound upper bound), FP streams carry none.
+    #[test]
+    fn int_streams_track_value_maxima() {
+        let sp = spec();
+        let mut kv = KvCache::new(&sp, Format::int(8));
+        let kv_dim = sp.kv_heads * sp.head_dim();
+        for li in 0..sp.layers {
+            kv.append_token(li, &vec![3.0; kv_dim], &vec![-5.0; kv_dim]);
+        }
+        kv.commit(1);
+        assert_eq!(kv.k_t_matrix(0, 0, 1).max_abs(), Some(3));
+        assert_eq!(kv.v_matrix(0, 0, 1).max_abs(), Some(5));
+        for li in 0..sp.layers {
+            kv.append_token(li, &vec![-64.0; kv_dim], &vec![20.0; kv_dim]);
+        }
+        kv.commit(1);
+        assert_eq!(kv.k_t_matrix(0, 0, 2).max_abs(), Some(64));
+        // Rollback keeps the high-water mark: still a true upper bound.
+        kv.truncate(1);
+        assert_eq!(kv.k_t_matrix(0, 0, 1).max_abs(), Some(64));
+
+        let mut fp = KvCache::new(&sp, Format::Fp(FpFormat::FP6_E3M2));
+        for li in 0..sp.layers {
+            fp.append_token(li, &vec![1.0; kv_dim], &vec![1.0; kv_dim]);
+        }
+        fp.commit(1);
+        assert_eq!(fp.k_t_matrix(0, 0, 1).max_abs(), None);
+        assert_eq!(fp.v_matrix(0, 0, 1).max_abs(), None);
     }
 }

@@ -23,13 +23,20 @@
 //! * [`gemm`] — a tiled, cache-blocked GEMM kernel with an 8-wide
 //!   register-blocked micro-kernel, parallelized across output row blocks
 //!   with scoped std threads (the offline build has no rayon) and
-//!   per-thread reused tile scratch. Accumulation order is ascending-k per
-//!   output element with one chain per column, which makes the kernel
-//!   **bit-exact** against [`crate::arith::gemm_ref`] for every precision
-//!   pair — the software analog of the paper's RTL verification, at GEMM
-//!   granularity. INT×INT pairs whose accumulation provably stays within
-//!   f32-exact integer range (`k * max|a| * max|w| <= 2^24`) take an i32
-//!   fast path ([`int_fast_path_exact`]) that is free to vectorize.
+//!   per-thread reused tile scratch. M=1 shapes (every GEMM of a decode
+//!   step) dispatch to a dedicated GEMV micro-kernel that streams the
+//!   stationary operand row-wise into a fused axpy ([`gemm_tiled`] keeps
+//!   the tiled path callable as the comparison oracle). Accumulation order
+//!   is ascending-k per output element with one chain per column, which
+//!   makes the kernel **bit-exact** against [`crate::arith::gemm_ref`] for
+//!   every precision pair — the software analog of the paper's RTL
+//!   verification, at GEMM granularity. INT×INT pairs whose accumulation
+//!   provably stays within f32-exact integer range
+//!   (`k * max|a| * max|w| <= 2^24`) take an i32 fast path that is free to
+//!   vectorize; the maxima are the data's **recorded actual maxima** when
+//!   known ([`int_fast_path_exact_with`]; pack/panel-build/KV-append all
+//!   record them), the format-derived worst case otherwise
+//!   ([`int_fast_path_exact`]).
 //! * [`WeightPanels`] / [`gemm_with_panels`] — a weight matrix decoded once
 //!   into panel-major tiles so the hot loop's tile fill is a slice borrow
 //!   instead of bit extraction + LUT decode.
@@ -49,7 +56,11 @@
 //!   cache stores exactly the quantized codes prefill would produce and
 //!   every GEMM keeps one ascending-k accumulation chain per element.
 //! * [`KvCache`] — per-session K/V, bit-packed at the activation format
-//!   (low-bit KV residency), GQA-aware (one stream per KV head).
+//!   (low-bit KV residency), GQA-aware (one stream per KV head). Both
+//!   operands are resident in the layout their GEMM consumes — V row-major,
+//!   K **transposed** with column-appendable word tails — so decode
+//!   attention adopts packed words on both sides, zero repack (a repack
+//!   counter guards the hot path in tests and CI).
 //! * [`NativeExecutor`] — implements [`crate::coordinator::Executor`] so the
 //!   server can run end-to-end on this engine with zero Python/PJRT
 //!   artifacts on disk, including token-stream sessions (prefill + decode
@@ -63,7 +74,10 @@ mod packed;
 mod panels;
 
 pub use cache::{CachedModel, LayerPanels, PackedLayer, WeightCache, DEFAULT_PANEL_BUDGET};
-pub use gemm::{gemm, gemm_default, gemm_with_panels, int_fast_path_exact, GemmConfig};
+pub use gemm::{
+    gemm, gemm_default, gemm_tiled, gemm_with_panels, int_fast_path_exact,
+    int_fast_path_exact_with, GemmConfig,
+};
 pub use kv::KvCache;
 pub use model::{NativeExecutor, NativeModel};
 pub use packed::{extract_codes, Decoder, PackedMatrix};

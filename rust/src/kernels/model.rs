@@ -253,8 +253,12 @@ impl NativeModel {
     /// Causal GQA attention over the session KV cache: appends this call's
     /// rows' K/V to layer `li`, then attends each new row (absolute position
     /// `pos0 + r`) against positions `0..=pos0+r`. Projections run at
-    /// (w, a); QK^T and PV at (a, a), with K/V read straight from the
-    /// packed cache — the same codes a full prefill quantizes.
+    /// (w, a); QK^T and PV at (a, a), with K/V **adopted zero-repack** from
+    /// the packed cache (K is resident transposed, V row-major — no code is
+    /// extracted or re-inserted) — the same codes a full prefill quantizes.
+    /// The adopted operands are built once per KV head and shared by the
+    /// query heads of the group (a `heads/kv_heads` saving on GQA models);
+    /// decode rows are M=1, so every GEMM here takes the GEMV micro-kernel.
     #[allow(clippy::too_many_arguments)]
     fn attention_cached(
         &self,
@@ -284,8 +288,17 @@ impl NativeModel {
 
         let mut ctx = vec![0f32; rows * d];
         let scale = 1.0 / (hd as f32).sqrt();
+        // One zero-repack adoption of K^T and V per KV head, shared across
+        // the group's query heads (the group mapping is monotone, so a
+        // one-slot cache suffices). Results are head-independent — reuse
+        // changes nothing bit-wise.
+        let mut group_kv: Option<(usize, PackedMatrix, PackedMatrix)> = None;
         for h in 0..heads {
             let kvh = h * kv_heads / heads;
+            if group_kv.as_ref().map(|(c, _, _)| *c) != Some(kvh) {
+                group_kv = Some((kvh, kv.k_t_matrix(li, kvh, cur), kv.v_matrix(li, kvh, cur)));
+            }
+            let (_, kp, vp) = group_kv.as_ref().unwrap();
             let mut q_h = vec![0f32; rows * hd];
             for r in 0..rows {
                 q_h[r * hd..(r + 1) * hd]
@@ -293,8 +306,7 @@ impl NativeModel {
             }
             // Scores against every cached position: (a, a).
             let qp = PackedMatrix::from_f32(&q_h, rows, hd, pair.a);
-            let kp = kv.k_t_matrix(li, kvh, cur);
-            let mut scores = gemm(&qp, &kp, &self.gemm_cfg); // [rows, cur]
+            let mut scores = gemm(&qp, kp, &self.gemm_cfg); // [rows, cur]
             for s in scores.iter_mut() {
                 *s *= scale;
             }
@@ -309,8 +321,7 @@ impl NativeModel {
             softmax_rows(&mut scores, cur);
             // Context: probabilities x cached V at (a, a).
             let pp = PackedMatrix::from_f32(&scores, rows, cur, pair.a);
-            let vp = kv.v_matrix(li, kvh, cur);
-            let ctx_h = gemm(&pp, &vp, &self.gemm_cfg); // [rows, hd]
+            let ctx_h = gemm(&pp, vp, &self.gemm_cfg); // [rows, hd]
             for r in 0..rows {
                 ctx[r * d + h * hd..r * d + (h + 1) * hd]
                     .copy_from_slice(&ctx_h[r * hd..(r + 1) * hd]);

@@ -2,10 +2,28 @@
 //!
 //! [`PackedMatrix`] is the storage type the native GEMM kernel computes on:
 //! row-major values of any [`Format`], packed back-to-back across `u64`
-//! words with no padding — the exact layout [`crate::bitpack::BitPacker`]
-//! produces and [`PackedTensor`] holds. [`Decoder`] turns codes into f32
-//! lanes; for formats up to 16 bits it is a precomputed lookup table, so the
-//! GEMM inner loops never touch the FP field-decomposition path.
+//! words — the exact layout [`crate::bitpack::BitPacker`] produces and
+//! [`PackedTensor`] holds. [`Decoder`] turns codes into f32 lanes; for
+//! formats up to 16 bits it is a precomputed lookup table, so the GEMM inner
+//! loops never touch the FP field-decomposition path.
+//!
+//! Two properties make the type a zero-repack adoption target for
+//! externally grown packed storage (the serving KV cache):
+//!
+//! * **Row stride.** A matrix may view rows at a stride wider than its
+//!   column count (`stride >= cols`, in codes): row `r` starts at bit
+//!   `r * stride * bits` and only the first `cols` codes are live. The KV
+//!   cache keeps K resident transposed with column capacity headroom, and
+//!   [`PackedMatrix::from_tensor_strided`] adopts those words as the
+//!   `K^T [head_dim, tokens]` GEMM operand without touching a single code.
+//!   Dense matrices have `stride == cols` (the historical layout).
+//! * **Recorded maxima.** Packing an INT-format matrix from codes or f32
+//!   records the actual largest |value| ([`PackedMatrix::max_abs`]), which
+//!   the GEMM's integer fast path uses to widen its exactness guard beyond
+//!   the format-derived worst case (see
+//!   [`super::gemm::int_fast_path_exact_with`]). Adopted words skip the
+//!   scan (`None` = unknown); producers that track maxima themselves (the
+//!   KV cache's streams) attach one via [`PackedMatrix::with_max_abs`].
 //!
 //! Decoding is **multi-lane, word-granular**: instead of recomputing
 //! `bit / 64` and re-loading the containing word for every element, the
@@ -92,20 +110,53 @@ pub fn extract_codes(words: &[u64], bit0: usize, wbits: usize, out: &mut [u32]) 
     map_lanes(words, bit0, wbits, out, |c| c);
 }
 
+/// Sign-extend a `bits`-wide two's-complement code to i32 and take |value|.
+/// The left shift drops any garbage above bit `bits-1`, so no mask needed.
+/// Crate-visible so the KV streams track their running maxima with the
+/// same arithmetic the pack-time scan uses.
+#[inline]
+pub(crate) fn int_code_abs(code: u32, bits: u32) -> i64 {
+    let shift = 32 - bits;
+    (((code << shift) as i32) >> shift).unsigned_abs() as i64
+}
+
+/// Largest |value| among INT-format codes (`None` for non-INT formats).
+fn scan_max_abs(codes: &[u32], fmt: Format) -> Option<i64> {
+    match fmt {
+        Format::Int(i) => {
+            Some(codes.iter().map(|&c| int_code_abs(c, i.bits as u32)).max().unwrap_or(0))
+        }
+        _ => None,
+    }
+}
+
 /// A row-major `rows x cols` matrix of `fmt` values, bit-packed with no
-/// per-row or per-element padding (row `r` starts at bit `r * cols * bits`).
+/// per-element padding. Row `r` starts at bit `r * stride * bits`; dense
+/// matrices have `stride == cols` (no per-row padding either), adopted
+/// KV-cache views may carry capacity headroom between rows.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PackedMatrix {
     rows: usize,
     cols: usize,
+    /// Row stride in codes (`>= cols`; `== cols` for dense matrices).
+    stride: usize,
     data: PackedTensor,
+    /// Largest |decoded value| when known: recorded at pack time for INT
+    /// formats, attached by producers that track it (KV streams), `None`
+    /// when adopted without a scan or for FP formats. Feeds the GEMM's
+    /// value-aware integer fast-path guard; may be a conservative upper
+    /// bound, never an under-estimate.
+    max_abs: Option<i64>,
 }
 
 impl PackedMatrix {
-    /// Pack raw codes (row-major).
+    /// Pack raw codes (row-major). INT formats record the actual
+    /// max-|value| for the integer fast-path guard.
     pub fn from_codes(codes: &[u32], rows: usize, cols: usize, fmt: Format) -> Self {
         assert_eq!(codes.len(), rows * cols, "codes length must be rows*cols");
-        PackedMatrix { rows, cols, data: PackedTensor::from_codes(codes, fmt) }
+        let max_abs = scan_max_abs(codes, fmt);
+        let data = PackedTensor::from_codes(codes, fmt);
+        PackedMatrix { rows, cols, stride: cols, data, max_abs }
     }
 
     /// Quantize f32 values (round-to-nearest-even, saturating) and pack.
@@ -122,13 +173,51 @@ impl PackedMatrix {
         Self::from_codes(&codes, rows, cols, fmt)
     }
 
-    /// Adopt an already-packed tensor as a `rows x cols` matrix without
-    /// repacking — the KV cache hands its packed value streams to the GEMM
-    /// this way (a decode step must not pay a per-element repack of the
-    /// whole cache).
+    /// Adopt an already-packed tensor as a dense `rows x cols` matrix
+    /// without repacking — the KV cache hands its packed value streams to
+    /// the GEMM this way (a decode step must not pay a per-element repack
+    /// of the whole cache). No max-|value| scan is performed
+    /// ([`PackedMatrix::max_abs`] is `None`); attach one with
+    /// [`PackedMatrix::with_max_abs`] if the producer tracked it.
     pub fn from_tensor(data: PackedTensor, rows: usize, cols: usize) -> Self {
         assert_eq!(data.len, rows * cols, "tensor length must be rows*cols");
-        PackedMatrix { rows, cols, data }
+        PackedMatrix { rows, cols, stride: cols, data, max_abs: None }
+    }
+
+    /// Adopt packed words whose rows sit `stride` codes apart (`stride >=
+    /// cols`; codes beyond each row's first `cols` are dead capacity, never
+    /// read) — zero-repack adoption of the KV cache's column-appendable
+    /// transposed K streams, which keep capacity headroom between rows so
+    /// appends only touch word tails.
+    pub fn from_tensor_strided(
+        data: PackedTensor,
+        rows: usize,
+        cols: usize,
+        stride: usize,
+    ) -> Self {
+        assert!(stride >= cols, "stride {stride} must cover cols {cols}");
+        let need = if rows == 0 { 0 } else { (rows - 1) * stride + cols };
+        assert!(
+            data.len >= need,
+            "tensor holds {} codes, rows*stride layout needs {need}",
+            data.len
+        );
+        PackedMatrix { rows, cols, stride, data, max_abs: None }
+    }
+
+    /// Attach a known bound on the matrix's largest |value| (must be a
+    /// true upper bound; producers like the KV streams track a running
+    /// high-water mark). `None` clears it.
+    pub fn with_max_abs(mut self, max_abs: Option<i64>) -> Self {
+        self.max_abs = max_abs;
+        self
+    }
+
+    /// Largest |decoded value| if known (see the field docs): actual for
+    /// matrices packed from codes/f32, a producer-supplied upper bound for
+    /// adopted streams, `None` when unknown.
+    pub fn max_abs(&self) -> Option<i64> {
+        self.max_abs
     }
 
     pub fn rows(&self) -> usize {
@@ -143,7 +232,9 @@ impl PackedMatrix {
         self.data.fmt
     }
 
-    /// Packed size in bytes (the memory-efficiency win over padded storage).
+    /// Packed size in bytes of the backing storage (the memory-efficiency
+    /// win over padded storage; includes capacity headroom for strided
+    /// views).
     pub fn bytes(&self) -> usize {
         self.data.bytes()
     }
@@ -155,7 +246,7 @@ impl PackedMatrix {
 
     pub fn get_code(&self, r: usize, c: usize) -> u32 {
         assert!(r < self.rows && c < self.cols);
-        self.data.get_code(r * self.cols + c)
+        self.data.get_code(r * self.stride + c)
     }
 
     /// Decoded value at (r, c).
@@ -163,9 +254,20 @@ impl PackedMatrix {
         decode(self.get_code(r, c), self.data.fmt)
     }
 
-    /// All codes, row-major.
+    /// All live codes, row-major (dead capacity between strided rows is
+    /// skipped).
     pub fn codes(&self) -> Vec<u32> {
-        self.data.codes()
+        let wbits = self.data.fmt.bits() as usize;
+        let mut out = vec![0u32; self.rows * self.cols];
+        for r in 0..self.rows {
+            extract_codes(
+                self.data.words(),
+                r * self.stride * wbits,
+                wbits,
+                &mut out[r * self.cols..(r + 1) * self.cols],
+            );
+        }
+        out
     }
 
     /// Dequantize the whole matrix to f32, row-major.
@@ -179,22 +281,28 @@ impl PackedMatrix {
         out
     }
 
-    /// A new matrix holding this one's transpose (repacked). Reads the
-    /// source rows directly out of the packed words (one `cols`-sized code
-    /// buffer) instead of materializing two full `Vec<u32>` code copies —
-    /// peak extra memory is one row, not two matrices.
+    /// A new dense matrix holding this one's transpose (repacked). Reads
+    /// the source rows directly out of the packed words (one `cols`-sized
+    /// code buffer) instead of materializing two full `Vec<u32>` code
+    /// copies — peak extra memory is one row, not two matrices.
     pub fn transposed(&self) -> PackedMatrix {
         let fmt = self.fmt();
         let wbits = fmt.bits() as usize;
         let mut out = PackedTensor::zeros(fmt, self.rows * self.cols);
         let mut rowbuf = vec![0u32; self.cols];
         for r in 0..self.rows {
-            extract_codes(self.data.words(), r * self.cols * wbits, wbits, &mut rowbuf);
+            extract_codes(self.data.words(), r * self.stride * wbits, wbits, &mut rowbuf);
             for (c, &code) in rowbuf.iter().enumerate() {
                 out.set_code(c * self.rows + r, code);
             }
         }
-        PackedMatrix { rows: self.cols, cols: self.rows, data: out }
+        PackedMatrix {
+            rows: self.cols,
+            cols: self.rows,
+            stride: self.rows,
+            data: out,
+            max_abs: self.max_abs,
+        }
     }
 
     /// Decode `out.len()` consecutive values of row `row` starting at column
@@ -204,7 +312,7 @@ impl PackedMatrix {
     pub fn decode_row_range(&self, row: usize, col0: usize, dec: &Decoder, out: &mut [f32]) {
         debug_assert!(row < self.rows && col0 + out.len() <= self.cols);
         let wbits = self.data.fmt.bits() as usize;
-        let bit0 = (row * self.cols + col0) * wbits;
+        let bit0 = (row * self.stride + col0) * wbits;
         let words = self.data.words();
         match dec {
             Decoder::Lut(t) => map_lanes(words, bit0, wbits, out, |c| t[c as usize]),
@@ -225,7 +333,7 @@ impl PackedMatrix {
         };
         let shift = 32 - ibits;
         let wbits = ibits as usize;
-        let bit0 = (row * self.cols + col0) * wbits;
+        let bit0 = (row * self.stride + col0) * wbits;
         map_lanes(self.data.words(), bit0, wbits, out, |c| ((c << shift) as i32) >> shift);
     }
 
@@ -237,7 +345,7 @@ impl PackedMatrix {
         let wbits = self.data.fmt.bits() as usize;
         let mask: u64 = if wbits >= 64 { u64::MAX } else { (1u64 << wbits) - 1 };
         let words = self.data.words();
-        let mut bit = (row * self.cols + col0) * wbits;
+        let mut bit = (row * self.stride + col0) * wbits;
         for o in out.iter_mut() {
             let (wi, off) = (bit / 64, bit % 64);
             let mut code = words[wi] >> off;
@@ -362,5 +470,70 @@ mod tests {
         let m = PackedMatrix::from_codes(&vec![0; 1000], 10, 100, fmt);
         assert_eq!(m.bytes(), 750); // 6000 bits, no padding
         assert_eq!(m.padded_bytes(), 1000);
+    }
+
+    /// A strided view over a wider backing tensor reads exactly the live
+    /// prefix of each row — get/codes/decode/transpose all agree with a
+    /// dense matrix holding the same live codes.
+    #[test]
+    fn strided_view_matches_dense() {
+        let mut rng = Rng::new(44);
+        for fmt in [Format::Fp(FpFormat::FP6_E3M2), Format::int(8), Format::fp(1, 1)] {
+            let (rows, cols, stride) = (5usize, 11usize, 17usize);
+            // Backing tensor: rows at the wide stride, random garbage in the
+            // dead capacity region (must never be read).
+            let all = rng.codes(rows * stride, fmt.bits());
+            let backing = PackedTensor::from_codes(&all, fmt);
+            let m = PackedMatrix::from_tensor_strided(backing, rows, cols, stride);
+            let live: Vec<u32> = (0..rows)
+                .flat_map(|r| all[r * stride..r * stride + cols].to_vec())
+                .collect();
+            let dense = PackedMatrix::from_codes(&live, rows, cols, fmt);
+            assert_eq!(m.codes(), dense.codes(), "{fmt} codes");
+            assert_eq!(m.to_f32(), dense.to_f32(), "{fmt} decode");
+            for r in 0..rows {
+                for c in 0..cols {
+                    assert_eq!(m.get_code(r, c), dense.get_code(r, c), "{fmt} ({r},{c})");
+                }
+            }
+            let dec = Decoder::new(fmt);
+            for r in 0..rows {
+                for col0 in [0usize, 1, 7, 10] {
+                    let mut fast = vec![0f32; cols - col0];
+                    let mut slow = vec![0f32; cols - col0];
+                    m.decode_row_range(r, col0, &dec, &mut fast);
+                    m.decode_row_range_scalar(r, col0, &dec, &mut slow);
+                    assert_eq!(fast, slow, "{fmt} strided row {r} col0 {col0}");
+                }
+            }
+            // Transpose repacks only the live codes.
+            let t = m.transposed();
+            assert_eq!((t.rows(), t.cols()), (cols, rows));
+            assert_eq!(t.codes(), dense.transposed().codes(), "{fmt} transpose");
+        }
+    }
+
+    /// INT packing records the data's actual max-|value|; FP and adopted
+    /// tensors do not.
+    #[test]
+    fn max_abs_recorded_for_int_packs() {
+        let i8f = Format::int(8);
+        // Codes for values {3, -100, 7, 0}: 0x9C is -100 in two's complement.
+        let m = PackedMatrix::from_codes(&[3, 0x9C, 7, 0], 2, 2, i8f);
+        assert_eq!(m.max_abs(), Some(100));
+        // -128 (code 0x80) is the format's magnitude ceiling.
+        let m2 = PackedMatrix::from_codes(&[0x80, 0, 0, 0], 2, 2, i8f);
+        assert_eq!(m2.max_abs(), Some(128));
+        // from_f32 goes through the same scan.
+        let m3 = PackedMatrix::from_f32(&[2.0, -64.0, 5.0, 1.0], 2, 2, i8f);
+        assert_eq!(m3.max_abs(), Some(64));
+        // FP formats never record (the fast path is INT-only).
+        let fp = PackedMatrix::from_f32(&[2.0; 4], 2, 2, Format::Fp(FpFormat::FP6_E3M2));
+        assert_eq!(fp.max_abs(), None);
+        // Adopted tensors skip the scan; with_max_abs attaches a bound.
+        let t = PackedTensor::from_codes(&[3, 0x9C, 7, 0], i8f);
+        let adopted = PackedMatrix::from_tensor(t, 2, 2);
+        assert_eq!(adopted.max_abs(), None);
+        assert_eq!(adopted.with_max_abs(Some(101)).max_abs(), Some(101));
     }
 }

@@ -18,6 +18,12 @@
 //! usable by the f32 path: `i32 -> f32` conversion rounds to nearest, which
 //! is bit-identical to decoding the code to f64 and narrowing — so the
 //! kernel converts panel tiles instead of falling back to packed decode.
+//!
+//! The `i32` build additionally records the weights' actual max-|value|
+//! (the decode pass touches every element anyway), which the GEMM's
+//! value-aware integer fast-path guard consumes when the packed matrix
+//! itself carries no recorded maxima (see
+//! [`super::gemm::int_fast_path_exact_with`]).
 
 use super::packed::{Decoder, PackedMatrix};
 use crate::arith::Format;
@@ -41,14 +47,19 @@ pub struct WeightPanels {
     kc: usize,
     nc: usize,
     data: PanelData,
+    /// Actual max-|value| of INT weights, scanned during the decode pass
+    /// (`None` for FP panels — the integer fast path is INT-only).
+    max_abs: Option<i64>,
 }
 
 impl WeightPanels {
     /// Decode `w` into panels tiled `(kc, nc)`. INT formats produce
-    /// [`PanelData::I32`], FP formats [`PanelData::F32`].
+    /// [`PanelData::I32`] and record the actual max-|value|, FP formats
+    /// [`PanelData::F32`].
     pub fn build(w: &PackedMatrix, kc: usize, nc: usize) -> Self {
         assert!(kc > 0 && nc > 0, "tile sizes must be positive");
         let (k, n) = (w.rows(), w.cols());
+        let mut max_abs = None;
         let data = match w.fmt() {
             Format::Int(_) => {
                 let mut buf = vec![0i32; k * n];
@@ -63,6 +74,8 @@ impl WeightPanels {
                         }
                     }
                 }
+                max_abs =
+                    Some(buf.iter().map(|&v| v.unsigned_abs() as i64).max().unwrap_or(0));
                 PanelData::I32(buf)
             }
             Format::Fp(_) => {
@@ -82,7 +95,14 @@ impl WeightPanels {
                 PanelData::F32(buf)
             }
         };
-        WeightPanels { k, n, kc, nc, data }
+        WeightPanels { k, n, kc, nc, data, max_abs }
+    }
+
+    /// Actual max-|value| recorded at build time for INT panels (`None`
+    /// for FP) — the weight-side bound of the GEMM's value-aware integer
+    /// fast-path guard when the packed matrix carries none itself.
+    pub fn max_abs(&self) -> Option<i64> {
+        self.max_abs
     }
 
     pub fn k(&self) -> usize {
@@ -181,5 +201,20 @@ mod tests {
                 assert_eq!(buf[r * n + c] as f64, w.get(r, c), "({r},{c})");
             }
         }
+        // The build scan recorded the same maximum the pack scan did.
+        assert_eq!(p.max_abs(), w.max_abs());
+        assert!(p.max_abs().is_some());
+    }
+
+    #[test]
+    fn panel_max_abs_matches_data() {
+        let i8f = Format::int(8);
+        // Values {3, -100, 7, 0, 12, -1}: max |v| = 100.
+        let w = PackedMatrix::from_f32(&[3.0, -100.0, 7.0, 0.0, 12.0, -1.0], 3, 2, i8f);
+        let p = WeightPanels::build(&w, 2, 2);
+        assert_eq!(p.max_abs(), Some(100));
+        // FP panels record nothing (integer path is INT-only).
+        let fp = PackedMatrix::from_f32(&[1.0; 6], 3, 2, Format::Fp(FpFormat::FP6_E3M2));
+        assert_eq!(WeightPanels::build(&fp, 2, 2).max_abs(), None);
     }
 }

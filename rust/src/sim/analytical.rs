@@ -170,17 +170,33 @@ pub fn simulate_dataflow(
 }
 
 /// Simulate a whole model forward pass: sum of its GEMMs (each instance
-/// `count` times), best dataflow per GEMM.
+/// `count` times), best dataflow per GEMM. Prefill shapes (no KV-cache
+/// past); see [`simulate_model_with_past`] for decode steps.
 pub fn simulate_model(
     accel: &dyn Accel,
     cfg: &AcceleratorConfig,
     model: &ModelSpec,
     pair: PrecisionPair,
 ) -> ModelReport {
+    simulate_model_with_past(accel, cfg, model, pair, 0)
+}
+
+/// [`simulate_model`] with `past_len` tokens resident in a KV cache: the
+/// attention GEMMs run against `past_len + seq` attendable positions. An
+/// autoregressive decode step is a `seq == 1` spec with `past_len == T` —
+/// its attention then costs the honest `1 × hd × (T+1)` GEMV shapes
+/// instead of a seq=1 self-attention that under-counts the cached past.
+pub fn simulate_model_with_past(
+    accel: &dyn Accel,
+    cfg: &AcceleratorConfig,
+    model: &ModelSpec,
+    pair: PrecisionPair,
+    past_len: usize,
+) -> ModelReport {
     let mut seconds = 0.0;
     let mut counts = EnergyCounts::default();
     let mut per_gemm = Vec::new();
-    for g in model.gemms(pair) {
+    for g in model.gemms(pair, past_len) {
         let r = simulate_gemm(accel, cfg, &g);
         let c = g.count as f64;
         seconds += r.seconds * c;

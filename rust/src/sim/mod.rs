@@ -15,7 +15,9 @@
 pub mod analytical;
 pub mod cycle;
 
-pub use analytical::{simulate_gemm, simulate_model, Dataflow, GemmReport, ModelReport};
+pub use analytical::{
+    simulate_gemm, simulate_model, simulate_model_with_past, Dataflow, GemmReport, ModelReport,
+};
 
 /// Accelerator-scale configuration (paper Table 2).
 #[derive(Debug, Clone, Copy, PartialEq)]

@@ -67,13 +67,21 @@ impl ModelSpec {
         self.d_model / self.heads
     }
 
-    /// Enumerate the GEMMs of one full forward pass (prefill) at the given
-    /// precision pair. Weight×activation GEMMs take `pair.w`/`pair.a`;
+    /// Enumerate the GEMMs of one forward pass at the given precision pair,
+    /// with `past_len` tokens already resident in a KV cache. Prefill is
+    /// `past_len == 0` (the paper's evaluation workload); an autoregressive
+    /// decode step is `seq == 1` with `past_len == T` — its attention then
+    /// simulates honestly as the GEMV shapes `1 × hd × (T+1)` /
+    /// `1 × (T+1) × hd` against the cached past instead of a seq=1
+    /// self-attention that under-counts the dominant cost.
+    /// Weight×activation GEMMs take `pair.w`/`pair.a`;
     /// activation×activation attention GEMMs run both operands at `pair.a`.
-    pub fn gemms(&self, pair: PrecisionPair) -> Vec<Gemm> {
+    pub fn gemms(&self, pair: PrecisionPair, past_len: usize) -> Vec<Gemm> {
         let s = self.seq;
         let d = self.d_model;
         let hd = self.head_dim();
+        // Attendable positions: the cached past plus this pass's own rows.
+        let ctx = past_len + s;
         let mut v = Vec::new();
         // Q projection (full heads) + K/V projections (kv_heads).
         v.push(Gemm {
@@ -85,21 +93,21 @@ impl ModelSpec {
             a_fmt: pair.a,
             w_fmt: pair.w,
         });
-        // Attention score QK^T: per head, [s, hd] x [hd, s].
+        // Attention score QK^T: per head, [s, hd] x [hd, past + s].
         v.push(Gemm {
             kind: GemmKind::AttnScore,
             m: s,
             k: hd,
-            n: s,
+            n: ctx,
             count: self.layers * self.heads,
             a_fmt: pair.a,
             w_fmt: pair.a,
         });
-        // Attention context P×V: per head, [s, s] x [s, hd].
+        // Attention context P×V: per head, [s, past + s] x [past + s, hd].
         v.push(Gemm {
             kind: GemmKind::AttnContext,
             m: s,
-            k: s,
+            k: ctx,
             n: hd,
             count: self.layers * self.heads,
             a_fmt: pair.a,
@@ -140,7 +148,7 @@ impl ModelSpec {
 
     /// GEMMs of the attention block only (Fig 9's validation workload).
     pub fn attention_gemms(&self, pair: PrecisionPair) -> Vec<Gemm> {
-        self.gemms(pair)
+        self.gemms(pair, 0)
             .into_iter()
             .filter(|g| {
                 matches!(g.kind, GemmKind::QkvProj | GemmKind::AttnScore | GemmKind::AttnContext | GemmKind::OutProj)
@@ -150,13 +158,13 @@ impl ModelSpec {
 
     /// Total forward-pass MACs (sanity anchor: GPT-3 prefill ≈ 1e14 FLOPs/2).
     pub fn total_macs(&self, pair: PrecisionPair) -> u64 {
-        self.gemms(pair).iter().map(|g| g.total_macs()).sum()
+        self.gemms(pair, 0).iter().map(|g| g.total_macs()).sum()
     }
 
     /// Total weight parameter count across GEMM weights.
     pub fn weight_params(&self) -> u64 {
         let pair = PrecisionPair::of_bits(16, 16);
-        self.gemms(pair)
+        self.gemms(pair, 0)
             .iter()
             .filter(|g| !matches!(g.kind, GemmKind::AttnScore | GemmKind::AttnContext))
             .map(|g| g.k as u64 * g.n as u64 * g.count as u64)
@@ -286,7 +294,7 @@ mod tests {
 
     #[test]
     fn gemm_kinds_complete() {
-        let g = llama2_7b().gemms(PrecisionPair::of_bits(6, 16));
+        let g = llama2_7b().gemms(PrecisionPair::of_bits(6, 16), 0);
         assert_eq!(g.len(), 6);
         // Weight GEMMs carry the weight format, attention GEMMs don't.
         for gm in &g {
@@ -338,9 +346,42 @@ mod tests {
     #[test]
     fn gqa_shrinks_kv_projection() {
         let l70 = llama2_70b();
-        let g = l70.gemms(PrecisionPair::of_bits(16, 16));
+        let g = l70.gemms(PrecisionPair::of_bits(16, 16), 0);
         let qkv = g.iter().find(|g| g.kind == GemmKind::QkvProj).unwrap();
         // 8 KV heads of 128 dims: N = 8192 + 2*8*128 = 10240.
         assert_eq!(qkv.n, 10240);
+    }
+
+    /// A decode step (seq=1, past T) simulates attention against the cached
+    /// past as GEMV shapes — not a seq=1 self-attention.
+    #[test]
+    fn decode_gemms_attend_the_cached_past() {
+        let pair = PrecisionPair::of_bits(6, 6);
+        let m = ModelSpec { seq: 1, ..llama2_7b() };
+        let past = 2047usize;
+        let g = m.gemms(pair, past);
+        let hd = m.head_dim();
+        let score = g.iter().find(|g| g.kind == GemmKind::AttnScore).unwrap();
+        assert_eq!((score.m, score.k, score.n), (1, hd, past + 1));
+        let ctx = g.iter().find(|g| g.kind == GemmKind::AttnContext).unwrap();
+        assert_eq!((ctx.m, ctx.k, ctx.n), (1, past + 1, hd));
+        // Weight GEMMs are single-row, past-independent.
+        let qkv = g.iter().find(|g| g.kind == GemmKind::QkvProj).unwrap();
+        assert_eq!(qkv.m, 1);
+        // The decode step's attention MACs grow with the past: a seq=1
+        // model with no past under-counts by ~(past+1)x.
+        let no_past = m.gemms(pair, 0);
+        let macs = |v: &[Gemm], kind: GemmKind| {
+            v.iter().find(|g| g.kind == kind).unwrap().total_macs()
+        };
+        assert_eq!(
+            macs(&g, GemmKind::AttnScore),
+            macs(&no_past, GemmKind::AttnScore) * (past as u64 + 1)
+        );
+        // past = 0 reproduces the historical prefill shapes exactly.
+        let prefill = llama2_7b();
+        let hist = prefill.gemms(pair, 0);
+        let score = hist.iter().find(|g| g.kind == GemmKind::AttnScore).unwrap();
+        assert_eq!((score.m, score.k, score.n), (prefill.seq, hd, prefill.seq));
     }
 }

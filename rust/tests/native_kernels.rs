@@ -8,11 +8,12 @@
 //! within f32 accumulation error. Plus: end-to-end serving through
 //! `NativeExecutor` with zero artifacts on disk.
 
-use flexibit::arith::{decode, dot_exact, gemm_ref, Format, FpFormat};
+use flexibit::arith::{decode, dot_exact, gemm_ref, Format, FpFormat, PackedTensor};
 use flexibit::coordinator::{BatchPolicy, Request, Server, ServerConfig, StreamDriver};
 use flexibit::kernels::{
-    extract_codes, gemm, gemm_default, gemm_with_panels, int_fast_path_exact, Decoder, GemmConfig,
-    KvCache, NativeExecutor, NativeModel, PackedMatrix, WeightCache, WeightPanels,
+    extract_codes, gemm, gemm_default, gemm_tiled, gemm_with_panels, int_fast_path_exact,
+    int_fast_path_exact_with, Decoder, GemmConfig, KvCache, NativeExecutor, NativeModel,
+    PackedMatrix, WeightCache, WeightPanels,
 };
 use flexibit::util::{property, Rng};
 use flexibit::workload::{ModelSpec, PrecisionPair};
@@ -399,6 +400,240 @@ fn decode_is_bit_identical_to_full_prefill_recompute() {
             assert_eq!(kv_inc.len(), kv_full.len());
             assert_eq!(kv_inc.bytes(), kv_full.bytes(), "{label}: identical packed KV residency");
         }
+    }
+}
+
+/// **The zero-repack gate**: a multi-step decode (prefill + several decode
+/// steps, MHA and GQA) never takes the K^T extract-and-repack fallback —
+/// the resident transposed layout serves every score GEMM by word
+/// adoption. The oracle path produces bit-identical codes and is the only
+/// thing that moves the counter.
+#[test]
+fn decode_hot_path_never_repacks() {
+    for kv_heads in [4usize, 2, 1] {
+        let spec = ModelSpec {
+            name: "decode-norepack",
+            seq: 16,
+            layers: 2,
+            d_model: 32,
+            d_ff: 48,
+            heads: 4,
+            gated_ffn: false,
+            kv_heads,
+        };
+        let d = spec.d_model;
+        let model = NativeModel::synthesize(spec.clone(), 7);
+        let cache = WeightCache::new();
+        let pair = PrecisionPair::of_bits(6, 6);
+        let mut kv = KvCache::new(&spec, pair.a);
+        let mut rng = Rng::new(0x0E9A + kv_heads as u64);
+        let input: Vec<f32> = (0..8 * d).map(|_| rng.gauss() as f32 * 0.5).collect();
+        model.forward_prefill(&input[..5 * d], pair, &cache, &mut kv);
+        for i in 5..8 {
+            model.forward_decode(&input[i * d..(i + 1) * d], pair, &cache, &mut kv);
+        }
+        assert_eq!(
+            kv.repack_count(),
+            0,
+            "kv_heads={kv_heads}: decode hot path must never repack K^T"
+        );
+        // The resident adoption and the repack oracle agree code-for-code.
+        for li in 0..spec.layers {
+            for h in 0..kv_heads {
+                let fast = kv.k_t_matrix(li, h, kv.len());
+                let slow = kv.k_t_matrix_repacked(li, h, kv.len());
+                assert_eq!((fast.rows(), fast.cols()), (slow.rows(), slow.cols()));
+                assert_eq!(fast.codes(), slow.codes(), "layer {li} head {h}");
+            }
+        }
+        assert_eq!(kv.repack_count(), (spec.layers * kv_heads) as u64);
+    }
+}
+
+/// Speculative rollback under the K^T-resident layout: `truncate` then
+/// re-append is bit-identical to a fresh cache fed the final sequence —
+/// swept across MHA/GQA groupings and word-straddling widths 3, 5, 6, 7
+/// (where stale column-tail bits would corrupt neighbors if truncate or
+/// the scatter-append mishandled the packed layout).
+#[test]
+fn kv_rollback_reappend_matches_fresh_cache() {
+    let widths = [
+        Format::fp(1, 1),               // 3 bits
+        Format::Fp(FpFormat::FP5_E2M2), // 5
+        Format::Fp(FpFormat::FP6_E3M2), // 6
+        Format::fp(3, 3),               // 7
+    ];
+    for kv_heads in [4usize, 2, 1] {
+        let spec = ModelSpec {
+            name: "kv-rollback",
+            seq: 32,
+            layers: 2,
+            d_model: 24,
+            d_ff: 32,
+            heads: 4,
+            gated_ffn: false,
+            kv_heads,
+        };
+        let kv_dim = kv_heads * spec.head_dim();
+        for fmt in widths {
+            let mut rng = Rng::new(0x5EC + kv_heads as u64 + fmt.bits() as u64);
+            let row = |rng: &mut Rng| -> Vec<f32> {
+                (0..kv_dim).map(|_| rng.gauss() as f32 * 0.5).collect()
+            };
+            // Final sequence: 6 kept tokens + 5 re-appended after rollback.
+            let kept: Vec<(Vec<f32>, Vec<f32>)> =
+                (0..6).map(|_| (row(&mut rng), row(&mut rng))).collect();
+            let discarded: Vec<(Vec<f32>, Vec<f32>)> =
+                (0..4).map(|_| (row(&mut rng), row(&mut rng))).collect();
+            let reappended: Vec<(Vec<f32>, Vec<f32>)> =
+                (0..5).map(|_| (row(&mut rng), row(&mut rng))).collect();
+
+            let mut kv = KvCache::new(&spec, fmt);
+            for (k, v) in kept.iter().chain(discarded.iter()) {
+                for li in 0..spec.layers {
+                    kv.append_token(li, k, v);
+                }
+                kv.commit(1);
+            }
+            kv.truncate(kept.len());
+            for (k, v) in &reappended {
+                for li in 0..spec.layers {
+                    kv.append_token(li, k, v);
+                }
+                kv.commit(1);
+            }
+
+            let mut fresh = KvCache::new(&spec, fmt);
+            for (k, v) in kept.iter().chain(reappended.iter()) {
+                for li in 0..spec.layers {
+                    fresh.append_token(li, k, v);
+                }
+                fresh.commit(1);
+            }
+
+            let tokens = kept.len() + reappended.len();
+            assert_eq!(kv.len(), tokens);
+            assert_eq!(kv.bytes(), fresh.bytes(), "{fmt} kv_heads={kv_heads}");
+            for li in 0..spec.layers {
+                for h in 0..kv_heads {
+                    assert_eq!(
+                        kv.k_t_matrix(li, h, tokens).codes(),
+                        fresh.k_t_matrix(li, h, tokens).codes(),
+                        "{fmt} kv_heads={kv_heads} K layer {li} head {h}"
+                    );
+                    assert_eq!(
+                        kv.v_matrix(li, h, tokens).codes(),
+                        fresh.v_matrix(li, h, tokens).codes(),
+                        "{fmt} kv_heads={kv_heads} V layer {li} head {h}"
+                    );
+                }
+            }
+            assert_eq!(kv.repack_count(), 0, "{fmt}: rollback path must stay zero-repack");
+        }
+    }
+}
+
+/// **The value-aware guard's acceptance criterion**: INT8 x INT8 at K=4096
+/// with |values| <= 64 sits exactly on the 2^24 boundary — the recorded
+/// maxima admit the i32 fast path (the format bound rejects it), and the
+/// i32 and f32 paths agree bit-for-bit on the same data at the boundary.
+#[test]
+fn int8_k4096_value_aware_boundary_bit_exact() {
+    let i8f = Format::int(8);
+    let (m, k, n) = (2usize, 4096usize, 8usize);
+    // Guard arithmetic: 4096 * 64 * 64 == 2^24 exactly.
+    assert!(!int_fast_path_exact(i8f, i8f, k), "format bound must reject K=4096");
+    assert!(int_fast_path_exact_with(i8f, i8f, k, Some(64), Some(64)));
+    assert!(!int_fast_path_exact_with(i8f, i8f, k, Some(64), Some(65)));
+
+    let mut rng = Rng::new(0xB0DE);
+    let mut codes = |len: usize, worst: i32| -> Vec<u32> {
+        let mut v: Vec<u32> = (0..len)
+            .map(|_| {
+                let val = rng.below(129) as i32 - 64; // -64 ..= 64
+                (val as i8 as u8) as u32
+            })
+            .collect();
+        // Plant the worst-case magnitude so the recorded max is exactly 64
+        // (or the adversarial 65) and the boundary is actually exercised.
+        v[0] = (worst as i8 as u8) as u32;
+        v
+    };
+    let a_codes = codes(m * k, -64);
+    let w_codes = codes(k * n, 64);
+    let want = gemm_ref(&a_codes, i8f, &w_codes, i8f, m, k, n);
+
+    // Packed with recorded maxima: the kernel takes the i32 fast path.
+    let a = PackedMatrix::from_codes(&a_codes, m, k, i8f);
+    let w = PackedMatrix::from_codes(&w_codes, k, n, i8f);
+    assert_eq!((a.max_abs(), w.max_abs()), (Some(64), Some(64)));
+    assert!(int_fast_path_exact_with(i8f, i8f, k, a.max_abs(), w.max_abs()));
+    assert_eq!(gemm_default(&a, &w), want, "i32 fast path at the boundary");
+
+    // Same words adopted without maxima: the guard falls back to the
+    // format bound, the f32 path runs — and must agree bit-for-bit.
+    let a_blind = PackedMatrix::from_tensor(PackedTensor::from_codes(&a_codes, i8f), m, k);
+    let w_blind = PackedMatrix::from_tensor(PackedTensor::from_codes(&w_codes, i8f), k, n);
+    assert_eq!((a_blind.max_abs(), w_blind.max_abs()), (None, None));
+    assert_eq!(gemm_default(&a_blind, &w_blind), want, "f32 fallback must agree at the boundary");
+
+    // The worst case actually accumulates to 2^24: all-64 x all-64 rows.
+    let a_max = PackedMatrix::from_codes(&vec![64u32; k], 1, k, i8f);
+    let w_max = PackedMatrix::from_codes(&vec![64u32; k * 2], k, 2, i8f);
+    let got = gemm_default(&a_max, &w_max);
+    assert_eq!(got, vec![(1u32 << 24) as f32; 2], "boundary sum is exact in f32");
+
+    // One value beyond the bound (|v| = 65): guard rejects, fallback still
+    // matches the reference.
+    let a65_codes = codes(m * k, 65);
+    let a65 = PackedMatrix::from_codes(&a65_codes, m, k, i8f);
+    assert_eq!(a65.max_abs(), Some(65));
+    assert!(!int_fast_path_exact_with(i8f, i8f, k, a65.max_abs(), w.max_abs()));
+    assert_eq!(
+        gemm_default(&a65, &w),
+        gemm_ref(&a65_codes, i8f, &w_codes, i8f, m, k, n),
+        "out-of-bound data must fall back exactly"
+    );
+}
+
+/// The M=1 GEMV dispatch is bit-identical to the tiled kernel on KV-cache
+/// operands too (strided resident K^T and adopted V), across FP and INT
+/// session formats.
+#[test]
+fn gemv_matches_tiled_on_kv_operands() {
+    let spec = ModelSpec {
+        name: "gemv-kv",
+        seq: 64,
+        layers: 1,
+        d_model: 16,
+        d_ff: 16,
+        heads: 1,
+        gated_ffn: false,
+        kv_heads: 1,
+    };
+    let hd = spec.head_dim();
+    for fmt in [Format::Fp(FpFormat::FP6_E3M2), Format::int(8)] {
+        let mut rng = Rng::new(0x6E3 + fmt.bits() as u64);
+        let mut kv = KvCache::new(&spec, fmt);
+        let tokens = 40usize; // not a power of two, straddles words
+        for _ in 0..tokens {
+            let k_row: Vec<f32> = (0..hd).map(|_| rng.gauss() as f32 * 0.5).collect();
+            let v_row: Vec<f32> = (0..hd).map(|_| rng.gauss() as f32 * 0.5).collect();
+            kv.append_token(0, &k_row, &v_row);
+            kv.commit(1);
+        }
+        let kp = kv.k_t_matrix(0, 0, tokens);
+        let vp = kv.v_matrix(0, 0, tokens);
+        let q: Vec<f32> = (0..hd).map(|_| rng.gauss() as f32 * 0.5).collect();
+        let qp = PackedMatrix::from_f32(&q, 1, hd, fmt);
+        let p: Vec<f32> = (0..tokens).map(|_| rng.gauss() as f32 * 0.1).collect();
+        let pp = PackedMatrix::from_f32(&p, 1, tokens, fmt);
+        let cfg = GemmConfig::default();
+        assert_eq!(gemm(&qp, &kp, &cfg), gemm_tiled(&qp, &kp, &cfg), "{fmt} score GEMV");
+        assert_eq!(gemm(&pp, &vp, &cfg), gemm_tiled(&pp, &vp, &cfg), "{fmt} context GEMV");
+        // And against the repacked-oracle operand (dense layout).
+        let kp_dense = kv.k_t_matrix_repacked(0, 0, tokens);
+        assert_eq!(gemm(&qp, &kp, &cfg), gemm(&qp, &kp_dense, &cfg), "{fmt} strided == dense");
     }
 }
 

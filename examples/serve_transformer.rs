@@ -70,6 +70,7 @@ fn main() {
         policy: BatchPolicy::default(),
         sim_config: flexibit::sim::mobile_a(),
         sim_model: spec.clone(),
+        recorder: flexibit::obs::Recorder::disabled(),
     };
     let server = Server::start(cfg, Box::new(executor));
 
@@ -98,9 +99,12 @@ fn main() {
     println!("  precision switches: {}", m.reconfigurations);
     println!("  wall time:          {wall:.2}s  ({:.1} req/s)", m.throughput_rps(wall));
     println!(
-        "  mean latency:       {:.1} ms (max {:.1} ms)",
+        "  latency:            mean {:.1} ms, p50 {:.1}, p95 {:.1}, p99 {:.1}, max {:.1} ms",
         m.mean_latency_s() * 1e3,
-        m.latency_max_s * 1e3
+        m.latency_p(0.50) * 1e3,
+        m.latency_p(0.95) * 1e3,
+        m.latency_p(0.99) * 1e3,
+        m.latency_max_s() * 1e3
     );
     println!("  host exec time:     {:.2}s", m.host_exec_s);
     println!("== co-simulated FlexiBit accelerator (Mobile-A) ==");
@@ -123,6 +127,7 @@ fn main() {
         policy: BatchPolicy::default(),
         sim_config: flexibit::sim::mobile_a(),
         sim_model: spec.clone(),
+        recorder: flexibit::obs::Recorder::disabled(),
     };
     let server = Server::start(cfg, Box::new(executor));
 
@@ -170,6 +175,11 @@ fn main() {
         "  decode batching:    {} batches (mean size {:.1})",
         m.batches_executed,
         m.mean_batch_size()
+    );
+    println!(
+        "  decode latency:     p50 {:.2} ms, p99 {:.2} ms",
+        m.decode_latency.quantile(0.50) * 1e3,
+        m.decode_latency.quantile(0.99) * 1e3
     );
     println!(
         "  wall time:          {wall:.2}s  ({:.1} steps/s)",

@@ -451,6 +451,7 @@ fn serve_throughput(spec: &ModelSpec, executor: Box<dyn Executor>) -> f64 {
         policy: BatchPolicy::default(),
         sim_config: flexibit::sim::mobile_a(),
         sim_model: spec.clone(),
+        recorder: flexibit::obs::Recorder::disabled(),
     };
     let server = Server::start(cfg, executor);
     let n_requests = 64u64;

@@ -15,6 +15,7 @@
 //! prefill traffic churns the queue.
 
 use super::completion::Completion;
+use crate::obs::{self, Counter};
 use crate::workload::PrecisionPair;
 use std::collections::{HashMap, VecDeque};
 use std::time::{Duration, Instant};
@@ -237,6 +238,7 @@ impl Batcher {
             self.last_key = Some(key.clone());
             self.streak = 1;
         }
+        obs::count(Counter::BatchCut);
         Some(Batch { model: key.0, pair: key.1, requests: taken })
     }
 
@@ -277,10 +279,11 @@ impl Batcher {
         }
         *q = rest;
         self.pending -= taken.len();
-        if !taken.is_empty()
-            && self.last_key.as_ref().is_some_and(|k| k.0 == model && k.1 == pair)
-        {
-            self.streak += 1;
+        if !taken.is_empty() {
+            obs::add(Counter::DecodeAdmit, taken.len() as u64);
+            if self.last_key.as_ref().is_some_and(|k| k.0 == model && k.1 == pair) {
+                self.streak += 1;
+            }
         }
         taken
     }

@@ -174,6 +174,7 @@ mod tests {
             },
             sim_config: crate::sim::mobile_a(),
             sim_model: tiny(),
+            recorder: crate::obs::Recorder::disabled(),
         };
         let server = Server::start(cfg, Box::new(FailSession2Decode));
         let pair = PrecisionPair::of_bits(6, 16);
@@ -206,6 +207,7 @@ mod tests {
         let m = server.shutdown();
         assert_eq!(m.sessions_started, 2);
         assert_eq!(m.decode_steps, steps as u64, "only the healthy stream's steps complete");
-        assert_eq!(m.requests_failed, 1);
+        assert_eq!(m.requests_failed(), 1);
+        assert_eq!(m.requests_failed_exec, 1, "the failure was an executor error");
     }
 }

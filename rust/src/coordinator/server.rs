@@ -13,35 +13,58 @@
 //! the executing (model, pair) key that arrived meanwhile join immediately
 //! (bounded by the fairness streak), so token streams never wait out the
 //! batching budget behind prefill traffic.
+//!
+//! When [`ServerConfig::recorder`] is enabled the worker additionally
+//! traces the serving lifecycle: `request` / `request.queue` /
+//! `request.exec` spans per successful request (queue wait split from
+//! execution) and one `batch.execute` span per executor call whose duration
+//! is exactly the host seconds credited to [`Metrics::host_exec_s`], so the
+//! trace's execute spans sum to the metric. The whole serving loop runs
+//! inside an [`obs::with_current`] scope, which is how the kernel-level
+//! counters and spans (see [`crate::obs`]) reach the same sink without any
+//! executor plumbing.
 
 use super::batcher::{Batch, BatchPolicy, Batcher, Phase, Request};
 use super::completion::RequestResult;
 use crate::baselines::FlexiBitAccel;
+use crate::obs::{self, Histogram, Recorder, SpanEvent, PID_EXEC, PID_REQUEST};
 use crate::sim::{self, AcceleratorConfig};
 use crate::workload::ModelSpec;
 use std::collections::HashMap;
+use std::fmt::Write as _;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Aggregated serving metrics. Completion/latency stats count only requests
 /// whose executor result was `Ok`; failed requests land in
-/// `requests_failed` / `batches_failed` so SLO accounting stays truthful.
+/// [`Metrics::requests_failed_exec`] / [`Metrics::requests_failed_shutdown`]
+/// / `batches_failed` so SLO accounting stays truthful, and they are
+/// excluded from the latency/batch-size histograms and the span stream the
+/// same way.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     pub requests_completed: u64,
     /// Requests whose executor result was an error (individually, or via a
     /// whole-batch failure). Excluded from completion, latency, and
     /// co-simulation stats.
-    pub requests_failed: u64,
+    pub requests_failed_exec: u64,
+    /// Requests settled with an error because the server shut down before
+    /// executing them.
+    pub requests_failed_shutdown: u64,
     pub batches_executed: u64,
     pub batches_failed: u64,
     pub total_batch_size: u64,
     /// Wall-clock execution seconds (host).
     pub host_exec_s: f64,
-    /// Request latency (arrival → completion) sum, for mean latency.
-    pub latency_sum_s: f64,
-    pub latency_max_s: f64,
+    /// Request latency (arrival → completion), successful requests only.
+    /// Carries the exact sum/max plus log-bucketed quantiles (p50/p95/p99).
+    pub latency: Histogram,
+    /// Per-step latency of decode-phase requests (a subset of `latency`).
+    pub decode_latency: Histogram,
+    /// Completed requests per executed batch: `count()` tracks
+    /// `batches_executed`, `sum()` tracks `total_batch_size`.
+    pub batch_size: Histogram,
     /// Simulated accelerator seconds (FlexiBit model).
     pub sim_accel_s: f64,
     /// Simulated accelerator energy (J).
@@ -53,33 +76,150 @@ pub struct Metrics {
     pub decode_steps: u64,
 }
 
+/// The one zero-denominator guard behind every metrics ratio: a mean or
+/// rate over an empty (or degenerate) window is 0, never NaN/inf.
+fn ratio(num: f64, den: f64) -> f64 {
+    if den <= 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
 impl Metrics {
+    /// Requests that failed for any reason (executor error or
+    /// shutdown-settled).
+    pub fn requests_failed(&self) -> u64 {
+        self.requests_failed_exec + self.requests_failed_shutdown
+    }
+
     /// Requests that left the system, successfully or not — the drain
     /// condition for streams that may contain failing batches.
     pub fn requests_finished(&self) -> u64 {
-        self.requests_completed + self.requests_failed
+        self.requests_completed + self.requests_failed()
     }
 
     pub fn mean_latency_s(&self) -> f64 {
-        if self.requests_completed == 0 {
-            0.0
-        } else {
-            self.latency_sum_s / self.requests_completed as f64
-        }
+        ratio(self.latency.sum(), self.latency.count() as f64)
     }
+
+    /// Exact maximum observed request latency.
+    pub fn latency_max_s(&self) -> f64 {
+        self.latency.max()
+    }
+
+    /// Request-latency quantile (e.g. `0.5`, `0.95`, `0.99`) from the
+    /// log-bucketed histogram.
+    pub fn latency_p(&self, q: f64) -> f64 {
+        self.latency.quantile(q)
+    }
+
     pub fn mean_batch_size(&self) -> f64 {
-        if self.batches_executed == 0 {
-            0.0
-        } else {
-            self.total_batch_size as f64 / self.batches_executed as f64
-        }
+        ratio(self.total_batch_size as f64, self.batches_executed as f64)
     }
+
     pub fn throughput_rps(&self, wall_s: f64) -> f64 {
-        if wall_s <= 0.0 {
-            0.0
-        } else {
-            self.requests_completed as f64 / wall_s
+        ratio(self.requests_completed as f64, wall_s)
+    }
+
+    /// Human-readable multi-line summary (the first of the three exporters;
+    /// see also [`Metrics::prometheus_text`] and [`obs::chrome_trace`]).
+    pub fn summary(&self, wall_s: f64) -> String {
+        let ms = 1e3;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "requests: {} completed, {} failed ({} exec / {} shutdown)",
+            self.requests_completed,
+            self.requests_failed(),
+            self.requests_failed_exec,
+            self.requests_failed_shutdown,
+        );
+        let _ = writeln!(
+            out,
+            "batches:  {} executed (mean size {:.2}), {} failed, {} reconfigurations",
+            self.batches_executed,
+            self.mean_batch_size(),
+            self.batches_failed,
+            self.reconfigurations,
+        );
+        let _ = writeln!(
+            out,
+            "latency:  mean {:.3} ms, p50 {:.3}, p95 {:.3}, p99 {:.3}, max {:.3} ms",
+            self.mean_latency_s() * ms,
+            self.latency_p(0.50) * ms,
+            self.latency_p(0.95) * ms,
+            self.latency_p(0.99) * ms,
+            self.latency_max_s() * ms,
+        );
+        if self.decode_steps > 0 {
+            let _ = writeln!(
+                out,
+                "decode:   {} steps ({} sessions), p50 {:.3} ms, p99 {:.3} ms",
+                self.decode_steps,
+                self.sessions_started,
+                self.decode_latency.quantile(0.50) * ms,
+                self.decode_latency.quantile(0.99) * ms,
+            );
         }
+        let _ = writeln!(
+            out,
+            "host:     exec {:.3} s, sim {:.4} s / {:.4} J, {:.1} req/s over {:.3} s wall",
+            self.host_exec_s,
+            self.sim_accel_s,
+            self.sim_energy_j,
+            self.throughput_rps(wall_s),
+            wall_s,
+        );
+        out
+    }
+
+    /// Prometheus text-format dump: serving counters and gauges, summary
+    /// quantiles for the latency/batch-size histograms, and the recorder's
+    /// kernel counters (all-zero from a disabled recorder, so the scrape
+    /// shape is stable).
+    pub fn prometheus_text(&self, recorder: &Recorder, wall_s: f64) -> String {
+        let mut out = String::new();
+        let counters: [(&str, u64); 9] = [
+            ("requests_completed", self.requests_completed),
+            ("requests_failed_exec", self.requests_failed_exec),
+            ("requests_failed_shutdown", self.requests_failed_shutdown),
+            ("batches_executed", self.batches_executed),
+            ("batches_failed", self.batches_failed),
+            ("total_batch_size", self.total_batch_size),
+            ("reconfigurations", self.reconfigurations),
+            ("sessions_started", self.sessions_started),
+            ("decode_steps", self.decode_steps),
+        ];
+        for (name, v) in counters {
+            let _ = writeln!(out, "# TYPE flexibit_{name} counter");
+            let _ = writeln!(out, "flexibit_{name} {v}");
+        }
+        let gauges: [(&str, f64); 4] = [
+            ("host_exec_seconds", self.host_exec_s),
+            ("sim_accel_seconds", self.sim_accel_s),
+            ("sim_energy_joules", self.sim_energy_j),
+            ("throughput_rps", self.throughput_rps(wall_s)),
+        ];
+        for (name, v) in gauges {
+            let _ = writeln!(out, "# TYPE flexibit_{name} gauge");
+            let _ = writeln!(out, "flexibit_{name} {v}");
+        }
+        let hists: [(&str, &Histogram); 3] = [
+            ("request_latency_seconds", &self.latency),
+            ("decode_latency_seconds", &self.decode_latency),
+            ("batch_size", &self.batch_size),
+        ];
+        for (name, h) in hists {
+            let _ = writeln!(out, "# TYPE flexibit_{name} summary");
+            for q in [0.5, 0.95, 0.99] {
+                let _ = writeln!(out, "flexibit_{name}{{quantile=\"{q}\"}} {}", h.quantile(q));
+            }
+            let _ = writeln!(out, "flexibit_{name}_sum {}", h.sum());
+            let _ = writeln!(out, "flexibit_{name}_count {}", h.count());
+        }
+        out.push_str(&obs::prometheus_counters(recorder));
+        out
     }
 }
 
@@ -90,6 +230,10 @@ pub struct ServerConfig {
     pub sim_config: AcceleratorConfig,
     /// Model spec used by the co-simulation (per-token GEMM shapes).
     pub sim_model: ModelSpec,
+    /// Observability sink for spans and kernel counters.
+    /// [`Recorder::disabled`] (the default) reduces every instrumentation
+    /// point to a branch.
+    pub recorder: Recorder,
 }
 
 /// What one executor call produced: host seconds for the whole batch plus
@@ -160,59 +304,76 @@ impl Server {
         let accel = FlexiBitAccel::new();
         let mut executor = executor;
         let worker = std::thread::spawn(move || {
-            // Committed tokens per live session, tracked from the request
-            // stream (prefill row count, +1 per decode step) so all-decode
-            // batches co-simulate against their sessions' actual cached
-            // past. Entries are dropped on Phase::End; a session the
-            // executor evicted leaves a stale usize behind until then.
-            let mut session_tokens: HashMap<u64, usize> = HashMap::new();
-            while !s.load(Ordering::Relaxed) {
-                let maybe = { b.lock().unwrap().next_batch(Instant::now()) };
-                match maybe {
-                    Some(mut batch) => loop {
-                        Self::run_batch(
-                            &batch,
-                            &mut executor,
-                            &b,
-                            &m,
-                            &cfg,
-                            &accel,
-                            &mut session_tokens,
-                        );
-                        if s.load(Ordering::Relaxed) {
-                            break;
+            // The whole serving loop runs with cfg.recorder installed as the
+            // thread's current recorder, so batcher and kernel
+            // instrumentation (obs::count and friends) lands in the same
+            // sink as the request spans without any executor plumbing.
+            let rec = cfg.recorder.clone();
+            obs::with_current(&rec, || {
+                // Committed tokens per live session, tracked from the request
+                // stream (prefill row count, +1 per decode step) so all-decode
+                // batches co-simulate against their sessions' actual cached
+                // past. Entries are dropped on Phase::End; a session the
+                // executor evicted leaves a stale usize behind until then.
+                let mut session_tokens: HashMap<u64, usize> = HashMap::new();
+                while !s.load(Ordering::Relaxed) {
+                    let maybe = { b.lock().unwrap().next_batch(Instant::now()) };
+                    match maybe {
+                        Some(mut batch) => {
+                            // When this batch (round) was formed — the end of
+                            // each admitted request's queue-wait span.
+                            let mut formed = Instant::now();
+                            loop {
+                                Self::run_batch(
+                                    &batch,
+                                    formed,
+                                    &mut executor,
+                                    &b,
+                                    &m,
+                                    &cfg,
+                                    &accel,
+                                    &mut session_tokens,
+                                );
+                                if s.load(Ordering::Relaxed) {
+                                    break;
+                                }
+                                // Continuous admission: decode steps of this hot key
+                                // that arrived while the batch executed join
+                                // immediately — no wait budget, no reconfiguration.
+                                // The batcher counts each round toward the fairness
+                                // streak and refuses once it is exhausted while
+                                // other keys wait, so an endless token stream cannot
+                                // starve them (and keeps its slot when uncontended).
+                                let extra = b.lock().unwrap().admit_decode(
+                                    &batch.model,
+                                    batch.pair,
+                                    cfg.policy.max_batch,
+                                );
+                                if extra.is_empty() {
+                                    break;
+                                }
+                                batch.requests = extra;
+                                formed = Instant::now();
+                            }
                         }
-                        // Continuous admission: decode steps of this hot key
-                        // that arrived while the batch executed join
-                        // immediately — no wait budget, no reconfiguration.
-                        // The batcher counts each round toward the fairness
-                        // streak and refuses once it is exhausted while
-                        // other keys wait, so an endless token stream cannot
-                        // starve them (and keeps its slot when uncontended).
-                        let extra = b.lock().unwrap().admit_decode(
-                            &batch.model,
-                            batch.pair,
-                            cfg.policy.max_batch,
-                        );
-                        if extra.is_empty() {
-                            break;
-                        }
-                        batch.requests = extra;
-                    },
-                    None => std::thread::sleep(Duration::from_micros(200)),
+                        None => std::thread::sleep(Duration::from_micros(200)),
+                    }
                 }
-            }
+            });
         });
         Server { batcher, metrics, stop, worker: Some(worker) }
     }
 
     /// Execute one batch and settle it: fulfill every request's completion
-    /// slot, tally per-request metrics, and keep `session_tokens` (the
-    /// worker's committed-token ledger feeding decode co-simulation)
-    /// current.
+    /// slot, tally per-request metrics, emit lifecycle spans, and keep
+    /// `session_tokens` (the worker's committed-token ledger feeding decode
+    /// co-simulation) current. `formed` is when this batch (round) was cut
+    /// from the queue — the boundary between a request's queue-wait and
+    /// execution spans.
     #[allow(clippy::too_many_arguments)]
     fn run_batch(
         batch: &Batch,
+        formed: Instant,
         executor: &mut Box<dyn Executor>,
         b: &Arc<Mutex<Batcher>>,
         m: &Arc<Mutex<Metrics>>,
@@ -220,13 +381,16 @@ impl Server {
         accel: &FlexiBitAccel,
         session_tokens: &mut HashMap<u64, usize>,
     ) {
+        let rec = &cfg.recorder;
         let t0 = Instant::now();
         match executor.execute(batch) {
             Err(e) => {
                 // A failed batch completed nothing: count every request as
                 // failed, keep them out of completion/latency/co-simulation
-                // stats, and tell each submitter. End requests still retire
-                // their ledger entry — the client is done with the session
+                // stats (and out of the histograms and span stream — a
+                // failed batch emits no spans and adds no host time), and
+                // tell each submitter. End requests still retire their
+                // ledger entry — the client is done with the session
                 // whether or not the executor acknowledged it.
                 for r in &batch.requests {
                     if r.phase == Phase::End {
@@ -237,7 +401,7 @@ impl Server {
                 {
                     let mut met = m.lock().unwrap();
                     met.batches_failed += 1;
-                    met.requests_failed += batch.requests.len() as u64;
+                    met.requests_failed_exec += batch.requests.len() as u64;
                     met.reconfigurations = b.lock().unwrap().reconfigurations;
                 }
                 for r in &batch.requests {
@@ -324,9 +488,11 @@ impl Server {
                         _ => {}
                     }
                 }
+                let host_s = res.host_s.max(done_at.duration_since(t0).as_secs_f64());
+                let mut ok_in_batch = 0u64;
                 let mut met = m.lock().unwrap();
                 met.batches_executed += 1;
-                met.host_exec_s += res.host_s.max(done_at.duration_since(t0).as_secs_f64());
+                met.host_exec_s += host_s;
                 met.sim_accel_s += sim_s;
                 met.sim_energy_j += sim_j;
                 for (r, out) in batch.requests.iter().zip(outputs) {
@@ -338,22 +504,51 @@ impl Server {
                         Ok(_) => {
                             met.requests_completed += 1;
                             met.total_batch_size += 1;
+                            ok_in_batch += 1;
                             let lat = done_at.duration_since(r.arrived).as_secs_f64();
-                            met.latency_sum_s += lat;
-                            met.latency_max_s = met.latency_max_s.max(lat);
+                            met.latency.record(lat);
                             match r.phase {
                                 Phase::Prefill if r.session != 0 => met.sessions_started += 1,
-                                Phase::Decode => met.decode_steps += 1,
+                                Phase::Decode => {
+                                    met.decode_steps += 1;
+                                    met.decode_latency.record(lat);
+                                }
                                 _ => {}
                             }
+                            // Lifecycle spans mirror the scalar stats:
+                            // successful requests only.
+                            if rec.is_enabled() {
+                                emit_request_spans(rec, r, formed, done_at);
+                            }
                         }
-                        Err(_) => met.requests_failed += 1,
+                        Err(_) => met.requests_failed_exec += 1,
                     }
                     if let Some(done) = &r.done {
                         done.fulfill(out);
                     }
                 }
+                met.batch_size.record(ok_in_batch as f64);
                 met.reconfigurations = b.lock().unwrap().reconfigurations;
+                drop(met);
+                // The batch span's duration is exactly the host seconds
+                // credited to host_exec_s, so the trace's batch.execute
+                // spans sum to the metric.
+                if rec.is_enabled() {
+                    rec.span(SpanEvent {
+                        name: "batch.execute",
+                        cat: "serve",
+                        ts_us: rec.us_since_epoch(t0),
+                        dur_us: host_s * 1e6,
+                        pid: PID_EXEC,
+                        tid: obs::thread_tid(),
+                        args: vec![
+                            ("model", batch.model.as_str().into()),
+                            ("pair", batch.pair.label().into()),
+                            ("requests", batch.requests.len().into()),
+                            ("completed", ok_in_batch.into()),
+                        ],
+                    });
+                }
             }
         }
     }
@@ -431,7 +626,7 @@ impl Server {
                 done.fulfill(Err("server shut down before executing this request".into()));
             }
         }
-        self.metrics.lock().unwrap().requests_failed += failed;
+        self.metrics.lock().unwrap().requests_failed_shutdown += failed;
     }
 }
 
@@ -458,6 +653,59 @@ fn prefill_rows(r: &Request, d_model: usize) -> usize {
     }
 }
 
+fn phase_name(p: Phase) -> &'static str {
+    match p {
+        Phase::Prefill => "prefill",
+        Phase::Decode => "decode",
+        Phase::End => "end",
+    }
+}
+
+/// Emit one successful request's lifecycle spans on the request track
+/// (pid [`PID_REQUEST`], tid = request id): the enclosing `request` span
+/// (arrival → completion) plus its `request.queue` (arrival → batch
+/// admission) and `request.exec` (admission → completion) phases, so
+/// queue-wait/batch-formation time reads directly off the trace.
+fn emit_request_spans(rec: &Recorder, r: &Request, formed: Instant, done_at: Instant) {
+    let arrived_us = rec.us_since_epoch(r.arrived);
+    let formed_us = rec.us_since_epoch(formed).max(arrived_us);
+    let done_us = rec.us_since_epoch(done_at).max(formed_us);
+    let phase = phase_name(r.phase);
+    rec.span(SpanEvent {
+        name: "request",
+        cat: "serve",
+        ts_us: arrived_us,
+        dur_us: done_us - arrived_us,
+        pid: PID_REQUEST,
+        tid: r.id,
+        args: vec![
+            ("id", r.id.into()),
+            ("session", r.session.into()),
+            ("phase", phase.into()),
+            ("model", r.model.as_str().into()),
+            ("pair", r.pair.label().into()),
+        ],
+    });
+    rec.span(SpanEvent {
+        name: "request.queue",
+        cat: "serve",
+        ts_us: arrived_us,
+        dur_us: formed_us - arrived_us,
+        pid: PID_REQUEST,
+        tid: r.id,
+        args: vec![("phase", phase.into())],
+    });
+    rec.span(SpanEvent {
+        name: "request.exec",
+        cat: "serve",
+        ts_us: formed_us,
+        dur_us: done_us - formed_us,
+        pid: PID_REQUEST,
+        tid: r.id,
+        args: Vec::new(),
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -477,6 +725,7 @@ mod tests {
             policy: BatchPolicy { max_batch, max_wait: Duration::from_millis(1), max_streak },
             sim_config: crate::sim::mobile_a(),
             sim_model: tiny_model(),
+            recorder: Recorder::disabled(),
         }
     }
 
@@ -535,7 +784,9 @@ mod tests {
         }
         assert!(server.await_finished(12, Duration::from_secs(5)), "stream must drain");
         let m = server.shutdown();
-        assert_eq!(m.requests_failed, 6, "failed batches count as failed");
+        assert_eq!(m.requests_failed(), 6, "failed batches count as failed");
+        assert_eq!(m.requests_failed_exec, 6, "all failures are executor failures");
+        assert_eq!(m.requests_failed_shutdown, 0);
         assert_eq!(m.requests_completed, 6, "successes still complete");
         assert!(m.batches_failed >= 1);
         assert_eq!(m.requests_finished(), 12);
@@ -588,10 +839,16 @@ mod tests {
         }
         assert!(server.await_finished(12, Duration::from_secs(5)));
         let m = server.shutdown();
-        assert_eq!(m.requests_failed, 4, "ids 0,3,6,9 fail");
+        assert_eq!(m.requests_failed(), 4, "ids 0,3,6,9 fail");
         assert_eq!(m.requests_completed, 8);
         assert_eq!(m.batches_failed, 0, "a partial failure is not a batch failure");
         assert_eq!(m.total_batch_size, m.requests_completed);
+        // The histograms track the scalar counters exactly, failed slots
+        // excluded: only the 8 completed requests have latencies, and the
+        // batch-size distribution integrates to (size, count).
+        assert_eq!(m.latency.count(), m.requests_completed);
+        assert_eq!(m.batch_size.count(), m.batches_executed);
+        assert_eq!(m.batch_size.sum(), m.total_batch_size as f64);
         for (i, done) in slots.iter().enumerate() {
             let got = done.poll().expect("resolved");
             if i % 3 == 0 {
@@ -660,15 +917,143 @@ mod tests {
 
     #[test]
     fn metrics_math() {
-        let mut m = Metrics::default();
-        m.requests_completed = 10;
-        m.latency_sum_s = 5.0;
-        m.batches_executed = 5;
-        m.total_batch_size = 10;
+        let mut m = Metrics {
+            requests_completed: 10,
+            batches_executed: 5,
+            total_batch_size: 10,
+            ..Metrics::default()
+        };
+        for _ in 0..10 {
+            m.latency.record(0.5);
+        }
         assert_eq!(m.mean_latency_s(), 0.5);
         assert_eq!(m.mean_batch_size(), 2.0);
         assert_eq!(m.throughput_rps(2.0), 5.0);
+        // p50/p99 and the max come from the histogram now; a constant
+        // series pins all of them to the exact observed value.
+        assert_eq!(m.latency_max_s(), 0.5);
+        assert_eq!(m.latency_p(0.5), 0.5);
+        assert_eq!(m.latency_p(0.99), 0.5);
+        // Every ratio funnels through one zero-denominator guard.
+        let z = Metrics::default();
+        assert_eq!(z.mean_latency_s(), 0.0);
+        assert_eq!(z.mean_batch_size(), 0.0);
+        assert_eq!(z.throughput_rps(0.0), 0.0);
+        assert_eq!(z.throughput_rps(-1.0), 0.0);
+        assert_eq!(z.latency_max_s(), 0.0);
+        assert_eq!(z.latency_p(0.99), 0.0);
         // Avoid unused import warning for bert_base.
         let _ = bert_base();
+    }
+
+    /// Extends `failing_executor_counts_failures_not_completions` to the
+    /// observability layer: histograms and the span stream must exclude
+    /// failed requests exactly as the scalar counters do.
+    #[test]
+    fn failed_requests_stay_out_of_histograms_and_spans() {
+        let rec = Recorder::enabled();
+        let cfg = ServerConfig { recorder: rec.clone(), ..stub_cfg(4, 4) };
+        let server = Server::start(
+            cfg,
+            Box::new(FnExecutor(|b: &Batch| -> Result<f64, String> {
+                if b.pair.w.bits() == 6 {
+                    Err("synthetic executor failure".into())
+                } else {
+                    Ok(0.0)
+                }
+            })),
+        );
+        // Even ids are FP6 (every one fails), odd ids are FP8 (all succeed).
+        for i in 0..12 {
+            server.submit(mk_req(i, if i % 2 == 0 { 6 } else { 8 }));
+        }
+        assert!(server.await_finished(12, Duration::from_secs(5)), "stream must drain");
+        let m = server.shutdown();
+        assert_eq!(m.requests_completed, 6);
+        assert_eq!(m.requests_failed_exec, 6);
+        assert_eq!(m.requests_failed_shutdown, 0);
+        // Histograms mirror the scalar counters exactly.
+        assert_eq!(m.latency.count(), m.requests_completed);
+        assert_eq!(m.batch_size.count(), m.batches_executed);
+        assert_eq!(m.batch_size.sum(), m.total_batch_size as f64);
+        // Span stream: lifecycle spans exist only for successful requests
+        // (tid = request id; the failed ones are the even ids).
+        let evs = rec.events();
+        let req: Vec<_> = evs.iter().filter(|e| e.name == "request").collect();
+        assert_eq!(req.len() as u64, m.requests_completed);
+        assert!(req.iter().all(|e| e.tid % 2 == 1), "no spans for failed (even-id) requests");
+        assert_eq!(evs.iter().filter(|e| e.name == "request.queue").count(), req.len());
+        assert_eq!(evs.iter().filter(|e| e.name == "request.exec").count(), req.len());
+        // batch.execute spans exist only for executed batches and their
+        // durations sum to exactly the host_exec_s metric.
+        let execs: Vec<_> = evs.iter().filter(|e| e.name == "batch.execute").collect();
+        assert_eq!(execs.len() as u64, m.batches_executed);
+        let span_sum_s = execs.iter().map(|e| e.dur_us).sum::<f64>() / 1e6;
+        assert!(
+            (span_sum_s - m.host_exec_s).abs() <= 1e-9 * (1.0 + m.host_exec_s),
+            "batch.execute spans ({span_sum_s}) must sum to host_exec_s ({})",
+            m.host_exec_s
+        );
+        assert_eq!(rec.dropped_events(), 0);
+    }
+
+    /// Requests still queued at shutdown settle as shutdown failures — a
+    /// separate counter from executor failures.
+    #[test]
+    fn shutdown_settles_queued_requests_as_shutdown_failures() {
+        let mut cfg = stub_cfg(8, 4);
+        // A wait budget far beyond the test body: nothing gets executed.
+        cfg.policy.max_wait = Duration::from_secs(30);
+        let server = Server::start(
+            cfg,
+            Box::new(FnExecutor(|_b: &Batch| -> Result<f64, String> { Ok(0.0) })),
+        );
+        let done = Completion::new();
+        server.submit(mk_req(0, 6).with_completion(&done));
+        server.submit(mk_req(1, 6));
+        let m = server.shutdown();
+        assert_eq!(m.requests_completed, 0);
+        assert_eq!(m.requests_failed_shutdown, 2);
+        assert_eq!(m.requests_failed_exec, 0);
+        assert_eq!(m.requests_failed(), 2);
+        assert_eq!(m.requests_finished(), 2);
+        let got = done.poll().expect("settled at shutdown");
+        assert!(got.unwrap_err().contains("shut down"));
+    }
+
+    #[test]
+    fn exporters_render_summary_and_prometheus() {
+        let mut m = Metrics {
+            requests_completed: 3,
+            batches_executed: 2,
+            total_batch_size: 3,
+            decode_steps: 1,
+            host_exec_s: 0.25,
+            ..Metrics::default()
+        };
+        for v in [1e-3, 2e-3, 4e-3] {
+            m.latency.record(v);
+        }
+        m.decode_latency.record(2e-3);
+        m.batch_size.record(1.0);
+        m.batch_size.record(2.0);
+
+        let s = m.summary(0.5);
+        assert!(s.contains("3 completed"), "summary: {s}");
+        assert!(s.contains("p50") && s.contains("p99"));
+        assert!(s.contains("decode:"), "decode line present when steps > 0");
+
+        let rec = Recorder::enabled();
+        rec.count(obs::Counter::KvRepack);
+        let p = m.prometheus_text(&rec, 0.5);
+        assert!(p.contains("flexibit_requests_completed 3"));
+        assert!(p.contains("flexibit_request_latency_seconds{quantile=\"0.99\"}"));
+        assert!(p.contains("flexibit_request_latency_seconds_count 3"));
+        assert!(p.contains("flexibit_batch_size_sum 3"));
+        assert!(p.contains("flexibit_kv_repack_total 1"));
+        // A disabled recorder keeps the scrape shape, all kernel counters 0.
+        let p0 = m.prometheus_text(&Recorder::disabled(), 0.5);
+        assert!(p0.contains("flexibit_kv_repack_total 0"));
+        assert_eq!(p0.lines().count(), p.lines().count());
     }
 }

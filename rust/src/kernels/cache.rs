@@ -30,6 +30,7 @@
 use super::packed::PackedMatrix;
 use super::panels::WeightPanels;
 use crate::arith::Format;
+use crate::obs::{self, Counter};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -214,6 +215,7 @@ impl WeightCache {
         let mut map = self.entries.lock().unwrap();
         if map.get(model).and_then(|inner| inner.get(&w_fmt)).is_some() {
             self.hits.fetch_add(1, Ordering::Relaxed);
+            obs::count(Counter::WeightCacheHit);
             let (wish, have) = {
                 let e = map.get_mut(model).and_then(|inner| inner.get_mut(&w_fmt)).unwrap();
                 e.last_served = tick;
@@ -231,6 +233,7 @@ impl WeightCache {
                 .map(|e| e.panel_bytes)
                 .sum();
             if have < wish && free + have + reclaimable >= wish {
+                obs::count(Counter::PanelRebuild);
                 let e = map.get_mut(model).and_then(|inner| inner.get_mut(&w_fmt)).unwrap();
                 // Release the partial first — its bytes fund the rebuild.
                 self.panel_resident.fetch_sub(e.panel_bytes, Ordering::Relaxed);
@@ -247,6 +250,7 @@ impl WeightCache {
             return map.get(model).and_then(|inner| inner.get(&w_fmt)).unwrap().handle();
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
+        obs::count(Counter::WeightCacheMiss);
         let layers = pack();
 
         // LRU eviction: make room for this entry's full decode by dropping
@@ -290,6 +294,7 @@ impl WeightCache {
                 .min_by_key(|e| e.last_served);
             match victim {
                 Some(e) => {
+                    obs::count(Counter::PanelEvict);
                     self.panel_resident.fetch_sub(e.panel_bytes, Ordering::Relaxed);
                     e.panels = Arc::new(vec![LayerPanels::default(); e.layers.len()]);
                     e.panel_bytes = 0;
@@ -459,53 +464,69 @@ mod tests {
         let fp6 = Format::Fp(FpFormat::FP6_E3M2);
         // Budget fits exactly one model's panels.
         let cache = WeightCache::new().with_panel_budget(DUMMY_PANEL_BYTES);
+        let rec = crate::obs::Recorder::enabled();
+        crate::obs::with_current(&rec, || {
+            let a = cache.get_or_pack("a", fp6, || vec![dummy_layer(fp6)]);
+            assert_eq!(a.panel_bytes(), DUMMY_PANEL_BYTES, "first model decodes fully");
 
-        let a = cache.get_or_pack("a", fp6, || vec![dummy_layer(fp6)]);
-        assert_eq!(a.panel_bytes(), DUMMY_PANEL_BYTES, "first model decodes fully");
+            // Second model saturates the budget: the cold entry (a) loses
+            // its panels, the newcomer takes the fast path.
+            let b = cache.get_or_pack("b", fp6, || vec![dummy_layer(fp6)]);
+            assert_eq!(b.panel_bytes(), DUMMY_PANEL_BYTES);
+            assert_eq!(cache.panel_resident_bytes(), DUMMY_PANEL_BYTES, "budget never exceeded");
+            let a2 = cache.get_or_pack("a", fp6, || unreachable!("must hit"));
+            assert!(Arc::ptr_eq(&a.layers, &a2.layers), "packed storage survives eviction");
+            assert_eq!(a2.panel_bytes(), 0, "cold entry lost its panels");
+            // The handle fetched before eviction still holds its decoded
+            // data (in-flight forwards are never pulled out from under).
+            assert_eq!(a.panel_bytes(), DUMMY_PANEL_BYTES);
 
-        // Second model saturates the budget: the cold entry (a) loses its
-        // panels, the newcomer takes the fast path.
-        let b = cache.get_or_pack("b", fp6, || vec![dummy_layer(fp6)]);
-        assert_eq!(b.panel_bytes(), DUMMY_PANEL_BYTES);
-        assert_eq!(cache.panel_resident_bytes(), DUMMY_PANEL_BYTES, "budget never exceeded");
-        let a2 = cache.get_or_pack("a", fp6, || unreachable!("must hit"));
-        assert!(Arc::ptr_eq(&a.layers, &a2.layers), "packed storage survives eviction");
-        assert_eq!(a2.panel_bytes(), 0, "cold entry lost its panels");
-        // The handle fetched before eviction still holds its decoded data
-        // (in-flight forwards are never pulled out from under).
-        assert_eq!(a.panel_bytes(), DUMMY_PANEL_BYTES);
-
-        // "a" was just served, so it is now the hot entry: a third model
-        // must evict "b" (the cold panel), not "a"... but "a" has no panels
-        // to evict, so serve "a" again first to rebuild — no free room, so
-        // it stays packed-only — then confirm "b" is the victim.
-        let c = cache.get_or_pack("c", fp6, || vec![dummy_layer(fp6)]);
-        assert_eq!(c.panel_bytes(), DUMMY_PANEL_BYTES);
-        let b2 = cache.get_or_pack("b", fp6, || unreachable!("must hit"));
-        assert_eq!(b2.panel_bytes(), 0, "LRU victim was the coldest panel holder");
-        assert_eq!(cache.panel_resident_bytes(), DUMMY_PANEL_BYTES);
+            // "a" was just served, so it is now the hot entry: a third model
+            // must evict "b" (the cold panel), not "a"... but "a" has no
+            // panels to evict, so serve "a" again first to rebuild — no free
+            // room, so it stays packed-only — then confirm "b" is the
+            // victim.
+            let c = cache.get_or_pack("c", fp6, || vec![dummy_layer(fp6)]);
+            assert_eq!(c.panel_bytes(), DUMMY_PANEL_BYTES);
+            let b2 = cache.get_or_pack("b", fp6, || unreachable!("must hit"));
+            assert_eq!(b2.panel_bytes(), 0, "LRU victim was the coldest panel holder");
+            assert_eq!(cache.panel_resident_bytes(), DUMMY_PANEL_BYTES);
+        });
+        // The recorder mirrors the cache's own stats and surfaces the LRU
+        // activity that was previously observable only through panel_bytes.
+        assert_eq!(rec.counter(Counter::WeightCacheMiss), 3);
+        assert_eq!(rec.counter(Counter::WeightCacheHit), 2);
+        assert_eq!(rec.counter(Counter::PanelEvict), 2, "one eviction per budget saturation");
+        assert_eq!(rec.counter(Counter::PanelRebuild), 0, "no rebuild while a hot peer holds");
     }
 
     #[test]
     fn hot_entry_reclaims_panels_from_stale_entry() {
         let fp6 = Format::Fp(FpFormat::FP6_E3M2);
         let cache = WeightCache::new().with_panel_budget(DUMMY_PANEL_BYTES);
-        cache.get_or_pack("a", fp6, || vec![dummy_layer(fp6)]); // tick 1
-        cache.get_or_pack("b", fp6, || vec![dummy_layer(fp6)]); // tick 2, evicts a
-        // Keep serving only "a": once "b" has sat unserved a full
-        // hysteresis, its panels are reclaimed for the hot entry.
-        let mut reclaimed_at = None;
-        for hit in 0..2 * PANEL_LRU_HYSTERESIS {
-            let a = cache.get_or_pack("a", fp6, || unreachable!("must hit"));
-            if a.panel_bytes() > 0 {
-                reclaimed_at = Some(hit);
-                break;
+        let rec = crate::obs::Recorder::enabled();
+        crate::obs::with_current(&rec, || {
+            cache.get_or_pack("a", fp6, || vec![dummy_layer(fp6)]); // tick 1
+            cache.get_or_pack("b", fp6, || vec![dummy_layer(fp6)]); // tick 2, evicts a
+            // Keep serving only "a": once "b" has sat unserved a full
+            // hysteresis, its panels are reclaimed for the hot entry.
+            let mut reclaimed_at = None;
+            for hit in 0..2 * PANEL_LRU_HYSTERESIS {
+                let a = cache.get_or_pack("a", fp6, || unreachable!("must hit"));
+                if a.panel_bytes() > 0 {
+                    reclaimed_at = Some(hit);
+                    break;
+                }
             }
-        }
-        assert!(reclaimed_at.is_some(), "hot entry must reclaim the dead entry's budget");
-        let b = cache.get_or_pack("b", fp6, || unreachable!("must hit"));
-        assert_eq!(b.panel_bytes(), 0, "the stale entry paid for the reclaim");
-        assert_eq!(cache.panel_resident_bytes(), DUMMY_PANEL_BYTES);
+            assert!(reclaimed_at.is_some(), "hot entry must reclaim the dead entry's budget");
+            let b = cache.get_or_pack("b", fp6, || unreachable!("must hit"));
+            assert_eq!(b.panel_bytes(), 0, "the stale entry paid for the reclaim");
+            assert_eq!(cache.panel_resident_bytes(), DUMMY_PANEL_BYTES);
+        });
+        // Exactly one rebuild fired (the reclaim), evicting the stale
+        // entry's panels on top of the miss-path eviction of "a".
+        assert_eq!(rec.counter(Counter::PanelRebuild), 1);
+        assert_eq!(rec.counter(Counter::PanelEvict), 2);
     }
 
     #[test]
@@ -529,12 +550,21 @@ mod tests {
     fn evicted_entry_rebuilds_panels_when_room_frees() {
         let fp6 = Format::Fp(FpFormat::FP6_E3M2);
         let cache = WeightCache::new().with_panel_budget(DUMMY_PANEL_BYTES);
-        cache.get_or_pack("a", fp6, || vec![dummy_layer(fp6)]);
-        cache.get_or_pack("b", fp6, || vec![dummy_layer(fp6)]); // evicts a's panels
-        cache.evict_model("b"); // frees the whole budget
-        assert_eq!(cache.panel_resident_bytes(), 0);
-        let a = cache.get_or_pack("a", fp6, || unreachable!("must hit"));
-        assert_eq!(a.panel_bytes(), DUMMY_PANEL_BYTES, "hit rebuilds panels into free room");
-        assert_eq!(cache.panel_resident_bytes(), DUMMY_PANEL_BYTES);
+        let rec = crate::obs::Recorder::enabled();
+        crate::obs::with_current(&rec, || {
+            cache.get_or_pack("a", fp6, || vec![dummy_layer(fp6)]);
+            cache.get_or_pack("b", fp6, || vec![dummy_layer(fp6)]); // evicts a's panels
+            cache.evict_model("b"); // frees the whole budget
+            assert_eq!(cache.panel_resident_bytes(), 0);
+            let a = cache.get_or_pack("a", fp6, || unreachable!("must hit"));
+            assert_eq!(a.panel_bytes(), DUMMY_PANEL_BYTES, "hit rebuilds panels into free room");
+            assert_eq!(cache.panel_resident_bytes(), DUMMY_PANEL_BYTES);
+        });
+        assert_eq!(rec.counter(Counter::WeightCacheMiss), 2);
+        assert_eq!(rec.counter(Counter::WeightCacheHit), 1);
+        assert_eq!(rec.counter(Counter::PanelRebuild), 1, "free room funds the hit's rebuild");
+        assert_eq!(rec.counter(Counter::PanelEvict), 1, "only the miss-path eviction of \"a\"");
+        // Three full decodes (a, b, a-again) of four panels each.
+        assert_eq!(rec.counter(Counter::PanelBuild), 12);
     }
 }

@@ -48,6 +48,7 @@
 use super::packed::{Decoder, PackedMatrix};
 use super::panels::{PanelData, WeightPanels};
 use crate::arith::Format;
+use crate::obs::{self, Counter};
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -236,10 +237,20 @@ fn gemm_inner(
         return c;
     }
     let int_path = int_fast_path_for(a, w, panels, k);
+    let gemv = allow_gemv && m == 1;
 
-    // Decode-phase shapes (1 x hd x T attention, single-token weight
-    // GEMMs): skip the tile machinery entirely.
-    if allow_gemv && m == 1 {
+    // Dispatch/path facts go to the current observability recorder (a no-op
+    // branch unless the serving loop installed one); the per-GEMM span
+    // honors the recorder's sampling knob so decode-heavy traces stay
+    // bounded.
+    let rec = obs::recorder();
+    rec.count(if gemv { Counter::GemvDispatch } else { Counter::TiledDispatch });
+    rec.count(if int_path { Counter::I32FastPath } else { Counter::F32Path });
+    let span = rec.begin_sampled();
+
+    if gemv {
+        // Decode-phase shapes (1 x hd x T attention, single-token weight
+        // GEMMs): skip the tile machinery entirely.
         SCRATCH.with(|s| {
             let s = &mut *s.borrow_mut();
             if int_path {
@@ -248,36 +259,52 @@ fn gemm_inner(
                 gemv_f32(a, w, panels, &mut c, s);
             }
         });
-        return c;
-    }
-
-    // Panels dictate the tiling when present — their tiles are laid out for
-    // exactly one (kc, nc).
-    let (kc, nc) = match panels {
-        Some(p) => (p.kc(), p.nc()),
-        None => (cfg.kc, cfg.nc),
-    };
-
-    let threads = if cfg.threads > 0 {
-        cfg.threads
-    } else if m * k * n < PARALLEL_MACS_THRESHOLD {
-        1
     } else {
-        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
-    }
-    .clamp(1, m);
-    let rows_per = m.div_ceil(threads);
+        // Panels dictate the tiling when present — their tiles are laid out
+        // for exactly one (kc, nc).
+        let (kc, nc) = match panels {
+            Some(p) => (p.kc(), p.nc()),
+            None => (cfg.kc, cfg.nc),
+        };
 
-    if threads == 1 {
-        gemm_rows(a, w, panels, 0, &mut c, kc, nc, int_path);
-    } else {
-        std::thread::scope(|s| {
-            for (t, c_chunk) in c.chunks_mut(rows_per * n).enumerate() {
-                s.spawn(move || {
-                    gemm_rows(a, w, panels, t * rows_per, c_chunk, kc, nc, int_path);
-                });
-            }
-        });
+        let threads = if cfg.threads > 0 {
+            cfg.threads
+        } else if m * k * n < PARALLEL_MACS_THRESHOLD {
+            1
+        } else {
+            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+        }
+        .clamp(1, m);
+        let rows_per = m.div_ceil(threads);
+
+        if threads == 1 {
+            gemm_rows(a, w, panels, 0, &mut c, kc, nc, int_path);
+        } else {
+            std::thread::scope(|s| {
+                for (t, c_chunk) in c.chunks_mut(rows_per * n).enumerate() {
+                    s.spawn(move || {
+                        gemm_rows(a, w, panels, t * rows_per, c_chunk, kc, nc, int_path);
+                    });
+                }
+            });
+        }
+    }
+    if let Some(t0) = span {
+        rec.end_span(
+            t0,
+            "gemm",
+            "kernel",
+            vec![
+                ("m", m.into()),
+                ("k", k.into()),
+                ("n", n.into()),
+                ("a_fmt", a.fmt().to_string().into()),
+                ("w_fmt", w.fmt().to_string().into()),
+                ("dispatch", if gemv { "gemv" } else { "tiled" }.into()),
+                ("i32_fast_path", int_path.into()),
+                ("panels", panels.is_some().into()),
+            ],
+        );
     }
     c
 }

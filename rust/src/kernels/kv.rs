@@ -41,6 +41,7 @@
 
 use super::packed::{extract_codes, int_code_abs, PackedMatrix};
 use crate::arith::{encode, Format, PackedTensor};
+use crate::obs::{self, Counter};
 use crate::workload::ModelSpec;
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -429,14 +430,17 @@ impl KvCache {
     /// as a strided matrix — exactly like [`KvCache::v_matrix`], no code is
     /// extracted or re-inserted.
     pub fn k_t_matrix(&self, layer: usize, kv_head: usize, tokens: usize) -> PackedMatrix {
+        obs::count(Counter::KvAdopt);
         self.layers[layer].k[kv_head].matrix(tokens)
     }
 
     /// The historical extract-and-repack K^T (dense output matrix).
     /// **Test oracle and fallback only** — each call counts toward
-    /// [`KvCache::repack_count`], which the decode hot path must keep at 0.
+    /// [`KvCache::repack_count`] and the recorder's `kv_repack` counter,
+    /// which the decode hot path must keep at 0.
     /// Bit-identical to [`KvCache::k_t_matrix`] code-for-code.
     pub fn k_t_matrix_repacked(&self, layer: usize, kv_head: usize, tokens: usize) -> PackedMatrix {
+        obs::count(Counter::KvRepack);
         self.repacks.fetch_add(1, Ordering::Relaxed);
         self.layers[layer].k[kv_head].matrix_repacked(tokens)
     }
@@ -445,6 +449,7 @@ impl KvCache {
     /// layer `layer`, KV head `kv_head`. The stream layout is already the
     /// operand layout, so the packed words are adopted without repacking.
     pub fn v_matrix(&self, layer: usize, kv_head: usize, tokens: usize) -> PackedMatrix {
+        obs::count(Counter::KvAdopt);
         let hd = self.head_dim;
         let s = &self.layers[layer].v[kv_head];
         let tensor = PackedTensor::from_words(self.fmt, tokens * hd, s.words_for(tokens * hd));
@@ -498,23 +503,31 @@ mod tests {
         assert_eq!(kv.len(), tokens);
 
         let hd = sp.head_dim();
-        for li in 0..sp.layers {
-            for h in 0..sp.kv_heads {
-                let kt = kv.k_t_matrix(li, h, tokens);
-                assert_eq!((kt.rows(), kt.cols()), (hd, tokens));
-                let vm = kv.v_matrix(li, h, tokens);
-                assert_eq!((vm.rows(), vm.cols()), (tokens, hd));
-                for t in 0..tokens {
-                    for c in 0..hd {
-                        let k_src = k_all[li][t * kv_dim + h * hd + c] as f64;
-                        let v_src = v_all[li][t * kv_dim + h * hd + c] as f64;
-                        let q = |x: f64| decode(encode(x, fmt), fmt);
-                        assert_eq!(kt.get(c, t), q(k_src), "K layer {li} head {h} ({t},{c})");
-                        assert_eq!(vm.get(t, c), q(v_src), "V layer {li} head {h} ({t},{c})");
+        // Run the readback under a recorder: every K/V materialization must
+        // register as a zero-repack adoption on the first-class counters.
+        let rec = crate::obs::Recorder::enabled();
+        obs::with_current(&rec, || {
+            for li in 0..sp.layers {
+                for h in 0..sp.kv_heads {
+                    let kt = kv.k_t_matrix(li, h, tokens);
+                    assert_eq!((kt.rows(), kt.cols()), (hd, tokens));
+                    let vm = kv.v_matrix(li, h, tokens);
+                    assert_eq!((vm.rows(), vm.cols()), (tokens, hd));
+                    for t in 0..tokens {
+                        for c in 0..hd {
+                            let k_src = k_all[li][t * kv_dim + h * hd + c] as f64;
+                            let v_src = v_all[li][t * kv_dim + h * hd + c] as f64;
+                            let q = |x: f64| decode(encode(x, fmt), fmt);
+                            assert_eq!(kt.get(c, t), q(k_src), "K layer {li} head {h} ({t},{c})");
+                            assert_eq!(vm.get(t, c), q(v_src), "V layer {li} head {h} ({t},{c})");
+                        }
                     }
                 }
             }
-        }
+        });
+        let reads = (sp.layers * sp.kv_heads * 2) as u64; // K^T + V per (layer, head)
+        assert_eq!(rec.counter(Counter::KvAdopt), reads, "every read adopts resident words");
+        assert_eq!(rec.counter(Counter::KvRepack), 0, "no read repacks");
         // FP6: 6 bits/element over 2 layers * 2 heads * 2 (K+V) * 5 tokens * hd.
         let elems = sp.layers * sp.kv_heads * 2 * tokens * hd;
         assert_eq!(kv.bytes(), sp.layers * sp.kv_heads * 2 * (tokens * hd * 6).div_ceil(8));
@@ -540,18 +553,27 @@ mod tests {
                 }
                 kv.commit(1);
             }
-            for tokens in [1usize, 63, 64, 65, 70] {
-                for li in 0..sp.layers {
-                    for h in 0..sp.kv_heads {
-                        let fast = kv.k_t_matrix(li, h, tokens);
-                        let slow = kv.k_t_matrix_repacked(li, h, tokens);
-                        assert_eq!((fast.rows(), fast.cols()), (slow.rows(), slow.cols()));
-                        let label = format!("{fmt} layer {li} head {h} tokens {tokens}");
-                        assert_eq!(fast.codes(), slow.codes(), "{label}");
+            let rec = crate::obs::Recorder::enabled();
+            obs::with_current(&rec, || {
+                for tokens in [1usize, 63, 64, 65, 70] {
+                    for li in 0..sp.layers {
+                        for h in 0..sp.kv_heads {
+                            let fast = kv.k_t_matrix(li, h, tokens);
+                            let slow = kv.k_t_matrix_repacked(li, h, tokens);
+                            assert_eq!((fast.rows(), fast.cols()), (slow.rows(), slow.cols()));
+                            let label = format!("{fmt} layer {li} head {h} tokens {tokens}");
+                            assert_eq!(fast.codes(), slow.codes(), "{label}");
+                        }
                     }
                 }
-            }
+            });
             assert!(kv.repack_count() > 0, "oracle calls must be counted");
+            // The recorder sees the same split the module-private hook does:
+            // one adoption per fast read, one repack per oracle call.
+            let reads = (5 * sp.layers * sp.kv_heads) as u64;
+            assert_eq!(rec.counter(Counter::KvAdopt), reads);
+            assert_eq!(rec.counter(Counter::KvRepack), reads);
+            assert_eq!(rec.counter(Counter::KvRepack), kv.repack_count());
         }
     }
 

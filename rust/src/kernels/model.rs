@@ -16,6 +16,7 @@ use super::kv::KvCache;
 use super::packed::PackedMatrix;
 use super::panels::WeightPanels;
 use crate::coordinator::{Batch, BatchResult, Executor, Phase};
+use crate::obs::{self, Counter};
 use crate::util::Rng;
 use crate::workload::{ModelSpec, PrecisionPair};
 use std::collections::HashMap;
@@ -38,7 +39,9 @@ struct LayerWeights {
 
 /// Weight GEMM dispatch: use the cached decoded panels when the budget let
 /// them build, otherwise decode from the packed storage of record —
-/// bit-identical either way.
+/// bit-identical either way. Counted here (weight GEMMs only) so the
+/// panel hit rate is not diluted by activation×activation GEMMs, which
+/// never have panels.
 fn gemm_w(
     a: &PackedMatrix,
     w: &PackedMatrix,
@@ -46,8 +49,14 @@ fn gemm_w(
     cfg: &GemmConfig,
 ) -> Vec<f32> {
     match panels {
-        Some(p) => gemm_with_panels(a, w, p, cfg),
-        None => gemm(a, w, cfg),
+        Some(p) => {
+            obs::count(Counter::PanelGemmHit);
+            gemm_with_panels(a, w, p, cfg)
+        }
+        None => {
+            obs::count(Counter::PanelGemmMiss);
+            gemm(a, w, cfg)
+        }
     }
 }
 
@@ -112,12 +121,18 @@ impl NativeModel {
         let rows = input.len() / d;
         let cached = cache.get_or_pack(self.spec.name, pair.w, || self.pack_layers(pair.w));
 
+        let rec = obs::recorder();
         let mut x = input.to_vec();
-        for (layer, panels) in cached.layers.iter().zip(cached.panels.iter()) {
+        for (li, (layer, panels)) in cached.layers.iter().zip(cached.panels.iter()).enumerate() {
+            let span = rec.begin();
             let attn = self.attention(&rms_norm(&x, d), rows, pair, layer, panels);
             add_in_place(&mut x, &attn);
             let ffn = self.ffn(&rms_norm(&x, d), rows, pair, layer, panels);
             add_in_place(&mut x, &ffn);
+            if let Some(t0) = span {
+                let args = vec![("layer", li.into()), ("rows", rows.into())];
+                rec.end_span(t0, "layer", "model", args);
+            }
         }
         x
     }
@@ -182,12 +197,18 @@ impl NativeModel {
         let rows = input.len() / d;
         let cached = cache.get_or_pack(self.spec.name, pair.w, || self.pack_layers(pair.w));
 
+        let rec = obs::recorder();
         let mut x = input.to_vec();
         for (li, (layer, panels)) in cached.layers.iter().zip(cached.panels.iter()).enumerate() {
+            let span = rec.begin();
             let attn = self.attention_cached(&rms_norm(&x, d), rows, pair, layer, panels, kv, li);
             add_in_place(&mut x, &attn);
             let ffn = self.ffn(&rms_norm(&x, d), rows, pair, layer, panels);
             add_in_place(&mut x, &ffn);
+            if let Some(t0) = span {
+                let args = vec![("layer", li.into()), ("rows", rows.into())];
+                rec.end_span(t0, "layer", "model", args);
+            }
         }
         kv.commit(rows);
         x

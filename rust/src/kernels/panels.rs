@@ -27,6 +27,7 @@
 
 use super::packed::{Decoder, PackedMatrix};
 use crate::arith::Format;
+use crate::obs::{self, Counter};
 
 /// Panel element storage: f32 for FP weight formats, sign-extended i32 for
 /// INT weight formats.
@@ -58,6 +59,7 @@ impl WeightPanels {
     /// [`PanelData::F32`].
     pub fn build(w: &PackedMatrix, kc: usize, nc: usize) -> Self {
         assert!(kc > 0 && nc > 0, "tile sizes must be positive");
+        obs::count(Counter::PanelBuild);
         let (k, n) = (w.rows(), w.cols());
         let mut max_abs = None;
         let data = match w.fmt() {

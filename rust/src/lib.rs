@@ -11,9 +11,11 @@
 //!   workload extraction ([`workload`]), the static control-signal compiler
 //!   ([`compiler`]), the bit-packing unit ([`bitpack`]), a native bit-packed
 //!   GEMM execution engine ([`kernels`]) that serves any precision pair in
-//!   pure Rust, and a serving coordinator ([`coordinator`]) that co-runs an
+//!   pure Rust, a serving coordinator ([`coordinator`]) that co-runs an
 //!   execution backend ([`kernels`] by default, PJRT via [`runtime`] with
-//!   `--features pjrt`) with the simulator.
+//!   `--features pjrt`) with the simulator, and an observability layer
+//!   ([`obs`]) — request/kernel span tracing, hot-path counters, latency
+//!   histograms, and chrome-trace/Prometheus exporters.
 //! * **L2/L1 (python/)** — a JAX transformer block whose GEMMs run through a
 //!   Pallas arbitrary-ExMy dequantize-GEMM kernel, AOT-lowered to HLO text
 //!   artifacts loaded by [`runtime`] (optional; the native engine needs no
@@ -33,6 +35,7 @@ pub mod baselines;
 pub mod energy;
 pub mod area;
 pub mod kernels;
+pub mod obs;
 pub mod coordinator;
 pub mod runtime;
 pub mod report;

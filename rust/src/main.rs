@@ -17,6 +17,7 @@ use flexibit::baselines::{
 };
 use flexibit::coordinator::{BatchPolicy, Request, Server, ServerConfig, StreamDriver};
 use flexibit::kernels::NativeExecutor;
+use flexibit::obs::{self, Recorder, DEFAULT_EVENT_CAPACITY};
 use flexibit::pe::{Pe, PeConfig};
 use flexibit::report::{fmt_j, fmt_s};
 use flexibit::sim::{all_configs, simulate_model};
@@ -35,6 +36,10 @@ fn usage() -> ! {
                  [--decode-steps N]   # N>0: each request becomes a token-stream\n\
                                       # session (causal prefill + N decode steps\n\
                                       # against its KV cache)\n\
+                 [--trace PATH]       # write a chrome://tracing JSON trace of\n\
+                                      # request + kernel spans to PATH\n\
+                 [--trace-sample N]   # record 1-in-N per-GEMM kernel spans\n\
+                                      # (default 1 = all; counters stay exact)\n\
            report\n\
          \n\
          models: Bert-base Llama-2-7b Llama-2-70b GPT-3\n\
@@ -86,6 +91,18 @@ fn cmd_serve(args: &[String]) {
     let decode_steps: u64 =
         arg_value(args, "--decode-steps").and_then(|s| s.parse().ok()).unwrap_or(0);
 
+    // Tracing: `--trace PATH` turns the recorder on and dumps a
+    // chrome://tracing-compatible JSON array on shutdown. `--trace-sample N`
+    // keeps 1-in-N per-GEMM spans (request/layer spans and all counters stay
+    // exact regardless of the sampling rate).
+    let trace_path = arg_value(args, "--trace");
+    let trace_sample: u32 =
+        arg_value(args, "--trace-sample").and_then(|s| s.parse().ok()).unwrap_or(1);
+    let recorder = match &trace_path {
+        Some(_) => Recorder::with_config(DEFAULT_EVENT_CAPACITY, trace_sample),
+        None => Recorder::disabled(),
+    };
+
     let spec = ModelSpec::tiny();
     let executor = NativeExecutor::new()
         .with_panel_budget(panel_budget_mb << 20)
@@ -94,6 +111,7 @@ fn cmd_serve(args: &[String]) {
         policy: BatchPolicy { max_batch, ..Default::default() },
         sim_config: flexibit::sim::mobile_a(),
         sim_model: spec.clone(),
+        recorder: recorder.clone(),
     };
     let server = Server::start(cfg, Box::new(executor));
 
@@ -122,8 +140,13 @@ fn cmd_serve(args: &[String]) {
     let m = server.shutdown();
 
     println!("native serving: {} requests over pairs {pairs_arg}", m.requests_completed);
-    if m.requests_failed > 0 {
-        eprintln!("  {} requests failed (executor errors)", m.requests_failed);
+    if m.requests_failed() > 0 {
+        eprintln!(
+            "  {} requests failed ({} executor errors, {} settled at shutdown)",
+            m.requests_failed(),
+            m.requests_failed_exec,
+            m.requests_failed_shutdown
+        );
     }
     if decode_steps > 0 {
         println!(
@@ -138,11 +161,15 @@ fn cmd_serve(args: &[String]) {
         m.reconfigurations
     );
     println!(
-        "  wall {:.2}s  ({:.1} req/s), mean latency {:.1} ms (max {:.1} ms)",
+        "  wall {:.2}s  ({:.1} req/s), latency mean {:.1} ms  \
+         p50 {:.1}  p95 {:.1}  p99 {:.1}  max {:.1} ms",
         wall,
         m.throughput_rps(wall),
         m.mean_latency_s() * 1e3,
-        m.latency_max_s * 1e3
+        m.latency_p(0.50) * 1e3,
+        m.latency_p(0.95) * 1e3,
+        m.latency_p(0.99) * 1e3,
+        m.latency_max_s() * 1e3
     );
     println!(
         "  host exec {:.2}s; co-simulated FlexiBit: {:.3} ms/batch, {:.3} mJ total",
@@ -150,6 +177,31 @@ fn cmd_serve(args: &[String]) {
         m.sim_accel_s / m.batches_executed.max(1) as f64 * 1e3,
         m.sim_energy_j * 1e3
     );
+    if let Some(path) = &trace_path {
+        // The worker joined at shutdown, so every thread-local span buffer
+        // has drained into the sink — the trace is complete.
+        let events = recorder.events();
+        let exec_span_s: f64 = events
+            .iter()
+            .filter(|e| e.name == "batch.execute")
+            .map(|e| e.dur_us / 1e6)
+            .sum();
+        match std::fs::write(path, obs::chrome_trace(&events)) {
+            Ok(()) => println!(
+                "  trace: {} spans -> {path} (batch.execute sum {:.2}s vs host exec {:.2}s)",
+                events.len(),
+                exec_span_s,
+                m.host_exec_s
+            ),
+            Err(e) => eprintln!("  trace: failed to write {path}: {e}"),
+        }
+        if recorder.dropped_events() > 0 {
+            eprintln!(
+                "  trace: {} spans dropped at the event-buffer capacity",
+                recorder.dropped_events()
+            );
+        }
+    }
     if !drained {
         eprintln!(
             "timed out: only {}/{} requests finished",

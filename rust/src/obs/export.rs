@@ -1,0 +1,165 @@
+//! Trace and metrics exporters (hand-rolled JSON/text; the offline build
+//! has no serde).
+//!
+//! [`chrome_trace`] renders span events in the Trace Event Format's "JSON
+//! array" flavor — a valid JSON array with exactly one event object per
+//! line, so the file loads directly in `chrome://tracing` / Perfetto *and*
+//! stays line-parseable for CI's JSONL-style checks. [`prometheus_counters`]
+//! renders the recorder's kernel counters as Prometheus text-format
+//! counters; the coordinator composes the full scrape text around it.
+
+use super::recorder::{ArgValue, Recorder, SpanEvent, PID_EXEC, PID_REQUEST};
+use std::fmt::Write as _;
+
+/// Render events as a chrome://tracing-loadable JSON array (one event per
+/// line). Process-name metadata events label the execution and request
+/// tracks; all spans are complete events (`"ph":"X"`, timestamps in µs).
+pub fn chrome_trace(events: &[SpanEvent]) -> String {
+    let mut lines: Vec<String> = Vec::with_capacity(events.len() + 2);
+    lines.push(process_name_meta(PID_EXEC, "flexibit exec"));
+    lines.push(process_name_meta(PID_REQUEST, "flexibit requests"));
+    for ev in events {
+        lines.push(event_json(ev));
+    }
+    format!("[\n{}\n]\n", lines.join(",\n"))
+}
+
+fn process_name_meta(pid: u32, name: &str) -> String {
+    format!(
+        "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+         \"args\":{{\"name\":{}}}}}",
+        json_str(name)
+    )
+}
+
+fn event_json(ev: &SpanEvent) -> String {
+    let mut s = String::with_capacity(128);
+    write!(
+        s,
+        "{{\"name\":{},\"cat\":{},\"ph\":\"X\",\"ts\":{:.3},\"dur\":{:.3},\
+         \"pid\":{},\"tid\":{},\"args\":{{",
+        json_str(ev.name),
+        json_str(ev.cat),
+        ev.ts_us,
+        ev.dur_us,
+        ev.pid,
+        ev.tid
+    )
+    .expect("write! to String cannot fail");
+    for (i, (k, v)) in ev.args.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&json_str(k));
+        s.push(':');
+        s.push_str(&json_value(v));
+    }
+    s.push_str("}}");
+    s
+}
+
+fn json_value(v: &ArgValue) -> String {
+    match v {
+        ArgValue::U64(u) => u.to_string(),
+        // JSON has no NaN/Infinity; map them to null rather than emit an
+        // unparseable file.
+        ArgValue::F64(f) if f.is_finite() => format!("{f}"),
+        ArgValue::F64(_) => "null".to_string(),
+        ArgValue::Str(s) => json_str(s),
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Render the recorder's kernel/serving counters in Prometheus text format
+/// (`flexibit_<name>_total`). Counters read 0 from a disabled recorder, so
+/// the scrape shape is stable whether or not tracing is on.
+pub fn prometheus_counters(rec: &Recorder) -> String {
+    let mut out = String::new();
+    for (c, v) in rec.counters() {
+        let _ = writeln!(out, "# TYPE flexibit_{}_total counter", c.name());
+        let _ = writeln!(out, "flexibit_{}_total {v}", c.name());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Counter;
+
+    fn span(name: &'static str) -> SpanEvent {
+        SpanEvent {
+            name,
+            cat: "kernel",
+            ts_us: 1.5,
+            dur_us: 2.25,
+            pid: PID_EXEC,
+            tid: 7,
+            args: vec![("m", 4u64.into()), ("kind", "gemv".into()), ("x", 0.5f64.into())],
+        }
+    }
+
+    #[test]
+    fn chrome_trace_is_one_event_per_line() {
+        let trace = chrome_trace(&[span("gemm"), span("layer")]);
+        assert!(trace.starts_with("[\n"));
+        assert!(trace.ends_with("\n]\n"));
+        let lines: Vec<&str> = trace.lines().collect();
+        // "[", 2 metadata, 2 events, "]".
+        assert_eq!(lines.len(), 6);
+        assert!(lines[1].contains("process_name"));
+        assert!(lines[3].contains("\"name\":\"gemm\""));
+        assert!(lines[3].contains("\"ph\":\"X\""));
+        assert!(lines[3].contains("\"ts\":1.500"));
+        assert!(lines[3].contains("\"kind\":\"gemv\""));
+        assert!(lines[3].ends_with(','), "all but the last event line end with a comma");
+        assert!(!lines[4].ends_with(','));
+    }
+
+    #[test]
+    fn chrome_trace_handles_empty_and_hostile_values() {
+        let trace = chrome_trace(&[]);
+        assert_eq!(trace.lines().count(), 4, "metadata only");
+        assert!(!trace.contains(",\n]"), "no trailing comma before the closing bracket");
+
+        let mut ev = span("g");
+        ev.args = vec![("s", "a\"b\\c\nd".into()), ("nan", f64::NAN.into())];
+        let trace = chrome_trace(&[ev]);
+        assert!(trace.contains("\\\"b\\\\c\\n"), "strings are JSON-escaped");
+        assert!(trace.contains("\"nan\":null"), "non-finite floats become null");
+    }
+
+    #[test]
+    fn prometheus_counters_cover_every_counter() {
+        let rec = Recorder::enabled();
+        rec.add(Counter::KvRepack, 3);
+        let text = prometheus_counters(&rec);
+        assert!(text.contains("flexibit_kv_repack_total 3"));
+        assert!(text.contains("flexibit_gemv_dispatch_total 0"));
+        for c in Counter::ALL {
+            assert!(text.contains(&format!("flexibit_{}_total", c.name())));
+        }
+        // Disabled recorder: same shape, all zeros.
+        let off = prometheus_counters(&Recorder::disabled());
+        assert_eq!(off.lines().count(), text.lines().count());
+    }
+}

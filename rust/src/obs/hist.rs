@@ -1,0 +1,208 @@
+//! Log-bucketed histogram for latency and size distributions.
+//!
+//! `Metrics` used to carry only a sum and a max per latency series, which
+//! cannot answer the questions SLA-aware batching will ask (p95 under load,
+//! tail vs median). [`Histogram`] replaces those fields: values land in
+//! power-of-two buckets, so `record` is one exponent extraction and an array
+//! increment — no allocation, no sort — and quantiles come from a cumulative
+//! walk. Resolution is one octave (a quantile is exact to within ~1.5× of
+//! the true value), which is plenty for latency SLOs spanning nanoseconds
+//! to minutes, and the exact `sum`/`max`/`count` are tracked on the side so
+//! means and maxima stay precise.
+
+/// Exponent of the lower edge of bucket 0: values below 2^-40 (≈ 0.9 ps when
+/// recording seconds) collapse into the first bucket.
+const MIN_EXP: i32 = -40;
+
+/// Bucket count: covers 2^-40 .. 2^56, i.e. sub-picosecond to two-year
+/// latencies in seconds, or counts up to ~7e16 when recording sizes.
+const BUCKETS: usize = 96;
+
+/// A fixed-size, log2-bucketed histogram of non-negative `f64` samples.
+///
+/// Plain (non-atomic) on purpose: every instance in the coordinator lives
+/// inside the `Mutex<Metrics>` the worker already holds when recording, so
+/// atomics would buy nothing. `Clone` gives the usual `Metrics` snapshot
+/// semantics.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: [u64; BUCKETS],
+    count: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { buckets: [0; BUCKETS], count: 0, sum: 0.0, max: 0.0 }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample. Negative values clamp to 0; non-finite values are
+    /// ignored (they would poison `sum`).
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let v = v.max(0.0);
+        self.buckets[bucket_idx(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact sum of recorded samples.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact maximum recorded sample (0 when empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Exact mean (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// The `q`-quantile (`q` in [0, 1]), estimated as the midpoint of the
+    /// bucket holding the `ceil(q·count)`-th sample, capped at the exact
+    /// observed max. Returns 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return bucket_mid(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fold another histogram into this one (bucket-wise add).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+}
+
+fn bucket_idx(v: f64) -> usize {
+    if v <= 0.0 {
+        return 0;
+    }
+    let e = v.log2().floor() as i64 - MIN_EXP as i64;
+    e.clamp(0, BUCKETS as i64 - 1) as usize
+}
+
+/// Arithmetic midpoint of bucket `i`, which covers
+/// `[2^(MIN_EXP+i), 2^(MIN_EXP+i+1))`.
+fn bucket_mid(i: usize) -> f64 {
+    1.5 * 2f64.powi(MIN_EXP + i as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert!(h.is_empty());
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.quantile(0.99), 0.0);
+    }
+
+    #[test]
+    fn exact_stats_are_exact() {
+        let mut h = Histogram::new();
+        for v in [0.5, 1.5, 2.0, 4.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 8.0);
+        assert_eq!(h.mean(), 2.0);
+        assert_eq!(h.max(), 4.0);
+    }
+
+    #[test]
+    fn quantiles_stay_within_one_octave() {
+        let mut h = Histogram::new();
+        // 100 samples at 1 ms, 10 at 100 ms: p50 ~ 1 ms, p99+ ~ 100 ms.
+        for _ in 0..100 {
+            h.record(1e-3);
+        }
+        for _ in 0..10 {
+            h.record(0.1);
+        }
+        let p50 = h.quantile(0.5);
+        assert!((0.5e-3..=2e-3).contains(&p50), "p50 {p50} not within an octave of 1 ms");
+        let p99 = h.quantile(0.99);
+        assert!((0.05..=0.1).contains(&p99), "p99 {p99} not within an octave of 100 ms");
+        // Tail quantiles never exceed the exact observed max.
+        assert!(h.quantile(1.0) <= h.max());
+    }
+
+    #[test]
+    fn degenerate_and_hostile_inputs_are_contained() {
+        let mut h = Histogram::new();
+        h.record(0.0);
+        h.record(-3.0); // clamps to 0
+        h.record(f64::NAN); // ignored
+        h.record(f64::INFINITY); // ignored
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max(), 0.0);
+        // All mass at zero: every quantile is capped at the exact max.
+        assert_eq!(h.quantile(0.5), 0.0);
+        // Far-out-of-range values clamp into the edge buckets.
+        h.record(1e300);
+        assert_eq!(h.count(), 3);
+        assert!(h.quantile(1.0) <= h.max());
+    }
+
+    #[test]
+    fn merge_accumulates_both_sides() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(1.0);
+        b.record(3.0);
+        b.record(5.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.sum(), 9.0);
+        assert_eq!(a.max(), 5.0);
+    }
+}

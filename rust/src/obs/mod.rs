@@ -1,0 +1,38 @@
+//! End-to-end observability: span recorder, kernel counters, latency
+//! histograms, and exporters — zero external dependencies.
+//!
+//! The serving stack historically exposed one flat `Metrics` struct of sums
+//! and maxima, and the kernels' efficiency facts (panel hits, KV repacks,
+//! i32-fast-path admission, GEMV vs tiled dispatch) were visible only to
+//! ad-hoc test asserts. This module is the missing instrumentation layer,
+//! threaded coordinator → executor → kernels:
+//!
+//! * [`Recorder`] — a lock-cheap span/counter recorder: thread-local event
+//!   buffers batch-flushing into an `Arc`-shared bounded sink, fixed-slot
+//!   relaxed-atomic [`Counter`]s, and a 1-in-N sampling knob for per-GEMM
+//!   spans. Kernels reach it through a thread-local current-recorder slot
+//!   ([`with_current`], [`count`], [`recorder`]) so no kernel signature
+//!   changes; disabled (the default), the whole layer is one TLS read and
+//!   one branch per instrumentation point.
+//! * Span taxonomy ([`SpanEvent`]): `request` / `request.queue` /
+//!   `request.exec` per-request lifecycle spans on [`PID_REQUEST`] (tid =
+//!   request id, queue-wait split from execution), `batch.execute` per
+//!   executor call and `layer` / `gemm` kernel spans on [`PID_EXEC`]
+//!   (per-thread tids).
+//! * [`Histogram`] — log2-bucketed latency/size distributions backing the
+//!   coordinator's p50/p95/p99 reporting (exact sum/max on the side).
+//! * Exporters — [`chrome_trace`] (chrome://tracing / Perfetto JSON-array
+//!   trace, one event per line), [`prometheus_counters`] (Prometheus text
+//!   counters; `Metrics::prometheus_text` composes the full scrape), and
+//!   the human-readable `Metrics::summary` in the coordinator.
+
+mod export;
+mod hist;
+mod recorder;
+
+pub use export::{chrome_trace, prometheus_counters};
+pub use hist::Histogram;
+pub use recorder::{
+    add, count, recorder, thread_tid, with_current, ArgValue, Counter, Recorder, SpanEvent,
+    DEFAULT_EVENT_CAPACITY, PID_EXEC, PID_REQUEST,
+};

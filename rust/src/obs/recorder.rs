@@ -1,0 +1,574 @@
+//! The span/counter recorder: thread-local buffers in front of an
+//! `Arc`-shared sink.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Disabled must be near-free.** A [`Recorder`] is an
+//!    `Option<Arc<Sink>>`; the default is `None`, and every operation is a
+//!    single branch before touching anything shared. Kernels reach their
+//!    recorder through a thread-local "current recorder" slot
+//!    ([`with_current`] / [`count`]) so no kernel signature carries an
+//!    observability handle — with tracing off that path is one TLS read and
+//!    one `Option` check, which is what keeps the `--smoke` ns/MAC
+//!    baselines honest.
+//! 2. **Enabled must be lock-cheap.** Counters are fixed-slot relaxed
+//!    atomics (no allocation, no lock). Span events buffer in a
+//!    thread-local `Vec` and batch-flush into the sink's mutex every
+//!    [`FLUSH_THRESHOLD`] events, on [`Recorder::flush`], and on thread
+//!    exit (the TLS buffer flushes from its `Drop`), so the mutex is taken
+//!    once per dozens of spans, not per span.
+//! 3. **Bounded.** The sink holds at most its configured event capacity;
+//!    overflow increments a `dropped` counter instead of growing without
+//!    bound, and per-GEMM spans honor a 1-in-N sampling knob (counters are
+//!    never sampled — they stay exact).
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Chrome-trace process id for execution-side tracks (worker, kernels).
+pub const PID_EXEC: u32 = 1;
+/// Chrome-trace process id for per-request lifecycle tracks (tid = request id).
+pub const PID_REQUEST: u32 = 2;
+
+/// Default sink capacity: enough for long serving runs at sampling 1, small
+/// enough (~tens of MB) to stay harmless if a run forgets to export.
+pub const DEFAULT_EVENT_CAPACITY: usize = 1 << 18;
+
+/// Thread-local span buffers flush into the shared sink at this size.
+const FLUSH_THRESHOLD: usize = 64;
+
+/// First-class hot-path facts, promoted from test-only hooks and ad-hoc
+/// prints. Exact (never sampled), fixed-slot relaxed atomics on the sink.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// Batches cut by the batcher's wait/size policy.
+    BatchCut,
+    /// Decode requests admitted mid-streak by continuous admission.
+    DecodeAdmit,
+    /// GEMMs dispatched to the M=1 GEMV micro-kernel.
+    GemvDispatch,
+    /// GEMMs dispatched to the tiled kernel.
+    TiledDispatch,
+    /// GEMMs admitted to the exact i32 INTxINT fast path.
+    I32FastPath,
+    /// GEMMs on the general f32 path.
+    F32Path,
+    /// Weight-side GEMMs that found decoded panels resident.
+    PanelGemmHit,
+    /// Weight-side GEMMs that fell back to decode-on-the-fly.
+    PanelGemmMiss,
+    /// `WeightCache` lookups served from an existing packed entry.
+    WeightCacheHit,
+    /// `WeightCache` lookups that packed a new entry.
+    WeightCacheMiss,
+    /// Weight panel matrices decoded (per `WeightPanels::build`).
+    PanelBuild,
+    /// Cache entries whose panels were evicted by the LRU budget walk.
+    PanelEvict,
+    /// Hit-path panel rebuilds after an earlier eviction.
+    PanelRebuild,
+    /// KV reads served zero-repack from resident packed words.
+    KvAdopt,
+    /// KV reads that had to repack (slow path; tests pin this to 0 on the
+    /// decode hot path).
+    KvRepack,
+}
+
+impl Counter {
+    pub const COUNT: usize = 15;
+
+    pub const ALL: [Counter; Counter::COUNT] = [
+        Counter::BatchCut,
+        Counter::DecodeAdmit,
+        Counter::GemvDispatch,
+        Counter::TiledDispatch,
+        Counter::I32FastPath,
+        Counter::F32Path,
+        Counter::PanelGemmHit,
+        Counter::PanelGemmMiss,
+        Counter::WeightCacheHit,
+        Counter::WeightCacheMiss,
+        Counter::PanelBuild,
+        Counter::PanelEvict,
+        Counter::PanelRebuild,
+        Counter::KvAdopt,
+        Counter::KvRepack,
+    ];
+
+    /// Stable snake_case name, used verbatim in the Prometheus export.
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::BatchCut => "batch_cut",
+            Counter::DecodeAdmit => "decode_admit",
+            Counter::GemvDispatch => "gemv_dispatch",
+            Counter::TiledDispatch => "tiled_dispatch",
+            Counter::I32FastPath => "i32_fast_path",
+            Counter::F32Path => "f32_path",
+            Counter::PanelGemmHit => "panel_gemm_hit",
+            Counter::PanelGemmMiss => "panel_gemm_miss",
+            Counter::WeightCacheHit => "weight_cache_hit",
+            Counter::WeightCacheMiss => "weight_cache_miss",
+            Counter::PanelBuild => "panel_build",
+            Counter::PanelEvict => "panel_evict",
+            Counter::PanelRebuild => "panel_rebuild",
+            Counter::KvAdopt => "kv_adopt",
+            Counter::KvRepack => "kv_repack",
+        }
+    }
+}
+
+/// A span argument value (chrome-trace `args` entry).
+#[derive(Clone, Debug)]
+pub enum ArgValue {
+    U64(u64),
+    F64(f64),
+    Str(String),
+}
+
+impl From<u64> for ArgValue {
+    fn from(v: u64) -> Self {
+        ArgValue::U64(v)
+    }
+}
+impl From<usize> for ArgValue {
+    fn from(v: usize) -> Self {
+        ArgValue::U64(v as u64)
+    }
+}
+impl From<bool> for ArgValue {
+    fn from(v: bool) -> Self {
+        ArgValue::U64(v as u64)
+    }
+}
+impl From<f64> for ArgValue {
+    fn from(v: f64) -> Self {
+        ArgValue::F64(v)
+    }
+}
+impl From<&str> for ArgValue {
+    fn from(v: &str) -> Self {
+        ArgValue::Str(v.to_string())
+    }
+}
+impl From<String> for ArgValue {
+    fn from(v: String) -> Self {
+        ArgValue::Str(v)
+    }
+}
+
+/// One completed span: a chrome-trace complete event (`"ph":"X"`).
+/// Timestamps are microseconds since the recorder's epoch.
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    pub name: &'static str,
+    /// Category: `"serve"` for request/batch lifecycle, `"model"` for
+    /// per-layer forwards, `"kernel"` for per-GEMM spans.
+    pub cat: &'static str,
+    pub ts_us: f64,
+    pub dur_us: f64,
+    pub pid: u32,
+    pub tid: u64,
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+#[derive(Debug)]
+struct Sink {
+    epoch: Instant,
+    counters: [AtomicU64; Counter::COUNT],
+    events: Mutex<Vec<SpanEvent>>,
+    dropped: AtomicU64,
+    capacity: usize,
+    kernel_sample: u32,
+    sample_seq: AtomicU64,
+}
+
+impl Sink {
+    /// Move a thread-local batch into the shared buffer, dropping (and
+    /// counting) whatever exceeds capacity.
+    fn absorb(&self, batch: &mut Vec<SpanEvent>) {
+        let mut evs = self.events.lock().unwrap();
+        let room = self.capacity.saturating_sub(evs.len());
+        let take = room.min(batch.len());
+        evs.extend(batch.drain(..take));
+        if !batch.is_empty() {
+            self.dropped.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            batch.clear();
+        }
+    }
+}
+
+/// Handle to a shared observability sink. `Clone` is one `Arc` bump;
+/// `Default` is the disabled recorder (every operation a no-op behind a
+/// single branch).
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    sink: Option<Arc<Sink>>,
+}
+
+impl Recorder {
+    /// The no-op recorder (same as `Recorder::default()`).
+    pub fn disabled() -> Self {
+        Recorder::default()
+    }
+
+    /// An enabled recorder with default capacity and no kernel sampling.
+    pub fn enabled() -> Self {
+        Self::with_config(DEFAULT_EVENT_CAPACITY, 1)
+    }
+
+    /// An enabled recorder holding at most `capacity` span events and
+    /// keeping 1 in `kernel_sample` per-GEMM spans (0/1 = keep all).
+    pub fn with_config(capacity: usize, kernel_sample: u32) -> Self {
+        Recorder {
+            sink: Some(Arc::new(Sink {
+                epoch: Instant::now(),
+                counters: std::array::from_fn(|_| AtomicU64::new(0)),
+                events: Mutex::new(Vec::new()),
+                dropped: AtomicU64::new(0),
+                capacity,
+                kernel_sample: kernel_sample.max(1),
+                sample_seq: AtomicU64::new(0),
+            })),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    #[inline]
+    pub fn count(&self, c: Counter) {
+        self.add(c, 1);
+    }
+
+    #[inline]
+    pub fn add(&self, c: Counter, n: u64) {
+        if let Some(s) = &self.sink {
+            s.counters[c as usize].fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Current value of one counter (0 when disabled).
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.sink.as_ref().map_or(0, |s| s.counters[c as usize].load(Ordering::Relaxed))
+    }
+
+    /// Snapshot of all counters in [`Counter::ALL`] order.
+    pub fn counters(&self) -> Vec<(Counter, u64)> {
+        Counter::ALL.iter().map(|&c| (c, self.counter(c))).collect()
+    }
+
+    /// Microseconds since the recorder's epoch (0 when disabled).
+    pub fn now_us(&self) -> f64 {
+        self.sink.as_ref().map_or(0.0, |s| s.epoch.elapsed().as_secs_f64() * 1e6)
+    }
+
+    /// Convert an `Instant` to epoch-relative microseconds (saturating at 0
+    /// for instants predating the recorder).
+    pub fn us_since_epoch(&self, t: Instant) -> f64 {
+        self.sink
+            .as_ref()
+            .map_or(0.0, |s| t.saturating_duration_since(s.epoch).as_secs_f64() * 1e6)
+    }
+
+    /// Start a span: `Some(start timestamp)` when enabled, `None` (skip the
+    /// matching [`Recorder::end_span`]) when disabled.
+    #[inline]
+    pub fn begin(&self) -> Option<f64> {
+        self.sink.as_ref().map(|s| s.epoch.elapsed().as_secs_f64() * 1e6)
+    }
+
+    /// Like [`Recorder::begin`], but honoring the kernel sampling knob:
+    /// with sampling N, only every N-th call starts a span.
+    #[inline]
+    pub fn begin_sampled(&self) -> Option<f64> {
+        let s = self.sink.as_deref()?;
+        if s.kernel_sample > 1
+            && s.sample_seq.fetch_add(1, Ordering::Relaxed) % u64::from(s.kernel_sample) != 0
+        {
+            return None;
+        }
+        Some(s.epoch.elapsed().as_secs_f64() * 1e6)
+    }
+
+    /// Complete a span started with [`Recorder::begin`] /
+    /// [`Recorder::begin_sampled`] on this thread's execution track.
+    pub fn end_span(
+        &self,
+        t0_us: f64,
+        name: &'static str,
+        cat: &'static str,
+        args: Vec<(&'static str, ArgValue)>,
+    ) {
+        if self.sink.is_none() {
+            return;
+        }
+        let dur_us = (self.now_us() - t0_us).max(0.0);
+        self.push(SpanEvent {
+            name,
+            cat,
+            ts_us: t0_us,
+            dur_us,
+            pid: PID_EXEC,
+            tid: thread_tid(),
+            args,
+        });
+    }
+
+    /// Record a fully specified span (for request tracks with explicit
+    /// pid/tid and externally measured times).
+    pub fn span(&self, ev: SpanEvent) {
+        if self.sink.is_some() {
+            self.push(ev);
+        }
+    }
+
+    fn push(&self, ev: SpanEvent) {
+        let sink = self.sink.as_ref().expect("push requires an enabled recorder");
+        LOCAL_BUF.with(|b| {
+            let mut b = b.borrow_mut();
+            match &b.sink {
+                Some(s) if Arc::ptr_eq(s, sink) => {}
+                _ => {
+                    // Buffer was bound to another sink (or none): hand its
+                    // contents over before rebinding.
+                    b.flush();
+                    b.sink = Some(sink.clone());
+                }
+            }
+            b.events.push(ev);
+            if b.events.len() >= FLUSH_THRESHOLD {
+                b.flush();
+            }
+        });
+    }
+
+    /// Flush this thread's buffered events into the sink. Buffers on other
+    /// live threads flush on their own cadence (threshold or thread exit);
+    /// the server worker is joined before its trace is exported, so its
+    /// buffer is always drained by then.
+    pub fn flush(&self) {
+        let Some(sink) = &self.sink else { return };
+        LOCAL_BUF.with(|b| {
+            let mut b = b.borrow_mut();
+            if matches!(&b.sink, Some(s) if Arc::ptr_eq(s, sink)) {
+                b.flush();
+            }
+        });
+    }
+
+    /// Snapshot of all recorded span events (flushes this thread first).
+    pub fn events(&self) -> Vec<SpanEvent> {
+        self.flush();
+        self.sink.as_ref().map_or_else(Vec::new, |s| s.events.lock().unwrap().clone())
+    }
+
+    /// Events discarded because the sink was at capacity.
+    pub fn dropped_events(&self) -> u64 {
+        self.sink.as_ref().map_or(0, |s| s.dropped.load(Ordering::Relaxed))
+    }
+}
+
+struct LocalBuf {
+    sink: Option<Arc<Sink>>,
+    events: Vec<SpanEvent>,
+}
+
+impl LocalBuf {
+    fn flush(&mut self) {
+        if self.events.is_empty() {
+            return;
+        }
+        if let Some(sink) = &self.sink {
+            sink.absorb(&mut self.events);
+        }
+        self.events.clear();
+    }
+}
+
+impl Drop for LocalBuf {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+thread_local! {
+    static LOCAL_BUF: RefCell<LocalBuf> =
+        RefCell::new(LocalBuf { sink: None, events: Vec::new() });
+
+    /// The thread's current recorder (see [`with_current`]). Disabled by
+    /// default, so instrumented kernels cost one TLS read + branch when no
+    /// scope installed one.
+    static CURRENT: RefCell<Recorder> = RefCell::new(Recorder::default());
+
+    static THREAD_TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// Small stable per-thread id for chrome-trace `tid` fields (assigned on
+/// first use, process-unique).
+pub fn thread_tid() -> u64 {
+    THREAD_TID.with(|t| *t)
+}
+
+/// Install `rec` as this thread's current recorder for the duration of `f`.
+///
+/// This is how observability reaches the kernels without threading a handle
+/// through every signature: the server worker wraps its serving loop in one
+/// `with_current` scope, and `PackedMatrix`/`WeightCache`/`KvCache`/GEMM
+/// code calls the free functions ([`count`], [`recorder`]) that read the
+/// slot. Scopes nest; the previous recorder is restored even on unwind.
+/// Threads spawned inside `f` (e.g. scoped GEMM row workers) start with a
+/// disabled recorder — instrumentation sits on the dispatching thread.
+pub fn with_current<R>(rec: &Recorder, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<Recorder>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            if let Some(prev) = self.0.take() {
+                CURRENT.with(|c| *c.borrow_mut() = prev);
+            }
+        }
+    }
+    let prev = CURRENT.with(|c| std::mem::replace(&mut *c.borrow_mut(), rec.clone()));
+    let _restore = Restore(Some(prev));
+    f()
+}
+
+/// Clone of this thread's current recorder (disabled outside any
+/// [`with_current`] scope). Grab once per kernel call when making several
+/// recordings; the clone is an `Arc` bump (or nothing when disabled).
+pub fn recorder() -> Recorder {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+/// Bump `c` on this thread's current recorder. One TLS read and one branch
+/// when disabled.
+#[inline]
+pub fn count(c: Counter) {
+    add(c, 1);
+}
+
+/// Add `n` to `c` on this thread's current recorder.
+#[inline]
+pub fn add(c: Counter, n: u64) {
+    CURRENT.with(|cur| {
+        if let Some(s) = &cur.borrow().sink {
+            s.counters[c as usize].fetch_add(n, Ordering::Relaxed);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let r = Recorder::disabled();
+        assert!(!r.is_enabled());
+        r.count(Counter::KvAdopt);
+        assert_eq!(r.counter(Counter::KvAdopt), 0);
+        assert!(r.begin().is_none());
+        assert!(r.begin_sampled().is_none());
+        assert_eq!(r.now_us(), 0.0);
+        assert!(r.events().is_empty());
+    }
+
+    #[test]
+    fn counters_accumulate_and_snapshot() {
+        let r = Recorder::enabled();
+        r.count(Counter::GemvDispatch);
+        r.add(Counter::GemvDispatch, 2);
+        r.count(Counter::KvRepack);
+        assert_eq!(r.counter(Counter::GemvDispatch), 3);
+        assert_eq!(r.counter(Counter::KvRepack), 1);
+        assert_eq!(r.counter(Counter::PanelEvict), 0);
+        let snap = r.counters();
+        assert_eq!(snap.len(), Counter::COUNT);
+        assert!(snap.contains(&(Counter::GemvDispatch, 3)));
+    }
+
+    #[test]
+    fn spans_buffer_and_flush() {
+        let r = Recorder::enabled();
+        let t0 = r.begin().expect("enabled");
+        r.end_span(t0, "gemm", "kernel", vec![("m", 1u64.into())]);
+        // Below the flush threshold the event sits in the TLS buffer...
+        assert_eq!(r.dropped_events(), 0);
+        let evs = r.events(); // ...and events() flushes this thread.
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].name, "gemm");
+        assert_eq!(evs[0].pid, PID_EXEC);
+        assert!(evs[0].dur_us >= 0.0);
+    }
+
+    #[test]
+    fn thread_exit_flushes_local_buffer() {
+        let r = Recorder::enabled();
+        let r2 = r.clone();
+        std::thread::spawn(move || {
+            let t0 = r2.begin().unwrap();
+            r2.end_span(t0, "layer", "model", Vec::new());
+            // No explicit flush: the TLS buffer's Drop must hand the event
+            // over when this thread exits.
+        })
+        .join()
+        .unwrap();
+        assert_eq!(r.events().len(), 1);
+    }
+
+    #[test]
+    fn capacity_bounds_events_and_counts_drops() {
+        let r = Recorder::with_config(4, 1);
+        for _ in 0..10 {
+            let t0 = r.begin().unwrap();
+            r.end_span(t0, "gemm", "kernel", Vec::new());
+        }
+        r.flush();
+        assert_eq!(r.events().len(), 4);
+        assert_eq!(r.dropped_events(), 6);
+    }
+
+    #[test]
+    fn kernel_sampling_keeps_one_in_n() {
+        let r = Recorder::with_config(1 << 10, 4);
+        let sampled = (0..16).filter(|_| r.begin_sampled().is_some()).count();
+        assert_eq!(sampled, 4, "1-in-4 sampling over 16 calls");
+        // Unsampled spans (request/layer lifecycle) are unaffected.
+        assert!(r.begin().is_some());
+    }
+
+    #[test]
+    fn with_current_installs_and_restores() {
+        let r = Recorder::enabled();
+        assert!(!recorder().is_enabled(), "no current recorder outside a scope");
+        count(Counter::KvAdopt); // no-op outside the scope
+        with_current(&r, || {
+            assert!(recorder().is_enabled());
+            count(Counter::KvAdopt);
+            let inner = Recorder::enabled();
+            with_current(&inner, || {
+                count(Counter::KvAdopt); // lands on `inner`, not `r`
+            });
+            assert_eq!(inner.counter(Counter::KvAdopt), 1);
+            count(Counter::KvAdopt); // back on `r` after the nested scope
+        });
+        assert!(!recorder().is_enabled());
+        assert_eq!(r.counter(Counter::KvAdopt), 2);
+    }
+
+    #[test]
+    fn spawned_threads_do_not_inherit_current() {
+        let r = Recorder::enabled();
+        with_current(&r, || {
+            std::thread::spawn(|| {
+                assert!(!recorder().is_enabled());
+            })
+            .join()
+            .unwrap();
+        });
+    }
+}

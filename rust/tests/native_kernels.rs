@@ -292,6 +292,7 @@ fn server_serves_mixed_precision_natively() {
         },
         sim_config: flexibit::sim::mobile_a(),
         sim_model: spec.clone(),
+        recorder: flexibit::obs::Recorder::disabled(),
     };
     let server = Server::start(cfg, Box::new(executor));
     let pairs = [
@@ -718,6 +719,7 @@ fn served_token_streams_match_offline_decode() {
         policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1), max_streak: 4 },
         sim_config: flexibit::sim::mobile_a(),
         sim_model: spec.clone(),
+        recorder: flexibit::obs::Recorder::disabled(),
     };
     let server = Server::start(cfg, Box::new(executor));
     let session_specs = (0..n_sessions)
@@ -743,7 +745,7 @@ fn served_token_streams_match_offline_decode() {
     let m = server.shutdown();
     assert_eq!(m.sessions_started, n_sessions as u64);
     assert_eq!(m.decode_steps, (n_sessions * steps) as u64);
-    assert_eq!(m.requests_failed, 0);
+    assert_eq!(m.requests_failed(), 0);
     for (si, outs) in got.iter().enumerate() {
         assert_eq!(outs.len(), steps + 1);
         for (k, out) in outs.iter().enumerate() {

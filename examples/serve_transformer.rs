@@ -71,6 +71,7 @@ fn main() {
         sim_config: flexibit::sim::mobile_a(),
         sim_model: spec.clone(),
         recorder: flexibit::obs::Recorder::disabled(),
+        drift: None,
     };
     let server = Server::start(cfg, Box::new(executor));
 
@@ -128,6 +129,7 @@ fn main() {
         sim_config: flexibit::sim::mobile_a(),
         sim_model: spec.clone(),
         recorder: flexibit::obs::Recorder::disabled(),
+        drift: None,
     };
     let server = Server::start(cfg, Box::new(executor));
 

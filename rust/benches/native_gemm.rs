@@ -452,6 +452,7 @@ fn serve_throughput(spec: &ModelSpec, executor: Box<dyn Executor>) -> f64 {
         sim_config: flexibit::sim::mobile_a(),
         sim_model: spec.clone(),
         recorder: flexibit::obs::Recorder::disabled(),
+        drift: None,
     };
     let server = Server::start(cfg, executor);
     let n_requests = 64u64;

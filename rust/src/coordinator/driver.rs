@@ -175,6 +175,7 @@ mod tests {
             sim_config: crate::sim::mobile_a(),
             sim_model: tiny(),
             recorder: crate::obs::Recorder::disabled(),
+            drift: None,
         };
         let server = Server::start(cfg, Box::new(FailSession2Decode));
         let pair = PrecisionPair::of_bits(6, 16);

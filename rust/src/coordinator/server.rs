@@ -27,7 +27,9 @@
 use super::batcher::{Batch, BatchPolicy, Batcher, Phase, Request};
 use super::completion::RequestResult;
 use crate::baselines::FlexiBitAccel;
-use crate::obs::{self, Histogram, Recorder, SpanEvent, PID_EXEC, PID_REQUEST};
+use crate::obs::{
+    self, DriftAudit, DriftBound, Histogram, Recorder, SpanEvent, PID_EXEC, PID_REQUEST,
+};
 use crate::sim::{self, AcceleratorConfig};
 use crate::workload::ModelSpec;
 use std::collections::HashMap;
@@ -62,6 +64,9 @@ pub struct Metrics {
     pub latency: Histogram,
     /// Per-step latency of decode-phase requests (a subset of `latency`).
     pub decode_latency: Histogram,
+    /// Latency of prefill-phase requests, session or stateless (the other
+    /// subset of `latency`) — per-phase SLOs need both tails separately.
+    pub prefill_latency: Histogram,
     /// Completed requests per executed batch: `count()` tracks
     /// `batches_executed`, `sum()` tracks `total_batch_size`.
     pub batch_size: Histogram,
@@ -74,6 +79,11 @@ pub struct Metrics {
     pub sessions_started: u64,
     /// Autoregressive decode steps completed.
     pub decode_steps: u64,
+    /// Sim-vs-measured drift auditor: per-(pair, kind, shape-class) ratio
+    /// histograms joining every executed batch's wall time with its
+    /// co-simulated predicted cost, plus utilization attribution. Every
+    /// executed batch lands here exactly once (audited or skipped).
+    pub drift: DriftAudit,
 }
 
 /// The one zero-denominator guard behind every metrics ratio: a mean or
@@ -152,6 +162,16 @@ impl Metrics {
             self.latency_p(0.99) * ms,
             self.latency_max_s() * ms,
         );
+        if self.prefill_latency.count() > 0 {
+            let _ = writeln!(
+                out,
+                "prefill:  {} requests, p50 {:.3} ms, p95 {:.3}, p99 {:.3} ms",
+                self.prefill_latency.count(),
+                self.prefill_latency.quantile(0.50) * ms,
+                self.prefill_latency.quantile(0.95) * ms,
+                self.prefill_latency.quantile(0.99) * ms,
+            );
+        }
         if self.decode_steps > 0 {
             let _ = writeln!(
                 out,
@@ -162,6 +182,7 @@ impl Metrics {
                 self.decode_latency.quantile(0.99) * ms,
             );
         }
+        out.push_str(&self.drift.summary_lines());
         let _ = writeln!(
             out,
             "host:     exec {:.3} s, sim {:.4} s / {:.4} J, {:.1} req/s over {:.3} s wall",
@@ -174,10 +195,11 @@ impl Metrics {
         out
     }
 
-    /// Prometheus text-format dump: serving counters and gauges, summary
-    /// quantiles for the latency/batch-size histograms, and the recorder's
-    /// kernel counters (all-zero from a disabled recorder, so the scrape
-    /// shape is stable).
+    /// Prometheus text-format dump: serving counters and gauges, full
+    /// cumulative-bucket histograms (plus p50/p95/p99 gauges) for the
+    /// latency/batch-size distributions, the drift auditor's series, and
+    /// the recorder's kernel counters (all-zero from a disabled recorder,
+    /// so the scrape shape is stable).
     pub fn prometheus_text(&self, recorder: &Recorder, wall_s: f64) -> String {
         let mut out = String::new();
         let counters: [(&str, u64); 9] = [
@@ -205,20 +227,103 @@ impl Metrics {
             let _ = writeln!(out, "# TYPE flexibit_{name} gauge");
             let _ = writeln!(out, "flexibit_{name} {v}");
         }
-        let hists: [(&str, &Histogram); 3] = [
+        for (name, h) in self.histograms() {
+            // Full cumulative-bucket histograms (scrapeable: a Prometheus
+            // server can compute any quantile via histogram_quantile) plus
+            // precomputed p50/p95/p99 convenience gauges — a `histogram`
+            // metric cannot carry quantile series under its own name.
+            out.push_str(&obs::prometheus_histogram(name, h));
+            for (suffix, q) in [("p50", 0.5), ("p95", 0.95), ("p99", 0.99)] {
+                let _ = writeln!(out, "# TYPE flexibit_{name}_{suffix} gauge");
+                let _ = writeln!(out, "flexibit_{name}_{suffix} {}", h.quantile(q));
+            }
+        }
+        out.push_str(&self.drift.prometheus_text());
+        out.push_str(&obs::prometheus_counters(recorder));
+        out
+    }
+
+    /// The serving histograms by stable export name.
+    fn histograms(&self) -> [(&'static str, &Histogram); 4] {
+        [
             ("request_latency_seconds", &self.latency),
+            ("prefill_latency_seconds", &self.prefill_latency),
             ("decode_latency_seconds", &self.decode_latency),
             ("batch_size", &self.batch_size),
-        ];
-        for (name, h) in hists {
-            let _ = writeln!(out, "# TYPE flexibit_{name} summary");
-            for q in [0.5, 0.95, 0.99] {
-                let _ = writeln!(out, "flexibit_{name}{{quantile=\"{q}\"}} {}", h.quantile(q));
-            }
-            let _ = writeln!(out, "flexibit_{name}_sum {}", h.sum());
-            let _ = writeln!(out, "flexibit_{name}_count {}", h.count());
-        }
-        out.push_str(&obs::prometheus_counters(recorder));
+        ]
+    }
+
+    /// The standalone drift-report exporter: the auditor's JSON (schema
+    /// `flexibit.drift.v1`) — per-key measured/predicted ratio stats,
+    /// violations against the configured bound, utilization attribution.
+    pub fn drift_report(&self) -> String {
+        self.drift.report_json()
+    }
+
+    /// Machine-readable serving report (JSON object, schema
+    /// `flexibit.metrics.v1`): the same shape `loadgen` embeds in its own
+    /// report, written standalone by `serve --metrics-out`.
+    pub fn report_json(&self, wall_s: f64) -> String {
+        format!("{{\"schema\":\"flexibit.metrics.v1\",{}}}", self.report_fields(wall_s))
+    }
+
+    /// The inner fields of [`Metrics::report_json`], without the enclosing
+    /// braces/schema — shared so `loadgen` can wrap them with its scenario
+    /// echo and token accounting while staying byte-compatible on the
+    /// common part.
+    pub fn report_fields(&self, wall_s: f64) -> String {
+        use crate::obs::json_num as n;
+        let phase = |h: &Histogram| {
+            format!(
+                "{{\"count\":{},\"goodput_rps\":{},\"mean_ms\":{},\"p50_ms\":{},\
+                 \"p95_ms\":{},\"p99_ms\":{},\"max_ms\":{}}}",
+                h.count(),
+                n(ratio(h.count() as f64, wall_s)),
+                n(h.mean() * 1e3),
+                n(h.quantile(0.50) * 1e3),
+                n(h.quantile(0.95) * 1e3),
+                n(h.quantile(0.99) * 1e3),
+                n(h.max() * 1e3),
+            )
+        };
+        let mut out = String::new();
+        let _ = write!(out, "\"wall_s\":{},", n(wall_s));
+        let _ = write!(
+            out,
+            "\"requests\":{{\"completed\":{},\"failed_exec\":{},\"failed_shutdown\":{},\
+             \"sessions_started\":{},\"decode_steps\":{}}},",
+            self.requests_completed,
+            self.requests_failed_exec,
+            self.requests_failed_shutdown,
+            self.sessions_started,
+            self.decode_steps,
+        );
+        let _ = write!(
+            out,
+            "\"phases\":{{\"all\":{},\"prefill\":{},\"decode\":{}}},",
+            phase(&self.latency),
+            phase(&self.prefill_latency),
+            phase(&self.decode_latency),
+        );
+        let _ = write!(
+            out,
+            "\"batches\":{{\"executed\":{},\"failed\":{},\"mean_size\":{},\
+             \"reconfigurations\":{}}},",
+            self.batches_executed,
+            self.batches_failed,
+            n(self.mean_batch_size()),
+            self.reconfigurations,
+        );
+        let _ = write!(
+            out,
+            "\"host\":{{\"exec_s\":{},\"sim_accel_s\":{},\"sim_energy_j\":{},\
+             \"throughput_rps\":{}}},",
+            n(self.host_exec_s),
+            n(self.sim_accel_s),
+            n(self.sim_energy_j),
+            n(self.throughput_rps(wall_s)),
+        );
+        let _ = write!(out, "\"drift\":{}", self.drift.report_json());
         out
     }
 }
@@ -234,6 +339,11 @@ pub struct ServerConfig {
     /// [`Recorder::disabled`] (the default) reduces every instrumentation
     /// point to a branch.
     pub recorder: Recorder,
+    /// Drift gate: when set, every audited batch's measured/predicted
+    /// ratio is checked against the bound and violations are counted (and
+    /// logged) — the server fails loudly when the analytical model and the
+    /// measured hot path diverge. `None` audits without gating.
+    pub drift: Option<DriftBound>,
 }
 
 /// What one executor call produced: host seconds for the whole batch plus
@@ -296,6 +406,9 @@ impl Server {
     pub fn start(cfg: ServerConfig, executor: Box<dyn Executor>) -> Self {
         let batcher = Arc::new(Mutex::new(Batcher::new(cfg.policy)));
         let metrics = Arc::new(Mutex::new(Metrics::default()));
+        // The drift gate lives inside the auditor so Metrics snapshots and
+        // reports carry the bound they were judged against.
+        metrics.lock().unwrap().drift.bound = cfg.drift.clone();
         let stop = Arc::new(AtomicBool::new(false));
 
         let b = batcher.clone();
@@ -382,6 +495,11 @@ impl Server {
         session_tokens: &mut HashMap<u64, usize>,
     ) {
         let rec = &cfg.recorder;
+        // Per-category span-duration snapshot: the executor runs on this
+        // thread, and layer/gemm spans complete (and accumulate) on the
+        // recording thread synchronously, so the delta across the call is
+        // exactly this batch's recorded kernel/layer time.
+        let (kernel0_s, model0_s) = (rec.span_dur_s("kernel"), rec.span_dur_s("model"));
         let t0 = Instant::now();
         match executor.execute(batch) {
             Err(e) => {
@@ -418,38 +536,54 @@ impl Server {
                 outputs.resize_with(batch.requests.len(), || {
                     Err("executor returned no result for this request".into())
                 });
-                // Co-simulation: estimate FlexiBit latency/energy for this
-                // batch. An all-decode batch is a batch of single-token
-                // forwards: each successful step simulates at seq=1 against
-                // its session's actual cached past, so attention costs the
-                // honest `1 × hd × (T+1)` GEMV shapes instead of a seq=1
-                // self-attention that ignores the cache. Prefill and mixed
-                // batches keep the full-seq estimate.
-                let all_decode =
-                    !batch.requests.is_empty()
-                        && batch.requests.iter().all(|r| r.phase == Phase::Decode);
+                // Co-simulation: the predicted accelerator cost of exactly
+                // the work that succeeded, summed per request. A decode
+                // step simulates at seq=1 against its session's cached past
+                // (honest `1 × hd × (T+1)` GEMV attention shapes via the
+                // ledger); a prefill simulates at its *actual* row count —
+                // not the configured spec seq — so the predicted cost
+                // scales with the batch's real token content the same way
+                // the measured cost does (this is what makes the drift
+                // ratio meaningful per shape class). End control requests
+                // and failed requests predict 0: they execute no model
+                // work / are excluded from every other stat too.
                 let (mut sim_s, mut sim_j) = (0.0f64, 0.0f64);
-                if all_decode {
-                    let decode_model = ModelSpec { seq: 1, ..cfg.sim_model.clone() };
-                    for (r, out) in batch.requests.iter().zip(outputs.iter()) {
-                        if out.is_ok() {
-                            let past = session_tokens.get(&r.session).copied().unwrap_or(0);
-                            let rep = sim::simulate_model_with_past(
-                                accel,
-                                &cfg.sim_config,
-                                &decode_model,
-                                batch.pair,
-                                past,
-                            );
-                            sim_s += rep.seconds;
-                            sim_j += rep.energy_j;
+                let (mut n_prefill, mut n_decode, mut n_failed) = (0u64, 0u64, 0u64);
+                let mut tokens = 0u64;
+                for (r, out) in batch.requests.iter().zip(outputs.iter()) {
+                    if r.phase == Phase::End {
+                        continue;
+                    }
+                    if out.is_err() {
+                        n_failed += 1;
+                        continue;
+                    }
+                    let (seq, past) = match r.phase {
+                        Phase::Decode => {
+                            (1, session_tokens.get(&r.session).copied().unwrap_or(0))
+                        }
+                        _ => (prefill_rows(r, cfg.sim_model.d_model).max(1), 0),
+                    };
+                    let model = ModelSpec { seq, ..cfg.sim_model.clone() };
+                    let rep = sim::simulate_model_with_past(
+                        accel,
+                        &cfg.sim_config,
+                        &model,
+                        batch.pair,
+                        past,
+                    );
+                    sim_s += rep.seconds;
+                    sim_j += rep.energy_j;
+                    match r.phase {
+                        Phase::Decode => {
+                            n_decode += 1;
+                            tokens += 1;
+                        }
+                        _ => {
+                            n_prefill += 1;
+                            tokens += seq as u64;
                         }
                     }
-                } else {
-                    let rep =
-                        sim::simulate_model(accel, &cfg.sim_config, &cfg.sim_model, batch.pair);
-                    sim_s = rep.seconds;
-                    sim_j = rep.energy_j;
                 }
                 // Session-length ledger: prefill (re)starts a session at its
                 // row count, each decode step commits one more token, End
@@ -508,7 +642,12 @@ impl Server {
                             let lat = done_at.duration_since(r.arrived).as_secs_f64();
                             met.latency.record(lat);
                             match r.phase {
-                                Phase::Prefill if r.session != 0 => met.sessions_started += 1,
+                                Phase::Prefill => {
+                                    met.prefill_latency.record(lat);
+                                    if r.session != 0 {
+                                        met.sessions_started += 1;
+                                    }
+                                }
                                 Phase::Decode => {
                                     met.decode_steps += 1;
                                     met.decode_latency.record(lat);
@@ -529,10 +668,37 @@ impl Server {
                 }
                 met.batch_size.record(ok_in_batch as f64);
                 met.reconfigurations = b.lock().unwrap().reconfigurations;
+                // Drift audit: exactly one entry — audited or skipped — per
+                // executed batch. The dispatch kind partitions populations
+                // whose host cost scales differently; a batch with any
+                // failed request is skipped outright (its measured wall
+                // covers work the co-sim excludes), and End-only batches
+                // skip via tokens == 0.
+                let kind = match (n_prefill > 0, n_decode > 0) {
+                    (true, false) => "prefill",
+                    (false, true) => "decode",
+                    (true, true) => "mixed",
+                    (false, false) => "none",
+                };
+                let (gemm_s, layer_s) = (
+                    (rec.span_dur_s("kernel") - kernel0_s).max(0.0),
+                    (rec.span_dur_s("model") - model0_s).max(0.0),
+                );
+                met.drift.attribute(host_s, rec.is_enabled().then_some((gemm_s, layer_s)));
+                let violation = if n_failed > 0 {
+                    met.drift.note_skipped();
+                    None
+                } else {
+                    met.drift.observe(&batch.pair.label(), kind, tokens, host_s, sim_s)
+                };
                 drop(met);
+                if let Some(v) = &violation {
+                    eprintln!("{v} (model '{}')", batch.model);
+                }
                 // The batch span's duration is exactly the host seconds
                 // credited to host_exec_s, so the trace's batch.execute
-                // spans sum to the metric.
+                // spans sum to the metric; the per-batch utilization split
+                // (child-span deltas) rides along as args.
                 if rec.is_enabled() {
                     rec.span(SpanEvent {
                         name: "batch.execute",
@@ -546,6 +712,11 @@ impl Server {
                             ("pair", batch.pair.label().into()),
                             ("requests", batch.requests.len().into()),
                             ("completed", ok_in_batch.into()),
+                            ("kind", kind.into()),
+                            ("tokens", tokens.into()),
+                            ("sim_s", sim_s.into()),
+                            ("gemm_s", gemm_s.into()),
+                            ("layer_s", layer_s.into()),
                         ],
                     });
                 }
@@ -726,6 +897,7 @@ mod tests {
             sim_config: crate::sim::mobile_a(),
             sim_model: tiny_model(),
             recorder: Recorder::disabled(),
+            drift: None,
         }
     }
 
@@ -1047,13 +1219,100 @@ mod tests {
         rec.count(obs::Counter::KvRepack);
         let p = m.prometheus_text(&rec, 0.5);
         assert!(p.contains("flexibit_requests_completed 3"));
-        assert!(p.contains("flexibit_request_latency_seconds{quantile=\"0.99\"}"));
+        // Real cumulative-bucket histograms plus quantile gauges.
+        assert!(p.contains("# TYPE flexibit_request_latency_seconds histogram"));
+        assert!(p.contains("flexibit_request_latency_seconds_bucket{le=\"+Inf\"} 3"));
+        assert!(p.contains("flexibit_request_latency_seconds_p99 "));
         assert!(p.contains("flexibit_request_latency_seconds_count 3"));
+        assert!(p.contains("flexibit_prefill_latency_seconds_count 0"));
         assert!(p.contains("flexibit_batch_size_sum 3"));
+        assert!(p.contains("flexibit_drift_audited_batches 0"));
         assert!(p.contains("flexibit_kv_repack_total 1"));
         // A disabled recorder keeps the scrape shape, all kernel counters 0.
         let p0 = m.prometheus_text(&Recorder::disabled(), 0.5);
         assert!(p0.contains("flexibit_kv_repack_total 0"));
         assert_eq!(p0.lines().count(), p.lines().count());
+
+        // The machine-readable report carries the same numbers and is
+        // parseable by the dumbest possible check: balanced and keyed.
+        let j = m.report_json(0.5);
+        assert!(j.starts_with("{\"schema\":\"flexibit.metrics.v1\","));
+        assert!(j.contains("\"completed\":3"));
+        assert!(j.contains("\"phases\":{\"all\":{\"count\":3"));
+        assert!(j.contains("\"drift\":{"));
+        assert_eq!(
+            j.matches('{').count(),
+            j.matches('}').count(),
+            "balanced braces: {j}"
+        );
+    }
+
+    /// The drift auditor joins every executed batch with its co-simulated
+    /// cost: audited + skipped must equal batches_executed, and a batch
+    /// with a failed slot is skipped (its measured time covers work the
+    /// co-sim excludes).
+    #[test]
+    fn drift_audit_covers_every_executed_batch() {
+        let server = Server::start(
+            stub_cfg(4, 4),
+            // Nonzero, token-proportional measured time so ratios are
+            // well-defined.
+            Box::new(FnExecutor(|b: &Batch| -> Result<f64, String> {
+                Ok(1e-5 * b.requests.len() as f64)
+            })),
+        );
+        for i in 0..16 {
+            server.submit(mk_req(i, if i % 2 == 0 { 6 } else { 8 }));
+        }
+        assert!(server.await_completed(16, Duration::from_secs(5)));
+        let m = server.shutdown();
+        assert!(m.drift.audited() > 0, "drift histogram must be populated");
+        assert_eq!(
+            m.drift.audited() + m.drift.skipped(),
+            m.batches_executed,
+            "one drift entry (or explicit skip) per executed batch"
+        );
+        assert_eq!(m.drift.total_samples(), m.drift.audited());
+        assert_eq!(m.drift.violations(), 0, "no bound configured");
+        let report = m.drift_report();
+        assert!(report.contains("\"schema\":\"flexibit.drift.v1\""));
+        assert!(report.contains("\"kind\":\"prefill\""));
+    }
+
+    /// Batches containing a failed request are skipped, not audited.
+    #[test]
+    fn drift_audit_skips_partially_failed_batches() {
+        let server = Server::start(stub_cfg(4, 4), Box::new(PartialExec));
+        for i in 0..12 {
+            server.submit(mk_req(i, 6));
+        }
+        assert!(server.await_finished(12, Duration::from_secs(5)));
+        let m = server.shutdown();
+        assert_eq!(m.drift.audited() + m.drift.skipped(), m.batches_executed);
+        assert!(m.drift.skipped() > 0, "ids 0,3,6,9 fail, so some batch skipped");
+    }
+
+    /// An absurdly tight absolute band trips the gate on real traffic; the
+    /// violation is counted and described, and serving itself continues.
+    #[test]
+    fn drift_gate_trips_on_impossible_band() {
+        let mut cfg = stub_cfg(4, 4);
+        // measured/predicted can never land inside [1e17, 2e17].
+        cfg.drift =
+            Some(DriftBound { band: Some((1e17, 2e17)), max_spread: None, warmup: 0 });
+        let server = Server::start(
+            cfg,
+            Box::new(FnExecutor(|b: &Batch| -> Result<f64, String> {
+                Ok(1e-5 * b.requests.len() as f64)
+            })),
+        );
+        for i in 0..8 {
+            server.submit(mk_req(i, 6));
+        }
+        assert!(server.await_completed(8, Duration::from_secs(5)));
+        let m = server.shutdown();
+        assert_eq!(m.requests_completed, 8, "gate reports, it does not drop traffic");
+        assert!(m.drift.violations() > 0, "impossible band must trip");
+        assert!(m.drift.last_violation().is_some());
     }
 }

@@ -13,9 +13,11 @@
 //!   GEMM execution engine ([`kernels`]) that serves any precision pair in
 //!   pure Rust, a serving coordinator ([`coordinator`]) that co-runs an
 //!   execution backend ([`kernels`] by default, PJRT via [`runtime`] with
-//!   `--features pjrt`) with the simulator, and an observability layer
+//!   `--features pjrt`) with the simulator, an observability layer
 //!   ([`obs`]) — request/kernel span tracing, hot-path counters, latency
-//!   histograms, and chrome-trace/Prometheus exporters.
+//!   histograms, chrome-trace/Prometheus exporters, and a sim-vs-measured
+//!   drift auditor — and a deterministic closed/open-loop traffic harness
+//!   ([`loadgen`]) that proves the serving numbers under shaped load.
 //! * **L2/L1 (python/)** — a JAX transformer block whose GEMMs run through a
 //!   Pallas arbitrary-ExMy dequantize-GEMM kernel, AOT-lowered to HLO text
 //!   artifacts loaded by [`runtime`] (optional; the native engine needs no
@@ -37,5 +39,6 @@ pub mod area;
 pub mod kernels;
 pub mod obs;
 pub mod coordinator;
+pub mod loadgen;
 pub mod runtime;
 pub mod report;

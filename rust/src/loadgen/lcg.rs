@@ -1,0 +1,125 @@
+//! Seeded LCG random stream for traffic generation (the offline build has
+//! no `rand`; see also [`crate::util::Rng`], the SplitMix64 the test suite
+//! uses — the load generator keeps its own generator so traffic schedules
+//! stay bit-stable even if the test RNG ever changes).
+//!
+//! The core is Knuth's MMIX linear congruential generator: 2^64 modulus
+//! with a full-period odd increment, so the state walks every u64 exactly
+//! once per period. A raw LCG's low bits are famously weak (bit k has
+//! period 2^(k+1)), so the *output* is the state passed through an
+//! xorshift-multiply finalizer (the mix64 avalanche) — every output bit
+//! depends on every state bit, which matters because arrival sampling
+//! consumes the high mantissa and `below` historically consumes the low
+//! end.
+
+/// Deterministic traffic RNG: Knuth MMIX LCG state, avalanche-tempered
+/// output.
+#[derive(Debug, Clone)]
+pub struct Lcg(u64);
+
+/// MMIX multiplier (Knuth).
+const MUL: u64 = 6364136223846793005;
+/// MMIX increment (odd, so the LCG is full-period over 2^64).
+const INC: u64 = 1442695040888963407;
+
+impl Lcg {
+    /// A generator seeded so that nearby seeds (0, 1, 2, ...) still produce
+    /// unrelated first outputs: one warm-up step separates them before any
+    /// value is drawn.
+    pub fn new(seed: u64) -> Self {
+        let mut g = Lcg(seed);
+        g.step();
+        g
+    }
+
+    fn step(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(MUL).wrapping_add(INC);
+        self.0
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        // xorshift-multiply finalizer (MurmurHash3's mix64 constants).
+        let mut x = self.step();
+        x ^= x >> 33;
+        x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+        x ^= x >> 33;
+        x = x.wrapping_mul(0xC4CE_B9FE_1A85_EC53);
+        x ^ (x >> 33)
+    }
+
+    /// Uniform in `[0, bound)`.
+    pub fn below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0);
+        self.next_u64() % bound
+    }
+
+    /// Uniform float in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Exponential with the given mean (inter-arrival gaps of a Poisson
+    /// process). Always finite and non-negative: `f64()` never returns 1.
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        -mean * (1.0 - self.f64()).ln()
+    }
+
+    /// An independent child generator (per-session input streams draw from
+    /// their own split so the schedule stream stays insensitive to how many
+    /// values each session consumes).
+    pub fn split(&mut self) -> Lcg {
+        Lcg::new(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_stream() {
+        let mut a = Lcg::new(7);
+        let mut b = Lcg::new(7);
+        for _ in 0..256 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn nearby_seeds_diverge_immediately() {
+        let mut a = Lcg::new(0);
+        let mut b = Lcg::new(1);
+        assert_ne!(a.next_u64(), b.next_u64());
+        // And the tempered outputs differ in roughly half their bits, not
+        // just the low end (the raw LCG difference would be tiny).
+        let (x, y) = (Lcg::new(2).next_u64(), Lcg::new(3).next_u64());
+        let differing = (x ^ y).count_ones();
+        assert!((16..=48).contains(&differing), "{differing} differing bits");
+    }
+
+    #[test]
+    fn bounded_draws_stay_bounded() {
+        let mut g = Lcg::new(42);
+        for _ in 0..1000 {
+            assert!(g.below(13) < 13);
+            let u = g.f64();
+            assert!((0.0..1.0).contains(&u));
+            let e = g.exp(0.01);
+            assert!(e.is_finite() && e >= 0.0, "{e}");
+        }
+    }
+
+    #[test]
+    fn split_streams_are_independent_of_consumption() {
+        // The parent's later values must not depend on how much a child
+        // consumed.
+        let mut p1 = Lcg::new(9);
+        let mut c1 = p1.split();
+        let _ = (0..100).map(|_| c1.next_u64()).count();
+        let after1 = p1.next_u64();
+        let mut p2 = Lcg::new(9);
+        let _idle_child = p2.split();
+        let after2 = p2.next_u64();
+        assert_eq!(after1, after2);
+    }
+}

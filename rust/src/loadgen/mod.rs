@@ -1,0 +1,435 @@
+//! Closed-loop traffic harness: deterministic, seeded load generation
+//! against an in-process [`Server`] — the piece that turns "the serving
+//! stack works on a hand-rolled stream" into "the serving stack holds up
+//! under *shaped* load, and the numbers prove it".
+//!
+//! Structure:
+//! * [`Lcg`] — the seeded traffic RNG (Knuth MMIX LCG, tempered output;
+//!   the offline build has no `rand`).
+//! * [`Scenario`] — arrival process ([`Arrival`]: closed-loop with think
+//!   time, open-loop Poisson, bursty on/off), session-length and
+//!   prefill-length distributions ([`Dist`]), and a precision-pair mix —
+//!   expanded by [`Scenario::schedule`] into a [`SessionPlan`] list that is
+//!   a pure function of the seed, receipted by [`schedule_digest`].
+//! * [`run`] — drives the schedule through a live server: sessions prefill
+//!   at their arrival (or when a closed-loop slot frees), decode
+//!   step-by-step (each step submitted only after the previous completed —
+//!   the real autoregressive dependency), think between steps in
+//!   closed-loop mode, and end their session when done.
+//! * [`LoadReport`] — counts, per-phase latency/goodput (from the server's
+//!   own [`Metrics`] histograms), token throughput, and the drift audit,
+//!   as text or machine-readable JSON (schema `flexibit.loadgen.v1`).
+//!
+//! The driver is intentionally *not* [`crate::coordinator::StreamDriver`]:
+//! that harness submits every prefill up front, which is exactly what an
+//! arrival process must not do.
+
+mod lcg;
+mod scenario;
+
+pub use lcg::Lcg;
+pub use scenario::{schedule_digest, Arrival, Dist, Scenario, SessionPlan};
+
+use crate::coordinator::{Completion, Phase, Request, Server};
+use crate::obs::{json_num, json_str};
+use crate::workload::ModelSpec;
+use std::fmt::Write as _;
+use std::time::{Duration, Instant};
+
+/// What one session is doing right now.
+enum SlotState {
+    /// Not yet started (waiting for its arrival time / a concurrency slot).
+    Idle,
+    /// A request is in flight; `step` 0 is the prefill, `step` k >= 1 the
+    /// k-th decode.
+    InFlight { step: u64, done: Completion },
+    /// Closed-loop think pause before submitting `next_step`.
+    Thinking { next_step: u64, until: Instant },
+    /// All steps settled (success or failure; the split lives in
+    /// [`LoadCounts::sessions_ok`] / [`LoadCounts::sessions_failed`]).
+    Finished,
+}
+
+/// The harness's own counts (the server's [`Metrics`] ride along inside
+/// [`LoadReport`]; these are the generator-side view used to cross-check
+/// them).
+#[derive(Debug, Clone, Default)]
+pub struct LoadCounts {
+    /// Work requests submitted (prefills + decode steps; End control
+    /// messages excluded).
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    /// Sessions whose every step completed.
+    pub sessions_ok: u64,
+    pub sessions_failed: u64,
+    /// Token rows prefilled (completed prefills only).
+    pub prefill_tokens: u64,
+    /// Tokens decoded (completed decode steps).
+    pub decode_tokens: u64,
+}
+
+/// Everything one load-generation run produced.
+pub struct LoadReport {
+    pub scenario: Scenario,
+    pub model: String,
+    /// Schedule digest (bit-reproducibility receipt; same seed => same
+    /// digest, before any request is sent).
+    pub digest: String,
+    pub counts: LoadCounts,
+    pub wall_s: f64,
+    pub timed_out: bool,
+    /// Final server metrics (per-phase histograms, drift audit, co-sim).
+    pub metrics: crate::coordinator::Metrics,
+}
+
+impl LoadReport {
+    pub fn tokens_total(&self) -> u64 {
+        self.counts.prefill_tokens + self.counts.decode_tokens
+    }
+
+    /// Machine-readable report: schema `flexibit.loadgen.v1`. The
+    /// `metrics` member is the server's own `flexibit.metrics.v1` body, so
+    /// `serve --metrics-out` files and loadgen reports share their shape.
+    pub fn json(&self) -> String {
+        let c = &self.counts;
+        let mut out = String::from("{\"schema\":\"flexibit.loadgen.v1\",");
+        let _ = write!(
+            out,
+            "\"scenario\":{},\"digest\":{},\"timed_out\":{},",
+            self.scenario.json(&self.model),
+            json_str(&self.digest),
+            self.timed_out,
+        );
+        let _ = write!(
+            out,
+            "\"generator\":{{\"submitted\":{},\"completed\":{},\"failed\":{},\
+             \"sessions_ok\":{},\"sessions_failed\":{}}},",
+            c.submitted, c.completed, c.failed, c.sessions_ok, c.sessions_failed,
+        );
+        let _ = write!(
+            out,
+            "\"tokens\":{{\"prefill\":{},\"decode\":{},\"total\":{},\"per_s\":{}}},",
+            c.prefill_tokens,
+            c.decode_tokens,
+            self.tokens_total(),
+            json_num(if self.wall_s > 0.0 {
+                self.tokens_total() as f64 / self.wall_s
+            } else {
+                0.0
+            }),
+        );
+        let _ = write!(out, "\"metrics\":{{{}}}}}", self.metrics.report_fields(self.wall_s));
+        out
+    }
+
+    /// Human-readable run summary (the server's own summary plus the
+    /// generator-side header).
+    pub fn summary(&self) -> String {
+        let c = &self.counts;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "loadgen:  seed {} -> digest {} ({} sessions, arrival {})",
+            self.scenario.seed,
+            self.digest,
+            self.scenario.sessions,
+            self.scenario.arrival.label(),
+        );
+        let _ = writeln!(
+            out,
+            "          {} submitted, {} completed, {} failed; \
+             tokens {} prefill + {} decode ({:.0}/s)",
+            c.submitted,
+            c.completed,
+            c.failed,
+            c.prefill_tokens,
+            c.decode_tokens,
+            if self.wall_s > 0.0 { self.tokens_total() as f64 / self.wall_s } else { 0.0 },
+        );
+        if self.timed_out {
+            let _ = writeln!(out, "          TIMED OUT before the schedule drained");
+        }
+        out.push_str(&self.metrics.summary(self.wall_s));
+        out
+    }
+}
+
+/// Drive `scenario` against a live server and collect the report. The
+/// model's `d_model` shapes the activation blocks; inputs come from each
+/// session's private seeded stream. Returns when every planned session
+/// finished or `timeout` elapsed (the report's `timed_out` flag).
+pub fn run(
+    server: &Server,
+    model: &ModelSpec,
+    scenario: &Scenario,
+    timeout: Duration,
+) -> LoadReport {
+    let plans = scenario.schedule();
+    let digest = schedule_digest(&plans);
+    let d = model.d_model;
+    let (concurrency, think_s) = match scenario.arrival {
+        Arrival::Closed { concurrency, think_s } => (concurrency.max(1), think_s),
+        // Open loop: arrivals don't wait for completions, and decode steps
+        // chain back-to-back (the autoregressive dependency is the only
+        // pacing).
+        _ => (usize::MAX, 0.0),
+    };
+
+    let mut states: Vec<SlotState> = plans.iter().map(|_| SlotState::Idle).collect();
+    let mut inputs: Vec<Lcg> = plans.iter().map(|p| Lcg::new(p.input_seed)).collect();
+    let mut counts = LoadCounts::default();
+    let mut next_id = 0u64;
+    let mut in_flight_or_thinking = 0usize;
+    let mut finished = 0usize;
+    let open_loop = !matches!(scenario.arrival, Arrival::Closed { .. });
+
+    let t0 = Instant::now();
+    let deadline = t0 + timeout;
+    let mut timed_out = false;
+    while finished < plans.len() {
+        let now = Instant::now();
+        if now >= deadline {
+            timed_out = true;
+            break;
+        }
+        let mut progressed = false;
+        for (i, plan) in plans.iter().enumerate() {
+            match &states[i] {
+                SlotState::Idle => {
+                    let due = if open_loop {
+                        now.duration_since(t0).as_secs_f64() >= plan.arrival_s
+                    } else {
+                        in_flight_or_thinking < concurrency
+                    };
+                    if due {
+                        let block: Vec<f32> = (0..plan.prefill_rows * d)
+                            .map(|_| inputs[i].f64() as f32 - 0.5)
+                            .collect();
+                        let dims = vec![plan.prefill_rows, d];
+                        let done = Completion::new();
+                        next_id += 1;
+                        server.submit(
+                            Request::new(next_id, model.name, plan.pair, block, dims)
+                                .with_session(plan.session, Phase::Prefill)
+                                .with_completion(&done),
+                        );
+                        counts.submitted += 1;
+                        states[i] = SlotState::InFlight { step: 0, done };
+                        in_flight_or_thinking += 1;
+                        progressed = true;
+                    }
+                }
+                SlotState::InFlight { step, done } => {
+                    let Some(result) = done.poll() else { continue };
+                    let step = *step;
+                    progressed = true;
+                    match result {
+                        Err(_) => {
+                            // The session's chain is broken: stop it here
+                            // (its KV state is unknown) and free the slot.
+                            counts.failed += 1;
+                            counts.sessions_failed += 1;
+                            states[i] = SlotState::Finished;
+                            in_flight_or_thinking -= 1;
+                            finished += 1;
+                        }
+                        Ok(_) => {
+                            counts.completed += 1;
+                            if step == 0 {
+                                counts.prefill_tokens += plan.prefill_rows as u64;
+                            } else {
+                                counts.decode_tokens += 1;
+                            }
+                            if step < plan.decode_steps {
+                                states[i] = SlotState::Thinking {
+                                    next_step: step + 1,
+                                    until: now + Duration::from_secs_f64(think_s),
+                                };
+                            } else {
+                                // Fire-and-forget session end (control
+                                // message, not counted as work).
+                                server.submit(
+                                    Request::new(
+                                        0,
+                                        model.name,
+                                        plan.pair,
+                                        Vec::new(),
+                                        Vec::new(),
+                                    )
+                                    .with_session(plan.session, Phase::End),
+                                );
+                                counts.sessions_ok += 1;
+                                states[i] = SlotState::Finished;
+                                in_flight_or_thinking -= 1;
+                                finished += 1;
+                            }
+                        }
+                    }
+                }
+                SlotState::Thinking { next_step, until } => {
+                    if now >= *until {
+                        let next_step = *next_step;
+                        let row: Vec<f32> =
+                            (0..d).map(|_| inputs[i].f64() as f32 - 0.5).collect();
+                        let done = Completion::new();
+                        next_id += 1;
+                        server.submit(
+                            Request::new(next_id, model.name, plan.pair, row, vec![d])
+                                .with_session(plan.session, Phase::Decode)
+                                .with_completion(&done),
+                        );
+                        counts.submitted += 1;
+                        states[i] = SlotState::InFlight { step: next_step, done };
+                        progressed = true;
+                    }
+                }
+                SlotState::Finished => {}
+            }
+        }
+        if !progressed {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    LoadReport {
+        scenario: scenario.clone(),
+        model: model.name.to_string(),
+        digest,
+        counts,
+        wall_s,
+        timed_out,
+        metrics: server.metrics(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Batch, BatchPolicy, FnExecutor, Server, ServerConfig};
+    use crate::workload::PrecisionPair;
+    use std::time::Duration;
+
+    fn tiny() -> ModelSpec {
+        ModelSpec {
+            seq: 8,
+            layers: 1,
+            d_model: 32,
+            d_ff: 64,
+            heads: 2,
+            kv_heads: 2,
+            gated_ffn: false,
+            name: "tiny",
+        }
+    }
+
+    fn stub_server() -> Server {
+        Server::start(
+            ServerConfig {
+                policy: BatchPolicy {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(1),
+                    max_streak: 4,
+                },
+                sim_config: crate::sim::mobile_a(),
+                sim_model: tiny(),
+                recorder: crate::obs::Recorder::disabled(),
+                drift: None,
+            },
+            Box::new(FnExecutor(|_b: &Batch| -> Result<f64, String> { Ok(0.0) })),
+        )
+    }
+
+    fn scenario(arrival: Arrival) -> Scenario {
+        Scenario {
+            seed: 7,
+            sessions: 6,
+            arrival,
+            prefill_len: Dist::Uniform(1, 4),
+            decode_steps: Dist::Fixed(3),
+            pairs: vec![PrecisionPair::of_bits(6, 6), PrecisionPair::of_bits(8, 8)],
+        }
+    }
+
+    #[test]
+    fn closed_loop_run_completes_the_whole_schedule() {
+        let server = stub_server();
+        let sc = scenario(Arrival::Closed { concurrency: 2, think_s: 0.0 });
+        let rep = run(&server, &tiny(), &sc, Duration::from_secs(30));
+        assert!(!rep.timed_out);
+        // Completion counts are schedule-determined: one prefill plus
+        // Fixed(3) decodes per session.
+        assert_eq!(rep.counts.submitted, 6 * 4);
+        assert_eq!(rep.counts.completed, 6 * 4);
+        assert_eq!(rep.counts.failed, 0);
+        assert_eq!(rep.counts.sessions_ok, 6);
+        assert_eq!(rep.counts.decode_tokens, 6 * 3);
+        assert!(rep.counts.prefill_tokens >= 6, "every prefill is >= 1 row");
+        let m = server.shutdown();
+        assert_eq!(m.requests_completed, rep.counts.completed);
+        assert_eq!(m.decode_steps, rep.counts.decode_tokens);
+        assert_eq!(m.sessions_started, 6);
+    }
+
+    #[test]
+    fn open_loop_run_matches_and_reports() {
+        let server = stub_server();
+        let sc = scenario(Arrival::Poisson { rps: 2000.0 });
+        let rep = run(&server, &tiny(), &sc, Duration::from_secs(30));
+        assert!(!rep.timed_out);
+        assert_eq!(rep.counts.completed, 6 * 4);
+        let j = rep.json();
+        assert!(j.starts_with("{\"schema\":\"flexibit.loadgen.v1\","));
+        assert!(j.contains(&format!("\"digest\":\"{}\"", rep.digest)));
+        assert!(j.contains("\"metrics\":{\"wall_s\":"));
+        assert!(j.contains("\"phases\":{\"all\":{\"count\":24"));
+        assert_eq!(j.matches('{').count(), j.matches('}').count(), "balanced: {j}");
+        let s = rep.summary();
+        assert!(s.contains("loadgen:") && s.contains(&rep.digest), "{s}");
+    }
+
+    #[test]
+    fn same_seed_reproduces_digest_and_counts() {
+        let sc = scenario(Arrival::Closed { concurrency: 3, think_s: 0.0 });
+        let a = run(&stub_server(), &tiny(), &sc, Duration::from_secs(30));
+        let b = run(&stub_server(), &tiny(), &sc, Duration::from_secs(30));
+        assert_eq!(a.digest, b.digest);
+        assert_eq!(a.counts.submitted, b.counts.submitted);
+        assert_eq!(a.counts.completed, b.counts.completed);
+        assert_eq!(a.counts.prefill_tokens, b.counts.prefill_tokens);
+        assert_eq!(a.counts.decode_tokens, b.counts.decode_tokens);
+    }
+
+    #[test]
+    fn broken_sessions_fail_without_hanging_the_run() {
+        // Executor rejects every decode-bearing batch for one pair: those
+        // sessions end failed, the others complete, the run terminates.
+        let server = Server::start(
+            ServerConfig {
+                policy: BatchPolicy {
+                    max_batch: 2,
+                    max_wait: Duration::from_millis(1),
+                    max_streak: 2,
+                },
+                sim_config: crate::sim::mobile_a(),
+                sim_model: tiny(),
+                recorder: crate::obs::Recorder::disabled(),
+                drift: None,
+            },
+            Box::new(FnExecutor(|b: &Batch| -> Result<f64, String> {
+                if b.pair.w.bits() == 6 {
+                    Err("synthetic".into())
+                } else {
+                    Ok(0.0)
+                }
+            })),
+        );
+        let sc = scenario(Arrival::Closed { concurrency: 6, think_s: 0.0 });
+        let rep = run(&server, &tiny(), &sc, Duration::from_secs(30));
+        assert!(!rep.timed_out);
+        assert_eq!(rep.counts.sessions_failed, 3, "the three [6,6] sessions");
+        assert_eq!(rep.counts.sessions_ok, 3);
+        assert_eq!(rep.counts.failed, 3, "each failed session dies on its prefill");
+        assert_eq!(rep.counts.completed, 3 * 4);
+    }
+}

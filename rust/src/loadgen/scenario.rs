@@ -1,0 +1,314 @@
+//! Traffic scenarios: what arrives when. A [`Scenario`] is a pure seeded
+//! description — expanding it to a concrete [`SessionPlan`] schedule uses
+//! only the scenario's own [`Lcg`] stream, so the same seed always yields
+//! the same sessions, arrival times, lengths, precision pairs, and
+//! per-session input seeds, on any host. The [`schedule_digest`] (FNV-1a
+//! over the schedule's canonical bytes) is the bit-reproducibility receipt
+//! a rerun can compare against.
+
+use super::lcg::Lcg;
+use crate::obs::json_str;
+use crate::workload::PrecisionPair;
+use std::fmt::Write as _;
+
+/// A length distribution (prefill rows, decode steps). Parse syntax, one
+/// string per CLI flag:
+/// * `fixed:N` — always `N`.
+/// * `uniform:LO:HI` — uniform integer in `[LO, HI]` inclusive.
+/// * `geom:MEAN:CAP` — geometric-ish (discretized exponential) with the
+///   given mean, capped at `CAP` — the long-tail shape of real session
+///   lengths, with a hard bound so one draw cannot blow the run budget.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Dist {
+    Fixed(u64),
+    Uniform(u64, u64),
+    Geom { mean: f64, cap: u64 },
+}
+
+impl Dist {
+    pub fn parse(s: &str) -> Option<Dist> {
+        let mut parts = s.split(':');
+        let d = match (parts.next()?, parts.next(), parts.next()) {
+            ("fixed", Some(n), None) => Dist::Fixed(n.parse().ok()?),
+            ("uniform", Some(lo), Some(hi)) => {
+                let (lo, hi) = (lo.parse().ok()?, hi.parse().ok()?);
+                if lo > hi {
+                    return None;
+                }
+                Dist::Uniform(lo, hi)
+            }
+            ("geom", Some(mean), Some(cap)) => {
+                let mean: f64 = mean.parse().ok()?;
+                if !(mean > 0.0) {
+                    return None;
+                }
+                Dist::Geom { mean, cap: cap.parse().ok()? }
+            }
+            _ => return None,
+        };
+        parts.next().is_none().then_some(d)
+    }
+
+    pub fn sample(&self, g: &mut Lcg) -> u64 {
+        match *self {
+            Dist::Fixed(n) => n,
+            Dist::Uniform(lo, hi) => lo + g.below(hi - lo + 1),
+            Dist::Geom { mean, cap } => (g.exp(mean) as u64).min(cap),
+        }
+    }
+
+    /// Canonical label, re-parseable by [`Dist::parse`].
+    pub fn label(&self) -> String {
+        match *self {
+            Dist::Fixed(n) => format!("fixed:{n}"),
+            Dist::Uniform(lo, hi) => format!("uniform:{lo}:{hi}"),
+            Dist::Geom { mean, cap } => format!("geom:{mean}:{cap}"),
+        }
+    }
+}
+
+/// The arrival process — how load is offered to the server.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// Closed loop: at most `concurrency` sessions in flight; a session
+    /// waits for each response, thinks for `think_s`, then sends its next
+    /// step. Offered load adapts to service rate (classic N-user model).
+    Closed { concurrency: usize, think_s: f64 },
+    /// Open loop: session starts arrive as a Poisson process at `rps`
+    /// regardless of completions (the tail-latency-honest shape).
+    Poisson { rps: f64 },
+    /// Bursty on/off: Poisson at `rps` during `on_s`-second windows
+    /// separated by `off_s`-second silences — exercises queue drain/refill.
+    OnOff { rps: f64, on_s: f64, off_s: f64 },
+}
+
+impl Arrival {
+    pub fn label(&self) -> String {
+        match *self {
+            Arrival::Closed { concurrency, think_s } => {
+                format!("closed:{concurrency}:{think_s}")
+            }
+            Arrival::Poisson { rps } => format!("poisson:{rps}"),
+            Arrival::OnOff { rps, on_s, off_s } => format!("onoff:{rps}:{on_s}:{off_s}"),
+        }
+    }
+}
+
+/// One planned session, fully determined by the scenario seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionPlan {
+    /// Session id (1-based; 0 is the stateless sentinel elsewhere).
+    pub session: u64,
+    /// Start offset from run start, seconds. 0 for closed-loop plans (they
+    /// start when a concurrency slot frees up, not at a wall time).
+    pub arrival_s: f64,
+    pub pair: PrecisionPair,
+    /// Prefill block length in token rows (>= 1).
+    pub prefill_rows: usize,
+    /// Decode steps after the prefill (0 = prefill-only).
+    pub decode_steps: u64,
+    /// Seed of this session's private input-activation stream.
+    pub input_seed: u64,
+}
+
+/// A seeded traffic scenario over one served model.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub seed: u64,
+    pub sessions: u64,
+    pub arrival: Arrival,
+    pub prefill_len: Dist,
+    pub decode_steps: Dist,
+    /// Precision pairs, assigned round-robin so every pair is exercised
+    /// even in short runs (the mix is a coverage guarantee, not a sample).
+    pub pairs: Vec<PrecisionPair>,
+}
+
+impl Scenario {
+    /// Expand to the concrete schedule. Pure function of the scenario.
+    pub fn schedule(&self) -> Vec<SessionPlan> {
+        assert!(!self.pairs.is_empty(), "a scenario needs at least one precision pair");
+        let mut g = Lcg::new(self.seed);
+        let mut active_s = 0.0f64; // Poisson time, before on/off gating
+        (0..self.sessions)
+            .map(|i| {
+                let arrival_s = match self.arrival {
+                    Arrival::Closed { .. } => 0.0,
+                    Arrival::Poisson { rps } => {
+                        active_s += g.exp(1.0 / rps.max(1e-9));
+                        active_s
+                    }
+                    Arrival::OnOff { rps, on_s, off_s } => {
+                        active_s += g.exp(1.0 / rps.max(1e-9));
+                        // Map "active" (on-window) time onto the wall: each
+                        // completed on-window inserts an off-window after it.
+                        let period = on_s.max(1e-9);
+                        (active_s / period).floor() * (period + off_s.max(0.0))
+                            + active_s % period
+                    }
+                };
+                SessionPlan {
+                    session: i + 1,
+                    arrival_s,
+                    pair: self.pairs[(i % self.pairs.len() as u64) as usize],
+                    prefill_rows: self.prefill_len.sample(&mut g).max(1) as usize,
+                    decode_steps: self.decode_steps.sample(&mut g),
+                    input_seed: g.next_u64(),
+                }
+            })
+            .collect()
+    }
+
+    /// Scenario echo for reports (JSON object).
+    pub fn json(&self, model: &str) -> String {
+        let mut out = String::from("{");
+        let _ = write!(
+            out,
+            "\"seed\":{},\"sessions\":{},\"model\":{},\"arrival\":{},\
+             \"prefill_len\":{},\"decode_steps\":{},\"pairs\":[",
+            self.seed,
+            self.sessions,
+            json_str(model),
+            json_str(&self.arrival.label()),
+            json_str(&self.prefill_len.label()),
+            json_str(&self.decode_steps.label()),
+        );
+        for (i, p) in self.pairs.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&json_str(&p.label()));
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// FNV-1a (64-bit) over the schedule's canonical bytes — the
+/// bit-reproducibility receipt: two runs of the same seeded scenario must
+/// produce the same 16-hex-digit digest before any request is even sent.
+pub fn schedule_digest(plans: &[SessionPlan]) -> String {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    };
+    for p in plans {
+        eat(&p.session.to_le_bytes());
+        eat(&p.arrival_s.to_bits().to_le_bytes());
+        eat(p.pair.label().as_bytes());
+        eat(&(p.prefill_rows as u64).to_le_bytes());
+        eat(&p.decode_steps.to_le_bytes());
+        eat(&p.input_seed.to_le_bytes());
+    }
+    format!("{h:016x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pairs() -> Vec<PrecisionPair> {
+        vec![PrecisionPair::of_bits(6, 6), PrecisionPair::of_bits(8, 8)]
+    }
+
+    fn scenario(seed: u64, arrival: Arrival) -> Scenario {
+        Scenario {
+            seed,
+            sessions: 32,
+            arrival,
+            prefill_len: Dist::Uniform(2, 8),
+            decode_steps: Dist::Geom { mean: 3.0, cap: 10 },
+            pairs: pairs(),
+        }
+    }
+
+    #[test]
+    fn dist_parse_label_roundtrip() {
+        for s in ["fixed:32", "uniform:8:64", "geom:16:128"] {
+            let d = Dist::parse(s).unwrap();
+            assert_eq!(d.label(), s);
+            assert_eq!(Dist::parse(&d.label()), Some(d));
+        }
+        assert_eq!(Dist::parse("geom:2.5:8").unwrap(), Dist::Geom { mean: 2.5, cap: 8 });
+        for bad in ["", "fixed", "fixed:x", "uniform:9:3", "geom:0:5", "zipf:2", "fixed:3:4"] {
+            assert!(Dist::parse(bad).is_none(), "{bad} must not parse");
+        }
+    }
+
+    #[test]
+    fn dist_samples_respect_bounds() {
+        let mut g = Lcg::new(5);
+        for _ in 0..500 {
+            assert_eq!(Dist::Fixed(7).sample(&mut g), 7);
+            let u = Dist::Uniform(3, 9).sample(&mut g);
+            assert!((3..=9).contains(&u), "{u}");
+            assert!(Dist::Geom { mean: 4.0, cap: 12 }.sample(&mut g) <= 12);
+        }
+        // Both uniform endpoints are reachable (inclusive range).
+        let mut seen = [false, false];
+        let mut g = Lcg::new(6);
+        for _ in 0..200 {
+            match Dist::Uniform(3, 9).sample(&mut g) {
+                3 => seen[0] = true,
+                9 => seen[1] = true,
+                _ => {}
+            }
+        }
+        assert!(seen[0] && seen[1], "inclusive endpoints must occur");
+    }
+
+    #[test]
+    fn schedule_is_a_pure_function_of_the_seed() {
+        let s = scenario(7, Arrival::Poisson { rps: 500.0 });
+        let (a, b) = (s.schedule(), s.schedule());
+        assert_eq!(a, b);
+        assert_eq!(schedule_digest(&a), schedule_digest(&b));
+        let other = scenario(8, Arrival::Poisson { rps: 500.0 }).schedule();
+        assert_ne!(schedule_digest(&a), schedule_digest(&other), "seed must matter");
+        // Sessions are 1-based and every pair appears (round-robin).
+        assert!(a.iter().all(|p| p.session >= 1 && p.prefill_rows >= 1));
+        for pair in pairs() {
+            assert!(a.iter().any(|p| p.pair == pair), "pair {} unused", pair.label());
+        }
+    }
+
+    #[test]
+    fn poisson_arrivals_are_increasing_and_rate_shaped() {
+        let plans = scenario(3, Arrival::Poisson { rps: 1000.0 }).schedule();
+        assert!(plans.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        let span = plans.last().unwrap().arrival_s;
+        // 32 arrivals at 1000 rps: ~32 ms expected; allow a wide band.
+        assert!(span > 1e-3 && span < 1.0, "span {span}");
+    }
+
+    #[test]
+    fn onoff_arrivals_avoid_off_windows() {
+        let (on_s, off_s) = (0.010, 0.100);
+        let plans = scenario(11, Arrival::OnOff { rps: 2000.0, on_s, off_s }).schedule();
+        assert!(plans.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        for p in &plans {
+            let phase = p.arrival_s % (on_s + off_s);
+            assert!(phase < on_s + 1e-12, "arrival at {} lands in an off window", p.arrival_s);
+        }
+    }
+
+    #[test]
+    fn closed_loop_plans_have_no_wall_arrivals() {
+        let plans = scenario(2, Arrival::Closed { concurrency: 4, think_s: 0.0 }).schedule();
+        assert!(plans.iter().all(|p| p.arrival_s == 0.0));
+    }
+
+    #[test]
+    fn scenario_json_echo_is_balanced_and_labeled() {
+        let s = scenario(7, Arrival::Closed { concurrency: 2, think_s: 0.001 });
+        let j = s.json("tiny-block");
+        assert!(j.contains("\"seed\":7"));
+        assert!(j.contains("\"arrival\":\"closed:2:0.001\""));
+        assert!(j.contains("\"prefill_len\":\"uniform:2:8\""));
+        assert!(j.contains("\"pairs\":[\"[6,6]\",\"[8,8]\"]"));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+    }
+}

@@ -8,6 +8,11 @@
 //! * `serve`    — run the serving coordinator on the native bit-packed GEMM
 //!   engine over a synthetic mixed-precision request stream (no artifacts,
 //!   no Python, any precision pair).
+//! * `loadgen`  — drive the server with a seeded, deterministic traffic
+//!   scenario (closed-loop / Poisson / bursty arrivals, distributional
+//!   session shapes) and emit a machine-readable report with per-phase
+//!   latency, goodput, token throughput, and the sim-vs-measured drift
+//!   audit; the drift gate makes divergence a nonzero exit code.
 //! * `report`   — print the index of paper table/figure reproduction
 //!   binaries.
 
@@ -17,7 +22,8 @@ use flexibit::baselines::{
 };
 use flexibit::coordinator::{BatchPolicy, Request, Server, ServerConfig, StreamDriver};
 use flexibit::kernels::NativeExecutor;
-use flexibit::obs::{self, Recorder, DEFAULT_EVENT_CAPACITY};
+use flexibit::loadgen::{self, Arrival, Dist, Scenario};
+use flexibit::obs::{self, DriftBound, Recorder, DEFAULT_EVENT_CAPACITY};
 use flexibit::pe::{Pe, PeConfig};
 use flexibit::report::{fmt_j, fmt_s};
 use flexibit::sim::{all_configs, simulate_model};
@@ -40,6 +46,18 @@ fn usage() -> ! {
                                       # request + kernel spans to PATH\n\
                  [--trace-sample N]   # record 1-in-N per-GEMM kernel spans\n\
                                       # (default 1 = all; counters stay exact)\n\
+                 [--metrics-out PATH] # write the final metrics report JSON\n\
+                                      # (schema flexibit.metrics.v1) on shutdown\n\
+           loadgen [--seed N] [--sessions N] [--pairs WxA,...] [--batch N]\n\
+                 [--arrival closed|poisson|onoff]\n\
+                 [--concurrency N] [--think-ms MS]   # closed-loop knobs\n\
+                 [--rps R] [--on-s S] [--off-s S]    # open-loop knobs\n\
+                 [--prefill-len DIST] [--decode-steps DIST]\n\
+                                      # DIST: fixed:N | uniform:LO:HI | geom:MEAN:CAP\n\
+                 [--drift-spread X] [--drift-band LO:HI] [--drift-warmup N]\n\
+                 [--no-drift-gate]    # audit drift without failing on it\n\
+                 [--report PATH]      # machine-readable run report JSON\n\
+                 [--trace PATH] [--trace-sample N] [--timeout-s S]\n\
            report\n\
          \n\
          models: Bert-base Llama-2-7b Llama-2-70b GPT-3\n\
@@ -60,6 +78,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&args[1..]),
         Some("verify") => cmd_verify(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("loadgen") => cmd_loadgen(&args[1..]),
         Some("report") => cmd_report(),
         _ => usage(),
     }
@@ -112,6 +131,7 @@ fn cmd_serve(args: &[String]) {
         sim_config: flexibit::sim::mobile_a(),
         sim_model: spec.clone(),
         recorder: recorder.clone(),
+        drift: None,
     };
     let server = Server::start(cfg, Box::new(executor));
 
@@ -202,12 +222,158 @@ fn cmd_serve(args: &[String]) {
             );
         }
     }
+    if let Some(path) = arg_value(args, "--metrics-out") {
+        // Same report body the loadgen harness embeds, written standalone —
+        // CI and dashboards parse one shape either way.
+        match std::fs::write(&path, m.report_json(wall)) {
+            Ok(()) => println!("  metrics report -> {path}"),
+            Err(e) => eprintln!("  metrics report: failed to write {path}: {e}"),
+        }
+    }
     if !drained {
         eprintln!(
             "timed out: only {}/{} requests finished",
             m.requests_finished(),
             expected
         );
+        std::process::exit(1);
+    }
+}
+
+/// `flexibit loadgen` — the deterministic traffic harness against the
+/// native engine. Exits nonzero when the run times out or the drift gate
+/// tripped, so CI can pin "the analytical model still tracks the hot path"
+/// as a pass/fail check.
+fn cmd_loadgen(args: &[String]) {
+    let seed: u64 = arg_value(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(7);
+    let sessions: u64 =
+        arg_value(args, "--sessions").and_then(|s| s.parse().ok()).unwrap_or(32);
+    let max_batch: usize = arg_value(args, "--batch").and_then(|s| s.parse().ok()).unwrap_or(8);
+    let pairs_arg = arg_value(args, "--pairs").unwrap_or_else(|| "6x6,8x8".into());
+    let pairs: Vec<PrecisionPair> = pairs_arg
+        .split(',')
+        .map(|s| {
+            PrecisionPair::parse(s).unwrap_or_else(|| {
+                eprintln!("bad precision pair '{s}'");
+                usage()
+            })
+        })
+        .collect();
+    let fparse = |key: &str, default: f64| -> f64 {
+        arg_value(args, key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    };
+    let arrival = match arg_value(args, "--arrival").as_deref().unwrap_or("closed") {
+        "closed" => Arrival::Closed {
+            concurrency: arg_value(args, "--concurrency")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(4),
+            think_s: fparse("--think-ms", 0.0) / 1e3,
+        },
+        "poisson" => Arrival::Poisson { rps: fparse("--rps", 200.0) },
+        "onoff" => Arrival::OnOff {
+            rps: fparse("--rps", 200.0),
+            on_s: fparse("--on-s", 0.05),
+            off_s: fparse("--off-s", 0.05),
+        },
+        other => {
+            eprintln!("unknown arrival process '{other}'");
+            usage()
+        }
+    };
+    let dist = |key: &str, default: &str| -> Dist {
+        let s = arg_value(args, key).unwrap_or_else(|| default.into());
+        Dist::parse(&s).unwrap_or_else(|| {
+            eprintln!("bad distribution '{s}' for {key}");
+            usage()
+        })
+    };
+    let prefill_len = dist("--prefill-len", "uniform:4:16");
+    let decode_steps = dist("--decode-steps", "geom:4:32");
+
+    // Drift gate: spread-only by default (self-calibrating, CI-portable);
+    // an absolute --drift-band needs a calibrated host. --no-drift-gate
+    // still audits — it just never fails the run.
+    let drift = if args.iter().any(|a| a == "--no-drift-gate") {
+        None
+    } else {
+        let band = arg_value(args, "--drift-band").map(|s| {
+            let mut it = s.split(':');
+            let lo = it.next().and_then(|x| x.parse::<f64>().ok());
+            let hi = it.next().and_then(|x| x.parse::<f64>().ok());
+            match (lo, hi, it.next()) {
+                (Some(lo), Some(hi), None) if lo <= hi => (lo, hi),
+                _ => {
+                    eprintln!("bad --drift-band '{s}' (want LO:HI)");
+                    usage()
+                }
+            }
+        });
+        Some(DriftBound {
+            band,
+            max_spread: Some(fparse("--drift-spread", 64.0)),
+            warmup: arg_value(args, "--drift-warmup").and_then(|s| s.parse().ok()).unwrap_or(1),
+        })
+    };
+
+    let panel_budget_mb: usize = arg_value(args, "--panel-budget-mb")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(flexibit::kernels::DEFAULT_PANEL_BUDGET >> 20);
+    let trace_path = arg_value(args, "--trace");
+    let trace_sample: u32 =
+        arg_value(args, "--trace-sample").and_then(|s| s.parse().ok()).unwrap_or(1);
+    let recorder = match &trace_path {
+        Some(_) => Recorder::with_config(DEFAULT_EVENT_CAPACITY, trace_sample),
+        None => Recorder::disabled(),
+    };
+
+    let spec = ModelSpec::tiny();
+    let executor = NativeExecutor::new()
+        .with_panel_budget(panel_budget_mb << 20)
+        .with_model(spec.clone(), 0xF1E81B);
+    let server = Server::start(
+        ServerConfig {
+            policy: BatchPolicy { max_batch, ..Default::default() },
+            sim_config: flexibit::sim::mobile_a(),
+            sim_model: spec.clone(),
+            recorder: recorder.clone(),
+            drift,
+        },
+        Box::new(executor),
+    );
+
+    let scenario = Scenario { seed, sessions, arrival, prefill_len, decode_steps, pairs };
+    let timeout = Duration::from_secs_f64(fparse("--timeout-s", 120.0));
+    let mut report = loadgen::run(&server, &spec, &scenario, timeout);
+    // Refresh the metrics after shutdown so trailing session-End batches
+    // are folded in and the audited+skipped == executed invariant holds in
+    // the written report.
+    report.metrics = server.shutdown();
+    print!("{}", report.summary());
+
+    if let Some(path) = arg_value(args, "--report") {
+        match std::fs::write(&path, report.json()) {
+            Ok(()) => println!("report -> {path}"),
+            Err(e) => eprintln!("report: failed to write {path}: {e}"),
+        }
+    }
+    if let Some(path) = &trace_path {
+        let events = recorder.events();
+        match std::fs::write(path, obs::chrome_trace(&events)) {
+            Ok(()) => println!("trace: {} spans -> {path}", events.len()),
+            Err(e) => eprintln!("trace: failed to write {path}: {e}"),
+        }
+    }
+    let violations = report.metrics.drift.violations();
+    if violations > 0 {
+        eprintln!("drift gate: {violations} violations — sim and measured hot path diverged");
+        if let Some(v) = report.metrics.drift.last_violation() {
+            eprintln!("  last: {v}");
+        }
+    }
+    if report.timed_out {
+        eprintln!("timed out before the schedule drained");
+    }
+    if report.timed_out || violations > 0 {
         std::process::exit(1);
     }
 }

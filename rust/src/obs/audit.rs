@@ -1,0 +1,585 @@
+//! Sim-vs-measured drift auditing: the join between the analytical model
+//! and the measured hot path, computed continuously by the server itself.
+//!
+//! Every executed batch has two costs: the wall-clock host seconds the
+//! `batch.execute` span records, and the predicted accelerator seconds the
+//! co-simulation (`sim::simulate_model_with_past`) assigns to the same
+//! work. Their ratio is the calibration constant between the two machines
+//! — it is *allowed* to be far from 1 (the host is not a FlexiBit), but
+//! within one **key** of (precision pair, dispatch kind, shape class) it
+//! must be stable: the analytical model claims cost scales the same way
+//! the real kernels do. [`DriftAudit`] maintains a ratio [`Histogram`] per
+//! key plus running geometric means, and an optional [`DriftBound`] turns
+//! instability into a loud failure — the forcing function that keeps every
+//! future perf PR honest against the paper's model.
+//!
+//! The audit also attributes each batch's wall time to its child spans
+//! (gemm vs layer vs everything else), using the recorder's per-category
+//! duration accumulators — so "where did the time go" has a standing
+//! answer without opening a trace.
+
+use super::export::{json_num, json_str};
+use super::hist::Histogram;
+use std::fmt::Write as _;
+
+/// When to declare the analytical model and the measured hot path diverged.
+///
+/// Two independent gates, either or both:
+/// * `band` — the measured/predicted ratio of every audited batch must lie
+///   in `[lo, hi]`. Absolute, so it catches *uniform* mis-calibration
+///   (e.g. a sim config claiming a 1000× faster clock shifts every ratio
+///   by 1000× — a spread gate would never notice). Requires a calibrated
+///   deployment (you know what the ratio should be).
+/// * `max_spread` — each batch's ratio must lie within `max_spread`× of
+///   its key's running geometric mean. Self-calibrating (no prior needed),
+///   so it is CI-safe across machines of different speeds; it catches
+///   *shape-dependent* divergence, i.e. the model scaling differently
+///   from the measured kernels.
+///
+/// `warmup` exempts the first samples of each key from the spread gate:
+/// the first batch of a (model, pair) pays one-time weight packing and
+/// panel builds, which is real cost but not steady-state drift.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftBound {
+    /// Absolute measured/predicted ratio band `(lo, hi)`.
+    pub band: Option<(f64, f64)>,
+    /// Per-key relative spread factor (≥ 1) around the running geomean.
+    pub max_spread: Option<f64>,
+    /// Per-key samples exempt from the spread gate.
+    pub warmup: u64,
+}
+
+impl Default for DriftBound {
+    fn default() -> Self {
+        // Spread-only: portable across hosts; 64× is deliberately loose —
+        // it flags order-of-magnitude model breakage, not scheduler noise.
+        DriftBound { band: None, max_spread: Some(64.0), warmup: 1 }
+    }
+}
+
+/// One audited population: batches of the same precision pair, dispatch
+/// kind (`prefill` / `decode` / `mixed`), and shape class (⌊log2 token
+/// rows⌋ — an octave of batch size, matching the histogram resolution).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct DriftKey {
+    pub pair: String,
+    pub kind: &'static str,
+    pub shape_class: u32,
+}
+
+/// Per-key drift state: the ratio distribution plus exact extremes and the
+/// log-sum backing the geometric mean (ratios are multiplicative — an
+/// arithmetic mean over a 1000× range would be dominated by one outlier).
+#[derive(Debug, Clone, Default)]
+pub struct KeyDrift {
+    pub ratios: Histogram,
+    ln_sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl KeyDrift {
+    pub fn count(&self) -> u64 {
+        self.ratios.count()
+    }
+
+    /// Geometric mean of the recorded ratios (0 when empty).
+    pub fn geomean(&self) -> f64 {
+        if self.ratios.count() == 0 {
+            0.0
+        } else {
+            (self.ln_sum / self.ratios.count() as f64).exp()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Shape class of a batch: ⌊log2(tokens)⌋, so batches within one octave of
+/// token rows share a drift population.
+pub fn shape_class(tokens: u64) -> u32 {
+    63 - tokens.max(1).leading_zeros()
+}
+
+/// The server-side drift auditor. Lives inside `Metrics` (updated under
+/// the same mutex the worker already holds per batch), `Clone` for the
+/// usual snapshot semantics.
+#[derive(Debug, Clone, Default)]
+pub struct DriftAudit {
+    /// Configured gate, echoed into reports. Set once at server start.
+    pub bound: Option<DriftBound>,
+    keys: Vec<(DriftKey, KeyDrift)>,
+    audited: u64,
+    skipped: u64,
+    violations: u64,
+    last_violation: Option<String>,
+    /// Wall/child-span seconds over batches that ran with an enabled
+    /// recorder (attribution needs child spans; without them the
+    /// fractions would be fiction).
+    util_wall_s: f64,
+    util_gemm_s: f64,
+    util_layer_s: f64,
+}
+
+/// Utilization attribution over the audited wall time: fractions of batch
+/// wall spent inside gemm spans, inside layer spans but outside gemms
+/// (norms, softmax, residuals, KV append), and outside any model span
+/// (batching, completion plumbing, co-sim itself).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Utilization {
+    pub wall_s: f64,
+    pub gemm_frac: f64,
+    pub layer_frac: f64,
+    pub overhead_frac: f64,
+}
+
+impl DriftAudit {
+    /// Record one executed batch's measured vs predicted cost and apply the
+    /// configured gate. Returns the violation description when the gate
+    /// trips (the caller decides how loudly to fail). Batches that cannot
+    /// produce a meaningful ratio — no served work (`predicted_s <= 0`,
+    /// e.g. End-only control batches) or a degenerate measured time —
+    /// are counted in [`DriftAudit::skipped`] instead, so
+    /// `audited + skipped` always equals the executed-batch count.
+    pub fn observe(
+        &mut self,
+        pair: &str,
+        kind: &'static str,
+        tokens: u64,
+        measured_s: f64,
+        predicted_s: f64,
+    ) -> Option<String> {
+        if !(measured_s > 0.0) || !(predicted_s > 0.0) || tokens == 0 {
+            self.skipped += 1;
+            return None;
+        }
+        let ratio = measured_s / predicted_s;
+        let key = DriftKey { pair: pair.to_string(), kind, shape_class: shape_class(tokens) };
+        let idx = match self.keys.iter().position(|(k, _)| *k == key) {
+            Some(i) => i,
+            None => {
+                self.keys.push((key.clone(), KeyDrift::default()));
+                self.keys.len() - 1
+            }
+        };
+        // Gate BEFORE folding the sample in: a violating batch must not
+        // drag the reference geomean toward itself first.
+        let mut violation = None;
+        if let Some(b) = &self.bound {
+            if let Some((lo, hi)) = b.band {
+                if ratio < lo || ratio > hi {
+                    violation = Some(format!(
+                        "drift: ratio {ratio:.4e} outside band [{lo:.4e}, {hi:.4e}] \
+                         for {} {} class {} ({tokens} tokens, measured {measured_s:.3e}s \
+                         vs predicted {predicted_s:.3e}s)",
+                        key.pair, key.kind, key.shape_class
+                    ));
+                }
+            }
+            if violation.is_none() {
+                if let Some(spread) = b.max_spread {
+                    let e = &self.keys[idx].1;
+                    if e.count() >= b.warmup.max(1) {
+                        let g = e.geomean();
+                        if g > 0.0 && (ratio > g * spread || ratio * spread < g) {
+                            violation = Some(format!(
+                                "drift: ratio {ratio:.4e} is >{spread:.1}x off the \
+                                 geomean {g:.4e} for {} {} class {} ({tokens} tokens)",
+                                key.pair, key.kind, key.shape_class
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        let e = &mut self.keys[idx].1;
+        if e.ratios.count() == 0 {
+            e.min = ratio;
+            e.max = ratio;
+        } else {
+            e.min = e.min.min(ratio);
+            e.max = e.max.max(ratio);
+        }
+        e.ratios.record(ratio);
+        e.ln_sum += ratio.ln();
+        self.audited += 1;
+        if let Some(v) = &violation {
+            self.violations += 1;
+            self.last_violation = Some(v.clone());
+        }
+        violation
+    }
+
+    /// Count one executed batch as unauditable without touching any ratio
+    /// population — e.g. a batch containing failed requests, whose measured
+    /// wall covers work the co-sim (successful requests only) does not.
+    pub fn note_skipped(&mut self) {
+        self.skipped += 1;
+    }
+
+    /// Attribute one batch's wall time to its child spans. `children` is
+    /// `Some((gemm_s, layer_s))` — the recorder's per-category duration
+    /// deltas across the executor call — when a recorder was enabled, else
+    /// `None` (the batch then contributes nothing: fractions over
+    /// unobserved wall would be fiction).
+    pub fn attribute(&mut self, wall_s: f64, children: Option<(f64, f64)>) {
+        if let Some((gemm_s, layer_s)) = children {
+            self.util_wall_s += wall_s.max(0.0);
+            self.util_gemm_s += gemm_s.max(0.0);
+            self.util_layer_s += layer_s.max(0.0);
+        }
+    }
+
+    pub fn audited(&self) -> u64 {
+        self.audited
+    }
+
+    pub fn skipped(&self) -> u64 {
+        self.skipped
+    }
+
+    pub fn violations(&self) -> u64 {
+        self.violations
+    }
+
+    pub fn last_violation(&self) -> Option<&str> {
+        self.last_violation.as_deref()
+    }
+
+    /// Total ratio samples across all keys (== [`DriftAudit::audited`]).
+    pub fn total_samples(&self) -> u64 {
+        self.keys.iter().map(|(_, e)| e.count()).sum()
+    }
+
+    /// Per-key drift state, sorted by (pair, kind, shape class) so reports
+    /// are deterministic regardless of batch arrival order.
+    pub fn keys(&self) -> Vec<(&DriftKey, &KeyDrift)> {
+        let mut v: Vec<_> = self.keys.iter().map(|(k, e)| (k, e)).collect();
+        v.sort_by(|a, b| a.0.cmp(b.0));
+        v
+    }
+
+    /// Utilization fractions over the attributed wall time (`None` until a
+    /// batch ran with an enabled recorder). `layer_frac` is exclusive of
+    /// nested gemm time; each fraction is clamped to [0, 1] against clock
+    /// jitter. With per-GEMM span sampling > 1 the gemm fraction
+    /// undercounts by design (sampled-out spans record no duration).
+    pub fn utilization(&self) -> Option<Utilization> {
+        if self.util_wall_s <= 0.0 {
+            return None;
+        }
+        let frac = |s: f64| (s / self.util_wall_s).clamp(0.0, 1.0);
+        let gemm = self.util_gemm_s;
+        let layer_excl = (self.util_layer_s - self.util_gemm_s).max(0.0);
+        let overhead = (self.util_wall_s - self.util_layer_s).max(0.0);
+        Some(Utilization {
+            wall_s: self.util_wall_s,
+            gemm_frac: frac(gemm),
+            layer_frac: frac(layer_excl),
+            overhead_frac: frac(overhead),
+        })
+    }
+
+    /// Human-readable lines for `Metrics::summary` (empty before any batch
+    /// was audited or attributed).
+    pub fn summary_lines(&self) -> String {
+        let mut out = String::new();
+        if self.audited > 0 {
+            let geo: Vec<f64> =
+                self.keys().iter().map(|(_, e)| e.geomean()).filter(|g| *g > 0.0).collect();
+            let (lo, hi) = geo
+                .iter()
+                .fold((f64::INFINITY, 0.0f64), |(lo, hi), g| (lo.min(*g), hi.max(*g)));
+            let _ = writeln!(
+                out,
+                "drift:    {} batches audited ({} skipped) over {} keys, \
+                 ratio geomean {:.3e}..{:.3e}, {} violations",
+                self.audited,
+                self.skipped,
+                self.keys.len(),
+                lo,
+                hi,
+                self.violations,
+            );
+            if let Some(v) = &self.last_violation {
+                let _ = writeln!(out, "          last violation: {v}");
+            }
+        }
+        if let Some(u) = self.utilization() {
+            let _ = writeln!(
+                out,
+                "util:     gemm {:.1}%, layer-other {:.1}%, overhead {:.1}% \
+                 of {:.3} s attributed wall",
+                u.gemm_frac * 100.0,
+                u.layer_frac * 100.0,
+                u.overhead_frac * 100.0,
+                u.wall_s,
+            );
+        }
+        out
+    }
+
+    /// Prometheus text lines: audit counters, per-key geomean gauges
+    /// (labels: pair/kind/class), and utilization fraction gauges.
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in [
+            ("drift_audited_batches", self.audited),
+            ("drift_skipped_batches", self.skipped),
+            ("drift_violations", self.violations),
+        ] {
+            let _ = writeln!(out, "# TYPE flexibit_{name} counter");
+            let _ = writeln!(out, "flexibit_{name} {v}");
+        }
+        if !self.keys.is_empty() {
+            let _ = writeln!(out, "# TYPE flexibit_drift_ratio_geomean gauge");
+            for (k, e) in self.keys() {
+                let _ = writeln!(
+                    out,
+                    "flexibit_drift_ratio_geomean{{pair=\"{}\",kind=\"{}\",class=\"{}\"}} {}",
+                    k.pair, k.kind, k.shape_class, e.geomean()
+                );
+            }
+        }
+        if let Some(u) = self.utilization() {
+            for (name, v) in [
+                ("util_gemm_fraction", u.gemm_frac),
+                ("util_layer_fraction", u.layer_frac),
+                ("util_overhead_fraction", u.overhead_frac),
+            ] {
+                let _ = writeln!(out, "# TYPE flexibit_{name} gauge");
+                let _ = writeln!(out, "flexibit_{name} {v}");
+            }
+        }
+        out
+    }
+
+    /// The machine-readable drift report (JSON object, schema
+    /// `flexibit.drift.v1`): audit counters, the configured bound, per-key
+    /// ratio stats sorted deterministically, and utilization attribution.
+    pub fn report_json(&self) -> String {
+        let mut out = String::from("{");
+        let _ = write!(
+            out,
+            "\"schema\":\"flexibit.drift.v1\",\
+             \"audited_batches\":{},\"skipped_batches\":{},\"violations\":{},",
+            self.audited, self.skipped, self.violations
+        );
+        let _ = write!(
+            out,
+            "\"last_violation\":{},",
+            self.last_violation.as_deref().map_or("null".to_string(), json_str)
+        );
+        match &self.bound {
+            Some(b) => {
+                let (lo, hi) = b.band.map_or(("null".into(), "null".into()), |(l, h)| {
+                    (json_num(l), json_num(h))
+                });
+                let spread =
+                    b.max_spread.map_or("null".to_string(), json_num);
+                let _ = write!(
+                    out,
+                    "\"bound\":{{\"band_lo\":{lo},\"band_hi\":{hi},\
+                     \"max_spread\":{spread},\"warmup\":{}}},",
+                    b.warmup
+                );
+            }
+            None => out.push_str("\"bound\":null,"),
+        }
+        match self.utilization() {
+            Some(u) => {
+                let _ = write!(
+                    out,
+                    "\"utilization\":{{\"wall_s\":{},\"gemm_frac\":{},\
+                     \"layer_frac\":{},\"overhead_frac\":{}}},",
+                    json_num(u.wall_s),
+                    json_num(u.gemm_frac),
+                    json_num(u.layer_frac),
+                    json_num(u.overhead_frac)
+                );
+            }
+            None => out.push_str("\"utilization\":null,"),
+        }
+        out.push_str("\"keys\":[");
+        for (i, (k, e)) in self.keys().into_iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "{{\"pair\":{},\"kind\":{},\"shape_class\":{},\"count\":{},\
+                 \"geomean\":{},\"min\":{},\"max\":{},\"p50\":{},\"p99\":{}}}",
+                json_str(&k.pair),
+                json_str(k.kind),
+                k.shape_class,
+                e.count(),
+                json_num(e.geomean()),
+                json_num(e.min()),
+                json_num(e.max()),
+                json_num(e.ratios.quantile(0.50)),
+                json_num(e.ratios.quantile(0.99)),
+            );
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_class_is_floor_log2() {
+        assert_eq!(shape_class(0), 0); // degenerate input maps like 1
+        assert_eq!(shape_class(1), 0);
+        assert_eq!(shape_class(2), 1);
+        assert_eq!(shape_class(3), 1);
+        assert_eq!(shape_class(4), 2);
+        assert_eq!(shape_class(32), 5);
+        assert_eq!(shape_class(33), 5);
+    }
+
+    #[test]
+    fn observe_partitions_by_key_and_tracks_geomean() {
+        let mut a = DriftAudit::default();
+        // Two keys: decode class 0 and prefill class 5.
+        assert!(a.observe("[6,16]", "decode", 1, 2e-3, 1e-3).is_none());
+        assert!(a.observe("[6,16]", "decode", 1, 8e-3, 1e-3).is_none());
+        assert!(a.observe("[6,16]", "prefill", 32, 1e-2, 1e-3).is_none());
+        assert_eq!(a.audited(), 3);
+        assert_eq!(a.total_samples(), 3);
+        let keys = a.keys();
+        assert_eq!(keys.len(), 2);
+        // Sorted deterministically: decode before prefill ("d" < "p").
+        assert_eq!(keys[0].0.kind, "decode");
+        let decode = keys[0].1;
+        assert_eq!(decode.count(), 2);
+        // geomean(2, 8) = 4.
+        assert!((decode.geomean() - 4.0).abs() < 1e-9, "{}", decode.geomean());
+        assert_eq!(decode.min(), 2.0);
+        assert_eq!(decode.max(), 8.0);
+    }
+
+    #[test]
+    fn degenerate_batches_are_skipped_not_audited() {
+        let mut a = DriftAudit::default();
+        a.observe("[6,16]", "decode", 0, 1e-3, 1e-3); // no tokens
+        a.observe("[6,16]", "decode", 1, 1e-3, 0.0); // no predicted cost
+        a.observe("[6,16]", "decode", 1, 0.0, 1e-3); // no measured cost
+        assert_eq!(a.audited(), 0);
+        assert_eq!(a.skipped(), 3);
+        assert_eq!(a.violations(), 0);
+    }
+
+    #[test]
+    fn band_gate_trips_on_absolute_miscalibration() {
+        let mut a = DriftAudit::default();
+        a.bound = Some(DriftBound { band: Some((1.0, 10.0)), max_spread: None, warmup: 0 });
+        assert!(a.observe("[8,8]", "prefill", 8, 5e-3, 1e-3).is_none(), "ratio 5 in band");
+        let v = a.observe("[8,8]", "prefill", 8, 5.0, 1e-3);
+        assert!(v.is_some(), "ratio 5000 must trip the band");
+        assert!(v.unwrap().contains("outside band"));
+        assert_eq!(a.violations(), 1);
+        assert!(a.last_violation().is_some());
+        // Violating samples still enter the distribution (they happened).
+        assert_eq!(a.audited(), 2);
+    }
+
+    #[test]
+    fn spread_gate_self_calibrates_and_honors_warmup() {
+        let mut a = DriftAudit::default();
+        a.bound = Some(DriftBound { band: None, max_spread: Some(4.0), warmup: 1 });
+        // Warmup sample: enormous ratio (cold weight packing), not gated.
+        assert!(a.observe("[6,6]", "decode", 1, 1.0, 1e-3).is_none());
+        // Steady state establishes geomean near 1e3 (the warmup sample).
+        assert!(a.observe("[6,6]", "decode", 1, 2.0, 1e-3).is_none(), "2x off, within 4x");
+        // 100x off the geomean: trips.
+        let g_before = a.keys()[0].1.geomean();
+        let v = a.observe("[6,6]", "decode", 1, 100.0 * g_before * 1e-3, 1e-3);
+        assert!(v.is_some(), "100x excursion must trip the spread gate");
+        assert!(v.unwrap().contains("off the"));
+        // A different key starts its own warmup: no cross-key gating.
+        assert!(a.observe("[8,8]", "decode", 1, 1.0, 1e-3).is_none());
+    }
+
+    #[test]
+    fn no_bound_means_observe_never_trips() {
+        let mut a = DriftAudit::default();
+        for i in 1..=10u64 {
+            assert!(a.observe("[6,16]", "mixed", 7, i as f64, 1e-6).is_none());
+        }
+        assert_eq!(a.violations(), 0);
+        assert_eq!(a.audited(), 10);
+    }
+
+    #[test]
+    fn utilization_fractions_partition_wall() {
+        let mut a = DriftAudit::default();
+        assert!(a.utilization().is_none(), "nothing attributed yet");
+        a.attribute(1.0, None); // disabled recorder: contributes nothing
+        assert!(a.utilization().is_none());
+        // wall 1.0: 0.4 in gemms, 0.7 inside layers (0.3 layer-exclusive).
+        a.attribute(1.0, Some((0.4, 0.7)));
+        let u = a.utilization().unwrap();
+        assert!((u.wall_s - 1.0).abs() < 1e-12);
+        assert!((u.gemm_frac - 0.4).abs() < 1e-12);
+        assert!((u.layer_frac - 0.3).abs() < 1e-12);
+        assert!((u.overhead_frac - 0.3).abs() < 1e-12);
+        // Jittered inputs (children exceed wall) clamp, never exceed 1.
+        let mut b = DriftAudit::default();
+        b.attribute(1.0, Some((1.5, 1.5)));
+        let u = b.utilization().unwrap();
+        assert!(u.gemm_frac <= 1.0 && u.layer_frac <= 1.0 && u.overhead_frac <= 1.0);
+    }
+
+    #[test]
+    fn report_json_is_valid_and_deterministic() {
+        let mut a = DriftAudit::default();
+        a.bound = Some(DriftBound::default());
+        a.observe("[6,16]", "prefill", 32, 1e-2, 1e-3);
+        a.observe("[6,16]", "decode", 2, 2e-3, 1e-3);
+        a.attribute(0.5, Some((0.2, 0.3)));
+        let j = a.report_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"schema\":\"flexibit.drift.v1\""));
+        assert!(j.contains("\"audited_batches\":2"));
+        assert!(j.contains("\"max_spread\":64"));
+        assert!(j.contains("\"pair\":\"[6,16]\""));
+        assert!(j.contains("\"utilization\":{"));
+        // Deterministic: same state renders byte-identically.
+        assert_eq!(j, a.report_json());
+        // Keys sort by (pair, kind): decode precedes prefill.
+        let d = j.find("\"kind\":\"decode\"").unwrap();
+        let p = j.find("\"kind\":\"prefill\"").unwrap();
+        assert!(d < p);
+        // Cloning carries the full audit state (Metrics snapshots do this).
+        assert_eq!(a.clone().report_json(), j);
+    }
+
+    #[test]
+    fn summary_and_prometheus_render_nonempty_after_observe() {
+        let mut a = DriftAudit::default();
+        assert_eq!(a.summary_lines(), "");
+        a.observe("[6,16]", "decode", 1, 2e-3, 1e-3);
+        a.attribute(1.0, Some((0.5, 0.8)));
+        let s = a.summary_lines();
+        assert!(s.contains("drift:") && s.contains("util:"), "{s}");
+        let p = a.prometheus_text();
+        assert!(p.contains("flexibit_drift_audited_batches 1"));
+        assert!(p.contains(
+            "flexibit_drift_ratio_geomean{pair=\"[6,16]\",kind=\"decode\",class=\"0\"}"
+        ));
+        assert!(p.contains("flexibit_util_gemm_fraction 0.5"));
+        // Empty audit still exports its counters (stable scrape shape).
+        let p0 = DriftAudit::default().prometheus_text();
+        assert!(p0.contains("flexibit_drift_audited_batches 0"));
+        assert!(!p0.contains("geomean{"), "no per-key series before data");
+    }
+}

@@ -8,6 +8,7 @@
 //! renders the recorder's kernel counters as Prometheus text-format
 //! counters; the coordinator composes the full scrape text around it.
 
+use super::hist::Histogram;
 use super::recorder::{ArgValue, Recorder, SpanEvent, PID_EXEC, PID_REQUEST};
 use std::fmt::Write as _;
 
@@ -69,7 +70,9 @@ fn json_value(v: &ArgValue) -> String {
     }
 }
 
-fn json_str(s: &str) -> String {
+/// JSON-escape and quote a string (shared by every hand-rolled JSON
+/// emitter in the crate: traces, drift reports, loadgen reports).
+pub fn json_str(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for ch in s.chars() {
@@ -86,6 +89,36 @@ fn json_str(s: &str) -> String {
         }
     }
     out.push('"');
+    out
+}
+
+/// Render a JSON number that is always parseable: finite floats verbatim,
+/// NaN/±Inf as `null` (JSON has no spelling for them).
+pub fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Render one histogram as a real Prometheus `histogram` metric:
+/// cumulative `_bucket{le="..."}` series at the exact log2 bucket upper
+/// edges (non-empty buckets only — a 96-bucket histogram scrapes
+/// proportional to its data), the mandatory `+Inf` bucket, and the exact
+/// `_sum`/`_count`. The top (saturation) bucket reports through `+Inf`
+/// rather than inventing a finite edge for out-of-range samples.
+pub fn prometheus_histogram(name: &str, h: &Histogram) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "# TYPE flexibit_{name} histogram");
+    for (le, cum) in h.cumulative_buckets() {
+        if le.is_finite() {
+            let _ = writeln!(out, "flexibit_{name}_bucket{{le=\"{le}\"}} {cum}");
+        }
+    }
+    let _ = writeln!(out, "flexibit_{name}_bucket{{le=\"+Inf\"}} {}", h.count());
+    let _ = writeln!(out, "flexibit_{name}_sum {}", h.sum());
+    let _ = writeln!(out, "flexibit_{name}_count {}", h.count());
     out
 }
 
@@ -146,6 +179,37 @@ mod tests {
         let trace = chrome_trace(&[ev]);
         assert!(trace.contains("\\\"b\\\\c\\n"), "strings are JSON-escaped");
         assert!(trace.contains("\"nan\":null"), "non-finite floats become null");
+    }
+
+    #[test]
+    fn prometheus_histogram_emits_cumulative_buckets() {
+        let mut h = Histogram::new();
+        for v in [1e-3, 1e-3, 0.1] {
+            h.record(v);
+        }
+        h.record(1e300); // saturates the top bucket
+        let text = prometheus_histogram("request_latency_seconds", &h);
+        assert!(text.contains("# TYPE flexibit_request_latency_seconds histogram"));
+        // Buckets are cumulative: the two 1ms samples, then +1 at 100ms.
+        let bucket_lines: Vec<&str> =
+            text.lines().filter(|l| l.contains("_bucket{le=")).collect();
+        assert!(bucket_lines.len() >= 3, "two finite buckets plus +Inf: {text}");
+        assert!(bucket_lines[0].ends_with(" 2"), "first bucket holds both 1ms samples");
+        assert!(
+            text.contains("flexibit_request_latency_seconds_bucket{le=\"+Inf\"} 4"),
+            "+Inf bucket equals the count: {text}"
+        );
+        assert!(text.contains("flexibit_request_latency_seconds_count 4"));
+        // Ascending le edges (Prometheus requires it).
+        let les: Vec<f64> = bucket_lines
+            .iter()
+            .filter_map(|l| l.split("le=\"").nth(1)?.split('"').next()?.parse().ok())
+            .collect();
+        assert!(les.windows(2).all(|w| w[0] < w[1]), "le edges ascend: {les:?}");
+        // Empty histogram: just the +Inf bucket and zero sum/count.
+        let empty = prometheus_histogram("x", &Histogram::new());
+        assert!(empty.contains("flexibit_x_bucket{le=\"+Inf\"} 0"));
+        assert!(empty.contains("flexibit_x_count 0"));
     }
 
     #[test]

@@ -104,6 +104,32 @@ impl Histogram {
         self.max
     }
 
+    /// Cumulative bucket counts for Prometheus-style histogram export:
+    /// `(upper_bound, cumulative_count)` for every non-empty bucket, in
+    /// increasing bucket order. Upper bounds are the exact log2 bucket
+    /// edges `2^(MIN_EXP+i+1)`; the top (clamp) bucket reports `+Inf`
+    /// because out-of-range samples saturate into it, so a finite edge
+    /// would lie about what the bucket contains. Empty buckets are skipped
+    /// (they add nothing to the cumulative counts), which keeps scrapes of
+    /// a 96-bucket histogram proportional to the data, not the range.
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            cum += n;
+            let upper = if i == BUCKETS - 1 {
+                f64::INFINITY
+            } else {
+                2f64.powi(MIN_EXP + i as i32 + 1)
+            };
+            out.push((upper, cum));
+        }
+        out
+    }
+
     /// Fold another histogram into this one (bucket-wise add).
     pub fn merge(&mut self, other: &Histogram) {
         for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
@@ -191,6 +217,83 @@ mod tests {
         h.record(1e300);
         assert_eq!(h.count(), 3);
         assert!(h.quantile(1.0) <= h.max());
+    }
+
+    #[test]
+    fn empty_histogram_exports_no_buckets() {
+        let h = Histogram::new();
+        assert!(h.cumulative_buckets().is_empty());
+        // Quantiles on emptiness are 0 across the whole range, not NaN.
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 0.0);
+        }
+    }
+
+    #[test]
+    fn zero_and_negative_records_collapse_into_bottom_bucket() {
+        let mut h = Histogram::new();
+        h.record(0.0);
+        h.record(-1.0); // negative durations clamp to 0 (clock skew, not data)
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.sum(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        let b = h.cumulative_buckets();
+        assert_eq!(b.len(), 1, "all mass in the bottom bucket");
+        assert_eq!(b[0].1, 2);
+        assert_eq!(b[0].0, 2f64.powi(MIN_EXP + 1), "bottom bucket's exact upper edge");
+        assert_eq!(h.quantile(1.0), 0.0, "quantile capped at the exact max");
+    }
+
+    #[test]
+    fn top_bucket_saturation_reports_infinite_edge() {
+        let mut h = Histogram::new();
+        // Far beyond the 2^56 top edge: clamps into the last bucket.
+        for _ in 0..3 {
+            h.record(1e300);
+        }
+        h.record(1.0);
+        let b = h.cumulative_buckets();
+        assert_eq!(b.len(), 2);
+        assert!(b[0].0.is_finite());
+        assert_eq!(b[0].1, 1);
+        assert_eq!(b[1].0, f64::INFINITY, "the clamp bucket must not claim a finite edge");
+        assert_eq!(b[1].1, 4, "cumulative count reaches the total");
+        // Quantiles in the saturated bucket cap at the exact observed max.
+        assert_eq!(h.quantile(0.99), 1e300);
+        assert_eq!(h.max(), 1e300);
+        assert_eq!(h.sum(), 3e300 + 1.0);
+    }
+
+    #[test]
+    fn merge_with_mismatched_counts_keeps_exact_stats() {
+        // Heavily imbalanced sides: 1 sample vs 1000 in a different bucket.
+        let mut small = Histogram::new();
+        small.record(1e-3);
+        let mut big = Histogram::new();
+        for _ in 0..1000 {
+            big.record(1.0);
+        }
+        small.merge(&big);
+        assert_eq!(small.count(), 1001);
+        assert_eq!(small.sum(), 1e-3 + 1000.0);
+        assert_eq!(small.max(), 1.0);
+        // The big side dominates every mid/tail quantile.
+        assert!((0.5..=2.0).contains(&small.quantile(0.5)));
+        // Cumulative export covers both buckets and integrates to the count.
+        let b = small.cumulative_buckets();
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.last().unwrap().1, 1001);
+
+        // Merging an empty histogram (either direction) is a no-op on stats.
+        let empty = Histogram::new();
+        let before = (small.count(), small.sum(), small.max());
+        small.merge(&empty);
+        assert_eq!((small.count(), small.sum(), small.max()), before);
+        let mut fresh = Histogram::new();
+        fresh.merge(&small);
+        assert_eq!(fresh.count(), small.count());
+        assert_eq!(fresh.sum(), small.sum());
+        assert_eq!(fresh.max(), small.max());
     }
 
     #[test]

@@ -26,11 +26,19 @@
 //!   counters; `Metrics::prometheus_text` composes the full scrape), and
 //!   the human-readable `Metrics::summary` in the coordinator.
 
+//! * [`audit`] — the sim-vs-measured drift auditor: per-(pair, kind,
+//!   shape-class) ratio histograms joining every `batch.execute` span with
+//!   its co-simulated predicted cost, per-batch utilization attribution
+//!   from child-span durations, and a configurable [`DriftBound`] that
+//!   fails loudly when the analytical model and the hot path diverge.
+
+pub mod audit;
 mod export;
 mod hist;
 mod recorder;
 
-pub use export::{chrome_trace, prometheus_counters};
+pub use audit::{shape_class, DriftAudit, DriftBound, DriftKey, KeyDrift, Utilization};
+pub use export::{chrome_trace, json_num, json_str, prometheus_counters, prometheus_histogram};
 pub use hist::Histogram;
 pub use recorder::{
     add, count, recorder, thread_tid, with_current, ArgValue, Counter, Recorder, SpanEvent,

@@ -182,6 +182,17 @@ struct Sink {
     capacity: usize,
     kernel_sample: u32,
     sample_seq: AtomicU64,
+    /// Cumulative recorded span time (ns) for `cat == "kernel"` (per-GEMM)
+    /// and `cat == "model"` (per-layer) spans. Accumulated at span
+    /// completion, before capacity enforcement, so the totals stay exact
+    /// even when the event buffer saturates and drops spans. They feed
+    /// per-batch utilization attribution: the server snapshots them around
+    /// each executor call (same-thread, so the delta is exactly this
+    /// batch's recorded time). Per-GEMM sampling (`kernel_sample > 1`)
+    /// *does* undercount kernel time — attribution is honest only at
+    /// sampling 1, and the audit layer says so.
+    kernel_dur_ns: AtomicU64,
+    model_dur_ns: AtomicU64,
 }
 
 impl Sink {
@@ -230,6 +241,8 @@ impl Recorder {
                 capacity,
                 kernel_sample: kernel_sample.max(1),
                 sample_seq: AtomicU64::new(0),
+                kernel_dur_ns: AtomicU64::new(0),
+                model_dur_ns: AtomicU64::new(0),
             })),
         }
     }
@@ -325,8 +338,33 @@ impl Recorder {
         }
     }
 
+    /// Cumulative recorded span time in seconds for category `cat`
+    /// (`"kernel"` or `"model"`; anything else — and a disabled recorder —
+    /// reads 0). Monotone; callers snapshot before/after a scope to
+    /// attribute its time. ~584 years of span time fit in the u64 ns
+    /// accumulator, so wrap-around is not a practical concern.
+    pub fn span_dur_s(&self, cat: &str) -> f64 {
+        let Some(s) = &self.sink else { return 0.0 };
+        let ns = match cat {
+            "kernel" => s.kernel_dur_ns.load(Ordering::Relaxed),
+            "model" => s.model_dur_ns.load(Ordering::Relaxed),
+            _ => 0,
+        };
+        ns as f64 * 1e-9
+    }
+
     fn push(&self, ev: SpanEvent) {
         let sink = self.sink.as_ref().expect("push requires an enabled recorder");
+        let dur_ns = (ev.dur_us * 1e3) as u64;
+        match ev.cat {
+            "kernel" => {
+                sink.kernel_dur_ns.fetch_add(dur_ns, Ordering::Relaxed);
+            }
+            "model" => {
+                sink.model_dur_ns.fetch_add(dur_ns, Ordering::Relaxed);
+            }
+            _ => {}
+        }
         LOCAL_BUF.with(|b| {
             let mut b = b.borrow_mut();
             match &b.sink {
@@ -530,6 +568,27 @@ mod tests {
         r.flush();
         assert_eq!(r.events().len(), 4);
         assert_eq!(r.dropped_events(), 6);
+    }
+
+    #[test]
+    fn category_durations_accumulate_past_capacity() {
+        // Capacity 1: the second span is dropped from the event buffer, but
+        // the per-category duration accumulator must still see it.
+        let r = Recorder::with_config(1, 1);
+        for _ in 0..2 {
+            let t0 = r.begin().unwrap();
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            r.end_span(t0, "gemm", "kernel", Vec::new());
+        }
+        let t0 = r.begin().unwrap();
+        r.end_span(t0, "layer", "model", Vec::new());
+        r.flush();
+        assert!(r.dropped_events() >= 1, "capacity 1 must drop spans");
+        let kernel_s = r.span_dur_s("kernel");
+        assert!(kernel_s >= 2.0 * 200e-6, "both kernel spans counted: {kernel_s}");
+        assert!(r.span_dur_s("model") >= 0.0);
+        assert_eq!(r.span_dur_s("serve"), 0.0, "only kernel/model are attributed");
+        assert_eq!(Recorder::disabled().span_dur_s("kernel"), 0.0);
     }
 
     #[test]

@@ -1,0 +1,202 @@
+//! End-to-end tests of the traffic harness + drift auditor: seeded load
+//! against the real native engine is bit-reproducible and fully audited,
+//! and a deliberately mis-calibrated simulator config trips the drift gate.
+
+use flexibit::coordinator::{Batch, BatchPolicy, FnExecutor, Metrics, Phase, Server, ServerConfig};
+use flexibit::kernels::NativeExecutor;
+use flexibit::loadgen::{run, Arrival, Dist, LoadReport, Scenario};
+use flexibit::obs::{DriftBound, Recorder};
+use flexibit::sim::AcceleratorConfig;
+use flexibit::workload::{ModelSpec, PrecisionPair};
+use std::time::Duration;
+
+fn pairs() -> Vec<PrecisionPair> {
+    vec![PrecisionPair::of_bits(6, 6), PrecisionPair::of_bits(8, 8)]
+}
+
+/// Mixed prefill/decode over two precision pairs — the CI scenario shape.
+fn scenario(seed: u64) -> Scenario {
+    Scenario {
+        seed,
+        sessions: 6,
+        arrival: Arrival::Closed { concurrency: 3, think_s: 0.0 },
+        prefill_len: Dist::Uniform(2, 6),
+        decode_steps: Dist::Fixed(3),
+        pairs: pairs(),
+    }
+}
+
+/// Run one seeded scenario against the real native engine; metrics are
+/// refreshed post-shutdown so trailing End batches are folded in.
+fn native_run(seed: u64) -> LoadReport {
+    let spec = ModelSpec::tiny();
+    let executor = NativeExecutor::new().with_model(spec.clone(), 0xF1E81B);
+    let server = Server::start(
+        ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                max_streak: 4,
+            },
+            sim_config: flexibit::sim::mobile_a(),
+            sim_model: spec.clone(),
+            recorder: Recorder::disabled(),
+            drift: None,
+        },
+        Box::new(executor),
+    );
+    let mut report = run(&server, &spec, &scenario(seed), Duration::from_secs(120));
+    report.metrics = server.shutdown();
+    report
+}
+
+#[test]
+fn seeded_load_is_bit_reproducible_on_the_native_engine() {
+    let a = native_run(7);
+    let b = native_run(7);
+    assert!(!a.timed_out && !b.timed_out);
+    // Same seed => same request schedule (digest over the full plan) and
+    // the same completion counts, token for token.
+    assert_eq!(a.digest, b.digest);
+    assert_eq!(a.counts.submitted, b.counts.submitted);
+    assert_eq!(a.counts.completed, b.counts.completed);
+    assert_eq!(a.counts.prefill_tokens, b.counts.prefill_tokens);
+    assert_eq!(a.counts.decode_tokens, b.counts.decode_tokens);
+    assert_eq!(a.counts.completed, 6 * 4, "1 prefill + Fixed(3) decodes per session");
+    assert_eq!(a.counts.failed, 0);
+    // A different seed reshuffles the schedule.
+    assert_ne!(native_run(8).digest, a.digest);
+
+    // Per-phase latency reporting comes from real histogram data.
+    let m = &a.metrics;
+    assert_eq!(m.prefill_latency.count(), 6);
+    assert_eq!(m.decode_latency.count(), 18);
+    for h in [&m.prefill_latency, &m.decode_latency, &m.latency] {
+        let (p50, p95, p99) = (h.quantile(0.50), h.quantile(0.95), h.quantile(0.99));
+        assert!(p50 > 0.0 && p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+    }
+    assert!(a.wall_s > 0.0 && m.throughput_rps(a.wall_s) > 0.0, "goodput from the run");
+
+    // The machine-readable report carries the phase split and the digest.
+    let j = a.json();
+    assert!(j.contains("\"schema\":\"flexibit.loadgen.v1\""));
+    assert!(j.contains(&format!("\"digest\":\"{}\"", a.digest)));
+    assert!(j.contains("\"prefill\":{\"count\":6"));
+    assert!(j.contains("\"decode\":{\"count\":18"));
+    assert_eq!(j.matches('{').count(), j.matches('}').count(), "balanced: {j}");
+}
+
+#[test]
+fn drift_audit_has_one_entry_per_executed_batch_under_load() {
+    let rep = native_run(7);
+    let d = &rep.metrics.drift;
+    assert!(d.audited() > 0, "drift histograms must be populated");
+    assert_eq!(
+        d.audited() + d.skipped(),
+        rep.metrics.batches_executed,
+        "every executed batch lands in the audit exactly once"
+    );
+    assert_eq!(d.total_samples(), d.audited());
+    assert_eq!(d.violations(), 0, "no bound configured");
+    // Both precision pairs produced their own ratio populations.
+    let report = rep.metrics.drift_report();
+    for pair in pairs() {
+        assert!(
+            report.contains(&format!("\"pair\":\"{}\"", pair.label())),
+            "missing {} in {report}",
+            pair.label()
+        );
+    }
+}
+
+/// A stub executor whose measured cost is an exact deterministic function
+/// of the batch's token content — so the measured/predicted ratio depends
+/// only on shapes, and a mis-calibrated simulator is unambiguously visible.
+fn token_cost_executor() -> FnExecutor<impl FnMut(&Batch) -> Result<f64, String> + Send> {
+    FnExecutor(|b: &Batch| -> Result<f64, String> {
+        let tokens: usize = b
+            .requests
+            .iter()
+            .map(|r| match r.phase {
+                Phase::Decode => 1,
+                Phase::End => 0,
+                Phase::Prefill => r.dims.first().copied().unwrap_or(1),
+            })
+            .sum();
+        Ok(1e-4 * tokens as f64)
+    })
+}
+
+fn stub_model() -> ModelSpec {
+    ModelSpec {
+        seq: 8,
+        layers: 1,
+        d_model: 32,
+        d_ff: 64,
+        heads: 2,
+        kv_heads: 2,
+        gated_ffn: false,
+        name: "tiny",
+    }
+}
+
+fn gated_run(sim_config: AcceleratorConfig, drift: Option<DriftBound>) -> Metrics {
+    let spec = stub_model();
+    let server = Server::start(
+        ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                max_streak: 4,
+            },
+            sim_config,
+            sim_model: spec.clone(),
+            recorder: Recorder::disabled(),
+            drift,
+        },
+        Box::new(token_cost_executor()),
+    );
+    let rep = run(&server, &spec, &scenario(7), Duration::from_secs(60));
+    assert!(!rep.timed_out);
+    server.shutdown()
+}
+
+#[test]
+fn drift_gate_trips_on_a_miscalibrated_sim_config() {
+    // Calibrate: observe the honest ratio range, no gate.
+    let calib = gated_run(flexibit::sim::mobile_a(), None);
+    assert!(calib.drift.audited() > 0);
+    let (mut lo, mut hi) = (f64::INFINITY, 0.0f64);
+    for (_, e) in calib.drift.keys() {
+        lo = lo.min(e.min());
+        hi = hi.max(e.max());
+    }
+    assert!(lo.is_finite() && lo > 0.0 && hi >= lo);
+    // A 10x-slack band around the calibration: the same workload against
+    // the same sim config stays inside it (batch ratios are weighted means
+    // of per-request ratios, so batching nondeterminism cannot escape a
+    // 10x margin around the observed extremes).
+    let band = Some((lo / 10.0, hi * 10.0));
+    let good = gated_run(
+        flexibit::sim::mobile_a(),
+        Some(DriftBound { band, max_spread: None, warmup: 0 }),
+    );
+    assert_eq!(good.drift.violations(), 0, "calibrated config must pass its own band");
+    assert!(good.drift.audited() > 0);
+
+    // Mis-calibrate the analytical model: claim the accelerator is 1e7x
+    // faster across compute, DRAM, and NoC. Predicted cost collapses, every
+    // ratio inflates ~1e7x, and the gate must fire.
+    let mut lying = flexibit::sim::mobile_a();
+    lying.clock_hz *= 1e7;
+    lying.offchip_bw *= 1e7;
+    lying.noc_bw *= 1e7;
+    let bad = gated_run(lying, Some(DriftBound { band, max_spread: None, warmup: 0 }));
+    assert!(
+        bad.drift.violations() > 0,
+        "a 1e7x sim mis-calibration must trip the drift gate"
+    );
+    assert!(bad.drift.last_violation().unwrap().contains("outside band"));
+    // The gate reports loudly but does not drop traffic.
+    assert_eq!(bad.requests_completed, calib.requests_completed);
+}

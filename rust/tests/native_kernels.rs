@@ -293,6 +293,7 @@ fn server_serves_mixed_precision_natively() {
         sim_config: flexibit::sim::mobile_a(),
         sim_model: spec.clone(),
         recorder: flexibit::obs::Recorder::disabled(),
+        drift: None,
     };
     let server = Server::start(cfg, Box::new(executor));
     let pairs = [
@@ -720,6 +721,7 @@ fn served_token_streams_match_offline_decode() {
         sim_config: flexibit::sim::mobile_a(),
         sim_model: spec.clone(),
         recorder: flexibit::obs::Recorder::disabled(),
+        drift: None,
     };
     let server = Server::start(cfg, Box::new(executor));
     let session_specs = (0..n_sessions)

@@ -57,6 +57,13 @@ pub struct Request {
     pub phase: Phase,
     /// Per-request result slot the worker fulfills (None = fire-and-forget).
     pub done: Option<Completion>,
+    /// Execution attempt (0 = first try). The server bumps it when a failed
+    /// request is re-enqueued under the retry policy; only the attempt that
+    /// settles the request fulfills its completion slot.
+    pub attempt: u32,
+    /// Absolute deadline; past it the request resolves `Err` at dequeue/cut
+    /// without executing. `None` inherits the server default (if any).
+    pub deadline: Option<Instant>,
 }
 
 impl Request {
@@ -78,6 +85,8 @@ impl Request {
             session: 0,
             phase: Phase::Prefill,
             done: None,
+            attempt: 0,
+            deadline: None,
         }
     }
 
@@ -98,6 +107,20 @@ impl Request {
     pub fn with_arrival(mut self, t: Instant) -> Self {
         self.arrived = t;
         self
+    }
+
+    /// Set an absolute deadline: past it the request resolves
+    /// `Err` without executing.
+    pub fn with_deadline(mut self, t: Instant) -> Self {
+        self.deadline = Some(t);
+        self
+    }
+
+    /// Set the deadline relative to the arrival stamp (`--deadline-ms`
+    /// semantics: the budget covers queueing *and* execution).
+    pub fn with_deadline_in(self, budget: Duration) -> Self {
+        let t = self.arrived + budget;
+        self.with_deadline(t)
     }
 }
 

@@ -9,6 +9,12 @@
 //! blocks on it (simple callers). Cloning shares the slot, so the handle
 //! travels inside the queued [`super::Request`] while the submitter keeps
 //! its twin.
+//!
+//! Write-once is what makes retries idempotent-safe: a retried request's
+//! earlier attempts never call [`Completion::fulfill`] at all (the server
+//! re-enqueues instead of settling), and even a buggy double-settle cannot
+//! flip an already-resolved slot — the first write wins, so a submitter
+//! observes exactly one terminal result per request.
 
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};

@@ -160,7 +160,7 @@ mod tests {
                     }
                 })
                 .collect();
-            Ok(BatchResult { host_s: 0.0, outputs })
+            Ok(BatchResult { host_s: 0.0, outputs, faulted: false })
         }
     }
 
@@ -176,6 +176,7 @@ mod tests {
             sim_model: tiny(),
             recorder: crate::obs::Recorder::disabled(),
             drift: None,
+            resilience: crate::coordinator::Resilience::default(),
         };
         let server = Server::start(cfg, Box::new(FailSession2Decode));
         let pair = PrecisionPair::of_bits(6, 16);

@@ -12,6 +12,12 @@
 //! per batch. Requests may be stateless blocks or token-stream sessions
 //! (one [`Phase::Prefill`] opening the KV cache, then [`Phase::Decode`]
 //! steps).
+//!
+//! The worker is fault-tolerant (see [`Resilience`]): executor panics are
+//! contained per batch, failed
+//! requests retry with backoff and bit-exact KV rollback, deadlines and a
+//! bounded queue with prefill-first shedding give overload behavior that
+//! degrades instead of collapsing.
 
 mod batcher;
 mod completion;
@@ -21,4 +27,7 @@ mod server;
 pub use batcher::{Batch, BatchPolicy, Batcher, Phase, Request};
 pub use completion::{Completion, RequestResult};
 pub use driver::StreamDriver;
-pub use server::{BatchResult, Executor, FnExecutor, Metrics, Server, ServerConfig};
+pub use server::{
+    BatchResult, Executor, FnExecutor, Metrics, Resilience, Server, ServerConfig, ERR_DEADLINE,
+    ERR_SHED,
+};

@@ -14,6 +14,17 @@
 //! (bounded by the fairness streak), so token streams never wait out the
 //! batching budget behind prefill traffic.
 //!
+//! The loop is **fault-tolerant** (see [`Resilience`]): executor panics are
+//! caught per batch (the worker survives and keeps draining), failed
+//! requests re-enqueue with exponential backoff up to `max_retries` — a
+//! decode retry first rolls its session's KV back to the ledger's committed
+//! token count so the re-executed step is bit-identical to a first attempt
+//! — per-request deadlines settle expired work at batch cut without
+//! executing it, and a bounded queue sheds new prefills (never in-flight
+//! decode streams) once it backs up, surfacing as `degraded` in
+//! [`Metrics`]. A completion slot is write-once, so only the attempt that
+//! finally settles a request resolves it.
+//!
 //! When [`ServerConfig::recorder`] is enabled the worker additionally
 //! traces the serving lifecycle: `request` / `request.queue` /
 //! `request.exec` spans per successful request (queue wait split from
@@ -79,6 +90,27 @@ pub struct Metrics {
     pub sessions_started: u64,
     /// Autoregressive decode steps completed.
     pub decode_steps: u64,
+    /// Failed attempts re-enqueued under the retry policy (per attempt, so
+    /// one request retried twice counts 2).
+    pub retries: u64,
+    /// Requests that completed on a retry attempt (attempt > 0) — the
+    /// recovered half of `retries`.
+    pub retry_success: u64,
+    /// Prefill requests rejected at submit by the admission-control queue
+    /// bound (their completions resolve [`ERR_SHED`] without executing).
+    pub requests_shed: u64,
+    /// Requests whose deadline expired before execution (resolved
+    /// [`ERR_DEADLINE`] at dequeue/batch cut, never executed).
+    pub requests_failed_deadline: u64,
+    /// Executor panics caught by the worker's isolation boundary; each also
+    /// counts in `batches_failed` once its requests exhaust their retries.
+    pub batches_panicked: u64,
+    /// Backoff delay scheduled per retry, seconds (count tracks `retries`).
+    pub retry_backoff: Histogram,
+    /// Admission-control state: set when a request is shed, cleared once
+    /// the queue drains below half its bound (hysteresis, so the flag does
+    /// not flap at the boundary). See [`Metrics::health`].
+    pub degraded: bool,
     /// Sim-vs-measured drift auditor: per-(pair, kind, shape-class) ratio
     /// histograms joining every executed batch's wall time with its
     /// co-simulated predicted cost, plus utilization attribution. Every
@@ -97,10 +129,23 @@ fn ratio(num: f64, den: f64) -> f64 {
 }
 
 impl Metrics {
-    /// Requests that failed for any reason (executor error or
-    /// shutdown-settled).
+    /// Requests that failed for any reason: executor error,
+    /// shutdown-settled, deadline-expired, or shed at admission.
     pub fn requests_failed(&self) -> u64 {
-        self.requests_failed_exec + self.requests_failed_shutdown
+        self.requests_failed_exec
+            + self.requests_failed_shutdown
+            + self.requests_failed_deadline
+            + self.requests_shed
+    }
+
+    /// Healthy/Degraded serving state (the admission-control view; see
+    /// [`Metrics::degraded`]).
+    pub fn health(&self) -> &'static str {
+        if self.degraded {
+            "degraded"
+        } else {
+            "healthy"
+        }
     }
 
     /// Requests that left the system, successfully or not — the drain
@@ -182,6 +227,23 @@ impl Metrics {
                 self.decode_latency.quantile(0.99) * ms,
             );
         }
+        let faults = self.retries
+            + self.requests_shed
+            + self.requests_failed_deadline
+            + self.batches_panicked;
+        if faults > 0 || self.degraded {
+            let _ = writeln!(
+                out,
+                "faults:   {} retries ({} recovered), {} shed, {} deadline misses, \
+                 {} panics caught, state {}",
+                self.retries,
+                self.retry_success,
+                self.requests_shed,
+                self.requests_failed_deadline,
+                self.batches_panicked,
+                self.health(),
+            );
+        }
         out.push_str(&self.drift.summary_lines());
         let _ = writeln!(
             out,
@@ -202,26 +264,32 @@ impl Metrics {
     /// so the scrape shape is stable).
     pub fn prometheus_text(&self, recorder: &Recorder, wall_s: f64) -> String {
         let mut out = String::new();
-        let counters: [(&str, u64); 9] = [
+        let counters: [(&str, u64); 14] = [
             ("requests_completed", self.requests_completed),
             ("requests_failed_exec", self.requests_failed_exec),
             ("requests_failed_shutdown", self.requests_failed_shutdown),
+            ("requests_failed_deadline", self.requests_failed_deadline),
+            ("requests_shed", self.requests_shed),
             ("batches_executed", self.batches_executed),
             ("batches_failed", self.batches_failed),
+            ("batches_panicked", self.batches_panicked),
             ("total_batch_size", self.total_batch_size),
             ("reconfigurations", self.reconfigurations),
             ("sessions_started", self.sessions_started),
             ("decode_steps", self.decode_steps),
+            ("retries", self.retries),
+            ("retry_success", self.retry_success),
         ];
         for (name, v) in counters {
             let _ = writeln!(out, "# TYPE flexibit_{name} counter");
             let _ = writeln!(out, "flexibit_{name} {v}");
         }
-        let gauges: [(&str, f64); 4] = [
+        let gauges: [(&str, f64); 5] = [
             ("host_exec_seconds", self.host_exec_s),
             ("sim_accel_seconds", self.sim_accel_s),
             ("sim_energy_joules", self.sim_energy_j),
             ("throughput_rps", self.throughput_rps(wall_s)),
+            ("degraded", if self.degraded { 1.0 } else { 0.0 }),
         ];
         for (name, v) in gauges {
             let _ = writeln!(out, "# TYPE flexibit_{name} gauge");
@@ -244,12 +312,13 @@ impl Metrics {
     }
 
     /// The serving histograms by stable export name.
-    fn histograms(&self) -> [(&'static str, &Histogram); 4] {
+    fn histograms(&self) -> [(&'static str, &Histogram); 5] {
         [
             ("request_latency_seconds", &self.latency),
             ("prefill_latency_seconds", &self.prefill_latency),
             ("decode_latency_seconds", &self.decode_latency),
             ("batch_size", &self.batch_size),
+            ("retry_backoff_seconds", &self.retry_backoff),
         ]
     }
 
@@ -261,10 +330,11 @@ impl Metrics {
     }
 
     /// Machine-readable serving report (JSON object, schema
-    /// `flexibit.metrics.v1`): the same shape `loadgen` embeds in its own
-    /// report, written standalone by `serve --metrics-out`.
+    /// `flexibit.metrics.v2` — v2 added the `robustness` member and the
+    /// deadline/shed request counters): the same shape `loadgen` embeds in
+    /// its own report, written standalone by `serve --metrics-out`.
     pub fn report_json(&self, wall_s: f64) -> String {
-        format!("{{\"schema\":\"flexibit.metrics.v1\",{}}}", self.report_fields(wall_s))
+        format!("{{\"schema\":\"flexibit.metrics.v2\",{}}}", self.report_fields(wall_s))
     }
 
     /// The inner fields of [`Metrics::report_json`], without the enclosing
@@ -291,10 +361,12 @@ impl Metrics {
         let _ = write!(
             out,
             "\"requests\":{{\"completed\":{},\"failed_exec\":{},\"failed_shutdown\":{},\
-             \"sessions_started\":{},\"decode_steps\":{}}},",
+             \"failed_deadline\":{},\"shed\":{},\"sessions_started\":{},\"decode_steps\":{}}},",
             self.requests_completed,
             self.requests_failed_exec,
             self.requests_failed_shutdown,
+            self.requests_failed_deadline,
+            self.requests_shed,
             self.sessions_started,
             self.decode_steps,
         );
@@ -323,8 +395,57 @@ impl Metrics {
             n(self.sim_energy_j),
             n(self.throughput_rps(wall_s)),
         );
+        let _ = write!(
+            out,
+            "\"robustness\":{{\"retries\":{},\"retry_success\":{},\"requests_shed\":{},\
+             \"deadline_misses\":{},\"batches_panicked\":{},\"degraded\":{}}},",
+            self.retries,
+            self.retry_success,
+            self.requests_shed,
+            self.requests_failed_deadline,
+            self.batches_panicked,
+            self.degraded,
+        );
         let _ = write!(out, "\"drift\":{}", self.drift.report_json());
         out
+    }
+}
+
+/// Error text a deadline-expired request resolves with (never executed).
+pub const ERR_DEADLINE: &str = "deadline exceeded before execution";
+/// Error text a request shed by admission control resolves with.
+pub const ERR_SHED: &str = "queue full: request shed by admission control";
+
+/// Fault-tolerance policy: bounded retries, per-request deadlines, and
+/// admission control. The default is the pre-fault-tolerance behavior —
+/// fail fast, no deadline, unbounded queue — so existing callers are
+/// unchanged.
+#[derive(Debug, Clone)]
+pub struct Resilience {
+    /// Re-executions granted after a failed attempt (0 = fail fast). A
+    /// request's completion is only resolved by its final attempt.
+    pub max_retries: u32,
+    /// Backoff before the first retry; doubles per subsequent attempt
+    /// (capped at 2^20x to stay finite under absurd retry budgets).
+    pub retry_backoff: Duration,
+    /// Default deadline budget (arrival → completion) stamped at submit on
+    /// requests that carry none. `None` = no deadline.
+    pub default_deadline: Option<Duration>,
+    /// Admission-control queue bound (0 = unbounded): at or past it, new
+    /// prefill requests are shed while decode steps of in-flight sessions
+    /// (and `End` control messages) are always admitted — backpressure must
+    /// not corrupt a live token stream.
+    pub queue_bound: usize,
+}
+
+impl Default for Resilience {
+    fn default() -> Self {
+        Resilience {
+            max_retries: 0,
+            retry_backoff: Duration::from_millis(1),
+            default_deadline: None,
+            queue_bound: 0,
+        }
     }
 }
 
@@ -344,6 +465,8 @@ pub struct ServerConfig {
     /// logged) — the server fails loudly when the analytical model and the
     /// measured hot path diverge. `None` audits without gating.
     pub drift: Option<DriftBound>,
+    /// Fault-tolerance policy (retries, deadlines, admission control).
+    pub resilience: Resilience,
 }
 
 /// What one executor call produced: host seconds for the whole batch plus
@@ -353,6 +476,11 @@ pub struct ServerConfig {
 pub struct BatchResult {
     pub host_s: f64,
     pub outputs: Vec<RequestResult>,
+    /// Set by fault-injecting wrappers when this batch's measured time or
+    /// results were perturbed (latency spike, overwritten result): the
+    /// drift auditor must skip the batch — its wall time no longer means
+    /// what the co-simulation predicts.
+    pub faulted: bool,
 }
 
 /// The execution backend a worker invokes per batch. Implementations:
@@ -362,6 +490,15 @@ pub struct BatchResult {
 /// batch failed (e.g. unknown model) and every request inherits the error.
 pub trait Executor: Send {
     fn execute(&mut self, batch: &Batch) -> Result<BatchResult, String>;
+
+    /// Roll one session's KV state back to `tokens` committed tokens before
+    /// a decode retry, so the re-executed step attends exactly the past a
+    /// first attempt would have seen (the failed attempt may have appended
+    /// rows before dying). Returns whether anything was rolled back; the
+    /// default no-op suits stateless executors.
+    fn rollback_session(&mut self, _session: u64, _tokens: usize) -> bool {
+        false
+    }
 
     /// Short backend name for logs/metrics.
     fn name(&self) -> &str {
@@ -384,7 +521,11 @@ where
 {
     fn execute(&mut self, batch: &Batch) -> Result<BatchResult, String> {
         let host_s = (self.0)(batch)?;
-        Ok(BatchResult { host_s, outputs: batch.requests.iter().map(|_| Ok(Vec::new())).collect() })
+        Ok(BatchResult {
+            host_s,
+            outputs: batch.requests.iter().map(|_| Ok(Vec::new())).collect(),
+            faulted: false,
+        })
     }
 
     fn name(&self) -> &str {
@@ -399,7 +540,15 @@ pub struct Server {
     metrics: Arc<Mutex<Metrics>>,
     stop: Arc<AtomicBool>,
     worker: Option<std::thread::JoinHandle<()>>,
+    /// Failed attempts waiting out their backoff: (due time, request with
+    /// `attempt` bumped). The worker promotes due entries into the batcher;
+    /// shutdown settles the rest like any other unserved request.
+    retry_q: RetryQueue,
+    resilience: Resilience,
 }
+
+/// The retry queue shared between [`Server`] and its worker.
+type RetryQueue = Arc<Mutex<Vec<(Instant, Request)>>>;
 
 impl Server {
     /// Start the worker with the given executor.
@@ -411,9 +560,13 @@ impl Server {
         metrics.lock().unwrap().drift.bound = cfg.drift.clone();
         let stop = Arc::new(AtomicBool::new(false));
 
+        let retry_q: RetryQueue = Arc::new(Mutex::new(Vec::new()));
+        let resilience = cfg.resilience.clone();
+
         let b = batcher.clone();
         let m = metrics.clone();
         let s = stop.clone();
+        let rq = retry_q.clone();
         let accel = FlexiBitAccel::new();
         let mut executor = executor;
         let worker = std::thread::spawn(move || {
@@ -430,23 +583,40 @@ impl Server {
                 // executor evicted leaves a stale usize behind until then.
                 let mut session_tokens: HashMap<u64, usize> = HashMap::new();
                 while !s.load(Ordering::Relaxed) {
+                    // Re-enqueue retry attempts whose backoff elapsed, and
+                    // relax the Degraded flag once the queue drained below
+                    // half its bound (hysteresis — no flapping at the edge).
+                    Self::promote_due_retries(&rq, &b);
+                    if cfg.resilience.queue_bound > 0 {
+                        let pending = b.lock().unwrap().pending();
+                        let mut met = m.lock().unwrap();
+                        if met.degraded && pending * 2 < cfg.resilience.queue_bound {
+                            met.degraded = false;
+                        }
+                    }
                     let maybe = { b.lock().unwrap().next_batch(Instant::now()) };
                     match maybe {
                         Some(mut batch) => {
+                            // Deadline check at batch cut: expired requests
+                            // resolve without executing.
+                            Self::settle_expired(&mut batch, &m);
                             // When this batch (round) was formed — the end of
                             // each admitted request's queue-wait span.
                             let mut formed = Instant::now();
                             loop {
-                                Self::run_batch(
-                                    &batch,
-                                    formed,
-                                    &mut executor,
-                                    &b,
-                                    &m,
-                                    &cfg,
-                                    &accel,
-                                    &mut session_tokens,
-                                );
+                                if !batch.requests.is_empty() {
+                                    Self::run_batch(
+                                        &batch,
+                                        formed,
+                                        &mut executor,
+                                        &b,
+                                        &m,
+                                        &cfg,
+                                        &accel,
+                                        &mut session_tokens,
+                                        &rq,
+                                    );
+                                }
                                 if s.load(Ordering::Relaxed) {
                                     break;
                                 }
@@ -466,6 +636,7 @@ impl Server {
                                     break;
                                 }
                                 batch.requests = extra;
+                                Self::settle_expired(&mut batch, &m);
                                 formed = Instant::now();
                             }
                         }
@@ -474,7 +645,7 @@ impl Server {
                 }
             });
         });
-        Server { batcher, metrics, stop, worker: Some(worker) }
+        Server { batcher, metrics, stop, worker: Some(worker), retry_q, resilience }
     }
 
     /// Execute one batch and settle it: fulfill every request's completion
@@ -493,6 +664,7 @@ impl Server {
         cfg: &ServerConfig,
         accel: &FlexiBitAccel,
         session_tokens: &mut HashMap<u64, usize>,
+        retry_q: &RetryQueue,
     ) {
         let rec = &cfg.recorder;
         // Per-category span-duration snapshot: the executor runs on this
@@ -501,35 +673,66 @@ impl Server {
         // exactly this batch's recorded kernel/layer time.
         let (kernel0_s, model0_s) = (rec.span_dur_s("kernel"), rec.span_dur_s("model"));
         let t0 = Instant::now();
-        match executor.execute(batch) {
+        // Panic isolation: a poisoned batch fails its own requests through
+        // the same per-request plumbing a returned error uses — the worker
+        // loop survives and keeps draining. AssertUnwindSafe is justified
+        // because the executor is only ever touched again through &mut
+        // calls that re-establish their own invariants (NativeExecutor's
+        // state is per-session, and a retried decode rolls its session
+        // back explicitly before re-executing).
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            executor.execute(batch)
+        }));
+        let executed = match caught {
+            Ok(r) => r,
+            Err(payload) => {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| (*s).to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".into());
+                obs::count(obs::Counter::PanicCaught);
+                m.lock().unwrap().batches_panicked += 1;
+                Err(format!("executor panicked: {msg}"))
+            }
+        };
+        match executed {
             Err(e) => {
-                // A failed batch completed nothing: count every request as
-                // failed, keep them out of completion/latency/co-simulation
-                // stats (and out of the histograms and span stream — a
-                // failed batch emits no spans and adds no host time), and
-                // tell each submitter. End requests still retire their
-                // ledger entry — the client is done with the session
-                // whether or not the executor acknowledged it.
+                // A failed batch completed nothing: it never counts as
+                // executed, its requests stay out of completion/latency/
+                // co-simulation stats (and out of the histograms and span
+                // stream), and each request either re-enqueues under the
+                // retry policy or reports the error to its submitter. End
+                // requests still retire their ledger entry — the client is
+                // done with the session whether or not the executor
+                // acknowledged it — and are never retried (teardown is
+                // idempotent and re-sent by nobody).
+                eprintln!("executor '{}' failed on batch: {e}", executor.name());
+                let mut met = m.lock().unwrap();
+                met.batches_failed += 1;
+                met.reconfigurations = b.lock().unwrap().reconfigurations;
                 for r in &batch.requests {
                     if r.phase == Phase::End {
                         session_tokens.remove(&r.session);
+                        if let Some(done) = &r.done {
+                            done.fulfill(Err(e.clone()));
+                        }
+                        continue;
                     }
-                }
-                eprintln!("executor '{}' failed on batch: {e}", executor.name());
-                {
-                    let mut met = m.lock().unwrap();
-                    met.batches_failed += 1;
-                    met.requests_failed_exec += batch.requests.len() as u64;
-                    met.reconfigurations = b.lock().unwrap().reconfigurations;
-                }
-                for r in &batch.requests {
-                    if let Some(done) = &r.done {
-                        done.fulfill(Err(e.clone()));
-                    }
+                    Self::fail_or_retry(
+                        r,
+                        e.clone(),
+                        executor,
+                        retry_q,
+                        &mut met,
+                        &cfg.resilience,
+                        session_tokens,
+                    );
                 }
             }
             Ok(res) => {
                 let done_at = Instant::now();
+                let faulted = res.faulted;
                 let mut outputs = res.outputs;
                 // Defend the per-request contract: an executor that
                 // returned too few results fails the unanswered tail.
@@ -639,6 +842,9 @@ impl Server {
                             met.requests_completed += 1;
                             met.total_batch_size += 1;
                             ok_in_batch += 1;
+                            if r.attempt > 0 {
+                                met.retry_success += 1;
+                            }
                             let lat = done_at.duration_since(r.arrived).as_secs_f64();
                             met.latency.record(lat);
                             match r.phase {
@@ -660,6 +866,22 @@ impl Server {
                                 emit_request_spans(rec, r, formed, done_at);
                             }
                         }
+                        // A non-End request that failed individually either
+                        // re-enqueues under the retry policy (its slot stays
+                        // open for the final attempt) or settles failed here;
+                        // either way the common fulfill below is skipped.
+                        Err(e) if r.phase != Phase::End => {
+                            Self::fail_or_retry(
+                                r,
+                                e.clone(),
+                                executor,
+                                retry_q,
+                                &mut met,
+                                &cfg.resilience,
+                                session_tokens,
+                            );
+                            continue;
+                        }
                         Err(_) => met.requests_failed_exec += 1,
                     }
                     if let Some(done) = &r.done {
@@ -672,8 +894,10 @@ impl Server {
                 // executed batch. The dispatch kind partitions populations
                 // whose host cost scales differently; a batch with any
                 // failed request is skipped outright (its measured wall
-                // covers work the co-sim excludes), and End-only batches
-                // skip via tokens == 0.
+                // covers work the co-sim excludes), a fault-perturbed batch
+                // is skipped too (an injected latency spike would trip the
+                // drift gate on time the model never spent), and End-only
+                // batches skip via tokens == 0.
                 let kind = match (n_prefill > 0, n_decode > 0) {
                     (true, false) => "prefill",
                     (false, true) => "decode",
@@ -685,7 +909,7 @@ impl Server {
                     (rec.span_dur_s("model") - model0_s).max(0.0),
                 );
                 met.drift.attribute(host_s, rec.is_enabled().then_some((gemm_s, layer_s)));
-                let violation = if n_failed > 0 {
+                let violation = if n_failed > 0 || faulted {
                     met.drift.note_skipped();
                     None
                 } else {
@@ -724,8 +948,118 @@ impl Server {
         }
     }
 
-    pub fn submit(&self, req: Request) {
+    /// Route one failed non-End request: re-enqueue it for another attempt
+    /// if the retry budget allows, else settle it failed. Before a decode
+    /// retry the executor rolls the session's KV back to the ledger's
+    /// committed token count — failed outputs never advanced the ledger, so
+    /// it holds exactly the pre-batch state and the retried step re-executes
+    /// bit-identically to a first attempt. (A decode whose session fell out
+    /// of the capped ledger skips the rollback and relies on the executor
+    /// rejecting the stale stream.) The caller holds the metrics lock;
+    /// `retry_q` is locked strictly after it, matching `promote_due_retries`
+    /// which holds neither while locking the batcher.
+    fn fail_or_retry(
+        r: &Request,
+        err: String,
+        executor: &mut Box<dyn Executor>,
+        retry_q: &RetryQueue,
+        met: &mut Metrics,
+        res: &Resilience,
+        session_tokens: &HashMap<u64, usize>,
+    ) {
+        if r.attempt < res.max_retries {
+            let rollback_to = match r.phase {
+                Phase::Decode => session_tokens.get(&r.session).copied(),
+                _ => None,
+            };
+            if let Some(committed) = rollback_to {
+                executor.rollback_session(r.session, committed);
+            }
+            let backoff = res.retry_backoff.saturating_mul(1u32 << r.attempt.min(20));
+            met.retries += 1;
+            met.retry_backoff.record(backoff.as_secs_f64());
+            let mut again = r.clone();
+            again.attempt += 1;
+            retry_q.lock().unwrap().push((Instant::now() + backoff, again));
+            return;
+        }
+        met.requests_failed_exec += 1;
+        eprintln!("request {} failed after {} attempts: {err}", r.id, r.attempt + 1);
+        if let Some(done) = &r.done {
+            done.fulfill(Err(err));
+        }
+    }
+
+    /// Move retry attempts whose backoff elapsed back into the batcher,
+    /// preserving enqueue order among the due. The retry queue's lock is
+    /// released before the batcher's is taken.
+    fn promote_due_retries(retry_q: &RetryQueue, b: &Arc<Mutex<Batcher>>) {
+        let now = Instant::now();
+        let due: Vec<Request> = {
+            let mut q = retry_q.lock().unwrap();
+            if q.iter().all(|(at, _)| *at > now) {
+                return;
+            }
+            let (ready, later): (Vec<_>, Vec<_>) = q.drain(..).partition(|(at, _)| *at <= now);
+            *q = later;
+            ready.into_iter().map(|(_, r)| r).collect()
+        };
+        let mut batcher = b.lock().unwrap();
+        for r in due {
+            batcher.push(r);
+        }
+    }
+
+    /// Deadline check at batch cut: requests past their deadline resolve
+    /// `Err` without executing and leave the batch. End control requests
+    /// are exempt — session teardown must run no matter how late.
+    fn settle_expired(batch: &mut Batch, m: &Arc<Mutex<Metrics>>) {
+        let now = Instant::now();
+        let (kept, expired): (Vec<_>, Vec<_>) = std::mem::take(&mut batch.requests)
+            .into_iter()
+            .partition(|r| r.phase == Phase::End || r.deadline.is_none_or(|d| now < d));
+        batch.requests = kept;
+        if expired.is_empty() {
+            return;
+        }
+        m.lock().unwrap().requests_failed_deadline += expired.len() as u64;
+        for r in expired {
+            if let Some(done) = &r.done {
+                done.fulfill(Err(ERR_DEADLINE.into()));
+            }
+        }
+    }
+
+    /// Enqueue a request, stamping the server's default deadline if the
+    /// request carries none. Returns `false` when admission control shed it:
+    /// with a nonzero [`Resilience::queue_bound`], new prefills are rejected
+    /// once the queue is that deep — their completion resolves
+    /// [`ERR_SHED`] immediately and the server flips to Degraded — while
+    /// decode and End requests of in-flight sessions are always admitted (a
+    /// stream already holding KV residency must be able to finish).
+    pub fn submit(&self, mut req: Request) -> bool {
+        if req.deadline.is_none() {
+            if let Some(budget) = self.resilience.default_deadline {
+                req.deadline = Some(req.arrived + budget);
+            }
+        }
+        let bound = self.resilience.queue_bound;
+        if bound > 0
+            && req.phase == Phase::Prefill
+            && self.batcher.lock().unwrap().pending() >= bound
+        {
+            {
+                let mut met = self.metrics.lock().unwrap();
+                met.requests_shed += 1;
+                met.degraded = true;
+            }
+            if let Some(done) = &req.done {
+                done.fulfill(Err(ERR_SHED.into()));
+            }
+            return false;
+        }
         self.batcher.lock().unwrap().push(req);
+        true
     }
 
     pub fn pending(&self) -> usize {
@@ -783,7 +1117,11 @@ impl Server {
     /// requests are the exception — they are dropped silently, since server
     /// shutdown tears every session down anyway.
     fn settle_unserved(&self) {
-        let unserved = self.batcher.lock().unwrap().drain();
+        let mut unserved = self.batcher.lock().unwrap().drain();
+        // Retry-pending requests are queued work too: an attempt waiting out
+        // its backoff when the server stops settles as a shutdown failure
+        // exactly like one still in the batcher.
+        unserved.extend(self.retry_q.lock().unwrap().drain(..).map(|(_, r)| r));
         if unserved.is_empty() {
             return;
         }
@@ -884,7 +1222,16 @@ mod tests {
     use crate::workload::{bert_base, PrecisionPair};
 
     fn tiny_model() -> ModelSpec {
-        ModelSpec { seq: 8, layers: 1, d_model: 32, d_ff: 64, heads: 2, gated_ffn: false, kv_heads: 2, name: "tiny" }
+        ModelSpec {
+            seq: 8,
+            layers: 1,
+            d_model: 32,
+            d_ff: 64,
+            heads: 2,
+            gated_ffn: false,
+            kv_heads: 2,
+            name: "tiny",
+        }
     }
 
     fn mk_req(id: u64, bits: u32) -> Request {
@@ -898,6 +1245,7 @@ mod tests {
             sim_model: tiny_model(),
             recorder: Recorder::disabled(),
             drift: None,
+            resilience: Resilience::default(),
         }
     }
 
@@ -993,7 +1341,7 @@ mod tests {
                     }
                 })
                 .collect();
-            Ok(BatchResult { host_s: 0.0, outputs })
+            Ok(BatchResult { host_s: 0.0, outputs, faulted: false })
         }
         fn name(&self) -> &str {
             "partial"
@@ -1215,10 +1563,19 @@ mod tests {
         assert!(s.contains("p50") && s.contains("p99"));
         assert!(s.contains("decode:"), "decode line present when steps > 0");
 
+        m.retries = 2;
+        m.retry_success = 1;
+        m.requests_shed = 1;
+        m.degraded = true;
+
         let rec = Recorder::enabled();
         rec.count(obs::Counter::KvRepack);
         let p = m.prometheus_text(&rec, 0.5);
         assert!(p.contains("flexibit_requests_completed 3"));
+        assert!(p.contains("flexibit_retries 2"));
+        assert!(p.contains("flexibit_requests_shed 1"));
+        assert!(p.contains("flexibit_degraded 1"));
+        assert!(p.contains("# TYPE flexibit_retry_backoff_seconds histogram"));
         // Real cumulative-bucket histograms plus quantile gauges.
         assert!(p.contains("# TYPE flexibit_request_latency_seconds histogram"));
         assert!(p.contains("flexibit_request_latency_seconds_bucket{le=\"+Inf\"} 3"));
@@ -1236,9 +1593,11 @@ mod tests {
         // The machine-readable report carries the same numbers and is
         // parseable by the dumbest possible check: balanced and keyed.
         let j = m.report_json(0.5);
-        assert!(j.starts_with("{\"schema\":\"flexibit.metrics.v1\","));
+        assert!(j.starts_with("{\"schema\":\"flexibit.metrics.v2\","));
         assert!(j.contains("\"completed\":3"));
         assert!(j.contains("\"phases\":{\"all\":{\"count\":3"));
+        assert!(j.contains("\"robustness\":{\"retries\":2,\"retry_success\":1,"));
+        assert!(j.contains("\"degraded\":true"));
         assert!(j.contains("\"drift\":{"));
         assert_eq!(
             j.matches('{').count(),
@@ -1314,5 +1673,254 @@ mod tests {
         assert_eq!(m.requests_completed, 8, "gate reports, it does not drop traffic");
         assert!(m.drift.violations() > 0, "impossible band must trip");
         assert!(m.drift.last_violation().is_some());
+    }
+
+    /// Fails every request's first attempt with a transient error; retried
+    /// attempts succeed. Exercises the retry path end to end.
+    struct FlakyExec;
+    impl Executor for FlakyExec {
+        fn execute(&mut self, batch: &Batch) -> Result<BatchResult, String> {
+            let outputs = batch
+                .requests
+                .iter()
+                .map(|r| {
+                    if r.phase != Phase::End && r.attempt == 0 {
+                        Err("transient fault".into())
+                    } else {
+                        Ok(vec![r.id as f32])
+                    }
+                })
+                .collect();
+            Ok(BatchResult { host_s: 0.0, outputs, faulted: false })
+        }
+        fn name(&self) -> &str {
+            "flaky"
+        }
+    }
+
+    /// Retried-then-succeeded requests resolve exactly once, with the final
+    /// attempt's result — the submitter never sees the transient error
+    /// (completion slots are write-once, and a retried attempt leaves the
+    /// slot open for the attempt that settles it).
+    #[test]
+    fn retried_requests_resolve_exactly_once_with_final_result() {
+        let mut cfg = stub_cfg(4, 4);
+        cfg.resilience = Resilience {
+            max_retries: 3,
+            retry_backoff: Duration::from_micros(100),
+            ..Resilience::default()
+        };
+        let server = Server::start(cfg, Box::new(FlakyExec));
+        let mut slots = Vec::new();
+        for i in 0..8 {
+            let done = Completion::new();
+            server.submit(mk_req(i, 6).with_completion(&done));
+            slots.push(done);
+        }
+        assert!(server.await_completed(8, Duration::from_secs(5)), "retries must drain");
+        let m = server.shutdown();
+        assert_eq!(m.requests_completed, 8);
+        assert_eq!(m.requests_failed_exec, 0, "every failure recovered on retry");
+        assert_eq!(m.retries, 8, "each request retried exactly once");
+        assert_eq!(m.retry_success, 8);
+        assert_eq!(m.retry_backoff.count(), m.retries);
+        for (i, done) in slots.iter().enumerate() {
+            let got = done.poll().expect("resolved exactly once");
+            assert_eq!(got.unwrap(), vec![i as f32], "final attempt's output, not the fault");
+        }
+    }
+
+    /// A retry budget that runs out settles the request with the last error
+    /// — bounded, never infinite.
+    #[test]
+    fn exhausted_retries_settle_failed() {
+        let mut cfg = stub_cfg(4, 4);
+        cfg.resilience = Resilience {
+            max_retries: 2,
+            retry_backoff: Duration::from_micros(100),
+            ..Resilience::default()
+        };
+        let server = Server::start(
+            cfg,
+            Box::new(FnExecutor(|_b: &Batch| -> Result<f64, String> {
+                Err("permanently down".into())
+            })),
+        );
+        let done = Completion::new();
+        server.submit(mk_req(1, 6).with_completion(&done));
+        assert!(server.await_finished(1, Duration::from_secs(5)));
+        let m = server.shutdown();
+        assert_eq!(m.requests_failed_exec, 1);
+        assert_eq!(m.retries, 2, "exactly max_retries re-attempts");
+        assert_eq!(m.retry_success, 0);
+        assert!(done.poll().expect("settled").unwrap_err().contains("permanently down"));
+    }
+
+    /// A panicking executor fails its own batch and the worker survives to
+    /// serve the rest of the stream.
+    #[test]
+    fn executor_panic_fails_batch_but_worker_survives() {
+        let server = Server::start(
+            stub_cfg(4, 4),
+            Box::new(FnExecutor(|b: &Batch| -> Result<f64, String> {
+                if b.pair.w.bits() == 6 {
+                    panic!("poisoned batch");
+                }
+                Ok(0.0)
+            })),
+        );
+        let mut slots = Vec::new();
+        for i in 0..12 {
+            let done = Completion::new();
+            let bits = if i % 2 == 0 { 6 } else { 8 };
+            server.submit(mk_req(i, bits).with_completion(&done));
+            slots.push((bits, done));
+        }
+        assert!(server.await_finished(12, Duration::from_secs(5)), "worker must survive");
+        let m = server.shutdown();
+        assert!(m.batches_panicked >= 1);
+        assert_eq!(m.requests_completed, 6, "the FP8 half still serves");
+        assert_eq!(m.requests_failed_exec, 6);
+        for (bits, done) in &slots {
+            let got = done.poll().expect("resolved");
+            if *bits == 6 {
+                let err = got.unwrap_err();
+                assert!(err.contains("panicked") && err.contains("poisoned batch"), "{err}");
+            } else {
+                assert!(got.is_ok());
+            }
+        }
+    }
+
+    /// Requests past their deadline resolve `Err(ERR_DEADLINE)` at batch cut
+    /// without executing; unexpired traffic is untouched.
+    #[test]
+    fn expired_requests_settle_without_executing() {
+        let server = Server::start(
+            stub_cfg(4, 4),
+            Box::new(FnExecutor(|_b: &Batch| -> Result<f64, String> { Ok(0.0) })),
+        );
+        let dead = Completion::new();
+        let live = Completion::new();
+        server.submit(mk_req(1, 6).with_deadline_in(Duration::ZERO).with_completion(&dead));
+        let unexpired = mk_req(2, 6).with_deadline_in(Duration::from_secs(30));
+        server.submit(unexpired.with_completion(&live));
+        assert!(server.await_finished(2, Duration::from_secs(5)));
+        let m = server.shutdown();
+        assert_eq!(m.requests_failed_deadline, 1);
+        assert_eq!(m.requests_completed, 1);
+        assert_eq!(m.requests_failed(), 1);
+        // The expired request stays out of the latency stats it never earned.
+        assert_eq!(m.latency.count(), 1);
+        assert_eq!(dead.poll().expect("settled").unwrap_err(), ERR_DEADLINE);
+        assert!(live.poll().expect("settled").is_ok());
+    }
+
+    /// With a bounded queue, new prefills shed once the backlog reaches the
+    /// bound (the server turns Degraded), decode steps of live sessions are
+    /// always admitted, and the flag clears once the queue drains.
+    #[test]
+    fn admission_control_sheds_prefills_and_recovers() {
+        let mut cfg = stub_cfg(8, 4);
+        // Nothing executes: every admitted request sits in the queue.
+        cfg.policy.max_wait = Duration::from_secs(30);
+        cfg.resilience = Resilience { queue_bound: 2, ..Resilience::default() };
+        let server = Server::start(
+            cfg,
+            Box::new(FnExecutor(|_b: &Batch| -> Result<f64, String> { Ok(0.0) })),
+        );
+        assert!(server.submit(mk_req(1, 6)), "first prefill admitted");
+        assert!(server.submit(mk_req(2, 6)), "second prefill admitted");
+        let shed = Completion::new();
+        assert!(
+            !server.submit(mk_req(3, 6).with_completion(&shed)),
+            "queue at bound: prefill shed"
+        );
+        assert_eq!(shed.poll().expect("shed resolves immediately").unwrap_err(), ERR_SHED);
+        // An in-flight decode stream is protected from shedding.
+        assert!(server.submit(mk_req(4, 6).with_session(9, Phase::Decode)));
+        let m = server.metrics();
+        assert_eq!(m.requests_shed, 1);
+        assert!(m.degraded);
+        assert_eq!(m.health(), "degraded");
+        let m = server.shutdown();
+        // Shed requests are failures, but not shutdown failures.
+        assert_eq!(m.requests_failed_shutdown, 3);
+        assert_eq!(m.requests_failed(), 4);
+    }
+
+    /// The Degraded flag clears (with hysteresis) once the worker drains the
+    /// queue below half the bound.
+    #[test]
+    fn degraded_state_recovers_after_drain() {
+        let mut cfg = stub_cfg(8, 4);
+        cfg.resilience = Resilience { queue_bound: 2, ..Resilience::default() };
+        let server = Server::start(
+            cfg,
+            Box::new(FnExecutor(|_b: &Batch| -> Result<f64, String> { Ok(0.0) })),
+        );
+        // Submit until one sheds: with a 1 ms wait budget the queue reaches
+        // the bound long before the worker cuts a batch.
+        let mut admitted = 0u64;
+        let mut shed = false;
+        for i in 0..10_000 {
+            if server.submit(mk_req(i, 6)) {
+                admitted += 1;
+            } else {
+                shed = true;
+                break;
+            }
+        }
+        assert!(shed, "tight-loop submission must outrun the 1 ms wait budget");
+        assert!(server.metrics().degraded);
+        assert!(server.await_completed(admitted, Duration::from_secs(5)));
+        // The worker's hysteresis check runs each loop iteration; once the
+        // queue is empty the flag must drop.
+        let cleared = {
+            let deadline = Instant::now() + Duration::from_secs(5);
+            loop {
+                if !server.metrics().degraded {
+                    break true;
+                }
+                if Instant::now() >= deadline {
+                    break false;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        };
+        assert!(cleared, "degraded must clear after the queue drains");
+        server.shutdown();
+    }
+
+    /// Retry-pending requests (waiting out their backoff) settle as
+    /// shutdown failures too — nothing is lost in the retry queue.
+    #[test]
+    fn shutdown_settles_retry_pending_requests() {
+        let mut cfg = stub_cfg(8, 4);
+        cfg.resilience = Resilience {
+            max_retries: 5,
+            // A backoff far beyond the test body: retries never re-enter.
+            retry_backoff: Duration::from_secs(30),
+            ..Resilience::default()
+        };
+        let server = Server::start(
+            cfg,
+            Box::new(FnExecutor(|_b: &Batch| -> Result<f64, String> {
+                Err("always failing".into())
+            })),
+        );
+        let done = Completion::new();
+        server.submit(mk_req(1, 6).with_completion(&done));
+        server.submit(mk_req(2, 6));
+        // Wait until both first attempts failed into the retry queue.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while server.metrics().retries < 2 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let m = server.shutdown();
+        assert_eq!(m.retries, 2);
+        assert_eq!(m.requests_failed_shutdown, 2, "retry-pending settle at shutdown");
+        assert_eq!(m.requests_failed_exec, 0);
+        assert!(done.poll().expect("settled").unwrap_err().contains("shut down"));
     }
 }

@@ -612,6 +612,70 @@ mod tests {
         assert_eq!(v.get(1, 0), 3.0);
     }
 
+    /// Rollback across a `KtStream` capacity-doubling edge: grow past the
+    /// 64-token re-layout, truncate back below it, re-append the same
+    /// tokens — the result must be bit-identical to a fresh cache fed the
+    /// identical stream, with `repack_count()` still 0 on both (truncation
+    /// never forces the repack fallback, and neither does re-reading the
+    /// re-grown stream).
+    #[test]
+    fn truncate_across_doubling_edge_reappends_bit_identical() {
+        let sp = spec();
+        for fmt in [Format::Fp(FpFormat::FP5_E2M2), Format::int(8)] {
+            let kv_dim = sp.kv_heads * sp.head_dim();
+            // One deterministic (K, V) row pair per (token, layer).
+            let mut rng = Rng::new(23);
+            let rows: Vec<(Vec<f32>, Vec<f32>)> = (0..70 * sp.layers)
+                .map(|_| {
+                    let k: Vec<f32> = (0..kv_dim).map(|_| rng.gauss() as f32).collect();
+                    let v: Vec<f32> = (0..kv_dim).map(|_| rng.gauss() as f32).collect();
+                    (k, v)
+                })
+                .collect();
+            let push = |kv: &mut KvCache, t: usize| {
+                for li in 0..sp.layers {
+                    let (k, v) = &rows[t * sp.layers + li];
+                    kv.append_token(li, k, v);
+                }
+                kv.commit(1);
+            };
+            // Rolled-back cache: 70 tokens (past the 64 -> 128 doubling),
+            // truncate to 60 (below the edge), re-append tokens 60..70.
+            let mut kv = KvCache::new(&sp, fmt);
+            for t in 0..70 {
+                push(&mut kv, t);
+            }
+            kv.truncate(60);
+            assert_eq!(kv.len(), 60);
+            for t in 60..70 {
+                push(&mut kv, t);
+            }
+            // Fresh cache: the identical 70-token stream, never rolled back.
+            let mut fresh = KvCache::new(&sp, fmt);
+            for t in 0..70 {
+                push(&mut fresh, t);
+            }
+            assert_eq!(kv.len(), fresh.len());
+            for li in 0..sp.layers {
+                for h in 0..sp.kv_heads {
+                    let label = format!("{fmt} layer {li} head {h}");
+                    assert_eq!(
+                        kv.k_t_matrix(li, h, 70).codes(),
+                        fresh.k_t_matrix(li, h, 70).codes(),
+                        "K^T after rollback must be bit-identical to fresh: {label}"
+                    );
+                    assert_eq!(
+                        kv.v_matrix(li, h, 70).codes(),
+                        fresh.v_matrix(li, h, 70).codes(),
+                        "V after rollback must be bit-identical to fresh: {label}"
+                    );
+                }
+            }
+            assert_eq!(kv.repack_count(), 0, "rollback + regrow stays zero-repack");
+            assert_eq!(fresh.repack_count(), 0);
+        }
+    }
+
     #[test]
     fn gqa_streams_are_per_kv_head() {
         // kv_heads == 1: all query heads share a single K stream.

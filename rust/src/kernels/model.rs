@@ -650,7 +650,23 @@ impl Executor for NativeExecutor {
                 .expect("non-empty session map");
             sessions.remove(&coldest);
         }
-        Ok(BatchResult { host_s: t0.elapsed().as_secs_f64(), outputs })
+        Ok(BatchResult { host_s: t0.elapsed().as_secs_f64(), outputs, faulted: false })
+    }
+
+    /// Roll a session's KV cache back to `tokens` committed tokens — the
+    /// server calls this before retrying a failed decode step so the
+    /// re-executed attempt appends onto exactly the pre-failure stream
+    /// (bit-identical to a first attempt; see `KvCache::truncate`). A
+    /// session the executor no longer holds, or one already at (or below)
+    /// the target, is left untouched.
+    fn rollback_session(&mut self, session: u64, tokens: usize) -> bool {
+        match self.sessions.get_mut(&session) {
+            Some(s) if s.kv.len() > tokens => {
+                s.kv.truncate(tokens);
+                true
+            }
+            _ => false,
+        }
     }
 
     fn name(&self) -> &str {

@@ -1,0 +1,297 @@
+//! Seeded fault injection: deterministic chaos for the serving stack.
+//!
+//! A [`FaultPlan`] wraps any [`Executor`] in a [`FaultyExecutor`] that
+//! injects panics, transient per-request errors, and latency spikes at
+//! configured rates. Every fate is a pure function of
+//! `(plan seed, request id, attempt)` — one tempered [`Lcg`] draw,
+//! partitioned cumulatively across the rates — so two runs of the same
+//! seeded scenario fault *identically*: the loadgen harness's
+//! schedule-deterministic request ids (see [`super::request_id`]) are what
+//! make `flexibit loadgen --faults` bit-reproducible end to end.
+//!
+//! Injection order is deliberate: the inner executor runs **before** the
+//! panic/error fires, so a faulted decode batch leaves its KV cache
+//! advanced past the tokens the server never saw committed — exactly the
+//! poisoned state the retry path's `rollback_session` must repair. The
+//! chaos tests assert the repaired stream is bit-identical to a fault-free
+//! run, which this ordering is designed to stress.
+//!
+//! `Phase::End` control requests and id-0 requests are exempt: teardown
+//! must stay idempotent, and id 0 is the harness's fire-and-forget marker.
+
+use super::Lcg;
+use crate::coordinator::{Batch, BatchResult, Executor, Phase};
+use crate::obs::{self, Counter};
+use std::time::Duration;
+
+/// Error text an injected transient error resolves a request with.
+pub const ERR_INJECTED: &str = "injected transient fault";
+
+/// What the plan decided for one (request id, attempt).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Fate {
+    None,
+    /// Poison the whole batch with a panic (after the inner executor ran).
+    Panic,
+    /// Fail this request's slot with [`ERR_INJECTED`].
+    Error,
+    /// Sleep `delay_s` once for the batch (and mark it `faulted` so the
+    /// drift auditor skips the perturbed measurement).
+    Delay,
+}
+
+/// Seeded fault rates. All rates are per (request, attempt) probabilities
+/// in `[0, 1]`; their sum must not exceed 1 (they partition one uniform
+/// draw). Bit-reproducible: the same plan makes the same decisions for the
+/// same request ids on any host.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// P(poison the whole batch with a panic).
+    pub panic: f64,
+    /// P(fail this request with a transient error).
+    pub error: f64,
+    /// P(delay the batch by `delay_s`).
+    pub delay: f64,
+    /// Injected latency-spike duration, seconds.
+    pub delay_s: f64,
+}
+
+impl FaultPlan {
+    /// Parse a `--faults` spec: comma-separated `panic:R`, `error:R`,
+    /// `delay:R[:SECONDS]` (spike duration defaults to 1 ms), and `seed:N`
+    /// (defaults to `default_seed`, normally the scenario seed). Example:
+    /// `error:0.25,delay:0.1:0.002`.
+    pub fn parse(spec: &str, default_seed: u64) -> Result<FaultPlan, String> {
+        let mut plan =
+            FaultPlan { seed: default_seed, panic: 0.0, error: 0.0, delay: 0.0, delay_s: 1e-3 };
+        for item in spec.split(',').filter(|s| !s.is_empty()) {
+            let bad = || format!("bad --faults item '{item}' (see --help)");
+            let mut parts = item.split(':');
+            let kind = parts.next().unwrap_or("");
+            match kind {
+                "panic" | "error" | "delay" => {
+                    let rate: f64 =
+                        parts.next().ok_or_else(&bad)?.parse().map_err(|_| bad())?;
+                    if !(0.0..=1.0).contains(&rate) {
+                        return Err(format!("rate outside [0, 1] in '{item}'"));
+                    }
+                    match kind {
+                        "panic" => plan.panic = rate,
+                        "error" => plan.error = rate,
+                        _ => {
+                            plan.delay = rate;
+                            if let Some(s) = parts.next() {
+                                plan.delay_s = s.parse().map_err(|_| bad())?;
+                                if !plan.delay_s.is_finite() || plan.delay_s < 0.0 {
+                                    return Err(format!("bad delay duration in '{item}'"));
+                                }
+                            }
+                        }
+                    }
+                }
+                "seed" => {
+                    plan.seed = parts.next().ok_or_else(&bad)?.parse().map_err(|_| bad())?;
+                }
+                _ => return Err(format!("unknown fault kind '{kind}' in '{item}'")),
+            }
+            if parts.next().is_some() {
+                return Err(bad());
+            }
+        }
+        if plan.panic + plan.error + plan.delay > 1.0 {
+            return Err("fault rates must sum to at most 1.0".into());
+        }
+        Ok(plan)
+    }
+
+    /// Canonical spec echo (itself parseable) for reports and logs.
+    pub fn label(&self) -> String {
+        format!(
+            "panic:{},error:{},delay:{}:{},seed:{}",
+            self.panic, self.error, self.delay, self.delay_s, self.seed
+        )
+    }
+
+    /// The fate of one (request id, attempt): a single tempered draw keyed
+    /// on `(seed, id, attempt)`, partitioned cumulatively panic → error →
+    /// delay → none. Id 0 (fire-and-forget control) is always exempt.
+    fn decide(&self, id: u64, attempt: u32) -> Fate {
+        if id == 0 {
+            return Fate::None;
+        }
+        let key = self.seed
+            ^ id.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            ^ u64::from(attempt).wrapping_mul(0xd1b5_4a32_d192_ed03);
+        let u = Lcg::new(key).f64();
+        if u < self.panic {
+            Fate::Panic
+        } else if u < self.panic + self.error {
+            Fate::Error
+        } else if u < self.panic + self.error + self.delay {
+            Fate::Delay
+        } else {
+            Fate::None
+        }
+    }
+}
+
+/// An [`Executor`] wrapper that injects the plan's faults around the inner
+/// executor. Rollback and naming delegate to the wrapped engine; delay and
+/// error faults mark the batch result `faulted` so the drift auditor skips
+/// the perturbed measurement.
+pub struct FaultyExecutor {
+    inner: Box<dyn Executor>,
+    plan: FaultPlan,
+}
+
+impl FaultyExecutor {
+    pub fn new(inner: Box<dyn Executor>, plan: FaultPlan) -> Self {
+        FaultyExecutor { inner, plan }
+    }
+}
+
+impl Executor for FaultyExecutor {
+    fn execute(&mut self, batch: &Batch) -> Result<BatchResult, String> {
+        // Every fate is decided up front (End requests exempt), before any
+        // work runs, so injection cannot depend on execution timing.
+        let fates: Vec<Fate> = batch
+            .requests
+            .iter()
+            .map(|r| {
+                if r.phase == Phase::End {
+                    Fate::None
+                } else {
+                    self.plan.decide(r.id, r.attempt)
+                }
+            })
+            .collect();
+        for _ in fates.iter().filter(|f| **f != Fate::None) {
+            obs::count(Counter::FaultInjected);
+        }
+        let mut faulted = false;
+        if fates.contains(&Fate::Delay) {
+            // One spike per batch regardless of how many requests drew it:
+            // a stalled device stalls everything co-scheduled on it.
+            std::thread::sleep(Duration::from_secs_f64(self.plan.delay_s));
+            faulted = true;
+        }
+        // The inner executor runs before the panic/error fires (see the
+        // module docs): a faulted decode batch must leave its KV advanced
+        // so the server's rollback path is actually exercised.
+        let mut res = self.inner.execute(batch)?;
+        for (i, fate) in fates.iter().enumerate() {
+            if *fate == Fate::Error {
+                if let Some(slot) = res.outputs.get_mut(i) {
+                    *slot = Err(ERR_INJECTED.into());
+                }
+                faulted = true;
+            }
+        }
+        if fates.contains(&Fate::Panic) {
+            panic!("injected fault: panic after execution");
+        }
+        res.faulted = res.faulted || faulted;
+        Ok(res)
+    }
+
+    fn rollback_session(&mut self, session: u64, tokens: usize) -> bool {
+        self.inner.rollback_session(session, tokens)
+    }
+
+    fn name(&self) -> &str {
+        "faulty"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{FnExecutor, Request};
+    use crate::workload::PrecisionPair;
+
+    fn plan(panic: f64, error: f64, delay: f64) -> FaultPlan {
+        FaultPlan { seed: 7, panic, error, delay, delay_s: 0.0 }
+    }
+
+    fn batch(ids: &[u64]) -> Batch {
+        let pair = PrecisionPair::of_bits(6, 6);
+        Batch {
+            model: "tiny".into(),
+            pair,
+            requests: ids
+                .iter()
+                .map(|&id| Request::new(id, "tiny", pair, vec![0.0; 4], vec![4]))
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects_garbage() {
+        let p = FaultPlan::parse("panic:0.1,error:0.2,delay:0.05:0.002,seed:9", 7).unwrap();
+        assert_eq!((p.panic, p.error, p.delay, p.delay_s, p.seed), (0.1, 0.2, 0.05, 0.002, 9));
+        let again = FaultPlan::parse(&p.label(), 0).unwrap();
+        assert_eq!((again.panic, again.error, again.delay, again.seed), (0.1, 0.2, 0.05, 9));
+        // Seed defaults to the scenario seed; delay duration to 1 ms.
+        let d = FaultPlan::parse("delay:0.5", 42).unwrap();
+        assert_eq!((d.seed, d.delay_s), (42, 1e-3));
+        assert!(FaultPlan::parse("explode:0.5", 0).is_err());
+        assert!(FaultPlan::parse("panic:1.5", 0).is_err());
+        assert!(FaultPlan::parse("panic:0.6,error:0.6", 0).is_err());
+        assert!(FaultPlan::parse("panic:0.1:extra", 0).is_err());
+    }
+
+    #[test]
+    fn fates_are_deterministic_and_rate_shaped() {
+        let p = plan(0.2, 0.3, 0.1);
+        for id in 1..200u64 {
+            assert_eq!(p.decide(id, 0), p.decide(id, 0), "same key, same fate");
+        }
+        // A different attempt draws a fresh fate (retries are not doomed to
+        // repeat the first attempt's fault): over many ids they must differ
+        // somewhere.
+        assert!((1..200).any(|id| p.decide(id, 0) != p.decide(id, 1)));
+        assert_eq!(p.decide(0, 0), Fate::None, "id 0 is exempt");
+        // Degenerate rates pin every fate.
+        let all_panic = plan(1.0, 0.0, 0.0);
+        assert!((1..50).all(|id| all_panic.decide(id, 0) == Fate::Panic));
+        let none = plan(0.0, 0.0, 0.0);
+        assert!((1..50).all(|id| none.decide(id, 0) == Fate::None));
+        // Rates come out roughly as configured (tempered uniform draw).
+        let hits = (1..=2000u64).filter(|&id| p.decide(id, 0) != Fate::None).count();
+        let expect = 2000.0 * (p.panic + p.error + p.delay);
+        assert!((hits as f64 - expect).abs() < 0.25 * 2000.0, "{hits} vs {expect}");
+    }
+
+    #[test]
+    fn error_faults_overwrite_only_their_slots() {
+        let inner = FnExecutor(|_b: &Batch| -> Result<f64, String> { Ok(0.0) });
+        let mut ex = FaultyExecutor::new(Box::new(inner), plan(0.0, 1.0, 0.0));
+        let res = ex.execute(&batch(&[1, 2, 3])).unwrap();
+        assert!(res.faulted);
+        assert!(res.outputs.iter().all(|o| o.as_deref() == Err(&ERR_INJECTED.to_string())));
+        // End requests are exempt even at rate 1.
+        let mut b = batch(&[4]);
+        b.requests[0].phase = Phase::End;
+        let res = ex.execute(&b).unwrap();
+        assert!(res.outputs[0].is_ok());
+        assert!(!res.faulted);
+    }
+
+    #[test]
+    fn panic_faults_fire_after_the_inner_executor_ran() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        let ran = Arc::new(AtomicBool::new(false));
+        let saw = ran.clone();
+        let inner = FnExecutor(move |_b: &Batch| -> Result<f64, String> {
+            saw.store(true, Ordering::Relaxed);
+            Ok(0.0)
+        });
+        let mut ex = FaultyExecutor::new(Box::new(inner), plan(1.0, 0.0, 0.0));
+        let b = batch(&[1]);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| ex.execute(&b)));
+        assert!(caught.is_err(), "panic fate must unwind");
+        assert!(ran.load(Ordering::Relaxed), "inner executor ran before the panic");
+    }
+}

@@ -16,17 +16,29 @@
 //!   step-by-step (each step submitted only after the previous completed —
 //!   the real autoregressive dependency), think between steps in
 //!   closed-loop mode, and end their session when done.
+//! * [`FaultPlan`] / [`FaultyExecutor`] — seeded chaos: wrap any executor
+//!   to inject panics, transient errors, and latency spikes at configured
+//!   rates, keyed per (request id, attempt) so two runs of the same seed
+//!   fault identically (`flexibit loadgen --faults`).
 //! * [`LoadReport`] — counts, per-phase latency/goodput (from the server's
 //!   own [`Metrics`] histograms), token throughput, and the drift audit,
-//!   as text or machine-readable JSON (schema `flexibit.loadgen.v1`).
+//!   as text or machine-readable JSON (schema `flexibit.loadgen.v2`; v2
+//!   added the order-independent `output_digest`, the `faults` echo, and
+//!   the metrics body's `robustness` retry/shed/deadline-miss counters).
+//!
+//! Request ids are schedule-deterministic (`session << 20 | step`, End
+//! steps id 0), so a fault plan keyed on ids reproduces bit-exactly across
+//! runs regardless of completion timing.
 //!
 //! The driver is intentionally *not* [`crate::coordinator::StreamDriver`]:
 //! that harness submits every prefill up front, which is exactly what an
 //! arrival process must not do.
 
+mod fault;
 mod lcg;
 mod scenario;
 
+pub use fault::{FaultPlan, FaultyExecutor};
 pub use lcg::Lcg;
 pub use scenario::{schedule_digest, Arrival, Dist, Scenario, SessionPlan};
 
@@ -67,6 +79,28 @@ pub struct LoadCounts {
     pub prefill_tokens: u64,
     /// Tokens decoded (completed decode steps).
     pub decode_tokens: u64,
+    /// Order-independent digest over every completed request's (id, output
+    /// bits): per-request FNV-1a, XOR-folded, so concurrent completion
+    /// order cannot change it. Two runs that served the same outputs to
+    /// the same requests — e.g. a chaos run whose every fault was retried
+    /// away vs. its fault-free twin — produce the same digest.
+    pub output_digest: u64,
+}
+
+/// Fold one completed request into [`LoadCounts::output_digest`].
+fn fold_output(digest: &mut u64, id: u64, out: &[f32]) {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut eat = |b: u64| {
+        for i in 0..8 {
+            h ^= (b >> (8 * i)) & 0xff;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    eat(id);
+    for v in out {
+        eat(u64::from(v.to_bits()));
+    }
+    *digest ^= h;
 }
 
 /// Everything one load-generation run produced.
@@ -79,6 +113,10 @@ pub struct LoadReport {
     pub counts: LoadCounts,
     pub wall_s: f64,
     pub timed_out: bool,
+    /// Fault-injection label when the run wrapped its executor in a
+    /// [`FaultyExecutor`] (`None` for clean runs) — echoed in the report so
+    /// a chaos artifact is self-describing.
+    pub faults: Option<String>,
     /// Final server metrics (per-phase histograms, drift audit, co-sim).
     pub metrics: crate::coordinator::Metrics,
 }
@@ -88,24 +126,30 @@ impl LoadReport {
         self.counts.prefill_tokens + self.counts.decode_tokens
     }
 
-    /// Machine-readable report: schema `flexibit.loadgen.v1`. The
-    /// `metrics` member is the server's own `flexibit.metrics.v1` body, so
-    /// `serve --metrics-out` files and loadgen reports share their shape.
+    /// Machine-readable report: schema `flexibit.loadgen.v2`. The
+    /// `metrics` member is the server's own `flexibit.metrics.v2` body
+    /// (whose `robustness` object carries the retry/shed/deadline-miss
+    /// counts), so `serve --metrics-out` files and loadgen reports share
+    /// their shape.
     pub fn json(&self) -> String {
         let c = &self.counts;
-        let mut out = String::from("{\"schema\":\"flexibit.loadgen.v1\",");
+        let mut out = String::from("{\"schema\":\"flexibit.loadgen.v2\",");
         let _ = write!(
             out,
-            "\"scenario\":{},\"digest\":{},\"timed_out\":{},",
+            "\"scenario\":{},\"digest\":{},\"timed_out\":{},\"faults\":{},",
             self.scenario.json(&self.model),
             json_str(&self.digest),
             self.timed_out,
+            match &self.faults {
+                Some(label) => json_str(label),
+                None => "null".to_string(),
+            },
         );
         let _ = write!(
             out,
             "\"generator\":{{\"submitted\":{},\"completed\":{},\"failed\":{},\
-             \"sessions_ok\":{},\"sessions_failed\":{}}},",
-            c.submitted, c.completed, c.failed, c.sessions_ok, c.sessions_failed,
+             \"sessions_ok\":{},\"sessions_failed\":{},\"output_digest\":\"{:016x}\"}},",
+            c.submitted, c.completed, c.failed, c.sessions_ok, c.sessions_failed, c.output_digest,
         );
         let _ = write!(
             out,
@@ -155,6 +199,15 @@ impl LoadReport {
     }
 }
 
+/// Schedule-deterministic request id: `session << 20 | step` (step 0 = the
+/// prefill, k >= 1 the k-th decode; End control messages use id 0). A pure
+/// function of the schedule, so the ids a seed produces are identical
+/// across runs — the property seeded fault injection keys on.
+pub fn request_id(session: u64, step: u64) -> u64 {
+    debug_assert!(step < (1 << 20), "decode step overflows the id layout");
+    (session << 20) | step
+}
+
 /// Drive `scenario` against a live server and collect the report. The
 /// model's `d_model` shapes the activation blocks; inputs come from each
 /// session's private seeded stream. Returns when every planned session
@@ -179,7 +232,6 @@ pub fn run(
     let mut states: Vec<SlotState> = plans.iter().map(|_| SlotState::Idle).collect();
     let mut inputs: Vec<Lcg> = plans.iter().map(|p| Lcg::new(p.input_seed)).collect();
     let mut counts = LoadCounts::default();
-    let mut next_id = 0u64;
     let mut in_flight_or_thinking = 0usize;
     let mut finished = 0usize;
     let open_loop = !matches!(scenario.arrival, Arrival::Closed { .. });
@@ -208,9 +260,13 @@ pub fn run(
                             .collect();
                         let dims = vec![plan.prefill_rows, d];
                         let done = Completion::new();
-                        next_id += 1;
+                        // Schedule-deterministic id (step 0 = the prefill):
+                        // identical across runs of a seed no matter how
+                        // completions interleave, which is what lets a
+                        // seeded fault plan key on it.
+                        let id = request_id(plan.session, 0);
                         server.submit(
-                            Request::new(next_id, model.name, plan.pair, block, dims)
+                            Request::new(id, model.name, plan.pair, block, dims)
                                 .with_session(plan.session, Phase::Prefill)
                                 .with_completion(&done),
                         );
@@ -234,8 +290,13 @@ pub fn run(
                             in_flight_or_thinking -= 1;
                             finished += 1;
                         }
-                        Ok(_) => {
+                        Ok(out) => {
                             counts.completed += 1;
+                            fold_output(
+                                &mut counts.output_digest,
+                                request_id(plan.session, step),
+                                &out,
+                            );
                             if step == 0 {
                                 counts.prefill_tokens += plan.prefill_rows as u64;
                             } else {
@@ -273,9 +334,9 @@ pub fn run(
                         let row: Vec<f32> =
                             (0..d).map(|_| inputs[i].f64() as f32 - 0.5).collect();
                         let done = Completion::new();
-                        next_id += 1;
+                        let id = request_id(plan.session, next_step);
                         server.submit(
-                            Request::new(next_id, model.name, plan.pair, row, vec![d])
+                            Request::new(id, model.name, plan.pair, row, vec![d])
                                 .with_session(plan.session, Phase::Decode)
                                 .with_completion(&done),
                         );
@@ -299,6 +360,7 @@ pub fn run(
         counts,
         wall_s,
         timed_out,
+        faults: None,
         metrics: server.metrics(),
     }
 }
@@ -306,7 +368,7 @@ pub fn run(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{Batch, BatchPolicy, FnExecutor, Server, ServerConfig};
+    use crate::coordinator::{Batch, BatchPolicy, FnExecutor, Resilience, Server, ServerConfig};
     use crate::workload::PrecisionPair;
     use std::time::Duration;
 
@@ -335,6 +397,7 @@ mod tests {
                 sim_model: tiny(),
                 recorder: crate::obs::Recorder::disabled(),
                 drift: None,
+                resilience: Resilience::default(),
             },
             Box::new(FnExecutor(|_b: &Batch| -> Result<f64, String> { Ok(0.0) })),
         )
@@ -379,8 +442,11 @@ mod tests {
         assert!(!rep.timed_out);
         assert_eq!(rep.counts.completed, 6 * 4);
         let j = rep.json();
-        assert!(j.starts_with("{\"schema\":\"flexibit.loadgen.v1\","));
+        assert!(j.starts_with("{\"schema\":\"flexibit.loadgen.v2\","));
         assert!(j.contains(&format!("\"digest\":\"{}\"", rep.digest)));
+        assert!(j.contains("\"faults\":null"), "clean runs echo no fault plan");
+        assert!(j.contains(&format!("\"output_digest\":\"{:016x}\"", rep.counts.output_digest)));
+        assert!(j.contains("\"robustness\":{\"retries\":0,"));
         assert!(j.contains("\"metrics\":{\"wall_s\":"));
         assert!(j.contains("\"phases\":{\"all\":{\"count\":24"));
         assert_eq!(j.matches('{').count(), j.matches('}').count(), "balanced: {j}");
@@ -398,6 +464,10 @@ mod tests {
         assert_eq!(a.counts.completed, b.counts.completed);
         assert_eq!(a.counts.prefill_tokens, b.counts.prefill_tokens);
         assert_eq!(a.counts.decode_tokens, b.counts.decode_tokens);
+        assert_eq!(
+            a.counts.output_digest, b.counts.output_digest,
+            "deterministic ids + outputs => same folded digest"
+        );
     }
 
     #[test]
@@ -415,6 +485,7 @@ mod tests {
                 sim_model: tiny(),
                 recorder: crate::obs::Recorder::disabled(),
                 drift: None,
+                resilience: Resilience::default(),
             },
             Box::new(FnExecutor(|b: &Batch| -> Result<f64, String> {
                 if b.pair.w.bits() == 6 {

@@ -20,9 +20,11 @@ use flexibit::arith::Format;
 use flexibit::baselines::{
     Accel, BitFusionAccel, BitModAccel, CambriconPAccel, FlexiBitAccel, TensorCoreAccel,
 };
-use flexibit::coordinator::{BatchPolicy, Request, Server, ServerConfig, StreamDriver};
+use flexibit::coordinator::{
+    BatchPolicy, Executor, Request, Resilience, Server, ServerConfig, StreamDriver,
+};
 use flexibit::kernels::NativeExecutor;
-use flexibit::loadgen::{self, Arrival, Dist, Scenario};
+use flexibit::loadgen::{self, Arrival, Dist, FaultPlan, FaultyExecutor, Scenario};
 use flexibit::obs::{self, DriftBound, Recorder, DEFAULT_EVENT_CAPACITY};
 use flexibit::pe::{Pe, PeConfig};
 use flexibit::report::{fmt_j, fmt_s};
@@ -47,7 +49,10 @@ fn usage() -> ! {
                  [--trace-sample N]   # record 1-in-N per-GEMM kernel spans\n\
                                       # (default 1 = all; counters stay exact)\n\
                  [--metrics-out PATH] # write the final metrics report JSON\n\
-                                      # (schema flexibit.metrics.v1) on shutdown\n\
+                                      # (schema flexibit.metrics.v2) on shutdown\n\
+                 [--max-retries N]    # re-attempts per failed request (default 0)\n\
+                 [--deadline-ms MS]   # default per-request deadline\n\
+                 [--queue-bound N]    # shed new prefills past N queued (0 = off)\n\
            loadgen [--seed N] [--sessions N] [--pairs WxA,...] [--batch N]\n\
                  [--arrival closed|poisson|onoff]\n\
                  [--concurrency N] [--think-ms MS]   # closed-loop knobs\n\
@@ -58,6 +63,10 @@ fn usage() -> ! {
                  [--no-drift-gate]    # audit drift without failing on it\n\
                  [--report PATH]      # machine-readable run report JSON\n\
                  [--trace PATH] [--trace-sample N] [--timeout-s S]\n\
+                 [--max-retries N] [--deadline-ms MS] [--queue-bound N]\n\
+                 [--faults SPEC]      # seeded chaos, e.g. error:0.25,delay:0.1:0.002\n\
+                                      # (kinds panic:R error:R delay:R[:S] seed:N;\n\
+                                      # seed defaults to --seed)\n\
            report\n\
          \n\
          models: Bert-base Llama-2-7b Llama-2-70b GPT-3\n\
@@ -70,6 +79,22 @@ fn usage() -> ! {
 
 fn arg_value(args: &[String], key: &str) -> Option<String> {
     args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Fault-tolerance knobs shared by `serve` and `loadgen`: bounded retries,
+/// a default per-request deadline, and the admission-control queue bound.
+fn resilience_args(args: &[String]) -> Resilience {
+    let mut r = Resilience::default();
+    if let Some(n) = arg_value(args, "--max-retries").and_then(|s| s.parse().ok()) {
+        r.max_retries = n;
+    }
+    if let Some(ms) = arg_value(args, "--deadline-ms").and_then(|s| s.parse::<f64>().ok()) {
+        r.default_deadline = Some(Duration::from_secs_f64(ms / 1e3));
+    }
+    if let Some(n) = arg_value(args, "--queue-bound").and_then(|s| s.parse().ok()) {
+        r.queue_bound = n;
+    }
+    r
 }
 
 fn main() {
@@ -132,6 +157,7 @@ fn cmd_serve(args: &[String]) {
         sim_model: spec.clone(),
         recorder: recorder.clone(),
         drift: None,
+        resilience: resilience_args(args),
     };
     let server = Server::start(cfg, Box::new(executor));
 
@@ -326,10 +352,24 @@ fn cmd_loadgen(args: &[String]) {
         None => Recorder::disabled(),
     };
 
+    // Seeded chaos: wrap the engine in a FaultyExecutor so the same seeded
+    // scenario faults identically run to run (pair with --max-retries to
+    // exercise the rollback path end to end).
+    let faults = arg_value(args, "--faults").map(|s| {
+        FaultPlan::parse(&s, seed).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            usage()
+        })
+    });
+
     let spec = ModelSpec::tiny();
-    let executor = NativeExecutor::new()
+    let native = NativeExecutor::new()
         .with_panel_budget(panel_budget_mb << 20)
         .with_model(spec.clone(), 0xF1E81B);
+    let executor: Box<dyn Executor> = match &faults {
+        Some(plan) => Box::new(FaultyExecutor::new(Box::new(native), plan.clone())),
+        None => Box::new(native),
+    };
     let server = Server::start(
         ServerConfig {
             policy: BatchPolicy { max_batch, ..Default::default() },
@@ -337,13 +377,15 @@ fn cmd_loadgen(args: &[String]) {
             sim_model: spec.clone(),
             recorder: recorder.clone(),
             drift,
+            resilience: resilience_args(args),
         },
-        Box::new(executor),
+        executor,
     );
 
     let scenario = Scenario { seed, sessions, arrival, prefill_len, decode_steps, pairs };
     let timeout = Duration::from_secs_f64(fparse("--timeout-s", 120.0));
     let mut report = loadgen::run(&server, &spec, &scenario, timeout);
+    report.faults = faults.as_ref().map(FaultPlan::label);
     // Refresh the metrics after shutdown so trailing session-End batches
     // are folded in and the audited+skipped == executed invariant holds in
     // the written report.

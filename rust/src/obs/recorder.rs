@@ -74,10 +74,16 @@ pub enum Counter {
     /// KV reads that had to repack (slow path; tests pin this to 0 on the
     /// decode hot path).
     KvRepack,
+    /// Faults injected by a [`FaultyExecutor`](crate::loadgen) wrapper
+    /// (panics, transient errors, latency spikes — one count per fault).
+    FaultInjected,
+    /// Executor panics the serving worker caught and contained (the batch
+    /// failed its own requests; the worker survived).
+    PanicCaught,
 }
 
 impl Counter {
-    pub const COUNT: usize = 15;
+    pub const COUNT: usize = 17;
 
     pub const ALL: [Counter; Counter::COUNT] = [
         Counter::BatchCut,
@@ -95,6 +101,8 @@ impl Counter {
         Counter::PanelRebuild,
         Counter::KvAdopt,
         Counter::KvRepack,
+        Counter::FaultInjected,
+        Counter::PanicCaught,
     ];
 
     /// Stable snake_case name, used verbatim in the Prometheus export.
@@ -115,6 +123,8 @@ impl Counter {
             Counter::PanelRebuild => "panel_rebuild",
             Counter::KvAdopt => "kv_adopt",
             Counter::KvRepack => "kv_repack",
+            Counter::FaultInjected => "fault_injected",
+            Counter::PanicCaught => "panic_caught",
         }
     }
 }

@@ -2,7 +2,9 @@
 //! against the real native engine is bit-reproducible and fully audited,
 //! and a deliberately mis-calibrated simulator config trips the drift gate.
 
-use flexibit::coordinator::{Batch, BatchPolicy, FnExecutor, Metrics, Phase, Server, ServerConfig};
+use flexibit::coordinator::{
+    Batch, BatchPolicy, FnExecutor, Metrics, Phase, Resilience, Server, ServerConfig,
+};
 use flexibit::kernels::NativeExecutor;
 use flexibit::loadgen::{run, Arrival, Dist, LoadReport, Scenario};
 use flexibit::obs::{DriftBound, Recorder};
@@ -42,6 +44,7 @@ fn native_run(seed: u64) -> LoadReport {
             sim_model: spec.clone(),
             recorder: Recorder::disabled(),
             drift: None,
+            resilience: Resilience::default(),
         },
         Box::new(executor),
     );
@@ -79,7 +82,9 @@ fn seeded_load_is_bit_reproducible_on_the_native_engine() {
 
     // The machine-readable report carries the phase split and the digest.
     let j = a.json();
-    assert!(j.contains("\"schema\":\"flexibit.loadgen.v1\""));
+    assert!(j.contains("\"schema\":\"flexibit.loadgen.v2\""));
+    assert!(j.contains("\"faults\":null"));
+    assert_eq!(a.counts.output_digest, b.counts.output_digest, "outputs bit-identical");
     assert!(j.contains(&format!("\"digest\":\"{}\"", a.digest)));
     assert!(j.contains("\"prefill\":{\"count\":6"));
     assert!(j.contains("\"decode\":{\"count\":18"));
@@ -153,6 +158,7 @@ fn gated_run(sim_config: AcceleratorConfig, drift: Option<DriftBound>) -> Metric
             sim_model: spec.clone(),
             recorder: Recorder::disabled(),
             drift,
+            resilience: Resilience::default(),
         },
         Box::new(token_cost_executor()),
     );

@@ -453,6 +453,7 @@ fn serve_throughput(spec: &ModelSpec, executor: Box<dyn Executor>) -> f64 {
         sim_model: spec.clone(),
         recorder: flexibit::obs::Recorder::disabled(),
         drift: None,
+        resilience: flexibit::coordinator::Resilience::default(),
     };
     let server = Server::start(cfg, executor);
     let n_requests = 64u64;

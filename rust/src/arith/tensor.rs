@@ -4,20 +4,49 @@
 
 use super::format::Format;
 use super::value::{decode, encode};
+use std::sync::Arc;
 
 /// A flat tensor of `len` values in `fmt`, bit-packed into `u64` words
 /// (LSB-first within each word, values contiguous across word boundaries).
-#[derive(Debug, Clone, PartialEq)]
+///
+/// The word storage is `Arc`-shared: cloning a tensor — and, critically,
+/// adopting a resident KV stream's backing words via
+/// [`PackedTensor::from_shared_words`] — is a refcount bump, not a bulk
+/// memcpy. Mutation goes through [`Arc::make_mut`], so a tensor with sole
+/// ownership (every pack-time construction path) mutates in place and a
+/// shared one copies-on-write.
+#[derive(Debug, Clone)]
 pub struct PackedTensor {
     pub fmt: Format,
     pub len: usize,
-    words: Vec<u64>,
+    words: Arc<Vec<u64>>,
+}
+
+/// Equality over the *live* bit range only (`len * fmt.bits()`): shared
+/// backing words may carry capacity headroom and trailing garbage beyond
+/// the last live value, which no read path ever decodes.
+impl PartialEq for PackedTensor {
+    fn eq(&self, other: &Self) -> bool {
+        if self.fmt != other.fmt || self.len != other.len {
+            return false;
+        }
+        let live_bits = self.len * self.fmt.bits() as usize;
+        let (full, tail) = (live_bits / 64, live_bits % 64);
+        if self.words[..full] != other.words[..full] {
+            return false;
+        }
+        if tail == 0 {
+            return true;
+        }
+        let mask = (1u64 << tail) - 1;
+        (self.words[full] & mask) == (other.words[full] & mask)
+    }
 }
 
 impl PackedTensor {
     pub fn zeros(fmt: Format, len: usize) -> Self {
         let total_bits = len * fmt.bits() as usize;
-        PackedTensor { fmt, len, words: vec![0; total_bits.div_ceil(64)] }
+        PackedTensor { fmt, len, words: Arc::new(vec![0; total_bits.div_ceil(64)]) }
     }
 
     /// Pack a slice of real values (quantizing each with round-to-nearest).
@@ -44,6 +73,16 @@ impl PackedTensor {
     /// packed stream (e.g. the serving KV cache). Trailing bits beyond
     /// `len` codes may hold garbage; they are never decoded.
     pub fn from_words(fmt: Format, len: usize, words: Vec<u64>) -> Self {
+        Self::from_shared_words(fmt, len, Arc::new(words))
+    }
+
+    /// [`PackedTensor::from_words`], but adopting an already-shared backing
+    /// without copying — the true zero-copy KV adoption path. The stream
+    /// keeps its `Arc` alive across appends; each decode step's view is a
+    /// refcount bump, and the stream's next in-place append (via
+    /// `Arc::make_mut` on its side) only copies if a view still holds a
+    /// reference at that moment.
+    pub fn from_shared_words(fmt: Format, len: usize, words: Arc<Vec<u64>>) -> Self {
         assert!(
             words.len() * 64 >= len * fmt.bits() as usize,
             "words too short for {len} codes of {fmt}"
@@ -90,12 +129,15 @@ impl PackedTensor {
         let code = code as u64 & mask;
         let bit = i * w;
         let (word, off) = (bit / 64, bit % 64);
-        self.words[word] = (self.words[word] & !(mask << off)) | (code << off);
+        // Copy-on-write: a no-op clone when this tensor owns its words
+        // (every from_f64/from_codes construction path), a one-time copy if
+        // a zero-copy KV view is still sharing them.
+        let words = Arc::make_mut(&mut self.words);
+        words[word] = (words[word] & !(mask << off)) | (code << off);
         if off + w > 64 {
             let hi_bits = off + w - 64;
             let hi_mask = (1u64 << hi_bits) - 1;
-            self.words[word + 1] =
-                (self.words[word + 1] & !hi_mask) | (code >> (64 - off));
+            words[word + 1] = (words[word + 1] & !hi_mask) | (code >> (64 - off));
         }
     }
 
@@ -113,6 +155,12 @@ impl PackedTensor {
 
     /// The raw packed words (for feeding the BPU / runtime).
     pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// The shared backing (for `Arc::ptr_eq` zero-copy assertions and for
+    /// re-adoption without a second wrap).
+    pub fn shared_words(&self) -> &Arc<Vec<u64>> {
         &self.words
     }
 }
@@ -167,6 +215,43 @@ mod tests {
         t.set_code(9, 0b111111);
         t.set_code(11, 0b100001);
         assert_eq!(t.get_code(10), 0b101011);
+    }
+
+    #[test]
+    fn shared_words_are_zero_copy_until_written() {
+        let fmt = Format::Fp(FpFormat::FP6_E3M2);
+        let base = PackedTensor::from_codes(&[1, 2, 3, 4, 5, 6, 7, 8], fmt);
+        let view =
+            PackedTensor::from_shared_words(fmt, 4, Arc::clone(base.shared_words()));
+        // Adoption shares the backing allocation verbatim.
+        assert!(Arc::ptr_eq(base.shared_words(), view.shared_words()));
+        assert_eq!(view.codes(), &[1, 2, 3, 4]);
+        // Writing through one side copies-on-write; the other is untouched.
+        let mut w = view.clone();
+        w.set_code(0, 63);
+        assert!(!Arc::ptr_eq(base.shared_words(), w.shared_words()));
+        assert_eq!(base.get_code(0), 1);
+        assert_eq!(w.get_code(0), 63);
+    }
+
+    #[test]
+    fn equality_ignores_headroom_and_trailing_garbage() {
+        let fmt = Format::Fp(FpFormat::FP6_E3M2);
+        let a = PackedTensor::from_codes(&[9, 18, 27], fmt);
+        // Same live codes, but backed by oversized words with garbage in
+        // the dead bits (capacity headroom after zero-copy adoption).
+        let mut words = a.words().to_vec();
+        words[0] |= !((1u64 << (3 * 6)) - 1); // garbage beyond 18 live bits
+        words.push(0xDEAD_BEEF);
+        let b = PackedTensor::from_words(fmt, 3, words);
+        assert_eq!(a, b);
+        assert_eq!(b.codes(), &[9, 18, 27]);
+        // A live-bit difference still distinguishes.
+        let c = PackedTensor::from_codes(&[9, 18, 26], fmt);
+        assert_ne!(a, c);
+        // Length/format differences too.
+        let d = PackedTensor::from_codes(&[9, 18], fmt);
+        assert_ne!(a, d);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! ([`crate::compiler::reconfiguration_cycles`]), so the batcher prefers to
 //! drain same-precision runs before switching, up to a fairness bound.
 //!
-//! Requests live in **per-(model, pair) sub-queues** (the old single queue
+//! Requests live in **per-(model, policy-digest) sub-queues** (the old single queue
 //! was rescanned O(n) on every batch-formation attempt), and the batcher
 //! supports **continuous admission**: while the worker executes a batch,
 //! compatible decode-phase requests that arrive join the hot key directly
@@ -16,8 +16,9 @@
 
 use super::completion::Completion;
 use crate::obs::{self, Counter};
-use crate::workload::PrecisionPair;
+use crate::workload::{IntoPolicy, PrecisionPolicy};
 use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Which serving regime a request belongs to.
@@ -44,8 +45,11 @@ pub struct Request {
     pub id: u64,
     /// Artifact/model name this request targets.
     pub model: String,
-    /// Precision configuration the request's weights are quantized to.
-    pub pair: PrecisionPair,
+    /// Precision policy the request runs under: per-layer, per-projection
+    /// weight formats plus one activation format. A bare
+    /// [`crate::workload::PrecisionPair`] converts to the uniform policy
+    /// (see [`IntoPolicy`]), so pair-era call sites keep compiling.
+    pub policy: Arc<PrecisionPolicy>,
     /// Flattened input activations (a token block for prefill, one token
     /// row for decode).
     pub input: Vec<f32>,
@@ -68,17 +72,19 @@ pub struct Request {
 
 impl Request {
     /// A stateless prefill request arriving now (the pre-session default).
+    /// `policy` accepts a [`PrecisionPolicy`] (shared or owned) or a bare
+    /// [`crate::workload::PrecisionPair`] meaning the uniform policy.
     pub fn new(
         id: u64,
         model: impl Into<String>,
-        pair: PrecisionPair,
+        policy: impl IntoPolicy,
         input: Vec<f32>,
         dims: Vec<usize>,
     ) -> Self {
         Request {
             id,
             model: model.into(),
-            pair,
+            policy: policy.into_policy(),
             input,
             dims,
             arrived: Instant::now(),
@@ -124,11 +130,12 @@ impl Request {
     }
 }
 
-/// A batch the worker executes in one go.
+/// A batch the worker executes in one go. Every request shares the batch's
+/// policy (batches form per (model, policy-digest) key).
 #[derive(Debug, Clone)]
 pub struct Batch {
     pub model: String,
-    pub pair: PrecisionPair,
+    pub policy: Arc<PrecisionPolicy>,
     pub requests: Vec<Request>,
 }
 
@@ -153,16 +160,23 @@ impl Default for BatchPolicy {
     }
 }
 
-/// A batch-formation key: (model, precision configuration).
-type BatchKey = (String, PrecisionPair);
+/// A batch-formation key: (model, policy digest). The model name is an
+/// `Arc<str>` and the policy collapses to its content digest, so cloning
+/// and comparing keys is allocation-free — the pair-era `(String,
+/// PrecisionPair)` tuple cloned the model name on every comparison.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct BatchKey {
+    model: Arc<str>,
+    digest: u64,
+}
 
 /// Precision-aware dynamic batcher over per-key sub-queues.
 #[derive(Debug)]
 pub struct Batcher {
     policy: BatchPolicy,
-    /// Sub-queue per (model, pair): nested so probes are allocation-free
-    /// (`&str` lookup, no owned tuple key per call).
-    queues: HashMap<String, HashMap<PrecisionPair, VecDeque<Request>>>,
+    /// Sub-queue per (model, policy digest): nested so probes are
+    /// allocation-free (`&str` lookup, no owned tuple key per call).
+    queues: HashMap<String, HashMap<u64, VecDeque<Request>>>,
     /// Key admission order — deterministic tie-break when arrival stamps
     /// are equal.
     order: Vec<BatchKey>,
@@ -188,11 +202,12 @@ impl Batcher {
     }
 
     pub fn push(&mut self, req: Request) {
+        let digest = req.policy.digest();
         let inner = self.queues.entry(req.model.clone()).or_default();
-        if !inner.contains_key(&req.pair) {
-            self.order.push((req.model.clone(), req.pair));
+        if !inner.contains_key(&digest) {
+            self.order.push(BatchKey { model: Arc::from(req.model.as_str()), digest });
         }
-        inner.entry(req.pair).or_default().push_back(req);
+        inner.entry(digest).or_default().push_back(req);
         self.pending += 1;
     }
 
@@ -201,14 +216,15 @@ impl Batcher {
     }
 
     fn queue_len(&self, key: &BatchKey) -> usize {
-        self.queues.get(&key.0).and_then(|m| m.get(&key.1)).map_or(0, |q| q.len())
+        self.queues.get(&*key.model).and_then(|m| m.get(&key.digest)).map_or(0, |q| q.len())
     }
 
     /// Drop empty sub-queues and their `order` entries.
     fn prune(&mut self) {
         let queues = &mut self.queues;
-        self.order
-            .retain(|k| queues.get(&k.0).and_then(|m| m.get(&k.1)).is_some_and(|q| !q.is_empty()));
+        self.order.retain(|k| {
+            queues.get(&*k.model).and_then(|m| m.get(&k.digest)).is_some_and(|q| !q.is_empty())
+        });
         for inner in queues.values_mut() {
             inner.retain(|_, q| !q.is_empty());
         }
@@ -228,8 +244,8 @@ impl Batcher {
             .iter()
             .filter_map(|k| {
                 self.queues
-                    .get(&k.0)
-                    .and_then(|m| m.get(&k.1))
+                    .get(&*k.model)
+                    .and_then(|m| m.get(&k.digest))
                     .and_then(|q| q.front())
                     .map(|r| (r.arrived, k.clone()))
             })
@@ -247,7 +263,7 @@ impl Batcher {
             return None; // keep accumulating
         }
 
-        let q = self.queues.get_mut(&key.0).and_then(|m| m.get_mut(&key.1))?;
+        let q = self.queues.get_mut(&*key.model).and_then(|m| m.get_mut(&key.digest))?;
         let take = self.policy.max_batch.min(q.len());
         let taken: Vec<Request> = q.drain(..take).collect();
         self.pending -= taken.len();
@@ -262,11 +278,14 @@ impl Batcher {
             self.streak = 1;
         }
         obs::count(Counter::BatchCut);
-        Some(Batch { model: key.0, pair: key.1, requests: taken })
+        // The policy object rides on the requests; the key only carries its
+        // digest, so borrow the first request's Arc.
+        let policy = Arc::clone(&taken[0].policy);
+        Some(Batch { model: key.model.to_string(), policy, requests: taken })
     }
 
     /// Continuous admission: pull up to `room` **decode-phase** requests of
-    /// exactly this (model, pair) key, preserving their relative order and
+    /// exactly this (model, policy) key, preserving their relative order and
     /// never touching any other key or phase. The server calls this while
     /// a batch of the key is executing, so token-stream steps that arrived
     /// meanwhile join immediately — skipping the wait budget, the key
@@ -278,8 +297,14 @@ impl Batcher {
     /// requests, admission refuses — the worker falls back to
     /// [`Batcher::next_batch`], which switches keys. An uncontended stream
     /// keeps its slot indefinitely (there is no one to be fair to).
-    pub fn admit_decode(&mut self, model: &str, pair: PrecisionPair, room: usize) -> Vec<Request> {
-        let Some(q) = self.queues.get_mut(model).and_then(|m| m.get_mut(&pair)) else {
+    pub fn admit_decode(
+        &mut self,
+        model: &str,
+        policy: &PrecisionPolicy,
+        room: usize,
+    ) -> Vec<Request> {
+        let digest = policy.digest();
+        let Some(q) = self.queues.get_mut(model).and_then(|m| m.get_mut(&digest)) else {
             return Vec::new();
         };
         // "Waiting" traffic the streak must be fair to: requests under other
@@ -304,7 +329,11 @@ impl Batcher {
         self.pending -= taken.len();
         if !taken.is_empty() {
             obs::add(Counter::DecodeAdmit, taken.len() as u64);
-            if self.last_key.as_ref().is_some_and(|k| k.0 == model && k.1 == pair) {
+            if self
+                .last_key
+                .as_ref()
+                .is_some_and(|k| &*k.model == model && k.digest == digest)
+            {
                 self.streak += 1;
             }
         }
@@ -330,6 +359,7 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::PrecisionPair;
 
     fn req(id: u64, model: &str, bits: u32, t: Instant) -> Request {
         Request::new(id, model, PrecisionPair::of_bits(bits, 16), vec![0.0; 4], vec![4])
@@ -377,7 +407,7 @@ mod tests {
         b.push(req(2, "m", 6, t0));
         b.push(req(3, "m", 8, t0));
         let b1 = b.next_batch(t0).unwrap();
-        assert!(b1.requests.iter().all(|r| r.pair.label() == b1.pair.label()));
+        assert!(b1.requests.iter().all(|r| r.policy.digest() == b1.policy.digest()));
         assert_eq!(b1.requests.len(), 2);
         let b2 = b.next_batch(t0).unwrap();
         assert_eq!(b2.requests.len(), 2);
@@ -397,16 +427,16 @@ mod tests {
             b.push(req(i, "m", 6, t0));
         }
         b.push(req(9, "m", 8, t0));
-        assert_eq!(b.next_batch(t0).unwrap().pair.label(), "[6,16]");
-        assert_eq!(b.next_batch(t0).unwrap().pair.label(), "[6,16]");
+        assert_eq!(b.next_batch(t0).unwrap().policy.label(), "[6,16]");
+        assert_eq!(b.next_batch(t0).unwrap().policy.label(), "[6,16]");
         // Streak exhausted: key falls back to the oldest head — still FP6
         // here (FP6 and FP8 arrived together, FP6 was admitted first), and
         // streak resets only on an actual switch. FP8 serves once FP6
         // drains.
         let third = b.next_batch(t0).unwrap();
-        assert_eq!(third.pair.label(), "[6,16]");
+        assert_eq!(third.policy.label(), "[6,16]");
         let fourth = b.next_batch(t0).unwrap();
-        assert_eq!(fourth.pair.label(), "[8,16]");
+        assert_eq!(fourth.policy.label(), "[8,16]");
         assert_eq!(b.reconfigurations, 1);
     }
 
@@ -429,8 +459,8 @@ mod tests {
     fn continuous_admission_takes_only_matching_decodes() {
         let mut b = Batcher::new(BatchPolicy::default());
         let t0 = Instant::now();
-        let fp6 = PrecisionPair::of_bits(6, 16);
-        let fp8 = PrecisionPair::of_bits(8, 16);
+        let fp6 = PrecisionPair::of_bits(6, 16).into_policy();
+        let fp8 = PrecisionPair::of_bits(8, 16).into_policy();
         // Mixed traffic: FP6 decodes (sessions 1/2), an FP6 prefill, an FP8
         // decode, and another model's FP6 decode.
         b.push(req(0, "m", 6, t0).with_session(1, Phase::Decode));
@@ -440,19 +470,21 @@ mod tests {
         b.push(req(4, "other", 6, t0).with_session(4, Phase::Decode));
         assert_eq!(b.pending(), 5);
 
-        let admitted = b.admit_decode("m", fp6, 8);
+        let admitted = b.admit_decode("m", &fp6, 8);
         let ids: Vec<u64> = admitted.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![0, 3], "only same-key decode steps, in order");
         assert!(admitted.iter().all(|r| r.phase == Phase::Decode));
-        assert!(admitted.iter().all(|r| r.model == "m" && r.pair == fp6));
+        assert!(admitted
+            .iter()
+            .all(|r| r.model == "m" && r.policy.digest() == fp6.digest()));
         assert_eq!(b.pending(), 3);
 
         // The skipped prefill and foreign keys still serve through the
         // normal path, untouched and in order.
         let rest = b.next_batch(t0 + Duration::from_millis(50)).unwrap();
         assert_eq!(rest.requests[0].id, 1);
-        assert_eq!(b.admit_decode("m", fp8, 8).len(), 1);
-        assert_eq!(b.admit_decode("nope", fp6, 8).len(), 0);
+        assert_eq!(b.admit_decode("m", &fp8, 8).len(), 1);
+        assert_eq!(b.admit_decode("nope", &fp6, 8).len(), 0);
     }
 
     #[test]
@@ -464,30 +496,30 @@ mod tests {
         });
         let t0 = Instant::now();
         let ms = Duration::from_millis;
-        let fp6 = PrecisionPair::of_bits(6, 16);
+        let fp6 = PrecisionPair::of_bits(6, 16).into_policy();
         // Seed an FP6 streak of 1 via the normal path.
         b.push(req(0, "m", 6, t0).with_session(1, Phase::Decode));
-        assert_eq!(b.next_batch(t0).unwrap().pair.label(), "[6,16]"); // streak 1
+        assert_eq!(b.next_batch(t0).unwrap().policy.label(), "[6,16]"); // streak 1
         // A competing FP8 prefill arrives, then more FP6 decode steps.
         b.push(req(9, "m", 8, t0 + ms(1)));
         b.push(req(1, "m", 6, t0 + ms(2)).with_session(1, Phase::Decode));
         // First admission round: streak 1 < 2 — admits and bumps the streak.
-        assert_eq!(b.admit_decode("m", fp6, 8).len(), 1);
+        assert_eq!(b.admit_decode("m", &fp6, 8).len(), 1);
         // Streak exhausted while FP8 waits: admission refuses even though
         // more FP6 decode steps are queued.
         b.push(req(2, "m", 6, t0 + ms(3)).with_session(1, Phase::Decode));
-        assert!(b.admit_decode("m", fp6, 8).is_empty(), "fairness bound spans admission");
+        assert!(b.admit_decode("m", &fp6, 8).is_empty(), "fairness bound spans admission");
         // next_batch switches to the starved key (its head is oldest).
-        assert_eq!(b.next_batch(t0 + ms(4)).unwrap().pair.label(), "[8,16]");
+        assert_eq!(b.next_batch(t0 + ms(4)).unwrap().policy.label(), "[8,16]");
         // FP6 serves again through the normal path (streak resets on the
         // switch back) and exhausts its streak by admission...
-        assert_eq!(b.next_batch(t0 + ms(5)).unwrap().pair.label(), "[6,16]"); // streak 1
+        assert_eq!(b.next_batch(t0 + ms(5)).unwrap().policy.label(), "[6,16]"); // streak 1
         b.push(req(3, "m", 6, t0 + ms(6)).with_session(1, Phase::Decode));
-        assert_eq!(b.admit_decode("m", fp6, 8).len(), 1); // streak 2
+        assert_eq!(b.admit_decode("m", &fp6, 8).len(), 1); // streak 2
         // ...but with no competing traffic, the exhausted streak still
         // admits: there is no one to be fair to.
         b.push(req(4, "m", 6, t0 + ms(7)).with_session(1, Phase::Decode));
-        assert_eq!(b.admit_decode("m", fp6, 8).len(), 1, "uncontended stream keeps its slot");
+        assert_eq!(b.admit_decode("m", &fp6, 8).len(), 1, "uncontended stream keeps its slot");
     }
 
     #[test]
@@ -498,18 +530,18 @@ mod tests {
             max_streak: 2,
         });
         let t0 = Instant::now();
-        let fp6 = PrecisionPair::of_bits(6, 16);
+        let fp6 = PrecisionPair::of_bits(6, 16).into_policy();
         b.push(req(0, "m", 6, t0).with_session(1, Phase::Decode));
         assert_eq!(b.next_batch(t0).unwrap().requests[0].id, 0); // streak 1
         // A same-key prefill lands between decode steps: admission bypasses
         // it (decode-only), but it must count as waiting traffic.
         b.push(req(7, "m", 6, t0));
         b.push(req(1, "m", 6, t0).with_session(1, Phase::Decode));
-        assert_eq!(b.admit_decode("m", fp6, 8).len(), 1); // streak 2
+        assert_eq!(b.admit_decode("m", &fp6, 8).len(), 1); // streak 2
         b.push(req(2, "m", 6, t0).with_session(1, Phase::Decode));
         // Streak exhausted with the prefill still queued: refuse, so the
         // worker returns to next_batch, whose FIFO front is the prefill.
-        assert!(b.admit_decode("m", fp6, 8).is_empty(), "same-key prefill must not starve");
+        assert!(b.admit_decode("m", &fp6, 8).is_empty(), "same-key prefill must not starve");
         assert_eq!(b.next_batch(t0).unwrap().requests[0].id, 7, "bypassed prefill served next");
     }
 
@@ -520,9 +552,10 @@ mod tests {
         for i in 0..5 {
             b.push(req(i, "m", 6, t0).with_session(i + 1, Phase::Decode));
         }
-        let first = b.admit_decode("m", PrecisionPair::of_bits(6, 16), 3);
+        let fp6 = PrecisionPair::of_bits(6, 16).into_policy();
+        let first = b.admit_decode("m", &fp6, 3);
         assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
-        let second = b.admit_decode("m", PrecisionPair::of_bits(6, 16), 3);
+        let second = b.admit_decode("m", &fp6, 3);
         assert_eq!(second.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3, 4]);
         assert_eq!(b.pending(), 0);
     }

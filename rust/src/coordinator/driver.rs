@@ -12,13 +12,14 @@
 use super::batcher::{Phase, Request};
 use super::completion::{Completion, RequestResult};
 use super::server::Server;
-use crate::workload::PrecisionPair;
+use crate::workload::{IntoPolicy, PrecisionPolicy};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// One live stream the driver manages.
 struct Stream {
     session: u64,
-    pair: PrecisionPair,
+    policy: Arc<PrecisionPolicy>,
     outstanding: Completion,
     /// Steps resolved so far (0 while the prefill is outstanding).
     step: usize,
@@ -36,28 +37,31 @@ pub struct StreamDriver {
 }
 
 impl StreamDriver {
-    /// Open one session per `(session_id, pair, prefill_block, dims)`
+    /// Open one session per `(session_id, policy, prefill_block, dims)`
     /// entry, submitting all prefills immediately (they carry completion
-    /// slots the driver polls).
-    pub fn start(
+    /// slots the driver polls). `policy` is anything [`IntoPolicy`] — a
+    /// shared [`PrecisionPolicy`] or a bare
+    /// [`crate::workload::PrecisionPair`] meaning the uniform policy.
+    pub fn start<P: IntoPolicy>(
         server: &Server,
         model: impl Into<String>,
-        sessions: Vec<(u64, PrecisionPair, Vec<f32>, Vec<usize>)>,
+        sessions: Vec<(u64, P, Vec<f32>, Vec<usize>)>,
     ) -> Self {
         let model = model.into();
         let mut next_id = 0u64;
         let streams = sessions
             .into_iter()
-            .map(|(session, pair, input, dims)| {
+            .map(|(session, policy, input, dims)| {
+                let policy = policy.into_policy();
                 let done = Completion::new();
                 let id = next_id;
                 next_id += 1;
                 server.submit(
-                    Request::new(id, model.clone(), pair, input, dims)
+                    Request::new(id, model.clone(), &policy, input, dims)
                         .with_session(session, Phase::Prefill)
                         .with_completion(&done),
                 );
-                Stream { session, pair, outstanding: done, step: 0, finished: false }
+                Stream { session, policy, outstanding: done, step: 0, finished: false }
             })
             .collect();
         StreamDriver { model, streams, next_id }
@@ -98,7 +102,7 @@ impl StreamDriver {
                         let done = Completion::new();
                         let dims = vec![1, token.len()];
                         server.submit(
-                            Request::new(id, self.model.clone(), s.pair, token, dims)
+                            Request::new(id, self.model.clone(), &s.policy, token, dims)
                                 .with_session(s.session, Phase::Decode)
                                 .with_completion(&done),
                         );
@@ -111,7 +115,7 @@ impl StreamDriver {
                         // frees now instead of waiting for the executor's
                         // capacity LRU (fire-and-forget; End is idempotent).
                         server.submit(
-                            Request::new(id, self.model.clone(), s.pair, Vec::new(), Vec::new())
+                            Request::new(id, self.model.clone(), &s.policy, Vec::new(), Vec::new())
                                 .with_session(s.session, Phase::End),
                         );
                     }
@@ -179,7 +183,7 @@ mod tests {
             resilience: crate::coordinator::Resilience::default(),
         };
         let server = Server::start(cfg, Box::new(FailSession2Decode));
-        let pair = PrecisionPair::of_bits(6, 16);
+        let pair = crate::workload::PrecisionPair::of_bits(6, 16);
         let sessions =
             vec![(1u64, pair, vec![0.0; 8], vec![8]), (2u64, pair, vec![0.0; 8], vec![8])];
         let mut driver = StreamDriver::start(&server, "tiny", sessions);

@@ -10,7 +10,7 @@
 //! completion/latency statistics — a submitter always learns *which*
 //! request in a batch died, not just that something did. Between executor
 //! calls the worker runs **continuous admission**: decode-phase requests of
-//! the executing (model, pair) key that arrived meanwhile join immediately
+//! the executing (model, policy) key that arrived meanwhile join immediately
 //! (bounded by the fairness streak), so token streams never wait out the
 //! batching budget behind prefill traffic.
 //!
@@ -330,11 +330,12 @@ impl Metrics {
     }
 
     /// Machine-readable serving report (JSON object, schema
-    /// `flexibit.metrics.v2` — v2 added the `robustness` member and the
+    /// `flexibit.metrics.v3` — v3 switched batch keys and drift labels to
+    /// precision-policy labels/digests; v2 added the `robustness` member and the
     /// deadline/shed request counters): the same shape `loadgen` embeds in
     /// its own report, written standalone by `serve --metrics-out`.
     pub fn report_json(&self, wall_s: f64) -> String {
-        format!("{{\"schema\":\"flexibit.metrics.v2\",{}}}", self.report_fields(wall_s))
+        format!("{{\"schema\":\"flexibit.metrics.v3\",{}}}", self.report_fields(wall_s))
     }
 
     /// The inner fields of [`Metrics::report_json`], without the enclosing
@@ -629,7 +630,7 @@ impl Server {
                                 // starve them (and keeps its slot when uncontended).
                                 let extra = b.lock().unwrap().admit_decode(
                                     &batch.model,
-                                    batch.pair,
+                                    &batch.policy,
                                     cfg.policy.max_batch,
                                 );
                                 if extra.is_empty() {
@@ -768,11 +769,11 @@ impl Server {
                         _ => (prefill_rows(r, cfg.sim_model.d_model).max(1), 0),
                     };
                     let model = ModelSpec { seq, ..cfg.sim_model.clone() };
-                    let rep = sim::simulate_model_with_past(
+                    let rep = sim::simulate_model_policy(
                         accel,
                         &cfg.sim_config,
                         &model,
-                        batch.pair,
+                        &batch.policy,
                         past,
                     );
                     sim_s += rep.seconds;
@@ -913,7 +914,7 @@ impl Server {
                     met.drift.note_skipped();
                     None
                 } else {
-                    met.drift.observe(&batch.pair.label(), kind, tokens, host_s, sim_s)
+                    met.drift.observe(batch.policy.label(), kind, tokens, host_s, sim_s)
                 };
                 drop(met);
                 if let Some(v) = &violation {
@@ -933,7 +934,7 @@ impl Server {
                         tid: obs::thread_tid(),
                         args: vec![
                             ("model", batch.model.as_str().into()),
-                            ("pair", batch.pair.label().into()),
+                            ("pair", batch.policy.label().to_string().into()),
                             ("requests", batch.requests.len().into()),
                             ("completed", ok_in_batch.into()),
                             ("kind", kind.into()),
@@ -1192,7 +1193,7 @@ fn emit_request_spans(rec: &Recorder, r: &Request, formed: Instant, done_at: Ins
             ("session", r.session.into()),
             ("phase", phase.into()),
             ("model", r.model.as_str().into()),
-            ("pair", r.pair.label().into()),
+            ("pair", r.policy.label().to_string().into()),
         ],
     });
     rec.span(SpanEvent {
@@ -1288,7 +1289,7 @@ mod tests {
         let server = Server::start(
             stub_cfg(4, 4),
             Box::new(FnExecutor(|b: &Batch| -> Result<f64, String> {
-                if b.pair.w.bits() == 6 {
+                if b.policy.head_pair().w.bits() == 6 {
                     Err("synthetic executor failure".into())
                 } else {
                     Ok(0.0)
@@ -1476,7 +1477,7 @@ mod tests {
         let server = Server::start(
             cfg,
             Box::new(FnExecutor(|b: &Batch| -> Result<f64, String> {
-                if b.pair.w.bits() == 6 {
+                if b.policy.head_pair().w.bits() == 6 {
                     Err("synthetic executor failure".into())
                 } else {
                     Ok(0.0)
@@ -1593,7 +1594,7 @@ mod tests {
         // The machine-readable report carries the same numbers and is
         // parseable by the dumbest possible check: balanced and keyed.
         let j = m.report_json(0.5);
-        assert!(j.starts_with("{\"schema\":\"flexibit.metrics.v2\","));
+        assert!(j.starts_with("{\"schema\":\"flexibit.metrics.v3\","));
         assert!(j.contains("\"completed\":3"));
         assert!(j.contains("\"phases\":{\"all\":{\"count\":3"));
         assert!(j.contains("\"robustness\":{\"retries\":2,\"retry_success\":1,"));
@@ -1763,7 +1764,7 @@ mod tests {
         let server = Server::start(
             stub_cfg(4, 4),
             Box::new(FnExecutor(|b: &Batch| -> Result<f64, String> {
-                if b.pair.w.bits() == 6 {
+                if b.policy.head_pair().w.bits() == 6 {
                     panic!("poisoned batch");
                 }
                 Ok(0.0)

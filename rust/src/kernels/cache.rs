@@ -1,13 +1,18 @@
-//! Per-(model, weight-format) packed-weight cache, with budgeted decoded
-//! weight panels under an LRU eviction policy.
+//! Per-(model, weight-configuration) packed-weight cache, with budgeted
+//! decoded weight panels under an LRU eviction policy.
 //!
 //! Quantizing + bit-packing a model's weights is the expensive, precision-
 //! dependent part of native execution. The paper's reconfiguration model is
 //! layer-constant — precision changes happen between batches, not inside a
-//! GEMM — so the cache packs each model's weights **once per weight format**
-//! and every later batch at that configuration reuses the packed buffers.
-//! (The activation format does not affect weight packing, so `[6,6]` and
-//! `[6,16]` share an entry — strictly more sharing than a per-pair key.)
+//! GEMM — so the cache packs each model's weights **once per weight
+//! configuration** and every later batch at that configuration reuses the
+//! packed buffers. A configuration is identified by a
+//! [`crate::workload::PrecisionPolicy`] **weight digest** — the FNV of the
+//! per-layer weight formats only, so policies that differ in activation
+//! format share an entry (`[6,6]` and `[6,16]` pack identical weights —
+//! strictly more sharing than a per-pair key), and the historical
+//! uniform-format API ([`WeightCache::get_or_pack`]) maps onto the same
+//! keyspace via [`crate::workload::PrecisionPolicy::weight_digest_of`].
 //!
 //! On top of the packed storage of record, each entry may also hold the
 //! weights **decoded once** into panel-major tiles ([`WeightPanels`]), so
@@ -31,6 +36,7 @@ use super::packed::PackedMatrix;
 use super::panels::WeightPanels;
 use crate::arith::Format;
 use crate::obs::{self, Counter};
+use crate::workload::PrecisionPolicy;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -140,13 +146,13 @@ impl Entry {
     }
 }
 
-/// Thread-safe cache of packed model weights keyed by model, then weight
-/// format. The nested map keeps the hot hit path allocation-free: probing
-/// by `&str` needs no owned key (a `(String, Format)` tuple key would force
-/// a `String` clone per lookup).
+/// Thread-safe cache of packed model weights keyed by model, then policy
+/// weight digest. The nested map keeps the hot hit path allocation-free:
+/// probing by `&str` needs no owned key (a `(String, u64)` tuple key would
+/// force a `String` clone per lookup).
 #[derive(Debug)]
 pub struct WeightCache {
-    entries: Mutex<HashMap<String, HashMap<Format, Entry>>>,
+    entries: Mutex<HashMap<String, HashMap<u64, Entry>>>,
     hits: AtomicU64,
     misses: AtomicU64,
     /// Monotonic serve tick — every `get_or_pack` is one served batch.
@@ -195,8 +201,19 @@ impl WeightCache {
         self.panel_budget
     }
 
-    /// Fetch the packed weights for `(model, w_fmt)`, building them with
-    /// `pack` on first use. Panels decode under the byte budget; on
+    /// Uniform-weight-format shim over [`WeightCache::get_or_pack_digest`]:
+    /// the digest is [`PrecisionPolicy::weight_digest_of`], so a bare
+    /// format and a uniform policy at that format land on the same entry.
+    pub fn get_or_pack<F>(&self, model: &str, w_fmt: Format, pack: F) -> CachedModel
+    where
+        F: FnOnce() -> Vec<PackedLayer>,
+    {
+        self.get_or_pack_digest(model, PrecisionPolicy::weight_digest_of(w_fmt), pack)
+    }
+
+    /// Fetch the packed weights for `(model, weight_digest)` — the digest of
+    /// a policy's per-layer weight formats — building them with `pack` on
+    /// first use. Panels decode under the byte budget; on
     /// saturation the least-recently-served entries lose theirs first
     /// (LRU), never the packed storage. A hit whose panels were evicted
     /// rebuilds them from free budget, evicting only entries stale by
@@ -206,18 +223,19 @@ impl WeightCache {
     /// runs under the cache lock: the serving worker is single-threaded and
     /// the GEMM kernel parallelizes internally, so a fancier once-per-key
     /// latch would buy nothing here.
-    pub fn get_or_pack<F>(&self, model: &str, w_fmt: Format, pack: F) -> CachedModel
+    pub fn get_or_pack_digest<F>(&self, model: &str, weight_digest: u64, pack: F) -> CachedModel
     where
         F: FnOnce() -> Vec<PackedLayer>,
     {
         let tick = self.ticks.fetch_add(1, Ordering::Relaxed) + 1;
         let stale_cutoff = tick.saturating_sub(PANEL_LRU_HYSTERESIS);
         let mut map = self.entries.lock().unwrap();
-        if map.get(model).and_then(|inner| inner.get(&w_fmt)).is_some() {
+        if map.get(model).and_then(|inner| inner.get(&weight_digest)).is_some() {
             self.hits.fetch_add(1, Ordering::Relaxed);
             obs::count(Counter::WeightCacheHit);
             let (wish, have) = {
-                let e = map.get_mut(model).and_then(|inner| inner.get_mut(&w_fmt)).unwrap();
+                let e =
+                    map.get_mut(model).and_then(|inner| inner.get_mut(&weight_digest)).unwrap();
                 e.last_served = tick;
                 (e.layers.iter().map(|l| l.panel_wish()).sum::<usize>(), e.panel_bytes)
             };
@@ -234,20 +252,22 @@ impl WeightCache {
                 .sum();
             if have < wish && free + have + reclaimable >= wish {
                 obs::count(Counter::PanelRebuild);
-                let e = map.get_mut(model).and_then(|inner| inner.get_mut(&w_fmt)).unwrap();
+                let e =
+                    map.get_mut(model).and_then(|inner| inner.get_mut(&weight_digest)).unwrap();
                 // Release the partial first — its bytes fund the rebuild.
                 self.panel_resident.fetch_sub(e.panel_bytes, Ordering::Relaxed);
                 e.panels = Arc::new(vec![LayerPanels::default(); e.layers.len()]);
                 e.panel_bytes = 0;
                 self.evict_panels_lru(&mut map, wish, Some(stale_cutoff));
-                let e = map.get_mut(model).and_then(|inner| inner.get_mut(&w_fmt)).unwrap();
+                let e =
+                    map.get_mut(model).and_then(|inner| inner.get_mut(&weight_digest)).unwrap();
                 let panels = self.build_panels(&e.layers);
                 let built: usize = panels.iter().map(|p| p.bytes()).sum();
                 self.panel_resident.fetch_add(built, Ordering::Relaxed);
                 e.panels = Arc::new(panels);
                 e.panel_bytes = built;
             }
-            return map.get(model).and_then(|inner| inner.get(&w_fmt)).unwrap().handle();
+            return map.get(model).and_then(|inner| inner.get(&weight_digest)).unwrap().handle();
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         obs::count(Counter::WeightCacheMiss);
@@ -270,7 +290,7 @@ impl WeightCache {
             last_served: tick,
         };
         let handle = entry.handle();
-        map.entry(model.to_string()).or_default().insert(w_fmt, entry);
+        map.entry(model.to_string()).or_default().insert(weight_digest, entry);
         handle
     }
 
@@ -281,7 +301,7 @@ impl WeightCache {
     /// `None` (a newcomer out-ranks every holder).
     fn evict_panels_lru(
         &self,
-        map: &mut HashMap<String, HashMap<Format, Entry>>,
+        map: &mut HashMap<String, HashMap<u64, Entry>>,
         wish: usize,
         stale_before: Option<u64>,
     ) {
@@ -329,12 +349,13 @@ impl WeightCache {
             .collect()
     }
 
-    /// (hits, misses) counters — misses equal distinct (model, format) packs.
+    /// (hits, misses) counters — misses equal distinct (model, weight-digest)
+    /// packs.
     pub fn stats(&self) -> (u64, u64) {
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
     }
 
-    /// Number of cached (model, weight-format) entries.
+    /// Number of cached (model, weight-digest) entries.
     pub fn len(&self) -> usize {
         self.entries.lock().unwrap().values().map(|inner| inner.len()).sum()
     }
@@ -417,6 +438,36 @@ mod tests {
         cache.clear();
         assert!(cache.is_empty());
         assert_eq!(cache.panel_resident_bytes(), 0);
+    }
+
+    #[test]
+    fn format_shim_and_policy_digest_share_the_keyspace() {
+        use crate::workload::{LayerPolicy, PrecisionPair};
+        let cache = WeightCache::new();
+        let fp6 = Format::Fp(FpFormat::FP6_E3M2);
+        // Bare format, uniform policy digest: same entry (one pack).
+        let a = cache.get_or_pack("m", fp6, || vec![dummy_layer(fp6)]);
+        let uniform: PrecisionPolicy = PrecisionPair::new(fp6, Format::Fp(FpFormat::FP16)).into();
+        let b = cache.get_or_pack_digest("m", uniform.weight_digest(), || {
+            unreachable!("uniform policy must hit the format-keyed entry")
+        });
+        assert!(Arc::ptr_eq(&a.layers, &b.layers));
+        assert_eq!(cache.stats(), (1, 1));
+        // A genuinely mixed policy gets its own entry.
+        let act = Format::Fp(FpFormat::FP16);
+        let mixed = PrecisionPolicy::new(
+            "mixed",
+            vec![LayerPolicy {
+                qkv: PrecisionPair::new(fp6, act),
+                out: PrecisionPair::new(fp6, act),
+                gate_up: PrecisionPair::new(Format::int(8), act),
+                down: PrecisionPair::new(fp6, act),
+            }],
+        );
+        assert_ne!(mixed.weight_digest(), uniform.weight_digest());
+        let c = cache.get_or_pack_digest("m", mixed.weight_digest(), || vec![dummy_layer(fp6)]);
+        assert!(!Arc::ptr_eq(&a.layers, &c.layers));
+        assert_eq!(cache.len(), 2);
     }
 
     #[test]

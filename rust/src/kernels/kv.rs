@@ -45,6 +45,7 @@ use crate::obs::{self, Counter};
 use crate::workload::ModelSpec;
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 thread_local! {
     /// Reused per-thread code buffer: the column scatter in
@@ -112,12 +113,6 @@ impl PackedStream {
             Format::Int(_) => Some(self.max_abs),
             _ => None,
         }
-    }
-
-    /// Packed words covering the first `n` codes.
-    fn words_for(&self, n: usize) -> Vec<u64> {
-        debug_assert!(n <= self.len);
-        self.buf.words()[..(n * self.wbits()).div_ceil(64)].to_vec()
     }
 
     fn truncate(&mut self, n: usize) {
@@ -202,15 +197,18 @@ impl KtStream {
         self.cap = new_cap;
     }
 
-    /// Zero-repack adoption: the packed words become a strided
-    /// `[head_dim, tokens]` matrix (stride = capacity). One memcpy of the
-    /// live word range; no code is extracted or re-inserted.
+    /// Zero-*copy* adoption: the strided matrix shares the stream's backing
+    /// `Arc` — a refcount bump, no word is copied, extracted, or
+    /// re-inserted. Codes beyond `(hd-1)*cap + tokens` (capacity headroom
+    /// and not-yet-live columns) are dead and never read.
     fn matrix(&self, tokens: usize) -> PackedMatrix {
         debug_assert!(tokens <= self.len);
-        let wbits = self.wbits();
         let n_codes = if self.hd == 0 { 0 } else { (self.hd - 1) * self.cap + tokens };
-        let words = self.buf.words()[..(n_codes * wbits).div_ceil(64)].to_vec();
-        let tensor = PackedTensor::from_words(self.fmt(), n_codes, words);
+        let tensor = PackedTensor::from_shared_words(
+            self.fmt(),
+            n_codes,
+            Arc::clone(self.buf.shared_words()),
+        );
         let m = PackedMatrix::from_tensor_strided(tensor, self.hd, tokens, self.cap);
         match self.fmt() {
             Format::Int(_) => m.with_max_abs(Some(self.max_abs)),
@@ -447,12 +445,18 @@ impl KvCache {
 
     /// V for the context GEMM: a `[tokens, head_dim]` packed matrix of
     /// layer `layer`, KV head `kv_head`. The stream layout is already the
-    /// operand layout, so the packed words are adopted without repacking.
+    /// operand layout, so the matrix shares the stream's backing `Arc` —
+    /// zero-copy, like [`KvCache::k_t_matrix`].
     pub fn v_matrix(&self, layer: usize, kv_head: usize, tokens: usize) -> PackedMatrix {
         obs::count(Counter::KvAdopt);
         let hd = self.head_dim;
         let s = &self.layers[layer].v[kv_head];
-        let tensor = PackedTensor::from_words(self.fmt, tokens * hd, s.words_for(tokens * hd));
+        debug_assert!(tokens * hd <= s.len);
+        let tensor = PackedTensor::from_shared_words(
+            self.fmt,
+            tokens * hd,
+            Arc::clone(s.buf.shared_words()),
+        );
         PackedMatrix::from_tensor(tensor, tokens, hd).with_max_abs(s.max_abs())
     }
 }
@@ -674,6 +678,66 @@ mod tests {
             assert_eq!(kv.repack_count(), 0, "rollback + regrow stays zero-repack");
             assert_eq!(fresh.repack_count(), 0);
         }
+    }
+
+    /// Every `KvAdopt`-counted materialization shares the resident
+    /// stream's backing allocation (`Arc::ptr_eq`) — adoption is a
+    /// refcount bump, not a bulk memcpy per (layer, KV head, step) — and
+    /// the stream's next append still lands in place (no lingering view,
+    /// so `Arc::make_mut` finds a unique owner and copies nothing).
+    #[test]
+    fn adoption_is_zero_copy_and_appends_stay_in_place() {
+        let sp = spec();
+        let fmt = Format::Fp(FpFormat::FP6_E3M2);
+        let mut kv = KvCache::new(&sp, fmt);
+        let kv_dim = sp.kv_heads * sp.head_dim();
+        let mut rng = Rng::new(17);
+        for _ in 0..5 {
+            for li in 0..sp.layers {
+                let k_row: Vec<f32> = (0..kv_dim).map(|_| rng.gauss() as f32).collect();
+                let v_row: Vec<f32> = (0..kv_dim).map(|_| rng.gauss() as f32).collect();
+                kv.append_token(li, &k_row, &v_row);
+            }
+            kv.commit(1);
+        }
+        let rec = crate::obs::Recorder::enabled();
+        obs::with_current(&rec, || {
+            for li in 0..sp.layers {
+                for h in 0..sp.kv_heads {
+                    let kt = kv.k_t_matrix(li, h, 5);
+                    assert!(
+                        Arc::ptr_eq(kt.shared_words(), kv.layers[li].k[h].buf.shared_words()),
+                        "K^T adoption must share the stream's words (layer {li} head {h})"
+                    );
+                    let vm = kv.v_matrix(li, h, 5);
+                    assert!(
+                        Arc::ptr_eq(vm.shared_words(), kv.layers[li].v[h].buf.shared_words()),
+                        "V adoption must share the stream's words (layer {li} head {h})"
+                    );
+                }
+            }
+        });
+        assert_eq!(rec.counter(Counter::KvAdopt), (sp.layers * sp.kv_heads * 2) as u64);
+        // With all views dropped, the stream owns its words again: the next
+        // append mutates in place (same allocation before and after).
+        let before = Arc::as_ptr(kv.layers[0].k[0].buf.shared_words());
+        for li in 0..sp.layers {
+            kv.append_token(li, &vec![0.5; kv_dim], &vec![0.5; kv_dim]);
+        }
+        kv.commit(1);
+        let after = Arc::as_ptr(kv.layers[0].k[0].buf.shared_words());
+        assert_eq!(before, after, "append after views dropped must not copy the backing");
+        // A still-live view forces copy-on-write on the stream side, and the
+        // view keeps reading the pre-append snapshot.
+        let snapshot = kv.k_t_matrix(0, 0, 6);
+        let frozen = snapshot.codes();
+        for li in 0..sp.layers {
+            kv.append_token(li, &vec![-1.0; kv_dim], &vec![-1.0; kv_dim]);
+        }
+        kv.commit(1);
+        assert_eq!(snapshot.codes(), frozen, "live view is an immutable snapshot");
+        assert_eq!(kv.len(), 7);
+        assert_eq!(kv.repack_count(), 0);
     }
 
     #[test]

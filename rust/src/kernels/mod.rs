@@ -65,6 +65,9 @@
 //!   server can run end-to-end on this engine with zero Python/PJRT
 //!   artifacts on disk, including token-stream sessions (prefill + decode
 //!   steps) with per-request results.
+//! * [`search_policy`] — offline greedy per-layer weight-width descent that
+//!   emits a [`crate::workload::PrecisionPolicy`] under a seeded
+//!   quantization-error proxy (the `flexibit policy` subcommand).
 
 mod cache;
 mod gemm;
@@ -72,6 +75,7 @@ mod kv;
 mod model;
 mod packed;
 mod panels;
+mod search;
 
 pub use cache::{CachedModel, LayerPanels, PackedLayer, WeightCache, DEFAULT_PANEL_BUDGET};
 pub use gemm::{
@@ -82,3 +86,4 @@ pub use kv::KvCache;
 pub use model::{NativeExecutor, NativeModel};
 pub use packed::{extract_codes, Decoder, PackedMatrix};
 pub use panels::{PanelData, WeightPanels};
+pub use search::{search_policy, SearchConfig};

@@ -4,28 +4,44 @@
 //!
 //! Weights are synthesized deterministically from a seed (the repo ships no
 //! checkpoints); what matters for the reproduction is the *execution path*:
-//! weight x activation GEMMs run at `(pair.w, pair.a)`, the two attention
-//! activation x activation GEMMs at `(pair.a, pair.a)` — exactly the
-//! precision assignment of [`crate::workload::ModelSpec::gemms`] — on packed
-//! buffers, with packed weights (and their decoded panels, budget
-//! permitting) cached per (model, weight format).
+//! every forward runs under a [`PrecisionPolicy`] — layer `l`'s weight x
+//! activation GEMMs run at that layer's per-projection weight formats
+//! (baked into the packed buffers at pack time), the two attention
+//! activation x activation GEMMs at the policy's (uniform) activation
+//! format — exactly the precision assignment of
+//! [`crate::workload::ModelSpec::gemms_policy`] — on packed buffers, with
+//! packed weights (and their decoded panels, budget permitting) cached per
+//! (model, policy weight digest). A bare [`PrecisionPair`] is accepted
+//! everywhere via [`IntoPolicy`] and means the uniform policy.
 
 use super::cache::{LayerPanels, PackedLayer, WeightCache};
 use super::gemm::{gemm, gemm_with_panels, GemmConfig};
 use super::kv::KvCache;
 use super::packed::PackedMatrix;
 use super::panels::WeightPanels;
+use crate::arith::Format;
 use crate::coordinator::{Batch, BatchResult, Executor, Phase};
 use crate::obs::{self, Counter};
 use crate::util::Rng;
-use crate::workload::{ModelSpec, PrecisionPair};
+use crate::workload::{IntoPolicy, ModelSpec, PrecisionPolicy};
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Live sessions an executor retains beyond this bound are evicted LRU —
 /// a leaked session (client that never finished its stream) must not pin
 /// KV memory forever.
 pub const DEFAULT_SESSION_CAPACITY: usize = 256;
+
+/// The weight format each of one layer's projections packs at (the
+/// pack-time view of a policy's layer entry; the gate projection shares
+/// `gate_up` with up, as in [`crate::workload::LayerPolicy`]).
+struct WeightFormats {
+    qkv: Format,
+    out: Format,
+    gate_up: Format,
+    down: Format,
+}
 
 /// One layer's master (f32) weights, from which per-format packs are made.
 #[derive(Debug, Clone)]
@@ -92,42 +108,103 @@ impl NativeModel {
         NativeModel { spec, layers, gemm_cfg: GemmConfig::default() }
     }
 
-    /// Quantize + bit-pack every layer's weights at `w_fmt` (the cache's
-    /// build callback).
-    pub fn pack_layers(&self, w_fmt: crate::arith::Format) -> Vec<PackedLayer> {
+    /// Quantize + bit-pack every layer's weights at the uniform `w_fmt` —
+    /// the single-format special case of
+    /// [`NativeModel::pack_layers_policy`].
+    pub fn pack_layers(&self, w_fmt: Format) -> Vec<PackedLayer> {
+        self.pack_layers_with(|_| WeightFormats {
+            qkv: w_fmt,
+            out: w_fmt,
+            gate_up: w_fmt,
+            down: w_fmt,
+        })
+    }
+
+    /// Quantize + bit-pack every layer's weights, each projection at the
+    /// format `policy` assigns it (the cache's build callback for
+    /// policy-keyed entries).
+    pub fn pack_layers_policy(&self, policy: &PrecisionPolicy) -> Vec<PackedLayer> {
+        self.pack_layers_with(|li| {
+            let lp = policy.layer(li);
+            WeightFormats {
+                qkv: lp.qkv.w,
+                out: lp.out.w,
+                gate_up: lp.gate_up.w,
+                down: lp.down.w,
+            }
+        })
+    }
+
+    /// Borrow one layer's master (f32) weights for `proj` as
+    /// `(values, rows, cols)` — the offline policy search scores candidate
+    /// weight formats against these. `GateUp` returns the up projection
+    /// (the gate matrix shares its format, as at pack time).
+    pub(crate) fn projection_weights(
+        &self,
+        li: usize,
+        proj: crate::workload::Projection,
+    ) -> (&[f32], usize, usize) {
+        use crate::workload::Projection;
+        let d = self.spec.d_model;
+        let kv_dim = self.spec.kv_heads * self.spec.head_dim();
+        let l = &self.layers[li];
+        match proj {
+            Projection::Qkv => (&l.wqkv, d, d + 2 * kv_dim),
+            Projection::Out => (&l.wo, d, d),
+            Projection::GateUp => (&l.w_up, d, self.spec.d_ff),
+            Projection::Down => (&l.w_down, self.spec.d_ff, d),
+        }
+    }
+
+    fn pack_layers_with(&self, fmt_of: impl Fn(usize) -> WeightFormats) -> Vec<PackedLayer> {
         let d = self.spec.d_model;
         let kv_dim = self.spec.kv_heads * self.spec.head_dim();
         self.layers
             .iter()
-            .map(|l| PackedLayer {
-                wqkv: PackedMatrix::from_f32(&l.wqkv, d, d + 2 * kv_dim, w_fmt),
-                wo: PackedMatrix::from_f32(&l.wo, d, d, w_fmt),
-                w_up: PackedMatrix::from_f32(&l.w_up, d, self.spec.d_ff, w_fmt),
-                w_gate: l
-                    .w_gate
-                    .as_ref()
-                    .map(|g| PackedMatrix::from_f32(g, d, self.spec.d_ff, w_fmt)),
-                w_down: PackedMatrix::from_f32(&l.w_down, self.spec.d_ff, d, w_fmt),
+            .enumerate()
+            .map(|(li, l)| {
+                let f = fmt_of(li);
+                PackedLayer {
+                    wqkv: PackedMatrix::from_f32(&l.wqkv, d, d + 2 * kv_dim, f.qkv),
+                    wo: PackedMatrix::from_f32(&l.wo, d, d, f.out),
+                    w_up: PackedMatrix::from_f32(&l.w_up, d, self.spec.d_ff, f.gate_up),
+                    w_gate: l
+                        .w_gate
+                        .as_ref()
+                        .map(|g| PackedMatrix::from_f32(g, d, self.spec.d_ff, f.gate_up)),
+                    w_down: PackedMatrix::from_f32(&l.w_down, self.spec.d_ff, d, f.down),
+                }
             })
             .collect()
     }
 
     /// Full forward pass of `input` (`rows x d_model`, row-major; `rows` is
-    /// inferred, so shorter-than-`spec.seq` requests work) at `pair`.
-    /// Packed weights come from `cache`, keyed under `self.spec.name`.
-    pub fn forward(&self, input: &[f32], pair: PrecisionPair, cache: &WeightCache) -> Vec<f32> {
+    /// inferred, so shorter-than-`spec.seq` requests work) under `policy`
+    /// (a bare [`crate::workload::PrecisionPair`] means uniform). Packed
+    /// weights come from `cache`, keyed under
+    /// (`self.spec.name`, `policy.weight_digest()`).
+    pub fn forward(
+        &self,
+        input: &[f32],
+        policy: impl IntoPolicy,
+        cache: &WeightCache,
+    ) -> Vec<f32> {
+        let policy = policy.into_policy();
         let d = self.spec.d_model;
         assert!(d > 0 && input.len() % d == 0, "input length must be a multiple of d_model");
         let rows = input.len() / d;
-        let cached = cache.get_or_pack(self.spec.name, pair.w, || self.pack_layers(pair.w));
+        let cached = cache.get_or_pack_digest(self.spec.name, policy.weight_digest(), || {
+            self.pack_layers_policy(&policy)
+        });
+        let act = policy.activation();
 
         let rec = obs::recorder();
         let mut x = input.to_vec();
         for (li, (layer, panels)) in cached.layers.iter().zip(cached.panels.iter()).enumerate() {
             let span = rec.begin();
-            let attn = self.attention(&rms_norm(&x, d), rows, pair, layer, panels);
+            let attn = self.attention(&rms_norm(&x, d), rows, act, layer, panels);
             add_in_place(&mut x, &attn);
-            let ffn = self.ffn(&rms_norm(&x, d), rows, pair, layer, panels);
+            let ffn = self.ffn(&rms_norm(&x, d), rows, act, layer, panels);
             add_in_place(&mut x, &ffn);
             if let Some(t0) = span {
                 let args = vec![("layer", li.into()), ("rows", rows.into())];
@@ -138,18 +215,19 @@ impl NativeModel {
     }
 
     /// Causal prefill of a token-stream session: runs the block stack with a
-    /// causal mask, appending every layer's K/V (quantized to `pair.a`) to
-    /// `kv`. Returns the hidden states of all `rows` input rows. The cache
-    /// may already hold committed tokens (chunked prefill); new rows attend
-    /// to everything committed plus their own causal prefix.
+    /// causal mask, appending every layer's K/V (quantized to the policy's
+    /// activation format) to `kv`. Returns the hidden states of all `rows`
+    /// input rows. The cache may already hold committed tokens (chunked
+    /// prefill); new rows attend to everything committed plus their own
+    /// causal prefix.
     pub fn forward_prefill(
         &self,
         input: &[f32],
-        pair: PrecisionPair,
+        policy: impl IntoPolicy,
         cache: &WeightCache,
         kv: &mut KvCache,
     ) -> Vec<f32> {
-        self.forward_cached(input, pair, cache, kv)
+        self.forward_cached(input, &policy.into_policy(), cache, kv)
     }
 
     /// One autoregressive decode step: attend a single new token row against
@@ -162,7 +240,7 @@ impl NativeModel {
     pub fn forward_decode(
         &self,
         input: &[f32],
-        pair: PrecisionPair,
+        policy: impl IntoPolicy,
         cache: &WeightCache,
         kv: &mut KvCache,
     ) -> Vec<f32> {
@@ -171,14 +249,14 @@ impl NativeModel {
             self.spec.d_model,
             "decode takes exactly one token row of d_model values"
         );
-        self.forward_cached(input, pair, cache, kv)
+        self.forward_cached(input, &policy.into_policy(), cache, kv)
     }
 
     /// Shared causal cached forward (prefill: rows >= 1; decode: rows == 1).
     fn forward_cached(
         &self,
         input: &[f32],
-        pair: PrecisionPair,
+        policy: &PrecisionPolicy,
         cache: &WeightCache,
         kv: &mut KvCache,
     ) -> Vec<f32> {
@@ -193,17 +271,20 @@ impl NativeModel {
             (self.spec.kv_heads, self.spec.head_dim()),
             "KV cache head layout mismatch"
         );
-        assert_eq!(kv.fmt(), pair.a, "KV cache format must match the activation format");
+        let act = policy.activation();
+        assert_eq!(kv.fmt(), act, "KV cache format must match the policy's activation format");
         let rows = input.len() / d;
-        let cached = cache.get_or_pack(self.spec.name, pair.w, || self.pack_layers(pair.w));
+        let cached = cache.get_or_pack_digest(self.spec.name, policy.weight_digest(), || {
+            self.pack_layers_policy(policy)
+        });
 
         let rec = obs::recorder();
         let mut x = input.to_vec();
         for (li, (layer, panels)) in cached.layers.iter().zip(cached.panels.iter()).enumerate() {
             let span = rec.begin();
-            let attn = self.attention_cached(&rms_norm(&x, d), rows, pair, layer, panels, kv, li);
+            let attn = self.attention_cached(&rms_norm(&x, d), rows, act, layer, panels, kv, li);
             add_in_place(&mut x, &attn);
-            let ffn = self.ffn(&rms_norm(&x, d), rows, pair, layer, panels);
+            let ffn = self.ffn(&rms_norm(&x, d), rows, act, layer, panels);
             add_in_place(&mut x, &ffn);
             if let Some(t0) = span {
                 let args = vec![("layer", li.into()), ("rows", rows.into())];
@@ -214,13 +295,14 @@ impl NativeModel {
         x
     }
 
-    /// Multi-head attention (GQA-aware). Projections run at (w, a);
-    /// QK^T and PV run at (a, a), matching the workload extractor.
+    /// Multi-head attention (GQA-aware). Projections run at each matrix's
+    /// packed weight format x `act`; QK^T and PV run at (act, act),
+    /// matching the workload extractor.
     fn attention(
         &self,
         xn: &[f32],
         rows: usize,
-        pair: PrecisionPair,
+        act: Format,
         l: &PackedLayer,
         lp: &LayerPanels,
     ) -> Vec<f32> {
@@ -230,7 +312,7 @@ impl NativeModel {
         let kv_heads = self.spec.kv_heads;
         let kv_dim = kv_heads * hd;
 
-        let xq = PackedMatrix::from_f32(xn, rows, d, pair.a);
+        let xq = PackedMatrix::from_f32(xn, rows, d, act);
         let qkv = gemm_w(&xq, &l.wqkv, lp.wqkv.as_ref(), &self.gemm_cfg); // [rows, d + 2*kv_dim]
         let qkv_cols = d + 2 * kv_dim;
 
@@ -250,16 +332,16 @@ impl NativeModel {
                 }
             }
             // Scores: activation x activation at (a, a).
-            let qp = PackedMatrix::from_f32(&q_h, rows, hd, pair.a);
-            let kp = PackedMatrix::from_f32(&k_t, hd, rows, pair.a);
+            let qp = PackedMatrix::from_f32(&q_h, rows, hd, act);
+            let kp = PackedMatrix::from_f32(&k_t, hd, rows, act);
             let mut scores = gemm(&qp, &kp, &self.gemm_cfg); // [rows, rows]
             for s in scores.iter_mut() {
                 *s *= scale;
             }
             softmax_rows(&mut scores, rows);
             // Context: probabilities x V at (a, a).
-            let pp = PackedMatrix::from_f32(&scores, rows, rows, pair.a);
-            let vp = PackedMatrix::from_f32(&v_h, rows, hd, pair.a);
+            let pp = PackedMatrix::from_f32(&scores, rows, rows, act);
+            let vp = PackedMatrix::from_f32(&v_h, rows, hd, act);
             let ctx_h = gemm(&pp, &vp, &self.gemm_cfg); // [rows, hd]
             for r in 0..rows {
                 ctx[r * d + h * hd..r * d + (h + 1) * hd]
@@ -267,7 +349,7 @@ impl NativeModel {
             }
         }
         // Output projection at (w, a).
-        let cp = PackedMatrix::from_f32(&ctx, rows, d, pair.a);
+        let cp = PackedMatrix::from_f32(&ctx, rows, d, act);
         gemm_w(&cp, &l.wo, lp.wo.as_ref(), &self.gemm_cfg)
     }
 
@@ -285,7 +367,7 @@ impl NativeModel {
         &self,
         xn: &[f32],
         rows: usize,
-        pair: PrecisionPair,
+        act: Format,
         l: &PackedLayer,
         lp: &LayerPanels,
         kv: &mut KvCache,
@@ -298,7 +380,7 @@ impl NativeModel {
         let kv_dim = kv_heads * hd;
         let pos0 = kv.len();
 
-        let xq = PackedMatrix::from_f32(xn, rows, d, pair.a);
+        let xq = PackedMatrix::from_f32(xn, rows, d, act);
         let qkv = gemm_w(&xq, &l.wqkv, lp.wqkv.as_ref(), &self.gemm_cfg); // [rows, d + 2*kv_dim]
         let qkv_cols = d + 2 * kv_dim;
         for r in 0..rows {
@@ -326,7 +408,7 @@ impl NativeModel {
                     .copy_from_slice(&qkv[r * qkv_cols + h * hd..r * qkv_cols + (h + 1) * hd]);
             }
             // Scores against every cached position: (a, a).
-            let qp = PackedMatrix::from_f32(&q_h, rows, hd, pair.a);
+            let qp = PackedMatrix::from_f32(&q_h, rows, hd, act);
             let mut scores = gemm(&qp, kp, &self.gemm_cfg); // [rows, cur]
             for s in scores.iter_mut() {
                 *s *= scale;
@@ -341,14 +423,14 @@ impl NativeModel {
             }
             softmax_rows(&mut scores, cur);
             // Context: probabilities x cached V at (a, a).
-            let pp = PackedMatrix::from_f32(&scores, rows, cur, pair.a);
+            let pp = PackedMatrix::from_f32(&scores, rows, cur, act);
             let ctx_h = gemm(&pp, vp, &self.gemm_cfg); // [rows, hd]
             for r in 0..rows {
                 ctx[r * d + h * hd..r * d + (h + 1) * hd]
                     .copy_from_slice(&ctx_h[r * hd..(r + 1) * hd]);
             }
         }
-        let cp = PackedMatrix::from_f32(&ctx, rows, d, pair.a);
+        let cp = PackedMatrix::from_f32(&ctx, rows, d, act);
         gemm_w(&cp, &l.wo, lp.wo.as_ref(), &self.gemm_cfg)
     }
 
@@ -357,12 +439,12 @@ impl NativeModel {
         &self,
         xn: &[f32],
         rows: usize,
-        pair: PrecisionPair,
+        act: Format,
         l: &PackedLayer,
         lp: &LayerPanels,
     ) -> Vec<f32> {
         let d = self.spec.d_model;
-        let xq = PackedMatrix::from_f32(xn, rows, d, pair.a);
+        let xq = PackedMatrix::from_f32(xn, rows, d, act);
         let mut h = gemm_w(&xq, &l.w_up, lp.w_up.as_ref(), &self.gemm_cfg); // [rows, d_ff]
         match &l.w_gate {
             Some(wg) => {
@@ -377,7 +459,7 @@ impl NativeModel {
                 }
             }
         }
-        let hq = PackedMatrix::from_f32(&h, rows, self.spec.d_ff, pair.a);
+        let hq = PackedMatrix::from_f32(&h, rows, self.spec.d_ff, act);
         gemm_w(&hq, &l.w_down, lp.w_down.as_ref(), &self.gemm_cfg)
     }
 }
@@ -432,11 +514,12 @@ fn silu(x: f32) -> f32 {
 }
 
 /// One live token-stream session: the model it is bound to, the precision
-/// pair it was prefetched at (decode steps must match), and its KV cache.
+/// policy it was prefilled at (decode steps must match by digest), and its
+/// KV cache.
 #[derive(Debug)]
 struct Session {
     model: String,
-    pair: PrecisionPair,
+    policy: Arc<PrecisionPolicy>,
     kv: KvCache,
     last_used: u64,
 }
@@ -523,15 +606,16 @@ impl NativeExecutor {
         self.sessions.values().map(|s| s.kv.bytes()).sum()
     }
 
-    /// Run one forward pass outside the serving loop (warmup, testing).
+    /// Run one forward pass outside the serving loop (warmup, testing). A
+    /// bare [`crate::workload::PrecisionPair`] means the uniform policy.
     pub fn forward(
         &self,
         model: &str,
         input: &[f32],
-        pair: PrecisionPair,
+        policy: impl IntoPolicy,
     ) -> Result<Vec<f32>, String> {
         let m = self.models.get(model).ok_or_else(|| format!("no native model '{model}'"))?;
-        Ok(m.forward(input, pair, &self.cache))
+        Ok(m.forward(input, policy, &self.cache))
     }
 
     /// Packed-weight cache counters: (hits, misses).
@@ -588,18 +672,18 @@ impl Executor for NativeExecutor {
                 // Stateless one-shot block: full (bidirectional) forward,
                 // no KV retained — the pre-session serving behavior.
                 (0, Phase::Prefill) => {
-                    validate_block(req).map(|()| model.forward(&req.input, batch.pair, cache))
+                    validate_block(req).map(|()| model.forward(&req.input, &batch.policy, cache))
                 }
                 // Session prefill: causal forward populating a fresh KV
                 // cache (re-prefilling an id restarts the session).
                 (sid, Phase::Prefill) => validate_block(req).map(|()| {
-                    let mut kv = KvCache::new(&model.spec, batch.pair.a);
-                    let out = model.forward_prefill(&req.input, batch.pair, cache, &mut kv);
+                    let mut kv = KvCache::new(&model.spec, batch.policy.activation());
+                    let out = model.forward_prefill(&req.input, &batch.policy, cache, &mut kv);
                     sessions.insert(
                         sid,
                         Session {
                             model: batch.model.clone(),
-                            pair: batch.pair,
+                            policy: Arc::clone(&batch.policy),
                             kv,
                             last_used: clock,
                         },
@@ -622,11 +706,11 @@ impl Executor for NativeExecutor {
                         "request {}: session {sid} belongs to model '{}', not '{}'",
                         req.id, s.model, batch.model
                     )),
-                    Some(s) if s.pair != batch.pair => Err(format!(
+                    Some(s) if s.policy.digest() != batch.policy.digest() => Err(format!(
                         "request {}: session {sid} runs at {}, request asks {}",
                         req.id,
-                        s.pair.label(),
-                        batch.pair.label()
+                        s.policy.label(),
+                        batch.policy.label()
                     )),
                     Some(_) if req.input.len() != d => Err(format!(
                         "request {}: decode step must be one token row ({d} values), got {}",
@@ -635,7 +719,7 @@ impl Executor for NativeExecutor {
                     )),
                     Some(s) => {
                         s.last_used = clock;
-                        Ok(model.forward_decode(&req.input, batch.pair, cache, &mut s.kv))
+                        Ok(model.forward_decode(&req.input, &batch.policy, cache, &mut s.kv))
                     }
                 },
             };
@@ -677,6 +761,7 @@ impl Executor for NativeExecutor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::PrecisionPair;
 
     #[test]
     fn forward_shapes_and_determinism() {
@@ -787,7 +872,7 @@ mod tests {
 
         // Prefill opens the session; two decode steps extend it.
         let prefill = session_req(0, &spec, pair, vec![0.2; 4 * d], 7, Phase::Prefill);
-        let batch = Batch { model: spec.name.into(), pair, requests: vec![prefill] };
+        let batch = Batch { model: spec.name.into(), policy: pair.into_policy(), requests: vec![prefill] };
         let res = ex.execute(&batch).unwrap();
         assert_eq!(res.outputs.len(), 1);
         assert_eq!(res.outputs[0].as_ref().unwrap().len(), 4 * d);
@@ -796,7 +881,7 @@ mod tests {
 
         for step in 0..2u64 {
             let dec = session_req(1 + step, &spec, pair, vec![0.1; d], 7, Phase::Decode);
-            let batch = Batch { model: spec.name.into(), pair, requests: vec![dec] };
+            let batch = Batch { model: spec.name.into(), policy: pair.into_policy(), requests: vec![dec] };
             let res = ex.execute(&batch).unwrap();
             let out = res.outputs[0].as_ref().unwrap();
             assert_eq!(out.len(), d, "decode returns one hidden row");
@@ -819,13 +904,13 @@ mod tests {
         // an unknown session, a wrong-pair decode, and a wrong-length
         // decode — only the good one completes; each error is its own.
         let pre = session_req(0, &spec, pair, vec![0.3; 2 * d], 1, Phase::Prefill);
-        let b0 = Batch { model: spec.name.into(), pair, requests: vec![pre] };
+        let b0 = Batch { model: spec.name.into(), policy: pair.into_policy(), requests: vec![pre] };
         assert!(ex.execute(&b0).unwrap().outputs[0].is_ok());
 
         let good = session_req(1, &spec, pair, vec![0.1; d], 1, Phase::Decode);
         let unknown = session_req(2, &spec, pair, vec![0.1; d], 99, Phase::Decode);
         let short = session_req(3, &spec, pair, vec![0.1; d / 2], 1, Phase::Decode);
-        let b1 = Batch { model: spec.name.into(), pair, requests: vec![good, unknown, short] };
+        let b1 = Batch { model: spec.name.into(), policy: pair.into_policy(), requests: vec![good, unknown, short] };
         let res = ex.execute(&b1).unwrap();
         assert!(res.outputs[0].is_ok());
         assert!(res.outputs[1].as_ref().unwrap_err().contains("unknown session"));
@@ -833,7 +918,7 @@ mod tests {
 
         // A decode at a different pair than the session prefilled with.
         let wrong_pair = session_req(4, &spec, other_pair, vec![0.1; d], 1, Phase::Decode);
-        let b2 = Batch { model: spec.name.into(), pair: other_pair, requests: vec![wrong_pair] };
+        let b2 = Batch { model: spec.name.into(), policy: other_pair.into_policy(), requests: vec![wrong_pair] };
         let res = ex.execute(&b2).unwrap();
         assert!(res.outputs[0].as_ref().unwrap_err().contains("runs at"));
         // The good session survives the co-batched failures.
@@ -848,23 +933,23 @@ mod tests {
         let mut ex = NativeExecutor::new().with_session_capacity(2).with_model(spec.clone(), 1);
         for sid in 1..=2u64 {
             let pre = session_req(sid, &spec, pair, vec![0.2; d], sid, Phase::Prefill);
-            let b = Batch { model: spec.name.into(), pair, requests: vec![pre] };
+            let b = Batch { model: spec.name.into(), policy: pair.into_policy(), requests: vec![pre] };
             assert!(ex.execute(&b).unwrap().outputs[0].is_ok());
         }
         // Touch session 1 so session 2 is the LRU.
         let dec = session_req(10, &spec, pair, vec![0.1; d], 1, Phase::Decode);
-        let b = Batch { model: spec.name.into(), pair, requests: vec![dec] };
+        let b = Batch { model: spec.name.into(), policy: pair.into_policy(), requests: vec![dec] };
         assert!(ex.execute(&b).unwrap().outputs[0].is_ok());
         // A third session overflows the cap: session 2 must be evicted.
         let pre = session_req(11, &spec, pair, vec![0.2; d], 3, Phase::Prefill);
-        let b = Batch { model: spec.name.into(), pair, requests: vec![pre] };
+        let b = Batch { model: spec.name.into(), policy: pair.into_policy(), requests: vec![pre] };
         assert!(ex.execute(&b).unwrap().outputs[0].is_ok());
         assert_eq!(ex.session_count(), 2);
         let dead = session_req(12, &spec, pair, vec![0.1; d], 2, Phase::Decode);
-        let b = Batch { model: spec.name.into(), pair, requests: vec![dead] };
+        let b = Batch { model: spec.name.into(), policy: pair.into_policy(), requests: vec![dead] };
         assert!(ex.execute(&b).unwrap().outputs[0].is_err(), "LRU session was evicted");
         let alive = session_req(13, &spec, pair, vec![0.1; d], 1, Phase::Decode);
-        let b = Batch { model: spec.name.into(), pair, requests: vec![alive] };
+        let b = Batch { model: spec.name.into(), policy: pair.into_policy(), requests: vec![alive] };
         assert!(ex.execute(&b).unwrap().outputs[0].is_ok(), "hot session survived");
     }
 
@@ -875,22 +960,22 @@ mod tests {
         let pair = PrecisionPair::of_bits(6, 6);
         let mut ex = NativeExecutor::new().with_model(spec.clone(), 1);
         let pre = session_req(0, &spec, pair, vec![0.2; d], 4, Phase::Prefill);
-        let b = Batch { model: spec.name.into(), pair, requests: vec![pre] };
+        let b = Batch { model: spec.name.into(), policy: pair.into_policy(), requests: vec![pre] };
         assert!(ex.execute(&b).unwrap().outputs[0].is_ok());
         assert_eq!(ex.session_count(), 1);
 
         let end = session_req(1, &spec, pair, Vec::new(), 4, Phase::End);
-        let b = Batch { model: spec.name.into(), pair, requests: vec![end] };
+        let b = Batch { model: spec.name.into(), policy: pair.into_policy(), requests: vec![end] };
         let out = ex.execute(&b).unwrap().outputs.remove(0).unwrap();
         assert!(out.is_empty(), "End returns an empty result");
         assert_eq!(ex.session_count(), 0, "End frees the KV cache");
         // Idempotent: ending again (or an unknown session) still succeeds.
         let end = session_req(2, &spec, pair, Vec::new(), 4, Phase::End);
-        let b = Batch { model: spec.name.into(), pair, requests: vec![end] };
+        let b = Batch { model: spec.name.into(), policy: pair.into_policy(), requests: vec![end] };
         assert!(ex.execute(&b).unwrap().outputs[0].is_ok());
         // But End without a session id is a client error.
         let bad = session_req(3, &spec, pair, Vec::new(), 0, Phase::End);
-        let b = Batch { model: spec.name.into(), pair, requests: vec![bad] };
+        let b = Batch { model: spec.name.into(), policy: pair.into_policy(), requests: vec![bad] };
         assert!(ex.execute(&b).unwrap().outputs[0].is_err());
     }
 
@@ -901,7 +986,7 @@ mod tests {
         let pair = PrecisionPair::of_bits(6, 6);
         let mut ex = NativeExecutor::new().with_model(spec.clone(), 1);
         let pre = session_req(0, &spec, pair, vec![0.2; d], 5, Phase::Prefill);
-        let b = Batch { model: spec.name.into(), pair, requests: vec![pre] };
+        let b = Batch { model: spec.name.into(), policy: pair.into_policy(), requests: vec![pre] };
         assert!(ex.execute(&b).unwrap().outputs[0].is_ok());
         ex.register(spec.clone(), 2);
         assert_eq!(ex.session_count(), 0, "stale sessions must not serve new weights");
@@ -915,5 +1000,87 @@ mod tests {
         let input = vec![0.1f32; rows * spec.d_model];
         let out = ex.forward(spec.name, &input, PrecisionPair::of_bits(4, 8)).unwrap();
         assert_eq!(out.len(), input.len());
+    }
+
+    #[test]
+    fn uniform_policy_forward_is_bitwise_the_pair_forward() {
+        let spec = ModelSpec::tiny();
+        let ex = NativeExecutor::new().with_model(spec.clone(), 9);
+        let pair = PrecisionPair::of_bits(6, 6);
+        let input: Vec<f32> =
+            (0..spec.seq * spec.d_model).map(|i| ((i % 11) as f32 - 5.0) * 0.1).collect();
+        let a = ex.forward(spec.name, &input, pair).unwrap();
+        let b = ex
+            .forward(spec.name, &input, PrecisionPolicy::uniform("u", pair))
+            .unwrap();
+        assert_eq!(a, b, "uniform policy must be the pair path, bit for bit");
+        // Same weight digest -> one pack, not two.
+        assert_eq!(ex.cache_stats(), (1, 1));
+    }
+
+    #[test]
+    fn policies_sharing_weight_formats_share_the_packed_cache() {
+        use crate::arith::format::FpFormat;
+        let spec = ModelSpec::tiny();
+        let ex = NativeExecutor::new().with_model(spec.clone(), 5);
+        let fp6 = Format::Fp(FpFormat::FP6_E3M2);
+        let input = vec![0.2f32; spec.seq * spec.d_model];
+        // [6,6] and [6,16] differ only in activation format: the packed
+        // weights are identical, so the second forward must hit the cache.
+        ex.forward(spec.name, &input, PrecisionPair::new(fp6, fp6)).unwrap();
+        ex.forward(spec.name, &input, PrecisionPair::new(fp6, Format::Fp(FpFormat::FP16)))
+            .unwrap();
+        assert_eq!(ex.cache_stats(), (1, 1), "weight-digest keying shares the pack");
+    }
+
+    #[test]
+    fn mixed_policy_serves_stateless_and_sessions() {
+        use crate::workload::LayerPolicy;
+        let spec = ModelSpec::tiny();
+        let d = spec.d_model;
+        let act = Format::Fp(crate::arith::format::FpFormat::FP6_E3M2);
+        let mut attn = LayerPolicy::uniform(PrecisionPair::new(
+            Format::Fp(crate::arith::format::FpFormat::FP4_E2M1),
+            act,
+        ));
+        attn.down = PrecisionPair::new(Format::int(8), act);
+        let policy = Arc::new(PrecisionPolicy::new(
+            "mixed",
+            vec![attn, LayerPolicy::uniform(PrecisionPair::new(Format::int(4), act))],
+        ));
+        let mut ex = NativeExecutor::new().with_model(spec.clone(), 13);
+
+        let input = vec![0.2f32; 3 * d];
+        let out = ex.forward(spec.name, &input, &policy).unwrap();
+        assert!(out.iter().all(|v| v.is_finite()));
+
+        // Session prefill + decode under the mixed policy.
+        let pre = session_req_policy(0, &spec, &policy, vec![0.3; 2 * d], 8, Phase::Prefill);
+        let b = Batch { model: spec.name.into(), policy: Arc::clone(&policy), requests: vec![pre] };
+        assert!(ex.execute(&b).unwrap().outputs[0].is_ok());
+        let dec = session_req_policy(1, &spec, &policy, vec![0.1; d], 8, Phase::Decode);
+        let b = Batch { model: spec.name.into(), policy: Arc::clone(&policy), requests: vec![dec] };
+        assert!(ex.execute(&b).unwrap().outputs[0].is_ok());
+
+        // A decode under a *different* policy with the same activation is
+        // refused by digest, not by activation format.
+        let uni = PrecisionPair::new(Format::int(4), act);
+        let dec = session_req_policy(2, &spec, &uni.into_policy(), vec![0.1; d], 8, Phase::Decode);
+        let b = Batch { model: spec.name.into(), policy: uni.into_policy(), requests: vec![dec] };
+        let res = ex.execute(&b).unwrap();
+        assert!(res.outputs[0].as_ref().unwrap_err().contains("runs at"));
+    }
+
+    fn session_req_policy(
+        id: u64,
+        spec: &ModelSpec,
+        policy: &Arc<PrecisionPolicy>,
+        input: Vec<f32>,
+        session: u64,
+        phase: crate::coordinator::Phase,
+    ) -> crate::coordinator::Request {
+        let d = spec.d_model;
+        crate::coordinator::Request::new(id, spec.name, policy, input, vec![d])
+            .with_session(session, phase)
     }
 }

@@ -36,6 +36,7 @@
 //! extraction).
 
 use crate::arith::{decode, encode, Format, PackedTensor};
+use std::sync::Arc;
 
 /// Per-format code → f32 decoder.
 ///
@@ -218,6 +219,12 @@ impl PackedMatrix {
     /// adopted streams, `None` when unknown.
     pub fn max_abs(&self) -> Option<i64> {
         self.max_abs
+    }
+
+    /// The backing tensor's shared words — for `Arc::ptr_eq` assertions
+    /// that adoption paths (the KV cache) really are zero-copy.
+    pub fn shared_words(&self) -> &Arc<Vec<u64>> {
+        self.data.shared_words()
     }
 
     pub fn rows(&self) -> usize {

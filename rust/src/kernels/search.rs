@@ -1,0 +1,260 @@
+//! Offline mixed-precision policy search: greedy per-layer, per-projection
+//! weight-width descent under a quantization-error proxy.
+//!
+//! The proxy is the layer-output error a candidate weight format induces on
+//! seeded Gaussian calibration activations: quantize the projection's
+//! weights at the candidate (round-to-nearest through
+//! [`crate::arith::encode`]/[`crate::arith::decode`] — exactly what
+//! [`crate::kernels::PackedMatrix::from_f32`] bakes in at pack time),
+//! multiply in f64 against the calibration rows, and compare with the
+//! unquantized product: relative MSE plus a relative max-abs term. Formats
+//! at the same width compete by proxy score (FP vs INT, the format-family
+//! selection of LLM-FP4, arxiv 2305.12356) and a layer keeps narrowing
+//! while both error bounds hold (the sensitivity-ordered descent of
+//! mixed-precision search, arxiv 2310.13513). Everything is seeded, so the
+//! same model + config always emits the same policy — byte-identical JSON,
+//! stable digest.
+
+use super::model::NativeModel;
+use crate::arith::{decode, encode, Format};
+use crate::util::Rng;
+use crate::workload::{LayerPolicy, PrecisionPair, PrecisionPolicy, Projection};
+
+/// Tunables of the greedy policy search. `widths` is walked widest-first;
+/// the widest width is the unconditional fallback, every narrower one must
+/// keep both error proxies under its bound.
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    /// Candidate weight widths in bits, sorted descending (asserted).
+    pub widths: Vec<u32>,
+    /// Calibration rows drawn per projection (seeded Gaussian).
+    pub calib_rows: usize,
+    /// Output columns scored per projection (caps the proxy's cost on
+    /// wide FFN matrices; columns beyond this are not scored).
+    pub sample_cols: usize,
+    /// Seed for the calibration activations.
+    pub seed: u64,
+    /// Bound on `sum((y_q - y)^2) / sum(y^2)`.
+    pub max_rel_mse: f64,
+    /// Bound on `max|y_q - y| / max|y|`.
+    pub max_rel_err: f64,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            widths: vec![8, 6, 5, 4],
+            calib_rows: 16,
+            sample_cols: 128,
+            seed: 0xF1E8,
+            max_rel_mse: 2e-3,
+            max_rel_err: 0.25,
+        }
+    }
+}
+
+/// Error proxy of one candidate weight format on one projection:
+/// `(rel_mse, rel_max)` against the f64 reference product. Lower is better;
+/// the scalar ordering key is `rel_mse + rel_max` (both terms matter — MSE
+/// alone hides single-element blowups, max alone hides broad drift).
+fn proxy(
+    x: &[f32],
+    rows: usize,
+    w: &[f32],
+    in_dim: usize,
+    cols: &[usize],
+    fmt: Format,
+) -> (f64, f64) {
+    let stride = w.len() / in_dim; // row-major in_dim x cols_total
+    let mut sq_err = 0f64;
+    let mut sq_ref = 0f64;
+    let mut max_err = 0f64;
+    let mut max_ref = 0f64;
+    // One column at a time: the reference and quantized column vectors are
+    // built once and reused across calibration rows.
+    let mut wc = vec![0f64; in_dim];
+    let mut wq = vec![0f64; in_dim];
+    for &c in cols {
+        for k in 0..in_dim {
+            let v = w[k * stride + c] as f64;
+            wc[k] = v;
+            wq[k] = decode(encode(v, fmt), fmt);
+        }
+        for r in 0..rows {
+            let xr = &x[r * in_dim..(r + 1) * in_dim];
+            let mut y = 0f64;
+            let mut yq = 0f64;
+            for k in 0..in_dim {
+                let xv = xr[k] as f64;
+                y += xv * wc[k];
+                yq += xv * wq[k];
+            }
+            let e = yq - y;
+            sq_err += e * e;
+            sq_ref += y * y;
+            max_err = max_err.max(e.abs());
+            max_ref = max_ref.max(y.abs());
+        }
+    }
+    let rel_mse = if sq_ref > 0.0 { sq_err / sq_ref } else { sq_err };
+    let rel_max = if max_ref > 0.0 { max_err / max_ref } else { max_err };
+    (rel_mse, rel_max)
+}
+
+/// The candidate formats at one width: the default FP split always, plus
+/// the affine-free integer grid where it exists. (Unscaled INT quantizes
+/// sub-unit weights to zero — the proxy scores it honestly and FP wins on
+/// Gaussian weights; INT stays a candidate for weight distributions where
+/// it is exact.)
+fn candidates(width: u32) -> Vec<Format> {
+    let mut v = Vec::new();
+    if (3..=16).contains(&width) {
+        v.push(Format::default_fp(width));
+    }
+    if (2..=32).contains(&width) {
+        v.push(Format::int(width as u8));
+    }
+    v
+}
+
+/// Greedy per-layer, per-projection policy search over `model`'s
+/// synthesized weights. Activations stay at `act` (the KV cache packs at
+/// one format); only weight formats are searched. Deterministic in
+/// (`model`, `act`, `cfg`): the emitted policy's digest is stable across
+/// runs.
+pub fn search_policy(
+    model: &NativeModel,
+    name: &str,
+    act: Format,
+    cfg: &SearchConfig,
+) -> PrecisionPolicy {
+    assert!(!cfg.widths.is_empty(), "policy search needs at least one candidate width");
+    assert!(
+        cfg.widths.windows(2).all(|w| w[0] > w[1]),
+        "candidate widths must be strictly descending"
+    );
+    assert!(cfg.calib_rows > 0 && cfg.sample_cols > 0);
+
+    let mut rng = Rng::new(cfg.seed);
+    let spec = &model.spec;
+    let mut layers = Vec::with_capacity(spec.layers);
+    for li in 0..spec.layers {
+        let mut lp = LayerPolicy::uniform(PrecisionPair::new(
+            Format::default_fp(cfg.widths[0]),
+            act,
+        ));
+        for proj in Projection::ALL {
+            let (w, in_dim, cols) = model.projection_weights(li, proj);
+            // Seeded calibration rows for this (layer, projection): the
+            // draw order is fixed by the loop order, so the search is
+            // deterministic end to end.
+            let x: Vec<f32> =
+                (0..cfg.calib_rows * in_dim).map(|_| rng.gauss() as f32).collect();
+            let scored: Vec<usize> = (0..cols.min(cfg.sample_cols)).collect();
+
+            let mut chosen: Option<Format> = None;
+            for (wi, &width) in cfg.widths.iter().enumerate() {
+                let best = candidates(width)
+                    .into_iter()
+                    .map(|f| {
+                        let (mse, mx) = proxy(&x, cfg.calib_rows, w, in_dim, &scored, f);
+                        (f, mse, mx)
+                    })
+                    .min_by(|a, b| {
+                        (a.1 + a.2).partial_cmp(&(b.1 + b.2)).expect("finite proxy scores")
+                    });
+                let Some((f, mse, mx)) = best else { break };
+                // The widest width is the fallback; narrower ones must pass.
+                if wi > 0 && (mse > cfg.max_rel_mse || mx > cfg.max_rel_err) {
+                    break;
+                }
+                chosen = Some(f);
+            }
+            let f = chosen.expect("widths non-empty, widest always yields a candidate");
+            let pair = PrecisionPair::new(f, act);
+            match proj {
+                Projection::Qkv => lp.qkv = pair,
+                Projection::Out => lp.out = pair,
+                Projection::GateUp => lp.gate_up = pair,
+                Projection::Down => lp.down = pair,
+            }
+        }
+        layers.push(lp);
+    }
+    PrecisionPolicy::new(name, layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::ModelSpec;
+
+    fn tiny_model() -> NativeModel {
+        NativeModel::synthesize(ModelSpec::tiny(), 42)
+    }
+
+    #[test]
+    fn search_is_deterministic_with_stable_digest() {
+        let m = tiny_model();
+        let act = Format::default_fp(6);
+        let cfg = SearchConfig::default();
+        let a = search_policy(&m, "p", act, &cfg);
+        let b = search_policy(&m, "p", act, &cfg);
+        assert_eq!(a.digest(), b.digest(), "same inputs must emit the same policy");
+        assert_eq!(a.to_json(), b.to_json());
+    }
+
+    #[test]
+    fn thresholds_bound_the_descent() {
+        let m = tiny_model();
+        let act = Format::default_fp(6);
+        // Impossible bounds: every projection stays at the widest fallback.
+        let strict = SearchConfig { max_rel_mse: 0.0, max_rel_err: 0.0, ..Default::default() };
+        let p = search_policy(&m, "strict", act, &strict);
+        for li in 0..m.spec.layers {
+            for proj in Projection::ALL {
+                assert_eq!(p.pair_for(li, proj).w.bits(), strict.widths[0]);
+            }
+        }
+        // Permissive bounds: every projection reaches the narrowest width.
+        let loose = SearchConfig { max_rel_mse: 1e12, max_rel_err: 1e12, ..Default::default() };
+        let p = search_policy(&m, "loose", act, &loose);
+        for li in 0..m.spec.layers {
+            for proj in Projection::ALL {
+                assert_eq!(p.pair_for(li, proj).w.bits(), *loose.widths.last().unwrap());
+            }
+        }
+    }
+
+    #[test]
+    fn searched_policy_json_round_trips_and_serves() {
+        let m = tiny_model();
+        let act = Format::default_fp(6);
+        let cfg = SearchConfig { calib_rows: 4, sample_cols: 16, ..Default::default() };
+        let p = search_policy(&m, "searched", act, &cfg);
+        let back = PrecisionPolicy::parse_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+        // The searched policy runs through the native forward.
+        let cache = super::super::WeightCache::default();
+        let input = vec![0.1f32; 2 * m.spec.d_model];
+        let out = m.forward(&input, back, &cache);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn gaussian_weights_prefer_fp_over_unscaled_int() {
+        // 1/sqrt(fan_in)-scaled weights are sub-unit: unscaled INT rounds
+        // them to zero, so the proxy must steer every projection to FP.
+        let m = tiny_model();
+        let p = search_policy(&m, "fam", Format::default_fp(6), &SearchConfig::default());
+        for li in 0..m.spec.layers {
+            for proj in Projection::ALL {
+                assert!(
+                    matches!(p.pair_for(li, proj).w, Format::Fp(_)),
+                    "layer {li} {proj:?} picked {}",
+                    p.pair_for(li, proj).w
+                );
+            }
+        }
+    }
+}

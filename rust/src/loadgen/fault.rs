@@ -215,10 +215,11 @@ mod tests {
     }
 
     fn batch(ids: &[u64]) -> Batch {
+        use crate::workload::IntoPolicy;
         let pair = PrecisionPair::of_bits(6, 6);
         Batch {
             model: "tiny".into(),
-            pair,
+            policy: pair.into_policy(),
             requests: ids
                 .iter()
                 .map(|&id| Request::new(id, "tiny", pair, vec![0.0; 4], vec![4]))

@@ -8,7 +8,8 @@
 //!   the offline build has no `rand`).
 //! * [`Scenario`] — arrival process ([`Arrival`]: closed-loop with think
 //!   time, open-loop Poisson, bursty on/off), session-length and
-//!   prefill-length distributions ([`Dist`]), and a precision-pair mix —
+//!   prefill-length distributions ([`Dist`]), and a precision-**policy**
+//!   mix (uniform pairs and per-layer mixed policies round-robin alike) —
 //!   expanded by [`Scenario::schedule`] into a [`SessionPlan`] list that is
 //!   a pure function of the seed, receipted by [`schedule_digest`].
 //! * [`run`] — drives the schedule through a live server: sessions prefill
@@ -21,10 +22,13 @@
 //!   rates, keyed per (request id, attempt) so two runs of the same seed
 //!   fault identically (`flexibit loadgen --faults`).
 //! * [`LoadReport`] — counts, per-phase latency/goodput (from the server's
-//!   own [`Metrics`] histograms), token throughput, and the drift audit,
-//!   as text or machine-readable JSON (schema `flexibit.loadgen.v2`; v2
-//!   added the order-independent `output_digest`, the `faults` echo, and
-//!   the metrics body's `robustness` retry/shed/deadline-miss counters).
+//!   own [`Metrics`] histograms), token throughput, per-policy co-simulated
+//!   cost ([`PolicyCost`]), and the drift audit, as text or
+//!   machine-readable JSON (schema `flexibit.loadgen.v3`; v3 switched the
+//!   scenario echo from `pairs` to named `policies` with digests and added
+//!   the `policy_costs` array; v2 added the order-independent
+//!   `output_digest`, the `faults` echo, and the metrics body's
+//!   `robustness` retry/shed/deadline-miss counters).
 //!
 //! Request ids are schedule-deterministic (`session << 20 | step`, End
 //! steps id 0), so a fault plan keyed on ids reproduces bit-exactly across
@@ -103,6 +107,22 @@ fn fold_output(digest: &mut u64, id: u64, out: &[f32]) {
     *digest ^= h;
 }
 
+/// Co-simulated FlexiBit cost of serving the scenario's model under one
+/// precision policy (full-sequence prefill on Mobile-A): the number that
+/// lets one loadgen run compare what each of its named policies *costs* on
+/// the accelerator, not just that both produced correct outputs.
+#[derive(Debug, Clone)]
+pub struct PolicyCost {
+    /// Policy name ([`crate::workload::PrecisionPolicy::label`]).
+    pub name: String,
+    /// Content digest — the identity the batcher groups on.
+    pub digest: u64,
+    /// Analytical-model latency for one full prefill, seconds.
+    pub seconds: f64,
+    /// Analytical-model energy for one full prefill, joules.
+    pub energy_j: f64,
+}
+
 /// Everything one load-generation run produced.
 pub struct LoadReport {
     pub scenario: Scenario,
@@ -117,6 +137,9 @@ pub struct LoadReport {
     /// [`FaultyExecutor`] (`None` for clean runs) — echoed in the report so
     /// a chaos artifact is self-describing.
     pub faults: Option<String>,
+    /// Per-policy co-simulated accelerator cost, one entry per distinct
+    /// policy digest in the scenario, in first-appearance order.
+    pub policy_costs: Vec<PolicyCost>,
     /// Final server metrics (per-phase histograms, drift audit, co-sim).
     pub metrics: crate::coordinator::Metrics,
 }
@@ -126,14 +149,15 @@ impl LoadReport {
         self.counts.prefill_tokens + self.counts.decode_tokens
     }
 
-    /// Machine-readable report: schema `flexibit.loadgen.v2`. The
-    /// `metrics` member is the server's own `flexibit.metrics.v2` body
+    /// Machine-readable report: schema `flexibit.loadgen.v3`. The
+    /// `metrics` member is the server's own `flexibit.metrics.v3` body
     /// (whose `robustness` object carries the retry/shed/deadline-miss
     /// counts), so `serve --metrics-out` files and loadgen reports share
-    /// their shape.
+    /// their shape. v3 echoes the scenario's named policies (with content
+    /// digests) and carries `policy_costs`.
     pub fn json(&self) -> String {
         let c = &self.counts;
-        let mut out = String::from("{\"schema\":\"flexibit.loadgen.v2\",");
+        let mut out = String::from("{\"schema\":\"flexibit.loadgen.v3\",");
         let _ = write!(
             out,
             "\"scenario\":{},\"digest\":{},\"timed_out\":{},\"faults\":{},",
@@ -163,6 +187,21 @@ impl LoadReport {
                 0.0
             }),
         );
+        out.push_str("\"policy_costs\":[");
+        for (i, pc) in self.policy_costs.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "{{\"name\":{},\"digest\":\"{:016x}\",\"seconds\":{},\"energy_j\":{}}}",
+                json_str(&pc.name),
+                pc.digest,
+                json_num(pc.seconds),
+                json_num(pc.energy_j),
+            );
+        }
+        out.push_str("],");
         let _ = write!(out, "\"metrics\":{{{}}}}}", self.metrics.report_fields(self.wall_s));
         out
     }
@@ -193,6 +232,16 @@ impl LoadReport {
         );
         if self.timed_out {
             let _ = writeln!(out, "          TIMED OUT before the schedule drained");
+        }
+        for pc in &self.policy_costs {
+            let _ = writeln!(
+                out,
+                "          policy {} (digest {:016x}): co-sim prefill {:.3} ms, {:.3} mJ",
+                pc.name,
+                pc.digest,
+                pc.seconds * 1e3,
+                pc.energy_j * 1e3,
+            );
         }
         out.push_str(&self.metrics.summary(self.wall_s));
         out
@@ -266,7 +315,7 @@ pub fn run(
                         // seeded fault plan key on it.
                         let id = request_id(plan.session, 0);
                         server.submit(
-                            Request::new(id, model.name, plan.pair, block, dims)
+                            Request::new(id, model.name, &plan.policy, block, dims)
                                 .with_session(plan.session, Phase::Prefill)
                                 .with_completion(&done),
                         );
@@ -314,7 +363,7 @@ pub fn run(
                                     Request::new(
                                         0,
                                         model.name,
-                                        plan.pair,
+                                        &plan.policy,
                                         Vec::new(),
                                         Vec::new(),
                                     )
@@ -336,7 +385,7 @@ pub fn run(
                         let done = Completion::new();
                         let id = request_id(plan.session, next_step);
                         server.submit(
-                            Request::new(id, model.name, plan.pair, row, vec![d])
+                            Request::new(id, model.name, &plan.policy, row, vec![d])
                                 .with_session(plan.session, Phase::Decode)
                                 .with_completion(&done),
                         );
@@ -361,15 +410,40 @@ pub fn run(
         wall_s,
         timed_out,
         faults: None,
+        policy_costs: policy_costs(model, scenario),
         metrics: server.metrics(),
     }
+}
+
+/// Co-simulate one full-sequence prefill of `model` on FlexiBit (Mobile-A)
+/// for each *distinct* policy in the scenario, first-appearance order —
+/// the per-policy accelerator price list the v3 report publishes next to
+/// the measured serving numbers.
+fn policy_costs(model: &ModelSpec, scenario: &Scenario) -> Vec<PolicyCost> {
+    let accel = crate::baselines::FlexiBitAccel::new();
+    let cfg = crate::sim::mobile_a();
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::new();
+    for p in &scenario.policies {
+        if !seen.insert(p.digest()) {
+            continue;
+        }
+        let rep = crate::sim::simulate_model_policy(&accel, &cfg, model, p, 0);
+        out.push(PolicyCost {
+            name: p.label().to_string(),
+            digest: p.digest(),
+            seconds: rep.seconds,
+            energy_j: rep.energy_j,
+        });
+    }
+    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::{Batch, BatchPolicy, FnExecutor, Resilience, Server, ServerConfig};
-    use crate::workload::PrecisionPair;
+    use crate::workload::{IntoPolicy, PrecisionPair};
     use std::time::Duration;
 
     fn tiny() -> ModelSpec {
@@ -410,7 +484,10 @@ mod tests {
             arrival,
             prefill_len: Dist::Uniform(1, 4),
             decode_steps: Dist::Fixed(3),
-            pairs: vec![PrecisionPair::of_bits(6, 6), PrecisionPair::of_bits(8, 8)],
+            policies: vec![
+                PrecisionPair::of_bits(6, 6).into_policy(),
+                PrecisionPair::of_bits(8, 8).into_policy(),
+            ],
         }
     }
 
@@ -442,9 +519,17 @@ mod tests {
         assert!(!rep.timed_out);
         assert_eq!(rep.counts.completed, 6 * 4);
         let j = rep.json();
-        assert!(j.starts_with("{\"schema\":\"flexibit.loadgen.v2\","));
+        assert!(j.starts_with("{\"schema\":\"flexibit.loadgen.v3\","));
         assert!(j.contains(&format!("\"digest\":\"{}\"", rep.digest)));
         assert!(j.contains("\"faults\":null"), "clean runs echo no fault plan");
+        assert_eq!(rep.policy_costs.len(), 2, "one cost entry per distinct policy");
+        assert!(rep.policy_costs.iter().all(|pc| pc.seconds > 0.0 && pc.energy_j > 0.0));
+        assert!(
+            rep.policy_costs[0].seconds < rep.policy_costs[1].seconds,
+            "[6,6] prefill must co-sim cheaper than [8,8]"
+        );
+        assert!(j.contains("\"policy_costs\":[{\"name\":\"[6,6]\",\"digest\":\""));
+        assert!(j.contains("\"policies\":[{\"name\":\"[6,6]\",\"digest\":\""));
         assert!(j.contains(&format!("\"output_digest\":\"{:016x}\"", rep.counts.output_digest)));
         assert!(j.contains("\"robustness\":{\"retries\":0,"));
         assert!(j.contains("\"metrics\":{\"wall_s\":"));
@@ -488,7 +573,7 @@ mod tests {
                 resilience: Resilience::default(),
             },
             Box::new(FnExecutor(|b: &Batch| -> Result<f64, String> {
-                if b.pair.w.bits() == 6 {
+                if b.policy.head_pair().w.bits() == 6 {
                     Err("synthetic".into())
                 } else {
                     Ok(0.0)

@@ -1,15 +1,16 @@
 //! Traffic scenarios: what arrives when. A [`Scenario`] is a pure seeded
 //! description — expanding it to a concrete [`SessionPlan`] schedule uses
 //! only the scenario's own [`Lcg`] stream, so the same seed always yields
-//! the same sessions, arrival times, lengths, precision pairs, and
+//! the same sessions, arrival times, lengths, precision policies, and
 //! per-session input seeds, on any host. The [`schedule_digest`] (FNV-1a
 //! over the schedule's canonical bytes) is the bit-reproducibility receipt
 //! a rerun can compare against.
 
 use super::lcg::Lcg;
 use crate::obs::json_str;
-use crate::workload::PrecisionPair;
+use crate::workload::PrecisionPolicy;
 use std::fmt::Write as _;
+use std::sync::Arc;
 
 /// A length distribution (prefill rows, decode steps). Parse syntax, one
 /// string per CLI flag:
@@ -102,7 +103,9 @@ pub struct SessionPlan {
     /// Start offset from run start, seconds. 0 for closed-loop plans (they
     /// start when a concurrency slot frees up, not at a wall time).
     pub arrival_s: f64,
-    pub pair: PrecisionPair,
+    /// The precision policy this session runs under (shared, round-robin
+    /// from [`Scenario::policies`]).
+    pub policy: Arc<PrecisionPolicy>,
     /// Prefill block length in token rows (>= 1).
     pub prefill_rows: usize,
     /// Decode steps after the prefill (0 = prefill-only).
@@ -119,15 +122,17 @@ pub struct Scenario {
     pub arrival: Arrival,
     pub prefill_len: Dist,
     pub decode_steps: Dist,
-    /// Precision pairs, assigned round-robin so every pair is exercised
-    /// even in short runs (the mix is a coverage guarantee, not a sample).
-    pub pairs: Vec<PrecisionPair>,
+    /// Precision policies, assigned round-robin so every policy is
+    /// exercised even in short runs (the mix is a coverage guarantee, not a
+    /// sample). Uniform pair-style entries are just
+    /// `pair.into_policy()`; named mixed policies come from policy JSON.
+    pub policies: Vec<Arc<PrecisionPolicy>>,
 }
 
 impl Scenario {
     /// Expand to the concrete schedule. Pure function of the scenario.
     pub fn schedule(&self) -> Vec<SessionPlan> {
-        assert!(!self.pairs.is_empty(), "a scenario needs at least one precision pair");
+        assert!(!self.policies.is_empty(), "a scenario needs at least one precision policy");
         let mut g = Lcg::new(self.seed);
         let mut active_s = 0.0f64; // Poisson time, before on/off gating
         (0..self.sessions)
@@ -150,7 +155,9 @@ impl Scenario {
                 SessionPlan {
                     session: i + 1,
                     arrival_s,
-                    pair: self.pairs[(i % self.pairs.len() as u64) as usize],
+                    policy: Arc::clone(
+                        &self.policies[(i % self.policies.len() as u64) as usize],
+                    ),
                     prefill_rows: self.prefill_len.sample(&mut g).max(1) as usize,
                     decode_steps: self.decode_steps.sample(&mut g),
                     input_seed: g.next_u64(),
@@ -165,7 +172,7 @@ impl Scenario {
         let _ = write!(
             out,
             "\"seed\":{},\"sessions\":{},\"model\":{},\"arrival\":{},\
-             \"prefill_len\":{},\"decode_steps\":{},\"pairs\":[",
+             \"prefill_len\":{},\"decode_steps\":{},\"policies\":[",
             self.seed,
             self.sessions,
             json_str(model),
@@ -173,11 +180,16 @@ impl Scenario {
             json_str(&self.prefill_len.label()),
             json_str(&self.decode_steps.label()),
         );
-        for (i, p) in self.pairs.iter().enumerate() {
+        for (i, p) in self.policies.iter().enumerate() {
             if i > 0 {
                 out.push(',');
             }
-            out.push_str(&json_str(&p.label()));
+            let _ = write!(
+                out,
+                "{{\"name\":{},\"digest\":\"{:016x}\"}}",
+                json_str(p.label()),
+                p.digest()
+            );
         }
         out.push_str("]}");
         out
@@ -198,7 +210,8 @@ pub fn schedule_digest(plans: &[SessionPlan]) -> String {
     for p in plans {
         eat(&p.session.to_le_bytes());
         eat(&p.arrival_s.to_bits().to_le_bytes());
-        eat(p.pair.label().as_bytes());
+        eat(p.policy.label().as_bytes());
+        eat(&p.policy.digest().to_le_bytes());
         eat(&(p.prefill_rows as u64).to_le_bytes());
         eat(&p.decode_steps.to_le_bytes());
         eat(&p.input_seed.to_le_bytes());
@@ -209,9 +222,13 @@ pub fn schedule_digest(plans: &[SessionPlan]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::{IntoPolicy, PrecisionPair};
 
-    fn pairs() -> Vec<PrecisionPair> {
-        vec![PrecisionPair::of_bits(6, 6), PrecisionPair::of_bits(8, 8)]
+    fn policies() -> Vec<Arc<PrecisionPolicy>> {
+        vec![
+            PrecisionPair::of_bits(6, 6).into_policy(),
+            PrecisionPair::of_bits(8, 8).into_policy(),
+        ]
     }
 
     fn scenario(seed: u64, arrival: Arrival) -> Scenario {
@@ -221,7 +238,7 @@ mod tests {
             arrival,
             prefill_len: Dist::Uniform(2, 8),
             decode_steps: Dist::Geom { mean: 3.0, cap: 10 },
-            pairs: pairs(),
+            policies: policies(),
         }
     }
 
@@ -268,10 +285,14 @@ mod tests {
         assert_eq!(schedule_digest(&a), schedule_digest(&b));
         let other = scenario(8, Arrival::Poisson { rps: 500.0 }).schedule();
         assert_ne!(schedule_digest(&a), schedule_digest(&other), "seed must matter");
-        // Sessions are 1-based and every pair appears (round-robin).
+        // Sessions are 1-based and every policy appears (round-robin).
         assert!(a.iter().all(|p| p.session >= 1 && p.prefill_rows >= 1));
-        for pair in pairs() {
-            assert!(a.iter().any(|p| p.pair == pair), "pair {} unused", pair.label());
+        for policy in policies() {
+            assert!(
+                a.iter().any(|p| p.policy.digest() == policy.digest()),
+                "policy {} unused",
+                policy.label()
+            );
         }
     }
 
@@ -308,7 +329,9 @@ mod tests {
         assert!(j.contains("\"seed\":7"));
         assert!(j.contains("\"arrival\":\"closed:2:0.001\""));
         assert!(j.contains("\"prefill_len\":\"uniform:2:8\""));
-        assert!(j.contains("\"pairs\":[\"[6,6]\",\"[8,8]\"]"));
+        assert!(j.contains("\"policies\":["));
+        assert!(j.contains("{\"name\":\"[6,6]\",\"digest\":\""));
+        assert!(j.contains("{\"name\":\"[8,8]\",\"digest\":\""));
         assert_eq!(j.matches('{').count(), j.matches('}').count());
     }
 }

@@ -10,9 +10,14 @@
 //!   no Python, any precision pair).
 //! * `loadgen`  — drive the server with a seeded, deterministic traffic
 //!   scenario (closed-loop / Poisson / bursty arrivals, distributional
-//!   session shapes) and emit a machine-readable report with per-phase
-//!   latency, goodput, token throughput, and the sim-vs-measured drift
-//!   audit; the drift gate makes divergence a nonzero exit code.
+//!   session shapes, uniform pairs and/or named per-layer policies) and
+//!   emit a machine-readable report with per-phase latency, goodput, token
+//!   throughput, per-policy co-simulated cost, and the sim-vs-measured
+//!   drift audit; the drift gate makes divergence a nonzero exit code.
+//! * `policy`   — offline greedy per-layer mixed-precision search: pick the
+//!   narrowest weight format per (layer, projection) that stays inside a
+//!   quantization-error budget on seeded calibration activations, and emit
+//!   the result as loadable policy JSON (`flexibit.policy.v1`).
 //! * `report`   — print the index of paper table/figure reproduction
 //!   binaries.
 
@@ -23,14 +28,15 @@ use flexibit::baselines::{
 use flexibit::coordinator::{
     BatchPolicy, Executor, Request, Resilience, Server, ServerConfig, StreamDriver,
 };
-use flexibit::kernels::NativeExecutor;
+use flexibit::kernels::{search_policy, NativeExecutor, NativeModel, SearchConfig};
 use flexibit::loadgen::{self, Arrival, Dist, FaultPlan, FaultyExecutor, Scenario};
 use flexibit::obs::{self, DriftBound, Recorder, DEFAULT_EVENT_CAPACITY};
 use flexibit::pe::{Pe, PeConfig};
 use flexibit::report::{fmt_j, fmt_s};
 use flexibit::sim::{all_configs, simulate_model};
 use flexibit::util::Rng;
-use flexibit::workload::{all_models, ModelSpec, PrecisionPair};
+use flexibit::workload::{all_models, IntoPolicy, ModelSpec, PrecisionPair, PrecisionPolicy};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn usage() -> ! {
@@ -49,11 +55,14 @@ fn usage() -> ! {
                  [--trace-sample N]   # record 1-in-N per-GEMM kernel spans\n\
                                       # (default 1 = all; counters stay exact)\n\
                  [--metrics-out PATH] # write the final metrics report JSON\n\
-                                      # (schema flexibit.metrics.v2) on shutdown\n\
+                                      # (schema flexibit.metrics.v3) on shutdown\n\
                  [--max-retries N]    # re-attempts per failed request (default 0)\n\
                  [--deadline-ms MS]   # default per-request deadline\n\
                  [--queue-bound N]    # shed new prefills past N queued (0 = off)\n\
            loadgen [--seed N] [--sessions N] [--pairs WxA,...] [--batch N]\n\
+                 [--policies P1,P2,...]  # per-layer policy JSON files (from\n\
+                                      # `flexibit policy`), round-robined\n\
+                                      # together with any --pairs uniforms\n\
                  [--arrival closed|poisson|onoff]\n\
                  [--concurrency N] [--think-ms MS]   # closed-loop knobs\n\
                  [--rps R] [--on-s S] [--off-s S]    # open-loop knobs\n\
@@ -67,6 +76,11 @@ fn usage() -> ! {
                  [--faults SPEC]      # seeded chaos, e.g. error:0.25,delay:0.1:0.002\n\
                                       # (kinds panic:R error:R delay:R[:S] seed:N;\n\
                                       # seed defaults to --seed)\n\
+           policy [--model NAME|tiny] [--name NAME] [--out PATH]\n\
+                 [--seed N]           # weight-synthesis seed (default matches serve)\n\
+                 [--act FMT]          # activation format, e.g. e3m2, e4m3, int8\n\
+                 [--widths W,W,...]   # candidate weight widths, strictly descending\n\
+                 [--calib-seed N] [--max-rel-mse X] [--max-rel-err X]\n\
            report\n\
          \n\
          models: Bert-base Llama-2-7b Llama-2-70b GPT-3\n\
@@ -104,6 +118,7 @@ fn main() {
         Some("verify") => cmd_verify(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("loadgen") => cmd_loadgen(&args[1..]),
+        Some("policy") => cmd_policy(&args[1..]),
         Some("report") => cmd_report(),
         _ => usage(),
     }
@@ -275,16 +290,38 @@ fn cmd_loadgen(args: &[String]) {
     let sessions: u64 =
         arg_value(args, "--sessions").and_then(|s| s.parse().ok()).unwrap_or(32);
     let max_batch: usize = arg_value(args, "--batch").and_then(|s| s.parse().ok()).unwrap_or(8);
-    let pairs_arg = arg_value(args, "--pairs").unwrap_or_else(|| "6x6,8x8".into());
-    let pairs: Vec<PrecisionPair> = pairs_arg
-        .split(',')
-        .map(|s| {
-            PrecisionPair::parse(s).unwrap_or_else(|| {
-                eprintln!("bad precision pair '{s}'");
+    // Precision mix: uniform --pairs and per-layer --policies files merge
+    // into one round-robin list; with neither given, the classic 6x6,8x8
+    // default applies.
+    let pairs_arg = arg_value(args, "--pairs");
+    let policies_arg = arg_value(args, "--policies");
+    let mut policies: Vec<Arc<PrecisionPolicy>> = Vec::new();
+    let uniform_pairs =
+        pairs_arg.clone().unwrap_or_else(|| if policies_arg.is_none() { "6x6,8x8" } else { "" }.into());
+    for s in uniform_pairs.split(',').filter(|s| !s.is_empty()) {
+        let pair = PrecisionPair::parse(s).unwrap_or_else(|| {
+            eprintln!("bad precision pair '{s}'");
+            usage()
+        });
+        policies.push(pair.into_policy());
+    }
+    if let Some(paths) = &policies_arg {
+        for path in paths.split(',').filter(|s| !s.is_empty()) {
+            let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+                eprintln!("--policies: cannot read {path}: {e}");
                 usage()
-            })
-        })
-        .collect();
+            });
+            let policy = PrecisionPolicy::parse_json(&text).unwrap_or_else(|e| {
+                eprintln!("--policies: {path}: {e}");
+                usage()
+            });
+            policies.push(Arc::new(policy));
+        }
+    }
+    if policies.is_empty() {
+        eprintln!("no precision policies: give --pairs and/or --policies");
+        usage()
+    }
     let fparse = |key: &str, default: f64| -> f64 {
         arg_value(args, key).and_then(|s| s.parse().ok()).unwrap_or(default)
     };
@@ -382,7 +419,7 @@ fn cmd_loadgen(args: &[String]) {
         executor,
     );
 
-    let scenario = Scenario { seed, sessions, arrival, prefill_len, decode_steps, pairs };
+    let scenario = Scenario { seed, sessions, arrival, prefill_len, decode_steps, policies };
     let timeout = Duration::from_secs_f64(fparse("--timeout-s", 120.0));
     let mut report = loadgen::run(&server, &spec, &scenario, timeout);
     report.faults = faults.as_ref().map(FaultPlan::label);
@@ -417,6 +454,85 @@ fn cmd_loadgen(args: &[String]) {
     }
     if report.timed_out || violations > 0 {
         std::process::exit(1);
+    }
+}
+
+/// `flexibit policy` — offline greedy mixed-precision search. Synthesizes
+/// the model's weights from the same seed the serving commands use (so the
+/// searched policy describes the weights the server will actually pack),
+/// runs [`search_policy`] under the configured error budget, and emits
+/// loadable `flexibit.policy.v1` JSON. Deterministic: same flags, same
+/// digest.
+fn cmd_policy(args: &[String]) {
+    let model_name = arg_value(args, "--model").unwrap_or_else(|| "tiny".into());
+    let spec = if model_name.eq_ignore_ascii_case("tiny") {
+        ModelSpec::tiny()
+    } else {
+        all_models()
+            .into_iter()
+            .find(|m| m.name.eq_ignore_ascii_case(&model_name))
+            .unwrap_or_else(|| {
+                eprintln!("unknown model {model_name}");
+                usage()
+            })
+    };
+    let weight_seed: u64 =
+        arg_value(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(0xF1E81B);
+    let act_arg = arg_value(args, "--act").unwrap_or_else(|| "e3m2".into());
+    let act = Format::parse(&act_arg).unwrap_or_else(|| {
+        eprintln!("bad activation format '{act_arg}'");
+        usage()
+    });
+    let mut cfg = SearchConfig::default();
+    if let Some(w) = arg_value(args, "--widths") {
+        cfg.widths = w
+            .split(',')
+            .map(|s| {
+                s.parse().unwrap_or_else(|_| {
+                    eprintln!("bad width '{s}' in --widths");
+                    usage()
+                })
+            })
+            .collect();
+    }
+    if let Some(n) = arg_value(args, "--calib-seed").and_then(|s| s.parse().ok()) {
+        cfg.seed = n;
+    }
+    if let Some(x) = arg_value(args, "--max-rel-mse").and_then(|s| s.parse().ok()) {
+        cfg.max_rel_mse = x;
+    }
+    if let Some(x) = arg_value(args, "--max-rel-err").and_then(|s| s.parse().ok()) {
+        cfg.max_rel_err = x;
+    }
+    let name = arg_value(args, "--name")
+        .unwrap_or_else(|| format!("searched-{}", spec.name.to_lowercase()));
+
+    let model = NativeModel::synthesize(spec.clone(), weight_seed);
+    let policy = search_policy(&model, &name, act, &cfg);
+    eprintln!(
+        "policy '{}' for {} ({} layers, act {act}): digest {:016x}",
+        policy.label(),
+        spec.name,
+        spec.layers,
+        policy.digest()
+    );
+    for li in 0..spec.layers {
+        let lp = policy.layer(li);
+        eprintln!(
+            "  layer {li:>2}: qkv {}  out {}  gate_up {}  down {}",
+            lp.qkv.w, lp.out.w, lp.gate_up.w, lp.down.w
+        );
+    }
+    let json = policy.to_json();
+    match arg_value(args, "--out") {
+        Some(path) => match std::fs::write(&path, &json) {
+            Ok(()) => eprintln!("policy -> {path}"),
+            Err(e) => {
+                eprintln!("policy: failed to write {path}: {e}");
+                std::process::exit(1);
+            }
+        },
+        None => println!("{json}"),
     }
 }
 

@@ -12,7 +12,7 @@
 use super::AcceleratorConfig;
 use crate::baselines::Accel;
 use crate::energy::EnergyCounts;
-use crate::workload::{Gemm, ModelSpec, PrecisionPair};
+use crate::workload::{Gemm, ModelSpec, PrecisionPair, PrecisionPolicy};
 
 /// PE-array dataflow style.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -193,10 +193,43 @@ pub fn simulate_model_with_past(
     pair: PrecisionPair,
     past_len: usize,
 ) -> ModelReport {
+    simulate_gemms(accel, cfg, model, pair.label(), model.gemms(pair, past_len))
+}
+
+/// [`simulate_model_with_past`] under a per-layer [`PrecisionPolicy`]: each
+/// layer group's GEMMs run at the formats the policy assigns it (see
+/// [`ModelSpec::gemms_policy`]), so the report is the co-simulated cost of
+/// *that* mixed-precision configuration — the number the policy search and
+/// the per-policy serving report trade against accuracy proxies.
+pub fn simulate_model_policy(
+    accel: &dyn Accel,
+    cfg: &AcceleratorConfig,
+    model: &ModelSpec,
+    policy: &PrecisionPolicy,
+    past_len: usize,
+) -> ModelReport {
+    simulate_gemms(
+        accel,
+        cfg,
+        model,
+        policy.label().to_string(),
+        model.gemms_policy(policy, past_len),
+    )
+}
+
+/// Shared accumulation over an extracted GEMM list (each instance `count`
+/// times, best dataflow per GEMM).
+fn simulate_gemms(
+    accel: &dyn Accel,
+    cfg: &AcceleratorConfig,
+    model: &ModelSpec,
+    pair_label: String,
+    gemms: Vec<Gemm>,
+) -> ModelReport {
     let mut seconds = 0.0;
     let mut counts = EnergyCounts::default();
     let mut per_gemm = Vec::new();
-    for g in model.gemms(pair, past_len) {
+    for g in gemms {
         let r = simulate_gemm(accel, cfg, &g);
         let c = g.count as f64;
         seconds += r.seconds * c;
@@ -215,7 +248,7 @@ pub fn simulate_model_with_past(
         model: model.name,
         accel: accel.name(),
         config: cfg.name,
-        pair_label: pair.label(),
+        pair_label,
         seconds,
         energy_j,
         counts,
@@ -313,6 +346,56 @@ mod tests {
         assert!(without > with_bp, "noBP {without} <= BP {with_bp}");
         let gain = without / with_bp;
         assert!((1.05..=1.6).contains(&gain), "BP gain {gain}");
+    }
+
+    #[test]
+    fn uniform_policy_sim_matches_pair_sim() {
+        let pair = PrecisionPair::of_bits(6, 6);
+        let cfg = cloud_b();
+        let fb = FlexiBitAccel::new();
+        let m = bert_base();
+        let by_pair = simulate_model_with_past(&fb, &cfg, &m, pair, 0);
+        let by_policy = simulate_model_policy(
+            &fb,
+            &cfg,
+            &m,
+            &PrecisionPolicy::uniform("u", pair),
+            0,
+        );
+        assert_eq!(by_pair.seconds, by_policy.seconds);
+        assert_eq!(by_pair.energy_j, by_policy.energy_j);
+    }
+
+    #[test]
+    fn narrowing_any_one_layer_strictly_reduces_cost() {
+        use crate::workload::{LayerPolicy, Projection};
+        let cfg = mobile_b(); // memory-bound: weight bits dominate
+        let fb = FlexiBitAccel::new();
+        let m = llama2_7b();
+        let act = crate::arith::Format::default_fp(8);
+        let wide = PrecisionPair::new(crate::arith::Format::default_fp(8), act);
+        let base_policy = PrecisionPolicy::uniform("base", wide);
+        let base = simulate_model_policy(&fb, &cfg, &m, &base_policy, 0).seconds;
+        // Narrow one projection of one layer at a time: every such policy
+        // must cost strictly less than the uniform-wide baseline.
+        for li in [0usize, m.layers / 2, m.layers - 1] {
+            for proj in Projection::ALL {
+                let mut layers = vec![LayerPolicy::uniform(wide); m.layers];
+                let narrow = PrecisionPair::new(crate::arith::Format::default_fp(4), act);
+                match proj {
+                    Projection::Qkv => layers[li].qkv = narrow,
+                    Projection::Out => layers[li].out = narrow,
+                    Projection::GateUp => layers[li].gate_up = narrow,
+                    Projection::Down => layers[li].down = narrow,
+                }
+                let p = PrecisionPolicy::new("narrowed", layers);
+                let s = simulate_model_policy(&fb, &cfg, &m, &p, 0).seconds;
+                assert!(
+                    s < base,
+                    "narrowing layer {li} {proj:?} must cut cost: {s} vs {base}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -16,7 +16,8 @@ pub mod analytical;
 pub mod cycle;
 
 pub use analytical::{
-    simulate_gemm, simulate_model, simulate_model_with_past, Dataflow, GemmReport, ModelReport,
+    simulate_gemm, simulate_model, simulate_model_policy, simulate_model_with_past, Dataflow,
+    GemmReport, ModelReport,
 };
 
 /// Accelerator-scale configuration (paper Table 2).

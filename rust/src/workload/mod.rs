@@ -9,6 +9,8 @@
 
 mod models;
 mod gemm;
+mod policy;
 
 pub use gemm::{Gemm, GemmKind};
 pub use models::{ModelSpec, PrecisionPair, all_models, bert_base, llama2_7b, llama2_70b, gpt3};
+pub use policy::{IntoPolicy, LayerPolicy, PrecisionPolicy, Projection};

@@ -1,6 +1,7 @@
 //! Model specifications (paper Table 3) and GEMM extraction.
 
 use super::gemm::{Gemm, GemmKind};
+use super::policy::{LayerPolicy, PrecisionPolicy};
 use crate::arith::Format;
 
 /// The (weight, activation) precision pair of an experiment — the paper's
@@ -77,21 +78,51 @@ impl ModelSpec {
     /// Weight×activation GEMMs take `pair.w`/`pair.a`;
     /// activation×activation attention GEMMs run both operands at `pair.a`.
     pub fn gemms(&self, pair: PrecisionPair, past_len: usize) -> Vec<Gemm> {
+        let mut v = Vec::new();
+        self.block_gemms(LayerPolicy::uniform(pair), self.layers, past_len, &mut v);
+        v
+    }
+
+    /// Enumerate the GEMMs of one forward pass under a per-layer
+    /// [`PrecisionPolicy`]. Consecutive layers with an identical assignment
+    /// fold into one `count`-scaled group, so a uniform policy reproduces
+    /// [`ModelSpec::gemms`] exactly (6 entries); a fully mixed N-layer
+    /// policy expands to 6·N.
+    pub fn gemms_policy(&self, policy: &PrecisionPolicy, past_len: usize) -> Vec<Gemm> {
+        let mut v = Vec::new();
+        let mut l = 0;
+        while l < self.layers {
+            let lp = policy.layer(l);
+            let mut run = 1;
+            while l + run < self.layers && policy.layer(l + run) == lp {
+                run += 1;
+            }
+            self.block_gemms(lp, run, past_len, &mut v);
+            l += run;
+        }
+        v
+    }
+
+    /// The 6 GEMM kinds of `layers` consecutive transformer layers sharing
+    /// one [`LayerPolicy`], appended to `v` in workload order.
+    fn block_gemms(&self, lp: LayerPolicy, layers: usize, past_len: usize, v: &mut Vec<Gemm>) {
         let s = self.seq;
         let d = self.d_model;
         let hd = self.head_dim();
+        // All projections of a layer share one activation format (enforced
+        // by the policy constructor); attention runs both operands at it.
+        let a = lp.qkv.a;
         // Attendable positions: the cached past plus this pass's own rows.
         let ctx = past_len + s;
-        let mut v = Vec::new();
         // Q projection (full heads) + K/V projections (kv_heads).
         v.push(Gemm {
             kind: GemmKind::QkvProj,
             m: s,
             k: d,
             n: d + 2 * self.kv_heads * hd,
-            count: self.layers,
-            a_fmt: pair.a,
-            w_fmt: pair.w,
+            count: layers,
+            a_fmt: a,
+            w_fmt: lp.qkv.w,
         });
         // Attention score QK^T: per head, [s, hd] x [hd, past + s].
         v.push(Gemm {
@@ -99,9 +130,9 @@ impl ModelSpec {
             m: s,
             k: hd,
             n: ctx,
-            count: self.layers * self.heads,
-            a_fmt: pair.a,
-            w_fmt: pair.a,
+            count: layers * self.heads,
+            a_fmt: a,
+            w_fmt: a,
         });
         // Attention context P×V: per head, [s, past + s] x [past + s, hd].
         v.push(Gemm {
@@ -109,9 +140,9 @@ impl ModelSpec {
             m: s,
             k: ctx,
             n: hd,
-            count: self.layers * self.heads,
-            a_fmt: pair.a,
-            w_fmt: pair.a,
+            count: layers * self.heads,
+            a_fmt: a,
+            w_fmt: a,
         });
         // Output projection.
         v.push(Gemm {
@@ -119,9 +150,9 @@ impl ModelSpec {
             m: s,
             k: d,
             n: d,
-            count: self.layers,
-            a_fmt: pair.a,
-            w_fmt: pair.w,
+            count: layers,
+            a_fmt: a,
+            w_fmt: lp.out.w,
         });
         // FFN.
         let up_count = if self.gated_ffn { 2 } else { 1 };
@@ -130,20 +161,19 @@ impl ModelSpec {
             m: s,
             k: d,
             n: self.d_ff,
-            count: self.layers * up_count,
-            a_fmt: pair.a,
-            w_fmt: pair.w,
+            count: layers * up_count,
+            a_fmt: a,
+            w_fmt: lp.gate_up.w,
         });
         v.push(Gemm {
             kind: GemmKind::FfnDown,
             m: s,
             k: self.d_ff,
             n: d,
-            count: self.layers,
-            a_fmt: pair.a,
-            w_fmt: pair.w,
+            count: layers,
+            a_fmt: a,
+            w_fmt: lp.down.w,
         });
-        v
     }
 
     /// GEMMs of the attention block only (Fig 9's validation workload).
@@ -383,5 +413,55 @@ mod tests {
         let hist = prefill.gemms(pair, 0);
         let score = hist.iter().find(|g| g.kind == GemmKind::AttnScore).unwrap();
         assert_eq!((score.m, score.k, score.n), (prefill.seq, hd, prefill.seq));
+    }
+
+    #[test]
+    fn uniform_policy_gemms_match_pair_gemms() {
+        let pair = PrecisionPair::of_bits(6, 16);
+        let policy: PrecisionPolicy = pair.into();
+        for m in [bert_base(), llama2_7b(), llama2_70b()] {
+            for past in [0usize, 100] {
+                assert_eq!(m.gemms_policy(&policy, past), m.gemms(pair, past));
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_policy_gemms_split_by_layer_group() {
+        // 12 Bert layers: first 2 at [8,8], remaining 10 clamp to [6,8].
+        let act = Format::default_fp(8);
+        let wide = LayerPolicy::uniform(PrecisionPair::new(Format::default_fp(8), act));
+        let narrow = LayerPolicy::uniform(PrecisionPair::new(Format::default_fp(6), act));
+        let p = PrecisionPolicy::new("split", vec![wide, wide, narrow]);
+        let m = bert_base();
+        let g = m.gemms_policy(&p, 0);
+        // Two groups of 6 kinds each.
+        assert_eq!(g.len(), 12);
+        let qkv: Vec<&Gemm> = g.iter().filter(|g| g.kind == GemmKind::QkvProj).collect();
+        assert_eq!(qkv.len(), 2);
+        assert_eq!((qkv[0].count, qkv[0].w_fmt.bits()), (2, 8));
+        assert_eq!((qkv[1].count, qkv[1].w_fmt.bits()), (10, 6));
+        // Layer-group split conserves total work: same MACs as uniform.
+        let uniform = m.gemms(PrecisionPair::of_bits(8, 8), 0);
+        let macs = |v: &[Gemm]| v.iter().map(|g| g.total_macs()).sum::<u64>();
+        assert_eq!(macs(&g), macs(&uniform));
+        // Per-projection formats land on the right kinds.
+        let act8 = Format::default_fp(8);
+        let l0 = LayerPolicy {
+            qkv: PrecisionPair::new(Format::default_fp(8), act8),
+            out: PrecisionPair::new(Format::default_fp(6), act8),
+            gate_up: PrecisionPair::new(Format::fp(2, 3), act8),
+            down: PrecisionPair::new(Format::int(8), act8),
+        };
+        let p2 = PrecisionPolicy::new("proj", vec![l0]);
+        let g2 = m.gemms_policy(&p2, 0);
+        assert_eq!(g2.len(), 6);
+        let fmt_of = |kind: GemmKind| g2.iter().find(|g| g.kind == kind).unwrap().w_fmt;
+        assert_eq!(fmt_of(GemmKind::QkvProj), Format::default_fp(8));
+        assert_eq!(fmt_of(GemmKind::OutProj), Format::default_fp(6));
+        assert_eq!(fmt_of(GemmKind::FfnUp), Format::fp(2, 3));
+        assert_eq!(fmt_of(GemmKind::FfnDown), Format::int(8));
+        // Attention stays at the activation format.
+        assert_eq!(fmt_of(GemmKind::AttnScore), act8);
     }
 }

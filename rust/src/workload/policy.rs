@@ -1,0 +1,685 @@
+//! Per-layer mixed-precision policies.
+//!
+//! FlexiBit's motivation is *mixed* precision — layers differ in
+//! quantization sensitivity — but a (weight, activation) pair pins one
+//! format per model. [`PrecisionPolicy`] makes precision a per-layer,
+//! per-projection property: a named, digestable map from layer index ×
+//! projection ([`Projection`]: qkv / out / gate-up / down) to
+//! [`PrecisionPair`]. Uniform policies (every layer at one pair) are the
+//! degenerate case, reachable mechanically from every old call site via
+//! `From<PrecisionPair>`; their `label()` is the pair's own `[w,a]` label
+//! so drift keys, spans, and reports read identically for unchanged
+//! workloads.
+//!
+//! One deliberate constraint: the **activation format is uniform across
+//! the whole policy**. A session's KV cache is packed once at the
+//! activation format and every layer's attention reads it back, so a
+//! per-layer activation format would force repacking between layers —
+//! exactly the cost the zero-repack decode path exists to avoid. Weight
+//! formats are free per layer × projection.
+//!
+//! Two digests identify a policy:
+//! * [`PrecisionPolicy::digest`] — FNV-1a over activation + per-layer
+//!   weight formats (the name is excluded: renaming a policy does not
+//!   change what it computes). This keys batches in the coordinator.
+//! * [`PrecisionPolicy::weight_digest`] — weight formats only. This keys
+//!   the weight cache, preserving the property that `[6,6]` and `[6,16]`
+//!   share packed weights (activations never affect weight packing).
+//!
+//! Uniform policies collapse to a single stored entry, so their digests
+//! are independent of the model's layer count — `[6,6]` means the same
+//! thing served against a 1-layer test block and a 96-layer GPT-3.
+
+use super::models::PrecisionPair;
+use crate::arith::Format;
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+/// Which weight matrix of a transformer layer a precision assignment
+/// targets. Attention's activation × activation GEMMs (scores, context)
+/// always run at the policy's activation format and need no entry here.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Projection {
+    /// Fused Q/K/V input projection.
+    Qkv,
+    /// Attention output projection.
+    Out,
+    /// FFN up projection (and the gate projection when the FFN is gated —
+    /// they share a format, as both feed the same elementwise product).
+    GateUp,
+    /// FFN down projection.
+    Down,
+}
+
+impl Projection {
+    pub const ALL: [Projection; 4] =
+        [Projection::Qkv, Projection::Out, Projection::GateUp, Projection::Down];
+
+    /// Stable lowercase name (JSON key / CLI spelling).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Projection::Qkv => "qkv",
+            Projection::Out => "out",
+            Projection::GateUp => "gate_up",
+            Projection::Down => "down",
+        }
+    }
+}
+
+/// One layer's precision assignment: a [`PrecisionPair`] per projection.
+/// All four pairs share one activation format (enforced by
+/// [`PrecisionPolicy::new`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LayerPolicy {
+    pub qkv: PrecisionPair,
+    pub out: PrecisionPair,
+    pub gate_up: PrecisionPair,
+    pub down: PrecisionPair,
+}
+
+impl LayerPolicy {
+    /// Every projection at the same pair.
+    pub fn uniform(pair: PrecisionPair) -> Self {
+        LayerPolicy { qkv: pair, out: pair, gate_up: pair, down: pair }
+    }
+
+    pub fn pair(&self, proj: Projection) -> PrecisionPair {
+        match proj {
+            Projection::Qkv => self.qkv,
+            Projection::Out => self.out,
+            Projection::GateUp => self.gate_up,
+            Projection::Down => self.down,
+        }
+    }
+
+    /// The four weight formats in [`Projection::ALL`] order.
+    fn weight_formats(&self) -> [Format; 4] {
+        [self.qkv.w, self.out.w, self.gate_up.w, self.down.w]
+    }
+}
+
+/// A named per-layer mixed-precision policy. See the module docs for the
+/// digest semantics and the uniform-activation constraint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrecisionPolicy {
+    name: String,
+    /// Per-layer assignments; a single entry means "every layer" (the
+    /// uniform case — and [`PrecisionPolicy::layer`] clamps past the end,
+    /// so a short policy extends its last entry over deeper models).
+    entries: Vec<LayerPolicy>,
+    digest: u64,
+    weight_digest: u64,
+}
+
+/// FNV-1a (64-bit) over a byte stream — the repo-wide digest primitive.
+fn fnv1a(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Canonical 3-byte code of a format for digesting: (tag, p1, p2).
+fn format_code(f: Format) -> [u8; 3] {
+    match f {
+        Format::Fp(fp) => [1, fp.e, fp.m],
+        Format::Int(i) => [2, i.bits, 0],
+    }
+}
+
+impl PrecisionPolicy {
+    /// Build a policy from per-layer assignments. Panics on an empty list
+    /// or a non-uniform activation format (see module docs). Identical
+    /// consecutive layers are kept as written, but a fully uniform list
+    /// collapses to one entry so the digest is layer-count-independent.
+    pub fn new(name: impl Into<String>, layers: Vec<LayerPolicy>) -> Self {
+        assert!(!layers.is_empty(), "a policy needs at least one layer entry");
+        let act = layers[0].qkv.a;
+        for (i, lp) in layers.iter().enumerate() {
+            for proj in Projection::ALL {
+                assert_eq!(
+                    lp.pair(proj).a,
+                    act,
+                    "policy activation format must be uniform \
+                     (layer {i} {} runs a={}, policy a={act})",
+                    proj.name(),
+                    lp.pair(proj).a,
+                );
+            }
+        }
+        let entries = if layers.iter().all(|l| *l == layers[0]) {
+            vec![layers[0]]
+        } else {
+            layers
+        };
+        let weight_digest =
+            fnv1a(entries.iter().flat_map(|l| l.weight_formats()).flat_map(format_code));
+        let digest = fnv1a(
+            format_code(act)
+                .into_iter()
+                .chain(entries.iter().flat_map(|l| l.weight_formats()).flat_map(format_code)),
+        );
+        PrecisionPolicy { name: name.into(), entries, digest, weight_digest }
+    }
+
+    /// Every layer and projection at one pair.
+    pub fn uniform(name: impl Into<String>, pair: PrecisionPair) -> Self {
+        PrecisionPolicy::new(name, vec![LayerPolicy::uniform(pair)])
+    }
+
+    /// Rename (content digests are unaffected).
+    pub fn with_name(mut self, name: impl Into<String>) -> Self {
+        self.name = name.into();
+        self
+    }
+
+    /// The policy's name — the label drift keys, spans, and reports carry.
+    /// For pair-derived uniform policies this is the pair's `[w,a]` label.
+    pub fn label(&self) -> &str {
+        &self.name
+    }
+
+    /// Content digest: activation + per-layer weight formats (name
+    /// excluded). The coordinator's batch key.
+    pub fn digest(&self) -> u64 {
+        self.digest
+    }
+
+    /// Weight-formats-only digest — the weight-cache key. Policies that
+    /// differ only in activation format share packed weights.
+    pub fn weight_digest(&self) -> u64 {
+        self.weight_digest
+    }
+
+    /// The weight-cache digest a bare weight format maps to — consistent
+    /// with [`PrecisionPolicy::weight_digest`] of any uniform policy at
+    /// that weight format (the shim the format-keyed cache API uses).
+    pub fn weight_digest_of(w_fmt: Format) -> u64 {
+        fnv1a([w_fmt; 4].into_iter().flat_map(format_code))
+    }
+
+    /// The (single, uniform) activation format.
+    pub fn activation(&self) -> Format {
+        self.entries[0].qkv.a
+    }
+
+    /// Layer `l`'s assignment; indexes past the stored entries clamp to
+    /// the last one, so a single-entry uniform policy covers any depth.
+    pub fn layer(&self, l: usize) -> LayerPolicy {
+        self.entries[l.min(self.entries.len() - 1)]
+    }
+
+    /// The pair a specific (layer, projection) runs at.
+    pub fn pair_for(&self, layer: usize, proj: Projection) -> PrecisionPair {
+        self.layer(layer).pair(proj)
+    }
+
+    /// Layer 0's qkv pair — the representative pair (for uniform policies,
+    /// *the* pair). Tests and coarse dashboards key on it; kernels never
+    /// should.
+    pub fn head_pair(&self) -> PrecisionPair {
+        self.entries[0].qkv
+    }
+
+    /// `Some(pair)` iff every layer and projection runs at one pair.
+    pub fn uniform_pair(&self) -> Option<PrecisionPair> {
+        let p = self.entries[0].qkv;
+        (self.entries.len() == 1 && self.entries[0] == LayerPolicy::uniform(p)).then_some(p)
+    }
+
+    /// Stored per-layer entries (collapsed to one when uniform).
+    pub fn entries(&self) -> &[LayerPolicy] {
+        &self.entries
+    }
+
+    /// Serialize as `flexibit.policy.v1` JSON: one activation format, one
+    /// weight-format object per stored layer entry, and the digest as a
+    /// receipt ([`PrecisionPolicy::parse_json`] verifies it when present).
+    pub fn to_json(&self) -> String {
+        use crate::obs::json_str;
+        let mut out = String::from("{\"schema\":\"flexibit.policy.v1\",");
+        let _ = write!(
+            out,
+            "\"name\":{},\"activation\":{},\"digest\":\"{:016x}\",\"layers\":[",
+            json_str(&self.name),
+            json_str(&self.activation().to_string()),
+            self.digest,
+        );
+        for (i, lp) in self.entries.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "{{\"qkv\":{},\"out\":{},\"gate_up\":{},\"down\":{}}}",
+                json_str(&lp.qkv.w.to_string()),
+                json_str(&lp.out.w.to_string()),
+                json_str(&lp.gate_up.w.to_string()),
+                json_str(&lp.down.w.to_string()),
+            );
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Parse `flexibit.policy.v1` JSON (the exact shape [`to_json`]
+    /// emits; whitespace and key order are free). Verifies the embedded
+    /// digest when present.
+    ///
+    /// [`to_json`]: PrecisionPolicy::to_json
+    pub fn parse_json(s: &str) -> Result<Self, String> {
+        let v = json::parse(s)?;
+        let obj = v.as_obj().ok_or("policy JSON must be an object")?;
+        let get = |k: &str| json::get(obj, k);
+        if let Some(schema) = get("schema").and_then(|v| v.as_str()) {
+            if schema != "flexibit.policy.v1" {
+                return Err(format!("unsupported policy schema '{schema}'"));
+            }
+        }
+        let name = get("name")
+            .and_then(|v| v.as_str())
+            .ok_or("policy JSON needs a string \"name\"")?
+            .to_string();
+        let act_s = get("activation")
+            .and_then(|v| v.as_str())
+            .ok_or("policy JSON needs a string \"activation\"")?;
+        let act = Format::parse(act_s)
+            .ok_or_else(|| format!("bad activation format '{act_s}'"))?;
+        let layers_v = get("layers")
+            .and_then(|v| v.as_arr())
+            .ok_or("policy JSON needs a \"layers\" array")?;
+        if layers_v.is_empty() {
+            return Err("policy JSON \"layers\" must be non-empty".into());
+        }
+        let mut layers = Vec::with_capacity(layers_v.len());
+        for (i, lv) in layers_v.iter().enumerate() {
+            let lo = lv.as_obj().ok_or_else(|| format!("layer {i} must be an object"))?;
+            let proj_fmt = |key: &str| -> Result<Format, String> {
+                let t = json::get(lo, key)
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| format!("layer {i} needs a string \"{key}\""))?;
+                Format::parse(t).ok_or_else(|| format!("layer {i} {key}: bad format '{t}'"))
+            };
+            layers.push(LayerPolicy {
+                qkv: PrecisionPair::new(proj_fmt("qkv")?, act),
+                out: PrecisionPair::new(proj_fmt("out")?, act),
+                gate_up: PrecisionPair::new(proj_fmt("gate_up")?, act),
+                down: PrecisionPair::new(proj_fmt("down")?, act),
+            });
+        }
+        let policy = PrecisionPolicy::new(name, layers);
+        if let Some(d) = get("digest").and_then(|v| v.as_str()) {
+            let expect = format!("{:016x}", policy.digest());
+            if d != expect {
+                return Err(format!(
+                    "policy digest mismatch: file says {d}, content is {expect}"
+                ));
+            }
+        }
+        Ok(policy)
+    }
+}
+
+/// A `PrecisionPair` is a uniform policy named by the pair's own `[w,a]`
+/// label — the mechanical migration path for every pair-taking call site.
+impl From<PrecisionPair> for PrecisionPolicy {
+    fn from(pair: PrecisionPair) -> Self {
+        PrecisionPolicy::uniform(pair.label(), pair)
+    }
+}
+
+/// Anything a request can run at: a bare pair (uniform shim), an owned
+/// policy, or a shared one. Conversions funnel into `Arc` so fan-out call
+/// sites (one request per decode step) pay a refcount bump, not a clone.
+pub trait IntoPolicy {
+    fn into_policy(self) -> Arc<PrecisionPolicy>;
+}
+
+impl IntoPolicy for PrecisionPair {
+    fn into_policy(self) -> Arc<PrecisionPolicy> {
+        Arc::new(self.into())
+    }
+}
+
+impl IntoPolicy for PrecisionPolicy {
+    fn into_policy(self) -> Arc<PrecisionPolicy> {
+        Arc::new(self)
+    }
+}
+
+impl IntoPolicy for Arc<PrecisionPolicy> {
+    fn into_policy(self) -> Arc<PrecisionPolicy> {
+        self
+    }
+}
+
+impl IntoPolicy for &Arc<PrecisionPolicy> {
+    fn into_policy(self) -> Arc<PrecisionPolicy> {
+        Arc::clone(self)
+    }
+}
+
+impl IntoPolicy for &PrecisionPolicy {
+    fn into_policy(self) -> Arc<PrecisionPolicy> {
+        Arc::new(self.clone())
+    }
+}
+
+/// The minimal JSON reader behind [`PrecisionPolicy::parse_json`] — the
+/// offline build has no serde, and the obs layer only *writes* JSON.
+/// Strings (with escapes), objects, arrays, and scalar tokens
+/// (numbers / true / false / null, kept as raw text) — exactly what a
+/// policy file contains.
+mod json {
+    pub enum Value {
+        Str(String),
+        /// A non-string scalar, kept as its raw token text.
+        Scalar(String),
+        Arr(Vec<Value>),
+        Obj(Vec<(String, Value)>),
+    }
+
+    impl Value {
+        pub fn as_str(&self) -> Option<&str> {
+            match self {
+                Value::Str(s) => Some(s),
+                _ => None,
+            }
+        }
+        pub fn as_arr(&self) -> Option<&[Value]> {
+            match self {
+                Value::Arr(v) => Some(v),
+                _ => None,
+            }
+        }
+        pub fn as_obj(&self) -> Option<&[(String, Value)]> {
+            match self {
+                Value::Obj(v) => Some(v),
+                _ => None,
+            }
+        }
+    }
+
+    /// First value under `key` in an object (policy keys are unique).
+    pub fn get<'a>(obj: &'a [(String, Value)], key: &str) -> Option<&'a Value> {
+        obj.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    pub fn parse(s: &str) -> Result<Value, String> {
+        let b = s.as_bytes();
+        let mut i = 0usize;
+        let v = value(b, &mut i)?;
+        skip_ws(b, &mut i);
+        if i != b.len() {
+            return Err(format!("trailing JSON content at byte {i}"));
+        }
+        Ok(v)
+    }
+
+    fn skip_ws(b: &[u8], i: &mut usize) {
+        while *i < b.len() && matches!(b[*i], b' ' | b'\t' | b'\n' | b'\r') {
+            *i += 1;
+        }
+    }
+
+    fn expect(b: &[u8], i: &mut usize, c: u8) -> Result<(), String> {
+        skip_ws(b, i);
+        if b.get(*i) == Some(&c) {
+            *i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", c as char, i))
+        }
+    }
+
+    fn value(b: &[u8], i: &mut usize) -> Result<Value, String> {
+        skip_ws(b, i);
+        match b.get(*i) {
+            Some(b'"') => Ok(Value::Str(string(b, i)?)),
+            Some(b'{') => {
+                *i += 1;
+                let mut members = Vec::new();
+                skip_ws(b, i);
+                if b.get(*i) == Some(&b'}') {
+                    *i += 1;
+                    return Ok(Value::Obj(members));
+                }
+                loop {
+                    skip_ws(b, i);
+                    let k = string(b, i)?;
+                    expect(b, i, b':')?;
+                    members.push((k, value(b, i)?));
+                    skip_ws(b, i);
+                    match b.get(*i) {
+                        Some(b',') => *i += 1,
+                        Some(b'}') => {
+                            *i += 1;
+                            return Ok(Value::Obj(members));
+                        }
+                        _ => return Err(format!("expected ',' or '}}' at byte {i}")),
+                    }
+                }
+            }
+            Some(b'[') => {
+                *i += 1;
+                let mut items = Vec::new();
+                skip_ws(b, i);
+                if b.get(*i) == Some(&b']') {
+                    *i += 1;
+                    return Ok(Value::Arr(items));
+                }
+                loop {
+                    items.push(value(b, i)?);
+                    skip_ws(b, i);
+                    match b.get(*i) {
+                        Some(b',') => *i += 1,
+                        Some(b']') => {
+                            *i += 1;
+                            return Ok(Value::Arr(items));
+                        }
+                        _ => return Err(format!("expected ',' or ']' at byte {i}")),
+                    }
+                }
+            }
+            Some(_) => {
+                // Scalar token: number / true / false / null — raw text.
+                let start = *i;
+                while *i < b.len()
+                    && !matches!(b[*i], b',' | b'}' | b']' | b' ' | b'\t' | b'\n' | b'\r')
+                {
+                    *i += 1;
+                }
+                if *i == start {
+                    return Err(format!("empty JSON value at byte {start}"));
+                }
+                Ok(Value::Scalar(String::from_utf8_lossy(&b[start..*i]).into_owned()))
+            }
+            None => Err("unexpected end of JSON".into()),
+        }
+    }
+
+    fn string(b: &[u8], i: &mut usize) -> Result<String, String> {
+        if b.get(*i) != Some(&b'"') {
+            return Err(format!("expected '\"' at byte {i}"));
+        }
+        *i += 1;
+        let mut out = String::new();
+        while let Some(&c) = b.get(*i) {
+            *i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = *b.get(*i).ok_or("unterminated escape")?;
+                    *i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'u' => {
+                            let hex = b
+                                .get(*i..*i + 4)
+                                .ok_or("truncated \\u escape")
+                                .and_then(|h| {
+                                    std::str::from_utf8(h).map_err(|_| "bad \\u escape")
+                                })?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| format!("bad \\u escape '{hex}'"))?;
+                            *i += 4;
+                            out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        }
+                        other => {
+                            return Err(format!("unsupported escape '\\{}'", other as char))
+                        }
+                    }
+                }
+                _ => {
+                    // Re-join multi-byte UTF-8 sequences: back up and take
+                    // the full char from the source string.
+                    if c < 0x80 {
+                        out.push(c as char);
+                    } else {
+                        let s = std::str::from_utf8(&b[*i - 1..])
+                            .map_err(|_| "invalid UTF-8 in JSON string")?;
+                        let ch = s.chars().next().ok_or("invalid UTF-8 in JSON string")?;
+                        out.push(ch);
+                        *i += ch.len_utf8() - 1;
+                    }
+                }
+            }
+        }
+        Err("unterminated JSON string".into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair(w: u32, a: u32) -> PrecisionPair {
+        PrecisionPair::of_bits(w, a)
+    }
+
+    #[test]
+    fn uniform_policy_from_pair_keeps_the_pair_label() {
+        let p: PrecisionPolicy = pair(6, 6).into();
+        assert_eq!(p.label(), "[6,6]");
+        assert_eq!(p.uniform_pair(), Some(pair(6, 6)));
+        assert_eq!(p.head_pair(), pair(6, 6));
+        assert_eq!(p.activation(), Format::default_fp(6));
+        // Clamped layer lookup: any depth resolves to the single entry.
+        assert_eq!(p.layer(0), p.layer(95));
+        for proj in Projection::ALL {
+            assert_eq!(p.pair_for(7, proj), pair(6, 6));
+        }
+    }
+
+    #[test]
+    fn digests_are_content_only_and_layer_count_independent() {
+        let a: PrecisionPolicy = pair(6, 6).into();
+        let b = PrecisionPolicy::uniform("renamed", pair(6, 6));
+        assert_eq!(a.digest(), b.digest(), "name must not affect the digest");
+        assert_eq!(a.weight_digest(), b.weight_digest());
+        // An explicitly repeated uniform list collapses to one entry.
+        let c = PrecisionPolicy::new(
+            "deep",
+            vec![LayerPolicy::uniform(pair(6, 6)); 32],
+        );
+        assert_eq!(c.entries().len(), 1);
+        assert_eq!(a.digest(), c.digest());
+        // Different content, different digest.
+        let d: PrecisionPolicy = pair(8, 8).into();
+        assert_ne!(a.digest(), d.digest());
+        // Activation changes the batch digest but not the weight digest —
+        // [6,6] and [6,16] share packed weights.
+        let e: PrecisionPolicy = pair(6, 16).into();
+        assert_ne!(a.digest(), e.digest());
+        assert_eq!(a.weight_digest(), e.weight_digest());
+        assert_eq!(
+            a.weight_digest(),
+            PrecisionPolicy::weight_digest_of(Format::default_fp(6)),
+            "the format-keyed cache shim must agree with uniform policies"
+        );
+    }
+
+    #[test]
+    fn mixed_policy_resolves_per_layer_and_projection() {
+        let act = Format::default_fp(8); // e4m3
+        let l0 = LayerPolicy {
+            qkv: PrecisionPair::new(Format::default_fp(8), act),
+            out: PrecisionPair::new(Format::default_fp(8), act),
+            gate_up: PrecisionPair::new(Format::default_fp(6), act),
+            down: PrecisionPair::new(Format::int(8), act),
+        };
+        let l1 = LayerPolicy::uniform(PrecisionPair::new(Format::default_fp(6), act));
+        let p = PrecisionPolicy::new("mixed", vec![l0, l1]);
+        assert_eq!(p.entries().len(), 2);
+        assert!(p.uniform_pair().is_none());
+        assert_eq!(p.pair_for(0, Projection::Down).w, Format::int(8));
+        assert_eq!(p.pair_for(1, Projection::Qkv).w, Format::default_fp(6));
+        // Past the end clamps to the last entry.
+        assert_eq!(p.layer(9), l1);
+        assert_eq!(p.activation(), act);
+    }
+
+    #[test]
+    #[should_panic(expected = "activation format must be uniform")]
+    fn mixed_activation_formats_are_rejected() {
+        let l = LayerPolicy {
+            qkv: pair(6, 6),
+            out: pair(6, 16), // different activation
+            gate_up: pair(6, 6),
+            down: pair(6, 6),
+        };
+        let _ = PrecisionPolicy::new("bad", vec![l]);
+    }
+
+    #[test]
+    fn json_round_trip_preserves_content_and_digest() {
+        let act = Format::default_fp(8);
+        let p = PrecisionPolicy::new(
+            "searched-tiny",
+            vec![
+                LayerPolicy {
+                    qkv: PrecisionPair::new(Format::default_fp(8), act),
+                    out: PrecisionPair::new(Format::default_fp(6), act),
+                    gate_up: PrecisionPair::new(Format::fp(2, 3), act),
+                    down: PrecisionPair::new(Format::int(8), act),
+                },
+                LayerPolicy::uniform(PrecisionPair::new(Format::default_fp(6), act)),
+            ],
+        );
+        let j = p.to_json();
+        assert!(j.contains("\"schema\":\"flexibit.policy.v1\""));
+        assert!(j.contains("\"activation\":\"e4m3\""));
+        assert!(j.contains("\"down\":\"int8\""));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        let q = PrecisionPolicy::parse_json(&j).unwrap();
+        assert_eq!(p, q);
+        assert_eq!(p.digest(), q.digest());
+        // Whitespace-insensitive.
+        let pretty = j.replace(',', ",\n  ").replace(':', ": ");
+        assert_eq!(PrecisionPolicy::parse_json(&pretty).unwrap().digest(), p.digest());
+        // A tampered digest is caught.
+        let bad = j.replace(&format!("{:016x}", p.digest()), "deadbeefdeadbeef");
+        assert!(PrecisionPolicy::parse_json(&bad).unwrap_err().contains("digest mismatch"));
+        // Garbage is an error, not a panic.
+        assert!(PrecisionPolicy::parse_json("{\"name\":").is_err());
+        assert!(PrecisionPolicy::parse_json("[]").is_err());
+        assert!(PrecisionPolicy::parse_json("{\"name\":\"x\",\"activation\":\"e9m9\",\"layers\":[]}").is_err());
+    }
+
+    #[test]
+    fn into_policy_conversions_share_or_wrap() {
+        let arc = pair(6, 6).into_policy();
+        assert_eq!(arc.label(), "[6,6]");
+        let again = (&arc).into_policy();
+        assert!(Arc::ptr_eq(&arc, &again), "borrowed Arc conversion is a refcount bump");
+        let owned = PrecisionPolicy::uniform("x", pair(8, 8)).into_policy();
+        assert_eq!(owned.label(), "x");
+    }
+}

@@ -14,7 +14,7 @@ use flexibit::coordinator::{BatchPolicy, Executor, Resilience, Server, ServerCon
 use flexibit::kernels::NativeExecutor;
 use flexibit::loadgen::{run, Arrival, Dist, FaultPlan, FaultyExecutor, LoadReport, Scenario};
 use flexibit::obs::Recorder;
-use flexibit::workload::{ModelSpec, PrecisionPair};
+use flexibit::workload::{IntoPolicy, ModelSpec, PrecisionPair};
 use std::time::Duration;
 
 /// The CI scenario shape: mixed prefill/decode over two precision pairs.
@@ -25,7 +25,10 @@ fn scenario(seed: u64) -> Scenario {
         arrival: Arrival::Closed { concurrency: 3, think_s: 0.0 },
         prefill_len: Dist::Uniform(2, 6),
         decode_steps: Dist::Fixed(3),
-        pairs: vec![PrecisionPair::of_bits(6, 6), PrecisionPair::of_bits(8, 8)],
+        policies: vec![
+            PrecisionPair::of_bits(6, 6).into_policy(),
+            PrecisionPair::of_bits(8, 8).into_policy(),
+        ],
     }
 }
 

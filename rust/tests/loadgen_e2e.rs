@@ -9,7 +9,7 @@ use flexibit::kernels::NativeExecutor;
 use flexibit::loadgen::{run, Arrival, Dist, LoadReport, Scenario};
 use flexibit::obs::{DriftBound, Recorder};
 use flexibit::sim::AcceleratorConfig;
-use flexibit::workload::{ModelSpec, PrecisionPair};
+use flexibit::workload::{IntoPolicy, ModelSpec, PrecisionPair};
 use std::time::Duration;
 
 fn pairs() -> Vec<PrecisionPair> {
@@ -24,7 +24,7 @@ fn scenario(seed: u64) -> Scenario {
         arrival: Arrival::Closed { concurrency: 3, think_s: 0.0 },
         prefill_len: Dist::Uniform(2, 6),
         decode_steps: Dist::Fixed(3),
-        pairs: pairs(),
+        policies: pairs().into_iter().map(|p| p.into_policy()).collect(),
     }
 }
 
@@ -82,7 +82,8 @@ fn seeded_load_is_bit_reproducible_on_the_native_engine() {
 
     // The machine-readable report carries the phase split and the digest.
     let j = a.json();
-    assert!(j.contains("\"schema\":\"flexibit.loadgen.v2\""));
+    assert!(j.contains("\"schema\":\"flexibit.loadgen.v3\""));
+    assert!(j.contains("\"policy_costs\":[{\"name\":\"[6,6]\","));
     assert!(j.contains("\"faults\":null"));
     assert_eq!(a.counts.output_digest, b.counts.output_digest, "outputs bit-identical");
     assert!(j.contains(&format!("\"digest\":\"{}\"", a.digest)));

@@ -9,14 +9,14 @@
 //! `NativeExecutor` with zero artifacts on disk.
 
 use flexibit::arith::{decode, dot_exact, gemm_ref, Format, FpFormat, PackedTensor};
-use flexibit::coordinator::{BatchPolicy, Request, Server, ServerConfig, StreamDriver};
+use flexibit::coordinator::{BatchPolicy, Request, Resilience, Server, ServerConfig, StreamDriver};
 use flexibit::kernels::{
     extract_codes, gemm, gemm_default, gemm_tiled, gemm_with_panels, int_fast_path_exact,
     int_fast_path_exact_with, Decoder, GemmConfig, KvCache, NativeExecutor, NativeModel,
     PackedMatrix, WeightCache, WeightPanels,
 };
 use flexibit::util::{property, Rng};
-use flexibit::workload::{ModelSpec, PrecisionPair};
+use flexibit::workload::{IntoPolicy, ModelSpec, PrecisionPair};
 use std::time::{Duration, Instant};
 
 /// The evaluation formats: FP4/FP5/FP6 (both variants)/FP8 (E4M3 + E5M2),
@@ -294,6 +294,7 @@ fn server_serves_mixed_precision_natively() {
         sim_model: spec.clone(),
         recorder: flexibit::obs::Recorder::disabled(),
         drift: None,
+        resilience: Resilience::default(),
     };
     let server = Server::start(cfg, Box::new(executor));
     let pairs = [
@@ -329,7 +330,7 @@ fn executor_rejects_unknown_model() {
     let mut ex = NativeExecutor::new().with_model(ModelSpec::tiny(), 1);
     let batch = Batch {
         model: "unregistered".to_string(),
-        pair: PrecisionPair::of_bits(6, 6),
+        policy: PrecisionPair::of_bits(6, 6).into_policy(),
         requests: vec![],
     };
     assert!(ex.execute(&batch).is_err());
@@ -722,6 +723,7 @@ fn served_token_streams_match_offline_decode() {
         sim_model: spec.clone(),
         recorder: flexibit::obs::Recorder::disabled(),
         drift: None,
+        resilience: Resilience::default(),
     };
     let server = Server::start(cfg, Box::new(executor));
     let session_specs = (0..n_sessions)

@@ -1,0 +1,389 @@
+//! End-to-end tests of the per-layer mixed-precision policy engine:
+//!
+//! * a genuinely mixed policy (E4M3 attention / FP6 FFN / INT8 down on
+//!   layer 0, a different assignment on layer 1) run through
+//!   `forward_prefill` + `forward_decode` is **bit-exact** against an
+//!   oracle composed from `gemm_ref` per-layer at each projection's own
+//!   formats — for both an MHA/GELU and a GQA/SwiGLU model;
+//! * the offline policy search is deterministic (stable digest, identical
+//!   JSON) and its output round-trips through `parse_json`;
+//! * one checkpoint serves two *named* policies in a single loadgen run:
+//!   zero KV repacks, nonzero zero-copy adoptions, a balanced drift
+//!   ledger, and one co-simulated cost entry per distinct policy digest.
+//!
+//! The oracle cannot borrow the model's weight matrices (they are
+//! crate-private), so it replays `NativeModel::synthesize`'s seeded draw
+//! order — same `Rng`, same init order, same 1/sqrt(fan_in) scaling —
+//! which is itself asserted by the bitwise comparison: a drift in either
+//! copy breaks every assert below.
+
+use flexibit::arith::{encode, gemm_ref, Format};
+use flexibit::coordinator::{BatchPolicy, Resilience, Server, ServerConfig};
+use flexibit::kernels::{
+    search_policy, KvCache, NativeExecutor, NativeModel, SearchConfig, WeightCache,
+};
+use flexibit::loadgen::{run, Arrival, Dist, Scenario};
+use flexibit::obs::{Counter, Recorder};
+use flexibit::util::Rng;
+use flexibit::workload::{IntoPolicy, LayerPolicy, ModelSpec, PrecisionPair, PrecisionPolicy};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn fmt(s: &str) -> Format {
+    Format::parse(s).unwrap_or_else(|| panic!("test format {s} parses"))
+}
+
+fn pair(w: &str, a: &str) -> PrecisionPair {
+    PrecisionPair::new(fmt(w), fmt(a))
+}
+
+/// The ISSUE's example policy: E4M3 attention, FP6 gate/up, INT8 down on
+/// layer 0 — and a deliberately different layer 1 so per-layer routing
+/// (not just per-projection) is exercised. Activation is uniform E4M3.
+fn mixed_policy() -> PrecisionPolicy {
+    let l0 = LayerPolicy {
+        qkv: pair("e4m3", "e4m3"),
+        out: pair("e4m3", "e4m3"),
+        gate_up: pair("e3m2", "e4m3"),
+        down: pair("int8", "e4m3"),
+    };
+    let l1 = LayerPolicy {
+        qkv: pair("e3m2", "e4m3"),
+        out: pair("e2m2", "e4m3"),
+        gate_up: pair("e4m3", "e4m3"),
+        down: pair("e3m2", "e4m3"),
+    };
+    PrecisionPolicy::new("mixed-e2e", vec![l0, l1])
+}
+
+/// Oracle copy of one layer's f32 master weights.
+struct RefLayer {
+    wqkv: Vec<f32>,
+    wo: Vec<f32>,
+    w_up: Vec<f32>,
+    w_gate: Option<Vec<f32>>,
+    w_down: Vec<f32>,
+}
+
+/// Replays `NativeModel::synthesize(spec, seed)`'s exact draw order.
+fn synth_ref(spec: &ModelSpec, seed: u64) -> Vec<RefLayer> {
+    let mut rng = Rng::new(seed);
+    let d = spec.d_model;
+    let kv_dim = spec.kv_heads * spec.head_dim();
+    let mut init = |rows: usize, cols: usize| -> Vec<f32> {
+        let scale = 1.0 / (rows as f64).sqrt();
+        (0..rows * cols).map(|_| (rng.gauss() * scale) as f32).collect()
+    };
+    (0..spec.layers)
+        .map(|_| RefLayer {
+            wqkv: init(d, d + 2 * kv_dim),
+            wo: init(d, d),
+            w_up: init(d, spec.d_ff),
+            w_gate: if spec.gated_ffn { Some(init(d, spec.d_ff)) } else { None },
+            w_down: init(spec.d_ff, d),
+        })
+        .collect()
+}
+
+/// Quantize-then-`gemm_ref`: the reference for what one packed GEMM at
+/// (`a_fmt` x `w_fmt`) must produce, bit for bit.
+fn ref_gemm(
+    a: &[f32],
+    a_fmt: Format,
+    w: &[f32],
+    w_fmt: Format,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    let ac: Vec<u32> = a.iter().map(|&v| encode(v as f64, a_fmt)).collect();
+    let wc: Vec<u32> = w.iter().map(|&v| encode(v as f64, w_fmt)).collect();
+    gemm_ref(&ac, a_fmt, &wc, w_fmt, m, k, n)
+}
+
+fn add_in_place(x: &mut [f32], y: &[f32]) {
+    for (a, b) in x.iter_mut().zip(y) {
+        *a += b;
+    }
+}
+
+fn rms_norm(x: &[f32], d: usize) -> Vec<f32> {
+    let mut out = vec![0f32; x.len()];
+    for (row, orow) in x.chunks(d).zip(out.chunks_mut(d)) {
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + 1e-5).sqrt();
+        for (o, &v) in orow.iter_mut().zip(row) {
+            *o = v * inv;
+        }
+    }
+    out
+}
+
+fn softmax_rows(scores: &mut [f32], n: usize) {
+    for row in scores.chunks_mut(n) {
+        let max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        if sum > 0.0 {
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+    }
+}
+
+fn gelu(x: f32) -> f32 {
+    let c = (2.0f32 / std::f32::consts::PI).sqrt();
+    0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Full causal forward over all of `input`'s rows, composed purely from
+/// `gemm_ref` calls at the policy's per-layer per-projection formats plus
+/// the model's f32 glue. Row `r` only ever attends positions `0..=r`
+/// (masked probabilities are exact 0.0), so a prefix of this output is the
+/// oracle for a shorter prefill and row `t + k` is the oracle for the
+/// k-th decode step.
+fn oracle_causal(
+    spec: &ModelSpec,
+    weights: &[RefLayer],
+    policy: &PrecisionPolicy,
+    input: &[f32],
+) -> Vec<f32> {
+    let d = spec.d_model;
+    let rows = input.len() / d;
+    let hd = spec.head_dim();
+    let heads = spec.heads;
+    let kv_heads = spec.kv_heads;
+    let kv_dim = kv_heads * hd;
+    let qkv_cols = d + 2 * kv_dim;
+    let act = policy.activation();
+    let scale = 1.0 / (hd as f32).sqrt();
+
+    let mut x = input.to_vec();
+    for (li, l) in weights.iter().enumerate() {
+        let lp = policy.layer(li);
+        // Attention at (qkv.w x act), scores/context at (act x act).
+        let xn = rms_norm(&x, d);
+        let qkv = ref_gemm(&xn, act, &l.wqkv, lp.qkv.w, rows, d, qkv_cols);
+        let mut ctx = vec![0f32; rows * d];
+        for h in 0..heads {
+            let kvh = h * kv_heads / heads;
+            let mut q_h = vec![0f32; rows * hd];
+            let mut k_t = vec![0f32; hd * rows];
+            let mut v_h = vec![0f32; rows * hd];
+            for r in 0..rows {
+                for c in 0..hd {
+                    q_h[r * hd + c] = qkv[r * qkv_cols + h * hd + c];
+                    k_t[c * rows + r] = qkv[r * qkv_cols + d + kvh * hd + c];
+                    v_h[r * hd + c] = qkv[r * qkv_cols + d + kv_dim + kvh * hd + c];
+                }
+            }
+            let mut scores = ref_gemm(&q_h, act, &k_t, act, rows, hd, rows);
+            for s in scores.iter_mut() {
+                *s *= scale;
+            }
+            for r in 0..rows {
+                for s in scores[r * rows + r + 1..(r + 1) * rows].iter_mut() {
+                    *s = f32::NEG_INFINITY;
+                }
+            }
+            softmax_rows(&mut scores, rows);
+            let ctx_h = ref_gemm(&scores, act, &v_h, act, rows, rows, hd);
+            for r in 0..rows {
+                ctx[r * d + h * hd..r * d + (h + 1) * hd]
+                    .copy_from_slice(&ctx_h[r * hd..(r + 1) * hd]);
+            }
+        }
+        let attn = ref_gemm(&ctx, act, &l.wo, lp.out.w, rows, d, d);
+        add_in_place(&mut x, &attn);
+        // FFN at (gate_up.w / down.w x act); the gate shares gate_up's format.
+        let xn = rms_norm(&x, d);
+        let mut hmid = ref_gemm(&xn, act, &l.w_up, lp.gate_up.w, rows, d, spec.d_ff);
+        match &l.w_gate {
+            Some(wg) => {
+                let g = ref_gemm(&xn, act, wg, lp.gate_up.w, rows, d, spec.d_ff);
+                for (hv, gv) in hmid.iter_mut().zip(&g) {
+                    *hv *= silu(*gv);
+                }
+            }
+            None => {
+                for hv in hmid.iter_mut() {
+                    *hv = gelu(*hv);
+                }
+            }
+        }
+        let ffn = ref_gemm(&hmid, act, &l.w_down, lp.down.w, rows, spec.d_ff, d);
+        add_in_place(&mut x, &ffn);
+    }
+    x
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], tag: &str) {
+    assert_eq!(got.len(), want.len(), "{tag}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{tag}: element {i} differs: {g} vs {w}"
+        );
+    }
+}
+
+/// Seeded input rows in the same quantizable range the weights use.
+fn test_input(spec: &ModelSpec, rows: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..rows * spec.d_model).map(|_| (rng.gauss() * 0.5) as f32).collect()
+}
+
+/// Prefill `t` rows, then decode the rest one row at a time, asserting
+/// every output row bitwise against the `gemm_ref`-composed causal oracle.
+fn assert_mixed_policy_bit_exact(spec: ModelSpec, tag: &str) {
+    let seed = 0xF1E8_0001;
+    let policy = mixed_policy();
+    assert_eq!(spec.layers, 2, "{tag}: the mixed policy routes two layers");
+    let model = NativeModel::synthesize(spec.clone(), seed);
+    let weights = synth_ref(&spec, seed);
+
+    let (t, n) = (5usize, 8usize);
+    let input = test_input(&spec, n, 0xD00D);
+    // Width-t oracle for the prefill rows; full-width for decode rows (the
+    // masked tail beyond each decode position contributes exact zeros, as
+    // the engine's own decode-vs-prefill contract requires).
+    let d = spec.d_model;
+    let oracle_pre = oracle_causal(&spec, &weights, &policy, &input[..t * d]);
+    let oracle_full = oracle_causal(&spec, &weights, &policy, &input);
+
+    let cache = WeightCache::new();
+    let mut kv = KvCache::new(&spec, policy.activation());
+    let pre = model.forward_prefill(&input[..t * d], &policy, &cache, &mut kv);
+    assert_bits_eq(&pre, &oracle_pre, &format!("{tag}: prefill"));
+    assert!(
+        pre.iter().any(|v| *v != 0.0),
+        "{tag}: mixed-policy output must be nonzero (INT8 down keeps signal)"
+    );
+    for k in 0..n - t {
+        let row = &input[(t + k) * d..(t + k + 1) * d];
+        let out = model.forward_decode(row, &policy, &cache, &mut kv);
+        assert_bits_eq(
+            &out,
+            &oracle_full[(t + k) * d..(t + k + 1) * d],
+            &format!("{tag}: decode step {k}"),
+        );
+    }
+    assert_eq!(kv.repack_count(), 0, "{tag}: policy serving must never repack KV");
+}
+
+#[test]
+fn mixed_policy_forward_is_bit_exact_mha() {
+    let spec = ModelSpec {
+        seq: 8,
+        layers: 2,
+        d_model: 32,
+        d_ff: 64,
+        heads: 2,
+        kv_heads: 2,
+        gated_ffn: false,
+        name: "mha-e2e",
+    };
+    assert_mixed_policy_bit_exact(spec, "mha");
+}
+
+#[test]
+fn mixed_policy_forward_is_bit_exact_gqa_swiglu() {
+    let spec = ModelSpec {
+        seq: 8,
+        layers: 2,
+        d_model: 32,
+        d_ff: 64,
+        heads: 4,
+        kv_heads: 2,
+        gated_ffn: true,
+        name: "gqa-e2e",
+    };
+    assert_mixed_policy_bit_exact(spec, "gqa");
+}
+
+#[test]
+fn searched_policy_is_digest_stable_and_round_trips() {
+    let spec = ModelSpec::tiny();
+    let model = NativeModel::synthesize(spec.clone(), 0xF1E81B);
+    let cfg = SearchConfig::default();
+    let act = fmt("e3m2");
+    let a = search_policy(&model, "searched-tiny", act, &cfg);
+    let b = search_policy(&model, "searched-tiny", act, &cfg);
+    assert_eq!(a.digest(), b.digest(), "search must be deterministic");
+    assert_eq!(a.to_json(), b.to_json());
+    let parsed = PrecisionPolicy::parse_json(&a.to_json()).expect("searched policy parses back");
+    assert_eq!(parsed, a, "policy JSON round-trips losslessly");
+    assert_eq!(parsed.digest(), a.digest());
+}
+
+#[test]
+fn one_checkpoint_serves_two_named_policies_in_one_run() {
+    let spec = ModelSpec::tiny();
+    let uniform = PrecisionPair::of_bits(6, 6).into_policy();
+    let mixed = Arc::new(mixed_policy());
+    assert_ne!(uniform.digest(), mixed.digest());
+
+    let scenario = Scenario {
+        seed: 7,
+        sessions: 6,
+        arrival: Arrival::Closed { concurrency: 3, think_s: 0.0 },
+        prefill_len: Dist::Uniform(2, 6),
+        decode_steps: Dist::Fixed(3),
+        policies: vec![uniform.clone(), mixed.clone()],
+    };
+    let recorder = Recorder::enabled();
+    let executor = NativeExecutor::new().with_model(spec.clone(), 0xF1E81B);
+    let server = Server::start(
+        ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                max_streak: 4,
+            },
+            sim_config: flexibit::sim::mobile_a(),
+            sim_model: spec.clone(),
+            recorder: recorder.clone(),
+            drift: None,
+            resilience: Resilience::default(),
+        },
+        Box::new(executor),
+    );
+    let mut rep = run(&server, &spec, &scenario, Duration::from_secs(120));
+    rep.metrics = server.shutdown();
+    assert!(!rep.timed_out);
+    assert_eq!(rep.counts.failed, 0);
+    assert_eq!(rep.counts.completed, 6 * 4, "1 prefill + Fixed(3) decodes per session");
+
+    // One checkpoint, two named policies: each distinct digest gets exactly
+    // one co-simulated cost entry in the v3 report.
+    assert_eq!(rep.policy_costs.len(), 2);
+    let names: Vec<&str> = rep.policy_costs.iter().map(|c| c.name.as_str()).collect();
+    assert!(names.contains(&"[6,6]") && names.contains(&"mixed-e2e"), "{names:?}");
+    assert_ne!(rep.policy_costs[0].digest, rep.policy_costs[1].digest);
+    for c in &rep.policy_costs {
+        assert!(c.seconds > 0.0 && c.energy_j > 0.0, "co-sim cost for {}", c.name);
+    }
+    let j = rep.json();
+    assert!(j.contains("\"name\":\"mixed-e2e\""));
+    assert!(j.contains("\"name\":\"[6,6]\""));
+
+    // The drift ledger stays balanced and keys on policy labels.
+    let m = &rep.metrics;
+    assert_eq!(m.drift.audited() + m.drift.skipped(), m.batches_executed);
+    let dr = m.drift_report();
+    assert!(dr.contains("\"pair\":\"[6,6]\""), "{dr}");
+    assert!(dr.contains("\"pair\":\"mixed-e2e\""), "{dr}");
+
+    // Zero-repack serving: every decode adopted cached K/V codes in place.
+    assert_eq!(recorder.counter(Counter::KvRepack), 0, "no KV repacks under policies");
+    assert!(recorder.counter(Counter::KvAdopt) > 0, "decode must adopt cached K/V");
+}

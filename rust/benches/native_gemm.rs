@@ -11,8 +11,9 @@
 //!
 //! `--smoke`: release-mode CI perf gate. Runs one small shape per headline
 //! pair — plus decode-step cases (a batch of single-token attention GEMVs
-//! over a prefilled KV cache), isolated decode-attention cases (resident
-//! K^T + M=1 GEMV), and bare GEMV cases — and fails (exit 1) if ns/MAC
+//! over a prefilled KV cache), isolated decode-attention cases (the paged
+//! resident-K^T hot path vs the flat extract-and-repack oracle), and bare
+//! GEMV cases — and fails (exit 1) if ns/MAC
 //! regresses more than [`SMOKE_SLOWDOWN`]x over the checked-in
 //! `native_gemm_baseline.json` — a deliberately loose bound that catches
 //! accidental O(n) blowups, not machine noise. Decode cases additionally
@@ -26,8 +27,8 @@ use flexibit::coordinator::{
     Batch, BatchPolicy, Executor, FnExecutor, Request, Server, ServerConfig,
 };
 use flexibit::kernels::{
-    gemm, gemm_tiled, gemm_with_panels, GemmConfig, KvCache, NativeExecutor, NativeModel,
-    PackedMatrix, WeightCache, WeightPanels,
+    gemm, gemm_segmented, gemm_tiled, gemm_with_panels, GemmConfig, KvCache, NativeExecutor,
+    NativeModel, PackedMatrix, WeightCache, WeightPanels,
 };
 use flexibit::util::Rng;
 use flexibit::workload::{ModelSpec, PrecisionPair};
@@ -217,7 +218,7 @@ fn bench_decode(
     let cache = WeightCache::new();
     let mut kv = KvCache::new(&spec, pair.a);
     let prefill: Vec<f32> = (0..past * d).map(|_| rng.gauss() as f32 * 0.5).collect();
-    model.forward_prefill(&prefill, pair, &cache, &mut kv);
+    model.forward_prefill(&prefill, pair, &cache, &mut kv).unwrap();
     let toks: Vec<Vec<f32>> = (0..batch)
         .map(|_| (0..d).map(|_| rng.gauss() as f32 * 0.5).collect())
         .collect();
@@ -237,7 +238,7 @@ fn bench_decode(
     let b = Bench::run(&name, warmup, iters, || {
         kv.truncate(past);
         for tok in &toks {
-            black_box(model.forward_decode(tok, pair, &cache, &mut kv).len());
+            black_box(model.forward_decode(tok, pair, &cache, &mut kv).unwrap().len());
         }
     });
     // The zero-repack gate: a decode step must read K^T by word adoption,
@@ -259,10 +260,12 @@ fn bench_decode(
 /// Measure the decode-attention GEMMs in isolation against a KV cache
 /// holding `past` tokens: per iteration, operand materialization plus the
 /// score GEMM `q [1,hd] x K^T [hd, past]` and context GEMM
-/// `p [1,past] x V [past, hd]`. `repack` selects the extract-and-repack
-/// K^T oracle instead of the resident zero-copy adoption; `tiled` runs the
-/// tiled kernel instead of the M=1 GEMV dispatch. All four variants are
-/// bit-identical — only the time differs.
+/// `p [1,past] x V [past, hd]`. The resident path is the paged serving hot
+/// path — one zero-repack score GEMM per adopted K page plus the segmented
+/// context GEMM over the V page run; `repack` instead gathers the cache
+/// into flat extract-and-repack matrices (the paged-vs-flat comparison).
+/// `tiled` runs the tiled kernel instead of the M=1 GEMV dispatch for the
+/// score GEMMs. All variants are bit-identical — only the time differs.
 #[allow(clippy::too_many_arguments)]
 fn bench_attention(
     rng: &mut Rng,
@@ -289,7 +292,7 @@ fn bench_attention(
     for _ in 0..past {
         let k_row: Vec<f32> = (0..hd).map(|_| rng.gauss() as f32 * 0.5).collect();
         let v_row: Vec<f32> = (0..hd).map(|_| rng.gauss() as f32 * 0.5).collect();
-        kv.append_token(0, &k_row, &v_row);
+        kv.append_token(0, &k_row, &v_row).unwrap();
         kv.commit(1);
     }
     let q: Vec<f32> = (0..hd).map(|_| rng.gauss() as f32 * 0.5).collect();
@@ -301,12 +304,26 @@ fn bench_attention(
     let mm_path = if tiled { "tiled" } else { "gemv" };
     let name = format!("{name_prefix} {}x{} T{past} {k_path} {mm_path}", pair.w, pair.a);
     let b = Bench::run(&name, warmup, iters, || {
-        let kp =
-            if repack { kv.k_t_matrix_repacked(0, 0, past) } else { kv.k_t_matrix(0, 0, past) };
-        let vp = kv.v_matrix(0, 0, past);
-        let s = if tiled { gemm_tiled(&qp, &kp, &cfg) } else { gemm(&qp, &kp, &cfg) };
-        let c = if tiled { gemm_tiled(&pp, &vp, &cfg) } else { gemm(&pp, &vp, &cfg) };
-        black_box(s.len() + c.len());
+        let out = if repack {
+            // Flat oracle: gather both operands into fresh dense matrices.
+            let kp = kv.k_t_matrix_repacked(0, 0, past);
+            let vp = kv.v_matrix_repacked(0, 0, past);
+            let s = if tiled { gemm_tiled(&qp, &kp, &cfg) } else { gemm(&qp, &kp, &cfg) };
+            let c = if tiled { gemm_tiled(&pp, &vp, &cfg) } else { gemm(&pp, &vp, &cfg) };
+            s.len() + c.len()
+        } else {
+            // Paged hot path: per-page score GEMMs on adopted resident-K^T
+            // pages, segmented context GEMM over the V page run.
+            let k_pages = kv.k_t_pages(0, 0, past);
+            let v_pages = kv.v_pages(0, 0, past);
+            let mut s_len = 0usize;
+            for kp in &k_pages {
+                let s = if tiled { gemm_tiled(&qp, kp, &cfg) } else { gemm(&qp, kp, &cfg) };
+                s_len += s.len();
+            }
+            s_len + gemm_segmented(&pp, &v_pages).len()
+        };
+        black_box(out);
     });
     if repack {
         assert!(kv.repack_count() > 0, "{name}: oracle path must count repacks");
@@ -373,11 +390,14 @@ fn smoke() {
     for pair in [PrecisionPair::of_bits(6, 6), int8_pair] {
         records.push(bench_decode(&mut rng, pair, 64, 8, 2, 9, "smoke decode"));
     }
-    // Decode-attention gate: resident K^T adoption + M=1 GEMV on a
-    // T=128 cache (repack counter asserted 0 inside), and the bare GEMV
+    // Decode-attention gate: the paged hot path (per-page resident-K^T
+    // score GEMMs + segmented context GEMM, repack counter asserted 0
+    // inside) against the flat extract-and-repack oracle on the same
+    // T=128 cache — the paged-vs-flat comparison — plus the bare GEMV
     // kernel on a dense packed operand.
     for pair in [PrecisionPair::of_bits(6, 6), int8_pair] {
         records.push(bench_attention(&mut rng, pair, 128, false, false, 2, 9, "smoke attn"));
+        records.push(bench_attention(&mut rng, pair, 128, true, false, 2, 9, "smoke attn"));
     }
     for pair in [PrecisionPair::of_bits(6, 6), int8_pair] {
         let (k2, n2) = (256usize, 256usize);
@@ -454,6 +474,7 @@ fn serve_throughput(spec: &ModelSpec, executor: Box<dyn Executor>) -> f64 {
         recorder: flexibit::obs::Recorder::disabled(),
         drift: None,
         resilience: flexibit::coordinator::Resilience::default(),
+        kv_pool: None,
     };
     let server = Server::start(cfg, executor);
     let n_requests = 64u64;

@@ -181,6 +181,7 @@ mod tests {
             recorder: crate::obs::Recorder::disabled(),
             drift: None,
             resilience: crate::coordinator::Resilience::default(),
+            kv_pool: None,
         };
         let server = Server::start(cfg, Box::new(FailSession2Decode));
         let pair = crate::workload::PrecisionPair::of_bits(6, 16);

@@ -17,7 +17,10 @@
 //! contained per batch, failed
 //! requests retry with backoff and bit-exact KV rollback, deadlines and a
 //! bounded queue with prefill-first shedding give overload behavior that
-//! degrades instead of collapsing.
+//! degrades instead of collapsing. Under a budgeted KV page pool
+//! ([`ServerConfig::kv_pool`]) the worker also tracks memory pressure:
+//! hard allocation failures shed new prefills with the distinct
+//! [`ERR_SHED_MEM`] reason while in-flight decode streams keep running.
 
 mod batcher;
 mod completion;
@@ -29,5 +32,5 @@ pub use completion::{Completion, RequestResult};
 pub use driver::StreamDriver;
 pub use server::{
     BatchResult, Executor, FnExecutor, Metrics, Resilience, Server, ServerConfig, ERR_DEADLINE,
-    ERR_SHED,
+    ERR_SHED, ERR_SHED_MEM,
 };

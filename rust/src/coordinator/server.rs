@@ -25,6 +25,18 @@
 //! [`Metrics`]. A completion slot is write-once, so only the attempt that
 //! finally settles a request resolves it.
 //!
+//! When the executor allocates KV from a budgeted
+//! [`KvPagePool`](crate::kernels::KvPagePool) ([`ServerConfig::kv_pool`]),
+//! the worker additionally watches the pool: a **hard** allocation failure
+//! (budget exhausted and nothing left to preempt) latches the server into
+//! MemoryPressure — new prefills shed with the distinct [`ERR_SHED_MEM`]
+//! reason while decode streams keep running — and the latch clears with
+//! hysteresis once pool usage drops below half the budget. Pool gauges
+//! (`kv_pages_in_use`, preemption counts) are sampled into every
+//! [`Metrics`] snapshot, alongside the co-simulated per-session KV
+//! footprint (`kv_bytes_simulated`, priced by
+//! [`sim::kv_session_footprint`] from the worker's token ledger).
+//!
 //! When [`ServerConfig::recorder`] is enabled the worker additionally
 //! traces the serving lifecycle: `request` / `request.queue` /
 //! `request.exec` spans per successful request (queue wait split from
@@ -42,7 +54,7 @@ use crate::obs::{
     self, DriftAudit, DriftBound, Histogram, Recorder, SpanEvent, PID_EXEC, PID_REQUEST,
 };
 use crate::sim::{self, AcceleratorConfig};
-use crate::workload::ModelSpec;
+use crate::workload::{ModelSpec, PrecisionPolicy};
 use std::collections::HashMap;
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -111,6 +123,29 @@ pub struct Metrics {
     /// the queue drains below half its bound (hysteresis, so the flag does
     /// not flap at the boundary). See [`Metrics::health`].
     pub degraded: bool,
+    /// Prefill requests shed at submit while the server was under memory
+    /// pressure (resolved [`ERR_SHED_MEM`], never executed) — a separate
+    /// ledger from the queue-bound `requests_shed` so capacity shedding
+    /// and memory shedding stay distinguishable in every exporter.
+    pub requests_shed_mem: u64,
+    /// Memory-pressure state: latched by the worker when the KV page pool
+    /// reports a hard allocation failure (budget exhausted and nothing left
+    /// to preempt), cleared with hysteresis once pool usage drops below
+    /// half the budget. See [`Metrics::health`].
+    pub mem_pressure: bool,
+    /// Sessions the executor preempted (KV pages dropped, token history
+    /// kept) to free pool budget; each preempted stream re-prefills
+    /// bit-identically on its next step. Sampled from the pool.
+    pub sessions_preempted: u64,
+    /// Live KV pages in the pool (gauge, sampled each worker iteration).
+    pub kv_pages_in_use: u64,
+    /// Bytes of packed KV page words resident in the pool (gauge, sampled).
+    pub kv_bytes_in_use: u64,
+    /// Co-simulated KV footprint (gauge, bytes): every ledger session priced
+    /// by [`sim::kv_session_footprint`] under its own policy. For unshared
+    /// sessions this tracks `kv_bytes_in_use` exactly; under CoW prefix
+    /// sharing it is the upper bound (shared pages priced once per session).
+    pub kv_bytes_simulated: u64,
     /// Sim-vs-measured drift auditor: per-(pair, kind, shape-class) ratio
     /// histograms joining every executed batch's wall time with its
     /// co-simulated predicted cost, plus utilization attribution. Every
@@ -136,12 +171,17 @@ impl Metrics {
             + self.requests_failed_shutdown
             + self.requests_failed_deadline
             + self.requests_shed
+            + self.requests_shed_mem
     }
 
-    /// Healthy/Degraded serving state (the admission-control view; see
-    /// [`Metrics::degraded`]).
+    /// Healthy/Degraded/MemoryPressure serving state (the admission-control
+    /// view; see [`Metrics::degraded`] and [`Metrics::mem_pressure`]).
+    /// Memory pressure dominates: a queue backlog is a throughput problem,
+    /// an exhausted KV pool is a capacity problem.
     pub fn health(&self) -> &'static str {
-        if self.degraded {
+        if self.mem_pressure {
+            "memory_pressure"
+        } else if self.degraded {
             "degraded"
         } else {
             "healthy"
@@ -229,19 +269,30 @@ impl Metrics {
         }
         let faults = self.retries
             + self.requests_shed
+            + self.requests_shed_mem
             + self.requests_failed_deadline
             + self.batches_panicked;
-        if faults > 0 || self.degraded {
+        if faults > 0 || self.degraded || self.mem_pressure {
             let _ = writeln!(
                 out,
-                "faults:   {} retries ({} recovered), {} shed, {} deadline misses, \
-                 {} panics caught, state {}",
+                "faults:   {} retries ({} recovered), {} shed (+{} mem), \
+                 {} deadline misses, {} panics caught, state {}",
                 self.retries,
                 self.retry_success,
                 self.requests_shed,
+                self.requests_shed_mem,
                 self.requests_failed_deadline,
                 self.batches_panicked,
                 self.health(),
+            );
+        }
+        if self.sessions_preempted > 0 || self.kv_pages_in_use > 0 {
+            let _ = writeln!(
+                out,
+                "kv:       {} pages resident ({} KiB), {} sessions preempted",
+                self.kv_pages_in_use,
+                self.kv_bytes_in_use / 1024,
+                self.sessions_preempted,
             );
         }
         out.push_str(&self.drift.summary_lines());
@@ -264,12 +315,13 @@ impl Metrics {
     /// so the scrape shape is stable).
     pub fn prometheus_text(&self, recorder: &Recorder, wall_s: f64) -> String {
         let mut out = String::new();
-        let counters: [(&str, u64); 14] = [
+        let counters: [(&str, u64); 16] = [
             ("requests_completed", self.requests_completed),
             ("requests_failed_exec", self.requests_failed_exec),
             ("requests_failed_shutdown", self.requests_failed_shutdown),
             ("requests_failed_deadline", self.requests_failed_deadline),
             ("requests_shed", self.requests_shed),
+            ("requests_shed_mem", self.requests_shed_mem),
             ("batches_executed", self.batches_executed),
             ("batches_failed", self.batches_failed),
             ("batches_panicked", self.batches_panicked),
@@ -279,17 +331,22 @@ impl Metrics {
             ("decode_steps", self.decode_steps),
             ("retries", self.retries),
             ("retry_success", self.retry_success),
+            ("sessions_preempted", self.sessions_preempted),
         ];
         for (name, v) in counters {
             let _ = writeln!(out, "# TYPE flexibit_{name} counter");
             let _ = writeln!(out, "flexibit_{name} {v}");
         }
-        let gauges: [(&str, f64); 5] = [
+        let gauges: [(&str, f64); 9] = [
             ("host_exec_seconds", self.host_exec_s),
             ("sim_accel_seconds", self.sim_accel_s),
             ("sim_energy_joules", self.sim_energy_j),
             ("throughput_rps", self.throughput_rps(wall_s)),
             ("degraded", if self.degraded { 1.0 } else { 0.0 }),
+            ("memory_pressure", if self.mem_pressure { 1.0 } else { 0.0 }),
+            ("kv_pages_in_use", self.kv_pages_in_use as f64),
+            ("kv_bytes_in_use", self.kv_bytes_in_use as f64),
+            ("kv_bytes_simulated", self.kv_bytes_simulated as f64),
         ];
         for (name, v) in gauges {
             let _ = writeln!(out, "# TYPE flexibit_{name} gauge");
@@ -330,12 +387,17 @@ impl Metrics {
     }
 
     /// Machine-readable serving report (JSON object, schema
-    /// `flexibit.metrics.v3` — v3 switched batch keys and drift labels to
-    /// precision-policy labels/digests; v2 added the `robustness` member and the
-    /// deadline/shed request counters): the same shape `loadgen` embeds in
-    /// its own report, written standalone by `serve --metrics-out`.
+    /// `flexibit.metrics.v4` — v4 split memory-pressure shedding from queue
+    /// shedding and added the KV-pool fields (`requests_shed_mem`,
+    /// `sessions_preempted`, `kv_pages_in_use`, `kv_bytes_in_use`,
+    /// `kv_bytes_simulated`, `memory_pressure`) to `robustness`; v3
+    /// switched batch keys and drift
+    /// labels to precision-policy labels/digests; v2 added the `robustness`
+    /// member and the deadline/shed request counters): the same shape
+    /// `loadgen` embeds in its own report, written standalone by
+    /// `serve --metrics-out`.
     pub fn report_json(&self, wall_s: f64) -> String {
-        format!("{{\"schema\":\"flexibit.metrics.v3\",{}}}", self.report_fields(wall_s))
+        format!("{{\"schema\":\"flexibit.metrics.v4\",{}}}", self.report_fields(wall_s))
     }
 
     /// The inner fields of [`Metrics::report_json`], without the enclosing
@@ -399,13 +461,21 @@ impl Metrics {
         let _ = write!(
             out,
             "\"robustness\":{{\"retries\":{},\"retry_success\":{},\"requests_shed\":{},\
-             \"deadline_misses\":{},\"batches_panicked\":{},\"degraded\":{}}},",
+             \"requests_shed_mem\":{},\"deadline_misses\":{},\"batches_panicked\":{},\
+             \"degraded\":{},\"memory_pressure\":{},\"sessions_preempted\":{},\
+             \"kv_pages_in_use\":{},\"kv_bytes_in_use\":{},\"kv_bytes_simulated\":{}}},",
             self.retries,
             self.retry_success,
             self.requests_shed,
+            self.requests_shed_mem,
             self.requests_failed_deadline,
             self.batches_panicked,
             self.degraded,
+            self.mem_pressure,
+            self.sessions_preempted,
+            self.kv_pages_in_use,
+            self.kv_bytes_in_use,
+            self.kv_bytes_simulated,
         );
         let _ = write!(out, "\"drift\":{}", self.drift.report_json());
         out
@@ -416,6 +486,10 @@ impl Metrics {
 pub const ERR_DEADLINE: &str = "deadline exceeded before execution";
 /// Error text a request shed by admission control resolves with.
 pub const ERR_SHED: &str = "queue full: request shed by admission control";
+/// Error text a prefill shed under memory pressure resolves with — distinct
+/// from [`ERR_SHED`] so clients (and the shed counters) can tell a deep
+/// queue from an exhausted KV page pool.
+pub const ERR_SHED_MEM: &str = "memory pressure: request shed by admission control";
 
 /// Fault-tolerance policy: bounded retries, per-request deadlines, and
 /// admission control. The default is the pre-fault-tolerance behavior —
@@ -468,6 +542,12 @@ pub struct ServerConfig {
     pub drift: Option<DriftBound>,
     /// Fault-tolerance policy (retries, deadlines, admission control).
     pub resilience: Resilience,
+    /// The KV page pool the executor allocates from, when serving runs
+    /// under a byte budget (`--kv-budget-mb`). The worker samples its
+    /// gauges into [`Metrics`] and drives the memory-pressure latch from
+    /// its hard-failure counter. `None` (the default) disables the latch —
+    /// an unbounded executor pool never reports pressure anyway.
+    pub kv_pool: Option<Arc<crate::kernels::KvPagePool>>,
 }
 
 /// What one executor call produced: host seconds for the whole batch plus
@@ -546,6 +626,10 @@ pub struct Server {
     /// shutdown settles the rest like any other unserved request.
     retry_q: RetryQueue,
     resilience: Resilience,
+    /// Budgeted KV pool being watched (see [`ServerConfig::kv_pool`]):
+    /// kept so shutdown can take a final gauge sample after the worker
+    /// stops sampling.
+    kv_pool: Option<Arc<crate::kernels::KvPagePool>>,
 }
 
 /// The retry queue shared between [`Server`] and its worker.
@@ -563,6 +647,7 @@ impl Server {
 
         let retry_q: RetryQueue = Arc::new(Mutex::new(Vec::new()));
         let resilience = cfg.resilience.clone();
+        let kv_pool = cfg.kv_pool.clone();
 
         let b = batcher.clone();
         let m = metrics.clone();
@@ -577,12 +662,17 @@ impl Server {
             // sink as the request spans without any executor plumbing.
             let rec = cfg.recorder.clone();
             obs::with_current(&rec, || {
-                // Committed tokens per live session, tracked from the request
-                // stream (prefill row count, +1 per decode step) so all-decode
-                // batches co-simulate against their sessions' actual cached
-                // past. Entries are dropped on Phase::End; a session the
-                // executor evicted leaves a stale usize behind until then.
-                let mut session_tokens: HashMap<u64, usize> = HashMap::new();
+                // Committed tokens per live session (plus the policy its KV
+                // is priced under), tracked from the request stream (prefill
+                // row count, +1 per decode step) so all-decode batches
+                // co-simulate against their sessions' actual cached past and
+                // the co-sim can charge each session its paged KV footprint.
+                // Entries are dropped on Phase::End; a session the executor
+                // evicted leaves a stale entry behind until then.
+                let mut session_tokens: SessionLedger = HashMap::new();
+                // Hard allocation failures already acknowledged — only
+                // *growth* of the pool's counter latches memory pressure.
+                let mut seen_hard_failures = 0u64;
                 while !s.load(Ordering::Relaxed) {
                     // Re-enqueue retry attempts whose backoff elapsed, and
                     // relax the Degraded flag once the queue drained below
@@ -594,6 +684,28 @@ impl Server {
                         if met.degraded && pending * 2 < cfg.resilience.queue_bound {
                             met.degraded = false;
                         }
+                    }
+                    // Memory-pressure latch + pool gauge sampling: a hard
+                    // allocation failure (budget exhausted and nothing left
+                    // to preempt) flips the server into MemoryPressure so
+                    // `submit` sheds new prefills with ERR_SHED_MEM; the
+                    // latch clears only once pool usage drops below half
+                    // the budget (hysteresis — a pool still nearly full
+                    // would re-fail the very next prefill).
+                    if let Some(pool) = &cfg.kv_pool {
+                        let hard = pool.hard_failures();
+                        let mut met = m.lock().unwrap();
+                        met.sessions_preempted = pool.preemptions();
+                        met.kv_pages_in_use = pool.pages_in_use() as u64;
+                        met.kv_bytes_in_use = pool.bytes_in_use() as u64;
+                        if hard > seen_hard_failures {
+                            met.mem_pressure = true;
+                        } else if met.mem_pressure
+                            && pool.bytes_in_use().saturating_mul(2) < pool.budget_bytes()
+                        {
+                            met.mem_pressure = false;
+                        }
+                        seen_hard_failures = hard;
                     }
                     let maybe = { b.lock().unwrap().next_batch(Instant::now()) };
                     match maybe {
@@ -646,7 +758,7 @@ impl Server {
                 }
             });
         });
-        Server { batcher, metrics, stop, worker: Some(worker), retry_q, resilience }
+        Server { batcher, metrics, stop, worker: Some(worker), retry_q, resilience, kv_pool }
     }
 
     /// Execute one batch and settle it: fulfill every request's completion
@@ -664,7 +776,7 @@ impl Server {
         m: &Arc<Mutex<Metrics>>,
         cfg: &ServerConfig,
         accel: &FlexiBitAccel,
-        session_tokens: &mut HashMap<u64, usize>,
+        session_tokens: &mut SessionLedger,
         retry_q: &RetryQueue,
     ) {
         let rec = &cfg.recorder;
@@ -764,7 +876,7 @@ impl Server {
                     }
                     let (seq, past) = match r.phase {
                         Phase::Decode => {
-                            (1, session_tokens.get(&r.session).copied().unwrap_or(0))
+                            (1, session_tokens.get(&r.session).map(|(t, _)| *t).unwrap_or(0))
                         }
                         _ => (prefill_rows(r, cfg.sim_model.d_model).max(1), 0),
                     };
@@ -815,17 +927,29 @@ impl Server {
                                     session_tokens.remove(&v);
                                 }
                             }
-                            session_tokens
-                                .insert(r.session, prefill_rows(r, cfg.sim_model.d_model));
+                            session_tokens.insert(
+                                r.session,
+                                (
+                                    prefill_rows(r, cfg.sim_model.d_model),
+                                    Arc::clone(&batch.policy),
+                                ),
+                            );
                         }
                         Phase::Decode if r.session != 0 => {
-                            if let Some(t) = session_tokens.get_mut(&r.session) {
+                            if let Some((t, _)) = session_tokens.get_mut(&r.session) {
                                 *t += 1;
                             }
                         }
                         _ => {}
                     }
                 }
+                // Per-session KV footprint: price every live ledger session's
+                // paged KV under its own policy — the co-simulated companion
+                // of the pool's measured `kv_bytes_in_use` gauge.
+                let kv_sim: u64 = session_tokens
+                    .values()
+                    .map(|(t, p)| sim::kv_session_footprint(&cfg.sim_model, p, *t) as u64)
+                    .sum();
                 let host_s = res.host_s.max(done_at.duration_since(t0).as_secs_f64());
                 let mut ok_in_batch = 0u64;
                 let mut met = m.lock().unwrap();
@@ -833,6 +957,7 @@ impl Server {
                 met.host_exec_s += host_s;
                 met.sim_accel_s += sim_s;
                 met.sim_energy_j += sim_j;
+                met.kv_bytes_simulated = kv_sim;
                 for (r, out) in batch.requests.iter().zip(outputs) {
                     match &out {
                         // Session-end control messages are fulfilled but not
@@ -966,11 +1091,11 @@ impl Server {
         retry_q: &RetryQueue,
         met: &mut Metrics,
         res: &Resilience,
-        session_tokens: &HashMap<u64, usize>,
+        session_tokens: &SessionLedger,
     ) {
         if r.attempt < res.max_retries {
             let rollback_to = match r.phase {
-                Phase::Decode => session_tokens.get(&r.session).copied(),
+                Phase::Decode => session_tokens.get(&r.session).map(|(t, _)| *t),
                 _ => None,
             };
             if let Some(committed) = rollback_to {
@@ -1033,15 +1158,31 @@ impl Server {
 
     /// Enqueue a request, stamping the server's default deadline if the
     /// request carries none. Returns `false` when admission control shed it:
-    /// with a nonzero [`Resilience::queue_bound`], new prefills are rejected
-    /// once the queue is that deep — their completion resolves
-    /// [`ERR_SHED`] immediately and the server flips to Degraded — while
-    /// decode and End requests of in-flight sessions are always admitted (a
-    /// stream already holding KV residency must be able to finish).
+    /// while the server is under memory pressure, new prefills resolve
+    /// [`ERR_SHED_MEM`] immediately (admitting one would only force another
+    /// preemption or hard failure); with a nonzero
+    /// [`Resilience::queue_bound`], new prefills are rejected once the
+    /// queue is that deep — their completion resolves [`ERR_SHED`]
+    /// immediately and the server flips to Degraded. Decode and End
+    /// requests of in-flight sessions are always admitted under both
+    /// policies (a stream already holding KV residency must be able to
+    /// finish — or, if preempted, to re-prefill within its own budget
+    /// share).
     pub fn submit(&self, mut req: Request) -> bool {
         if req.deadline.is_none() {
             if let Some(budget) = self.resilience.default_deadline {
                 req.deadline = Some(req.arrived + budget);
+            }
+        }
+        if req.phase == Phase::Prefill {
+            let mut met = self.metrics.lock().unwrap();
+            if met.mem_pressure {
+                met.requests_shed_mem += 1;
+                drop(met);
+                if let Some(done) = &req.done {
+                    done.fulfill(Err(ERR_SHED_MEM.into()));
+                }
+                return false;
             }
         }
         let bound = self.resilience.queue_bound;
@@ -1109,6 +1250,15 @@ impl Server {
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
+        // Final pool sample: the worker's last iteration may predate the
+        // executor's last allocation/preemption, and shutdown reports must
+        // carry the settled counts.
+        if let Some(pool) = &self.kv_pool {
+            let mut met = self.metrics.lock().unwrap();
+            met.sessions_preempted = pool.preemptions();
+            met.kv_pages_in_use = pool.pages_in_use() as u64;
+            met.kv_bytes_in_use = pool.bytes_in_use() as u64;
+        }
         self.settle_unserved();
     }
 
@@ -1151,6 +1301,11 @@ impl Drop for Server {
 /// sessions beyond it lose their past-length estimate (they co-simulate at
 /// past 0), never memory.
 const SESSION_LEDGER_CAP: usize = 4096;
+
+/// The worker's per-session co-sim ledger: committed token count plus the
+/// policy that session's KV is priced under (set at prefill — the phase
+/// that opens the KV cache — and carried unchanged through decode).
+type SessionLedger = HashMap<u64, (usize, Arc<PrecisionPolicy>)>;
 
 /// Committed tokens a session prefill contributes to the co-sim ledger:
 /// the leading dim of a 2-D request shape, else inferred from the co-sim
@@ -1247,6 +1402,7 @@ mod tests {
             recorder: Recorder::disabled(),
             drift: None,
             resilience: Resilience::default(),
+            kv_pool: None,
         }
     }
 
@@ -1418,6 +1574,38 @@ mod tests {
         );
     }
 
+    /// The worker prices every live ledger session's paged KV into the
+    /// `kv_bytes_simulated` gauge (via `sim::kv_session_footprint`, under
+    /// the session's own policy) and retires it when the session Ends.
+    #[test]
+    fn cosim_prices_per_session_kv_footprint() {
+        use crate::workload::IntoPolicy;
+        let server = Server::start(
+            stub_cfg(4, 4),
+            Box::new(FnExecutor(|_b: &Batch| -> Result<f64, String> { Ok(0.0) })),
+        );
+        let d = tiny_model().d_model;
+        let pair = PrecisionPair::of_bits(6, 16);
+        server.submit(
+            Request::new(1, "tiny", pair, vec![0.1; 3 * d], vec![3, d])
+                .with_session(1, Phase::Prefill),
+        );
+        assert!(server.await_completed(1, Duration::from_secs(5)));
+        let expected =
+            crate::sim::kv_session_footprint(&tiny_model(), &pair.into_policy(), 3) as u64;
+        assert!(expected > 0);
+        assert_eq!(server.metrics().kv_bytes_simulated, expected);
+        // End retires the ledger entry; the next executed batch re-prices
+        // the (now empty) ledger and the gauge returns to zero.
+        server.submit(mk_req(2, 6).with_session(1, Phase::End));
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while server.metrics().kv_bytes_simulated != 0 {
+            assert!(Instant::now() < deadline, "End must retire the session's footprint");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        server.shutdown();
+    }
+
     #[test]
     fn session_phases_are_tallied() {
         let server = Server::start(
@@ -1568,6 +1756,17 @@ mod tests {
         m.retry_success = 1;
         m.requests_shed = 1;
         m.degraded = true;
+        m.requests_shed_mem = 2;
+        m.sessions_preempted = 1;
+        m.kv_pages_in_use = 7;
+        m.kv_bytes_in_use = 7 * 2048;
+        m.kv_bytes_simulated = 9 * 2048;
+
+        // The faults line splits queue shedding from memory shedding, and
+        // the kv line surfaces residency + preemptions.
+        let s = m.summary(0.5);
+        assert!(s.contains("1 shed (+2 mem)"), "summary: {s}");
+        assert!(s.contains("7 pages resident (14 KiB), 1 sessions preempted"), "summary: {s}");
 
         let rec = Recorder::enabled();
         rec.count(obs::Counter::KvRepack);
@@ -1575,7 +1774,12 @@ mod tests {
         assert!(p.contains("flexibit_requests_completed 3"));
         assert!(p.contains("flexibit_retries 2"));
         assert!(p.contains("flexibit_requests_shed 1"));
+        assert!(p.contains("flexibit_requests_shed_mem 2"));
+        assert!(p.contains("flexibit_sessions_preempted 1"));
         assert!(p.contains("flexibit_degraded 1"));
+        assert!(p.contains("flexibit_memory_pressure 0"));
+        assert!(p.contains("flexibit_kv_pages_in_use 7"));
+        assert!(p.contains("flexibit_kv_bytes_simulated 18432"));
         assert!(p.contains("# TYPE flexibit_retry_backoff_seconds histogram"));
         // Real cumulative-bucket histograms plus quantile gauges.
         assert!(p.contains("# TYPE flexibit_request_latency_seconds histogram"));
@@ -1594,11 +1798,16 @@ mod tests {
         // The machine-readable report carries the same numbers and is
         // parseable by the dumbest possible check: balanced and keyed.
         let j = m.report_json(0.5);
-        assert!(j.starts_with("{\"schema\":\"flexibit.metrics.v3\","));
+        assert!(j.starts_with("{\"schema\":\"flexibit.metrics.v4\","));
         assert!(j.contains("\"completed\":3"));
         assert!(j.contains("\"phases\":{\"all\":{\"count\":3"));
         assert!(j.contains("\"robustness\":{\"retries\":2,\"retry_success\":1,"));
+        assert!(j.contains("\"requests_shed_mem\":2"));
         assert!(j.contains("\"degraded\":true"));
+        assert!(j.contains("\"memory_pressure\":false"));
+        assert!(j.contains("\"sessions_preempted\":1"));
+        assert!(j.contains("\"kv_pages_in_use\":7"));
+        assert!(j.contains("\"kv_bytes_simulated\":18432"));
         assert!(j.contains("\"drift\":{"));
         assert_eq!(
             j.matches('{').count(),
@@ -1923,5 +2132,66 @@ mod tests {
         assert_eq!(m.requests_failed_shutdown, 2, "retry-pending settle at shutdown");
         assert_eq!(m.requests_failed_exec, 0);
         assert!(done.poll().expect("settled").unwrap_err().contains("shut down"));
+    }
+
+    /// Memory-pressure admission control, end to end on the latch: a hard
+    /// pool failure flips the server into MemoryPressure — new prefills
+    /// shed with [`ERR_SHED_MEM`] on a ledger separate from the
+    /// queue-bound [`ERR_SHED`] counter, decode steps stay admitted — and
+    /// the latch clears with hysteresis only once pool usage drops below
+    /// half the budget.
+    #[test]
+    fn memory_pressure_sheds_with_distinct_reason_and_recovers() {
+        use crate::arith::Format;
+        use crate::kernels::{KvPagePool, PAGE_TOKENS};
+        let fmt = Format::int(8);
+        let codes = 4 * PAGE_TOKENS;
+        let page_bytes = (codes * 8usize).div_ceil(64) * 8;
+        let pool = KvPagePool::new(4 * page_bytes);
+        let mut cfg = stub_cfg(8, 4);
+        cfg.kv_pool = Some(pool.clone());
+        let server = Server::start(
+            cfg,
+            Box::new(FnExecutor(|_b: &Batch| -> Result<f64, String> { Ok(0.0) })),
+        );
+        // Healthy: prefills admitted and served.
+        assert!(server.submit(mk_req(1, 6)));
+        assert!(server.await_completed(1, Duration::from_secs(5)));
+        // Hold the pool more than half full and report a hard failure:
+        // the worker must latch MemoryPressure and keep it latched (the
+        // hysteresis condition `bytes * 2 < budget` is false at 3/4 full).
+        let resident: Vec<_> = (0..3).map(|_| pool.alloc(fmt, codes).unwrap()).collect();
+        pool.note_hard_failure();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !server.metrics().mem_pressure {
+            assert!(Instant::now() < deadline, "worker must latch memory pressure");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(server.metrics().health(), "memory_pressure");
+        // Prefills shed with the memory reason; decode steps of in-flight
+        // sessions are still admitted.
+        let shed = Completion::new();
+        assert!(!server.submit(mk_req(2, 6).with_completion(&shed)));
+        assert_eq!(
+            shed.poll().expect("shed resolves immediately").unwrap_err(),
+            ERR_SHED_MEM
+        );
+        assert!(server.submit(mk_req(3, 6).with_session(9, Phase::Decode)));
+        let m = server.metrics();
+        assert_eq!(m.requests_shed_mem, 1, "memory shed has its own ledger");
+        assert_eq!(m.requests_shed, 0, "queue-bound shed counter is untouched");
+        assert!(m.kv_pages_in_use >= 3, "pool gauges are sampled into snapshots");
+        // Releasing the pages drops usage below half budget: the latch
+        // clears and prefills are admitted again.
+        drop(resident);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while server.metrics().mem_pressure {
+            assert!(Instant::now() < deadline, "latch must clear after pages release");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(server.submit(mk_req(4, 6)), "prefills admitted after recovery");
+        let m = server.shutdown();
+        assert_eq!(m.requests_shed_mem, 1);
+        assert!(m.requests_failed() >= 1, "memory sheds count as failures");
     }
 }

@@ -309,6 +309,128 @@ fn gemm_inner(
     c
 }
 
+/// Segmented GEMM over a split **accumulation** axis:
+/// `C[M,N] = A[M,K] x concat(segs)[K,N]`, where the stationary operand is a
+/// run of row segments (the paged KV cache's V page run — each segment one
+/// page's `[live, head_dim]` matrix, adopted zero-copy).
+///
+/// **Bit-exactness.** One accumulator per output element is carried across
+/// the whole run: for element `(r, j)` the chain is `acc += a[r][k] *
+/// w[k][j]` for k ascending through segment 0, then segment 1, … — exactly
+/// the flat kernel's ascending-k chain, so the result is bit-identical to
+/// [`gemm`] on the concatenated matrix (and to [`crate::arith::gemm_ref`])
+/// for any segment split. No FMA, no reassociation, no per-segment partial
+/// results are ever rounded separately.
+///
+/// The value-aware i32 guard combines the segments' recorded maxima (max
+/// over the run; any segment without one falls back to the format bound).
+/// KV operands never carry weight panels, so there is no panels variant.
+pub fn gemm_segmented(a: &PackedMatrix, segs: &[PackedMatrix]) -> Vec<f32> {
+    let (m, k) = (a.rows(), a.cols());
+    let k_total: usize = segs.iter().map(|s| s.rows()).sum();
+    assert_eq!(k, k_total, "segment rows must sum to A's inner dimension {k}");
+    let n = segs.first().map_or(0, |s| s.cols());
+    let mut c = vec![0f32; m * n];
+    if m == 0 || k == 0 || n == 0 {
+        return c;
+    }
+    let w_fmt = segs[0].fmt();
+    assert!(
+        segs.iter().all(|s| s.cols() == n && s.fmt() == w_fmt),
+        "segments must agree on columns and format"
+    );
+    // Combined data bound: the max over segment maxima is an upper bound on
+    // the concatenated operand; one unknown segment voids it.
+    let w_max = segs
+        .iter()
+        .map(|s| s.max_abs())
+        .try_fold(0i64, |acc, sm| sm.map(|v| acc.max(v)));
+    let int_path = int_fast_path_exact_with(a.fmt(), w_fmt, k, a.max_abs(), w_max);
+
+    let rec = obs::recorder();
+    rec.count(if m == 1 { Counter::GemvDispatch } else { Counter::TiledDispatch });
+    rec.count(if int_path { Counter::I32FastPath } else { Counter::F32Path });
+    let span = rec.begin_sampled();
+
+    SCRATCH.with(|s| {
+        let s = &mut *s.borrow_mut();
+        if int_path {
+            seg_rows_i32(a, segs, n, &mut c, s);
+        } else {
+            seg_rows_f32(a, segs, n, &mut c, s);
+        }
+    });
+    if let Some(t0) = span {
+        rec.end_span(
+            t0,
+            "gemm",
+            "kernel",
+            vec![
+                ("m", m.into()),
+                ("k", k.into()),
+                ("n", n.into()),
+                ("a_fmt", a.fmt().to_string().into()),
+                ("w_fmt", w_fmt.to_string().into()),
+                ("dispatch", "segmented".into()),
+                ("i32_fast_path", int_path.into()),
+                ("segments", segs.len().into()),
+            ],
+        );
+    }
+    c
+}
+
+/// f32 body of [`gemm_segmented`]: decode A once, then stream the segment
+/// rows in ascending-k order into fused axpys — the GEMV `None` arm
+/// generalized to M rows and a segment run.
+fn seg_rows_f32(a: &PackedMatrix, segs: &[PackedMatrix], n: usize, c: &mut [f32], s: &mut Scratch) {
+    let (m, k) = (a.rows(), a.cols());
+    let a_dec = decoder_for(a.fmt());
+    let a_f = grown(&mut s.a_f, m * k);
+    for r in 0..m {
+        a.decode_row_range(r, 0, &a_dec, &mut a_f[r * k..(r + 1) * k]);
+    }
+    let w_dec = decoder_for(segs[0].fmt());
+    let row = grown(&mut s.wt_f, n);
+    let mut k0 = 0;
+    for seg in segs {
+        for kk in 0..seg.rows() {
+            seg.decode_row_range(kk, 0, &w_dec, row);
+            for r in 0..m {
+                axpy_f32(a_f[r * k + k0 + kk], row, &mut c[r * n..(r + 1) * n]);
+            }
+        }
+        k0 += seg.rows();
+    }
+}
+
+/// i32 twin of [`seg_rows_f32`] for the integer fast path: accumulate the
+/// whole output in i32 (exact under the guard), convert once at the end.
+fn seg_rows_i32(a: &PackedMatrix, segs: &[PackedMatrix], n: usize, c: &mut [f32], s: &mut Scratch) {
+    let (m, k) = (a.rows(), a.cols());
+    let a_i = grown(&mut s.a_i, m * k);
+    for r in 0..m {
+        a.decode_row_range_i32(r, 0, &mut a_i[r * k..(r + 1) * k]);
+    }
+    let c_i = grown(&mut s.c_i, m * n);
+    c_i.fill(0);
+    let row = grown(&mut s.wt_i, n);
+    let mut k0 = 0;
+    for seg in segs {
+        for kk in 0..seg.rows() {
+            seg.decode_row_range_i32(kk, 0, row);
+            for r in 0..m {
+                axpy_i32(a_i[r * k + k0 + kk], row, &mut c_i[r * n..(r + 1) * n]);
+            }
+        }
+        k0 += seg.rows();
+    }
+    // Exact integer result -> f32 (in range by the fast-path guard).
+    for (dst, &v) in c.iter_mut().zip(c_i.iter()) {
+        *dst = v as f32;
+    }
+}
+
 /// Compute one horizontal stripe of C: rows `row0 ..` covering `c_chunk`,
 /// using this thread's reusable scratch buffers.
 #[allow(clippy::too_many_arguments)]
@@ -808,5 +930,86 @@ mod tests {
         let a = PackedMatrix::from_codes(&[0; 6], 2, 3, fmt);
         let w = PackedMatrix::from_codes(&[0; 8], 4, 2, fmt);
         gemm_default(&a, &w);
+    }
+
+    /// The segmented kernel is bit-identical to the flat kernel and the
+    /// golden reference for any split of the accumulation axis — the paged
+    /// KV context GEMM's exactness contract. Sweeps page-shaped splits
+    /// (64-boundary), uneven splits, and single-segment degenerate runs,
+    /// at decode shape (M=1) and prefill shape (M>1), FP and INT.
+    #[test]
+    fn segmented_matches_flat_and_reference() {
+        let mut rng = Rng::new(41);
+        for (a_fmt, w_fmt) in [
+            (Format::Fp(FpFormat::FP5_E2M2), Format::Fp(FpFormat::FP5_E2M2)),
+            (Format::int(8), Format::int(8)), // i32 segmented fast path
+            (Format::Fp(FpFormat::FP8_E4M3), Format::int(4)),
+        ] {
+            for m in [1usize, 3] {
+                let (k, n) = (150, 12);
+                let a_codes = rng.codes(m * k, a_fmt.bits());
+                let w_codes = rng.codes(k * n, w_fmt.bits());
+                let a = PackedMatrix::from_codes(&a_codes, m, k, a_fmt);
+                let want = gemm_ref(&a_codes, a_fmt, &w_codes, w_fmt, m, k, n);
+                let flat = PackedMatrix::from_codes(&w_codes, k, n, w_fmt);
+                assert_eq!(gemm_default(&a, &flat), want, "{a_fmt}x{w_fmt} m={m} flat");
+                for split in [vec![150], vec![64, 64, 22], vec![1, 149], vec![37, 50, 63]] {
+                    assert_eq!(split.iter().sum::<usize>(), k);
+                    let mut segs = Vec::new();
+                    let mut r0 = 0;
+                    for rows in &split {
+                        segs.push(PackedMatrix::from_codes(
+                            &w_codes[r0 * n..(r0 + rows) * n],
+                            *rows,
+                            n,
+                            w_fmt,
+                        ));
+                        r0 += rows;
+                    }
+                    assert_eq!(
+                        gemm_segmented(&a, &segs),
+                        want,
+                        "{a_fmt}x{w_fmt} m={m} split {split:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The segmented guard combines per-segment recorded maxima: small
+    /// bounds on every segment admit the i32 path past the format-derived
+    /// limit, one unknown segment falls back — and both paths agree with
+    /// the reference bit-for-bit either way.
+    #[test]
+    fn segmented_guard_combines_segment_maxima() {
+        let fmt = Format::int(8);
+        let (k, n) = (2048, 8); // beyond the INT8 format-bound k of 1024
+        let mut rng = Rng::new(43);
+        // |v| <= 40 data: 2048 * 40 * 40 well under 2^24.
+        let clamp = |c: u32| {
+            let v = (c as i32 & 0xff) as i8 as i64;
+            crate::arith::encode((v.clamp(-40, 40)) as f64, fmt)
+        };
+        let a_codes: Vec<u32> = rng.codes(k, 8).into_iter().map(clamp).collect();
+        let w_codes: Vec<u32> = rng.codes(k * n, 8).into_iter().map(clamp).collect();
+        let a = PackedMatrix::from_codes(&a_codes, 1, k, fmt);
+        let want = gemm_ref(&a_codes, fmt, &w_codes, fmt, 1, k, n);
+        let seg = |r0: usize, rows: usize| {
+            PackedMatrix::from_codes(&w_codes[r0 * n..(r0 + rows) * n], rows, n, fmt)
+        };
+        // from_codes scans actual maxima, so both segments carry bounds.
+        let segs = vec![seg(0, 1024), seg(1024, 1024)];
+        let rec = crate::obs::Recorder::enabled();
+        obs::with_current(&rec, || {
+            assert_eq!(gemm_segmented(&a, &segs), want, "maxima-admitted i32 path");
+        });
+        assert_eq!(rec.counter(Counter::I32FastPath), 1, "combined maxima admit i32");
+        // Voiding one segment's bound demotes the run to f32 — same bits.
+        let segs_unknown = vec![segs[0].clone(), segs[1].clone().with_max_abs(None)];
+        let rec2 = crate::obs::Recorder::enabled();
+        obs::with_current(&rec2, || {
+            assert_eq!(gemm_segmented(&a, &segs_unknown), want, "f32 fallback");
+        });
+        assert_eq!(rec2.counter(Counter::F32Path), 1, "unknown segment voids the bound");
     }
 }

@@ -1,4 +1,5 @@
-//! Per-session KV cache for decode-phase serving.
+//! Per-session KV cache for decode-phase serving, backed by the global
+//! page pool.
 //!
 //! Autoregressive decode re-reads every past token's K/V at every step; a
 //! serving engine that recomputes them from scratch turns an O(T) token
@@ -9,36 +10,57 @@
 //! memory footprint (`bits/8` per element instead of 4 B f32; low-bit KV
 //! residency is exactly the regime arXiv 2505.01043 studies).
 //!
+//! Since the paged-pool rework, a session no longer owns private growable
+//! buffers: every stream is a list of fixed-size [`PAGE_TOKENS`]-token
+//! pages allocated from a shared budgeted [`KvPagePool`]
+//! ([`super::kv_pool`]). That buys three things:
+//!
+//! * **Bounded memory.** [`KvCache::append_token`] returns
+//!   `Err(KvAllocError)` instead of growing past `--kv-budget-mb`; the
+//!   executor preempts the coldest session and retries.
+//! * **Prefix sharing.** [`KvCache::fork`] bumps page refcounts instead of
+//!   copying — sessions prefilled from one prompt share every page, and the
+//!   first divergent append copies **only the tail page**
+//!   (copy-on-write, `cow_copy`-counted). This is the storage prerequisite
+//!   for speculative decoding's draft/verify forks.
+//! * **No more re-layout.** The old streams re-laid K out on capacity
+//!   doubling; pages are fixed-size, so appended history never moves.
+//!
 //! Layout is GQA-aware: K and V are stored per **KV head** (not per query
 //! head), so the query heads of a group share one packed stream — a
 //! `kv_heads/heads` memory saving on GQA models like Llama-2-70b — and
-//! **both operands reach the GEMM zero-repack**, each resident in exactly
-//! the layout its GEMM consumes:
+//! **both operands reach the GEMM zero-repack**, each page resident in
+//! exactly the layout its GEMM consumes:
 //!
-//! * `V` is appended row-major `[tokens, head_dim]`, already the `P x V`
-//!   operand layout — [`KvCache::v_matrix`] adopts the packed words
-//!   directly.
-//! * `K` is kept resident **transposed** `[head_dim, tokens]`
-//!   ([`KtStream`]): a column-appendable packed stream with capacity
-//!   headroom between rows, where appending a token scatters its
-//!   `head_dim` codes into each row's word tail (amortized O(head_dim) per
-//!   step — history is never re-extracted; capacity doubling re-lays rows
-//!   out, amortized O(1) per element). [`KvCache::k_t_matrix`] then adopts
-//!   the words as a strided `K^T [head_dim, tokens]` matrix
-//!   ([`super::packed::PackedMatrix::from_tensor_strided`]) — no code is
-//!   extracted or repacked on the decode hot path. The historical
-//!   extract-and-transpose survives as
-//!   [`KvCache::k_t_matrix_repacked`], the test oracle and the only path
-//!   that increments [`KvCache::repack_count`] (CI gates on the counter
-//!   staying 0 across decode).
+//! * `V` pages are row-major `[PAGE_TOKENS, head_dim]`, already the `P x V`
+//!   operand layout — [`KvCache::v_pages`] adopts each page's packed words
+//!   directly; the context GEMM walks the page run as one segmented
+//!   accumulation ([`super::gemm_segmented`]), ascending-k across pages, so
+//!   the per-element chain equals the flat matrix's chain bit-for-bit.
+//! * `K` pages are resident **transposed** `[head_dim, PAGE_TOKENS]`
+//!   ([`KtStream`]): appending a token scatters its `head_dim` codes into
+//!   each row's tail within the page (O(head_dim) bit-surgery per step,
+//!   history never re-extracted). [`KvCache::k_t_pages`] adopts each page
+//!   as a strided `K^T [head_dim, live]` matrix
+//!   ([`super::packed::PackedMatrix::from_tensor_strided`]); the score GEMM
+//!   runs per page and concatenates along the **output** token axis, which
+//!   cannot reassociate any accumulation chain. The historical
+//!   extract-and-transpose survives as [`KvCache::k_t_matrix_repacked`]
+//!   (plus [`KvCache::v_matrix_repacked`]), the test oracle and the only
+//!   path that increments [`KvCache::repack_count`] (CI gates on the
+//!   counter staying 0 across decode).
 //!
 //! Appends quantize through the same [`crate::arith::encode`] the prefill
 //! activation quantizer uses — elementwise and deterministic — which is the
 //! entire bit-identity argument: cached codes == recomputed codes. INT
-//! streams additionally track a running max-|value| high-water mark
-//! (monotone across [`KvCache::truncate`], so always a true upper bound)
-//! that the GEMM's value-aware i32 fast-path guard consumes.
+//! streams track an **exact per-page, per-stream** max-|value| (consumed by
+//! the GEMM's value-aware i32 guard): [`KvCache::truncate`] re-scans the
+//! tail page's live codes, so a rolled-back outlier no longer disqualifies
+//! the fast path forever, and a forked sibling's rollback can never touch
+//! this stream's bound (maxima live in the per-stream page slot, not the
+//! shared page).
 
+use super::kv_pool::{KvAllocError, KvPage, KvPagePool, PAGE_TOKENS};
 use super::packed::{extract_codes, int_code_abs, PackedMatrix};
 use crate::arith::{encode, Format, PackedTensor};
 use crate::obs::{self, Counter};
@@ -66,208 +88,327 @@ fn with_scratch<R>(n: usize, f: impl FnOnce(&mut [u32]) -> R) -> R {
     })
 }
 
-/// A growable bit-packed stream of codes (append-only, with rollback),
-/// backed by a [`PackedTensor`] so the bit-insertion layout lives in exactly
-/// one place ([`PackedTensor::set_code`]). Holds V row-major
-/// `[tokens, head_dim]`.
+/// One stream's handle on a pool page, plus the stream-local metadata the
+/// shared page must not carry.
 #[derive(Debug, Clone)]
-struct PackedStream {
-    /// Backing tensor; its `len` is the *capacity* in codes. The live code
-    /// count is `len` below.
-    buf: PackedTensor,
-    len: usize,
-    /// Running max-|value| high-water mark for INT formats (0 otherwise).
-    /// Monotone: `truncate` keeps it, so it is always an upper bound.
+struct PageSlot {
+    page: Arc<KvPage>,
+    /// Exact max-|value| over **this stream's** live codes in this page
+    /// (INT formats; 0 otherwise). Kept per-slot rather than in the shared
+    /// page: a forked sibling's rollback re-scan must never lower (or
+    /// raise) this stream's bound.
     max_abs: i64,
 }
 
-impl PackedStream {
-    fn new(fmt: Format) -> Self {
-        PackedStream { buf: PackedTensor::zeros(fmt, 0), len: 0, max_abs: 0 }
+impl PageSlot {
+    fn fresh(page: KvPage) -> Self {
+        PageSlot { page: Arc::new(page), max_abs: 0 }
     }
 
-    fn wbits(&self) -> usize {
-        self.buf.fmt.bits() as usize
-    }
-
-    /// Append one code. `set_code` is read-modify-write, so stale bits left
-    /// behind by [`PackedStream::truncate`] are cleared on overwrite.
-    fn push(&mut self, code: u32) {
-        if self.len == self.buf.len {
-            // Amortized doubling: a decode loop appends one token at a time.
-            let cap = (self.buf.len * 2).max(64);
-            let mut words = self.buf.words().to_vec();
-            words.resize((cap * self.wbits()).div_ceil(64), 0);
-            self.buf = PackedTensor::from_words(self.buf.fmt, cap, words);
+    /// Make the page writable. A uniquely owned page is returned as-is;
+    /// a prefix-shared page is copied into a fresh pool allocation first
+    /// (copy-on-write — the siblings keep the original).
+    fn ensure_unique(
+        &mut self,
+        pool: &Arc<KvPagePool>,
+        fmt: Format,
+        codes: usize,
+    ) -> Result<&mut KvPage, KvAllocError> {
+        if Arc::get_mut(&mut self.page).is_none() {
+            let copy = pool.alloc(fmt, codes)?.copy_words_from(&self.page);
+            obs::count(Counter::CowCopy);
+            self.page = Arc::new(copy);
         }
-        if let Format::Int(i) = self.buf.fmt {
-            self.max_abs = self.max_abs.max(int_code_abs(code, i.bits as u32));
-        }
-        self.buf.set_code(self.len, code);
-        self.len += 1;
-    }
-
-    /// Known |value| bound for the GEMM guard (INT formats only).
-    fn max_abs(&self) -> Option<i64> {
-        match self.buf.fmt {
-            Format::Int(_) => Some(self.max_abs),
-            _ => None,
-        }
-    }
-
-    fn truncate(&mut self, n: usize) {
-        debug_assert!(n <= self.len);
-        self.len = n;
-    }
-
-    /// Packed bytes held by the live codes.
-    fn bytes(&self) -> usize {
-        (self.len * self.wbits()).div_ceil(8)
+        Ok(Arc::get_mut(&mut self.page).expect("page is unique after copy-on-write"))
     }
 }
 
-/// K resident **transposed**: a packed `[head_dim, capacity]` buffer whose
-/// first `len` columns are live tokens. Rows sit `cap` codes apart, so
-/// appending token `len` writes one code into each row's tail
-/// (`set_code(r * cap + len)`) — O(head_dim) bit-surgery per step, zero
-/// touches of history — and the whole buffer adopts as a strided
-/// `K^T [head_dim, tokens]` GEMM operand without extraction.
+/// K resident **transposed** across a run of pool pages: each page packs
+/// `[head_dim, PAGE_TOKENS]` codes row-major at stride `PAGE_TOKENS`, so
+/// appending token `len` writes one code into each row's tail within the
+/// tail page (`set_code(r * PAGE_TOKENS + off)`) — O(head_dim) bit-surgery
+/// per step, zero touches of history — and every page adopts as a strided
+/// `K^T [head_dim, live]` GEMM operand without extraction.
 #[derive(Debug, Clone)]
 struct KtStream {
-    /// Backing tensor of `hd * cap` codes, row-major at stride `cap`.
-    buf: PackedTensor,
+    fmt: Format,
     hd: usize,
-    /// Allocated columns (tokens of capacity).
-    cap: usize,
-    /// Live columns (appended tokens).
+    pages: Vec<PageSlot>,
+    /// Live tokens (columns across the page run).
     len: usize,
-    /// Running max-|value| high-water mark (INT formats; see
-    /// [`PackedStream::max_abs`]).
-    max_abs: i64,
 }
 
 impl KtStream {
     fn new(fmt: Format, hd: usize) -> Self {
-        KtStream { buf: PackedTensor::zeros(fmt, 0), hd, cap: 0, len: 0, max_abs: 0 }
-    }
-
-    fn fmt(&self) -> Format {
-        self.buf.fmt
+        debug_assert!(hd > 0);
+        KtStream { fmt, hd, pages: Vec::new(), len: 0 }
     }
 
     fn wbits(&self) -> usize {
-        self.buf.fmt.bits() as usize
+        self.fmt.bits() as usize
     }
 
-    /// Append one token's column: `codes[r]` lands at the tail of row `r`.
-    /// `set_code` is read-modify-write, so stale bits from a rolled-back
-    /// column are cleared on overwrite.
-    fn push_col(&mut self, codes: &[u32]) {
+    fn page_codes(&self) -> usize {
+        self.hd * PAGE_TOKENS
+    }
+
+    /// Append one token's column: `codes[r]` lands at the tail of row `r`
+    /// in the tail page. `set_code` is read-modify-write, so stale bits
+    /// from a rolled-back column are cleared on overwrite.
+    fn push_col(&mut self, codes: &[u32], pool: &Arc<KvPagePool>) -> Result<(), KvAllocError> {
         debug_assert_eq!(codes.len(), self.hd);
-        if self.len == self.cap {
-            self.grow((self.cap * 2).max(64));
+        let off = self.len % PAGE_TOKENS;
+        if off == 0 {
+            debug_assert_eq!(self.pages.len(), self.len / PAGE_TOKENS);
+            self.pages.push(PageSlot::fresh(pool.alloc(self.fmt, self.page_codes())?));
         }
-        if let Format::Int(i) = self.buf.fmt {
-            for &c in codes {
-                self.max_abs = self.max_abs.max(int_code_abs(c, i.bits as u32));
-            }
-        }
-        let cap = self.cap;
+        let (fmt, pc) = (self.fmt, self.page_codes());
+        let slot = self.pages.last_mut().expect("tail page exists");
+        let page = slot.ensure_unique(pool, fmt, pc)?;
         for (r, &c) in codes.iter().enumerate() {
-            self.buf.set_code(r * cap + self.len, c);
+            page.set_code(r * PAGE_TOKENS + off, c);
+        }
+        if let Format::Int(i) = fmt {
+            for &c in codes {
+                slot.max_abs = slot.max_abs.max(int_code_abs(c, i.bits as u32));
+            }
         }
         self.len += 1;
+        Ok(())
     }
 
-    /// Re-lay the live rows out at a larger column capacity. O(hd * len),
-    /// amortized O(1) per appended element by doubling — this is the only
-    /// place history moves, and it is not a per-step cost.
-    fn grow(&mut self, new_cap: usize) {
-        debug_assert!(new_cap > self.cap);
-        let wbits = self.wbits();
-        let mut next = PackedTensor::zeros(self.buf.fmt, self.hd * new_cap);
-        let mut row = vec![0u32; self.len];
-        for r in 0..self.hd {
-            extract_codes(self.buf.words(), r * self.cap * wbits, wbits, &mut row);
-            for (c, &code) in row.iter().enumerate() {
-                next.set_code(r * new_cap + c, code);
-            }
-        }
-        self.buf = next;
-        self.cap = new_cap;
-    }
-
-    /// Zero-*copy* adoption: the strided matrix shares the stream's backing
-    /// `Arc` — a refcount bump, no word is copied, extracted, or
-    /// re-inserted. Codes beyond `(hd-1)*cap + tokens` (capacity headroom
-    /// and not-yet-live columns) are dead and never read.
-    fn matrix(&self, tokens: usize) -> PackedMatrix {
+    /// Zero-*copy* adoption of the page run: one strided matrix per page,
+    /// each sharing its page's backing `Arc` — a refcount bump, no word is
+    /// copied, extracted, or re-inserted. Page `p` covers tokens
+    /// `[p * PAGE_TOKENS, p * PAGE_TOKENS + live_p)`; codes beyond
+    /// `(hd-1) * PAGE_TOKENS + live_p` in a page (not-yet-live columns)
+    /// are dead and never read.
+    fn matrices(&self, tokens: usize) -> Vec<PackedMatrix> {
         debug_assert!(tokens <= self.len);
-        let n_codes = if self.hd == 0 { 0 } else { (self.hd - 1) * self.cap + tokens };
-        let tensor = PackedTensor::from_shared_words(
-            self.fmt(),
-            n_codes,
-            Arc::clone(self.buf.shared_words()),
-        );
-        let m = PackedMatrix::from_tensor_strided(tensor, self.hd, tokens, self.cap);
-        match self.fmt() {
-            Format::Int(_) => m.with_max_abs(Some(self.max_abs)),
-            _ => m,
+        let mut out = Vec::with_capacity(tokens.div_ceil(PAGE_TOKENS));
+        let mut t0 = 0;
+        for slot in &self.pages {
+            if t0 >= tokens {
+                break;
+            }
+            let live = (tokens - t0).min(PAGE_TOKENS);
+            let n_codes = (self.hd - 1) * PAGE_TOKENS + live;
+            let tensor = PackedTensor::from_shared_words(
+                self.fmt,
+                n_codes,
+                Arc::clone(slot.page.tensor().shared_words()),
+            );
+            let m = PackedMatrix::from_tensor_strided(tensor, self.hd, live, PAGE_TOKENS);
+            out.push(match self.fmt {
+                Format::Int(_) => m.with_max_abs(Some(slot.max_abs)),
+                _ => m,
+            });
+            t0 += live;
         }
+        out
     }
 
     /// The extract-and-repack fallback: read every live row out of the
-    /// packed words and pack a dense `[head_dim, tokens]` matrix. Kept as
-    /// the test oracle for [`KtStream::matrix`]; never on the hot path.
+    /// page run and pack one dense `[head_dim, tokens]` matrix. Kept as
+    /// the test oracle for [`KtStream::matrices`]; never on the hot path.
     fn matrix_repacked(&self, tokens: usize) -> PackedMatrix {
         debug_assert!(tokens <= self.len);
         let wbits = self.wbits();
-        let fmt = self.fmt();
+        let fmt = self.fmt;
         with_scratch(self.hd * tokens, |codes| {
             for r in 0..self.hd {
-                extract_codes(
-                    self.buf.words(),
-                    r * self.cap * wbits,
-                    wbits,
-                    &mut codes[r * tokens..(r + 1) * tokens],
-                );
+                let mut t0 = 0;
+                for slot in &self.pages {
+                    if t0 >= tokens {
+                        break;
+                    }
+                    let live = (tokens - t0).min(PAGE_TOKENS);
+                    extract_codes(
+                        slot.page.tensor().words(),
+                        r * PAGE_TOKENS * wbits,
+                        wbits,
+                        &mut codes[r * tokens + t0..r * tokens + t0 + live],
+                    );
+                    t0 += live;
+                }
             }
             PackedMatrix::from_codes(codes, self.hd, tokens, fmt)
         })
     }
 
-    fn max_abs(&self) -> Option<i64> {
-        match self.buf.fmt {
-            Format::Int(_) => Some(self.max_abs),
-            _ => None,
-        }
-    }
-
+    /// Roll back to `tokens` live columns: whole dropped pages return to
+    /// the pool (refcount permitting), and the tail page's max-|value| is
+    /// re-scanned over the surviving codes — exact, not a high-water mark,
+    /// so a rolled-back outlier cannot disqualify the i32 fast path.
     fn truncate(&mut self, tokens: usize) {
         debug_assert!(tokens <= self.len);
         self.len = tokens;
+        self.pages.truncate(tokens.div_ceil(PAGE_TOKENS));
+        if tokens == 0 {
+            return;
+        }
+        if let Format::Int(i) = self.fmt {
+            let live = tokens - (self.pages.len() - 1) * PAGE_TOKENS;
+            let (bits, hd) = (i.bits as u32, self.hd);
+            let slot = self.pages.last_mut().expect("tail page exists");
+            let mut m = 0i64;
+            for r in 0..hd {
+                for c in 0..live {
+                    m = m.max(int_code_abs(slot.page.get_code(r * PAGE_TOKENS + c), bits));
+                }
+            }
+            slot.max_abs = m;
+        }
     }
 
-    /// Packed bytes held by the live columns. Capacity headroom from
-    /// amortized doubling is excluded — same live-code accounting as
-    /// [`PackedStream::bytes`]; the backing allocation may be up to ~2x
-    /// this after growth or a deep truncate.
+    /// Packed bytes held by the live columns. Tail-page headroom (at most
+    /// `PAGE_TOKENS - 1` tokens per stream) is excluded — live-code
+    /// accounting, as before the paged rework; the pool meters whole pages.
     fn bytes(&self) -> usize {
         (self.len * self.hd * self.wbits()).div_ceil(8)
     }
 }
 
-/// One transformer layer's cached K/V: one stream per KV head — K resident
-/// transposed `[head_dim, tokens]`, V row-major `[tokens, head_dim]`.
+/// V across a run of pool pages: each page packs `[PAGE_TOKENS, head_dim]`
+/// codes row-major — already the `P x V` context-GEMM operand layout, so
+/// every page adopts zero-copy and the GEMM accumulates across the page
+/// run in ascending-k order ([`super::gemm_segmented`]).
+#[derive(Debug, Clone)]
+struct VStream {
+    fmt: Format,
+    hd: usize,
+    pages: Vec<PageSlot>,
+    /// Live tokens (rows across the page run).
+    len: usize,
+}
+
+impl VStream {
+    fn new(fmt: Format, hd: usize) -> Self {
+        debug_assert!(hd > 0);
+        VStream { fmt, hd, pages: Vec::new(), len: 0 }
+    }
+
+    fn wbits(&self) -> usize {
+        self.fmt.bits() as usize
+    }
+
+    fn page_codes(&self) -> usize {
+        self.hd * PAGE_TOKENS
+    }
+
+    /// Append one token's `head_dim` codes as the tail page's next row.
+    fn push_row(&mut self, codes: &[u32], pool: &Arc<KvPagePool>) -> Result<(), KvAllocError> {
+        debug_assert_eq!(codes.len(), self.hd);
+        let off = self.len % PAGE_TOKENS;
+        if off == 0 {
+            debug_assert_eq!(self.pages.len(), self.len / PAGE_TOKENS);
+            self.pages.push(PageSlot::fresh(pool.alloc(self.fmt, self.page_codes())?));
+        }
+        let (fmt, pc, hd) = (self.fmt, self.page_codes(), self.hd);
+        let slot = self.pages.last_mut().expect("tail page exists");
+        let page = slot.ensure_unique(pool, fmt, pc)?;
+        for (j, &c) in codes.iter().enumerate() {
+            page.set_code(off * hd + j, c);
+        }
+        if let Format::Int(i) = fmt {
+            for &c in codes {
+                slot.max_abs = slot.max_abs.max(int_code_abs(c, i.bits as u32));
+            }
+        }
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Zero-copy adoption of the page run: one `[live, head_dim]` matrix
+    /// per page, sharing the page's backing `Arc`.
+    fn matrices(&self, tokens: usize) -> Vec<PackedMatrix> {
+        debug_assert!(tokens <= self.len);
+        let mut out = Vec::with_capacity(tokens.div_ceil(PAGE_TOKENS));
+        let mut t0 = 0;
+        for slot in &self.pages {
+            if t0 >= tokens {
+                break;
+            }
+            let live = (tokens - t0).min(PAGE_TOKENS);
+            let tensor = PackedTensor::from_shared_words(
+                self.fmt,
+                live * self.hd,
+                Arc::clone(slot.page.tensor().shared_words()),
+            );
+            let m = PackedMatrix::from_tensor(tensor, live, self.hd);
+            out.push(match self.fmt {
+                Format::Int(_) => m.with_max_abs(Some(slot.max_abs)),
+                _ => m,
+            });
+            t0 += live;
+        }
+        out
+    }
+
+    /// Dense `[tokens, head_dim]` oracle (extract-and-repack); never on
+    /// the hot path.
+    fn matrix_repacked(&self, tokens: usize) -> PackedMatrix {
+        debug_assert!(tokens <= self.len);
+        let wbits = self.wbits();
+        let (fmt, hd) = (self.fmt, self.hd);
+        with_scratch(tokens * hd, |codes| {
+            let mut t0 = 0;
+            for slot in &self.pages {
+                if t0 >= tokens {
+                    break;
+                }
+                let live = (tokens - t0).min(PAGE_TOKENS);
+                extract_codes(
+                    slot.page.tensor().words(),
+                    0,
+                    wbits,
+                    &mut codes[t0 * hd..(t0 + live) * hd],
+                );
+                t0 += live;
+            }
+            PackedMatrix::from_codes(codes, tokens, hd, fmt)
+        })
+    }
+
+    /// Roll back to `tokens` live rows; see [`KtStream::truncate`] for the
+    /// page-drop and exact max-|value| re-scan semantics.
+    fn truncate(&mut self, tokens: usize) {
+        debug_assert!(tokens <= self.len);
+        self.len = tokens;
+        self.pages.truncate(tokens.div_ceil(PAGE_TOKENS));
+        if tokens == 0 {
+            return;
+        }
+        if let Format::Int(i) = self.fmt {
+            let live = tokens - (self.pages.len() - 1) * PAGE_TOKENS;
+            let (bits, hd) = (i.bits as u32, self.hd);
+            let slot = self.pages.last_mut().expect("tail page exists");
+            let mut m = 0i64;
+            for c in 0..live * hd {
+                m = m.max(int_code_abs(slot.page.get_code(c), bits));
+            }
+            slot.max_abs = m;
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        (self.len * self.hd * self.wbits()).div_ceil(8)
+    }
+}
+
+/// One transformer layer's cached K/V: one page run per KV head — K pages
+/// resident transposed `[head_dim, PAGE_TOKENS]`, V pages row-major
+/// `[PAGE_TOKENS, head_dim]`.
 #[derive(Debug, Clone)]
 struct LayerKv {
     k: Vec<KtStream>,
-    v: Vec<PackedStream>,
+    v: Vec<VStream>,
 }
 
 /// A per-request (per-session) KV cache: every layer's K/V quantized to the
-/// session's activation format and bit-packed, GQA-aware (stored per KV
-/// head). Grown by [`crate::kernels::NativeModel::forward_prefill`] /
+/// session's activation format and bit-packed into pool pages, GQA-aware
+/// (stored per KV head). Grown by
+/// [`crate::kernels::NativeModel::forward_prefill`] /
 /// [`crate::kernels::NativeModel::forward_decode`].
 #[derive(Debug)]
 pub struct KvCache {
@@ -278,20 +419,25 @@ pub struct KvCache {
     /// [`KvCache::commit`] once a forward call has fed every layer).
     len: usize,
     layers: Vec<LayerKv>,
-    /// Times the extract-and-repack fallback ([`KvCache::k_t_matrix_repacked`])
-    /// ran. The decode hot path must keep this at 0 — tests and the
-    /// `native_gemm --smoke` gate assert on it.
+    pool: Arc<KvPagePool>,
+    /// Times the extract-and-repack fallback ([`KvCache::k_t_matrix_repacked`]
+    /// / [`KvCache::v_matrix_repacked`]) ran. The decode hot path must keep
+    /// this at 0 — tests and the `native_gemm --smoke` gate assert on it.
     repacks: AtomicU64,
 }
 
 impl Clone for KvCache {
+    /// Cloning **is** forking: page handles are refcount-bumped, never
+    /// copied (counted as `page_shared`). See [`KvCache::fork`].
     fn clone(&self) -> Self {
+        obs::add(Counter::PageShared, self.page_count() as u64);
         KvCache {
             fmt: self.fmt,
             kv_heads: self.kv_heads,
             head_dim: self.head_dim,
             len: self.len,
             layers: self.layers.clone(),
+            pool: Arc::clone(&self.pool),
             repacks: AtomicU64::new(self.repacks.load(Ordering::Relaxed)),
         }
     }
@@ -300,13 +446,21 @@ impl Clone for KvCache {
 impl KvCache {
     /// An empty cache shaped for `spec`, holding K/V at `a_fmt` (the
     /// session's activation format — decode attention reads the cache as an
-    /// `(a, a)` GEMM operand, exactly like prefill reads fresh K/V).
+    /// `(a, a)` GEMM operand, exactly like prefill reads fresh K/V), paging
+    /// out of a private unbounded pool. Servers that enforce
+    /// `--kv-budget-mb` use [`KvCache::pooled`] instead.
     pub fn new(spec: &ModelSpec, a_fmt: Format) -> Self {
+        Self::pooled(spec, a_fmt, &KvPagePool::unbounded())
+    }
+
+    /// An empty cache drawing its pages from `pool` — the shared budgeted
+    /// allocator; appends fail gracefully at the budget.
+    pub fn pooled(spec: &ModelSpec, a_fmt: Format, pool: &Arc<KvPagePool>) -> Self {
         let hd = spec.head_dim();
         let layers = (0..spec.layers)
             .map(|_| LayerKv {
                 k: (0..spec.kv_heads).map(|_| KtStream::new(a_fmt, hd)).collect(),
-                v: (0..spec.kv_heads).map(|_| PackedStream::new(a_fmt)).collect(),
+                v: (0..spec.kv_heads).map(|_| VStream::new(a_fmt, hd)).collect(),
             })
             .collect();
         KvCache {
@@ -315,8 +469,17 @@ impl KvCache {
             head_dim: hd,
             len: 0,
             layers,
+            pool: Arc::clone(pool),
             repacks: AtomicU64::new(0),
         }
+    }
+
+    /// Fork this session's KV: the child shares every page by refcount
+    /// (zero copies, zero new allocations) and diverges lazily — the first
+    /// append onto a shared tail page copies just that page. The storage
+    /// primitive behind prompt-prefix reuse and speculative decoding.
+    pub fn fork(&self) -> Self {
+        self.clone()
     }
 
     /// Committed tokens (positions `0..len` are attendable by the next row).
@@ -345,16 +508,32 @@ impl KvCache {
         self.fmt
     }
 
-    /// Times the extract-and-repack K^T fallback ran (0 on the decode hot
-    /// path — the resident layout adopts words instead).
+    /// The pool this cache pages out of.
+    pub fn pool(&self) -> &Arc<KvPagePool> {
+        &self.pool
+    }
+
+    /// Pool pages this cache currently holds handles on (shared pages
+    /// count once per holder).
+    pub fn page_count(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.k.iter().map(|s| s.pages.len()).sum::<usize>()
+                    + l.v.iter().map(|s| s.pages.len()).sum::<usize>()
+            })
+            .sum()
+    }
+
+    /// Times the extract-and-repack fallback ran (0 on the decode hot
+    /// path — the resident page layouts adopt words instead).
     pub fn repack_count(&self) -> u64 {
         self.repacks.load(Ordering::Relaxed)
     }
 
     /// Packed bytes held by **live** codes across every layer and head —
     /// the low-bit KV footprint (an FP6 session stores 6 bits/element, not
-    /// 32). Growth-capacity headroom in the backing streams (bounded at
-    /// ~2x by amortized doubling) is not counted.
+    /// 32). Tail-page headroom is not counted; the pool meters whole pages.
     pub fn bytes(&self) -> usize {
         self.layers
             .iter()
@@ -369,26 +548,38 @@ impl KvCache {
     /// values each) to layer `layer`. Values pass through the same
     /// [`crate::arith::encode`] the prefill activation quantizer uses, so
     /// cached codes equal recomputed codes bit-for-bit. K's codes scatter
-    /// into the transposed streams' column tails; V's append row-major.
-    pub fn append_token(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
+    /// into the transposed pages' column tails; V's append row-major.
+    ///
+    /// Fails with [`KvAllocError`] when the pool cannot grant a needed
+    /// page; the partially appended token (earlier streams of this layer)
+    /// is uncommitted, and `truncate(len())` restores a consistent cache.
+    pub fn append_token(
+        &mut self,
+        layer: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) -> Result<(), KvAllocError> {
         let hd = self.head_dim;
         let kv_dim = self.kv_heads * hd;
         assert_eq!(k_row.len(), kv_dim, "K row must be kv_heads * head_dim");
         assert_eq!(v_row.len(), kv_dim, "V row must be kv_heads * head_dim");
         let fmt = self.fmt;
         let kv_heads = self.kv_heads;
+        let pool = Arc::clone(&self.pool);
         let l = &mut self.layers[layer];
         with_scratch(hd, |col| {
             for h in 0..kv_heads {
                 for (c, &x) in col.iter_mut().zip(&k_row[h * hd..(h + 1) * hd]) {
                     *c = encode(x as f64, fmt);
                 }
-                l.k[h].push_col(col);
-                for &x in &v_row[h * hd..(h + 1) * hd] {
-                    l.v[h].push(encode(x as f64, fmt));
+                l.k[h].push_col(col, &pool)?;
+                for (c, &x) in col.iter_mut().zip(&v_row[h * hd..(h + 1) * hd]) {
+                    *c = encode(x as f64, fmt);
                 }
+                l.v[h].push_row(col, &pool)?;
             }
-        });
+            Ok(())
+        })
     }
 
     /// Mark `rows` freshly appended tokens as committed — called once per
@@ -397,16 +588,17 @@ impl KvCache {
     pub fn commit(&mut self, rows: usize) {
         self.len += rows;
         debug_assert!(self.layers.iter().all(|l| {
-            l.k.iter().all(|s| s.len == self.len)
-                && l.v.iter().all(|s| s.len == self.len * self.head_dim)
+            l.k.iter().all(|s| s.len == self.len) && l.v.iter().all(|s| s.len == self.len)
         }));
     }
 
-    /// Roll back to `tokens` committed tokens (speculative-decode rejection,
-    /// bench replay). Appended-but-uncommitted rows are discarded too; K's
-    /// transposed streams drop their column tails (stale bits are cleared
-    /// when a later append overwrites them — reads never span past the live
-    /// column count).
+    /// Roll back to `tokens` committed tokens (retry rollback, preemption
+    /// via `truncate(0)`, speculative-decode rejection, bench replay).
+    /// Appended-but-uncommitted rows are discarded too. Whole dropped
+    /// pages go back to the pool; stale bits in the tail page are cleared
+    /// when a later append overwrites them (reads never span past the live
+    /// count), and INT maxima are re-scanned exact (see
+    /// [`KtStream::truncate`]).
     pub fn truncate(&mut self, tokens: usize) {
         assert!(tokens <= self.len, "cannot truncate {} to {tokens}", self.len);
         for l in &mut self.layers {
@@ -414,50 +606,59 @@ impl KvCache {
                 s.truncate(tokens);
             }
             for s in l.v.iter_mut() {
-                s.truncate(tokens * self.head_dim);
+                s.truncate(tokens);
             }
         }
         self.len = tokens;
     }
 
-    /// K transposed for the score GEMM: a `[head_dim, tokens]` packed
-    /// matrix of layer `layer`, KV head `kv_head`. `tokens` may include
-    /// rows appended but not yet committed (prefill attends its own rows).
+    /// K transposed for the score GEMM: the page run of layer `layer`, KV
+    /// head `kv_head`, as one strided `[head_dim, live]` packed matrix per
+    /// page (page `p` covers tokens `p * PAGE_TOKENS ..`). `tokens` may
+    /// include rows appended but not yet committed (prefill attends its own
+    /// rows).
     ///
-    /// **Zero-repack**: the resident transposed stream's words are adopted
-    /// as a strided matrix — exactly like [`KvCache::v_matrix`], no code is
-    /// extracted or re-inserted.
-    pub fn k_t_matrix(&self, layer: usize, kv_head: usize, tokens: usize) -> PackedMatrix {
+    /// **Zero-repack**: each page's resident transposed words are adopted
+    /// in place; the caller runs one score GEMM per page and concatenates
+    /// along the output token axis — no accumulation chain crosses a page,
+    /// so the split cannot reassociate anything. Counted once per call as
+    /// `kv_adopt` (per stream, not per page).
+    pub fn k_t_pages(&self, layer: usize, kv_head: usize, tokens: usize) -> Vec<PackedMatrix> {
         obs::count(Counter::KvAdopt);
-        self.layers[layer].k[kv_head].matrix(tokens)
+        self.layers[layer].k[kv_head].matrices(tokens)
     }
 
-    /// The historical extract-and-repack K^T (dense output matrix).
+    /// The historical extract-and-repack dense K^T `[head_dim, tokens]`.
     /// **Test oracle and fallback only** — each call counts toward
     /// [`KvCache::repack_count`] and the recorder's `kv_repack` counter,
-    /// which the decode hot path must keep at 0.
-    /// Bit-identical to [`KvCache::k_t_matrix`] code-for-code.
+    /// which the decode hot path must keep at 0. Bit-identical,
+    /// code-for-code, to the concatenation of [`KvCache::k_t_pages`].
     pub fn k_t_matrix_repacked(&self, layer: usize, kv_head: usize, tokens: usize) -> PackedMatrix {
         obs::count(Counter::KvRepack);
         self.repacks.fetch_add(1, Ordering::Relaxed);
         self.layers[layer].k[kv_head].matrix_repacked(tokens)
     }
 
-    /// V for the context GEMM: a `[tokens, head_dim]` packed matrix of
-    /// layer `layer`, KV head `kv_head`. The stream layout is already the
-    /// operand layout, so the matrix shares the stream's backing `Arc` —
-    /// zero-copy, like [`KvCache::k_t_matrix`].
-    pub fn v_matrix(&self, layer: usize, kv_head: usize, tokens: usize) -> PackedMatrix {
+    /// V for the context GEMM: the page run of layer `layer`, KV head
+    /// `kv_head`, as one `[live, head_dim]` packed matrix per page. Each
+    /// page's stream layout is already the operand layout, so adoption
+    /// shares the page's backing `Arc` — zero-copy, like
+    /// [`KvCache::k_t_pages`]. The context GEMM accumulates **across** the
+    /// run in ascending-k order ([`super::gemm_segmented`]), preserving the
+    /// flat matrix's per-element chain bit-for-bit. Counted once per call
+    /// as `kv_adopt`.
+    pub fn v_pages(&self, layer: usize, kv_head: usize, tokens: usize) -> Vec<PackedMatrix> {
         obs::count(Counter::KvAdopt);
-        let hd = self.head_dim;
-        let s = &self.layers[layer].v[kv_head];
-        debug_assert!(tokens * hd <= s.len);
-        let tensor = PackedTensor::from_shared_words(
-            self.fmt,
-            tokens * hd,
-            Arc::clone(s.buf.shared_words()),
-        );
-        PackedMatrix::from_tensor(tensor, tokens, hd).with_max_abs(s.max_abs())
+        self.layers[layer].v[kv_head].matrices(tokens)
+    }
+
+    /// Dense `[tokens, head_dim]` V oracle (extract-and-repack). **Test
+    /// oracle and fallback only** — counts toward [`KvCache::repack_count`]
+    /// like [`KvCache::k_t_matrix_repacked`].
+    pub fn v_matrix_repacked(&self, layer: usize, kv_head: usize, tokens: usize) -> PackedMatrix {
+        obs::count(Counter::KvRepack);
+        self.repacks.fetch_add(1, Ordering::Relaxed);
+        self.layers[layer].v[kv_head].matrix_repacked(tokens)
     }
 }
 
@@ -480,6 +681,31 @@ mod tests {
         }
     }
 
+    /// Flatten the K^T page run into dense `[head_dim, tokens]` codes.
+    fn flat_k(kv: &KvCache, li: usize, h: usize, tokens: usize) -> Vec<u32> {
+        let hd = kv.head_dim();
+        let mut out = vec![0u32; hd * tokens];
+        let mut t0 = 0;
+        for m in kv.k_t_pages(li, h, tokens) {
+            let pt = m.cols();
+            let c = m.codes();
+            for r in 0..hd {
+                out[r * tokens + t0..r * tokens + t0 + pt].copy_from_slice(&c[r * pt..(r + 1) * pt]);
+            }
+            t0 += pt;
+        }
+        out
+    }
+
+    /// Flatten the V page run into dense `[tokens, head_dim]` codes.
+    fn flat_v(kv: &KvCache, li: usize, h: usize, tokens: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(tokens * kv.head_dim());
+        for m in kv.v_pages(li, h, tokens) {
+            out.extend_from_slice(&m.codes());
+        }
+        out
+    }
+
     #[test]
     fn append_commit_and_readback() {
         let sp = spec();
@@ -498,7 +724,7 @@ mod tests {
             for li in 0..sp.layers {
                 let k_row: Vec<f32> = (0..kv_dim).map(|_| rng.gauss() as f32).collect();
                 let v_row: Vec<f32> = (0..kv_dim).map(|_| rng.gauss() as f32).collect();
-                kv.append_token(li, &k_row, &v_row);
+                kv.append_token(li, &k_row, &v_row).unwrap();
                 k_all[li].extend_from_slice(&k_row);
                 v_all[li].extend_from_slice(&v_row);
             }
@@ -509,13 +735,17 @@ mod tests {
         let hd = sp.head_dim();
         // Run the readback under a recorder: every K/V materialization must
         // register as a zero-repack adoption on the first-class counters.
+        // 5 tokens fit one page, so each run is a single matrix.
         let rec = crate::obs::Recorder::enabled();
         obs::with_current(&rec, || {
             for li in 0..sp.layers {
                 for h in 0..sp.kv_heads {
-                    let kt = kv.k_t_matrix(li, h, tokens);
+                    let kt_run = kv.k_t_pages(li, h, tokens);
+                    assert_eq!(kt_run.len(), 1, "5 tokens fit one page");
+                    let kt = &kt_run[0];
                     assert_eq!((kt.rows(), kt.cols()), (hd, tokens));
-                    let vm = kv.v_matrix(li, h, tokens);
+                    let vm_run = kv.v_pages(li, h, tokens);
+                    let vm = &vm_run[0];
                     assert_eq!((vm.rows(), vm.cols()), (tokens, hd));
                     for t in 0..tokens {
                         for c in 0..hd {
@@ -539,21 +769,22 @@ mod tests {
         assert_eq!(kv.repack_count(), 0, "readback never took the repack fallback");
     }
 
-    /// The zero-repack adoption and the extract-and-repack oracle produce
-    /// the same codes — and only the oracle moves the repack counter.
+    /// The zero-repack page adoption and the extract-and-repack oracle
+    /// produce the same codes — and only the oracle moves the repack
+    /// counter. Token counts sweep the page boundary (63/64/65).
     #[test]
-    fn resident_k_t_matches_repack_oracle() {
+    fn resident_pages_match_repack_oracle() {
         let sp = spec();
         for fmt in [Format::Fp(FpFormat::FP5_E2M2), Format::int(8)] {
             let mut kv = KvCache::new(&sp, fmt);
             let kv_dim = sp.kv_heads * sp.head_dim();
             let mut rng = Rng::new(11);
-            // 70 tokens forces at least one capacity re-layout (cap 64 -> 128).
+            // 70 tokens forces a second page per stream (64 + 6).
             for _ in 0..70 {
                 for li in 0..sp.layers {
                     let k_row: Vec<f32> = (0..kv_dim).map(|_| rng.gauss() as f32).collect();
                     let v_row: Vec<f32> = (0..kv_dim).map(|_| rng.gauss() as f32).collect();
-                    kv.append_token(li, &k_row, &v_row);
+                    kv.append_token(li, &k_row, &v_row).unwrap();
                 }
                 kv.commit(1);
             }
@@ -562,19 +793,21 @@ mod tests {
                 for tokens in [1usize, 63, 64, 65, 70] {
                     for li in 0..sp.layers {
                         for h in 0..sp.kv_heads {
-                            let fast = kv.k_t_matrix(li, h, tokens);
-                            let slow = kv.k_t_matrix_repacked(li, h, tokens);
-                            assert_eq!((fast.rows(), fast.cols()), (slow.rows(), slow.cols()));
                             let label = format!("{fmt} layer {li} head {h} tokens {tokens}");
-                            assert_eq!(fast.codes(), slow.codes(), "{label}");
+                            let k_fast = flat_k(&kv, li, h, tokens);
+                            let k_slow = kv.k_t_matrix_repacked(li, h, tokens);
+                            assert_eq!(k_fast, k_slow.codes(), "K {label}");
+                            let v_fast = flat_v(&kv, li, h, tokens);
+                            let v_slow = kv.v_matrix_repacked(li, h, tokens);
+                            assert_eq!(v_fast, v_slow.codes(), "V {label}");
                         }
                     }
                 }
             });
             assert!(kv.repack_count() > 0, "oracle calls must be counted");
             // The recorder sees the same split the module-private hook does:
-            // one adoption per fast read, one repack per oracle call.
-            let reads = (5 * sp.layers * sp.kv_heads) as u64;
+            // one adoption per fast read (K and V), one repack per oracle.
+            let reads = (5 * sp.layers * sp.kv_heads * 2) as u64;
             assert_eq!(rec.counter(Counter::KvAdopt), reads);
             assert_eq!(rec.counter(Counter::KvRepack), reads);
             assert_eq!(rec.counter(Counter::KvRepack), kv.repack_count());
@@ -590,11 +823,11 @@ mod tests {
         let row_a = vec![1.0f32; kv_dim];
         let row_b = vec![-2.0f32; kv_dim];
         for li in 0..sp.layers {
-            kv.append_token(li, &row_a, &row_a);
+            kv.append_token(li, &row_a, &row_a).unwrap();
         }
         kv.commit(1);
         for li in 0..sp.layers {
-            kv.append_token(li, &row_b, &row_b);
+            kv.append_token(li, &row_b, &row_b).unwrap();
         }
         kv.commit(1);
         assert_eq!(kv.len(), 2);
@@ -604,26 +837,26 @@ mod tests {
         // must not leak into the new values.
         let row_c = vec![3.0f32; kv_dim];
         for li in 0..sp.layers {
-            kv.append_token(li, &row_c, &row_c);
+            kv.append_token(li, &row_c, &row_c).unwrap();
         }
         kv.commit(1);
-        let m = kv.k_t_matrix(0, 0, 2);
+        let m = &kv.k_t_pages(0, 0, 2)[0];
         assert_eq!(m.get(0, 0), 1.0);
         assert_eq!(m.get(0, 1), 3.0);
         // The V rows rolled back and re-pushed too.
-        let v = kv.v_matrix(0, 0, 2);
+        let v = &kv.v_pages(0, 0, 2)[0];
         assert_eq!(v.get(0, 0), 1.0);
         assert_eq!(v.get(1, 0), 3.0);
     }
 
-    /// Rollback across a `KtStream` capacity-doubling edge: grow past the
-    /// 64-token re-layout, truncate back below it, re-append the same
-    /// tokens — the result must be bit-identical to a fresh cache fed the
-    /// identical stream, with `repack_count()` still 0 on both (truncation
-    /// never forces the repack fallback, and neither does re-reading the
-    /// re-grown stream).
+    /// Rollback across a page boundary: grow past the 64-token page edge,
+    /// truncate back below it (the second page returns to the pool),
+    /// re-append the same tokens — the result must be bit-identical to a
+    /// fresh cache fed the identical stream, with `repack_count()` still 0
+    /// on both (truncation never forces the repack fallback, and neither
+    /// does re-reading the re-grown page run).
     #[test]
-    fn truncate_across_doubling_edge_reappends_bit_identical() {
+    fn truncate_across_page_boundary_reappends_bit_identical() {
         let sp = spec();
         for fmt in [Format::Fp(FpFormat::FP5_E2M2), Format::int(8)] {
             let kv_dim = sp.kv_heads * sp.head_dim();
@@ -639,21 +872,29 @@ mod tests {
             let push = |kv: &mut KvCache, t: usize| {
                 for li in 0..sp.layers {
                     let (k, v) = &rows[t * sp.layers + li];
-                    kv.append_token(li, k, v);
+                    kv.append_token(li, k, v).unwrap();
                 }
                 kv.commit(1);
             };
-            // Rolled-back cache: 70 tokens (past the 64 -> 128 doubling),
-            // truncate to 60 (below the edge), re-append tokens 60..70.
-            let mut kv = KvCache::new(&sp, fmt);
+            // Rolled-back cache: 70 tokens (a full page + 6), truncate to
+            // 60 (dropping the second page), re-append tokens 60..70.
+            let pool = KvPagePool::unbounded();
+            let mut kv = KvCache::pooled(&sp, fmt, &pool);
             for t in 0..70 {
                 push(&mut kv, t);
             }
+            let two_pages = pool.pages_in_use();
             kv.truncate(60);
             assert_eq!(kv.len(), 60);
+            assert_eq!(
+                pool.pages_in_use() * 2,
+                two_pages,
+                "truncate below the boundary frees every second page"
+            );
             for t in 60..70 {
                 push(&mut kv, t);
             }
+            assert_eq!(pool.pages_in_use(), two_pages, "re-append re-allocates the tail pages");
             // Fresh cache: the identical 70-token stream, never rolled back.
             let mut fresh = KvCache::new(&sp, fmt);
             for t in 0..70 {
@@ -664,39 +905,41 @@ mod tests {
                 for h in 0..sp.kv_heads {
                     let label = format!("{fmt} layer {li} head {h}");
                     assert_eq!(
-                        kv.k_t_matrix(li, h, 70).codes(),
-                        fresh.k_t_matrix(li, h, 70).codes(),
+                        flat_k(&kv, li, h, 70),
+                        flat_k(&fresh, li, h, 70),
                         "K^T after rollback must be bit-identical to fresh: {label}"
                     );
                     assert_eq!(
-                        kv.v_matrix(li, h, 70).codes(),
-                        fresh.v_matrix(li, h, 70).codes(),
+                        flat_v(&kv, li, h, 70),
+                        flat_v(&fresh, li, h, 70),
                         "V after rollback must be bit-identical to fresh: {label}"
                     );
                 }
             }
-            assert_eq!(kv.repack_count(), 0, "rollback + regrow stays zero-repack");
+            assert_eq!(kv.repack_count(), 0, "rollback + re-append stays zero-repack");
             assert_eq!(fresh.repack_count(), 0);
         }
     }
 
-    /// Every `KvAdopt`-counted materialization shares the resident
-    /// stream's backing allocation (`Arc::ptr_eq`) — adoption is a
-    /// refcount bump, not a bulk memcpy per (layer, KV head, step) — and
-    /// the stream's next append still lands in place (no lingering view,
-    /// so `Arc::make_mut` finds a unique owner and copies nothing).
+    /// Every `KvAdopt`-counted materialization shares its page's backing
+    /// allocation (`Arc::ptr_eq`) — adoption is a refcount bump, not a bulk
+    /// memcpy per (layer, KV head, step) — and the stream's next append
+    /// still lands in place (no lingering view, so the inner word `Arc`'s
+    /// `make_mut` finds a unique owner and copies nothing). The inner
+    /// view-CoW is pool-invisible: page accounting never moves.
     #[test]
     fn adoption_is_zero_copy_and_appends_stay_in_place() {
         let sp = spec();
         let fmt = Format::Fp(FpFormat::FP6_E3M2);
-        let mut kv = KvCache::new(&sp, fmt);
+        let pool = KvPagePool::unbounded();
+        let mut kv = KvCache::pooled(&sp, fmt, &pool);
         let kv_dim = sp.kv_heads * sp.head_dim();
         let mut rng = Rng::new(17);
         for _ in 0..5 {
             for li in 0..sp.layers {
                 let k_row: Vec<f32> = (0..kv_dim).map(|_| rng.gauss() as f32).collect();
                 let v_row: Vec<f32> = (0..kv_dim).map(|_| rng.gauss() as f32).collect();
-                kv.append_token(li, &k_row, &v_row);
+                kv.append_token(li, &k_row, &v_row).unwrap();
             }
             kv.commit(1);
         }
@@ -704,38 +947,47 @@ mod tests {
         obs::with_current(&rec, || {
             for li in 0..sp.layers {
                 for h in 0..sp.kv_heads {
-                    let kt = kv.k_t_matrix(li, h, 5);
+                    let kt = &kv.k_t_pages(li, h, 5)[0];
                     assert!(
-                        Arc::ptr_eq(kt.shared_words(), kv.layers[li].k[h].buf.shared_words()),
-                        "K^T adoption must share the stream's words (layer {li} head {h})"
+                        Arc::ptr_eq(
+                            kt.shared_words(),
+                            kv.layers[li].k[h].pages[0].page.tensor().shared_words()
+                        ),
+                        "K^T adoption must share the page's words (layer {li} head {h})"
                     );
-                    let vm = kv.v_matrix(li, h, 5);
+                    let vm = &kv.v_pages(li, h, 5)[0];
                     assert!(
-                        Arc::ptr_eq(vm.shared_words(), kv.layers[li].v[h].buf.shared_words()),
-                        "V adoption must share the stream's words (layer {li} head {h})"
+                        Arc::ptr_eq(
+                            vm.shared_words(),
+                            kv.layers[li].v[h].pages[0].page.tensor().shared_words()
+                        ),
+                        "V adoption must share the page's words (layer {li} head {h})"
                     );
                 }
             }
         });
         assert_eq!(rec.counter(Counter::KvAdopt), (sp.layers * sp.kv_heads * 2) as u64);
-        // With all views dropped, the stream owns its words again: the next
+        // With all views dropped, the page owns its words again: the next
         // append mutates in place (same allocation before and after).
-        let before = Arc::as_ptr(kv.layers[0].k[0].buf.shared_words());
+        let before = Arc::as_ptr(kv.layers[0].k[0].pages[0].page.tensor().shared_words());
         for li in 0..sp.layers {
-            kv.append_token(li, &vec![0.5; kv_dim], &vec![0.5; kv_dim]);
+            kv.append_token(li, &vec![0.5; kv_dim], &vec![0.5; kv_dim]).unwrap();
         }
         kv.commit(1);
-        let after = Arc::as_ptr(kv.layers[0].k[0].buf.shared_words());
+        let after = Arc::as_ptr(kv.layers[0].k[0].pages[0].page.tensor().shared_words());
         assert_eq!(before, after, "append after views dropped must not copy the backing");
-        // A still-live view forces copy-on-write on the stream side, and the
-        // view keeps reading the pre-append snapshot.
-        let snapshot = kv.k_t_matrix(0, 0, 6);
+        // A still-live view forces word-level copy-on-write inside the page,
+        // and the view keeps reading the pre-append snapshot — while the
+        // pool sees no page churn (the inner CoW is not an allocation).
+        let pages_before = pool.pages_in_use();
+        let snapshot = kv.k_t_pages(0, 0, 6).remove(0);
         let frozen = snapshot.codes();
         for li in 0..sp.layers {
-            kv.append_token(li, &vec![-1.0; kv_dim], &vec![-1.0; kv_dim]);
+            kv.append_token(li, &vec![-1.0; kv_dim], &vec![-1.0; kv_dim]).unwrap();
         }
         kv.commit(1);
         assert_eq!(snapshot.codes(), frozen, "live view is an immutable snapshot");
+        assert_eq!(pool.pages_in_use(), pages_before, "inner view-CoW is pool-invisible");
         assert_eq!(kv.len(), 7);
         assert_eq!(kv.repack_count(), 0);
     }
@@ -748,43 +1000,192 @@ mod tests {
         let mut kv = KvCache::new(&sp, fmt);
         let kv_dim = sp.head_dim(); // 1 KV head
         for li in 0..sp.layers {
-            kv.append_token(li, &vec![0.5; kv_dim], &vec![0.25; kv_dim]);
+            kv.append_token(li, &vec![0.5; kv_dim], &vec![0.25; kv_dim]).unwrap();
         }
         kv.commit(1);
         assert_eq!(kv.kv_heads(), 1);
-        let kt = kv.k_t_matrix(0, 0, 1);
+        let kt = &kv.k_t_pages(0, 0, 1)[0];
         assert_eq!((kt.rows(), kt.cols()), (sp.head_dim(), 1));
     }
 
-    /// INT streams carry a max-|value| high-water mark into the adopted
-    /// matrices (the GEMM guard's data-aware bound); truncate keeps the
-    /// mark (a sound upper bound), FP streams carry none.
+    /// INT streams carry an exact max-|value| into the adopted matrices
+    /// (the GEMM guard's data-aware bound); truncate **re-scans** the tail
+    /// page, so a rolled-back outlier restores fast-path eligibility
+    /// instead of pinning the bound high forever. FP streams carry none.
     #[test]
-    fn int_streams_track_value_maxima() {
+    fn int_maxima_are_exact_and_rescanned_on_truncate() {
         let sp = spec();
         let mut kv = KvCache::new(&sp, Format::int(8));
         let kv_dim = sp.kv_heads * sp.head_dim();
         for li in 0..sp.layers {
-            kv.append_token(li, &vec![3.0; kv_dim], &vec![-5.0; kv_dim]);
+            kv.append_token(li, &vec![3.0; kv_dim], &vec![-5.0; kv_dim]).unwrap();
         }
         kv.commit(1);
-        assert_eq!(kv.k_t_matrix(0, 0, 1).max_abs(), Some(3));
-        assert_eq!(kv.v_matrix(0, 0, 1).max_abs(), Some(5));
+        assert_eq!(kv.k_t_pages(0, 0, 1)[0].max_abs(), Some(3));
+        assert_eq!(kv.v_pages(0, 0, 1)[0].max_abs(), Some(5));
         for li in 0..sp.layers {
-            kv.append_token(li, &vec![-64.0; kv_dim], &vec![20.0; kv_dim]);
+            kv.append_token(li, &vec![-64.0; kv_dim], &vec![20.0; kv_dim]).unwrap();
         }
         kv.commit(1);
-        assert_eq!(kv.k_t_matrix(0, 0, 2).max_abs(), Some(64));
-        // Rollback keeps the high-water mark: still a true upper bound.
+        assert_eq!(kv.k_t_pages(0, 0, 2)[0].max_abs(), Some(64));
+        assert_eq!(kv.v_pages(0, 0, 2)[0].max_abs(), Some(20));
+        // Rollback re-scans: the outlier's contribution is gone, so the
+        // value-aware i32 fast path re-qualifies at the old bound.
         kv.truncate(1);
-        assert_eq!(kv.k_t_matrix(0, 0, 1).max_abs(), Some(64));
+        assert_eq!(kv.k_t_pages(0, 0, 1)[0].max_abs(), Some(3));
+        assert_eq!(kv.v_pages(0, 0, 1)[0].max_abs(), Some(5));
 
         let mut fp = KvCache::new(&sp, Format::Fp(FpFormat::FP6_E3M2));
         for li in 0..sp.layers {
-            fp.append_token(li, &vec![1.0; kv_dim], &vec![1.0; kv_dim]);
+            fp.append_token(li, &vec![1.0; kv_dim], &vec![1.0; kv_dim]).unwrap();
         }
         fp.commit(1);
-        assert_eq!(fp.k_t_matrix(0, 0, 1).max_abs(), None);
-        assert_eq!(fp.v_matrix(0, 0, 1).max_abs(), None);
+        assert_eq!(fp.k_t_pages(0, 0, 1)[0].max_abs(), None);
+        assert_eq!(fp.v_pages(0, 0, 1)[0].max_abs(), None);
+    }
+
+    /// Forking shares every page by refcount (no allocation), a divergent
+    /// append copies exactly the tail pages it touches, further appends to
+    /// the now-unique tails copy nothing more, and dropping the fork
+    /// returns the pool to its pre-fork balance. A forked sibling's
+    /// rollback re-scan never disturbs the original's maxima (they live
+    /// per-slot, not in the shared page).
+    #[test]
+    fn fork_shares_pages_and_copies_only_divergent_tails() {
+        let sp = spec();
+        let fmt = Format::int(8);
+        let kv_dim = sp.kv_heads * sp.head_dim();
+        let mut rng = Rng::new(29);
+        let mut rows = || -> Vec<f32> { (0..kv_dim).map(|_| rng.gauss() as f32).collect() };
+        let pool = KvPagePool::unbounded();
+        let mut a = KvCache::pooled(&sp, fmt, &pool);
+        let mut fed: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+        for _ in 0..70 {
+            for li in 0..sp.layers {
+                let (k, v) = (rows(), rows());
+                a.append_token(li, &k, &v).unwrap();
+                fed.push((k, v));
+            }
+            a.commit(1);
+        }
+        let streams = sp.layers * sp.kv_heads * 2;
+        let base_pages = pool.pages_in_use();
+        assert_eq!(base_pages, streams * 2, "70 tokens = 2 pages per stream");
+        let a_k_before = flat_k(&a, 0, 0, 70);
+
+        let rec = crate::obs::Recorder::enabled();
+        let mut b = obs::with_current(&rec, || a.fork());
+        assert_eq!(b.len(), 70);
+        assert_eq!(pool.pages_in_use(), base_pages, "fork allocates nothing");
+        assert_eq!(rec.counter(Counter::PageShared), a.page_count() as u64);
+        assert_eq!(rec.counter(Counter::CowCopy), 0);
+
+        // First divergent append: every stream's shared tail page (and only
+        // it) is copied; the full pages stay shared.
+        let div: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..sp.layers).map(|_| (rows(), rows())).collect();
+        obs::with_current(&rec, || {
+            for li in 0..sp.layers {
+                b.append_token(li, &div[li].0, &div[li].1).unwrap();
+            }
+            b.commit(1);
+        });
+        assert_eq!(rec.counter(Counter::CowCopy), streams as u64, "one tail copy per stream");
+        assert_eq!(pool.pages_in_use(), base_pages + streams);
+        // Second divergent append: tails are already unique — no more copies.
+        obs::with_current(&rec, || {
+            for li in 0..sp.layers {
+                b.append_token(li, &div[li].0, &div[li].1).unwrap();
+            }
+            b.commit(1);
+        });
+        assert_eq!(rec.counter(Counter::CowCopy), streams as u64, "CoW fires once per tail");
+
+        // The fork's history equals a fresh cache fed the same stream, and
+        // the original is untouched by the divergence.
+        let mut fresh = KvCache::new(&sp, fmt);
+        for t in 0..70 {
+            for li in 0..sp.layers {
+                let (k, v) = &fed[t * sp.layers + li];
+                fresh.append_token(li, k, v).unwrap();
+            }
+            fresh.commit(1);
+        }
+        for li in 0..sp.layers {
+            let (k, v) = &div[li];
+            fresh.append_token(li, k, v).unwrap();
+            fresh.append_token(li, k, v).unwrap();
+        }
+        fresh.commit(2);
+        for li in 0..sp.layers {
+            for h in 0..sp.kv_heads {
+                assert_eq!(flat_k(&b, li, h, 72), flat_k(&fresh, li, h, 72));
+                assert_eq!(flat_v(&b, li, h, 72), flat_v(&fresh, li, h, 72));
+            }
+        }
+        assert_eq!(flat_k(&a, 0, 0, 70), a_k_before, "original is untouched by the fork");
+        // The fork's rollback re-scan is slot-local: a's bound is its own.
+        let a_max = a.k_t_pages(0, 0, 70)[1].max_abs();
+        b.truncate(65);
+        assert_eq!(a.k_t_pages(0, 0, 70)[1].max_abs(), a_max);
+
+        // Refcount balance: ending the fork frees exactly its CoW tails;
+        // ending the original releases everything.
+        drop(b);
+        assert_eq!(pool.pages_in_use(), base_pages);
+        drop(a);
+        assert_eq!((pool.pages_in_use(), pool.bytes_in_use()), (0, 0));
+        assert_eq!(fresh.repack_count(), 0);
+    }
+
+    /// An append that hits the pool budget fails cleanly mid-token:
+    /// `truncate(len())` discards the partial token (returning its pages),
+    /// and the surviving history is bit-identical to an unconstrained run.
+    #[test]
+    fn budget_failure_mid_append_is_repaired_by_truncate() {
+        let sp = spec();
+        let fmt = Format::int(8);
+        let kv_dim = sp.kv_heads * sp.head_dim();
+        let hd = sp.head_dim();
+        let page_bytes = (hd * PAGE_TOKENS * 8).div_ceil(64) * 8;
+        let streams = sp.layers * sp.kv_heads * 2;
+        // Room for one full page per stream plus two of the second round.
+        let pool = KvPagePool::new((streams + 2) * page_bytes);
+        let mut kv = KvCache::pooled(&sp, fmt, &pool);
+        let mut rng = Rng::new(31);
+        let mut rows = || -> Vec<f32> { (0..kv_dim).map(|_| rng.gauss() as f32).collect() };
+        let mut fed: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+        for _ in 0..PAGE_TOKENS {
+            for li in 0..sp.layers {
+                let (k, v) = (rows(), rows());
+                kv.append_token(li, &k, &v).unwrap();
+                fed.push((k, v));
+            }
+            kv.commit(1);
+        }
+        assert_eq!(pool.pages_in_use(), streams);
+        // Token 64 opens a second page per stream; the budget only covers
+        // two of them, so the append fails partway through layer 0.
+        let (k, v) = (rows(), rows());
+        assert_eq!(kv.append_token(0, &k, &v), Err(KvAllocError));
+        assert_eq!(kv.len(), PAGE_TOKENS, "failed token is uncommitted");
+        kv.truncate(kv.len());
+        assert_eq!(pool.pages_in_use(), streams, "partial token's pages returned");
+        // The surviving history matches an unconstrained cache bit-for-bit.
+        let mut fresh = KvCache::new(&sp, fmt);
+        for t in 0..PAGE_TOKENS {
+            for li in 0..sp.layers {
+                let (k, v) = &fed[t * sp.layers + li];
+                fresh.append_token(li, k, v).unwrap();
+            }
+            fresh.commit(1);
+        }
+        for li in 0..sp.layers {
+            for h in 0..sp.kv_heads {
+                assert_eq!(flat_k(&kv, li, h, PAGE_TOKENS), flat_k(&fresh, li, h, PAGE_TOKENS));
+                assert_eq!(flat_v(&kv, li, h, PAGE_TOKENS), flat_v(&fresh, li, h, PAGE_TOKENS));
+            }
+        }
+        assert_eq!(kv.repack_count(), 0);
     }
 }

@@ -1,0 +1,274 @@
+//! Global budgeted page pool for KV residency.
+//!
+//! Every session's [`super::KvCache`] used to own private growable packed
+//! streams — fine at tens of sessions, fragmentation-prone and unbounded at
+//! production session counts (ROADMAP item 2). This module is the storage
+//! half of the fix: KV words live in **fixed-size token pages** of
+//! [`PAGE_TOKENS`] tokens per (layer, KV head, K/V side), allocated from one
+//! process-wide [`KvPagePool`] with a hard byte budget (`--kv-budget-mb`).
+//!
+//! * **Refcounted sharing.** Streams hold `Arc<KvPage>` handles; forking a
+//!   cache ([`super::KvCache::fork`]) bumps refcounts instead of copying —
+//!   sessions prefilled from a common prompt share every page. The first
+//!   divergent append onto a shared page copies **only that page**
+//!   (copy-on-write, charged to the pool like any allocation) — the storage
+//!   prerequisite for speculative decoding's draft/verify forks.
+//! * **Two sharing layers, one CoW story.** The outer `Arc<KvPage>`
+//!   refcount is prefix sharing between sessions (explicit CoW through the
+//!   pool, counted as `cow_copy`); the *inner* word `Arc` of the page's
+//!   [`PackedTensor`] is transient GEMM adoption (the zero-copy views of
+//!   PR 9), whose `Arc::make_mut` copy-on-write is unchanged and
+//!   pool-invisible — a view outlives at most one append.
+//! * **Budget + graceful failure.** [`KvPagePool::alloc`] fails with
+//!   [`KvAllocError`] instead of growing past the budget; the executor
+//!   answers by preempting the coldest session (spilling nothing — it
+//!   re-prefills from its token history, bit-identically) and retrying, and
+//!   the server sheds new prefills (`ERR_SHED_MEM`) once even preemption
+//!   cannot free a page. [`KvPagePool::arm_oom`] injects deterministic
+//!   allocation failures for the chaos harness's `oom:R` fate.
+//!
+//! Accounting is exact: every allocation charges the page's backing words,
+//! every last-handle drop releases them (a [`PageLease`] keeps the pool
+//! honest even when pages outlive the cache that allocated them), and the
+//! `page_alloc` / `page_free` / `kv_pages_in_use` observability surface is
+//! fed from here.
+
+use crate::arith::{Format, PackedTensor};
+use crate::obs::{self, Counter};
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+/// Tokens per KV page. 64 keeps a page's word run small enough to stay
+/// cache-friendly, aligns with the GEMM's default `kc` tile, and matches
+/// the old streams' first doubling capacity — so the existing 63/64/65
+/// boundary sweeps exercise page edges directly.
+pub const PAGE_TOKENS: usize = 64;
+
+/// A KV page allocation failed: the pool is at its byte budget (or an
+/// injected `oom:` fault fired). The caller decides whether to preempt and
+/// retry or to fail the request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvAllocError;
+
+impl fmt::Display for KvAllocError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "kv page allocation failed (pool at budget)")
+    }
+}
+
+/// Releases the page's bytes back to the pool when the last owner drops —
+/// accounting follows the page itself, not the cache that allocated it.
+#[derive(Debug)]
+struct PageLease {
+    pool: Arc<KvPagePool>,
+    bytes: usize,
+}
+
+impl Drop for PageLease {
+    fn drop(&mut self) {
+        self.pool.release(self.bytes);
+    }
+}
+
+/// One fixed-size packed KV page: `PAGE_TOKENS` tokens' worth of codes for
+/// one (layer, KV head, K/V side). The stream that owns it decides the
+/// code layout (K transposed `[head_dim, PAGE_TOKENS]`, V row-major
+/// `[PAGE_TOKENS, head_dim]`); the pool only meters words.
+#[derive(Debug)]
+pub struct KvPage {
+    t: PackedTensor,
+    lease: PageLease,
+}
+
+impl KvPage {
+    /// The page's backing tensor (capacity codes; live range is the
+    /// owning stream's business).
+    pub(crate) fn tensor(&self) -> &PackedTensor {
+        &self.t
+    }
+
+    /// Write one code (read-modify-write: stale bits from a rolled-back
+    /// token are cleared on overwrite, exactly like the old streams).
+    pub(crate) fn set_code(&mut self, i: usize, code: u32) {
+        self.t.set_code(i, code);
+    }
+
+    pub(crate) fn get_code(&self, i: usize) -> u32 {
+        self.t.get_code(i)
+    }
+
+    /// Turn this freshly allocated page into a verbatim copy of `src`
+    /// (the copy-on-write tail copy): same words, this page's lease.
+    pub(crate) fn copy_words_from(self, src: &KvPage) -> KvPage {
+        debug_assert_eq!((self.t.fmt, self.t.len), (src.t.fmt, src.t.len));
+        KvPage {
+            t: PackedTensor::from_words(self.t.fmt, self.t.len, src.t.words().to_vec()),
+            lease: self.lease,
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct PoolState {
+    bytes_in_use: usize,
+    pages_in_use: usize,
+    /// Injected allocation failures still pending (the chaos harness's
+    /// `oom:R` fate arms these; each failed alloc consumes one).
+    oom_armed: u64,
+    /// Allocation failures the caller could not resolve by preemption —
+    /// the server's memory-pressure latch watches this.
+    hard_failures: u64,
+    /// Sessions preempted (KV dropped, token history kept) to free pages.
+    preemptions: u64,
+}
+
+/// The process-wide KV page allocator: a byte budget and exact in-use
+/// accounting. Shared (`Arc`) between the executor (allocates, preempts)
+/// and the server (admission control + exporters).
+#[derive(Debug)]
+pub struct KvPagePool {
+    budget: usize,
+    state: Mutex<PoolState>,
+}
+
+impl KvPagePool {
+    /// A pool bounded at `budget` bytes of packed page words.
+    pub fn new(budget: usize) -> Arc<Self> {
+        Arc::new(KvPagePool { budget, state: Mutex::new(PoolState::default()) })
+    }
+
+    /// An effectively unbounded pool — the default when no `--kv-budget-mb`
+    /// is set; allocation then only fails under an armed `oom:` fault.
+    pub fn unbounded() -> Arc<Self> {
+        Self::new(usize::MAX)
+    }
+
+    /// Allocate one page of `codes` codes in `fmt`, charged against the
+    /// budget. Fails (without side effects beyond consuming one armed
+    /// injection) when the budget cannot fit the page or an `oom:` fault
+    /// is armed.
+    pub fn alloc(self: &Arc<Self>, fmt: Format, codes: usize) -> Result<KvPage, KvAllocError> {
+        let words = (codes * fmt.bits() as usize).div_ceil(64);
+        let bytes = words * 8;
+        {
+            let mut st = self.state.lock().unwrap();
+            if st.oom_armed > 0 {
+                st.oom_armed -= 1;
+                return Err(KvAllocError);
+            }
+            if st.bytes_in_use.saturating_add(bytes) > self.budget {
+                return Err(KvAllocError);
+            }
+            st.bytes_in_use += bytes;
+            st.pages_in_use += 1;
+        }
+        obs::count(Counter::PageAlloc);
+        Ok(KvPage {
+            t: PackedTensor::zeros(fmt, codes),
+            lease: PageLease { pool: Arc::clone(self), bytes },
+        })
+    }
+
+    fn release(&self, bytes: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.bytes_in_use = st.bytes_in_use.saturating_sub(bytes);
+        st.pages_in_use = st.pages_in_use.saturating_sub(1);
+        drop(st);
+        obs::count(Counter::PageFree);
+    }
+
+    /// Arm `n` deterministic allocation failures: the next `n` calls to
+    /// [`KvPagePool::alloc`] fail regardless of budget. The chaos
+    /// harness's `oom:R` fate arms one per drawn fault.
+    pub fn arm_oom(&self, n: u64) {
+        self.state.lock().unwrap().oom_armed += n;
+    }
+
+    /// Record an allocation failure that preemption could not resolve
+    /// (no victim left to evict) — the server's memory-pressure latch.
+    pub fn note_hard_failure(&self) {
+        self.state.lock().unwrap().hard_failures += 1;
+    }
+
+    /// Record one session preemption (executor-side LRU victim).
+    pub fn note_preemption(&self) {
+        self.state.lock().unwrap().preemptions += 1;
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    pub fn bytes_in_use(&self) -> usize {
+        self.state.lock().unwrap().bytes_in_use
+    }
+
+    /// Live pages (the `kv_pages_in_use` gauge).
+    pub fn pages_in_use(&self) -> usize {
+        self.state.lock().unwrap().pages_in_use
+    }
+
+    pub fn hard_failures(&self) -> u64 {
+        self.state.lock().unwrap().hard_failures
+    }
+
+    pub fn preemptions(&self) -> u64 {
+        self.state.lock().unwrap().preemptions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::FpFormat;
+
+    #[test]
+    fn alloc_release_and_budget() {
+        let fmt = Format::Fp(FpFormat::FP6_E3M2);
+        let codes = 4 * PAGE_TOKENS; // hd=4 page
+        let words = (codes * 6).div_ceil(64);
+        // Budget for exactly two pages.
+        let pool = KvPagePool::new(2 * words * 8);
+        let p1 = pool.alloc(fmt, codes).unwrap();
+        let p2 = pool.alloc(fmt, codes).unwrap();
+        assert_eq!(pool.pages_in_use(), 2);
+        assert_eq!(pool.bytes_in_use(), 2 * words * 8);
+        assert_eq!(pool.alloc(fmt, codes), Err(KvAllocError), "third page exceeds the budget");
+        drop(p1);
+        assert_eq!(pool.pages_in_use(), 1);
+        let _p3 = pool.alloc(fmt, codes).expect("freed budget is reusable");
+        drop(p2);
+        drop(_p3);
+        assert_eq!((pool.pages_in_use(), pool.bytes_in_use()), (0, 0));
+    }
+
+    #[test]
+    fn armed_oom_fails_next_allocs_only() {
+        let pool = KvPagePool::unbounded();
+        pool.arm_oom(2);
+        assert!(pool.alloc(Format::int(4), PAGE_TOKENS).is_err());
+        assert!(pool.alloc(Format::int(4), PAGE_TOKENS).is_err());
+        let ok = pool.alloc(Format::int(4), PAGE_TOKENS);
+        assert!(ok.is_ok(), "injection is consumed, not sticky");
+        assert_eq!(pool.pages_in_use(), 1);
+    }
+
+    #[test]
+    fn cow_copy_carries_words_and_its_own_lease() {
+        let fmt = Format::int(5);
+        let pool = KvPagePool::unbounded();
+        let mut src = pool.alloc(fmt, 8).unwrap();
+        for i in 0..8 {
+            src.set_code(i, (i as u32) & 0x1f);
+        }
+        let copy = pool.alloc(fmt, 8).unwrap().copy_words_from(&src);
+        for i in 0..8 {
+            assert_eq!(copy.get_code(i), src.get_code(i));
+        }
+        assert_eq!(pool.pages_in_use(), 2, "the copy is its own charged page");
+        drop(src);
+        assert_eq!(pool.pages_in_use(), 1, "copy survives the source");
+        drop(copy);
+        assert_eq!(pool.bytes_in_use(), 0);
+    }
+}

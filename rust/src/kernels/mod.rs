@@ -56,11 +56,14 @@
 //!   cache stores exactly the quantized codes prefill would produce and
 //!   every GEMM keeps one ascending-k accumulation chain per element.
 //! * [`KvCache`] — per-session K/V, bit-packed at the activation format
-//!   (low-bit KV residency), GQA-aware (one stream per KV head). Both
-//!   operands are resident in the layout their GEMM consumes — V row-major,
-//!   K **transposed** with column-appendable word tails — so decode
-//!   attention adopts packed words on both sides, zero repack (a repack
-//!   counter guards the hot path in tests and CI).
+//!   (low-bit KV residency), GQA-aware (one stream per KV head), stored as
+//!   fixed-size token **pages** leased from a global budgeted [`KvPagePool`]
+//!   with refcounted copy-on-write prefix sharing across forked sessions.
+//!   Both operands are resident in the layout their GEMM consumes — V
+//!   row-major, K **transposed** per page — so decode attention adopts
+//!   packed page words on both sides, zero repack (a repack counter guards
+//!   the hot path in tests and CI); V page runs accumulate through
+//!   [`gemm_segmented`], one ascending-k chain per element across pages.
 //! * [`NativeExecutor`] — implements [`crate::coordinator::Executor`] so the
 //!   server can run end-to-end on this engine with zero Python/PJRT
 //!   artifacts on disk, including token-stream sessions (prefill + decode
@@ -72,6 +75,7 @@
 mod cache;
 mod gemm;
 mod kv;
+mod kv_pool;
 mod model;
 mod packed;
 mod panels;
@@ -79,10 +83,11 @@ mod search;
 
 pub use cache::{CachedModel, LayerPanels, PackedLayer, WeightCache, DEFAULT_PANEL_BUDGET};
 pub use gemm::{
-    gemm, gemm_default, gemm_tiled, gemm_with_panels, int_fast_path_exact,
+    gemm, gemm_default, gemm_segmented, gemm_tiled, gemm_with_panels, int_fast_path_exact,
     int_fast_path_exact_with, GemmConfig,
 };
 pub use kv::KvCache;
+pub use kv_pool::{KvAllocError, KvPagePool, PAGE_TOKENS};
 pub use model::{NativeExecutor, NativeModel};
 pub use packed::{extract_codes, Decoder, PackedMatrix};
 pub use panels::{PanelData, WeightPanels};

@@ -15,8 +15,9 @@
 //! everywhere via [`IntoPolicy`] and means the uniform policy.
 
 use super::cache::{LayerPanels, PackedLayer, WeightCache};
-use super::gemm::{gemm, gemm_with_panels, GemmConfig};
+use super::gemm::{gemm, gemm_segmented, gemm_with_panels, GemmConfig};
 use super::kv::KvCache;
+use super::kv_pool::{KvAllocError, KvPagePool};
 use super::packed::PackedMatrix;
 use super::panels::WeightPanels;
 use crate::arith::Format;
@@ -32,6 +33,11 @@ use std::time::Instant;
 /// a leaked session (client that never finished its stream) must not pin
 /// KV memory forever.
 pub const DEFAULT_SESSION_CAPACITY: usize = 256;
+
+/// Prompt-prefix entries the executor caches for copy-on-write forking.
+/// Small and deterministic: entries are dropped oldest-first, and are the
+/// first thing reclaimed under memory pressure (they are pure reuse).
+pub const PROMPT_CACHE_CAPACITY: usize = 4;
 
 /// The weight format each of one layer's projections packs at (the
 /// pack-time view of a policy's layer entry; the gate projection shares
@@ -220,13 +226,18 @@ impl NativeModel {
     /// input rows. The cache may already hold committed tokens (chunked
     /// prefill); new rows attend to everything committed plus their own
     /// causal prefix.
+    ///
+    /// Fails with [`KvAllocError`] when the cache's page pool is at budget;
+    /// the cache is then left with uncommitted partial appends — call
+    /// `kv.truncate(kv.len())` to restore it to the last committed token
+    /// before retrying (the executor's preempt-and-retry loop does).
     pub fn forward_prefill(
         &self,
         input: &[f32],
         policy: impl IntoPolicy,
         cache: &WeightCache,
         kv: &mut KvCache,
-    ) -> Vec<f32> {
+    ) -> Result<Vec<f32>, KvAllocError> {
         self.forward_cached(input, &policy.into_policy(), cache, kv)
     }
 
@@ -243,7 +254,7 @@ impl NativeModel {
         policy: impl IntoPolicy,
         cache: &WeightCache,
         kv: &mut KvCache,
-    ) -> Vec<f32> {
+    ) -> Result<Vec<f32>, KvAllocError> {
         assert_eq!(
             input.len(),
             self.spec.d_model,
@@ -259,7 +270,7 @@ impl NativeModel {
         policy: &PrecisionPolicy,
         cache: &WeightCache,
         kv: &mut KvCache,
-    ) -> Vec<f32> {
+    ) -> Result<Vec<f32>, KvAllocError> {
         let d = self.spec.d_model;
         assert!(
             d > 0 && !input.is_empty() && input.len() % d == 0,
@@ -282,7 +293,7 @@ impl NativeModel {
         let mut x = input.to_vec();
         for (li, (layer, panels)) in cached.layers.iter().zip(cached.panels.iter()).enumerate() {
             let span = rec.begin();
-            let attn = self.attention_cached(&rms_norm(&x, d), rows, act, layer, panels, kv, li);
+            let attn = self.attention_cached(&rms_norm(&x, d), rows, act, layer, panels, kv, li)?;
             add_in_place(&mut x, &attn);
             let ffn = self.ffn(&rms_norm(&x, d), rows, act, layer, panels);
             add_in_place(&mut x, &ffn);
@@ -292,7 +303,7 @@ impl NativeModel {
             }
         }
         kv.commit(rows);
-        x
+        Ok(x)
     }
 
     /// Multi-head attention (GQA-aware). Projections run at each matrix's
@@ -357,11 +368,19 @@ impl NativeModel {
     /// rows' K/V to layer `li`, then attends each new row (absolute position
     /// `pos0 + r`) against positions `0..=pos0+r`. Projections run at
     /// (w, a); QK^T and PV at (a, a), with K/V **adopted zero-repack** from
-    /// the packed cache (K is resident transposed, V row-major — no code is
-    /// extracted or re-inserted) — the same codes a full prefill quantizes.
-    /// The adopted operands are built once per KV head and shared by the
-    /// query heads of the group (a `heads/kv_heads` saving on GQA models);
-    /// decode rows are M=1, so every GEMM here takes the GEMV micro-kernel.
+    /// the packed page runs (K resident transposed per page, V row-major —
+    /// no code is extracted or re-inserted) — the same codes a full prefill
+    /// quantizes. Scores are computed per K page (each page is a complete
+    /// output-column slab, so concatenation is the flat result bit for bit);
+    /// context runs [`gemm_segmented`] over the V page run, one ascending-k
+    /// accumulation chain per element across pages — bit-identical to the
+    /// old flat streams. The adopted page runs are built once per KV head
+    /// and shared by the query heads of the group; decode rows are M=1, so
+    /// every GEMM here takes the GEMV micro-kernel.
+    ///
+    /// Fails with [`KvAllocError`] if a page allocation (fresh page or CoW
+    /// tail copy on a forked cache) hits the pool budget; appends already
+    /// made stay uncommitted for the caller to truncate away.
     #[allow(clippy::too_many_arguments)]
     fn attention_cached(
         &self,
@@ -372,7 +391,7 @@ impl NativeModel {
         lp: &LayerPanels,
         kv: &mut KvCache,
         li: usize,
-    ) -> Vec<f32> {
+    ) -> Result<Vec<f32>, KvAllocError> {
         let d = self.spec.d_model;
         let hd = self.spec.head_dim();
         let heads = self.spec.heads;
@@ -385,31 +404,45 @@ impl NativeModel {
         let qkv_cols = d + 2 * kv_dim;
         for r in 0..rows {
             let row = &qkv[r * qkv_cols..(r + 1) * qkv_cols];
-            kv.append_token(li, &row[d..d + kv_dim], &row[d + kv_dim..]);
+            kv.append_token(li, &row[d..d + kv_dim], &row[d + kv_dim..])?;
         }
         let cur = pos0 + rows;
 
         let mut ctx = vec![0f32; rows * d];
         let scale = 1.0 / (hd as f32).sqrt();
-        // One zero-repack adoption of K^T and V per KV head, shared across
-        // the group's query heads (the group mapping is monotone, so a
-        // one-slot cache suffices). Results are head-independent — reuse
-        // changes nothing bit-wise.
-        let mut group_kv: Option<(usize, PackedMatrix, PackedMatrix)> = None;
+        // One zero-repack adoption of the K^T and V page runs per KV head,
+        // shared across the group's query heads (the group mapping is
+        // monotone, so a one-slot cache suffices). Results are
+        // head-independent — reuse changes nothing bit-wise.
+        let mut group_kv: Option<(usize, Vec<PackedMatrix>, Vec<PackedMatrix>)> = None;
         for h in 0..heads {
             let kvh = h * kv_heads / heads;
             if group_kv.as_ref().map(|(c, _, _)| *c) != Some(kvh) {
-                group_kv = Some((kvh, kv.k_t_matrix(li, kvh, cur), kv.v_matrix(li, kvh, cur)));
+                group_kv = Some((kvh, kv.k_t_pages(li, kvh, cur), kv.v_pages(li, kvh, cur)));
             }
-            let (_, kp, vp) = group_kv.as_ref().unwrap();
+            let (_, k_pages, v_pages) = group_kv.as_ref().unwrap();
             let mut q_h = vec![0f32; rows * hd];
             for r in 0..rows {
                 q_h[r * hd..(r + 1) * hd]
                     .copy_from_slice(&qkv[r * qkv_cols + h * hd..r * qkv_cols + (h + 1) * hd]);
             }
-            // Scores against every cached position: (a, a).
+            // Scores against every cached position: (a, a), one GEMM per K
+            // page. The split is on the *output* axis — every element's
+            // accumulation chain is complete inside its page GEMM, so the
+            // assembled [rows, cur] matrix equals the flat GEMM's bitwise.
             let qp = PackedMatrix::from_f32(&q_h, rows, hd, act);
-            let mut scores = gemm(&qp, kp, &self.gemm_cfg); // [rows, cur]
+            let mut scores = vec![0f32; rows * cur];
+            let mut t0 = 0usize;
+            for kp in k_pages {
+                let pt = kp.cols();
+                let part = gemm(&qp, kp, &self.gemm_cfg); // [rows, pt]
+                for r in 0..rows {
+                    scores[r * cur + t0..r * cur + t0 + pt]
+                        .copy_from_slice(&part[r * pt..(r + 1) * pt]);
+                }
+                t0 += pt;
+            }
+            debug_assert_eq!(t0, cur);
             for s in scores.iter_mut() {
                 *s *= scale;
             }
@@ -422,16 +455,18 @@ impl NativeModel {
                 }
             }
             softmax_rows(&mut scores, cur);
-            // Context: probabilities x cached V at (a, a).
+            // Context: probabilities x cached V at (a, a). The split is on
+            // the *accumulation* axis, so the segmented kernel carries one
+            // accumulator across the page run in ascending-k order.
             let pp = PackedMatrix::from_f32(&scores, rows, cur, act);
-            let ctx_h = gemm(&pp, vp, &self.gemm_cfg); // [rows, hd]
+            let ctx_h = gemm_segmented(&pp, v_pages); // [rows, hd]
             for r in 0..rows {
                 ctx[r * d + h * hd..r * d + (h + 1) * hd]
                     .copy_from_slice(&ctx_h[r * hd..(r + 1) * hd]);
             }
         }
         let cp = PackedMatrix::from_f32(&ctx, rows, d, act);
-        gemm_w(&cp, &l.wo, lp.wo.as_ref(), &self.gemm_cfg)
+        Ok(gemm_w(&cp, &l.wo, lp.wo.as_ref(), &self.gemm_cfg))
     }
 
     /// FFN: classic GELU two-GEMM or SwiGLU three-GEMM, all at (w, a).
@@ -514,14 +549,85 @@ fn silu(x: f32) -> f32 {
 }
 
 /// One live token-stream session: the model it is bound to, the precision
-/// policy it was prefilled at (decode steps must match by digest), and its
-/// KV cache.
+/// policy it was prefilled at (decode steps must match by digest), its KV
+/// cache, and the full token history it was fed (prefill + every decode
+/// row). The history is the preemption ledger: a session whose KV was
+/// dropped under memory pressure re-prefills it on the next decode step,
+/// bit-identically (decode ≡ re-running the full prefill).
 #[derive(Debug)]
 struct Session {
     model: String,
     policy: Arc<PrecisionPolicy>,
     kv: KvCache,
+    /// Every input row served into this session, d_model-major
+    /// (`history.len() == kv.len() * d_model` when the KV is resident).
+    history: Vec<f32>,
     last_used: u64,
+}
+
+/// A cached prefilled prompt: identical (model, policy, input) prefills
+/// fork this entry's KV by refcount (copy-on-write prefix sharing) instead
+/// of recomputing. `key` is a fast-reject hash; a hit requires full input
+/// equality.
+#[derive(Debug)]
+struct PromptEntry {
+    key: u64,
+    model: String,
+    policy_digest: u64,
+    input: Vec<f32>,
+    kv: KvCache,
+    outputs: Vec<f32>,
+    last_used: u64,
+}
+
+/// FNV-1a over the input rows' bit patterns — the prompt cache's
+/// fast-reject key (collisions are resolved by full input comparison).
+fn prompt_key(input: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in input {
+        h ^= v.to_bits() as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Free pages under allocation failure, cheapest casualty first: drop the
+/// stalest cached prompt (pure reuse — nothing is lost), else preempt the
+/// coldest session holding KV (its token history stays; the next decode
+/// step re-prefills bit-identically). `protect` is the session being
+/// served — it is never its own victim. Returns false when there is
+/// nothing left to reclaim.
+fn reclaim_memory(
+    sessions: &mut HashMap<u64, Session>,
+    prompts: &mut Vec<PromptEntry>,
+    pool: &Arc<KvPagePool>,
+    protect: u64,
+) -> bool {
+    if !prompts.is_empty() {
+        let idx = prompts
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, p)| p.last_used)
+            .map(|(i, _)| i)
+            .expect("non-empty prompt cache");
+        prompts.remove(idx);
+        return true;
+    }
+    let victim = sessions
+        .iter()
+        .filter(|(&id, s)| id != protect && s.kv.len() > 0)
+        .min_by_key(|(&id, s)| (s.last_used, id))
+        .map(|(&id, _)| id);
+    match victim {
+        Some(id) => {
+            let s = sessions.get_mut(&id).expect("victim session exists");
+            s.kv.truncate(0);
+            obs::count(Counter::SessionPreempt);
+            pool.note_preemption();
+            true
+        }
+        None => false,
+    }
 }
 
 /// The native execution backend: implements the coordinator's [`Executor`]
@@ -538,6 +644,12 @@ pub struct NativeExecutor {
     session_cap: usize,
     /// Monotonic request tick for session LRU.
     clock: u64,
+    /// The budgeted page pool every session's KV allocates from
+    /// (unbounded unless `--kv-budget-mb` installed one).
+    kv_pool: Arc<KvPagePool>,
+    /// Prompt-prefix cache for copy-on-write forking (a `Vec`, scanned
+    /// linearly — deterministic iteration order, tiny capacity).
+    prompts: Vec<PromptEntry>,
 }
 
 impl Default for NativeExecutor {
@@ -548,6 +660,8 @@ impl Default for NativeExecutor {
             sessions: HashMap::new(),
             session_cap: DEFAULT_SESSION_CAPACITY,
             clock: 0,
+            kv_pool: KvPagePool::unbounded(),
+            prompts: Vec::new(),
         }
     }
 }
@@ -581,13 +695,28 @@ impl NativeExecutor {
         self
     }
 
+    /// Allocate every session's KV from `pool` (a `--kv-budget-mb` bound).
+    /// Must be set before the first session prefill; existing sessions keep
+    /// the pool they were born with.
+    pub fn with_kv_pool(mut self, pool: Arc<KvPagePool>) -> Self {
+        self.kv_pool = pool;
+        self
+    }
+
+    /// The page pool sessions allocate from (budget, in-use, preemption
+    /// accounting live here — the server's exporters read it).
+    pub fn kv_pool(&self) -> &Arc<KvPagePool> {
+        &self.kv_pool
+    }
+
     /// Register (or replace) a model under `spec.name`. Replacement evicts
-    /// the old model's cached packed weights — and any live sessions bound
-    /// to it — so they can't serve stale.
+    /// the old model's cached packed weights — and any live sessions and
+    /// cached prompts bound to it — so they can't serve stale.
     pub fn register(&mut self, spec: ModelSpec, seed: u64) {
         let model = NativeModel::synthesize(spec, seed);
         self.cache.evict_model(model.spec.name);
         self.sessions.retain(|_, s| s.model != model.spec.name);
+        self.prompts.retain(|p| p.model != model.spec.name);
         self.models.insert(model.spec.name.to_string(), model);
     }
 
@@ -647,6 +776,8 @@ impl Executor for NativeExecutor {
         let d = model.spec.d_model;
         let cache = &self.cache;
         let sessions = &mut self.sessions;
+        let prompts = &mut self.prompts;
+        let pool = &self.kv_pool;
         let t0 = Instant::now();
         let mut outputs = Vec::with_capacity(batch.requests.len());
         // Shared block-shape validation for the two prefill-style arms.
@@ -675,20 +806,85 @@ impl Executor for NativeExecutor {
                     validate_block(req).map(|()| model.forward(&req.input, &batch.policy, cache))
                 }
                 // Session prefill: causal forward populating a fresh KV
-                // cache (re-prefilling an id restarts the session).
-                (sid, Phase::Prefill) => validate_block(req).map(|()| {
-                    let mut kv = KvCache::new(&model.spec, batch.policy.activation());
-                    let out = model.forward_prefill(&req.input, &batch.policy, cache, &mut kv);
-                    sessions.insert(
-                        sid,
-                        Session {
-                            model: batch.model.clone(),
-                            policy: Arc::clone(&batch.policy),
-                            kv,
-                            last_used: clock,
-                        },
-                    );
-                    out
+                // cache (re-prefilling an id restarts the session). An
+                // identical (model, policy, input) prompt already prefilled
+                // forks the cached KV by refcount — copy-on-write prefix
+                // sharing — instead of recomputing (bit-identical: the fork
+                // holds exactly the codes prefill quantizes). On allocation
+                // failure the executor reclaims (drop stalest cached
+                // prompt, else preempt coldest session) and retries.
+                (sid, Phase::Prefill) => validate_block(req).and_then(|()| {
+                    let key = prompt_key(&req.input);
+                    let digest = batch.policy.digest();
+                    if let Some(p) = prompts.iter_mut().find(|p| {
+                        p.key == key
+                            && p.policy_digest == digest
+                            && p.model == batch.model
+                            && p.input == req.input
+                    }) {
+                        p.last_used = clock;
+                        let kv = p.kv.fork();
+                        let out = p.outputs.clone();
+                        sessions.insert(
+                            sid,
+                            Session {
+                                model: batch.model.clone(),
+                                policy: Arc::clone(&batch.policy),
+                                kv,
+                                history: req.input.clone(),
+                                last_used: clock,
+                            },
+                        );
+                        return Ok(out);
+                    }
+                    loop {
+                        let mut kv =
+                            KvCache::pooled(&model.spec, batch.policy.activation(), pool);
+                        match model.forward_prefill(&req.input, &batch.policy, cache, &mut kv) {
+                            Ok(out) => {
+                                prompts.push(PromptEntry {
+                                    key,
+                                    model: batch.model.clone(),
+                                    policy_digest: digest,
+                                    input: req.input.clone(),
+                                    kv: kv.fork(),
+                                    outputs: out.clone(),
+                                    last_used: clock,
+                                });
+                                while prompts.len() > PROMPT_CACHE_CAPACITY {
+                                    let idx = prompts
+                                        .iter()
+                                        .enumerate()
+                                        .min_by_key(|(_, p)| p.last_used)
+                                        .map(|(i, _)| i)
+                                        .expect("over-capacity prompt cache");
+                                    prompts.remove(idx);
+                                }
+                                sessions.insert(
+                                    sid,
+                                    Session {
+                                        model: batch.model.clone(),
+                                        policy: Arc::clone(&batch.policy),
+                                        kv,
+                                        history: req.input.clone(),
+                                        last_used: clock,
+                                    },
+                                );
+                                break Ok(out);
+                            }
+                            Err(KvAllocError) => {
+                                drop(kv); // return the partial pages first
+                                if !reclaim_memory(sessions, prompts, pool, sid) {
+                                    pool.note_hard_failure();
+                                    break Err(format!(
+                                        "request {}: kv page pool exhausted (prefill of \
+                                         session {sid}; nothing left to preempt)",
+                                        req.id
+                                    ));
+                                }
+                            }
+                        }
+                    }
                 }),
                 // Session end: free the KV cache. Idempotent — ending an
                 // unknown (already-evicted) session succeeds.
@@ -697,31 +893,70 @@ impl Executor for NativeExecutor {
                     Ok(Vec::new())
                 }
                 // Decode step: one token row against the session's cache.
-                (sid, Phase::Decode) => match sessions.get_mut(&sid) {
-                    None => Err(format!(
-                        "request {}: unknown session {sid} (prefill first, or it was evicted)",
-                        req.id
-                    )),
-                    Some(s) if s.model != batch.model => Err(format!(
-                        "request {}: session {sid} belongs to model '{}', not '{}'",
-                        req.id, s.model, batch.model
-                    )),
-                    Some(s) if s.policy.digest() != batch.policy.digest() => Err(format!(
-                        "request {}: session {sid} runs at {}, request asks {}",
-                        req.id,
-                        s.policy.label(),
-                        batch.policy.label()
-                    )),
-                    Some(_) if req.input.len() != d => Err(format!(
-                        "request {}: decode step must be one token row ({d} values), got {}",
-                        req.id,
-                        req.input.len()
-                    )),
-                    Some(s) => {
+                // A preempted session (KV dropped under memory pressure)
+                // first re-prefills its recorded history — bit-identical to
+                // the uninterrupted stream, because decode ≡ re-running the
+                // full prefill. Allocation failures reclaim and retry like
+                // the prefill arm.
+                (sid, Phase::Decode) => {
+                    let validated = match sessions.get(&sid) {
+                        None => Err(format!(
+                            "request {}: unknown session {sid} (prefill first, or it was \
+                             evicted)",
+                            req.id
+                        )),
+                        Some(s) if s.model != batch.model => Err(format!(
+                            "request {}: session {sid} belongs to model '{}', not '{}'",
+                            req.id, s.model, batch.model
+                        )),
+                        Some(s) if s.policy.digest() != batch.policy.digest() => Err(format!(
+                            "request {}: session {sid} runs at {}, request asks {}",
+                            req.id,
+                            s.policy.label(),
+                            batch.policy.label()
+                        )),
+                        Some(_) if req.input.len() != d => Err(format!(
+                            "request {}: decode step must be one token row ({d} values), got {}",
+                            req.id,
+                            req.input.len()
+                        )),
+                        Some(_) => Ok(()),
+                    };
+                    validated.and_then(|()| loop {
+                        let s = sessions.get_mut(&sid).expect("validated session");
                         s.last_used = clock;
-                        Ok(model.forward_decode(&req.input, &batch.policy, cache, &mut s.kv))
-                    }
-                },
+                        let attempt = (|| -> Result<Vec<f32>, KvAllocError> {
+                            if s.kv.len() * d < s.history.len() {
+                                // Restore a preempted session: re-prefill the
+                                // missing history suffix (hidden states are
+                                // discarded — only the KV codes matter).
+                                let missing = s.history[s.kv.len() * d..].to_vec();
+                                model.forward_prefill(&missing, &batch.policy, cache, &mut s.kv)?;
+                            }
+                            model.forward_decode(&req.input, &batch.policy, cache, &mut s.kv)
+                        })();
+                        match attempt {
+                            Ok(out) => {
+                                s.history.extend_from_slice(&req.input);
+                                break Ok(out);
+                            }
+                            Err(KvAllocError) => {
+                                // Clear uncommitted partial appends (keep any
+                                // fully committed restore progress).
+                                let committed = s.kv.len();
+                                s.kv.truncate(committed);
+                                if !reclaim_memory(sessions, prompts, pool, sid) {
+                                    pool.note_hard_failure();
+                                    break Err(format!(
+                                        "request {}: kv page pool exhausted (decode of \
+                                         session {sid}; nothing left to preempt)",
+                                        req.id
+                                    ));
+                                }
+                            }
+                        }
+                    })
+                }
             };
             outputs.push(out);
         }
@@ -740,16 +975,28 @@ impl Executor for NativeExecutor {
     /// Roll a session's KV cache back to `tokens` committed tokens — the
     /// server calls this before retrying a failed decode step so the
     /// re-executed attempt appends onto exactly the pre-failure stream
-    /// (bit-identical to a first attempt; see `KvCache::truncate`). A
-    /// session the executor no longer holds, or one already at (or below)
-    /// the target, is left untouched.
+    /// (bit-identical to a first attempt; see `KvCache::truncate`). The
+    /// recorded token history rolls back in lockstep, so a session that is
+    /// *also* preempted later re-prefills exactly the rolled-back prefix —
+    /// and a preempted session (KV already empty) still truncates its
+    /// history. A session the executor no longer holds, or one already at
+    /// (or below) the target, is left untouched.
     fn rollback_session(&mut self, session: u64, tokens: usize) -> bool {
         match self.sessions.get_mut(&session) {
-            Some(s) if s.kv.len() > tokens => {
-                s.kv.truncate(tokens);
-                true
+            Some(s) => {
+                let d = self.models.get(&s.model).map(|m| m.spec.d_model).unwrap_or(0);
+                let mut acted = false;
+                if s.kv.len() > tokens {
+                    s.kv.truncate(tokens);
+                    acted = true;
+                }
+                if d > 0 && s.history.len() > tokens * d {
+                    s.history.truncate(tokens * d);
+                    acted = true;
+                }
+                acted
             }
-            _ => false,
+            None => false,
         }
     }
 
@@ -1082,5 +1329,198 @@ mod tests {
         let d = spec.d_model;
         crate::coordinator::Request::new(id, spec.name, policy, input, vec![d])
             .with_session(session, phase)
+    }
+
+    /// Interleave two sessions (prefill + `steps` decode rows each) through
+    /// `ex`, asserting every request succeeds; returns all outputs in order.
+    fn drive_two_sessions(
+        ex: &mut NativeExecutor,
+        spec: &ModelSpec,
+        in_a: &[f32],
+        in_b: &[f32],
+        steps: usize,
+    ) -> Vec<Vec<f32>> {
+        let pair = PrecisionPair::of_bits(6, 6);
+        let d = spec.d_model;
+        let mut outs = Vec::new();
+        let mut run = |req: crate::coordinator::Request| {
+            let b = Batch {
+                model: spec.name.into(),
+                policy: pair.into_policy(),
+                requests: vec![req],
+            };
+            let mut res = ex.execute(&b).unwrap();
+            res.outputs.remove(0).expect("request must succeed")
+        };
+        outs.push(run(session_req(0, spec, pair, in_a.to_vec(), 1, Phase::Prefill)));
+        outs.push(run(session_req(1, spec, pair, in_b.to_vec(), 2, Phase::Prefill)));
+        for s in 0..steps {
+            let row_a = vec![0.05 * (s as f32 + 1.0); d];
+            let row_b = vec![-0.04 * (s as f32 + 1.0); d];
+            outs.push(run(session_req(10 + s as u64, spec, pair, row_a, 1, Phase::Decode)));
+            outs.push(run(session_req(20 + s as u64, spec, pair, row_b, 2, Phase::Decode)));
+        }
+        outs
+    }
+
+    /// The tentpole's end-to-end claim at executor scope: under a budget
+    /// that cannot hold two resident sessions, interleaved decode forces
+    /// preemptions, every step still succeeds, and every output is
+    /// bit-identical to the unconstrained run (preempted sessions
+    /// re-prefill their history ledger — decode ≡ full prefill).
+    #[test]
+    fn preemption_under_budget_is_bit_identical() {
+        let spec = ModelSpec::tiny();
+        let d = spec.d_model;
+        let in_a: Vec<f32> = (0..2 * d).map(|i| (i % 5) as f32 * 0.1).collect();
+        let in_b: Vec<f32> = (0..2 * d).map(|i| (i % 7) as f32 * 0.1 - 0.2).collect();
+
+        let mut free = NativeExecutor::new().with_model(spec.clone(), 17);
+        let baseline = drive_two_sessions(&mut free, &spec, &in_a, &in_b, 3);
+        assert_eq!(free.kv_pool().preemptions(), 0);
+
+        // One session resident = one page per stream (5 tokens < one page).
+        // 1.5x that budget admits one session but never two.
+        let bits = PrecisionPair::of_bits(6, 6).into_policy().activation().bits() as usize;
+        let page_bytes = (spec.head_dim() * crate::kernels::PAGE_TOKENS * bits).div_ceil(64) * 8;
+        let per_session = spec.layers * spec.kv_heads * 2 * page_bytes;
+        let pool = crate::kernels::KvPagePool::new(per_session + per_session / 2);
+        let mut tight = NativeExecutor::new()
+            .with_kv_pool(Arc::clone(&pool))
+            .with_model(spec.clone(), 17);
+        let constrained = drive_two_sessions(&mut tight, &spec, &in_a, &in_b, 3);
+
+        assert_eq!(constrained, baseline, "preemption must be bit-transparent");
+        assert!(pool.preemptions() > 0, "the budget must actually force preemptions");
+        assert_eq!(pool.hard_failures(), 0, "preemption always found a victim");
+        assert!(pool.bytes_in_use() <= pool.budget_bytes(), "budget held throughout");
+    }
+
+    /// Identical (model, policy, input) prefills fork the cached prompt's
+    /// pages by refcount — no new pages — and the first divergent decode
+    /// copies exactly one tail page per stream (CoW), leaving every other
+    /// holder untouched and every output bit-identical to cold compute.
+    #[test]
+    fn identical_prefills_fork_shared_pages_cow() {
+        let spec = ModelSpec::tiny();
+        let d = spec.d_model;
+        let pair = PrecisionPair::of_bits(6, 6);
+        let input: Vec<f32> = (0..2 * d).map(|i| ((i % 9) as f32 - 4.0) * 0.05).collect();
+        let row = vec![0.07f32; d];
+        let streams = spec.layers * spec.kv_heads * 2;
+
+        // Cold reference: its own executor, no sharing possible.
+        let mut solo = NativeExecutor::new().with_model(spec.clone(), 23);
+        let ref_out = drive_two_sessions(&mut solo, &spec, &input, &input, 0);
+        let b = Batch {
+            model: spec.name.into(),
+            policy: pair.into_policy(),
+            requests: vec![session_req(10, &spec, pair, row.clone(), 1, Phase::Decode)],
+        };
+        let ref_dec = solo.execute(&b).unwrap().outputs.remove(0).unwrap();
+
+        let mut ex = NativeExecutor::new().with_model(spec.clone(), 23);
+        let pool = Arc::clone(ex.kv_pool());
+        let rec = crate::obs::Recorder::enabled();
+        let (outs, dec1, dec2) = obs::with_current(&rec, || {
+            let outs = drive_two_sessions(&mut ex, &spec, &input, &input, 0);
+            let pages_after_two = pool.pages_in_use();
+            // Session 2's prefill forked: no new pages were allocated.
+            assert_eq!(pages_after_two, streams, "second prefill shares every page");
+            assert_eq!(rec.counter(Counter::CowCopy), 0, "no divergence yet");
+            let mut dec = |id: u64, sid: u64| {
+                let b = Batch {
+                    model: spec.name.into(),
+                    policy: pair.into_policy(),
+                    requests: vec![session_req(id, &spec, pair, row.clone(), sid, Phase::Decode)],
+                };
+                ex.execute(&b).unwrap().outputs.remove(0).unwrap()
+            };
+            let dec1 = dec(10, 1);
+            assert_eq!(
+                rec.counter(Counter::CowCopy),
+                streams as u64,
+                "first divergent append copies exactly one tail page per stream"
+            );
+            let dec2 = dec(11, 2);
+            (outs, dec1, dec2)
+        });
+        assert_eq!(outs[0], ref_out[0]);
+        assert_eq!(outs[1], ref_out[1], "forked prefill returns the cached outputs");
+        assert_eq!(dec1, ref_dec, "decode over forked pages is bit-identical to cold");
+        assert_eq!(dec2, ref_dec, "both forks diverge identically");
+        assert!(rec.counter(Counter::PageShared) >= 2 * streams as u64, "fork counted sharing");
+    }
+
+    /// An armed `oom:` fault (deterministic allocation failure) is healed
+    /// in place by the reclaim-and-retry loop — the request succeeds with
+    /// bit-identical output.
+    #[test]
+    fn armed_oom_fault_is_healed_transparently() {
+        let spec = ModelSpec::tiny();
+        let d = spec.d_model;
+        let pair = PrecisionPair::of_bits(6, 6);
+        let input = vec![0.15f32; 2 * d];
+        let row = vec![0.02f32; d];
+        let dec_req = |id| session_req(id, &spec, pair, row.clone(), 1, Phase::Decode);
+        let batch = |req| Batch {
+            model: spec.name.into(),
+            policy: pair.into_policy(),
+            requests: vec![req],
+        };
+
+        let mut twin = NativeExecutor::new().with_model(spec.clone(), 29);
+        let pre = session_req(0, &spec, pair, input.clone(), 1, Phase::Prefill);
+        twin.execute(&batch(pre)).unwrap().outputs[0].as_ref().unwrap();
+        let want = twin.execute(&batch(dec_req(1))).unwrap().outputs.remove(0).unwrap();
+
+        let mut ex = NativeExecutor::new().with_model(spec.clone(), 29);
+        let pre = session_req(0, &spec, pair, input, 1, Phase::Prefill);
+        ex.execute(&batch(pre)).unwrap().outputs[0].as_ref().unwrap();
+        ex.kv_pool().arm_oom(1);
+        let got = ex.execute(&batch(dec_req(1))).unwrap().outputs.remove(0).unwrap();
+        assert_eq!(got, want, "an injected allocation failure heals bit-identically");
+        assert_eq!(ex.kv_pool().hard_failures(), 0);
+    }
+
+    /// `rollback_session` rolls the token-history ledger back in lockstep
+    /// with the KV, so server-driven retries replay bit-identically.
+    #[test]
+    fn rollback_rolls_history_with_kv() {
+        let spec = ModelSpec::tiny();
+        let d = spec.d_model;
+        let pair = PrecisionPair::of_bits(6, 6);
+        let mut ex = NativeExecutor::new().with_model(spec.clone(), 31);
+        let batch = |req| Batch {
+            model: spec.name.into(),
+            policy: pair.into_policy(),
+            requests: vec![req],
+        };
+        let pre = session_req(0, &spec, pair, vec![0.3; 3 * d], 5, Phase::Prefill);
+        assert!(ex.execute(&batch(pre)).unwrap().outputs[0].is_ok());
+        let r1 = vec![0.11f32; d];
+        let r2 = vec![-0.06f32; d];
+        let out1 = {
+            let req = session_req(1, &spec, pair, r1.clone(), 5, Phase::Decode);
+            ex.execute(&batch(req)).unwrap().outputs.remove(0).unwrap()
+        };
+        let out2 = {
+            let req = session_req(2, &spec, pair, r2.clone(), 5, Phase::Decode);
+            ex.execute(&batch(req)).unwrap().outputs.remove(0).unwrap()
+        };
+        // Roll back past both decode tokens, then replay them: identical.
+        assert!(ex.rollback_session(5, 3), "rollback acts on KV and history");
+        assert!(!ex.rollback_session(5, 3), "already at target");
+        let again1 = {
+            let req = session_req(3, &spec, pair, r1, 5, Phase::Decode);
+            ex.execute(&batch(req)).unwrap().outputs.remove(0).unwrap()
+        };
+        let again2 = {
+            let req = session_req(4, &spec, pair, r2, 5, Phase::Decode);
+            ex.execute(&batch(req)).unwrap().outputs.remove(0).unwrap()
+        };
+        assert_eq!(again1, out1, "replayed step 1 is bit-identical");
+        assert_eq!(again2, out2, "replayed step 2 is bit-identical");
+        assert!(!ex.rollback_session(99, 0), "unknown session is untouched");
     }
 }

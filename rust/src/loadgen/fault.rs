@@ -38,6 +38,10 @@ enum Fate {
     /// Sleep `delay_s` once for the batch (and mark it `faulted` so the
     /// drift auditor skips the perturbed measurement).
     Delay,
+    /// Arm one deterministic KV-page allocation failure on the attached
+    /// pool before the inner executor runs — the executor must heal it
+    /// (preempt + re-prefill) bit-identically. Inert without a pool.
+    Oom,
 }
 
 /// Seeded fault rates. All rates are per (request, attempt) probabilities
@@ -55,22 +59,33 @@ pub struct FaultPlan {
     pub delay: f64,
     /// Injected latency-spike duration, seconds.
     pub delay_s: f64,
+    /// P(arm one KV-page allocation failure before the batch executes) —
+    /// requires a pool attached via [`FaultyExecutor::with_kv_pool`] to
+    /// have any effect.
+    pub oom: f64,
 }
 
 impl FaultPlan {
     /// Parse a `--faults` spec: comma-separated `panic:R`, `error:R`,
-    /// `delay:R[:SECONDS]` (spike duration defaults to 1 ms), and `seed:N`
-    /// (defaults to `default_seed`, normally the scenario seed). Example:
-    /// `error:0.25,delay:0.1:0.002`.
+    /// `delay:R[:SECONDS]` (spike duration defaults to 1 ms), `oom:R`
+    /// (armed KV allocation failures; needs `--kv-budget-mb`'s pool), and
+    /// `seed:N` (defaults to `default_seed`, normally the scenario seed).
+    /// Example: `error:0.25,delay:0.1:0.002,oom:0.05`.
     pub fn parse(spec: &str, default_seed: u64) -> Result<FaultPlan, String> {
-        let mut plan =
-            FaultPlan { seed: default_seed, panic: 0.0, error: 0.0, delay: 0.0, delay_s: 1e-3 };
+        let mut plan = FaultPlan {
+            seed: default_seed,
+            panic: 0.0,
+            error: 0.0,
+            delay: 0.0,
+            delay_s: 1e-3,
+            oom: 0.0,
+        };
         for item in spec.split(',').filter(|s| !s.is_empty()) {
             let bad = || format!("bad --faults item '{item}' (see --help)");
             let mut parts = item.split(':');
             let kind = parts.next().unwrap_or("");
             match kind {
-                "panic" | "error" | "delay" => {
+                "panic" | "error" | "delay" | "oom" => {
                     let rate: f64 =
                         parts.next().ok_or_else(&bad)?.parse().map_err(|_| bad())?;
                     if !(0.0..=1.0).contains(&rate) {
@@ -79,6 +94,7 @@ impl FaultPlan {
                     match kind {
                         "panic" => plan.panic = rate,
                         "error" => plan.error = rate,
+                        "oom" => plan.oom = rate,
                         _ => {
                             plan.delay = rate;
                             if let Some(s) = parts.next() {
@@ -99,7 +115,7 @@ impl FaultPlan {
                 return Err(bad());
             }
         }
-        if plan.panic + plan.error + plan.delay > 1.0 {
+        if plan.panic + plan.error + plan.delay + plan.oom > 1.0 {
             return Err("fault rates must sum to at most 1.0".into());
         }
         Ok(plan)
@@ -108,14 +124,14 @@ impl FaultPlan {
     /// Canonical spec echo (itself parseable) for reports and logs.
     pub fn label(&self) -> String {
         format!(
-            "panic:{},error:{},delay:{}:{},seed:{}",
-            self.panic, self.error, self.delay, self.delay_s, self.seed
+            "panic:{},error:{},delay:{}:{},oom:{},seed:{}",
+            self.panic, self.error, self.delay, self.delay_s, self.oom, self.seed
         )
     }
 
     /// The fate of one (request id, attempt): a single tempered draw keyed
     /// on `(seed, id, attempt)`, partitioned cumulatively panic → error →
-    /// delay → none. Id 0 (fire-and-forget control) is always exempt.
+    /// delay → oom → none. Id 0 (fire-and-forget control) is always exempt.
     fn decide(&self, id: u64, attempt: u32) -> Fate {
         if id == 0 {
             return Fate::None;
@@ -130,6 +146,8 @@ impl FaultPlan {
             Fate::Error
         } else if u < self.panic + self.error + self.delay {
             Fate::Delay
+        } else if u < self.panic + self.error + self.delay + self.oom {
+            Fate::Oom
         } else {
             Fate::None
         }
@@ -143,11 +161,21 @@ impl FaultPlan {
 pub struct FaultyExecutor {
     inner: Box<dyn Executor>,
     plan: FaultPlan,
+    /// The KV page pool `oom:` fates arm failures on (the same pool the
+    /// wrapped executor allocates from). `None` leaves `oom:` inert.
+    kv_pool: Option<std::sync::Arc<crate::kernels::KvPagePool>>,
 }
 
 impl FaultyExecutor {
     pub fn new(inner: Box<dyn Executor>, plan: FaultPlan) -> Self {
-        FaultyExecutor { inner, plan }
+        FaultyExecutor { inner, plan, kv_pool: None }
+    }
+
+    /// Attach the pool `oom:` fates arm deterministic allocation failures
+    /// on — pass the exact pool the wrapped executor allocates from.
+    pub fn with_kv_pool(mut self, pool: std::sync::Arc<crate::kernels::KvPagePool>) -> Self {
+        self.kv_pool = Some(pool);
+        self
     }
 }
 
@@ -166,7 +194,13 @@ impl Executor for FaultyExecutor {
                 }
             })
             .collect();
-        for _ in fates.iter().filter(|f| **f != Fate::None) {
+        // Inert fates (Oom with no pool attached) are not counted as
+        // injected — the counter must track faults that actually fired.
+        let armable = self.kv_pool.is_some();
+        for _ in fates
+            .iter()
+            .filter(|f| **f != Fate::None && (**f != Fate::Oom || armable))
+        {
             obs::count(Counter::FaultInjected);
         }
         let mut faulted = false;
@@ -175,6 +209,20 @@ impl Executor for FaultyExecutor {
             // a stalled device stalls everything co-scheduled on it.
             std::thread::sleep(Duration::from_secs_f64(self.plan.delay_s));
             faulted = true;
+        }
+        // Oom fates arm *before* the inner call so the executor's very next
+        // page allocation fails deterministically — it must heal by
+        // preempting and re-prefilling, and the batch still completes. The
+        // healing work perturbs the measured wall time, so the batch is
+        // marked faulted for the drift auditor. Armed failures persist until
+        // an allocation consumes them (a batch that allocates nothing hands
+        // its injection to the next one that does).
+        if let Some(pool) = &self.kv_pool {
+            let oom_n = fates.iter().filter(|f| **f == Fate::Oom).count() as u64;
+            if oom_n > 0 {
+                pool.arm_oom(oom_n);
+                faulted = true;
+            }
         }
         // The inner executor runs before the panic/error fires (see the
         // module docs): a faulted decode batch must leave its KV advanced
@@ -211,7 +259,7 @@ mod tests {
     use crate::workload::PrecisionPair;
 
     fn plan(panic: f64, error: f64, delay: f64) -> FaultPlan {
-        FaultPlan { seed: 7, panic, error, delay, delay_s: 0.0 }
+        FaultPlan { seed: 7, panic, error, delay, delay_s: 0.0, oom: 0.0 }
     }
 
     fn batch(ids: &[u64]) -> Batch {
@@ -240,6 +288,12 @@ mod tests {
         assert!(FaultPlan::parse("panic:1.5", 0).is_err());
         assert!(FaultPlan::parse("panic:0.6,error:0.6", 0).is_err());
         assert!(FaultPlan::parse("panic:0.1:extra", 0).is_err());
+        // oom rates parse, round-trip through the label, and join the
+        // sum-to-one budget.
+        let o = FaultPlan::parse("oom:0.25,seed:3", 0).unwrap();
+        assert_eq!((o.oom, o.seed), (0.25, 3));
+        assert_eq!(FaultPlan::parse(&o.label(), 0).unwrap().oom, 0.25);
+        assert!(FaultPlan::parse("oom:0.6,error:0.6", 0).is_err());
     }
 
     #[test]
@@ -277,6 +331,35 @@ mod tests {
         let res = ex.execute(&b).unwrap();
         assert!(res.outputs[0].is_ok());
         assert!(!res.faulted);
+    }
+
+    #[test]
+    fn oom_faults_arm_the_attached_pool_before_execution() {
+        use crate::kernels::KvPagePool;
+        let pool = KvPagePool::unbounded();
+        let seen = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let log = seen.clone();
+        let probe = pool.clone();
+        // The inner executor observes the pool state: an alloc during the
+        // faulted batch must fail (injection armed before the call), and
+        // one after the batch must succeed (consumed, not sticky).
+        let inner = FnExecutor(move |_b: &Batch| -> Result<f64, String> {
+            log.lock()
+                .unwrap()
+                .push(probe.alloc(crate::arith::Format::int(4), 8).is_err());
+            Ok(0.0)
+        });
+        let mut ex = FaultyExecutor::new(Box::new(inner), plan(0.0, 0.0, 0.0));
+        ex.plan.oom = 1.0;
+        // Without a pool, oom fates are inert: no arming, not faulted.
+        let res = ex.execute(&batch(&[1])).unwrap();
+        assert!(!res.faulted, "oom without a pool must be a no-op");
+        assert_eq!(seen.lock().unwrap().as_slice(), &[false]);
+        let mut ex = ex.with_kv_pool(pool.clone());
+        let res = ex.execute(&batch(&[2])).unwrap();
+        assert!(res.faulted, "armed oom perturbs the batch");
+        assert_eq!(seen.lock().unwrap().as_slice(), &[false, true]);
+        assert!(pool.alloc(crate::arith::Format::int(4), 8).is_ok(), "consumed, not sticky");
     }
 
     #[test]

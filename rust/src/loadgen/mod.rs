@@ -150,11 +150,13 @@ impl LoadReport {
     }
 
     /// Machine-readable report: schema `flexibit.loadgen.v3`. The
-    /// `metrics` member is the server's own `flexibit.metrics.v3` body
+    /// `metrics` member is the server's own `flexibit.metrics.v4` body
     /// (whose `robustness` object carries the retry/shed/deadline-miss
-    /// counts), so `serve --metrics-out` files and loadgen reports share
-    /// their shape. v3 echoes the scenario's named policies (with content
-    /// digests) and carries `policy_costs`.
+    /// counts plus the KV-pool memory-pressure fields), so
+    /// `serve --metrics-out` files and loadgen reports share their shape.
+    /// v3 echoes the scenario's named policies (with content digests) and
+    /// carries `policy_costs`; the scenario echo also carries
+    /// `shared_prefix` when prompt sharing is on.
     pub fn json(&self) -> String {
         let c = &self.counts;
         let mut out = String::from("{\"schema\":\"flexibit.loadgen.v3\",");
@@ -472,6 +474,7 @@ mod tests {
                 recorder: crate::obs::Recorder::disabled(),
                 drift: None,
                 resilience: Resilience::default(),
+                kv_pool: None,
             },
             Box::new(FnExecutor(|_b: &Batch| -> Result<f64, String> { Ok(0.0) })),
         )
@@ -488,6 +491,7 @@ mod tests {
                 PrecisionPair::of_bits(6, 6).into_policy(),
                 PrecisionPair::of_bits(8, 8).into_policy(),
             ],
+            shared_prefix: 0,
         }
     }
 
@@ -571,6 +575,7 @@ mod tests {
                 recorder: crate::obs::Recorder::disabled(),
                 drift: None,
                 resilience: Resilience::default(),
+                kv_pool: None,
             },
             Box::new(FnExecutor(|b: &Batch| -> Result<f64, String> {
                 if b.policy.head_pair().w.bits() == 6 {

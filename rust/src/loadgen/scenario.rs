@@ -127,6 +127,14 @@ pub struct Scenario {
     /// sample). Uniform pair-style entries are just
     /// `pair.into_policy()`; named mixed policies come from policy JSON.
     pub policies: Vec<Arc<PrecisionPolicy>>,
+    /// Prompt sharing (`--shared-prefix N`): sessions in consecutive groups
+    /// of `N` submit the group leader's exact prompt (same input seed, same
+    /// prefill length, same policy), so the executor's prompt cache forks
+    /// their KV from shared pages and the first divergent decode step
+    /// exercises copy-on-write. `0`/`1` = every session has a private
+    /// prompt. Applied as a post-pass over the schedule, so the RNG draw
+    /// order (and everything else a seed determines) is unchanged.
+    pub shared_prefix: u64,
 }
 
 impl Scenario {
@@ -135,7 +143,7 @@ impl Scenario {
         assert!(!self.policies.is_empty(), "a scenario needs at least one precision policy");
         let mut g = Lcg::new(self.seed);
         let mut active_s = 0.0f64; // Poisson time, before on/off gating
-        (0..self.sessions)
+        let mut plans = (0..self.sessions)
             .map(|i| {
                 let arrival_s = match self.arrival {
                     Arrival::Closed { .. } => 0.0,
@@ -163,7 +171,24 @@ impl Scenario {
                     input_seed: g.next_u64(),
                 }
             })
-            .collect()
+            .collect::<Vec<_>>();
+        // Prompt-sharing post-pass: alias each group onto its leader's
+        // prompt identity (seed, length, policy). Each session still owns
+        // its KV stream — its first decode append is a private write onto
+        // the shared tail page, which is exactly the fork-then-CoW shape
+        // the executor's prompt cache must absorb.
+        if self.shared_prefix > 1 {
+            let g = self.shared_prefix as usize;
+            for i in 0..plans.len() {
+                let lead = (i / g) * g;
+                if lead != i {
+                    plans[i].input_seed = plans[lead].input_seed;
+                    plans[i].prefill_rows = plans[lead].prefill_rows;
+                    plans[i].policy = Arc::clone(&plans[lead].policy);
+                }
+            }
+        }
+        plans
     }
 
     /// Scenario echo for reports (JSON object).
@@ -172,13 +197,14 @@ impl Scenario {
         let _ = write!(
             out,
             "\"seed\":{},\"sessions\":{},\"model\":{},\"arrival\":{},\
-             \"prefill_len\":{},\"decode_steps\":{},\"policies\":[",
+             \"prefill_len\":{},\"decode_steps\":{},\"shared_prefix\":{},\"policies\":[",
             self.seed,
             self.sessions,
             json_str(model),
             json_str(&self.arrival.label()),
             json_str(&self.prefill_len.label()),
             json_str(&self.decode_steps.label()),
+            self.shared_prefix,
         );
         for (i, p) in self.policies.iter().enumerate() {
             if i > 0 {
@@ -239,6 +265,7 @@ mod tests {
             prefill_len: Dist::Uniform(2, 8),
             decode_steps: Dist::Geom { mean: 3.0, cap: 10 },
             policies: policies(),
+            shared_prefix: 0,
         }
     }
 
@@ -314,6 +341,31 @@ mod tests {
             let phase = p.arrival_s % (on_s + off_s);
             assert!(phase < on_s + 1e-12, "arrival at {} lands in an off window", p.arrival_s);
         }
+    }
+
+    #[test]
+    fn shared_prefix_aliases_groups_onto_their_leader() {
+        let base = scenario(7, Arrival::Closed { concurrency: 4, think_s: 0.0 });
+        let shared = Scenario { shared_prefix: 4, ..base.clone() };
+        let (a, b) = (base.schedule(), shared.schedule());
+        assert_eq!(a.len(), b.len());
+        for (i, p) in b.iter().enumerate() {
+            let lead = &b[(i / 4) * 4];
+            assert_eq!(p.input_seed, lead.input_seed, "group shares the leader's prompt");
+            assert_eq!(p.prefill_rows, lead.prefill_rows);
+            assert_eq!(p.policy.digest(), lead.policy.digest());
+            // The post-pass only aliases prompt identity: sessions, arrivals,
+            // and decode lengths are untouched (the RNG draw order is the
+            // same with or without sharing).
+            assert_eq!(p.session, a[i].session);
+            assert_eq!(p.arrival_s, a[i].arrival_s);
+            assert_eq!(p.decode_steps, a[i].decode_steps);
+        }
+        // Group leaders keep their own draws, so distinct groups (almost
+        // surely) have distinct prompts.
+        assert_ne!(b[0].input_seed, b[4].input_seed);
+        assert_ne!(schedule_digest(&a), schedule_digest(&b), "sharing changes the receipt");
+        assert!(shared.json("tiny").contains("\"shared_prefix\":4"));
     }
 
     #[test]

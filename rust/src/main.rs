@@ -28,7 +28,7 @@ use flexibit::baselines::{
 use flexibit::coordinator::{
     BatchPolicy, Executor, Request, Resilience, Server, ServerConfig, StreamDriver,
 };
-use flexibit::kernels::{search_policy, NativeExecutor, NativeModel, SearchConfig};
+use flexibit::kernels::{search_policy, KvPagePool, NativeExecutor, NativeModel, SearchConfig};
 use flexibit::loadgen::{self, Arrival, Dist, FaultPlan, FaultyExecutor, Scenario};
 use flexibit::obs::{self, DriftBound, Recorder, DEFAULT_EVENT_CAPACITY};
 use flexibit::pe::{Pe, PeConfig};
@@ -55,10 +55,15 @@ fn usage() -> ! {
                  [--trace-sample N]   # record 1-in-N per-GEMM kernel spans\n\
                                       # (default 1 = all; counters stay exact)\n\
                  [--metrics-out PATH] # write the final metrics report JSON\n\
-                                      # (schema flexibit.metrics.v3) on shutdown\n\
+                                      # (schema flexibit.metrics.v4) on shutdown\n\
                  [--max-retries N]    # re-attempts per failed request (default 0)\n\
                  [--deadline-ms MS]   # default per-request deadline\n\
                  [--queue-bound N]    # shed new prefills past N queued (0 = off)\n\
+                 [--kv-budget-mb MB]  # budgeted KV page pool: at the budget the\n\
+                                      # executor preempts the coldest session\n\
+                                      # (bit-exact re-prefill on its next step)\n\
+                                      # and the server sheds new prefills with\n\
+                                      # ERR_SHED_MEM under memory pressure\n\
            loadgen [--seed N] [--sessions N] [--pairs WxA,...] [--batch N]\n\
                  [--policies P1,P2,...]  # per-layer policy JSON files (from\n\
                                       # `flexibit policy`), round-robined\n\
@@ -73,9 +78,13 @@ fn usage() -> ! {
                  [--report PATH]      # machine-readable run report JSON\n\
                  [--trace PATH] [--trace-sample N] [--timeout-s S]\n\
                  [--max-retries N] [--deadline-ms MS] [--queue-bound N]\n\
+                 [--kv-budget-mb MB]  # budgeted KV page pool (see serve)\n\
+                 [--shared-prefix N]  # groups of N sessions share their leader's\n\
+                                      # prompt — exercises CoW prefix sharing\n\
                  [--faults SPEC]      # seeded chaos, e.g. error:0.25,delay:0.1:0.002\n\
-                                      # (kinds panic:R error:R delay:R[:S] seed:N;\n\
-                                      # seed defaults to --seed)\n\
+                                      # (kinds panic:R error:R delay:R[:S] oom:R\n\
+                                      # seed:N; seed defaults to --seed; oom arms\n\
+                                      # KV allocation failures — needs --kv-budget-mb)\n\
            policy [--model NAME|tiny] [--name NAME] [--out PATH]\n\
                  [--seed N]           # weight-synthesis seed (default matches serve)\n\
                  [--act FMT]          # activation format, e.g. e3m2, e4m3, int8\n\
@@ -109,6 +118,16 @@ fn resilience_args(args: &[String]) -> Resilience {
         r.queue_bound = n;
     }
     r
+}
+
+/// `--kv-budget-mb MB` (shared by `serve` and `loadgen`): a budgeted KV page
+/// pool every session allocates from. Fractional values are accepted — the
+/// tiny demo model's whole working set is a few KiB, so pressure tests need
+/// sub-MiB budgets (e.g. 0.03125 = 32 KiB). None (the default) leaves KV
+/// storage unbounded and disables the server's memory-pressure latch.
+fn kv_pool_arg(args: &[String]) -> Option<Arc<KvPagePool>> {
+    let mb: f64 = arg_value(args, "--kv-budget-mb").and_then(|s| s.parse().ok())?;
+    Some(KvPagePool::new((mb * (1 << 20) as f64) as usize))
 }
 
 fn main() {
@@ -163,9 +182,13 @@ fn cmd_serve(args: &[String]) {
     };
 
     let spec = ModelSpec::tiny();
-    let executor = NativeExecutor::new()
+    let kv_pool = kv_pool_arg(args);
+    let mut executor = NativeExecutor::new()
         .with_panel_budget(panel_budget_mb << 20)
         .with_model(spec.clone(), 0xF1E81B);
+    if let Some(pool) = &kv_pool {
+        executor = executor.with_kv_pool(pool.clone());
+    }
     let cfg = ServerConfig {
         policy: BatchPolicy { max_batch, ..Default::default() },
         sim_config: flexibit::sim::mobile_a(),
@@ -173,6 +196,7 @@ fn cmd_serve(args: &[String]) {
         recorder: recorder.clone(),
         drift: None,
         resilience: resilience_args(args),
+        kv_pool,
     };
     let server = Server::start(cfg, Box::new(executor));
 
@@ -238,6 +262,12 @@ fn cmd_serve(args: &[String]) {
         m.sim_accel_s / m.batches_executed.max(1) as f64 * 1e3,
         m.sim_energy_j * 1e3
     );
+    if m.sessions_preempted > 0 || m.requests_shed_mem > 0 {
+        println!(
+            "  kv pool: {} sessions preempted, {} prefills shed under memory pressure",
+            m.sessions_preempted, m.requests_shed_mem
+        );
+    }
     if let Some(path) = &trace_path {
         // The worker joined at shutdown, so every thread-local span buffer
         // has drained into the sink — the trace is complete.
@@ -400,11 +430,21 @@ fn cmd_loadgen(args: &[String]) {
     });
 
     let spec = ModelSpec::tiny();
-    let native = NativeExecutor::new()
+    let kv_pool = kv_pool_arg(args);
+    let mut native = NativeExecutor::new()
         .with_panel_budget(panel_budget_mb << 20)
         .with_model(spec.clone(), 0xF1E81B);
+    if let Some(pool) = &kv_pool {
+        native = native.with_kv_pool(pool.clone());
+    }
     let executor: Box<dyn Executor> = match &faults {
-        Some(plan) => Box::new(FaultyExecutor::new(Box::new(native), plan.clone())),
+        Some(plan) => {
+            let mut faulty = FaultyExecutor::new(Box::new(native), plan.clone());
+            if let Some(pool) = &kv_pool {
+                faulty = faulty.with_kv_pool(pool.clone());
+            }
+            Box::new(faulty)
+        }
         None => Box::new(native),
     };
     let server = Server::start(
@@ -415,11 +455,15 @@ fn cmd_loadgen(args: &[String]) {
             recorder: recorder.clone(),
             drift,
             resilience: resilience_args(args),
+            kv_pool,
         },
         executor,
     );
 
-    let scenario = Scenario { seed, sessions, arrival, prefill_len, decode_steps, policies };
+    let shared_prefix: u64 =
+        arg_value(args, "--shared-prefix").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let scenario =
+        Scenario { seed, sessions, arrival, prefill_len, decode_steps, policies, shared_prefix };
     let timeout = Duration::from_secs_f64(fparse("--timeout-s", 120.0));
     let mut report = loadgen::run(&server, &spec, &scenario, timeout);
     report.faults = faults.as_ref().map(FaultPlan::label);

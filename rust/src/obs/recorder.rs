@@ -80,10 +80,23 @@ pub enum Counter {
     /// Executor panics the serving worker caught and contained (the batch
     /// failed its own requests; the worker survived).
     PanicCaught,
+    /// KV pages allocated from the budgeted page pool.
+    PageAlloc,
+    /// KV pages returned to the pool (last handle dropped).
+    PageFree,
+    /// KV page handles shared by a cache fork (refcount bumps — prefix
+    /// sharing, no copy).
+    PageShared,
+    /// Shared KV pages copied on first divergent append (copy-on-write
+    /// tail copies; full prefix pages stay shared).
+    CowCopy,
+    /// Decode sessions preempted under KV memory pressure (pages freed;
+    /// the session re-prefills from its token history, bit-identically).
+    SessionPreempt,
 }
 
 impl Counter {
-    pub const COUNT: usize = 17;
+    pub const COUNT: usize = 22;
 
     pub const ALL: [Counter; Counter::COUNT] = [
         Counter::BatchCut,
@@ -103,6 +116,11 @@ impl Counter {
         Counter::KvRepack,
         Counter::FaultInjected,
         Counter::PanicCaught,
+        Counter::PageAlloc,
+        Counter::PageFree,
+        Counter::PageShared,
+        Counter::CowCopy,
+        Counter::SessionPreempt,
     ];
 
     /// Stable snake_case name, used verbatim in the Prometheus export.
@@ -125,6 +143,11 @@ impl Counter {
             Counter::KvRepack => "kv_repack",
             Counter::FaultInjected => "fault_injected",
             Counter::PanicCaught => "panic_caught",
+            Counter::PageAlloc => "page_alloc",
+            Counter::PageFree => "page_free",
+            Counter::PageShared => "page_shared",
+            Counter::CowCopy => "cow_copy",
+            Counter::SessionPreempt => "session_preempt",
         }
     }
 }

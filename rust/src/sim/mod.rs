@@ -20,6 +20,33 @@ pub use analytical::{
     GemmReport, ModelReport,
 };
 
+use crate::kernels::PAGE_TOKENS;
+use crate::workload::{ModelSpec, PrecisionPolicy};
+
+/// Per-session KV footprint (bytes) the serving co-simulation charges a
+/// session holding `tokens` committed tokens under `policy`: per (layer,
+/// KV head, K/V side), `ceil(tokens / PAGE_TOKENS)` pages of
+/// `head_dim × PAGE_TOKENS` codes at that layer's attention activation
+/// width, each page rounded up to whole packed 64-bit words — the same
+/// arithmetic [`crate::kernels::KvPagePool`] charges per page, so for an
+/// unshared session this matches the pool's `bytes_in_use` exactly. For
+/// CoW prefix-shared sessions it is an upper bound: the pool charges a
+/// shared page once, this prices it per session.
+pub fn kv_session_footprint(model: &ModelSpec, policy: &PrecisionPolicy, tokens: usize) -> usize {
+    if tokens == 0 {
+        return 0;
+    }
+    let pages = tokens.div_ceil(PAGE_TOKENS);
+    let codes = model.head_dim() * PAGE_TOKENS;
+    (0..model.layers)
+        .map(|li| {
+            let bits = policy.layer(li).qkv.a.bits() as usize;
+            let page_bytes = (codes * bits).div_ceil(64) * 8;
+            model.kv_heads * 2 * pages * page_bytes
+        })
+        .sum()
+}
+
 /// Accelerator-scale configuration (paper Table 2).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AcceleratorConfig {
@@ -145,5 +172,24 @@ mod tests {
         for c in all_configs() {
             assert_eq!(c.array_x * c.array_y, c.num_pes, "{}", c.name);
         }
+    }
+
+    #[test]
+    fn kv_footprint_matches_pool_page_arithmetic() {
+        use crate::workload::{IntoPolicy, PrecisionPair};
+        let m = ModelSpec::tiny();
+        let p = PrecisionPair::of_bits(6, 6).into_policy();
+        assert_eq!(kv_session_footprint(&m, &p, 0), 0);
+        // One token occupies one full page per (layer, kv head, K/V side),
+        // priced at the packed-word granularity the pool charges.
+        let page_bytes = (m.head_dim() * PAGE_TOKENS * 6).div_ceil(64) * 8;
+        let one = kv_session_footprint(&m, &p, 1);
+        assert_eq!(one, m.layers * m.kv_heads * 2 * page_bytes);
+        // The footprint is page-quantized: flat within a page, stepping by
+        // exactly one page-set at the boundary, and wider formats cost more.
+        assert_eq!(kv_session_footprint(&m, &p, PAGE_TOKENS), one);
+        assert_eq!(kv_session_footprint(&m, &p, PAGE_TOKENS + 1), 2 * one);
+        let wide = PrecisionPair::of_bits(8, 8).into_policy();
+        assert!(kv_session_footprint(&m, &wide, 1) > one);
     }
 }

@@ -8,10 +8,14 @@
 //!   first attempt (asserted via the order-independent `output_digest`);
 //! * the drift auditor's ledger stays balanced under faults
 //!   (`audited + skipped == batches_executed`);
-//! * two identical seeded chaos runs fault — and heal — identically.
+//! * two identical seeded chaos runs fault — and heal — identically;
+//! * under a KV page budget (with or without armed `oom:` allocation
+//!   faults), preempted sessions re-prefill and finish bit-identically to
+//!   an unconstrained run — memory pressure degrades capacity, never
+//!   correctness.
 
 use flexibit::coordinator::{BatchPolicy, Executor, Resilience, Server, ServerConfig};
-use flexibit::kernels::NativeExecutor;
+use flexibit::kernels::{KvPagePool, NativeExecutor, PAGE_TOKENS};
 use flexibit::loadgen::{run, Arrival, Dist, FaultPlan, FaultyExecutor, LoadReport, Scenario};
 use flexibit::obs::Recorder;
 use flexibit::workload::{IntoPolicy, ModelSpec, PrecisionPair};
@@ -29,20 +33,30 @@ fn scenario(seed: u64) -> Scenario {
             PrecisionPair::of_bits(6, 6).into_policy(),
             PrecisionPair::of_bits(8, 8).into_policy(),
         ],
+        shared_prefix: 0,
     }
 }
 
 /// One seeded run against the native engine, optionally wrapped in a
-/// seeded [`FaultyExecutor`]. Retries are generous (the faults are the
-/// test subject, not the retry budget) and the backoff is short so the
+/// seeded [`FaultyExecutor`] and optionally under a KV page budget
+/// (`kv_budget` bytes). Retries are generous (the faults are the test
+/// subject, not the retry budget) and the backoff is short so the
 /// exponential schedule never dominates the run.
-fn chaos_run(seed: u64, faults: Option<&str>) -> LoadReport {
+fn chaos_run(seed: u64, faults: Option<&str>, kv_budget: Option<usize>) -> LoadReport {
     let spec = ModelSpec::tiny();
-    let native = NativeExecutor::new().with_model(spec.clone(), 0xF1E81B);
+    let pool = kv_budget.map(KvPagePool::new);
+    let mut native = NativeExecutor::new().with_model(spec.clone(), 0xF1E81B);
+    if let Some(p) = &pool {
+        native = native.with_kv_pool(p.clone());
+    }
     let executor: Box<dyn Executor> = match faults {
         Some(s) => {
             let plan = FaultPlan::parse(s, seed).expect("test fault spec parses");
-            Box::new(FaultyExecutor::new(Box::new(native), plan))
+            let mut faulty = FaultyExecutor::new(Box::new(native), plan);
+            if let Some(p) = &pool {
+                faulty = faulty.with_kv_pool(p.clone());
+            }
+            Box::new(faulty)
         }
         None => Box::new(native),
     };
@@ -62,6 +76,7 @@ fn chaos_run(seed: u64, faults: Option<&str>) -> LoadReport {
                 retry_backoff: Duration::from_micros(100),
                 ..Default::default()
             },
+            kv_pool: pool,
         },
         executor,
     );
@@ -94,7 +109,7 @@ fn assert_healed(chaos: &LoadReport, clean: &LoadReport, tag: &str) {
 
 #[test]
 fn transient_faults_heal_bit_identically_and_deterministically() {
-    let clean = chaos_run(7, None);
+    let clean = chaos_run(7, None, None);
     assert_eq!(clean.counts.failed, 0);
     assert_eq!(clean.counts.completed, 6 * 4, "1 prefill + Fixed(3) decodes per session");
     assert_eq!(clean.metrics.retries, 0, "no faults, no retries");
@@ -103,7 +118,7 @@ fn transient_faults_heal_bit_identically_and_deterministically() {
     // chains are a pure function of (seed, id, attempt) — so counts, not
     // just outputs, must reproduce run to run.
     let spec = "error:0.3,delay:0.1:0.0005";
-    let chaos = chaos_run(7, Some(spec));
+    let chaos = chaos_run(7, Some(spec), None);
     assert_healed(&chaos, &clean, "error+delay");
     let m = &chaos.metrics;
     assert!(m.retries > 0, "error faults at rate 0.3 must have fired");
@@ -113,7 +128,7 @@ fn transient_faults_heal_bit_identically_and_deterministically() {
 
     // Bit-reproducible chaos: an identical seeded run faults and heals
     // identically, down to the retry counts.
-    let again = chaos_run(7, Some(spec));
+    let again = chaos_run(7, Some(spec), None);
     assert_healed(&again, &clean, "error+delay rerun");
     assert_eq!(again.counts.output_digest, chaos.counts.output_digest);
     assert_eq!(again.metrics.retries, m.retries, "same seed, same retry chains");
@@ -128,10 +143,47 @@ fn panic_faults_poison_batches_but_every_stream_heals() {
     // at least one batch is certain to have been poisoned.
     let mut batches_panicked = 0;
     for seed in [7, 11, 13] {
-        let clean = chaos_run(seed, None);
-        let chaos = chaos_run(seed, Some("panic:0.12,error:0.08"));
+        let clean = chaos_run(seed, None, None);
+        let chaos = chaos_run(seed, Some("panic:0.12,error:0.08"), None);
         batches_panicked += chaos.metrics.batches_panicked;
         assert_healed(&chaos, &clean, &format!("panic seed {seed}"));
     }
     assert!(batches_panicked >= 1, "panic fates must have poisoned at least one batch");
+}
+
+#[test]
+fn kv_budget_preemption_and_oom_faults_heal_bit_identically() {
+    let clean = chaos_run(7, None, None);
+    assert_eq!(clean.counts.failed, 0);
+
+    // A budget of exactly two sessions' worth of pages: every stream in the
+    // scenario fits in one page per (layer, kv head, K/V) at 8 bits, so with
+    // three concurrent sessions the executor *must* preempt to make the third
+    // fit — but a lone session can always re-prefill, so no allocation ever
+    // hard-fails and nothing is shed.
+    let spec = ModelSpec::tiny();
+    let page_bytes = (spec.head_dim() * PAGE_TOKENS * 8).div_ceil(64) * 8;
+    let budget = spec.layers * spec.kv_heads * 2 * page_bytes * 2;
+
+    let tight = chaos_run(7, None, Some(budget));
+    assert_healed(&tight, &clean, "kv budget");
+    assert!(
+        tight.metrics.sessions_preempted > 0,
+        "a 2-session budget under 3-way concurrency must preempt"
+    );
+    assert_eq!(tight.metrics.requests_shed_mem, 0, "preemption absorbs pressure without shedding");
+
+    // Armed `oom:` faults on top of the budget: the next page allocation
+    // after an armed batch hard-fails, the executor heals by preempt +
+    // re-prefill, and the outputs still match the unconstrained run. Which
+    // victim gets preempted depends on batch composition (timing), so we
+    // assert the bit-exact invariants and that preemption fired — not an
+    // exact preemption count across runs.
+    let a = chaos_run(7, Some("oom:0.2"), Some(budget));
+    let b = chaos_run(7, Some("oom:0.2"), Some(budget));
+    assert_healed(&a, &clean, "oom faults");
+    assert_healed(&b, &clean, "oom faults rerun");
+    assert_eq!(a.counts.output_digest, b.counts.output_digest, "seeded oom runs match bits");
+    assert!(a.metrics.sessions_preempted > 0, "armed oom faults must force preemption");
+    assert!(b.metrics.sessions_preempted > 0, "armed oom faults must force preemption");
 }

@@ -25,6 +25,7 @@ fn scenario(seed: u64) -> Scenario {
         prefill_len: Dist::Uniform(2, 6),
         decode_steps: Dist::Fixed(3),
         policies: pairs().into_iter().map(|p| p.into_policy()).collect(),
+        shared_prefix: 0,
     }
 }
 
@@ -45,6 +46,7 @@ fn native_run(seed: u64) -> LoadReport {
             recorder: Recorder::disabled(),
             drift: None,
             resilience: Resilience::default(),
+            kv_pool: None,
         },
         Box::new(executor),
     );
@@ -160,6 +162,7 @@ fn gated_run(sim_config: AcceleratorConfig, drift: Option<DriftBound>) -> Metric
             recorder: Recorder::disabled(),
             drift,
             resilience: Resilience::default(),
+            kv_pool: None,
         },
         Box::new(token_cost_executor()),
     );

@@ -295,6 +295,7 @@ fn server_serves_mixed_precision_natively() {
         recorder: flexibit::obs::Recorder::disabled(),
         drift: None,
         resilience: Resilience::default(),
+        kv_pool: None,
     };
     let server = Server::start(cfg, Box::new(executor));
     let pairs = [
@@ -374,18 +375,18 @@ fn decode_is_bit_identical_to_full_prefill_recompute() {
 
             // Incremental: prefill the first t tokens, then decode s more.
             let mut kv_inc = KvCache::new(&spec, pair.a);
-            let pre = model.forward_prefill(&input[..t * d], pair, &cache, &mut kv_inc);
+            let pre = model.forward_prefill(&input[..t * d], pair, &cache, &mut kv_inc).unwrap();
             assert_eq!(kv_inc.len(), t);
             let mut steps = Vec::new();
             for i in 0..s {
                 let row = &input[(t + i) * d..(t + i + 1) * d];
-                steps.push(model.forward_decode(row, pair, &cache, &mut kv_inc));
+                steps.push(model.forward_decode(row, pair, &cache, &mut kv_inc).unwrap());
             }
             assert_eq!(kv_inc.len(), t + s);
 
             // Recompute: one full causal prefill over all t + s tokens.
             let mut kv_full = KvCache::new(&spec, pair.a);
-            let full = model.forward_prefill(&input, pair, &cache, &mut kv_full);
+            let full = model.forward_prefill(&input, pair, &cache, &mut kv_full).unwrap();
 
             let label = format!("{} kv_heads={kv_heads}", pair.label());
             assert_eq!(
@@ -431,22 +432,38 @@ fn decode_hot_path_never_repacks() {
         let mut kv = KvCache::new(&spec, pair.a);
         let mut rng = Rng::new(0x0E9A + kv_heads as u64);
         let input: Vec<f32> = (0..8 * d).map(|_| rng.gauss() as f32 * 0.5).collect();
-        model.forward_prefill(&input[..5 * d], pair, &cache, &mut kv);
+        model.forward_prefill(&input[..5 * d], pair, &cache, &mut kv).unwrap();
         for i in 5..8 {
-            model.forward_decode(&input[i * d..(i + 1) * d], pair, &cache, &mut kv);
+            model.forward_decode(&input[i * d..(i + 1) * d], pair, &cache, &mut kv).unwrap();
         }
         assert_eq!(
             kv.repack_count(),
             0,
             "kv_heads={kv_heads}: decode hot path must never repack K^T"
         );
-        // The resident adoption and the repack oracle agree code-for-code.
+        // The resident page adoption and the repack oracle agree
+        // code-for-code (pages are output-column slabs of the dense K^T).
+        let hd = spec.head_dim();
+        let tokens = kv.len();
         for li in 0..spec.layers {
             for h in 0..kv_heads {
-                let fast = kv.k_t_matrix(li, h, kv.len());
-                let slow = kv.k_t_matrix_repacked(li, h, kv.len());
-                assert_eq!((fast.rows(), fast.cols()), (slow.rows(), slow.cols()));
-                assert_eq!(fast.codes(), slow.codes(), "layer {li} head {h}");
+                let slow = kv.k_t_matrix_repacked(li, h, tokens);
+                assert_eq!((slow.rows(), slow.cols()), (hd, tokens));
+                let dense = slow.codes();
+                let mut t0 = 0usize;
+                for page in kv.k_t_pages(li, h, tokens) {
+                    assert_eq!(page.rows(), hd);
+                    let pc = page.codes();
+                    for r in 0..hd {
+                        assert_eq!(
+                            &pc[r * page.cols()..(r + 1) * page.cols()],
+                            &dense[r * tokens + t0..r * tokens + t0 + page.cols()],
+                            "layer {li} head {h} page at {t0}"
+                        );
+                    }
+                    t0 += page.cols();
+                }
+                assert_eq!(t0, tokens);
             }
         }
         assert_eq!(kv.repack_count(), (spec.layers * kv_heads) as u64);
@@ -494,14 +511,14 @@ fn kv_rollback_reappend_matches_fresh_cache() {
             let mut kv = KvCache::new(&spec, fmt);
             for (k, v) in kept.iter().chain(discarded.iter()) {
                 for li in 0..spec.layers {
-                    kv.append_token(li, k, v);
+                    kv.append_token(li, k, v).unwrap();
                 }
                 kv.commit(1);
             }
             kv.truncate(kept.len());
             for (k, v) in &reappended {
                 for li in 0..spec.layers {
-                    kv.append_token(li, k, v);
+                    kv.append_token(li, k, v).unwrap();
                 }
                 kv.commit(1);
             }
@@ -509,7 +526,7 @@ fn kv_rollback_reappend_matches_fresh_cache() {
             let mut fresh = KvCache::new(&spec, fmt);
             for (k, v) in kept.iter().chain(reappended.iter()) {
                 for li in 0..spec.layers {
-                    fresh.append_token(li, k, v);
+                    fresh.append_token(li, k, v).unwrap();
                 }
                 fresh.commit(1);
             }
@@ -519,16 +536,24 @@ fn kv_rollback_reappend_matches_fresh_cache() {
             assert_eq!(kv.bytes(), fresh.bytes(), "{fmt} kv_heads={kv_heads}");
             for li in 0..spec.layers {
                 for h in 0..kv_heads {
-                    assert_eq!(
-                        kv.k_t_matrix(li, h, tokens).codes(),
-                        fresh.k_t_matrix(li, h, tokens).codes(),
-                        "{fmt} kv_heads={kv_heads} K layer {li} head {h}"
-                    );
-                    assert_eq!(
-                        kv.v_matrix(li, h, tokens).codes(),
-                        fresh.v_matrix(li, h, tokens).codes(),
-                        "{fmt} kv_heads={kv_heads} V layer {li} head {h}"
-                    );
+                    let (ka, kb) = (kv.k_t_pages(li, h, tokens), fresh.k_t_pages(li, h, tokens));
+                    assert_eq!(ka.len(), kb.len());
+                    for (pa, pb) in ka.iter().zip(&kb) {
+                        assert_eq!(
+                            pa.codes(),
+                            pb.codes(),
+                            "{fmt} kv_heads={kv_heads} K layer {li} head {h}"
+                        );
+                    }
+                    let (va, vb) = (kv.v_pages(li, h, tokens), fresh.v_pages(li, h, tokens));
+                    assert_eq!(va.len(), vb.len());
+                    for (pa, pb) in va.iter().zip(&vb) {
+                        assert_eq!(
+                            pa.codes(),
+                            pb.codes(),
+                            "{fmt} kv_heads={kv_heads} V layer {li} head {h}"
+                        );
+                    }
                 }
             }
             assert_eq!(kv.repack_count(), 0, "{fmt}: rollback path must stay zero-repack");
@@ -622,11 +647,12 @@ fn gemv_matches_tiled_on_kv_operands() {
         for _ in 0..tokens {
             let k_row: Vec<f32> = (0..hd).map(|_| rng.gauss() as f32 * 0.5).collect();
             let v_row: Vec<f32> = (0..hd).map(|_| rng.gauss() as f32 * 0.5).collect();
-            kv.append_token(0, &k_row, &v_row);
+            kv.append_token(0, &k_row, &v_row).unwrap();
             kv.commit(1);
         }
-        let kp = kv.k_t_matrix(0, 0, tokens);
-        let vp = kv.v_matrix(0, 0, tokens);
+        // 40 tokens < one page: the page runs are single matrices.
+        let kp = kv.k_t_pages(0, 0, tokens).remove(0);
+        let vp = kv.v_pages(0, 0, tokens).remove(0);
         let q: Vec<f32> = (0..hd).map(|_| rng.gauss() as f32 * 0.5).collect();
         let qp = PackedMatrix::from_f32(&q, 1, hd, fmt);
         let p: Vec<f32> = (0..tokens).map(|_| rng.gauss() as f32 * 0.1).collect();
@@ -652,11 +678,11 @@ fn chunked_prefill_matches_single_prefill() {
     let input: Vec<f32> = (0..8 * d).map(|_| rng.gauss() as f32 * 0.5).collect();
 
     let mut kv_a = KvCache::new(&spec, pair.a);
-    let full = model.forward_prefill(&input, pair, &cache, &mut kv_a);
+    let full = model.forward_prefill(&input, pair, &cache, &mut kv_a).unwrap();
 
     let mut kv_b = KvCache::new(&spec, pair.a);
-    let first = model.forward_prefill(&input[..5 * d], pair, &cache, &mut kv_b);
-    let second = model.forward_prefill(&input[5 * d..], pair, &cache, &mut kv_b);
+    let first = model.forward_prefill(&input[..5 * d], pair, &cache, &mut kv_b).unwrap();
+    let second = model.forward_prefill(&input[5 * d..], pair, &cache, &mut kv_b).unwrap();
     assert_eq!(&full[..5 * d], &first[..]);
     assert_eq!(&full[5 * d..], &second[..]);
     assert_eq!(kv_a.bytes(), kv_b.bytes());
@@ -707,9 +733,10 @@ fn served_token_streams_match_offline_decode() {
     for si in 0..n_sessions {
         let pair = pairs[si % pairs.len()];
         let mut kv = KvCache::new(&spec, pair.a);
-        let mut outs = vec![model.forward_prefill(&prefills[si], pair, &cache, &mut kv)];
+        let mut outs =
+            vec![model.forward_prefill(&prefills[si], pair, &cache, &mut kv).unwrap()];
         for tok in &tokens[si] {
-            outs.push(model.forward_decode(tok, pair, &cache, &mut kv));
+            outs.push(model.forward_decode(tok, pair, &cache, &mut kv).unwrap());
         }
         expected.push(outs);
     }
@@ -724,6 +751,7 @@ fn served_token_streams_match_offline_decode() {
         recorder: flexibit::obs::Recorder::disabled(),
         drift: None,
         resilience: Resilience::default(),
+        kv_pool: None,
     };
     let server = Server::start(cfg, Box::new(executor));
     let session_specs = (0..n_sessions)

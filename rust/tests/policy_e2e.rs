@@ -262,7 +262,7 @@ fn assert_mixed_policy_bit_exact(spec: ModelSpec, tag: &str) {
 
     let cache = WeightCache::new();
     let mut kv = KvCache::new(&spec, policy.activation());
-    let pre = model.forward_prefill(&input[..t * d], &policy, &cache, &mut kv);
+    let pre = model.forward_prefill(&input[..t * d], &policy, &cache, &mut kv).unwrap();
     assert_bits_eq(&pre, &oracle_pre, &format!("{tag}: prefill"));
     assert!(
         pre.iter().any(|v| *v != 0.0),
@@ -270,7 +270,7 @@ fn assert_mixed_policy_bit_exact(spec: ModelSpec, tag: &str) {
     );
     for k in 0..n - t {
         let row = &input[(t + k) * d..(t + k + 1) * d];
-        let out = model.forward_decode(row, &policy, &cache, &mut kv);
+        let out = model.forward_decode(row, &policy, &cache, &mut kv).unwrap();
         assert_bits_eq(
             &out,
             &oracle_full[(t + k) * d..(t + k + 1) * d],
@@ -339,6 +339,7 @@ fn one_checkpoint_serves_two_named_policies_in_one_run() {
         prefill_len: Dist::Uniform(2, 6),
         decode_steps: Dist::Fixed(3),
         policies: vec![uniform.clone(), mixed.clone()],
+        shared_prefix: 0,
     };
     let recorder = Recorder::enabled();
     let executor = NativeExecutor::new().with_model(spec.clone(), 0xF1E81B);
@@ -354,6 +355,7 @@ fn one_checkpoint_serves_two_named_policies_in_one_run() {
             recorder: recorder.clone(),
             drift: None,
             resilience: Resilience::default(),
+            kv_pool: None,
         },
         Box::new(executor),
     );
